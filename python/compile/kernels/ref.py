@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused GNN layer kernels.
+
+These are the ground-truth semantics the Pallas kernels in
+``agg_matmul.py`` must match (fp32, same op order where it matters). They
+are also used as the ``use_pallas=False`` model path so the L2 graph can be
+lowered with or without the L1 kernel for A/B comparison.
+
+Semantics
+---------
+``masked_mean``: mean over the K sampled neighbours weighted by a {0,1}
+validity mask; rows with zero valid neighbours aggregate to the zero vector
+(denominator clamped to 1).
+
+GraphConv (GCN-with-self-loop flavour, paper ref [15]):
+    ``out = act((self + mean_neigh) @ W + b)``
+
+SAGEConv (mean aggregator, paper ref [9]):
+    ``out = act(self @ Ws + mean_neigh @ Wn + b)``
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_mean(neigh: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked mean over axis 1.
+
+    Args:
+      neigh: ``[N, K, D]`` gathered neighbour embeddings.
+      mask:  ``[N, K]`` 1.0 for valid sampled edges, 0.0 for padding.
+
+    Returns:
+      ``[N, D]`` per-row mean of the valid neighbours (zeros if none).
+    """
+    s = jnp.einsum("nkd,nk->nd", neigh, mask)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    return s / cnt
+
+
+def gc_layer(neigh, self_x, mask, w, b, activate: bool):
+    """GraphConv layer: ``act((self + masked_mean(neigh)) @ W + b)``."""
+    agg = self_x + masked_mean(neigh, mask)
+    z = agg @ w + b[None, :]
+    return jnp.maximum(z, 0.0) if activate else z
+
+
+def sage_layer(neigh, self_x, mask, w_self, w_neigh, b, activate: bool):
+    """SAGEConv layer: ``act(self @ Ws + masked_mean(neigh) @ Wn + b)``."""
+    z = self_x @ w_self + masked_mean(neigh, mask) @ w_neigh + b[None, :]
+    return jnp.maximum(z, 0.0) if activate else z

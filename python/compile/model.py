@@ -1,0 +1,304 @@
+"""Layer-2 JAX model: GraphConv / SAGEConv over padded neighbourhood blocks.
+
+Three AOT entrypoints per :class:`~compile.config.ModelConfig` (see
+``config.py`` for the block layout and the shape contract shared with the
+Rust coordinator):
+
+* ``train`` — one minibatch: forward (with remote-embedding substitution),
+  masked softmax cross-entropy, backward, Adam update. Returns the updated
+  parameters + optimizer state and (loss, correct, total).
+* ``embed`` — compute ``h^1..h^{L-1}`` for a batch of push nodes from their
+  (L-1)-hop sampled neighbourhood, using cached remote embeddings exactly
+  like the training forward pass (paper §3.2.2 "push phase").
+* ``eval``  — forward-only on a labelled batch; returns (loss, correct,
+  total). Used by the aggregation server for global validation.
+
+Every function here is pure and traceable; ``aot.py`` lowers them once to
+HLO text. Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import fused_gc_layer, fused_sage_layer, ref
+
+Params = List[jnp.ndarray]
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (mirrored by rust RefEngine for cross-checks)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Glorot-uniform weights, zero biases, in canonical flat order."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = []
+    for name, shape in cfg.param_specs():
+        if len(shape) == 2:
+            key, sub = jax.random.split(key)
+            fan_in, fan_out = shape
+            limit = (6.0 / (fan_in + fan_out)) ** 0.5
+            params.append(
+                jax.random.uniform(
+                    sub, shape, jnp.float32, minval=-limit, maxval=limit
+                )
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def zeros_like_params(cfg: ModelConfig) -> Params:
+    return [jnp.zeros(shape, jnp.float32) for _, shape in cfg.param_specs()]
+
+
+def _layer_params(cfg: ModelConfig, params: Params, l: int):
+    """Slice the flat parameter list for 1-based layer ``l``."""
+    per = 3 if cfg.model == "sage" else 2
+    chunk = params[(l - 1) * per : l * per]
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# Forward pass over nested level arrays
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(cfg, params, l, neigh, self_h, mask, activate, use_pallas):
+    if cfg.model == "sage":
+        ws, wn, b = _layer_params(cfg, params, l)
+        if use_pallas:
+            return fused_sage_layer(neigh, self_h, mask, ws, wn, b, activate)
+        return ref.sage_layer(neigh, self_h, mask, ws, wn, b, activate)
+    w, b = _layer_params(cfg, params, l)
+    if use_pallas:
+        return fused_gc_layer(neigh, self_h, mask, w, b, activate)
+    return ref.gc_layer(neigh, self_h, mask, w, b, activate)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    x: jnp.ndarray,
+    adjs: Sequence[jnp.ndarray],
+    msks: Sequence[jnp.ndarray],
+    rmasks: Sequence[jnp.ndarray],
+    caches: Sequence[jnp.ndarray],
+    *,
+    depth: int | None = None,
+    use_pallas: bool = True,
+    collect_hidden: bool = False,
+):
+    """Run ``depth`` GNN layers over nested level arrays.
+
+    Args:
+      x: ``[s_depth, F]`` h^0 features over the deepest level array.
+      adjs: ``adjs[d]`` is ``[s_d, K]`` i32 indices of level-``d`` rows'
+        sampled children inside level ``d+1``; ``d`` from 0 to depth-1.
+      msks: matching ``[s_d, K]`` f32 validity masks.
+      rmasks: for each hidden layer ``l`` (1-based, l < L), ``[s_{L'-l}]``
+        remote flags at the level that layer outputs (``L'`` = depth).
+      caches: matching ``[s_{L'-l}, H]`` cached remote embeddings ``h^l``.
+      collect_hidden: also return the post-substitution hidden layers
+        (used by ``embed``).
+
+    Returns:
+      ``[s_0, out_dim]`` output of the last applied layer (and the hidden
+      list if requested).
+    """
+    depth = cfg.layers if depth is None else depth
+    h = x
+    hidden: List[jnp.ndarray] = []
+    for l in range(1, depth + 1):
+        lvl = depth - l  # level whose rows this layer produces
+        s_lvl = adjs[lvl].shape[0]
+        self_h = h[:s_lvl]
+        neigh = jnp.take(h, adjs[lvl], axis=0)  # [s_lvl, K, D]
+        activate = l < cfg.layers
+        out = _apply_layer(
+            cfg, params, l, neigh, self_h, msks[lvl], activate, use_pallas
+        )
+        if l - 1 < len(rmasks):
+            # Remote rows at this level carry server-cached h^l embeddings;
+            # their locally-computed value (from masked-out children and
+            # zero features) is overridden (paper §3.2.2).
+            r = rmasks[l - 1][:, None]
+            out = (1.0 - r) * out + r * caches[l - 1]
+        if collect_hidden:
+            hidden.append(out)
+        h = out
+    if collect_hidden:
+        return h, hidden
+    return h
+
+
+def masked_xent(
+    logits: jnp.ndarray, labels: jnp.ndarray, lmask: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Masked mean softmax cross-entropy + correct count.
+
+    Returns (loss, correct, total) — all f32 scalars.
+    """
+    ls = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(ls, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    total = jnp.sum(lmask)
+    denom = jnp.maximum(total, 1.0)
+    loss = -jnp.sum(picked * lmask) / denom
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.float32) * lmask)
+    return loss, correct, total
+
+
+# ---------------------------------------------------------------------------
+# Entrypoint builders (flat positional signatures for AOT)
+# ---------------------------------------------------------------------------
+
+
+def train_arity(cfg: ModelConfig) -> Dict[str, int]:
+    """Number of leading params/m/v arrays in the flat train signature."""
+    return {"params": len(cfg.param_specs())}
+
+
+def _split_train_args(cfg: ModelConfig, args):
+    np_ = len(cfg.param_specs())
+    it = iter(args)
+    params = [next(it) for _ in range(np_)]
+    m = [next(it) for _ in range(np_)]
+    v = [next(it) for _ in range(np_)]
+    t = next(it)
+    lr = next(it)
+    x = next(it)
+    adjs = [next(it) for _ in range(cfg.layers)]
+    msks = [next(it) for _ in range(cfg.layers)]
+    rmasks = [next(it) for _ in range(cfg.layers - 1)]
+    caches = [next(it) for _ in range(cfg.layers - 1)]
+    labels = next(it)
+    lmask = next(it)
+    rest = list(it)
+    assert not rest, f"{len(rest)} unexpected trailing args"
+    return params, m, v, t, lr, x, adjs, msks, rmasks, caches, labels, lmask
+
+
+def make_train_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """Flat-signature train step: forward + backward + Adam.
+
+    Flat input order (see ``aot.py`` for the generated manifest):
+      ``params..., m..., v..., t, lr, x, adj0..adj{L-1}, msk0..msk{L-1},
+      rmask1..rmask{L-1}, cache1..cache{L-1}, labels, lmask``
+    Flat outputs:
+      ``params'..., m'..., v'..., loss, correct, total``
+    """
+
+    def train(*args):
+        (params, m, v, t, lr, x, adjs, msks, rmasks, caches, labels, lmask) = (
+            _split_train_args(cfg, args)
+        )
+
+        def loss_fn(ps):
+            logits = forward(
+                cfg, ps, x, adjs, msks, rmasks, caches, use_pallas=use_pallas
+            )
+            loss, correct, total = masked_xent(logits, labels, lmask)
+            return loss, (correct, total)
+
+        (loss, (correct, total)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params
+        )
+        # Adam with bias correction; t is the 1-based step counter.
+        b1t = ADAM_B1**t
+        b2t = ADAM_B2**t
+        new_p, new_m, new_v = [], [], []
+        for p, mi, vi, g in zip(params, m, v, grads):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+            mhat = mi / (1.0 - b1t)
+            vhat = vi / (1.0 - b2t)
+            new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p + new_m + new_v + [loss, correct, total])
+
+    return train
+
+
+def make_eval_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """Flat-signature forward-only evaluation.
+
+    Inputs: ``params..., x, adj*, msk*, rmask*, cache*, labels, lmask``.
+    Outputs: ``loss, correct, total``.
+    """
+
+    def evaluate(*args):
+        np_ = len(cfg.param_specs())
+        it = iter(args)
+        params = [next(it) for _ in range(np_)]
+        x = next(it)
+        adjs = [next(it) for _ in range(cfg.layers)]
+        msks = [next(it) for _ in range(cfg.layers)]
+        rmasks = [next(it) for _ in range(cfg.layers - 1)]
+        caches = [next(it) for _ in range(cfg.layers - 1)]
+        labels = next(it)
+        lmask = next(it)
+        logits = forward(
+            cfg, params, x, adjs, msks, rmasks, caches, use_pallas=use_pallas
+        )
+        loss, correct, total = masked_xent(logits, labels, lmask)
+        return (loss, correct, total)
+
+    return evaluate
+
+
+def make_embed_fn(cfg: ModelConfig, use_pallas: bool = True):
+    """Flat-signature push-embedding computation.
+
+    Computes ``h^1..h^{L-1}`` for ``P = cfg.push_batch`` push nodes from
+    their (L-1)-hop sampled neighbourhood. Remote neighbours encountered in
+    that neighbourhood use the previous round's cached embeddings, exactly
+    like training (paper §3.2.2: "the previous round's embeddings for the
+    pull nodes are utilized to calculate the new embeddings of the push
+    nodes").
+
+    Inputs: ``params..., x, adj0..adj{L-2}, msk0..msk{L-2},
+    rmask1..rmask{L-2}, cache1..cache{L-2}``  (for L=3: one rmask/cache at
+    level 1 holding h^1 of remote rows).
+    Outputs: ``h1 [P,H], ..., h{L-1} [P,H]``.
+    """
+    depth = cfg.layers - 1
+
+    def embed(*args):
+        np_ = len(cfg.param_specs())
+        it = iter(args)
+        params = [next(it) for _ in range(np_)]
+        x = next(it)
+        adjs = [next(it) for _ in range(depth)]
+        msks = [next(it) for _ in range(depth)]
+        rmasks = [next(it) for _ in range(depth - 1)]
+        caches = [next(it) for _ in range(depth - 1)]
+        _, hidden = forward(
+            cfg,
+            params,
+            x,
+            adjs,
+            msks,
+            rmasks,
+            caches,
+            depth=depth,
+            use_pallas=use_pallas,
+            collect_hidden=True,
+        )
+        p = cfg.push_batch
+        # hidden[l-1] holds h^l over level_{depth-l}; the push rows are the
+        # P-prefix of every level array.
+        return tuple(hl[:p] for hl in hidden)
+
+    return embed

@@ -1,0 +1,58 @@
+"""Shared fixtures/helpers for the build-time (L1/L2) test suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile.config import ModelConfig
+
+
+def make_blocks(cfg: ModelConfig, rng: np.random.Generator, depth: int | None = None):
+    """Random valid block tensors for a train/eval batch.
+
+    Returns a dict with x/adjs/msks/rmasks/caches/labels/lmask matching the
+    AOT contract for ``cfg`` (train/eval when depth==L, embed when L-1).
+    """
+    L = cfg.layers if depth is None else depth
+    K = cfg.fanout
+    sizes = [cfg.level_size(d) for d in range(L + 1)]
+    if depth is not None and depth != cfg.layers:
+        sizes = [cfg.embed_level_size(d) for d in range(L + 1)]
+    x = rng.normal(size=(sizes[L], cfg.feat)).astype(np.float32)
+    adjs, msks = [], []
+    for d in range(L):
+        adjs.append(rng.integers(0, sizes[d + 1], size=(sizes[d], K)).astype(np.int32))
+        msks.append((rng.random(size=(sizes[d], K)) < 0.8).astype(np.float32))
+    rmasks, caches = [], []
+    n_sub = cfg.layers - 1 if depth is None else depth - 1
+    for l in range(1, n_sub + 1):
+        lvl = L - l
+        rmasks.append((rng.random(size=(sizes[lvl],)) < 0.3).astype(np.float32))
+        caches.append(rng.normal(size=(sizes[lvl], cfg.hidden)).astype(np.float32))
+    labels = rng.integers(0, cfg.classes, size=(cfg.batch,)).astype(np.int32)
+    lmask = np.ones((cfg.batch,), np.float32)
+    return {
+        "x": x,
+        "adjs": adjs,
+        "msks": msks,
+        "rmasks": rmasks,
+        "caches": caches,
+        "labels": labels,
+        "lmask": lmask,
+    }
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture
+def gc_cfg():
+    return ModelConfig(model="gc", batch=4, fanout=3)
+
+
+@pytest.fixture
+def sage_cfg():
+    return ModelConfig(model="sage", batch=4, fanout=3)

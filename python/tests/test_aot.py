@@ -1,0 +1,114 @@
+"""AOT contract: the manifest specs must match what the functions accept
+and produce, and the HLO lowering must parse.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.config import DEFAULT_CONFIGS, ModelConfig
+
+SMALL = ModelConfig(model="gc", batch=2, fanout=2, push_batch=3)
+SMALL_SAGE = ModelConfig(model="sage", batch=2, fanout=2, push_batch=3)
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _materialize(specs, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _, dt, shape in specs:
+        if dt == "i32":
+            out.append(jnp.asarray(rng.integers(0, 2, size=shape), jnp.int32))
+        else:
+            out.append(jnp.asarray(rng.normal(size=shape), jnp.float32))
+    return out
+
+
+@pytest.mark.parametrize("cfg", [SMALL, SMALL_SAGE])
+@pytest.mark.parametrize("kind", ["train", "eval", "embed"])
+def test_specs_match_function_arity_and_outputs(cfg, kind):
+    make_fn, in_specs, out_specs = aot.ENTRYPOINT_SPECS[kind]
+    fn = make_fn(cfg)
+    args = _materialize(in_specs(cfg))
+    outs = fn(*args)
+    expected = out_specs(cfg)
+    assert len(outs) == len(expected), (len(outs), len(expected))
+    for o, (name, dt, shape) in zip(outs, expected):
+        assert tuple(o.shape) == tuple(shape), (name, o.shape, shape)
+
+
+@pytest.mark.parametrize("kind", ["train", "eval", "embed"])
+def test_lowering_produces_hlo_text(kind):
+    text = aot.lower_entrypoint(SMALL, kind)
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+
+
+def test_manifest_on_disk_is_consistent():
+    """If `make artifacts` has run, every manifest entry must be coherent."""
+    mpath = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    names = set()
+    for ep in manifest["entrypoints"]:
+        assert ep["name"] not in names
+        names.add(ep["name"])
+        cfg = ModelConfig(
+            model=ep["model"],
+            layers=ep["config"]["layers"],
+            feat=ep["config"]["feat"],
+            hidden=ep["config"]["hidden"],
+            classes=ep["config"]["classes"],
+            batch=ep["config"]["batch"],
+            fanout=ep["config"]["fanout"],
+            push_batch=ep["config"]["push_batch"],
+        )
+        _, in_specs, out_specs = aot.ENTRYPOINT_SPECS[ep["kind"]]
+        want_in = [
+            {"name": n, "dtype": d, "shape": list(s)} for n, d, s in in_specs(cfg)
+        ]
+        want_out = [
+            {"name": n, "dtype": d, "shape": list(s)} for n, d, s in out_specs(cfg)
+        ]
+        assert ep["inputs"] == want_in, ep["name"]
+        assert ep["outputs"] == want_out, ep["name"]
+        hlo = os.path.join(os.path.dirname(mpath), ep["file"])
+        assert os.path.exists(hlo), hlo
+
+
+def test_default_configs_have_unique_names():
+    names = [c.name for c in DEFAULT_CONFIGS]
+    assert len(names) == len(set(names))
+
+
+def test_train_executes_under_jit_and_updates_params():
+    cfg = SMALL
+    make_fn, in_specs, _ = aot.ENTRYPOINT_SPECS["train"]
+    fn = jax.jit(make_fn(cfg))
+    args = _materialize(in_specs(cfg), seed=3)
+    # overwrite optimizer state, t and lr with sane values (random negative
+    # v would NaN under sqrt)
+    np_params = len(cfg.param_specs())
+    for i in range(np_params, 3 * np_params):
+        args[i] = jnp.zeros_like(args[i])
+    args[3 * np_params] = jnp.float32(1.0)  # t
+    args[3 * np_params + 1] = jnp.float32(0.01)  # lr
+    outs = fn(*args)
+    loss = float(outs[3 * np_params])
+    assert np.isfinite(loss)
+    # params must move
+    moved = any(
+        float(jnp.abs(o - a).max()) > 0 for o, a in zip(outs[:np_params], args[:np_params])
+    )
+    assert moved

@@ -1,0 +1,59 @@
+"""Hypothesis sweep: Pallas kernel == oracle across shapes/masks/dtypes.
+
+The system prompt for this reproduction mandates hypothesis-driven shape
+sweeps for the L1 kernel; tolerances are fp32-tight because the kernel and
+the oracle share op order.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_gc_layer, fused_sage_layer, ref
+
+SETTINGS = settings(max_examples=30, deadline=None)
+
+
+@st.composite
+def layer_case(draw):
+    n = draw(st.integers(min_value=1, max_value=160))
+    k = draw(st.integers(min_value=1, max_value=12))
+    d = draw(st.sampled_from([1, 4, 8, 16, 32]))
+    h = draw(st.sampled_from([1, 8, 16, 32]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    p = draw(st.floats(min_value=0.0, max_value=1.0))
+    activate = draw(st.booleans())
+    return n, k, d, h, seed, p, activate
+
+
+def _tensors(n, k, d, h, seed, p):
+    rng = np.random.default_rng(seed)
+    neigh = jnp.asarray(rng.normal(size=(n, k, d)), jnp.float32)
+    selfx = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    mask = jnp.asarray(rng.random(size=(n, k)) < p, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, h)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+    return neigh, selfx, mask, w, b, rng
+
+
+@SETTINGS
+@given(layer_case())
+def test_gc_kernel_equals_ref_swept(case):
+    n, k, d, h, seed, p, activate = case
+    neigh, selfx, mask, w, b, _ = _tensors(n, k, d, h, seed, p)
+    got = fused_gc_layer(neigh, selfx, mask, w, b, activate)
+    exp = ref.gc_layer(neigh, selfx, mask, w, b, activate)
+    np.testing.assert_allclose(got, exp, atol=2e-5, rtol=1e-5)
+
+
+@SETTINGS
+@given(layer_case())
+def test_sage_kernel_equals_ref_swept(case):
+    n, k, d, h, seed, p, activate = case
+    neigh, selfx, mask, w, b, rng = _tensors(n, k, d, h, seed, p)
+    wn = jnp.asarray(rng.normal(size=(d, h)), jnp.float32)
+    got = fused_sage_layer(neigh, selfx, mask, w, wn, b, activate)
+    exp = ref.sage_layer(neigh, selfx, mask, w, wn, b, activate)
+    np.testing.assert_allclose(got, exp, atol=2e-5, rtol=1e-5)

@@ -1,0 +1,170 @@
+"""L2 model semantics: forward, remote substitution, train/eval/embed."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import ModelConfig
+from tests.conftest import make_blocks
+
+
+def _forward(cfg, params, blocks, **kw):
+    return model.forward(
+        cfg,
+        params,
+        jnp.asarray(blocks["x"]),
+        [jnp.asarray(a) for a in blocks["adjs"]],
+        [jnp.asarray(m) for m in blocks["msks"]],
+        [jnp.asarray(r) for r in blocks["rmasks"]],
+        [jnp.asarray(c) for c in blocks["caches"]],
+        **kw,
+    )
+
+
+@pytest.mark.parametrize("model_name", ["gc", "sage"])
+def test_forward_shapes(rng, model_name):
+    cfg = ModelConfig(model=model_name, batch=4, fanout=3)
+    params = model.init_params(cfg, seed=0)
+    blocks = make_blocks(cfg, rng)
+    logits = _forward(cfg, params, blocks)
+    assert logits.shape == (cfg.batch, cfg.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_pallas_and_ref_paths_agree(rng, gc_cfg):
+    params = model.init_params(gc_cfg, seed=0)
+    blocks = make_blocks(gc_cfg, rng)
+    a = _forward(gc_cfg, params, blocks, use_pallas=True)
+    b = _forward(gc_cfg, params, blocks, use_pallas=False)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_remote_substitution_uses_cache(rng, gc_cfg):
+    """A fully-remote hidden level must make logits depend only on caches."""
+    cfg = gc_cfg
+    params = model.init_params(cfg, seed=0)
+    blocks = make_blocks(cfg, rng)
+    # Mark ALL level-(L-1) rows (layer-1 outputs) and ALL level-(L-2) rows
+    # remote: then x should not matter at all for the logits.
+    for i in range(len(blocks["rmasks"])):
+        blocks["rmasks"][i] = np.ones_like(blocks["rmasks"][i])
+    base = _forward(cfg, params, blocks)
+    blocks2 = dict(blocks)
+    blocks2["x"] = blocks["x"] + 123.0
+    got = _forward(cfg, params, blocks2)
+    np.testing.assert_allclose(got, base, atol=1e-5)
+
+
+def test_local_rows_ignore_cache(rng, gc_cfg):
+    """With rmask == 0 the cache contents must be irrelevant."""
+    cfg = gc_cfg
+    params = model.init_params(cfg, seed=0)
+    blocks = make_blocks(cfg, rng)
+    for i in range(len(blocks["rmasks"])):
+        blocks["rmasks"][i] = np.zeros_like(blocks["rmasks"][i])
+    base = _forward(cfg, params, blocks)
+    blocks["caches"] = [c + 1e3 for c in blocks["caches"]]
+    got = _forward(cfg, params, blocks)
+    np.testing.assert_allclose(got, base, atol=1e-5)
+
+
+def _flat_train_args(cfg, params, m, v, t, lr, blocks):
+    return (
+        list(params)
+        + list(m)
+        + list(v)
+        + [jnp.float32(t), jnp.float32(lr), jnp.asarray(blocks["x"])]
+        + [jnp.asarray(a) for a in blocks["adjs"]]
+        + [jnp.asarray(mk) for mk in blocks["msks"]]
+        + [jnp.asarray(r) for r in blocks["rmasks"]]
+        + [jnp.asarray(c) for c in blocks["caches"]]
+        + [jnp.asarray(blocks["labels"]), jnp.asarray(blocks["lmask"])]
+    )
+
+
+@pytest.mark.parametrize("model_name", ["gc", "sage"])
+def test_train_step_learns_fixed_batch(rng, model_name):
+    """Adam on one fixed batch must drive the loss down hard."""
+    cfg = ModelConfig(model=model_name, batch=8, fanout=2)
+    params = model.init_params(cfg, seed=0)
+    m = model.zeros_like_params(cfg)
+    v = model.zeros_like_params(cfg)
+    blocks = make_blocks(cfg, rng)
+    train = model.make_train_fn(cfg)
+    np_ = len(cfg.param_specs())
+    first_loss, loss = None, None
+    for t in range(1, 41):
+        out = train(*_flat_train_args(cfg, params, m, v, t, 0.01, blocks))
+        params, m, v = out[:np_], out[np_ : 2 * np_], out[2 * np_ : 3 * np_]
+        loss = float(out[3 * np_])
+        if first_loss is None:
+            first_loss = loss
+    assert loss < first_loss * 0.5, (first_loss, loss)
+
+
+def test_eval_counts_and_masking(rng, gc_cfg):
+    cfg = gc_cfg
+    params = model.init_params(cfg, seed=0)
+    blocks = make_blocks(cfg, rng)
+    blocks["lmask"] = np.array([1, 1, 0, 0], np.float32)
+    ev = model.make_eval_fn(cfg)
+    np_ = len(cfg.param_specs())
+    args = (
+        list(params)
+        + [jnp.asarray(blocks["x"])]
+        + [jnp.asarray(a) for a in blocks["adjs"]]
+        + [jnp.asarray(mk) for mk in blocks["msks"]]
+        + [jnp.asarray(r) for r in blocks["rmasks"]]
+        + [jnp.asarray(c) for c in blocks["caches"]]
+        + [jnp.asarray(blocks["labels"]), jnp.asarray(blocks["lmask"])]
+    )
+    loss, correct, total = ev(*args)
+    assert float(total) == 2.0
+    assert 0.0 <= float(correct) <= 2.0
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("model_name", ["gc", "sage"])
+def test_embed_matches_manual_forward(rng, model_name):
+    """embed() must equal running depth L-1 of forward and slicing prefixes."""
+    cfg = ModelConfig(model=model_name, batch=4, fanout=3, push_batch=6)
+    params = model.init_params(cfg, seed=1)
+    depth = cfg.layers - 1
+    blocks = make_blocks(cfg, rng, depth=depth)
+    emb = model.make_embed_fn(cfg)
+    args = (
+        list(params)
+        + [jnp.asarray(blocks["x"])]
+        + [jnp.asarray(a) for a in blocks["adjs"]]
+        + [jnp.asarray(mk) for mk in blocks["msks"]]
+        + [jnp.asarray(r) for r in blocks["rmasks"]]
+        + [jnp.asarray(c) for c in blocks["caches"]]
+    )
+    outs = emb(*args)
+    assert len(outs) == cfg.layers - 1
+    _, hidden = model.forward(
+        cfg,
+        params,
+        jnp.asarray(blocks["x"]),
+        [jnp.asarray(a) for a in blocks["adjs"]],
+        [jnp.asarray(mk) for mk in blocks["msks"]],
+        [jnp.asarray(r) for r in blocks["rmasks"]],
+        [jnp.asarray(c) for c in blocks["caches"]],
+        depth=depth,
+        collect_hidden=True,
+    )
+    for got, hl in zip(outs, hidden):
+        np.testing.assert_allclose(got, hl[: cfg.push_batch], atol=1e-5)
+        assert got.shape == (cfg.push_batch, cfg.hidden)
+
+
+def test_masked_xent_uniform_logits(rng):
+    logits = jnp.zeros((5, 4), jnp.float32)
+    labels = jnp.asarray([0, 1, 2, 3, 0], jnp.int32)
+    lmask = jnp.ones((5,), jnp.float32)
+    loss, correct, total = model.masked_xent(logits, labels, lmask)
+    np.testing.assert_allclose(float(loss), np.log(4.0), rtol=1e-6)
+    assert float(total) == 5.0

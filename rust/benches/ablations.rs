@@ -1,0 +1,103 @@
+//! Design-choice ablations called out in the paper's §1 but not given
+//! their own figures, plus one framework-level ablation:
+//!
+//! 1. **Static vs dynamic pruning** — "we also explored and compared
+//!    other variants, such as static versus dynamic graph pruning (to
+//!    determine whether selecting remote nodes afresh in every round
+//!    improves performance)": P4 (offline, static) vs P4dyn (re-sampled
+//!    every round).
+//! 2. **Push staleness** — "different staleness configurations in
+//!    overlapping communication (to balance timeliness and bandwidth
+//!    efficiency)": overlap pushing the ε-k state for k = 1 (paper), 2.
+//! 3. **Optimizer-moment reset on broadcast** — FedAvg + client Adam
+//!    interaction (DESIGN.md §10 assumption made explicit).
+
+use std::sync::Arc;
+
+use optimes::coordinator::{run_session, SessionMetrics, Strategy};
+use optimes::harness::{self, bench_config, fmt_pct, Table};
+use optimes::runtime::ModelKind;
+
+fn summarize(t: &mut Table, label: &str, m: &SessionMetrics) {
+    let p = m.median_phases();
+    t.row(vec![
+        label.into(),
+        fmt_pct(m.peak_accuracy()),
+        format!("{:.3}", m.median_round_time()),
+        format!("{:.3}", p.pull),
+        format!("{:.3}", p.push + p.push_hidden),
+        format!("{}", m.server_embeddings),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let (p, g) = harness::load_dataset("reddit-s")?;
+    let engine = harness::make_engine(ModelKind::Gc, 5)?;
+
+    // --- 1. static vs dynamic pruning -----------------------------------
+    let mut t = Table::new(&[
+        "variant", "peak acc", "round(s)", "pull", "push total", "emb stored",
+    ]);
+    for strat in [Strategy::p(4), Strategy::p_dynamic(4)] {
+        let cfg = bench_config(&p, strat.clone(), p.default_clients);
+        let key = harness::session_key(
+            "reddit-s",
+            &strat.name,
+            ModelKind::Gc,
+            5,
+            p.default_clients,
+            cfg.rounds,
+        );
+        let m = harness::cached_session(&key, &g, &cfg, &engine)?;
+        summarize(&mut t, &strat.name, &m);
+    }
+    t.print("Ablation 1 — static (P4) vs dynamic (P4dyn) pruning, reddit-s");
+    println!(
+        "(dynamic re-selects remote nodes each round: fresher coverage, but the\n\
+         server must retain every candidate and pulls fetch the fresh subset)"
+    );
+
+    // --- 2. push staleness k=1 vs k=2 ------------------------------------
+    let mut t = Table::new(&[
+        "staleness", "peak acc", "round(s)", "pull", "push total", "emb stored",
+    ]);
+    for k in [1usize, 2] {
+        let mut cfg = bench_config(&p, Strategy::o(), p.default_clients);
+        cfg.overlap_stale = k;
+        let key = format!(
+            "{}_stale{k}",
+            harness::session_key("reddit-s", "O", ModelKind::Gc, 5, p.default_clients, cfg.rounds)
+        );
+        let m = harness::cached_session(&key, &g, &cfg, &engine)?;
+        summarize(&mut t, &format!("push ε-{k} state"), &m);
+    }
+    t.print("Ablation 2 — push-overlap staleness (O strategy), reddit-s");
+
+    // --- 3. Adam-moment reset on broadcast --------------------------------
+    let mut t = Table::new(&[
+        "optimizer", "peak acc", "round(s)", "pull", "push total", "emb stored",
+    ]);
+    for reset in [true, false] {
+        let mut cfg = bench_config(&p, Strategy::e(), p.default_clients);
+        cfg.reset_opt_each_round = reset;
+        cfg.rounds = cfg.rounds.min(12);
+        let key = format!(
+            "{}_optreset{reset}",
+            harness::session_key("reddit-s", "E", ModelKind::Gc, 5, p.default_clients, cfg.rounds)
+        );
+        let m = match harness::cached_session(&key, &g, &cfg, &engine) {
+            Ok(m) => m,
+            Err(_) => run_session(&g, &cfg, Arc::clone(&engine))?,
+        };
+        summarize(
+            &mut t,
+            if reset { "reset m,v per round" } else { "carry m,v across rounds" },
+            &m,
+        );
+    }
+    t.print("Ablation 3 — client Adam moments across FedAvg broadcasts, reddit-s");
+
+    println!("\n[ablations] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

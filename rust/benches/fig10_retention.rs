@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 10 — retention-limit ablation
+//! (cargo bench --bench fig10_retention; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig10().expect("fig10_retention");
+    println!("\n[fig10_retention] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

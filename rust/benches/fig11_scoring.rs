@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 11 — scoring-strategy ablation
+//! (cargo bench --bench fig11_scoring; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig11().expect("fig11_scoring");
+    println!("\n[fig11_scoring] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

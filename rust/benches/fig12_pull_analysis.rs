@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 12 — pull-phase analysis
+//! (cargo bench --bench fig12_pull_analysis; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig12().expect("fig12_pull_analysis");
+    println!("\n[fig12_pull_analysis] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

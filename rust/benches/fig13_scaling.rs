@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 13 — client scaling
+//! (cargo bench --bench fig13_scaling; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig13().expect("fig13_scaling");
+    println!("\n[fig13_scaling] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

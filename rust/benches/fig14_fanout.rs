@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 14 — fanout sweep
+//! (cargo bench --bench fig14_fanout; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig14().expect("fig14_fanout");
+    println!("\n[fig14_fanout] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Bench target regenerating Fig 2a (remote-vertex fractions + embeddings
+//! maintained) and Fig 2b (headline time-to-accuracy on Products).
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig2a().expect("fig2a");
+    figures::fig2b().expect("fig2b");
+    println!("\n[fig2_headline] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

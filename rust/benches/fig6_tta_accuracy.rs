@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 6 — TTA + peak accuracy (GraphConv, all graphs)
+//! (cargo bench --bench fig6_tta_accuracy; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig6(optimes::runtime::ModelKind::Gc, &["arxiv-s", "reddit-s", "products-s", "papers-s"]).expect("fig6_tta_accuracy");
+    println!("\n[fig6_tta_accuracy] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

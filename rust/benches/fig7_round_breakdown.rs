@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 7 — round-time breakdowns (GraphConv)
+//! (cargo bench --bench fig7_round_breakdown; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig7(optimes::runtime::ModelKind::Gc, &["arxiv-s", "reddit-s", "products-s", "papers-s"]).expect("fig7_round_breakdown");
+    println!("\n[fig7_round_breakdown] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

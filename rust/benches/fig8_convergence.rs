@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 8 — accuracy convergence
+//! (cargo bench --bench fig8_convergence; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig8(optimes::runtime::ModelKind::Gc, &["arxiv-s", "reddit-s", "products-s", "papers-s"]).expect("fig8_convergence");
+    println!("\n[fig8_convergence] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

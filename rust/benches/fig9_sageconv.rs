@@ -1,0 +1,9 @@
+//! Bench target regenerating: Fig 9 — SAGEConv TTA/accuracy + breakdowns
+//! (cargo bench --bench fig9_sageconv; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::fig9().expect("fig9_sageconv");
+    println!("\n[fig9_sageconv] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

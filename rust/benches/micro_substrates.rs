@@ -1,0 +1,120 @@
+//! Micro-benchmarks of the L3 hot-path substrates (hand-rolled harness —
+//! the offline registry carries no criterion). Reports ns/op with simple
+//! repetition + median-of-runs, which is what the §Perf iteration log in
+//! EXPERIMENTS.md tracks.
+
+use std::sync::Arc;
+
+use optimes::coordinator::trainer::assemble_batch;
+use optimes::coordinator::{EmbeddingServer, NetConfig};
+use optimes::graph::datasets;
+use optimes::graph::partition::{hash_partition, metis_lite};
+use optimes::graph::sampler::{static_adj, Sampler};
+use optimes::graph::scoring;
+use optimes::graph::subgraph::{build_all, Prune};
+use optimes::harness;
+use optimes::runtime::{ModelState, StepEngine};
+
+/// Time `f` over `iters` iterations, repeated 5 times; report the median.
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    let mut runs = Vec::new();
+    for _ in 0..5 {
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        runs.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = runs[2];
+    let unit = if med < 1e-6 {
+        format!("{:.0} ns/op", med * 1e9)
+    } else if med < 1e-3 {
+        format!("{:.2} us/op", med * 1e6)
+    } else if med < 1.0 {
+        format!("{:.3} ms/op", med * 1e3)
+    } else {
+        format!("{:.3} s/op", med)
+    };
+    println!("{name:<44} {unit:>16}   ({iters} iters x 5 runs)");
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("== micro_substrates ==");
+    let (p, g) = harness::load_dataset("reddit-s").expect("dataset");
+
+    bench("graph: generate reddit-s (scaled)", 1, || {
+        let _ = datasets::load("reddit-s", harness::dataset_scale() * 2).unwrap();
+    });
+
+    let part = metis_lite(&g, p.default_clients, 42);
+    bench("partition: metis_lite k=4", 1, || {
+        let _ = metis_lite(&g, 4, 43);
+    });
+    bench("partition: hash k=4", 1, || {
+        let _ = hash_partition(&g, 4, 43);
+    });
+
+    let subs = build_all(&g, &part, &Prune::None, 42);
+    bench("subgraph: build_all (expansion, no prune)", 1, || {
+        let _ = build_all(&g, &part, &Prune::None, 43);
+    });
+    bench("subgraph: build_all (P4 retention)", 1, || {
+        let _ = build_all(&g, &part, &Prune::Retention(4), 43);
+    });
+
+    let sub = subs.iter().max_by_key(|s| s.n_remote()).unwrap();
+    bench("scoring: frequency (768 sources)", 1, || {
+        let _ = scoring::frequency_scores(sub, 3, 768, 7);
+    });
+
+    // sampling + assembly hot path (the per-minibatch L3 work)
+    let engine = harness::make_engine(optimes::runtime::ModelKind::Gc, 5).expect("engine");
+    let geom = *engine.geom();
+    let dims = geom.dims();
+    let mut sampler = Sampler::new(dims, 1, 0);
+    let targets: Vec<u32> = sub.train_local.iter().copied().take(dims.batch).collect();
+    bench("sampler: sample_batch (B=32, K=5, L=3)", 100, || {
+        let _ = sampler.sample_batch(sub, &targets);
+    });
+
+    let adj = static_adj(&dims, dims.batch, dims.layers);
+    let blocks = sampler.sample_batch(sub, &targets);
+    let cache = optimes::coordinator::EmbCache::new(geom.layers - 1, geom.hidden, sub.n_remote());
+    bench("trainer: assemble_batch (B=32)", 100, || {
+        let _ = assemble_batch(&blocks, sub, &cache, &g, &adj, true);
+    });
+
+    // embedding server batched RPCs
+    let server = EmbeddingServer::new(2, geom.hidden, NetConfig::default());
+    let nodes: Vec<u32> = (0..10_000u32).collect();
+    let rows = vec![0.5f32; nodes.len() * geom.hidden];
+    bench("kv: push 10k x 2 layers", 10, || {
+        let _ = server.push(&nodes, &[rows.clone(), rows.clone()]);
+    });
+    bench("kv: pull 10k x 2 layers", 10, || {
+        let _ = server.pull(&nodes, false);
+    });
+
+    // engine step latency (the L1/L2 hot path through PJRT or Ref)
+    let batch = assemble_batch(&blocks, sub, &cache, &g, &adj, true);
+    let mut state = ModelState::init(&geom, 3);
+    let eng: &Arc<dyn StepEngine> = &engine;
+    bench(
+        &format!("engine({}): train_step B=32", harness::engine_kind()),
+        20,
+        || {
+            let _ = eng.train_step(&mut state, &batch, 0.01).unwrap();
+        },
+    );
+    bench(
+        &format!("engine({}): evaluate B=32", harness::engine_kind()),
+        20,
+        || {
+            let _ = eng.evaluate(&state, &batch).unwrap();
+        },
+    );
+
+    println!("\n[micro_substrates] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

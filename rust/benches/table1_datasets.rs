@@ -1,0 +1,9 @@
+//! Bench target regenerating: Table 1 — dataset statistics
+//! (cargo bench --bench table1_datasets; see DESIGN.md §6)
+use optimes::harness::figures;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    figures::table1().expect("table1_datasets");
+    println!("\n[table1_datasets] done in {:.1}s", t0.elapsed().as_secs_f64());
+}

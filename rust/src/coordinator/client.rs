@@ -1,0 +1,322 @@
+//! Client state: expanded subgraph, local embedding cache, local model,
+//! sampler streams, and the prefetch bookkeeping for OPP.
+
+use std::sync::Arc;
+
+use crate::graph::sampler::{static_adj, Sampler};
+use crate::graph::{BlockDims, ClientSubgraph};
+use crate::runtime::{ModelState, StepEngine};
+use crate::util::rng::Rng;
+
+/// Per-client cache of remote embeddings (`h^1..h^{L-1}` per pull node),
+/// dense-indexed by the subgraph's remote index. Presence is per node
+/// (a pull RPC always fetches all layers for a node, like the paper's
+/// per-layer Redis DBs read in one pipelined batch).
+#[derive(Clone, Debug)]
+pub struct EmbCache {
+    pub hidden: usize,
+    /// L-1 hidden layers.
+    pub n_layers: usize,
+    data: Vec<Vec<f32>>,
+    present: Vec<bool>,
+}
+
+impl EmbCache {
+    pub fn new(n_layers: usize, hidden: usize, n_remote: usize) -> Self {
+        Self {
+            hidden,
+            n_layers,
+            data: (0..n_layers).map(|_| vec![0f32; n_remote * hidden]).collect(),
+            present: vec![false; n_remote],
+        }
+    }
+
+    pub fn n_remote(&self) -> usize {
+        self.present.len()
+    }
+
+    /// Mark everything stale (start of a round — embeddings must be
+    /// re-pulled fresh, matching EmbC semantics).
+    pub fn invalidate_all(&mut self) {
+        self.present.iter_mut().for_each(|p| *p = false);
+    }
+
+    /// Store pulled rows: `per_layer[l]` is row-major `[idxs.len(), H]`.
+    pub fn insert(&mut self, idxs: &[u32], per_layer: &[Vec<f32>]) {
+        let h = self.hidden;
+        for (l, rows) in per_layer.iter().enumerate() {
+            debug_assert_eq!(rows.len(), idxs.len() * h);
+            for (i, &r) in idxs.iter().enumerate() {
+                self.data[l][r as usize * h..(r as usize + 1) * h]
+                    .copy_from_slice(&rows[i * h..(i + 1) * h]);
+            }
+        }
+        for &r in idxs {
+            self.present[r as usize] = true;
+        }
+    }
+
+    #[inline]
+    pub fn is_present(&self, r: u32) -> bool {
+        self.present[r as usize]
+    }
+
+    /// Row for hidden layer `l` (1-based) of remote index `r`.
+    #[inline]
+    pub fn row(&self, l: usize, r: u32) -> &[f32] {
+        let h = self.hidden;
+        &self.data[l - 1][r as usize * h..(r as usize + 1) * h]
+    }
+
+    /// Subset of `used` not currently cached.
+    pub fn missing_of(&self, used: &[u32]) -> Vec<u32> {
+        used.iter()
+            .copied()
+            .filter(|&r| !self.present[r as usize])
+            .collect()
+    }
+
+    pub fn present_count(&self) -> usize {
+        self.present.iter().filter(|&&p| p).count()
+    }
+}
+
+/// One federated client.
+pub struct Client {
+    pub id: usize,
+    pub sub: ClientSubgraph,
+    pub cache: EmbCache,
+    pub sampler: Sampler,
+    pub state: ModelState,
+    pub dims: BlockDims,
+    /// Local indices of push nodes (aligned with `push_globals`).
+    pub push_local: Vec<u32>,
+    pub push_globals: Vec<u32>,
+    /// Frequency (or ablation) score per remote index.
+    pub scores: Vec<f32>,
+    /// Remote indices to prefetch at round start (top-x% by score), OPP.
+    pub prefetch_rows: Vec<u32>,
+    /// Constant gather adjacency for train and embed geometries.
+    pub adj_train: Vec<Vec<i32>>,
+    pub adj_embed: Vec<Vec<i32>>,
+    pub epoch_batches: usize,
+    pub(crate) train_cursor: usize,
+    pub(crate) train_order: Vec<u32>,
+    pub(crate) rng: Rng,
+    /// Dynamic re-pruning (paper §1 "static versus dynamic graph
+    /// pruning" ablation): when set, the retained remote in-neighbour
+    /// subsets are re-sampled from the full candidate lists at every
+    /// round start instead of once offline.
+    dynamic_retention: Option<usize>,
+    full_in_remote: Vec<Vec<u32>>,
+}
+
+impl Client {
+    pub fn new(
+        sub: ClientSubgraph,
+        engine: &Arc<dyn StepEngine>,
+        epoch_batches: usize,
+        seed: u64,
+    ) -> Self {
+        let geom = *engine.geom();
+        let dims = geom.dims();
+        let id = sub.client_id;
+        let cache = EmbCache::new(geom.layers - 1, geom.hidden, sub.n_remote());
+        let push_globals = sub.push_nodes.clone();
+        let push_local: Vec<u32> = push_globals
+            .iter()
+            .map(|g| sub.local_index(*g).expect("push node is local"))
+            .collect();
+        let mut rng = Rng::new(seed, 0xC11E57 + id as u64);
+        let mut train_order = sub.train_local.clone();
+        rng.shuffle(&mut train_order);
+        Self {
+            sampler: Sampler::new(dims, seed, id as u64),
+            cache,
+            state: ModelState::zeros(&geom),
+            dims,
+            push_local,
+            push_globals,
+            scores: Vec::new(),
+            prefetch_rows: Vec::new(),
+            adj_train: static_adj(&dims, dims.batch, dims.layers),
+            adj_embed: static_adj(&dims, dims.push_batch, dims.layers - 1),
+            epoch_batches,
+            train_cursor: 0,
+            train_order,
+            sub,
+            id,
+            rng,
+            dynamic_retention: None,
+            full_in_remote: Vec::new(),
+        }
+    }
+
+    /// Switch to dynamic per-round re-pruning with the given retention
+    /// limit. Must be called on a client built WITHOUT static pruning
+    /// (the full candidate lists are snapshotted here).
+    pub fn enable_dynamic_prune(&mut self, limit: usize) {
+        self.full_in_remote = self.sub.in_remote.clone();
+        self.dynamic_retention = Some(limit);
+    }
+
+    /// Re-sample the retained remote subsets for this round (no-op for
+    /// static pruning).
+    pub fn resample_dynamic_prune(&mut self) {
+        let Some(limit) = self.dynamic_retention else {
+            return;
+        };
+        for (dst, full) in self.sub.in_remote.iter_mut().zip(&self.full_in_remote) {
+            if full.len() <= limit {
+                dst.clone_from(full);
+            } else {
+                let keep = self.rng.sample_indices(full.len(), limit);
+                let mut kept: Vec<u32> = keep.iter().map(|&i| full[i]).collect();
+                kept.sort_unstable();
+                *dst = kept;
+            }
+        }
+    }
+
+    /// Remote rows to pull this round: the active (possibly re-sampled)
+    /// subset under dynamic pruning, everything otherwise.
+    pub fn active_remote_rows(&self) -> Vec<u32> {
+        if self.dynamic_retention.is_none() {
+            return self.all_remote_rows();
+        }
+        let mut set = std::collections::HashSet::new();
+        for rems in &self.sub.in_remote {
+            set.extend(rems.iter().copied());
+        }
+        let mut v: Vec<u32> = set.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Install per-remote scores and derive the top-`frac` prefetch set.
+    pub fn set_scores(&mut self, scores: Vec<f32>, prefetch_frac: Option<f64>) {
+        assert_eq!(scores.len(), self.sub.n_remote());
+        if let Some(frac) = prefetch_frac {
+            let mut order: Vec<u32> = (0..scores.len() as u32).collect();
+            order.sort_by(|&a, &b| {
+                scores[b as usize]
+                    .partial_cmp(&scores[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            let keep = ((scores.len() as f64) * frac).round() as usize;
+            self.prefetch_rows = order[..keep.min(order.len())].to_vec();
+            self.prefetch_rows.sort_unstable();
+        }
+        self.scores = scores;
+    }
+
+    /// Next batch of training targets (wraps + reshuffles per epoch pass).
+    pub fn next_targets(&mut self, batch: usize) -> Vec<u32> {
+        if self.train_order.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(batch);
+        for _ in 0..batch.min(self.train_order.len()) {
+            if self.train_cursor >= self.train_order.len() {
+                self.train_cursor = 0;
+                let mut order = std::mem::take(&mut self.train_order);
+                self.rng.shuffle(&mut order);
+                self.train_order = order;
+            }
+            out.push(self.train_order[self.train_cursor]);
+            self.train_cursor += 1;
+        }
+        out
+    }
+
+    /// All remote indices (the default pull set for non-prefetch
+    /// strategies).
+    pub fn all_remote_rows(&self) -> Vec<u32> {
+        (0..self.sub.n_remote() as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+    use crate::graph::partition::metis_lite;
+    use crate::graph::subgraph::{build_all, Prune};
+    use crate::runtime::manifest::{ModelGeom, ModelKind};
+    use crate::runtime::RefEngine;
+
+    fn engine() -> Arc<dyn StepEngine> {
+        Arc::new(RefEngine::new(ModelGeom {
+            model: ModelKind::Gc,
+            layers: 3,
+            feat: 32,
+            hidden: 8,
+            classes: 4,
+            batch: 4,
+            fanout: 3,
+            push_batch: 4,
+        }))
+    }
+
+    fn client() -> Client {
+        let g = tiny(51);
+        let part = metis_lite(&g, 4, 2);
+        let subs = build_all(&g, &part, &Prune::None, 5);
+        Client::new(subs.into_iter().next().unwrap(), &engine(), 4, 9)
+    }
+
+    #[test]
+    fn cache_roundtrip_and_invalidate() {
+        let mut c = EmbCache::new(2, 4, 10);
+        assert_eq!(c.missing_of(&[1, 2, 3]), vec![1, 2, 3]);
+        c.insert(&[2, 5], &[vec![1.0; 8], vec![2.0; 8]]);
+        assert!(c.is_present(2) && c.is_present(5) && !c.is_present(3));
+        assert_eq!(c.row(1, 2), &[1.0; 4]);
+        assert_eq!(c.row(2, 5), &[2.0; 4]);
+        assert_eq!(c.missing_of(&[2, 3, 5]), vec![3]);
+        assert_eq!(c.present_count(), 2);
+        c.invalidate_all();
+        assert_eq!(c.present_count(), 0);
+    }
+
+    #[test]
+    fn next_targets_cycles_all_train_vertices() {
+        let mut c = client();
+        let n = c.sub.train_local.len();
+        let mut seen = std::collections::HashSet::new();
+        let mut fetched = 0;
+        while fetched < n {
+            for t in c.next_targets(4) {
+                seen.insert(t);
+                fetched += 1;
+            }
+        }
+        assert_eq!(seen.len(), n.min(fetched));
+    }
+
+    #[test]
+    fn prefetch_set_is_top_scoring() {
+        let mut c = client();
+        let n = c.sub.n_remote();
+        if n < 8 {
+            return;
+        }
+        // score = remote index value
+        let scores: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        c.set_scores(scores, Some(0.25));
+        let keep = ((n as f64) * 0.25).round() as usize;
+        assert_eq!(c.prefetch_rows.len(), keep);
+        // top-scoring = highest indices
+        let min_kept = *c.prefetch_rows.iter().min().unwrap() as usize;
+        assert!(min_kept >= n - keep - 1);
+    }
+
+    #[test]
+    fn push_locals_align_with_globals() {
+        let c = client();
+        for (l, g) in c.push_local.iter().zip(&c.push_globals) {
+            assert_eq!(c.sub.local[*l as usize], *g);
+        }
+    }
+}

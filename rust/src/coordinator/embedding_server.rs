@@ -1,0 +1,238 @@
+//! The embedding server: a sharded in-memory KV store holding the
+//! `h^1..h^{L-1}` embeddings of every cross-client (push/pull) vertex,
+//! with batched pipelined get/set RPCs (the paper implements this with
+//! Redis + pipelining; we build the store ourselves, DESIGN.md §3).
+//!
+//! One logical database per layer (paper §5.1 "separate database for each
+//! layer's embeddings to allow scoped updates"), each sharded across
+//! `SHARDS` RwLock'd hash maps keyed by global vertex id. Concurrent
+//! clients push/pull in parallel; every call is one *batched* RPC whose
+//! cost is accounted through the [`NetConfig`] model plus the measured
+//! in-memory service time (the small real-time jitter keeps the Fig 12c
+//! fit realistic rather than exactly R²=1).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+use super::metrics::{RpcKind, RpcRecord};
+use super::netsim::NetConfig;
+
+const SHARDS: usize = 16;
+
+/// Embedding rows for one layer, keyed by global vertex id.
+struct LayerDb {
+    shards: Vec<RwLock<HashMap<u32, Box<[f32]>>>>,
+}
+
+impl LayerDb {
+    fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: u32) -> &RwLock<HashMap<u32, Box<[f32]>>> {
+        &self.shards[(key as usize) & (SHARDS - 1)]
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+}
+
+pub struct EmbeddingServer {
+    /// `layers[l-1]` holds h^l rows.
+    layers: Vec<LayerDb>,
+    pub hidden: usize,
+    pub net: NetConfig,
+    pulls: AtomicUsize,
+    pushes: AtomicUsize,
+}
+
+impl EmbeddingServer {
+    /// `n_layers` = L-1 hidden layers for an L-layer GNN.
+    pub fn new(n_layers: usize, hidden: usize, net: NetConfig) -> Self {
+        Self {
+            layers: (0..n_layers).map(|_| LayerDb::new()).collect(),
+            hidden,
+            net,
+            pulls: AtomicUsize::new(0),
+            pushes: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Batched push: store `h^l` rows for `nodes` (one call for all
+    /// layers, like a pipelined Redis MSET). `per_layer[l-1]` is row-major
+    /// `[nodes.len(), hidden]`.
+    pub fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> RpcRecord {
+        assert_eq!(per_layer.len(), self.layers.len());
+        let t0 = std::time::Instant::now();
+        let h = self.hidden;
+        for (db, rows) in self.layers.iter().zip(per_layer) {
+            assert_eq!(rows.len(), nodes.len() * h, "push rows shape");
+            for (i, &node) in nodes.iter().enumerate() {
+                let row: Box<[f32]> = rows[i * h..(i + 1) * h].into();
+                db.shard(node).write().unwrap().insert(node, row);
+            }
+        }
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        let bytes = self.net.emb_bytes(nodes.len(), self.layers.len(), h);
+        RpcRecord {
+            kind: RpcKind::Push,
+            rows: nodes.len(),
+            bytes,
+            time: self.net.time_for_bytes(bytes) + t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Batched pull of all layers for `nodes`. Returns `out[l-1]` row-major
+    /// `[nodes.len(), hidden]`; missing nodes yield zero rows (only
+    /// possible before their owner's first push).
+    pub fn pull(&self, nodes: &[u32], on_demand: bool) -> (Vec<Vec<f32>>, RpcRecord) {
+        let t0 = std::time::Instant::now();
+        let h = self.hidden;
+        let mut out = Vec::with_capacity(self.layers.len());
+        for db in &self.layers {
+            let mut rows = vec![0f32; nodes.len() * h];
+            for (i, &node) in nodes.iter().enumerate() {
+                if let Some(row) = db.shard(node).read().unwrap().get(&node) {
+                    rows[i * h..(i + 1) * h].copy_from_slice(row);
+                }
+            }
+            out.push(rows);
+        }
+        self.pulls.fetch_add(1, Ordering::Relaxed);
+        let bytes = self.net.emb_bytes(nodes.len(), self.layers.len(), h);
+        let rec = RpcRecord {
+            kind: if on_demand {
+                RpcKind::PullOnDemand
+            } else {
+                RpcKind::Pull
+            },
+            rows: nodes.len(),
+            bytes,
+            time: self.net.time_for_bytes(bytes) + t0.elapsed().as_secs_f64(),
+        };
+        (out, rec)
+    }
+
+    /// Unique vertices stored (any layer) — the paper's "embeddings
+    /// maintained at the embedding server" marker (Fig 2a / Fig 10).
+    pub fn stored_nodes(&self) -> usize {
+        self.layers.first().map(|db| db.len()).unwrap_or(0)
+    }
+
+    /// Total embedding rows across layers.
+    pub fn stored_rows(&self) -> usize {
+        self.layers.iter().map(|db| db.len()).sum()
+    }
+
+    /// In-memory footprint in bytes (rows * hidden * 4 + key overhead).
+    pub fn memory_bytes(&self) -> usize {
+        self.stored_rows() * (self.hidden * 4 + self.net.per_entry_overhead)
+    }
+
+    pub fn rpc_counts(&self) -> (usize, usize) {
+        (
+            self.pulls.load(Ordering::Relaxed),
+            self.pushes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn server() -> EmbeddingServer {
+        EmbeddingServer::new(2, 4, NetConfig::default())
+    }
+
+    fn rows(nodes: &[u32], h: usize, salt: f32) -> Vec<f32> {
+        nodes
+            .iter()
+            .flat_map(|&n| (0..h).map(move |j| n as f32 * 10.0 + j as f32 + salt))
+            .collect()
+    }
+
+    #[test]
+    fn push_then_pull_roundtrip() {
+        let s = server();
+        let nodes = [3u32, 7, 11];
+        let l1 = rows(&nodes, 4, 0.0);
+        let l2 = rows(&nodes, 4, 0.5);
+        let rec = s.push(&nodes, &[l1.clone(), l2.clone()]);
+        assert_eq!(rec.rows, 3);
+        assert_eq!(rec.kind, RpcKind::Push);
+        let (got, rec) = s.pull(&[7, 3], false);
+        assert_eq!(rec.kind, RpcKind::Pull);
+        assert_eq!(&got[0][0..4], &l1[4..8]); // node 7 row
+        assert_eq!(&got[0][4..8], &l1[0..4]); // node 3 row
+        assert_eq!(&got[1][0..4], &l2[4..8]);
+        assert_eq!(s.stored_nodes(), 3);
+        assert_eq!(s.stored_rows(), 6);
+    }
+
+    #[test]
+    fn missing_nodes_are_zero() {
+        let s = server();
+        let (got, _) = s.pull(&[42], true);
+        assert!(got[0].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn overwrite_updates_in_place() {
+        let s = server();
+        let nodes = [5u32];
+        s.push(&nodes, &[vec![1.0; 4], vec![2.0; 4]]);
+        s.push(&nodes, &[vec![9.0; 4], vec![8.0; 4]]);
+        let (got, _) = s.pull(&[5], false);
+        assert_eq!(got[0], vec![9.0; 4]);
+        assert_eq!(got[1], vec![8.0; 4]);
+        assert_eq!(s.stored_nodes(), 1);
+    }
+
+    #[test]
+    fn rpc_time_scales_with_rows() {
+        let s = server();
+        let small: Vec<u32> = (0..10).collect();
+        let large: Vec<u32> = (0..10_000).collect();
+        s.push(&large, &[rows(&large, 4, 0.0), rows(&large, 4, 1.0)]);
+        let (_, r_small) = s.pull(&small, false);
+        let (_, r_large) = s.pull(&large, false);
+        assert!(r_large.time > r_small.time);
+        assert!(r_large.bytes > r_small.bytes * 500);
+    }
+
+    #[test]
+    fn concurrent_push_pull_is_safe() {
+        let s = Arc::new(server());
+        let mut handles = Vec::new();
+        for c in 0..8u32 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                let nodes: Vec<u32> = (c * 100..c * 100 + 50).collect();
+                for _ in 0..20 {
+                    s.push(&nodes, &[rows(&nodes, 4, 0.0), rows(&nodes, 4, 1.0)]);
+                    let (got, _) = s.pull(&nodes, false);
+                    // own rows are never torn: value matches the formula
+                    assert_eq!(got[0][0], nodes[0] as f32 * 10.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.stored_nodes(), 8 * 50);
+        let (pulls, pushes) = s.rpc_counts();
+        assert_eq!(pulls, 160);
+        assert_eq!(pushes, 160);
+    }
+}

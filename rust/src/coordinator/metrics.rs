@@ -1,0 +1,258 @@
+//! Round/session metrics: per-phase virtual-time breakdowns (Fig 7/9/10),
+//! RPC histograms (Fig 12), convergence traces (Fig 8), and the paper's
+//! time-to-accuracy metric.
+
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+
+/// What one RPC to the embedding server did (for Fig 12 analysis).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RpcRecord {
+    pub kind: RpcKind,
+    pub rows: usize,
+    pub bytes: usize,
+    /// Virtual service time (netsim + measured in-memory time).
+    pub time: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RpcKind {
+    Pull,
+    PullOnDemand,
+    Push,
+}
+
+/// Per-client, per-round phase breakdown (seconds, virtual time).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    /// Initial pull (batch prefetch for OPP, everything otherwise).
+    pub pull: f64,
+    /// Sum of training epochs (compute), excluding on-demand pulls.
+    pub train: f64,
+    /// On-demand pull time spent inside training (OPP; the paper's
+    /// hatched blue stack).
+    pub dyn_pull: f64,
+    /// Push phase: embed compute + transfer (the part NOT hidden by
+    /// overlap; see `ClientRoundMetrics::round_time`).
+    pub push: f64,
+    /// Push work that was hidden under the final epoch (for reporting).
+    pub push_hidden: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.pull + self.train + self.dyn_pull + self.push
+    }
+}
+
+/// One client's contribution to a round.
+#[derive(Clone, Debug, Default)]
+pub struct ClientRoundMetrics {
+    pub client: usize,
+    pub phases: PhaseTimes,
+    pub rpcs: Vec<RpcRecord>,
+    pub embeddings_pulled: usize,
+    pub embeddings_pushed: usize,
+    pub train_loss: f32,
+}
+
+/// One federated round, aggregated across clients.
+#[derive(Clone, Debug, Default)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Virtual round time = max over clients + aggregation/validation.
+    pub round_time: f64,
+    /// Phase breakdown of the slowest (critical-path) client.
+    pub critical: PhaseTimes,
+    /// Mean phase breakdown across clients (plotted in Fig 7-style bars).
+    pub mean_phases: PhaseTimes,
+    pub clients: Vec<ClientRoundMetrics>,
+    /// Global test accuracy after aggregation.
+    pub accuracy: f64,
+    pub val_loss: f64,
+}
+
+/// Full session trace + derived paper metrics.
+#[derive(Clone, Debug, Default)]
+pub struct SessionMetrics {
+    pub strategy: String,
+    pub dataset: String,
+    pub rounds: Vec<RoundMetrics>,
+    /// Embeddings resident at the server after the first full round.
+    pub server_embeddings: usize,
+    /// Total pull candidates & retained remotes (Fig 2a).
+    pub pull_candidates: usize,
+    pub retained_remotes: usize,
+    pub n_clients: usize,
+}
+
+impl SessionMetrics {
+    pub fn accuracies(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.accuracy).collect()
+    }
+
+    /// 5-round moving average, as the paper plots convergence.
+    pub fn smoothed_accuracies(&self) -> Vec<f64> {
+        stats::moving_average(&self.accuracies(), 5)
+    }
+
+    pub fn peak_accuracy(&self) -> f64 {
+        self.smoothed_accuracies()
+            .into_iter()
+            .fold(0.0, f64::max)
+    }
+
+    pub fn median_round_time(&self) -> f64 {
+        stats::median(
+            &self
+                .rounds
+                .iter()
+                .map(|r| r.round_time)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Median per-phase breakdown across rounds (mean-of-clients phases).
+    pub fn median_phases(&self) -> PhaseTimes {
+        let get = |f: fn(&PhaseTimes) -> f64| {
+            stats::median(
+                &self
+                    .rounds
+                    .iter()
+                    .map(|r| f(&r.mean_phases))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        PhaseTimes {
+            pull: get(|p| p.pull),
+            train: get(|p| p.train),
+            dyn_pull: get(|p| p.dyn_pull),
+            push: get(|p| p.push),
+            push_hidden: get(|p| p.push_hidden),
+        }
+    }
+
+    /// Cumulative virtual time until the smoothed accuracy first reaches
+    /// `target`. The paper's TTA metric (None = never reached).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        let smooth = self.smoothed_accuracies();
+        let mut elapsed = 0.0;
+        for (r, &acc) in self.rounds.iter().zip(&smooth) {
+            elapsed += r.round_time;
+            if acc >= target {
+                return Some(elapsed);
+            }
+        }
+        None
+    }
+
+    /// All RPC records of a kind across the session (Fig 12 violins).
+    pub fn rpcs(&self, kind: RpcKind) -> Vec<RpcRecord> {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.clients.iter())
+            .flat_map(|c| c.rpcs.iter())
+            .filter(|r| r.kind == kind)
+            .copied()
+            .collect()
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.rounds.iter().map(|r| r.round_time).sum()
+    }
+
+    /// JSON report blob for `reports/*.json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("strategy", self.strategy.as_str());
+        o.set("dataset", self.dataset.as_str());
+        o.set("n_clients", self.n_clients);
+        o.set("peak_accuracy", self.peak_accuracy());
+        o.set("median_round_time", self.median_round_time());
+        o.set("server_embeddings", self.server_embeddings);
+        o.set("pull_candidates", self.pull_candidates);
+        o.set("retained_remotes", self.retained_remotes);
+        o.set("accuracies", self.accuracies());
+        o.set(
+            "round_times",
+            self.rounds.iter().map(|r| r.round_time).collect::<Vec<_>>(),
+        );
+        let p = self.median_phases();
+        let mut ph = JsonObj::new();
+        ph.set("pull", p.pull)
+            .set("train", p.train)
+            .set("dyn_pull", p.dyn_pull)
+            .set("push", p.push)
+            .set("push_hidden", p.push_hidden);
+        o.set("median_phases", ph);
+        Json::Obj(o)
+    }
+}
+
+/// The paper's target-accuracy convention: 1% under the minimum peak
+/// accuracy across the strategies being compared.
+pub fn paper_target_accuracy(sessions: &[&SessionMetrics]) -> f64 {
+    let min_peak = sessions
+        .iter()
+        .map(|s| s.peak_accuracy())
+        .fold(f64::INFINITY, f64::min);
+    (min_peak - 0.01).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_session(times: &[f64], accs: &[f64]) -> SessionMetrics {
+        SessionMetrics {
+            strategy: "E".into(),
+            dataset: "tiny".into(),
+            rounds: times
+                .iter()
+                .zip(accs)
+                .enumerate()
+                .map(|(i, (&t, &a))| RoundMetrics {
+                    round: i,
+                    round_time: t,
+                    accuracy: a,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tta_accumulates_round_times() {
+        let s = fake_session(&[2.0, 2.0, 2.0, 2.0], &[0.1, 0.5, 0.8, 0.8]);
+        // moving-average(5) rises slowly: [.1,.3,.466,.55]
+        let t = s.time_to_accuracy(0.45).unwrap();
+        assert!((t - 6.0).abs() < 1e-9, "{t}");
+        assert!(s.time_to_accuracy(0.9).is_none());
+    }
+
+    #[test]
+    fn peak_is_smoothed_max() {
+        let s = fake_session(&[1.0; 6], &[0.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        // raw max 1.0 but smoothed max is 0.5
+        assert!(s.peak_accuracy() < 0.6);
+    }
+
+    #[test]
+    fn paper_target_uses_min_peak() {
+        let a = fake_session(&[1.0; 3], &[0.7, 0.7, 0.7]);
+        let b = fake_session(&[1.0; 3], &[0.9, 0.9, 0.9]);
+        let t = paper_target_accuracy(&[&a, &b]);
+        assert!((t - 0.69).abs() < 1e-6, "{t}");
+    }
+
+    #[test]
+    fn json_report_parses() {
+        let s = fake_session(&[1.0, 2.0], &[0.3, 0.4]);
+        let j = s.to_json();
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.at("strategy").as_str(), Some("E"));
+        assert_eq!(back.at("round_times").idx(1).as_f64(), Some(2.0));
+    }
+}

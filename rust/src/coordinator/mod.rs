@@ -1,0 +1,20 @@
+//! The L3 coordinator — the paper's system contribution: federated round
+//! orchestration with an embedding server, push-overlap, pruning, and
+//! scored prefetching (OptimES strategies D/E/O/P/OP/OPP/OPG).
+
+pub mod aggregation;
+pub mod client;
+pub mod embedding_server;
+pub mod metrics;
+pub mod net_transport;
+pub mod netsim;
+pub mod session;
+pub mod strategy;
+pub mod trainer;
+
+pub use client::{Client, EmbCache};
+pub use embedding_server::EmbeddingServer;
+pub use metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
+pub use netsim::NetConfig;
+pub use session::{run_session, SessionConfig};
+pub use strategy::{ScoreKind, Strategy};

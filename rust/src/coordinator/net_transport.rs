@@ -1,0 +1,412 @@
+//! TCP transport for the embedding server: lets the KV store run as a
+//! separate process (the paper deploys it as a Redis server on the
+//! aggregation host, reached over 1 Gbps Ethernet by all clients).
+//!
+//! Wire protocol (little-endian, length-delimited):
+//!
+//! ```text
+//! request  := op:u8 payload
+//!   op=1 PULL  payload := n:u32 node_id*n
+//!   op=2 PUSH  payload := n:u32 node_id*n layers:u32 (row:f32*hidden)*n per layer
+//!   op=3 STATS payload := (empty)
+//! response := status:u8 payload          (status 0 = ok)
+//!   PULL  -> layers:u32 hidden:u32 (row:f32*hidden)*n per layer
+//!   PUSH  -> (empty)
+//!   STATS -> stored_nodes:u64 stored_rows:u64
+//! ```
+//!
+//! All transfers are *batched* — one frame per pull/push phase, mirroring
+//! the Redis pipelining the paper uses to amortize RPC overheads (§5.1).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::embedding_server::EmbeddingServer;
+use super::metrics::{RpcKind, RpcRecord};
+
+const OP_PULL: u8 = 1;
+const OP_PUSH: u8 = 2;
+const OP_STATS: u8 = 3;
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("write u32")
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("write u64")
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("read u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("read u64")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    // SAFETY: f32 slice viewed as bytes for the wire; endianness is LE on
+    // every supported target (checked at server startup).
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    w.write_all(bytes).context("write f32s")
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut out = vec![0f32; n];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+    };
+    r.read_exact(bytes).context("read f32s")?;
+    Ok(out)
+}
+
+fn read_ids(r: &mut impl Read) -> Result<Vec<u32>> {
+    let n = read_u32(r)? as usize;
+    if n > 50_000_000 {
+        bail!("absurd node count {n}");
+    }
+    let mut out = vec![0u32; n];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
+    };
+    r.read_exact(bytes).context("read ids")?;
+    Ok(out)
+}
+
+/// Daemon wrapping an in-process [`EmbeddingServer`]: accepts connections
+/// until `stop` is raised, one service thread per client (cross-silo
+/// federations have few, long-lived clients).
+pub struct EmbServerDaemon {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EmbServerDaemon {
+    pub fn start(server: Arc<EmbeddingServer>, bind: impl ToSocketAddrs) -> Result<Self> {
+        let listener = TcpListener::bind(bind).context("bind")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name("emb-server-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nodelay(true).ok();
+                            stream.set_nonblocking(false).ok();
+                            // bounded reads so service threads can notice
+                            // the stop flag even with idle clients attached
+                            stream
+                                .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+                                .ok();
+                            let server = Arc::clone(&server);
+                            let stop = Arc::clone(&stop2);
+                            conns.push(std::thread::spawn(move || {
+                                let _ = serve_conn(server, stream, stop);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })?;
+        Ok(Self {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for EmbServerDaemon {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve one client connection until EOF or daemon stop.
+fn serve_conn(
+    server: Arc<EmbeddingServer>,
+    stream: TcpStream,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut r = std::io::BufReader::new(stream.try_clone()?);
+    let mut w = std::io::BufWriter::new(stream.try_clone()?);
+    loop {
+        let mut op = [0u8; 1];
+        match r.read_exact(&mut op) {
+            Ok(()) => {
+                // a frame has started: switch to blocking reads for its body
+                stream.set_read_timeout(None).ok();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        match op[0] {
+            OP_PULL => {
+                let nodes = read_ids(&mut r)?;
+                let (per_layer, _) = server.pull(&nodes, false);
+                w.write_all(&[0u8])?;
+                write_u32(&mut w, per_layer.len() as u32)?;
+                write_u32(&mut w, server.hidden as u32)?;
+                for rows in &per_layer {
+                    write_f32s(&mut w, rows)?;
+                }
+            }
+            OP_PUSH => {
+                let nodes = read_ids(&mut r)?;
+                let layers = read_u32(&mut r)? as usize;
+                if layers != server.n_layers() {
+                    bail!("push layer count {layers} != {}", server.n_layers());
+                }
+                let mut per_layer = Vec::with_capacity(layers);
+                for _ in 0..layers {
+                    per_layer.push(read_f32s(&mut r, nodes.len() * server.hidden)?);
+                }
+                server.push(&nodes, &per_layer);
+                w.write_all(&[0u8])?;
+            }
+            OP_STATS => {
+                w.write_all(&[0u8])?;
+                write_u64(&mut w, server.stored_nodes() as u64)?;
+                write_u64(&mut w, server.stored_rows() as u64)?;
+            }
+            other => bail!("unknown op {other}"),
+        }
+        w.flush()?;
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+            .ok();
+    }
+}
+
+/// Client-side handle speaking the wire protocol. API mirrors
+/// [`EmbeddingServer`]; RPC records carry the *measured* wall time (the
+/// network is real here, no cost model).
+pub struct RemoteEmbClient {
+    r: std::io::BufReader<TcpStream>,
+    w: std::io::BufWriter<TcpStream>,
+    pub hidden: usize,
+    pub n_layers: usize,
+}
+
+impl RemoteEmbClient {
+    pub fn connect(addr: impl ToSocketAddrs, n_layers: usize, hidden: usize) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self {
+            r: std::io::BufReader::new(stream.try_clone()?),
+            w: std::io::BufWriter::new(stream),
+            hidden,
+            n_layers,
+        })
+    }
+
+    fn check_status(&mut self) -> Result<()> {
+        let mut st = [0u8; 1];
+        self.r.read_exact(&mut st)?;
+        if st[0] != 0 {
+            bail!("server error status {}", st[0]);
+        }
+        Ok(())
+    }
+
+    pub fn pull(&mut self, nodes: &[u32]) -> Result<(Vec<Vec<f32>>, RpcRecord)> {
+        let t0 = std::time::Instant::now();
+        self.w.write_all(&[OP_PULL])?;
+        write_u32(&mut self.w, nodes.len() as u32)?;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(nodes.as_ptr() as *const u8, nodes.len() * 4)
+        };
+        self.w.write_all(bytes)?;
+        self.w.flush()?;
+        self.check_status()?;
+        let layers = read_u32(&mut self.r)? as usize;
+        let hidden = read_u32(&mut self.r)? as usize;
+        if hidden != self.hidden {
+            bail!("server hidden {hidden} != client {}", self.hidden);
+        }
+        let mut per_layer = Vec::with_capacity(layers);
+        for _ in 0..layers {
+            per_layer.push(read_f32s(&mut self.r, nodes.len() * hidden)?);
+        }
+        let payload = nodes.len() * layers * (hidden * 4 + 4);
+        Ok((
+            per_layer,
+            RpcRecord {
+                kind: RpcKind::Pull,
+                rows: nodes.len(),
+                bytes: payload,
+                time: t0.elapsed().as_secs_f64(),
+            },
+        ))
+    }
+
+    pub fn push(&mut self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        let t0 = std::time::Instant::now();
+        self.w.write_all(&[OP_PUSH])?;
+        write_u32(&mut self.w, nodes.len() as u32)?;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(nodes.as_ptr() as *const u8, nodes.len() * 4)
+        };
+        self.w.write_all(bytes)?;
+        write_u32(&mut self.w, per_layer.len() as u32)?;
+        for rows in per_layer {
+            write_f32s(&mut self.w, rows)?;
+        }
+        self.w.flush()?;
+        self.check_status()?;
+        let payload = nodes.len() * per_layer.len() * (self.hidden * 4 + 4);
+        Ok(RpcRecord {
+            kind: RpcKind::Push,
+            rows: nodes.len(),
+            bytes: payload,
+            time: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn stats(&mut self) -> Result<(usize, usize)> {
+        self.w.write_all(&[OP_STATS])?;
+        self.w.flush()?;
+        self.check_status()?;
+        Ok((read_u64(&mut self.r)? as usize, read_u64(&mut self.r)? as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::netsim::NetConfig;
+
+    fn daemon() -> (EmbServerDaemon, Arc<EmbeddingServer>) {
+        let server = Arc::new(EmbeddingServer::new(2, 4, NetConfig::default()));
+        let d = EmbServerDaemon::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        (d, server)
+    }
+
+    fn rows(nodes: &[u32], h: usize, salt: f32) -> Vec<f32> {
+        nodes
+            .iter()
+            .flat_map(|&n| (0..h).map(move |j| n as f32 + j as f32 * 0.25 + salt))
+            .collect()
+    }
+
+    #[test]
+    fn tcp_roundtrip_push_pull_stats() {
+        let (d, _server) = daemon();
+        let mut c = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+        let nodes = [5u32, 9, 1000];
+        let l1 = rows(&nodes, 4, 0.0);
+        let l2 = rows(&nodes, 4, 7.0);
+        let rec = c.push(&nodes, &[l1.clone(), l2.clone()]).unwrap();
+        assert_eq!(rec.rows, 3);
+        let (got, rec) = c.pull(&[9, 5]).unwrap();
+        assert_eq!(rec.kind, RpcKind::Pull);
+        assert_eq!(&got[0][0..4], &l1[4..8]);
+        assert_eq!(&got[0][4..8], &l1[0..4]);
+        assert_eq!(&got[1][0..4], &l2[4..8]);
+        let (n, r) = c.stats().unwrap();
+        assert_eq!((n, r), (3, 6));
+        d.shutdown();
+    }
+
+    #[test]
+    fn tcp_missing_nodes_are_zero() {
+        let (d, _server) = daemon();
+        let mut c = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+        let (got, _) = c.pull(&[424242]).unwrap();
+        assert!(got[0].iter().all(|&v| v == 0.0));
+        d.shutdown();
+    }
+
+    #[test]
+    fn tcp_concurrent_clients() {
+        let (d, server) = daemon();
+        let addr = d.addr;
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = RemoteEmbClient::connect(addr, 2, 4).unwrap();
+                let nodes: Vec<u32> = (t * 1000..t * 1000 + 200).collect();
+                for round in 0..10 {
+                    let l = rows(&nodes, 4, round as f32);
+                    c.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+                    let (got, _) = c.pull(&nodes).unwrap();
+                    assert_eq!(got[0], l);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stored_nodes(), 800);
+        d.shutdown();
+    }
+
+    #[test]
+    fn tcp_large_batch() {
+        let (d, _server) = daemon();
+        let mut c = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+        let nodes: Vec<u32> = (0..50_000).collect();
+        let l = rows(&nodes, 4, 0.5);
+        let rec = c.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        assert!(rec.bytes > 1_000_000);
+        let (got, rec2) = c.pull(&nodes).unwrap();
+        assert_eq!(got[0], l);
+        assert!(rec2.time > 0.0);
+        d.shutdown();
+    }
+
+    #[test]
+    fn push_layer_mismatch_closes_cleanly() {
+        let (d, _server) = daemon();
+        let mut c = RemoteEmbClient::connect(d.addr, 3, 4).unwrap();
+        let nodes = [1u32];
+        // client claims 3 layers; server has 2 -> connection drops, the
+        // next call errors rather than hanging
+        let res = c
+            .push(&nodes, &[vec![0.0; 4], vec![0.0; 4], vec![0.0; 4]])
+            .and_then(|_| c.stats().map(|_| ()));
+        assert!(res.is_err());
+        d.shutdown();
+    }
+}

@@ -1,0 +1,437 @@
+//! Session driver: the full federated lifecycle of Fig 3 / Fig 5 —
+//! partition, pre-training round, then `rounds` iterations of
+//! {broadcast global model → pull → ε local epochs → push → FedAvg →
+//! global validation} across all clients, with virtual-time round
+//! accounting (DESIGN.md §7).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::aggregation::{fedavg, Validator};
+use super::client::Client;
+use super::embedding_server::EmbeddingServer;
+use super::metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
+use super::netsim::NetConfig;
+use super::strategy::{ScoreKind, Strategy};
+use super::trainer::pretrain_push;
+use crate::graph::partition::metis_lite;
+use crate::graph::scoring;
+use crate::graph::subgraph::{build_all_per_client, Prune};
+use crate::graph::{Graph, Partition};
+use crate::runtime::{ModelState, StepEngine};
+use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub dataset: String,
+    pub clients: usize,
+    pub strategy: Strategy,
+    pub rounds: usize,
+    /// Local epochs per round (paper: ε = 3).
+    pub epochs: usize,
+    pub lr: f32,
+    /// Minibatches per local epoch.
+    pub epoch_batches: usize,
+    /// Global-validation batches (fixed across rounds).
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub net: NetConfig,
+    /// Run client rounds on parallel threads (true = deployment-like;
+    /// false = deterministic timing for ablations).
+    pub parallel_clients: bool,
+    /// Staleness k for the push overlap: push the state from epoch ε-k,
+    /// overlapping the last k epochs (paper default k=1; §1 mentions the
+    /// staleness-configuration ablation).
+    pub overlap_stale: usize,
+    /// Reset client Adam moments when the global model is broadcast
+    /// (FedAvg resets the loss surface; stale moments from the
+    /// pre-aggregation parameters are destructive).
+    pub reset_opt_each_round: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "tiny".into(),
+            clients: 4,
+            strategy: Strategy::e(),
+            rounds: 10,
+            epochs: 3,
+            lr: 0.003,
+            epoch_batches: 8,
+            eval_batches: 8,
+            seed: 42,
+            net: NetConfig::default(),
+            parallel_clients: true,
+            overlap_stale: 1,
+            reset_opt_each_round: true,
+        }
+    }
+}
+
+/// Per-remote-index scores for a client under a [`ScoreKind`].
+fn client_scores(
+    kind: ScoreKind,
+    sub: &crate::graph::ClientSubgraph,
+    layers: usize,
+    merged: &std::collections::HashMap<u32, f32>,
+    seed: u64,
+) -> Vec<f32> {
+    match kind {
+        ScoreKind::Frequency => scoring::frequency_scores(sub, layers, 768, seed),
+        ScoreKind::Random => {
+            let mut rng = Rng::new(seed, 0x5C02E + sub.client_id as u64);
+            (0..sub.n_remote()).map(|_| rng.f32()).collect()
+        }
+        ScoreKind::Degree | ScoreKind::Bridge => sub
+            .remote
+            .iter()
+            .map(|gid| merged.get(gid).copied().unwrap_or(0.0))
+            .collect(),
+    }
+}
+
+/// Owner-side centrality maps, exchanged in pre-training (paper §4.1.2).
+fn merged_centrality(
+    kind: ScoreKind,
+    g: &Graph,
+    part: &Partition,
+    seed: u64,
+) -> std::collections::HashMap<u32, f32> {
+    match kind {
+        ScoreKind::Degree => scoring::merge_scores(
+            (0..part.k)
+                .map(|c| scoring::degree_scores_local(g, part, c))
+                .collect(),
+        ),
+        ScoreKind::Bridge => scoring::merge_scores(
+            (0..part.k)
+                .map(|c| scoring::bridge_scores_local(g, part, c, 48, seed))
+                .collect(),
+        ),
+        _ => std::collections::HashMap::new(),
+    }
+}
+
+pub fn run_session(
+    g: &Graph,
+    cfg: &SessionConfig,
+    engine: Arc<dyn StepEngine>,
+) -> Result<SessionMetrics> {
+    let geom = *engine.geom();
+    let strat = &cfg.strategy;
+    let part = metis_lite(g, cfg.clients, cfg.seed);
+
+    // ---- subgraph expansion + pruning ------------------------------------
+    let base_prune = match strat.retention {
+        // dynamic pruning expands un-pruned and re-samples per round
+        Some(_) if strat.dynamic_prune => Prune::None,
+        Some(i) => Prune::Retention(i),
+        None => Prune::None,
+    };
+    let prunes: Vec<Prune> = if let Some(sp) = strat.scored_prune {
+        // two-phase: expand un-scored first, score, then re-expand with
+        // the per-client top-f% (offline pre-training work, §4.1.2)
+        let probe = build_all_per_client(g, &part, &vec![base_prune.clone(); part.k], cfg.seed);
+        let merged = merged_centrality(sp.score, g, &part, cfg.seed);
+        probe
+            .iter()
+            .map(|sub| {
+                let scores = client_scores(sp.score, sub, geom.layers, &merged, cfg.seed);
+                let map: std::collections::HashMap<u32, f32> = sub
+                    .remote
+                    .iter()
+                    .zip(&scores)
+                    .map(|(gid, s)| (*gid, *s))
+                    .collect();
+                Prune::TopFrac {
+                    frac: sp.top_frac,
+                    scores: map,
+                }
+            })
+            .collect()
+    } else {
+        vec![base_prune; part.k]
+    };
+    let subs = build_all_per_client(g, &part, &prunes, cfg.seed);
+    let pull_candidates: usize = subs.iter().map(|s| s.pull_candidates).sum();
+    let retained_remotes: usize = subs.iter().map(|s| s.n_remote()).sum();
+
+    // ---- infrastructure ---------------------------------------------------
+    let server = EmbeddingServer::new(geom.layers - 1, geom.hidden, cfg.net);
+    let validator = Validator::new(g, &engine, cfg.eval_batches, cfg.seed ^ 0xEA);
+    let mut global = ModelState::init(&geom, cfg.seed).params;
+
+    let mut clients: Vec<Client> = subs
+        .into_iter()
+        .map(|sub| {
+            let mut c = Client::new(sub, &engine, cfg.epoch_batches, cfg.seed);
+            c.state.params = global.clone();
+            if let (true, Some(limit)) = (strat.dynamic_prune, strat.retention) {
+                c.enable_dynamic_prune(limit);
+            }
+            c
+        })
+        .collect();
+
+    // OPP prefetch scores on the *final* (possibly pruned) subgraphs.
+    if let Some(pf) = strat.prefetch {
+        let merged = merged_centrality(pf.score, g, &part, cfg.seed);
+        for c in clients.iter_mut() {
+            let scores = client_scores(pf.score, &c.sub, geom.layers, &merged, cfg.seed);
+            c.set_scores(scores, Some(pf.top_frac));
+        }
+    }
+
+    // ---- pre-training round (§3.2.1) --------------------------------------
+    if strat.share_embeddings {
+        for c in clients.iter_mut() {
+            pretrain_push(c, g, &engine, &server).context("pretrain push")?;
+        }
+    }
+
+    // ---- federated rounds --------------------------------------------------
+    let mut metrics = SessionMetrics {
+        strategy: strat.name.clone(),
+        dataset: cfg.dataset.clone(),
+        n_clients: cfg.clients,
+        pull_candidates,
+        retained_remotes,
+        ..Default::default()
+    };
+
+    for round in 0..cfg.rounds {
+        // broadcast the global model
+        for c in clients.iter_mut() {
+            c.state.params = global.clone();
+            if cfg.reset_opt_each_round {
+                for m in c.state.m.iter_mut() {
+                    m.iter_mut().for_each(|v| *v = 0.0);
+                }
+                for v in c.state.v.iter_mut() {
+                    v.iter_mut().for_each(|x| *x = 0.0);
+                }
+                c.state.t = 0.0;
+            }
+        }
+        // run every client's local round
+        let outcomes: Vec<super::trainer::RoundOutcome> = if cfg.parallel_clients {
+            let engine_ref = &engine;
+            let server_ref = &server;
+            let results: Vec<Result<super::trainer::RoundOutcome>> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = clients
+                        .iter_mut()
+                        .map(|c| {
+                            s.spawn(move || {
+                                super::trainer::run_round_stale(
+                                    c,
+                                    g,
+                                    strat,
+                                    engine_ref,
+                                    server_ref,
+                                    cfg.epochs,
+                                    cfg.lr,
+                                    cfg.overlap_stale,
+                                )
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("client thread"))
+                        .collect()
+                });
+            results.into_iter().collect::<Result<Vec<_>>>()?
+        } else {
+            let mut outs = Vec::with_capacity(clients.len());
+            for c in clients.iter_mut() {
+                outs.push(super::trainer::run_round_stale(
+                    c,
+                    g,
+                    strat,
+                    &engine,
+                    &server,
+                    cfg.epochs,
+                    cfg.lr,
+                    cfg.overlap_stale,
+                )?);
+            }
+            outs
+        };
+
+        // aggregate
+        let agg_sw = Stopwatch::start();
+        let weighted: Vec<(&ModelState, f64)> = clients
+            .iter()
+            .map(|c| (&c.state, c.sub.train_local.len().max(1) as f64))
+            .collect();
+        global = fedavg(&weighted);
+        let (acc, val_loss) = validator.evaluate(&engine, &global)?;
+        let agg_time = agg_sw.secs();
+
+        // compose round metrics (virtual time; DESIGN.md §7)
+        let mut rm = RoundMetrics {
+            round,
+            accuracy: acc,
+            val_loss,
+            ..Default::default()
+        };
+        let mut worst = 0f64;
+        let mut mean = PhaseTimes::default();
+        for o in &outcomes {
+            let t = o.metrics.phases.total();
+            if t >= worst {
+                worst = t;
+                rm.critical = o.metrics.phases;
+            }
+            mean.pull += o.metrics.phases.pull;
+            mean.train += o.metrics.phases.train;
+            mean.dyn_pull += o.metrics.phases.dyn_pull;
+            mean.push += o.metrics.phases.push;
+            mean.push_hidden += o.metrics.phases.push_hidden;
+            rm.clients.push(o.metrics.clone());
+        }
+        let n = outcomes.len().max(1) as f64;
+        mean.pull /= n;
+        mean.train /= n;
+        mean.dyn_pull /= n;
+        mean.push /= n;
+        mean.push_hidden /= n;
+        rm.mean_phases = mean;
+        rm.round_time = worst + agg_time + cfg.net.params_time(global.iter().map(|p| p.len()).sum());
+        metrics.rounds.push(rm);
+
+        if round == 0 {
+            metrics.server_embeddings = server.stored_nodes();
+        }
+    }
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+    use crate::runtime::manifest::{ModelGeom, ModelKind};
+    use crate::runtime::RefEngine;
+
+    fn engine() -> Arc<dyn StepEngine> {
+        Arc::new(RefEngine::new(ModelGeom {
+            model: ModelKind::Gc,
+            layers: 3,
+            feat: 32,
+            hidden: 16,
+            classes: 4,
+            batch: 8,
+            fanout: 3,
+            push_batch: 8,
+        }))
+    }
+
+    fn cfg(strategy: Strategy, rounds: usize) -> SessionConfig {
+        SessionConfig {
+            strategy,
+            rounds,
+            epochs: 2,
+            epoch_batches: 4,
+            eval_batches: 4,
+            parallel_clients: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_runs_and_learns_e() {
+        let g = tiny(71);
+        let m = run_session(&g, &cfg(Strategy::e(), 8), engine()).unwrap();
+        assert_eq!(m.rounds.len(), 8);
+        // should comfortably beat 1/classes = 0.25 on the planted task
+        assert!(
+            m.peak_accuracy() > 0.4,
+            "peak accuracy {}",
+            m.peak_accuracy()
+        );
+        assert!(m.server_embeddings > 0);
+        assert!(m.median_round_time() > 0.0);
+        // every round pulled + pushed
+        for r in &m.rounds {
+            assert!(r.mean_phases.pull > 0.0);
+            assert!(r.mean_phases.push > 0.0);
+            assert!(r.mean_phases.train > 0.0);
+        }
+    }
+
+    #[test]
+    fn d_has_no_comm_and_lower_accuracy_than_e() {
+        let g = tiny(73);
+        let e = run_session(&g, &cfg(Strategy::e(), 10), engine()).unwrap();
+        let d = run_session(&g, &cfg(Strategy::d(), 10), engine()).unwrap();
+        for r in &d.rounds {
+            assert_eq!(r.mean_phases.pull, 0.0);
+            assert_eq!(r.mean_phases.push, 0.0);
+        }
+        assert_eq!(d.server_embeddings, 0);
+        // D's rounds must be faster (no comm)
+        assert!(d.median_round_time() < e.median_round_time());
+    }
+
+    #[test]
+    fn all_ladder_strategies_run() {
+        let g = tiny(75);
+        for s in Strategy::ladder() {
+            let name = s.name.clone();
+            let m = run_session(&g, &cfg(s, 3), engine())
+                .unwrap_or_else(|e| panic!("strategy {name}: {e}"));
+            assert_eq!(m.rounds.len(), 3, "{name}");
+            assert!(m.rounds.iter().all(|r| r.accuracy.is_finite()));
+        }
+    }
+
+    #[test]
+    fn retention_shrinks_server_footprint() {
+        let g = tiny(77);
+        let e = run_session(&g, &cfg(Strategy::e(), 2), engine()).unwrap();
+        let p2 = run_session(&g, &cfg(Strategy::parse("P2").unwrap(), 2), engine()).unwrap();
+        let p0 = run_session(&g, &cfg(Strategy::parse("P0").unwrap(), 2), engine()).unwrap();
+        assert!(p2.server_embeddings < e.server_embeddings);
+        assert_eq!(p0.server_embeddings, 0);
+        assert!(p2.retained_remotes < e.retained_remotes);
+    }
+
+    #[test]
+    fn opg_prunes_to_top_fraction() {
+        let g = tiny(79);
+        let e = run_session(&g, &cfg(Strategy::e(), 2), engine()).unwrap();
+        let opg = run_session(&g, &cfg(Strategy::opg(), 2), engine()).unwrap();
+        assert!(
+            (opg.retained_remotes as f64) < 0.5 * e.retained_remotes as f64,
+            "opg {} vs e {}",
+            opg.retained_remotes,
+            e.retained_remotes
+        );
+    }
+
+    #[test]
+    fn opp_round_time_contains_dyn_pull() {
+        let g = tiny(81);
+        let m = run_session(&g, &cfg(Strategy::opp(), 3), engine()).unwrap();
+        let any_dyn = m
+            .rounds
+            .iter()
+            .any(|r| r.mean_phases.dyn_pull > 0.0);
+        assert!(any_dyn, "OPP never pulled on demand");
+    }
+
+    #[test]
+    fn parallel_and_sequential_agree_on_structure() {
+        let g = tiny(83);
+        let mut c = cfg(Strategy::op(), 2);
+        c.parallel_clients = true;
+        let m = run_session(&g, &c, engine()).unwrap();
+        assert_eq!(m.rounds.len(), 2);
+        assert_eq!(m.rounds[0].clients.len(), 4);
+    }
+}

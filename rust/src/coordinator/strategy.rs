@@ -1,0 +1,305 @@
+//! Strategy configuration: the paper's seven evaluated strategies plus the
+//! scoring/fraction ablation variants of Fig 11 and the prefetch ablation
+//! of Fig 12 (`OPP_T0`, `OPP_R25`, ...).
+//!
+//! Ladder (§5.2 "Metrics and Notations"):
+//! * `D`   — default federated GNN (no embedding exchange; P_0)
+//! * `E`   — EmbC baseline (all remote embeddings, synchronous push)
+//! * `O`   — E + push overlap
+//! * `P`   — uniform random pruning with retention limit (default P_4)
+//! * `OP`  — O + P
+//! * `OPP` — OP + scored pull prefetch (top-x%, default 25%, rest
+//!   on-demand)
+//! * `OPG` — OP + scored graph pruning (top-f%, default 25%, static)
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreKind {
+    /// Paper §4.1.2 frequency score (default).
+    Frequency,
+    /// Uniform random scores (R25 ablation).
+    Random,
+    /// Degree centrality exchanged between owners (D25).
+    Degree,
+    /// Bridge centrality exchanged between owners (B25).
+    Bridge,
+}
+
+impl ScoreKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ScoreKind::Frequency => "T",
+            ScoreKind::Random => "R",
+            ScoreKind::Degree => "D",
+            ScoreKind::Bridge => "B",
+        }
+    }
+}
+
+/// Full strategy configuration for one federated session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Strategy {
+    /// Display name ("OPP", "OPG_R25", ...).
+    pub name: String,
+    /// Per-boundary-vertex retention limit (None = unlimited / P_inf;
+    /// Some(0) = D).
+    pub retention: Option<usize>,
+    /// Overlap the push phase with the final training epoch (O-family).
+    pub overlap_push: bool,
+    /// Share remote embeddings at all (false only for D).
+    pub share_embeddings: bool,
+    /// OPP: prefetch the top-`frac` scoring pull nodes at round start and
+    /// pull the rest on demand (one batched RPC per minibatch).
+    pub prefetch: Option<PrefetchCfg>,
+    /// OPG: statically expand with only the top-`frac` scoring pull nodes.
+    pub scored_prune: Option<ScoredPruneCfg>,
+    /// Re-sample the retention subsets each round instead of pruning once
+    /// offline (the paper's §1 static-vs-dynamic pruning ablation;
+    /// requires `retention`).
+    pub dynamic_prune: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefetchCfg {
+    pub top_frac: f64,
+    pub score: ScoreKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScoredPruneCfg {
+    pub top_frac: f64,
+    pub score: ScoreKind,
+}
+
+/// Default retention for the P-family (the paper uses P_4 everywhere
+/// except the Fig 10 retention sweep).
+pub const DEFAULT_RETENTION: usize = 4;
+pub const DEFAULT_FRAC: f64 = 0.25;
+
+impl Strategy {
+    pub fn d() -> Self {
+        Strategy {
+            name: "D".into(),
+            retention: Some(0),
+            overlap_push: false,
+            share_embeddings: false,
+            prefetch: None,
+            scored_prune: None,
+            dynamic_prune: false,
+        }
+    }
+
+    pub fn e() -> Self {
+        Strategy {
+            name: "E".into(),
+            retention: None,
+            overlap_push: false,
+            share_embeddings: true,
+            prefetch: None,
+            scored_prune: None,
+            dynamic_prune: false,
+        }
+    }
+
+    pub fn o() -> Self {
+        Strategy {
+            name: "O".into(),
+            overlap_push: true,
+            ..Self::e()
+        }
+    }
+
+    pub fn p(retention: usize) -> Self {
+        Strategy {
+            name: if retention == DEFAULT_RETENTION {
+                "P".into()
+            } else {
+                format!("P{retention}")
+            },
+            retention: Some(retention),
+            overlap_push: false,
+            share_embeddings: retention > 0,
+            prefetch: None,
+            scored_prune: None,
+            dynamic_prune: false,
+        }
+    }
+
+    /// Dynamic-pruning variant of P_i: the retained subsets are
+    /// re-sampled every round (paper §1 ablation).
+    pub fn p_dynamic(retention: usize) -> Self {
+        Strategy {
+            name: format!("P{retention}dyn"),
+            dynamic_prune: true,
+            ..Self::p(retention)
+        }
+    }
+
+    pub fn op() -> Self {
+        Strategy {
+            name: "OP".into(),
+            overlap_push: true,
+            ..Self::p(DEFAULT_RETENTION)
+        }
+    }
+
+    pub fn opp() -> Self {
+        Self::opp_with(DEFAULT_FRAC, ScoreKind::Frequency)
+    }
+
+    pub fn opp_with(frac: f64, score: ScoreKind) -> Self {
+        let name = if (frac - DEFAULT_FRAC).abs() < 1e-9 && score == ScoreKind::Frequency {
+            "OPP".to_string()
+        } else {
+            format!("OPP_{}{}", score.tag(), (frac * 100.0).round() as usize)
+        };
+        Strategy {
+            name,
+            prefetch: Some(PrefetchCfg {
+                top_frac: frac,
+                score,
+            }),
+            ..Self::op()
+        }
+    }
+
+    pub fn opg() -> Self {
+        Self::opg_with(DEFAULT_FRAC, ScoreKind::Frequency)
+    }
+
+    pub fn opg_with(frac: f64, score: ScoreKind) -> Self {
+        let name = if (frac - DEFAULT_FRAC).abs() < 1e-9 && score == ScoreKind::Frequency {
+            "OPG".to_string()
+        } else {
+            format!("OPG_{}{}", score.tag(), (frac * 100.0).round() as usize)
+        };
+        Strategy {
+            name,
+            scored_prune: Some(ScoredPruneCfg {
+                top_frac: frac,
+                score,
+            }),
+            ..Self::op()
+        }
+    }
+
+    /// The seven headline strategies in paper order.
+    pub fn ladder() -> Vec<Strategy> {
+        vec![
+            Self::d(),
+            Self::e(),
+            Self::o(),
+            Self::p(DEFAULT_RETENTION),
+            Self::op(),
+            Self::opp(),
+            Self::opg(),
+        ]
+    }
+
+    /// Parse "D" | "E" | "O" | "P" | "P2" | "OP" | "OPP" | "OPP_T0" |
+    /// "OPP_R25" | "OPG" | "OPG_B25" | "OPG_T75" | ...
+    pub fn parse(s: &str) -> Option<Strategy> {
+        let up = s.to_ascii_uppercase();
+        match up.as_str() {
+            "D" => return Some(Self::d()),
+            "E" => return Some(Self::e()),
+            "O" => return Some(Self::o()),
+            "P" => return Some(Self::p(DEFAULT_RETENTION)),
+            "OP" => return Some(Self::op()),
+            "OPP" => return Some(Self::opp()),
+            "OPG" => return Some(Self::opg()),
+            _ => {}
+        }
+        if let Some(rest) = up.strip_prefix("P") {
+            if let Some(core) = rest.strip_suffix("DYN") {
+                if let Ok(i) = core.parse::<usize>() {
+                    return Some(Self::p_dynamic(i));
+                }
+            }
+            if let Ok(i) = rest.parse::<usize>() {
+                return Some(Self::p(i));
+            }
+            if rest == "INF" {
+                return Some(Strategy {
+                    name: "Pinf".into(),
+                    ..Self::e()
+                });
+            }
+        }
+        for (prefix, is_prefetch) in [("OPP_", true), ("OPG_", false)] {
+            if let Some(rest) = up.strip_prefix(prefix) {
+                let score = match &rest[..1] {
+                    "T" => ScoreKind::Frequency,
+                    "R" => ScoreKind::Random,
+                    "D" => ScoreKind::Degree,
+                    "B" => ScoreKind::Bridge,
+                    _ => return None,
+                };
+                let frac = rest[1..].parse::<f64>().ok()? / 100.0;
+                return Some(if is_prefetch {
+                    Self::opp_with(frac, score)
+                } else {
+                    Self::opg_with(frac, score)
+                });
+            }
+        }
+        None
+    }
+
+    /// Does this strategy need per-client frequency/centrality scores?
+    pub fn needs_scores(&self) -> bool {
+        self.prefetch.is_some() || self.scored_prune.is_some()
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_has_paper_semantics() {
+        let l = Strategy::ladder();
+        assert_eq!(l.len(), 7);
+        assert!(!l[0].share_embeddings); // D
+        assert_eq!(l[0].retention, Some(0));
+        assert!(l[1].share_embeddings && !l[1].overlap_push); // E
+        assert!(l[2].overlap_push && l[2].retention.is_none()); // O
+        assert_eq!(l[3].retention, Some(4)); // P
+        assert!(l[4].overlap_push && l[4].retention == Some(4)); // OP
+        assert!(l[5].prefetch.is_some()); // OPP
+        assert!(l[6].scored_prune.is_some()); // OPG
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["D", "E", "O", "P", "OP", "OPP", "OPG"] {
+            let s = Strategy::parse(name).unwrap();
+            assert_eq!(s.name, name);
+        }
+        let p2 = Strategy::parse("P2").unwrap();
+        assert_eq!(p2.retention, Some(2));
+        let t0 = Strategy::parse("OPP_T0").unwrap();
+        assert_eq!(t0.prefetch.unwrap().top_frac, 0.0);
+        let r25 = Strategy::parse("OPG_R25").unwrap();
+        assert_eq!(r25.scored_prune.unwrap().score, ScoreKind::Random);
+        let b25 = Strategy::parse("OPG_B25").unwrap();
+        assert_eq!(b25.scored_prune.unwrap().score, ScoreKind::Bridge);
+        let t75 = Strategy::parse("OPG_T75").unwrap();
+        assert!((t75.scored_prune.unwrap().top_frac - 0.75).abs() < 1e-9);
+        assert!(Strategy::parse("XYZ").is_none());
+    }
+
+    #[test]
+    fn needs_scores() {
+        assert!(!Strategy::e().needs_scores());
+        assert!(Strategy::opp().needs_scores());
+        assert!(Strategy::opg().needs_scores());
+    }
+}

@@ -1,0 +1,594 @@
+//! The client-side round lifecycle: pull phase, ε training epochs (with
+//! OPP on-demand pulls), and the push phase — optionally overlapped with
+//! the final epoch (paper §3.2.2, §4.2, §4.3).
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::client::{Client, EmbCache};
+use super::embedding_server::EmbeddingServer;
+use super::metrics::{ClientRoundMetrics, RpcRecord};
+use super::strategy::Strategy;
+use crate::graph::sampler::{Blocks, Sampler};
+use crate::graph::{ClientSubgraph, Graph};
+use crate::runtime::{Batch, ModelState, StepEngine};
+use crate::util::Stopwatch;
+
+/// Everything the session driver needs to compose virtual round time.
+#[derive(Clone, Debug, Default)]
+pub struct RoundOutcome {
+    pub metrics: ClientRoundMetrics,
+    /// Measured wall time per epoch (compute; includes engine contention).
+    pub epoch_times: Vec<f64>,
+    /// Virtual push total (embed compute + transfer), regardless of
+    /// whether it was overlapped.
+    pub push_total: f64,
+    pub overlapped: bool,
+}
+
+/// Assemble a `Batch` from sampled blocks + the client's cache. Remote
+/// rows absent from the cache contribute zero embeddings (only possible
+/// for OPP pre-pull misses, which are pulled on demand before assembly,
+/// or for push-embed computation with stale/missing entries).
+pub fn assemble_batch(
+    blocks: &Blocks,
+    sub: &ClientSubgraph,
+    cache: &EmbCache,
+    g: &Graph,
+    adj: &[Vec<i32>],
+    with_labels: bool,
+) -> Batch {
+    let dims = blocks.dims;
+    let depth = blocks.depth;
+    let s_deep = blocks.levels[depth].len();
+    let mut x = vec![0f32; s_deep * dims.feat];
+    blocks.fill_x(sub, g, &mut x);
+
+    let n_sub = depth.min(dims.layers) - 1;
+    let mut rmask = Vec::with_capacity(n_sub);
+    let mut cache_t = Vec::with_capacity(n_sub);
+    for l in 1..=n_sub {
+        let lvl = depth - l;
+        let s = blocks.levels[lvl].len();
+        let mut rm = vec![0f32; s];
+        blocks.fill_rmask(lvl, &mut rm);
+        let mut ct = vec![0f32; s * dims.hidden];
+        for (row, ridx) in blocks.remote_rows(lvl) {
+            if cache.is_present(ridx) {
+                ct[row * dims.hidden..(row + 1) * dims.hidden]
+                    .copy_from_slice(cache.row(l, ridx));
+            }
+        }
+        rmask.push(rm);
+        cache_t.push(ct);
+    }
+
+    let (labels, lmask) = if with_labels {
+        let mut labels = vec![0i32; blocks.width];
+        let mut lmask = vec![0f32; blocks.width];
+        blocks.fill_labels(sub, g, &mut labels, &mut lmask);
+        (labels, lmask)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    Batch {
+        depth,
+        width: blocks.width,
+        x,
+        adj: adj.to_vec(),
+        msk: blocks.msk.clone(),
+        rmask,
+        cache: cache_t,
+        labels,
+        lmask,
+    }
+}
+
+/// Compute h^1..h^{L-1} for the client's push nodes and push them to the
+/// embedding server in one batched RPC. Returns (embed-compute seconds,
+/// push RPC record). `local_only` selects the pre-training sampling mode.
+#[allow(clippy::too_many_arguments)]
+pub fn compute_and_push(
+    sub: &ClientSubgraph,
+    cache: &EmbCache,
+    state: &ModelState,
+    engine: &Arc<dyn StepEngine>,
+    server: &EmbeddingServer,
+    sampler: &mut Sampler,
+    adj_embed: &[Vec<i32>],
+    push_local: &[u32],
+    push_globals: &[u32],
+    g: &Graph,
+    local_only: bool,
+) -> Result<(f64, Option<RpcRecord>)> {
+    if push_local.is_empty() {
+        return Ok((0.0, None));
+    }
+    let dims = sampler.dims;
+    let h = dims.hidden;
+    let n_layers = dims.layers - 1;
+    let sw = Stopwatch::start();
+    let mut per_layer: Vec<Vec<f32>> = (0..n_layers)
+        .map(|_| Vec::with_capacity(push_local.len() * h))
+        .collect();
+    for chunk in push_local.chunks(dims.push_batch) {
+        let blocks = if local_only {
+            sampler.sample_embed_local(sub, chunk)
+        } else {
+            sampler.sample_embed(sub, chunk)
+        };
+        let batch = assemble_batch(&blocks, sub, cache, g, adj_embed, false);
+        let outs = engine.embed(state, &batch)?;
+        ensure!(outs.len() == n_layers, "embed returned {} layers", outs.len());
+        for (l, rows) in outs.iter().enumerate() {
+            per_layer[l].extend_from_slice(&rows[..chunk.len() * h]);
+        }
+    }
+    let compute = sw.secs();
+    let rec = server.push(push_globals, &per_layer);
+    Ok((compute, Some(rec)))
+}
+
+/// Pre-training round (paper §3.2.1): embeddings for every push node are
+/// computed on the unexpanded local subgraph and pushed, so round 1 pulls
+/// never cold-start.
+pub fn pretrain_push(
+    client: &mut Client,
+    g: &Graph,
+    engine: &Arc<dyn StepEngine>,
+    server: &EmbeddingServer,
+) -> Result<()> {
+    let (_, _rec) = compute_and_push(
+        &client.sub,
+        &client.cache,
+        &client.state,
+        engine,
+        server,
+        &mut client.sampler,
+        &client.adj_embed,
+        &client.push_local,
+        &client.push_globals,
+        g,
+        true,
+    )?;
+    Ok(())
+}
+
+/// Run one full client round with default staleness (push the ε-1 state,
+/// overlapping the final epoch — the paper's configuration).
+pub fn run_round(
+    client: &mut Client,
+    g: &Graph,
+    strategy: &Strategy,
+    engine: &Arc<dyn StepEngine>,
+    server: &EmbeddingServer,
+    epochs: usize,
+    lr: f32,
+) -> Result<RoundOutcome> {
+    run_round_stale(client, g, strategy, engine, server, epochs, lr, 1)
+}
+
+/// Run one full client round. `overlap_stale = k` pushes the state from
+/// epoch ε-k and overlaps the transfer with the remaining k epochs (the
+/// paper's §1 "different staleness configurations in overlapping
+/// communication"; k=1 is the published configuration). Returns phase
+/// metrics + epoch timings; the session composes virtual round time.
+#[allow(clippy::too_many_arguments)]
+pub fn run_round_stale(
+    client: &mut Client,
+    g: &Graph,
+    strategy: &Strategy,
+    engine: &Arc<dyn StepEngine>,
+    server: &EmbeddingServer,
+    epochs: usize,
+    lr: f32,
+    overlap_stale: usize,
+) -> Result<RoundOutcome> {
+    let dims = client.dims;
+    let stale = overlap_stale.clamp(1, epochs.saturating_sub(1).max(1));
+    let mut out = RoundOutcome {
+        metrics: ClientRoundMetrics {
+            client: client.id,
+            ..Default::default()
+        },
+        overlapped: strategy.overlap_push && epochs >= 2,
+        ..Default::default()
+    };
+    client.resample_dynamic_prune();
+
+    // ---- pull phase ------------------------------------------------------
+    client.cache.invalidate_all();
+    let sharing = strategy.share_embeddings && client.sub.n_remote() > 0;
+    if sharing {
+        let rows: Vec<u32> = if strategy.prefetch.is_some() {
+            client.prefetch_rows.clone()
+        } else {
+            client.active_remote_rows()
+        };
+        if !rows.is_empty() {
+            let globals: Vec<u32> = rows.iter().map(|&r| client.sub.remote[r as usize]).collect();
+            let (per_layer, rec) = server.pull(&globals, false);
+            client.cache.insert(&rows, &per_layer);
+            out.metrics.phases.pull += rec.time;
+            out.metrics.embeddings_pulled += rec.rows;
+            out.metrics.rpcs.push(rec);
+        }
+    }
+
+    // ---- pre-generate target lists so the epoch loop borrows cleanly ----
+    let target_lists: Vec<Vec<Vec<u32>>> = (0..epochs)
+        .map(|_| {
+            (0..client.epoch_batches)
+                .map(|_| client.next_targets(dims.batch))
+                .collect()
+        })
+        .collect();
+
+    // ---- epochs (push of the ε-k state overlaps the last k epochs) ------
+    let mut loss_acc = 0f64;
+    let mut loss_n = 0usize;
+    let mut push_result: Option<(f64, Option<RpcRecord>)> = None;
+    let do_overlap = out.overlapped && sharing && !client.push_local.is_empty();
+    // epoch index at which the push snapshot is taken / thread launched
+    let overlap_at = epochs.saturating_sub(stale);
+
+    // head epochs: run normally
+    for targets in target_lists.iter().take(if do_overlap { overlap_at } else { epochs }) {
+        let Client {
+            sub,
+            sampler,
+            cache,
+            state,
+            adj_train,
+            ..
+        } = client;
+        let mut ctx = EpochCtx {
+            sub,
+            sampler,
+            cache,
+            state,
+            adj_train,
+        };
+        let (el, et) = run_epoch(&mut ctx, g, strategy, engine, server, targets, lr, &mut out)?;
+        loss_acc += el;
+        loss_n += targets.len();
+        out.epoch_times.push(et);
+    }
+
+    // tail epochs: overlapped with the concurrent stale push
+    if do_overlap {
+        // snapshot ε-k state + cache; push concurrently with the remaining
+        // epochs (stale by k epochs — paper §4.2 with k=1).
+        let state_snap = client.state.clone();
+        let cache_snap = client.cache.clone();
+        let mut push_sampler =
+            Sampler::new(dims, 0x9051 ^ client.id as u64, client.state.t as u64);
+        let adj_embed = client.adj_embed.clone();
+        let push_local = client.push_local.clone();
+        let push_globals = client.push_globals.clone();
+        // split-borrow the client so the push thread can share `sub`
+        // while the epoch loop mutates sampler/cache/state
+        let Client {
+            sub,
+            sampler,
+            cache,
+            state,
+            adj_train,
+            ..
+        } = client;
+        let mut ctx = EpochCtx {
+            sub,
+            sampler,
+            cache,
+            state,
+            adj_train,
+        };
+        let sub_ref: &ClientSubgraph = ctx.sub;
+        let (epoch_res, push_res) = std::thread::scope(|s| {
+            let push_handle = s.spawn(move || {
+                compute_and_push(
+                    sub_ref,
+                    &cache_snap,
+                    &state_snap,
+                    engine,
+                    server,
+                    &mut push_sampler,
+                    &adj_embed,
+                    &push_local,
+                    &push_globals,
+                    g,
+                    false,
+                )
+            });
+            let mut results = Vec::new();
+            for targets in target_lists.iter().skip(overlap_at) {
+                results.push((
+                    run_epoch(&mut ctx, g, strategy, engine, server, targets, lr, &mut out),
+                    targets.len(),
+                ));
+            }
+            (results, push_handle.join().expect("push thread"))
+        });
+        for (res, n) in epoch_res {
+            let (el, et) = res?;
+            loss_acc += el;
+            loss_n += n;
+            out.epoch_times.push(et);
+        }
+        push_result = Some(push_res?);
+    }
+
+    // ---- push phase (synchronous when not overlapped) --------------------
+    if sharing && !client.push_local.is_empty() && push_result.is_none() {
+        let mut push_sampler =
+            Sampler::new(dims, 0x9052 ^ client.id as u64, client.state.t as u64);
+        push_result = Some(compute_and_push(
+            &client.sub,
+            &client.cache,
+            &client.state,
+            engine,
+            server,
+            &mut push_sampler,
+            &client.adj_embed,
+            &client.push_local,
+            &client.push_globals,
+            g,
+            false,
+        )?);
+    }
+
+    if let Some((compute, rec)) = push_result {
+        let comm = rec.as_ref().map(|r| r.time).unwrap_or(0.0);
+        out.push_total = compute + comm;
+        if let Some(r) = rec {
+            out.metrics.embeddings_pushed += r.rows;
+            out.metrics.rpcs.push(r);
+        }
+    }
+    // The visible push stack: the part not hidden under the last k
+    // overlapped epochs (paper Fig 7 semantics; k=1 default).
+    let tail_time: f64 = out
+        .epoch_times
+        .iter()
+        .rev()
+        .take(stale)
+        .sum();
+    if out.overlapped {
+        let visible = (out.push_total - tail_time).max(0.0);
+        out.metrics.phases.push = visible;
+        out.metrics.phases.push_hidden = out.push_total - visible;
+    } else {
+        out.metrics.phases.push = out.push_total;
+    }
+    out.metrics.phases.train = out.epoch_times.iter().sum();
+    out.metrics.train_loss = if loss_n > 0 {
+        (loss_acc / loss_n as f64) as f32
+    } else {
+        0.0
+    };
+    Ok(out)
+}
+
+/// Disjoint mutable parts of a client used by the epoch loop (lets the
+/// overlapped push thread share `&sub` while the epoch mutates the rest).
+struct EpochCtx<'a> {
+    sub: &'a ClientSubgraph,
+    sampler: &'a mut Sampler,
+    cache: &'a mut EmbCache,
+    state: &'a mut ModelState,
+    adj_train: &'a [Vec<i32>],
+}
+
+/// One local epoch. Returns (summed batch loss, measured epoch seconds).
+#[allow(clippy::too_many_arguments)]
+fn run_epoch(
+    ctx: &mut EpochCtx<'_>,
+    g: &Graph,
+    strategy: &Strategy,
+    engine: &Arc<dyn StepEngine>,
+    server: &EmbeddingServer,
+    targets: &[Vec<u32>],
+    lr: f32,
+    out: &mut RoundOutcome,
+) -> Result<(f64, f64)> {
+    let sw = Stopwatch::start();
+    let mut loss = 0f64;
+    for batch_targets in targets {
+        if batch_targets.is_empty() {
+            continue;
+        }
+        let blocks = ctx.sampler.sample_batch(ctx.sub, batch_targets);
+        // OPP: pull missing used remotes on demand — at most one batched
+        // RPC per minibatch (paper §4.3).
+        if strategy.prefetch.is_some() {
+            let used = blocks.used_remotes();
+            let missing = ctx.cache.missing_of(&used);
+            if !missing.is_empty() {
+                let globals: Vec<u32> = missing
+                    .iter()
+                    .map(|&r| ctx.sub.remote[r as usize])
+                    .collect();
+                let (per_layer, rec) = server.pull(&globals, true);
+                ctx.cache.insert(&missing, &per_layer);
+                out.metrics.phases.dyn_pull += rec.time;
+                out.metrics.embeddings_pulled += rec.rows;
+                out.metrics.rpcs.push(rec);
+            }
+        } else if strategy.share_embeddings {
+            debug_assert!(
+                ctx.cache.missing_of(&blocks.used_remotes()).is_empty(),
+                "non-prefetch strategy must have pulled everything"
+            );
+        }
+        let batch = assemble_batch(&blocks, ctx.sub, ctx.cache, g, ctx.adj_train, true);
+        let stats = engine.train_step(ctx.state, &batch, lr)?;
+        loss += stats.loss as f64;
+    }
+    Ok((loss, sw.secs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::netsim::NetConfig;
+    use crate::graph::datasets::tiny;
+    use crate::graph::partition::metis_lite;
+    use crate::graph::subgraph::{build_all, Prune};
+    use crate::runtime::manifest::{ModelGeom, ModelKind};
+    use crate::runtime::RefEngine;
+
+    fn engine() -> Arc<dyn StepEngine> {
+        Arc::new(RefEngine::new(ModelGeom {
+            model: ModelKind::Gc,
+            layers: 3,
+            feat: 32,
+            hidden: 8,
+            classes: 4,
+            batch: 4,
+            fanout: 3,
+            push_batch: 4,
+        }))
+    }
+
+    fn setup(prune: &Prune) -> (Graph, Vec<Client>, Arc<dyn StepEngine>, EmbeddingServer) {
+        let g = tiny(61);
+        let part = metis_lite(&g, 4, 2);
+        let subs = build_all(&g, &part, prune, 5);
+        let eng = engine();
+        let server = EmbeddingServer::new(2, 8, NetConfig::default());
+        let clients: Vec<Client> = subs
+            .into_iter()
+            .map(|s| {
+                let mut c = Client::new(s, &eng, 3, 11);
+                c.state = ModelState::init(eng.geom(), 1);
+                let n = c.sub.n_remote();
+                c.set_scores((0..n).map(|i| i as f32).collect(), Some(0.25));
+                c
+            })
+            .collect();
+        (g, clients, eng, server)
+    }
+
+    #[test]
+    fn pretrain_populates_server() {
+        let (g, mut clients, eng, server) = setup(&Prune::None);
+        for c in clients.iter_mut() {
+            pretrain_push(c, &g, &eng, &server).unwrap();
+        }
+        let total_push: usize = clients.iter().map(|c| c.push_globals.len()).sum();
+        assert_eq!(server.stored_nodes(), total_push);
+        assert!(total_push > 0);
+    }
+
+    #[test]
+    fn e_round_pulls_everything_and_pushes() {
+        let (g, mut clients, eng, server) = setup(&Prune::None);
+        for c in clients.iter_mut() {
+            pretrain_push(c, &g, &eng, &server).unwrap();
+        }
+        let strat = Strategy::e();
+        let c = &mut clients[0];
+        let out = run_round(c, &g, &strat, &eng, &server, 2, 0.01).unwrap();
+        assert_eq!(out.metrics.embeddings_pulled, c.sub.n_remote());
+        assert_eq!(out.metrics.embeddings_pushed, c.push_globals.len());
+        assert_eq!(out.epoch_times.len(), 2);
+        assert!(out.metrics.phases.pull > 0.0);
+        assert!(out.push_total > 0.0);
+        assert!(!out.overlapped);
+        assert_eq!(out.metrics.phases.push, out.push_total);
+        assert_eq!(c.cache.present_count(), c.sub.n_remote());
+    }
+
+    #[test]
+    fn d_round_exchanges_nothing() {
+        let (g, mut clients, eng, server) = setup(&Prune::Retention(0));
+        let strat = Strategy::d();
+        let out = run_round(&mut clients[0], &g, &strat, &eng, &server, 2, 0.01).unwrap();
+        assert_eq!(out.metrics.embeddings_pulled, 0);
+        assert_eq!(out.metrics.embeddings_pushed, 0);
+        assert_eq!(out.metrics.phases.pull, 0.0);
+        assert_eq!(out.push_total, 0.0);
+        let (pulls, pushes) = server.rpc_counts();
+        assert_eq!((pulls, pushes), (0, 0));
+    }
+
+    #[test]
+    fn opp_prefetches_then_pulls_on_demand() {
+        let (g, mut clients, eng, server) = setup(&Prune::None);
+        for c in clients.iter_mut() {
+            pretrain_push(c, &g, &eng, &server).unwrap();
+        }
+        let strat = Strategy::opp();
+        let c = &mut clients[0];
+        let prefetch_n = c.prefetch_rows.len();
+        let out = run_round(c, &g, &strat, &eng, &server, 2, 0.01).unwrap();
+        // initial pull fetched exactly the prefetch set
+        let first = out
+            .metrics
+            .rpcs
+            .iter()
+            .find(|r| r.kind == crate::coordinator::metrics::RpcKind::Pull);
+        if prefetch_n > 0 {
+            assert_eq!(first.unwrap().rows, prefetch_n);
+        }
+        // on-demand RPCs <= minibatch count
+        let dyn_calls = out
+            .metrics
+            .rpcs
+            .iter()
+            .filter(|r| r.kind == crate::coordinator::metrics::RpcKind::PullOnDemand)
+            .count();
+        assert!(dyn_calls <= 2 * 3, "dyn_calls={dyn_calls}");
+        // every remote the round used is now cached
+        assert!(c.cache.present_count() >= prefetch_n);
+    }
+
+    #[test]
+    fn overlap_hides_push_inside_last_epoch() {
+        let (g, mut clients, eng, server) = setup(&Prune::None);
+        for c in clients.iter_mut() {
+            pretrain_push(c, &g, &eng, &server).unwrap();
+        }
+        let strat = Strategy::o();
+        let c = &mut clients[1];
+        let out = run_round(c, &g, &strat, &eng, &server, 3, 0.01).unwrap();
+        assert!(out.overlapped);
+        assert!(out.push_total > 0.0);
+        // visible + hidden == total
+        let p = out.metrics.phases;
+        assert!((p.push + p.push_hidden - out.push_total).abs() < 1e-9);
+        // model still updated by the final epoch
+        assert!(c.state.t >= 3.0);
+    }
+
+    #[test]
+    fn stale_push_uses_penultimate_state() {
+        // With overlap, pushed embeddings are computed from the ε-1 state:
+        // verify the server content differs from a post-final-epoch push.
+        let (g, mut clients, eng, _) = setup(&Prune::None);
+        let server_a = EmbeddingServer::new(2, 8, NetConfig::default());
+        let server_b = EmbeddingServer::new(2, 8, NetConfig::default());
+        for c in clients.iter_mut() {
+            pretrain_push(c, &g, &eng, &server_a).unwrap();
+            pretrain_push(c, &g, &eng, &server_b).unwrap();
+        }
+        let c = &mut clients[0];
+        if c.push_globals.is_empty() {
+            return;
+        }
+        let node = c.push_globals[0];
+        let snapshot = c.state.clone();
+        run_round(c, &g, &Strategy::o(), &eng, &server_a, 3, 0.05).unwrap();
+        // replay without overlap from the same initial state
+        c.state = snapshot;
+        c.cache.invalidate_all();
+        run_round(c, &g, &Strategy::e(), &eng, &server_b, 3, 0.05).unwrap();
+        let (a, _) = server_a.pull(&[node], false);
+        let (b, _) = server_b.pull(&[node], false);
+        // same node, different model states -> different embeddings
+        // (identical would mean the overlap pushed post-final state)
+        assert_ne!(a[0], b[0]);
+    }
+}

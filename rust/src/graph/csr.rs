@@ -1,0 +1,187 @@
+//! Directed CSR graph substrate.
+//!
+//! GNN aggregation in this system follows the paper's convention: a vertex
+//! aggregates over its **in-neighbours** (`d_G` in the frequency-score
+//! definition is the shortest-path distance along in-edges), so the CSR
+//! keeps both directions: `out` for push-set discovery and partition
+//! quality, `inc` for sampling and scoring.
+
+/// Compressed sparse row adjacency (one direction).
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub offsets: Vec<u32>,
+    pub targets: Vec<u32>,
+}
+
+impl Csr {
+    pub fn n(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.targets[lo..hi]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Build from (src, dst) pairs. Duplicate edges are preserved; callers
+    /// that need simple graphs deduplicate beforehand.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut counts = vec![0u32; n + 1];
+        for &(s, _) in edges {
+            counts[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let mut targets = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            let pos = cursor[s as usize];
+            targets[pos as usize] = d;
+            cursor[s as usize] += 1;
+        }
+        Self { offsets, targets }
+    }
+
+    /// Reverse every edge (out-CSR -> in-CSR and vice versa).
+    pub fn reversed(&self, n: usize) -> Self {
+        let mut edges = Vec::with_capacity(self.m());
+        for v in 0..n as u32 {
+            for &u in self.neighbors(v) {
+                edges.push((u, v));
+            }
+        }
+        Self::from_edges(n, &edges)
+    }
+}
+
+/// A full labelled graph dataset: topology + features + task split.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub n: usize,
+    /// Out-edges: `out.neighbors(v)` = vertices v points at.
+    pub out: Csr,
+    /// In-edges: `inc.neighbors(v)` = vertices pointing at v (aggregated).
+    pub inc: Csr,
+    pub feat_dim: usize,
+    pub classes: usize,
+    /// Row-major `[n, feat_dim]`.
+    pub features: Vec<f32>,
+    pub labels: Vec<u16>,
+    pub train_nodes: Vec<u32>,
+    pub test_nodes: Vec<u32>,
+}
+
+impl Graph {
+    pub fn feature(&self, v: u32) -> &[f32] {
+        let d = self.feat_dim;
+        &self.features[v as usize * d..(v as usize + 1) * d]
+    }
+
+    pub fn avg_in_degree(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.inc.m() as f64 / self.n as f64
+        }
+    }
+
+    /// Structural sanity check used by tests and the generator.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.out.n() != self.n || self.inc.n() != self.n {
+            return Err("csr size mismatch".into());
+        }
+        if self.out.m() != self.inc.m() {
+            return Err("edge count mismatch between directions".into());
+        }
+        if self.features.len() != self.n * self.feat_dim {
+            return Err("feature matrix size mismatch".into());
+        }
+        if self.labels.len() != self.n {
+            return Err("label vector size mismatch".into());
+        }
+        for &v in self.out.targets.iter().chain(self.inc.targets.iter()) {
+            if v as usize >= self.n {
+                return Err(format!("edge target {v} out of range"));
+            }
+        }
+        for &l in &self.labels {
+            if l as usize >= self.classes {
+                return Err(format!("label {l} out of range"));
+            }
+        }
+        for &v in self.train_nodes.iter().chain(self.test_nodes.iter()) {
+            if v as usize >= self.n {
+                return Err(format!("split vertex {v} out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Csr {
+        // 0->1, 0->2, 1->2, 2->0
+        Csr::from_edges(3, &[(0, 1), (0, 2), (1, 2), (2, 0)])
+    }
+
+    #[test]
+    fn from_edges_builds_correct_adjacency() {
+        let g = tiny();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.neighbors(2), &[0]);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn reversed_swaps_directions() {
+        let g = tiny();
+        let r = g.reversed(3);
+        assert_eq!(r.m(), 4);
+        let mut n2: Vec<u32> = r.neighbors(2).to_vec();
+        n2.sort_unstable();
+        assert_eq!(n2, vec![0, 1]);
+        assert_eq!(r.neighbors(0), &[2]);
+        // double reverse is identity up to per-vertex ordering
+        let rr = r.reversed(3);
+        for v in 0..3u32 {
+            let mut a = g.neighbors(v).to_vec();
+            let mut b = rr.neighbors(v).to_vec();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(0, &[]);
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = Csr::from_edges(5, &[(4, 0)]);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+        assert_eq!(g.neighbors(4), &[0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph substrates: CSR storage, synthetic dataset generation, balanced
+//! partitioning, client subgraph expansion + pruning, remote-aware
+//! neighbourhood sampling, and vertex scoring.
+
+pub mod csr;
+pub mod datasets;
+pub mod generate;
+pub mod partition;
+pub mod sampler;
+pub mod scoring;
+pub mod subgraph;
+
+pub use csr::{Csr, Graph};
+pub use partition::Partition;
+pub use sampler::{BlockDims, Blocks, SampledNode, Sampler};
+pub use subgraph::{ClientSubgraph, NodeRef, Prune};

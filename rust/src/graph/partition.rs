@@ -1,0 +1,297 @@
+//! k-way balanced edge-cut partitioner (METIS stand-in; see DESIGN.md §3).
+//!
+//! Algorithm ("METIS-lite"):
+//! 1. seed k parts with spread-out vertices (greedy max-distance seeding
+//!    over BFS layers),
+//! 2. grow parts greedily: repeatedly assign the highest-gain (most
+//!    internal edges) frontier vertex to the smallest eligible part,
+//!    respecting a balance cap `ceil(n/k) * (1 + slack)`,
+//! 3. one boundary-refinement sweep: move a vertex to the neighbouring
+//!    part with the largest cut-gain if balance allows.
+//!
+//! Also provides a hash partitioner (maximum-cut baseline used in
+//! ablations, mirroring "random partitioning" comparisons).
+
+use super::csr::Graph;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub k: usize,
+    /// part id per vertex
+    pub assign: Vec<u32>,
+}
+
+impl Partition {
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.k];
+        for &p in &self.assign {
+            s[p as usize] += 1;
+        }
+        s
+    }
+
+    /// Fraction of (directed) edges whose endpoints live in different parts.
+    pub fn cut_fraction(&self, g: &Graph) -> f64 {
+        let mut cut = 0usize;
+        for v in 0..g.n as u32 {
+            for &t in g.out.neighbors(v) {
+                if self.assign[v as usize] != self.assign[t as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        cut as f64 / g.out.m().max(1) as f64
+    }
+
+    pub fn imbalance(&self) -> f64 {
+        let sizes = self.sizes();
+        let max = *sizes.iter().max().unwrap_or(&0) as f64;
+        let avg = self.assign.len() as f64 / self.k as f64;
+        if avg == 0.0 {
+            0.0
+        } else {
+            max / avg
+        }
+    }
+}
+
+/// Hash partitioner: uniform random assignment (worst-case edge cut).
+pub fn hash_partition(g: &Graph, k: usize, seed: u64) -> Partition {
+    let mut rng = Rng::new(seed, 0x44A5);
+    let assign = (0..g.n).map(|_| rng.below(k) as u32).collect();
+    Partition { k, assign }
+}
+
+/// Balanced greedy edge-cut partitioner.
+pub fn metis_lite(g: &Graph, k: usize, seed: u64) -> Partition {
+    assert!(k >= 1 && g.n >= k);
+    let n = g.n;
+    let cap = (n + k - 1) / k + (n / k / 20).max(1); // ~5% slack
+    let mut rng = Rng::new(seed, 0x4D45);
+    const UNASSIGNED: u32 = u32::MAX;
+    let mut assign = vec![UNASSIGNED; n];
+    let mut sizes = vec![0usize; k];
+
+    // --- seeding: first seed random, others greedily far (BFS distance)
+    let mut seeds = Vec::with_capacity(k);
+    seeds.push(rng.below(n) as u32);
+    let mut dist = vec![u32::MAX; n];
+    for _ in 1..k {
+        // multi-source BFS from current seeds over undirected adjacency
+        for d in dist.iter_mut() {
+            *d = u32::MAX;
+        }
+        let mut queue = std::collections::VecDeque::new();
+        for &s in &seeds {
+            dist[s as usize] = 0;
+            queue.push_back(s);
+        }
+        let mut far = seeds[0];
+        while let Some(v) = queue.pop_front() {
+            far = v;
+            let dv = dist[v as usize];
+            for &t in g.out.neighbors(v).iter().chain(g.inc.neighbors(v)) {
+                if dist[t as usize] == u32::MAX {
+                    dist[t as usize] = dv + 1;
+                    queue.push_back(t);
+                }
+            }
+        }
+        // prefer an unreached vertex (disconnected component), else farthest
+        let next = (0..n as u32)
+            .find(|&v| dist[v as usize] == u32::MAX && !seeds.contains(&v))
+            .unwrap_or(far);
+        seeds.push(next);
+    }
+    for (p, &s) in seeds.iter().enumerate() {
+        assign[s as usize] = p as u32;
+        sizes[p] += 1;
+    }
+
+    // --- greedy growth: each part keeps a frontier; rotate over parts
+    // (smallest first) claiming the frontier vertex with max internal gain.
+    let mut frontiers: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (p, &s) in seeds.iter().enumerate() {
+        for &t in g.out.neighbors(s).iter().chain(g.inc.neighbors(s)) {
+            frontiers[p].push(t);
+        }
+    }
+    let mut assigned = k;
+    let mut stall = 0usize;
+    while assigned < n {
+        // pick the smallest non-full part
+        let p = (0..k)
+            .filter(|&p| sizes[p] < cap)
+            .min_by_key(|&p| sizes[p])
+            .unwrap_or(0);
+        // best frontier vertex for p by internal-edge gain
+        let mut best: Option<(usize, i64)> = None; // (frontier idx, gain)
+        let flen = frontiers[p].len();
+        let scan = flen.min(64); // bounded scan keeps growth near-linear
+        for probe in 0..scan {
+            let i = flen - 1 - probe;
+            let v = frontiers[p][i];
+            if assign[v as usize] != UNASSIGNED {
+                continue;
+            }
+            let gain = g
+                .out
+                .neighbors(v)
+                .iter()
+                .chain(g.inc.neighbors(v))
+                .filter(|&&t| assign[t as usize] == p as u32)
+                .count() as i64;
+            if best.map(|(_, bg)| gain > bg).unwrap_or(true) {
+                best = Some((i, gain));
+            }
+        }
+        let v = match best {
+            Some((i, _)) => frontiers[p].swap_remove(i),
+            None => {
+                // frontier exhausted/stale: pull a random unassigned vertex
+                stall += 1;
+                let mut v = rng.below(n) as u32;
+                let mut tries = 0;
+                while assign[v as usize] != UNASSIGNED && tries < 64 {
+                    v = rng.below(n) as u32;
+                    tries += 1;
+                }
+                if assign[v as usize] != UNASSIGNED {
+                    match (0..n as u32).find(|&u| assign[u as usize] == UNASSIGNED) {
+                        Some(u) => u,
+                        None => break,
+                    }
+                } else {
+                    v
+                }
+            }
+        };
+        if assign[v as usize] != UNASSIGNED {
+            continue;
+        }
+        assign[v as usize] = p as u32;
+        sizes[p] += 1;
+        assigned += 1;
+        for &t in g.out.neighbors(v).iter().chain(g.inc.neighbors(v)) {
+            if assign[t as usize] == UNASSIGNED {
+                frontiers[p].push(t);
+            }
+        }
+        if stall > n * 4 {
+            break; // safety: should not happen
+        }
+    }
+    // any leftovers (disconnected) -> smallest part
+    for v in 0..n {
+        if assign[v] == UNASSIGNED {
+            let p = (0..k).min_by_key(|&p| sizes[p]).unwrap();
+            assign[v] = p as u32;
+            sizes[p] += 1;
+        }
+    }
+
+    // --- refinement sweep
+    let mut part = Partition { k, assign };
+    refine(g, &mut part, cap);
+    part
+}
+
+/// One boundary refinement sweep: move vertices to the neighbouring part
+/// with maximal cut gain when balance allows.
+fn refine(g: &Graph, part: &mut Partition, cap: usize) {
+    let k = part.k;
+    let mut sizes = part.sizes();
+    let mut counts = vec![0i64; k];
+    for v in 0..g.n as u32 {
+        let cur = part.assign[v as usize] as usize;
+        if sizes[cur] <= 1 {
+            continue;
+        }
+        for c in counts.iter_mut() {
+            *c = 0;
+        }
+        let mut boundary = false;
+        for &t in g.out.neighbors(v).iter().chain(g.inc.neighbors(v)) {
+            let tp = part.assign[t as usize] as usize;
+            counts[tp] += 1;
+            if tp != cur {
+                boundary = true;
+            }
+        }
+        if !boundary {
+            continue;
+        }
+        let (best, best_cnt) = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, &c)| (i, c))
+            .unwrap();
+        if best != cur && best_cnt > counts[cur] && sizes[best] < cap {
+            part.assign[v as usize] = best as u32;
+            sizes[cur] -= 1;
+            sizes[best] += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+
+    #[test]
+    fn metis_lite_balanced_and_better_than_hash() {
+        let g = tiny(1);
+        for k in [2, 4] {
+            let p = metis_lite(&g, k, 7);
+            assert_eq!(p.assign.len(), g.n);
+            assert!(p.imbalance() < 1.25, "imbalance {}", p.imbalance());
+            let h = hash_partition(&g, k, 7);
+            assert!(
+                p.cut_fraction(&g) < h.cut_fraction(&g),
+                "metis_lite {} vs hash {}",
+                p.cut_fraction(&g),
+                h.cut_fraction(&g)
+            );
+        }
+    }
+
+    #[test]
+    fn all_parts_nonempty() {
+        let g = tiny(2);
+        for k in [2, 3, 4, 8] {
+            let p = metis_lite(&g, k, 3);
+            let sizes = p.sizes();
+            assert_eq!(sizes.len(), k);
+            assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
+            assert_eq!(sizes.iter().sum::<usize>(), g.n);
+        }
+    }
+
+    #[test]
+    fn hash_partition_is_roughly_uniform() {
+        let g = tiny(3);
+        let p = hash_partition(&g, 4, 5);
+        for s in p.sizes() {
+            assert!(s > g.n / 8, "size {s}");
+        }
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let g = tiny(4);
+        let p = metis_lite(&g, 1, 1);
+        assert!(p.sizes() == vec![g.n]);
+        assert_eq!(p.cut_fraction(&g), 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = tiny(5);
+        let a = metis_lite(&g, 4, 9);
+        let b = metis_lite(&g, 4, 9);
+        assert_eq!(a.assign, b.assign);
+    }
+}

@@ -1,0 +1,483 @@
+//! Remote-aware neighbourhood sampler producing fixed-shape padded blocks
+//! (the AOT contract described in `python/compile/config.py`).
+//!
+//! Paper §3.2.2 sampling rules, enforced here:
+//! 1. only local vertices at the root level (training targets),
+//! 2. a remote vertex sampled at hop `l <= L-1` does not grow further
+//!    (its child slots are padding),
+//! 3. no remote vertices at the deepest sampled hop (their `h^0` raw
+//!    features are never available).
+//!
+//! Block layout: nested level arrays where `level_{d+1}` is `level_d`
+//! followed by every level-d row's K (padded) sampled children. This makes
+//! the gather adjacency *constant* for a given geometry — child `j` of row
+//! `i` always sits at `s_d + i*K + j` — so the i32 adjacency tensors are
+//! computed once per geometry and shared across every minibatch (a
+//! meaningful hot-path win; see EXPERIMENTS.md §Perf).
+
+use super::csr::Graph;
+use super::subgraph::ClientSubgraph;
+use crate::util::rng::Rng;
+
+/// Static block geometry (mirrors `ModelConfig` in Python / the manifest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockDims {
+    pub layers: usize,
+    pub fanout: usize,
+    pub batch: usize,
+    pub feat: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub push_batch: usize,
+}
+
+impl BlockDims {
+    /// Rows in the level-`d` array for a root width of `width`.
+    pub fn level_size_for(&self, width: usize, d: usize) -> usize {
+        width * (self.fanout + 1).pow(d as u32)
+    }
+
+    pub fn level_size(&self, d: usize) -> usize {
+        self.level_size_for(self.batch, d)
+    }
+
+    pub fn embed_level_size(&self, d: usize) -> usize {
+        self.level_size_for(self.push_batch, d)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampledNode {
+    /// Index into the client's `local` table.
+    Local(u32),
+    /// Index into the client's `remote` (pull node) table.
+    Remote(u32),
+    Pad,
+}
+
+/// One sampled, padded computation graph.
+#[derive(Clone, Debug)]
+pub struct Blocks {
+    pub dims: BlockDims,
+    /// Number of GNN hops sampled (L for train/eval, L-1 for embed).
+    pub depth: usize,
+    /// Root width (batch for train, push_batch for embed).
+    pub width: usize,
+    /// `levels[d]` has `level_size_for(width, d)` entries, `d` in `0..=depth`.
+    pub levels: Vec<Vec<SampledNode>>,
+    /// `msk[d]` is row-major `[s_d, K]` validity of sampled child slots.
+    pub msk: Vec<Vec<f32>>,
+}
+
+/// The constant gather adjacency for a geometry: `adj[d][i*K + j] =
+/// s_d + i*K + j` (child rows follow the parent level's prefix copy).
+pub fn static_adj(dims: &BlockDims, width: usize, depth: usize) -> Vec<Vec<i32>> {
+    let k = dims.fanout;
+    (0..depth)
+        .map(|d| {
+            let s_d = dims.level_size_for(width, d);
+            (0..s_d * k).map(|e| (s_d + e) as i32).collect()
+        })
+        .collect()
+}
+
+pub struct Sampler {
+    pub dims: BlockDims,
+    rng: Rng,
+    local_only: bool,
+}
+
+impl Sampler {
+    pub fn new(dims: BlockDims, seed: u64, stream: u64) -> Self {
+        Self {
+            dims,
+            rng: Rng::new(seed, stream ^ 0x5A4D31),
+            local_only: false,
+        }
+    }
+
+    /// Sample a training/eval batch rooted at `targets` (local indices,
+    /// at most `dims.batch`; short batches are padded).
+    pub fn sample_batch(&mut self, sub: &ClientSubgraph, targets: &[u32]) -> Blocks {
+        self.sample(sub, targets, self.dims.batch, self.dims.layers)
+    }
+
+    /// Sample an embed (push) batch of depth L-1 rooted at push nodes.
+    pub fn sample_embed(&mut self, sub: &ClientSubgraph, push_local: &[u32]) -> Blocks {
+        self.sample(sub, push_local, self.dims.push_batch, self.dims.layers - 1)
+    }
+
+    /// Embed sampling restricted to local vertices only — used by the
+    /// pre-training round, which runs on the *unexpanded* local subgraph
+    /// (paper §3.2.1).
+    pub fn sample_embed_local(&mut self, sub: &ClientSubgraph, push_local: &[u32]) -> Blocks {
+        let saved = self.local_only;
+        self.local_only = true;
+        let b = self.sample(sub, push_local, self.dims.push_batch, self.dims.layers - 1);
+        self.local_only = saved;
+        b
+    }
+
+    fn sample(
+        &mut self,
+        sub: &ClientSubgraph,
+        roots: &[u32],
+        width: usize,
+        depth: usize,
+    ) -> Blocks {
+        assert!(roots.len() <= width, "{} roots > width {}", roots.len(), width);
+        let k = self.dims.fanout;
+        let mut levels: Vec<Vec<SampledNode>> = Vec::with_capacity(depth + 1);
+        let mut msks: Vec<Vec<f32>> = Vec::with_capacity(depth);
+
+        let mut level0: Vec<SampledNode> =
+            roots.iter().map(|&l| SampledNode::Local(l)).collect();
+        level0.resize(width, SampledNode::Pad);
+        levels.push(level0);
+
+        for d in 0..depth {
+            let parent = &levels[d];
+            let s_d = parent.len();
+            let mut children = Vec::with_capacity(s_d * k);
+            let mut msk = vec![0f32; s_d * k];
+            let deepest = d + 1 == depth;
+            for (i, node) in parent.iter().enumerate() {
+                match *node {
+                    SampledNode::Local(l) => {
+                        let loc = &sub.in_local[l as usize];
+                        let rem = &sub.in_remote[l as usize];
+                        let pop = if deepest || self.local_only {
+                            loc.len() // rule 3: no remote at the last hop
+                        } else {
+                            loc.len() + rem.len()
+                        };
+                        let take = pop.min(k);
+                        if take > 0 {
+                            let picks = self.rng.sample_indices(pop, take);
+                            for (j, &pi) in picks.iter().enumerate() {
+                                let child = if pi < loc.len() {
+                                    SampledNode::Local(loc[pi])
+                                } else {
+                                    SampledNode::Remote(rem[pi - loc.len()])
+                                };
+                                children.push(child);
+                                msk[i * k + j] = 1.0;
+                            }
+                        }
+                        for _ in take..k {
+                            children.push(SampledNode::Pad);
+                        }
+                    }
+                    // rule 2: remote subtrees never grow; pads have no kids
+                    SampledNode::Remote(_) | SampledNode::Pad => {
+                        for _ in 0..k {
+                            children.push(SampledNode::Pad);
+                        }
+                    }
+                }
+            }
+            let mut next = parent.clone();
+            next.extend(children);
+            levels.push(next);
+            msks.push(msk);
+        }
+
+        Blocks {
+            dims: self.dims,
+            depth,
+            width,
+            levels,
+            msk: msks,
+        }
+    }
+}
+
+impl Blocks {
+    /// Fill the deepest-level feature tensor `[s_depth, F]` (row-major).
+    /// Remote and pad rows are zeroed.
+    pub fn fill_x(&self, sub: &ClientSubgraph, g: &Graph, out: &mut [f32]) {
+        let f = self.dims.feat;
+        let deepest = &self.levels[self.depth];
+        assert_eq!(out.len(), deepest.len() * f);
+        for (i, node) in deepest.iter().enumerate() {
+            let row = &mut out[i * f..(i + 1) * f];
+            match *node {
+                SampledNode::Local(l) => {
+                    row.copy_from_slice(g.feature(sub.local[l as usize]));
+                }
+                _ => row.fill(0.0),
+            }
+        }
+    }
+
+    /// Remote-row mask for a level: 1.0 where the row is a remote vertex.
+    pub fn fill_rmask(&self, level: usize, out: &mut [f32]) {
+        let lvl = &self.levels[level];
+        assert_eq!(out.len(), lvl.len());
+        for (i, node) in lvl.iter().enumerate() {
+            out[i] = if matches!(node, SampledNode::Remote(_)) {
+                1.0
+            } else {
+                0.0
+            };
+        }
+    }
+
+    /// Iterate `(row, remote_index)` pairs of a level (for cache fills).
+    pub fn remote_rows(&self, level: usize) -> impl Iterator<Item = (usize, u32)> + '_ {
+        self.levels[level]
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| match n {
+                SampledNode::Remote(r) => Some((i, *r)),
+                _ => None,
+            })
+    }
+
+    /// Distinct remote indices appearing anywhere in the sampled blocks,
+    /// with the deepest hop distance they appear at (1-based layer whose
+    /// cached embedding they need is `depth - hop_level`).
+    pub fn used_remotes(&self) -> Vec<u32> {
+        let mut set = std::collections::HashSet::new();
+        for lvl in &self.levels {
+            for n in lvl {
+                if let SampledNode::Remote(r) = n {
+                    set.insert(*r);
+                }
+            }
+        }
+        let mut v: Vec<u32> = set.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Labels + label mask for the root level (training targets).
+    pub fn fill_labels(
+        &self,
+        sub: &ClientSubgraph,
+        g: &Graph,
+        labels: &mut [i32],
+        lmask: &mut [f32],
+    ) {
+        let roots = &self.levels[0];
+        assert_eq!(labels.len(), roots.len());
+        for (i, node) in roots.iter().enumerate() {
+            match *node {
+                SampledNode::Local(l) => {
+                    labels[i] = g.labels[sub.local[l as usize] as usize] as i32;
+                    lmask[i] = 1.0;
+                }
+                _ => {
+                    labels[i] = 0;
+                    lmask[i] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+    use crate::graph::partition::metis_lite;
+    use crate::graph::subgraph::{build_all, Prune};
+
+    fn dims() -> BlockDims {
+        BlockDims {
+            layers: 3,
+            fanout: 5,
+            batch: 8,
+            feat: 32,
+            hidden: 32,
+            classes: 4,
+            push_batch: 6,
+        }
+    }
+
+    fn setup() -> (Graph, Vec<ClientSubgraph>) {
+        let g = tiny(21);
+        let part = metis_lite(&g, 4, 2);
+        let subs = build_all(&g, &part, &Prune::None, 5);
+        (g, subs)
+    }
+
+    use crate::graph::csr::Graph;
+
+    #[test]
+    fn level_sizes_match_contract() {
+        let (_, subs) = setup();
+        let sub = &subs[0];
+        let mut s = Sampler::new(dims(), 1, 0);
+        let targets: Vec<u32> = sub.train_local.iter().copied().take(8).collect();
+        let b = s.sample_batch(sub, &targets);
+        assert_eq!(b.levels.len(), 4);
+        for d in 0..=3 {
+            assert_eq!(b.levels[d].len(), dims().level_size_for(8, d));
+        }
+        for d in 0..3 {
+            assert_eq!(b.msk[d].len(), dims().level_size_for(8, d) * 5);
+        }
+    }
+
+    #[test]
+    fn prefix_property_holds() {
+        let (_, subs) = setup();
+        let sub = &subs[1];
+        let mut s = Sampler::new(dims(), 2, 0);
+        let targets: Vec<u32> = sub.train_local.iter().copied().take(8).collect();
+        let b = s.sample_batch(sub, &targets);
+        for d in 0..b.depth {
+            let parent = &b.levels[d];
+            let child = &b.levels[d + 1];
+            assert_eq!(&child[..parent.len()], &parent[..]);
+        }
+    }
+
+    #[test]
+    fn no_remote_at_deepest_level_and_no_remote_children() {
+        let (_, subs) = setup();
+        for sub in &subs {
+            let mut s = Sampler::new(dims(), 3, sub.client_id as u64);
+            let targets: Vec<u32> = sub.train_local.iter().copied().take(8).collect();
+            if targets.is_empty() {
+                continue;
+            }
+            let b = s.sample_batch(sub, &targets);
+            // rule 3: deepest new rows contain no remote
+            let deepest = &b.levels[b.depth];
+            let prefix = b.levels[b.depth - 1].len();
+            for n in &deepest[prefix..] {
+                assert!(!matches!(n, SampledNode::Remote(_)));
+            }
+            // rule 2: children slots of remote/pad parents are masked out
+            let k = 5;
+            for d in 0..b.depth {
+                for (i, parent) in b.levels[d].iter().enumerate() {
+                    if !matches!(parent, SampledNode::Local(_)) {
+                        for j in 0..k {
+                            assert_eq!(b.msk[d][i * k + j], 0.0);
+                            let child = &b.levels[d + 1][b.levels[d].len() + i * k + j];
+                            assert_eq!(*child, SampledNode::Pad);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_matches_valid_children_and_edges_are_real() {
+        let (_, subs) = setup();
+        let sub = &subs[0];
+        let mut s = Sampler::new(dims(), 4, 0);
+        let targets: Vec<u32> = sub.train_local.iter().copied().take(8).collect();
+        let b = s.sample_batch(sub, &targets);
+        let k = 5;
+        for d in 0..b.depth {
+            for (i, parent) in b.levels[d].iter().enumerate() {
+                if let SampledNode::Local(l) = parent {
+                    let loc = &sub.in_local[*l as usize];
+                    let rem = &sub.in_remote[*l as usize];
+                    for j in 0..k {
+                        let child = &b.levels[d + 1][b.levels[d].len() + i * k + j];
+                        let m = b.msk[d][i * k + j];
+                        match child {
+                            SampledNode::Local(c) => {
+                                assert_eq!(m, 1.0);
+                                assert!(loc.contains(c));
+                            }
+                            SampledNode::Remote(c) => {
+                                assert_eq!(m, 1.0);
+                                assert!(rem.contains(c));
+                            }
+                            SampledNode::Pad => assert_eq!(m, 0.0),
+                        }
+                    }
+                    // no duplicate children (sampling w/o replacement)
+                    let kids: Vec<_> = (0..k)
+                        .map(|j| b.levels[d + 1][b.levels[d].len() + i * k + j])
+                        .filter(|c| !matches!(c, SampledNode::Pad))
+                        .collect();
+                    let uniq: std::collections::HashSet<_> = kids
+                        .iter()
+                        .map(|c| format!("{c:?}"))
+                        .collect();
+                    assert_eq!(uniq.len(), kids.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn static_adj_points_at_child_rows() {
+        let d = dims();
+        let adj = static_adj(&d, 8, 3);
+        assert_eq!(adj.len(), 3);
+        for lvl in 0..3 {
+            let s_d = d.level_size_for(8, lvl);
+            assert_eq!(adj[lvl].len(), s_d * d.fanout);
+            for (e, &idx) in adj[lvl].iter().enumerate() {
+                assert_eq!(idx as usize, s_d + e);
+                assert!((idx as usize) < d.level_size_for(8, lvl + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn fill_helpers_produce_consistent_tensors() {
+        let (g, subs) = setup();
+        let sub = &subs[2];
+        let mut s = Sampler::new(dims(), 5, 0);
+        let targets: Vec<u32> = sub.train_local.iter().copied().take(5).collect();
+        let b = s.sample_batch(sub, &targets);
+        let sL = b.levels[b.depth].len();
+        let mut x = vec![0f32; sL * 32];
+        b.fill_x(sub, &g, &mut x);
+        // local rows match graph features, pads are zero
+        for (i, n) in b.levels[b.depth].iter().enumerate() {
+            match n {
+                SampledNode::Local(l) => {
+                    assert_eq!(&x[i * 32..(i + 1) * 32], g.feature(sub.local[*l as usize]));
+                }
+                _ => assert!(x[i * 32..(i + 1) * 32].iter().all(|&v| v == 0.0)),
+            }
+        }
+        let mut labels = vec![0i32; 8];
+        let mut lmask = vec![0f32; 8];
+        b.fill_labels(sub, &g, &mut labels, &mut lmask);
+        assert_eq!(lmask.iter().filter(|&&m| m == 1.0).count(), 5);
+        for i in 5..8 {
+            assert_eq!(lmask[i], 0.0);
+        }
+        // rmask consistent with used_remotes
+        let mut rm = vec![0f32; b.levels[1].len()];
+        b.fill_rmask(1, &mut rm);
+        let remotes_in_level: usize = rm.iter().map(|&v| v as usize).sum();
+        assert_eq!(
+            remotes_in_level,
+            b.levels[1]
+                .iter()
+                .filter(|n| matches!(n, SampledNode::Remote(_)))
+                .count()
+        );
+    }
+
+    #[test]
+    fn embed_sampling_has_depth_l_minus_1() {
+        let (_, subs) = setup();
+        let sub = &subs[0];
+        let mut s = Sampler::new(dims(), 6, 0);
+        let push: Vec<u32> = sub
+            .push_nodes
+            .iter()
+            .filter_map(|gid| sub.local_index(*gid))
+            .take(6)
+            .collect();
+        let b = s.sample_embed(sub, &push);
+        assert_eq!(b.depth, 2);
+        assert_eq!(b.levels.len(), 3);
+        assert_eq!(b.levels[0].len(), 6);
+        assert_eq!(b.levels[2].len(), dims().embed_level_size(2));
+    }
+}

@@ -1,0 +1,392 @@
+//! Client-side subgraph with halo expansion and pruning.
+//!
+//! Each federated client owns the vertices its partition assigned to it.
+//! During setup it discovers its **pull candidates** (remote in-neighbours
+//! of local vertices, via the embedding server's cross-edge directory) and
+//! expands its local subgraph with the retained subset according to the
+//! configured pruning policy (paper §4.1):
+//!
+//! * `None`      — retain all (EmbC / E)
+//! * `Retention(i)` — uniform random, at most `i` remote in-neighbours per
+//!   local vertex (P_i; P_0 ≡ default federated GNN, P_∞ ≡ E)
+//! * `TopFrac`   — retain only the global top-f% of pull candidates by a
+//!   supplied score (scored graph pruning, OPG / OPG_R / OPG_B / OPG_D)
+//!
+//! **Push nodes** are computed across clients after expansion: client k
+//! pushes exactly the local vertices some other client retained as a pull
+//! node — pruning on the consumer side shrinks the producer's push set,
+//! which is how the paper's Fig 10 embedding counts fall with P_i.
+
+use std::collections::HashMap;
+
+use super::csr::Graph;
+use super::partition::Partition;
+use crate::util::rng::Rng;
+
+/// Reference to a vertex inside a client's expanded subgraph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRef {
+    /// Index into `ClientSubgraph::local`.
+    Local(u32),
+    /// Index into `ClientSubgraph::remote`.
+    Remote(u32),
+}
+
+/// Pruning policy applied during subgraph expansion.
+#[derive(Clone, Debug)]
+pub enum Prune {
+    /// Keep every remote in-neighbour (E / EmbC).
+    None,
+    /// Uniform random retention limit per local vertex (P_i).
+    Retention(usize),
+    /// Keep the global top-`frac` of pull candidates ranked by `scores`
+    /// (higher = better). Scores are keyed by global vertex id.
+    TopFrac { frac: f64, scores: HashMap<u32, f32> },
+}
+
+#[derive(Clone, Debug)]
+pub struct ClientSubgraph {
+    pub client_id: usize,
+    /// Global ids of local vertices (sorted ascending).
+    pub local: Vec<u32>,
+    /// Global ids of retained remote (pull) vertices.
+    pub remote: Vec<u32>,
+    global_to_local: HashMap<u32, u32>,
+    global_to_remote: HashMap<u32, u32>,
+    /// Per local vertex: local in-neighbours (indices into `local`).
+    pub in_local: Vec<Vec<u32>>,
+    /// Per local vertex: retained remote in-neighbours (indices into `remote`).
+    pub in_remote: Vec<Vec<u32>>,
+    /// Local indices of training vertices owned by this client.
+    pub train_local: Vec<u32>,
+    /// Global ids of local vertices some other client pulls (filled by
+    /// `build_all` after every client's retention is known).
+    pub push_nodes: Vec<u32>,
+    /// Pull candidates before pruning (for Fig 2a / Fig 10 stats).
+    pub pull_candidates: usize,
+}
+
+impl ClientSubgraph {
+    pub fn n_local(&self) -> usize {
+        self.local.len()
+    }
+
+    pub fn n_remote(&self) -> usize {
+        self.remote.len()
+    }
+
+    pub fn local_index(&self, global: u32) -> Option<u32> {
+        self.global_to_local.get(&global).copied()
+    }
+
+    pub fn remote_index(&self, global: u32) -> Option<u32> {
+        self.global_to_remote.get(&global).copied()
+    }
+
+    /// Count of in-neighbours (local + retained remote) of a local vertex.
+    pub fn in_degree(&self, lidx: u32) -> usize {
+        self.in_local[lidx as usize].len() + self.in_remote[lidx as usize].len()
+    }
+
+    /// Fraction of local vertices with at least one retained remote
+    /// in-neighbour (the paper's "% remote vertices" Fig 2a numerator is
+    /// the remote side; this is the boundary-local view used in tests).
+    pub fn boundary_fraction(&self) -> f64 {
+        if self.local.is_empty() {
+            return 0.0;
+        }
+        let b = self
+            .in_remote
+            .iter()
+            .filter(|r| !r.is_empty())
+            .count();
+        b as f64 / self.local.len() as f64
+    }
+}
+
+/// Build one client's expanded subgraph (push sets not yet known).
+fn build_one(
+    g: &Graph,
+    part: &Partition,
+    client_id: usize,
+    prune: &Prune,
+    seed: u64,
+) -> ClientSubgraph {
+    let mut rng = Rng::new(seed, 0x5B6 + client_id as u64);
+    let local: Vec<u32> = (0..g.n as u32)
+        .filter(|&v| part.assign[v as usize] == client_id as u32)
+        .collect();
+    let global_to_local: HashMap<u32, u32> = local
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v, i as u32))
+        .collect();
+
+    // Collect remote in-neighbours per local vertex (global ids).
+    let mut remote_per_local: Vec<Vec<u32>> = Vec::with_capacity(local.len());
+    let mut in_local: Vec<Vec<u32>> = Vec::with_capacity(local.len());
+    let mut candidate_set = std::collections::HashSet::new();
+    for &v in &local {
+        let mut loc = Vec::new();
+        let mut rem = Vec::new();
+        for &u in g.inc.neighbors(v) {
+            if part.assign[u as usize] == client_id as u32 {
+                loc.push(global_to_local[&u]);
+            } else {
+                rem.push(u);
+                candidate_set.insert(u);
+            }
+        }
+        in_local.push(loc);
+        remote_per_local.push(rem);
+    }
+    let pull_candidates = candidate_set.len();
+
+    // Apply pruning to the remote edge lists.
+    match prune {
+        Prune::None => {}
+        Prune::Retention(limit) => {
+            for rem in remote_per_local.iter_mut() {
+                if rem.len() > *limit {
+                    let keep = rng.sample_indices(rem.len(), *limit);
+                    let mut kept: Vec<u32> = keep.iter().map(|&i| rem[i]).collect();
+                    kept.sort_unstable();
+                    *rem = kept;
+                }
+            }
+        }
+        Prune::TopFrac { frac, scores } => {
+            // Rank unique candidates by score; retain top-frac set.
+            let mut cand: Vec<u32> = candidate_set.iter().copied().collect();
+            cand.sort_unstable();
+            cand.sort_by(|a, b| {
+                let sa = scores.get(a).copied().unwrap_or(0.0);
+                let sb = scores.get(b).copied().unwrap_or(0.0);
+                sb.partial_cmp(&sa).unwrap().then(a.cmp(b))
+            });
+            let keep_n = ((cand.len() as f64) * frac).ceil() as usize;
+            let keep: std::collections::HashSet<u32> =
+                cand.into_iter().take(keep_n).collect();
+            for rem in remote_per_local.iter_mut() {
+                rem.retain(|v| keep.contains(v));
+            }
+        }
+    }
+
+    // Re-index retained remote vertices.
+    let mut remote: Vec<u32> = remote_per_local
+        .iter()
+        .flat_map(|r| r.iter().copied())
+        .collect::<std::collections::HashSet<u32>>()
+        .into_iter()
+        .collect();
+    remote.sort_unstable();
+    let global_to_remote: HashMap<u32, u32> = remote
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v, i as u32))
+        .collect();
+    let in_remote: Vec<Vec<u32>> = remote_per_local
+        .iter()
+        .map(|rem| rem.iter().map(|v| global_to_remote[v]).collect())
+        .collect();
+
+    let train_local: Vec<u32> = g
+        .train_nodes
+        .iter()
+        .filter_map(|v| global_to_local.get(v).copied())
+        .collect();
+
+    ClientSubgraph {
+        client_id,
+        local,
+        remote,
+        global_to_local,
+        global_to_remote,
+        in_local,
+        in_remote,
+        train_local,
+        push_nodes: Vec::new(),
+        pull_candidates,
+    }
+}
+
+/// Build every client's subgraph and resolve cross-client push sets:
+/// client k's push nodes = union over k' != k of (k''s retained remote set
+/// ∩ k's locals).
+pub fn build_all(
+    g: &Graph,
+    part: &Partition,
+    prune: &Prune,
+    seed: u64,
+) -> Vec<ClientSubgraph> {
+    let prunes = vec![prune.clone(); part.k];
+    build_all_per_client(g, part, &prunes, seed)
+}
+
+/// Like [`build_all`] but with a per-client pruning policy (scored pruning
+/// uses client-specific frequency scores, paper §4.1.2).
+pub fn build_all_per_client(
+    g: &Graph,
+    part: &Partition,
+    prunes: &[Prune],
+    seed: u64,
+) -> Vec<ClientSubgraph> {
+    assert_eq!(prunes.len(), part.k);
+    let mut subs: Vec<ClientSubgraph> = (0..part.k)
+        .map(|c| build_one(g, part, c, &prunes[c], seed))
+        .collect();
+    // owner lookup
+    let mut push_sets: Vec<std::collections::HashSet<u32>> =
+        vec![std::collections::HashSet::new(); part.k];
+    for sub in &subs {
+        for &r in &sub.remote {
+            let owner = part.assign[r as usize] as usize;
+            debug_assert_ne!(owner, sub.client_id);
+            push_sets[owner].insert(r);
+        }
+    }
+    for (c, sub) in subs.iter_mut().enumerate() {
+        let mut p: Vec<u32> = push_sets[c].iter().copied().collect();
+        p.sort_unstable();
+        sub.push_nodes = p;
+    }
+    subs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+    use crate::graph::partition::metis_lite;
+
+    fn setup(prune: &Prune) -> (Graph, Vec<ClientSubgraph>) {
+        let g = tiny(11);
+        let part = metis_lite(&g, 4, 2);
+        let subs = build_all(&g, &part, prune, 5);
+        (g, subs)
+    }
+
+    #[test]
+    fn locals_cover_graph_exactly() {
+        let (g, subs) = setup(&Prune::None);
+        let total: usize = subs.iter().map(|s| s.n_local()).sum();
+        assert_eq!(total, g.n);
+        let mut seen = std::collections::HashSet::new();
+        for s in &subs {
+            for &v in &s.local {
+                assert!(seen.insert(v));
+            }
+        }
+    }
+
+    #[test]
+    fn remote_nodes_are_actually_remote_and_edges_exist() {
+        let (g, subs) = setup(&Prune::None);
+        for s in &subs {
+            let locals: std::collections::HashSet<u32> = s.local.iter().copied().collect();
+            for &r in &s.remote {
+                assert!(!locals.contains(&r));
+            }
+            // every in_remote edge corresponds to a real graph edge
+            for (li, rems) in s.in_remote.iter().enumerate() {
+                let v = s.local[li];
+                let gin: std::collections::HashSet<u32> =
+                    g.inc.neighbors(v).iter().copied().collect();
+                for &ri in rems {
+                    assert!(gin.contains(&s.remote[ri as usize]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retention_limit_enforced() {
+        for limit in [0usize, 1, 2, 4] {
+            let (_, subs) = setup(&Prune::Retention(limit));
+            for s in &subs {
+                for rems in &s.in_remote {
+                    assert!(rems.len() <= limit, "{} > {}", rems.len(), limit);
+                }
+                if limit == 0 {
+                    assert_eq!(s.n_remote(), 0);
+                    assert!(s.push_nodes.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retention_inf_equals_none() {
+        let (_, a) = setup(&Prune::None);
+        let (_, b) = setup(&Prune::Retention(usize::MAX));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.remote, y.remote);
+            assert_eq!(x.push_nodes, y.push_nodes);
+        }
+    }
+
+    #[test]
+    fn top_frac_prunes_to_fraction() {
+        let (_, full) = setup(&Prune::None);
+        // score = global id (deterministic): top 25% keeps highest ids
+        let mut scores = HashMap::new();
+        for s in &full {
+            for &r in &s.remote {
+                scores.insert(r, r as f32);
+            }
+        }
+        let (_, pruned) = setup(&Prune::TopFrac { frac: 0.25, scores });
+        for (f, p) in full.iter().zip(&pruned) {
+            assert!(p.n_remote() <= (f.n_remote() as f64 * 0.25).ceil() as usize + 1);
+            // retained ids must be the top-scoring ones
+            if p.n_remote() > 0 && f.n_remote() > 4 {
+                let min_kept = *p.remote.iter().min().unwrap();
+                let dropped_higher = f
+                    .remote
+                    .iter()
+                    .filter(|&&r| r > min_kept && !p.remote.contains(&r))
+                    .count();
+                assert_eq!(dropped_higher, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn push_sets_mirror_pull_sets() {
+        let (g, subs) = setup(&Prune::Retention(2));
+        // every remote of client c must appear in its owner's push set
+        for s in &subs {
+            for &r in &s.remote {
+                let owner = subs
+                    .iter()
+                    .position(|o| o.local_index(r).is_some())
+                    .expect("owner exists");
+                assert!(subs[owner].push_nodes.contains(&r));
+            }
+        }
+        // every push node must be pulled by someone
+        for s in &subs {
+            for &p in &s.push_nodes {
+                let pulled = subs
+                    .iter()
+                    .any(|o| o.client_id != s.client_id && o.remote.contains(&p));
+                assert!(pulled);
+            }
+        }
+        let _ = g;
+    }
+
+    #[test]
+    fn train_locals_are_train_vertices() {
+        let (g, subs) = setup(&Prune::None);
+        let train: std::collections::HashSet<u32> = g.train_nodes.iter().copied().collect();
+        let total: usize = subs.iter().map(|s| s.train_local.len()).sum();
+        assert_eq!(total, g.train_nodes.len());
+        for s in &subs {
+            for &t in &s.train_local {
+                assert!(train.contains(&s.local[t as usize]));
+            }
+        }
+    }
+}

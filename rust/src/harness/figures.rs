@@ -1,0 +1,526 @@
+//! One generator per paper table/figure (DESIGN.md §6). Each prints the
+//! paper-style rows and writes `reports/<id>.json`. Absolute numbers come
+//! from the scaled testbed; the reproduction target is the *shape* (who
+//! wins, by roughly what factor, where crossovers fall).
+
+use anyhow::Result;
+
+use super::{
+    bench_config, cached_session, fmt_opt_time, fmt_pct, load_dataset, make_engine,
+    reports_dir, session_key, Table,
+};
+use crate::coordinator::metrics::{paper_target_accuracy, RpcKind, SessionMetrics};
+use crate::coordinator::{ScoreKind, Strategy};
+use crate::graph::scoring;
+use crate::graph::subgraph::{build_all, Prune};
+use crate::graph::partition::metis_lite;
+use crate::runtime::ModelKind;
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+
+const ALL_DATASETS: [&str; 4] = ["arxiv-s", "reddit-s", "products-s", "papers-s"];
+
+fn write_report(name: &str, j: &Json) {
+    let path = reports_dir().join(format!("{name}.json"));
+    let _ = std::fs::write(&path, j.to_string_pretty());
+    println!("[report] wrote {}", path.display());
+}
+
+/// Run the given strategies on a dataset (cached).
+pub fn ladder_sessions(
+    dataset: &str,
+    model: ModelKind,
+    fanout: usize,
+    strategies: &[Strategy],
+    clients_override: Option<usize>,
+) -> Result<Vec<SessionMetrics>> {
+    let (p, g) = load_dataset(dataset)?;
+    let clients = clients_override.unwrap_or(p.default_clients);
+    let engine = make_engine(model, fanout)?;
+    let mut out = Vec::with_capacity(strategies.len());
+    for s in strategies {
+        let cfg = bench_config(&p, s.clone(), clients);
+        let key = session_key(dataset, &s.name, model, fanout, clients, cfg.rounds);
+        out.push(cached_session(&key, &g, &cfg, &engine)?);
+    }
+    Ok(out)
+}
+
+fn tta_table(title: &str, sessions: &[SessionMetrics]) -> (Table, f64) {
+    let refs: Vec<&SessionMetrics> = sessions.iter().collect();
+    let target = paper_target_accuracy(&refs);
+    let mut t = Table::new(&["strategy", "peak acc", "TTA(s)", "median round(s)"]);
+    for m in sessions {
+        t.row(vec![
+            m.strategy.clone(),
+            fmt_pct(m.peak_accuracy()),
+            fmt_opt_time(m.time_to_accuracy(target)),
+            format!("{:.3}", m.median_round_time()),
+        ]);
+    }
+    t.print(&format!("{title} (target acc {:.1}%)", target * 100.0));
+    (t, target)
+}
+
+fn sessions_json(sessions: &[SessionMetrics], target: f64) -> Json {
+    Json::Arr(
+        sessions
+            .iter()
+            .map(|m| {
+                let mut o = JsonObj::new();
+                o.set("strategy", m.strategy.as_str())
+                    .set("dataset", m.dataset.as_str())
+                    .set("peak_accuracy", m.peak_accuracy())
+                    .set("tta", m.time_to_accuracy(target).unwrap_or(-1.0))
+                    .set("median_round_time", m.median_round_time())
+                    .set("server_embeddings", m.server_embeddings);
+                let p = m.median_phases();
+                let mut ph = JsonObj::new();
+                ph.set("pull", p.pull)
+                    .set("train", p.train)
+                    .set("dyn_pull", p.dyn_pull)
+                    .set("push", p.push);
+                o.set("median_phases", ph);
+                o.set("smoothed_accuracy", m.smoothed_accuracies());
+                o.set(
+                    "round_times",
+                    m.rounds.iter().map(|r| r.round_time).collect::<Vec<_>>(),
+                );
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — dataset statistics
+// ---------------------------------------------------------------------------
+
+pub fn table1() -> Result<Json> {
+    let mut t = Table::new(&[
+        "graph", "paper", "|V|", "|E|", "feat", "classes", "avg in-deg", "train verts",
+        "paper |V|", "paper |E|", "paper deg",
+    ]);
+    let mut arr = Vec::new();
+    for name in ALL_DATASETS {
+        let (p, g) = load_dataset(name)?;
+        let mut o = JsonObj::new();
+        o.set("name", name)
+            .set("v", g.n)
+            .set("e", g.out.m())
+            .set("avg_in_deg", g.avg_in_degree())
+            .set("train", g.train_nodes.len());
+        arr.push(Json::Obj(o));
+        t.row(vec![
+            name.into(),
+            p.paper_name.into(),
+            format!("{}", g.n),
+            format!("{}", g.out.m()),
+            format!("{}", g.feat_dim),
+            format!("{}", g.classes),
+            format!("{:.1}", g.avg_in_degree()),
+            format!("{}", g.train_nodes.len()),
+            p.paper_v.into(),
+            p.paper_e.into(),
+            format!("{:.1}", p.paper_avg_deg),
+        ]);
+    }
+    t.print("Table 1 — graph datasets (scaled)");
+    let j = Json::Arr(arr);
+    write_report("table1", &j);
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2a — remote-vertex fraction + embeddings maintained
+// ---------------------------------------------------------------------------
+
+pub fn fig2a() -> Result<Json> {
+    let mut t = Table::new(&[
+        "graph", "clients", "pull candidates", "% vertices remote", "emb stored (E)",
+        "emb stored (OPG)", "reduction",
+    ]);
+    let mut arr = Vec::new();
+    for name in ALL_DATASETS {
+        let (p, g) = load_dataset(name)?;
+        let part = metis_lite(&g, p.default_clients, 42);
+        let full = build_all(&g, &part, &Prune::None, 42);
+        let candidates: usize = full.iter().map(|s| s.pull_candidates).sum();
+        let stored_e: usize = full.iter().map(|s| s.n_remote()).sum();
+        // OPG: per-client frequency-scored top-25%
+        let prunes: Vec<Prune> = full
+            .iter()
+            .map(|sub| Prune::TopFrac {
+                frac: 0.25,
+                scores: scoring::frequency_scores_global(sub, 3, 768, 42),
+            })
+            .collect();
+        let pruned = crate::graph::subgraph::build_all_per_client(&g, &part, &prunes, 42);
+        let stored_opg: usize = pruned.iter().map(|s| s.n_remote()).sum();
+        let frac = candidates as f64 / g.n as f64;
+        let mut o = JsonObj::new();
+        o.set("name", name)
+            .set("remote_fraction", frac)
+            .set("stored_e", stored_e)
+            .set("stored_opg", stored_opg);
+        arr.push(Json::Obj(o));
+        t.row(vec![
+            name.into(),
+            format!("{}", p.default_clients),
+            format!("{candidates}"),
+            fmt_pct(frac),
+            format!("{stored_e}"),
+            format!("{stored_opg}"),
+            format!("{:.1}x", stored_e as f64 / stored_opg.max(1) as f64),
+        ]);
+    }
+    t.print("Fig 2a — remote vertices & embeddings maintained");
+    let j = Json::Arr(arr);
+    write_report("fig2a", &j);
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2b — headline TTA (Products)
+// ---------------------------------------------------------------------------
+
+pub fn fig2b() -> Result<Json> {
+    let strategies = vec![Strategy::d(), Strategy::e(), Strategy::opp()];
+    let sessions = ladder_sessions("products-s", ModelKind::Gc, 5, &strategies, None)?;
+    let (_, target) = tta_table("Fig 2b — headline time-to-accuracy, products-s", &sessions);
+    let j = sessions_json(&sessions, target);
+    write_report("fig2b", &j);
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6 — TTA + peak accuracy, all datasets, GraphConv
+// Fig 7 — median round time + phase breakdown (same sessions)
+// Fig 8 — accuracy convergence (same sessions)
+// ---------------------------------------------------------------------------
+
+pub fn fig6(model: ModelKind, datasets: &[&str]) -> Result<Json> {
+    let mut all = JsonObj::new();
+    for name in datasets {
+        let sessions = ladder_sessions(name, model, 5, &Strategy::ladder(), None)?;
+        let (_, target) = tta_table(
+            &format!("Fig 6 — {name} ({})", model.as_str()),
+            &sessions,
+        );
+        all.set(*name, sessions_json(&sessions, target));
+    }
+    let j = Json::Obj(all);
+    write_report(&format!("fig6_{}", model.as_str()), &j);
+    Ok(j)
+}
+
+pub fn fig7(model: ModelKind, datasets: &[&str]) -> Result<Json> {
+    let mut all = JsonObj::new();
+    for name in datasets {
+        let sessions = ladder_sessions(name, model, 5, &Strategy::ladder(), None)?;
+        let mut t = Table::new(&[
+            "strategy", "round(s)", "pull", "train", "dyn pull", "push", "push hidden",
+        ]);
+        for m in &sessions {
+            let p = m.median_phases();
+            t.row(vec![
+                m.strategy.clone(),
+                format!("{:.3}", m.median_round_time()),
+                format!("{:.3}", p.pull),
+                format!("{:.3}", p.train),
+                format!("{:.3}", p.dyn_pull),
+                format!("{:.3}", p.push),
+                format!("{:.3}", p.push_hidden),
+            ]);
+        }
+        t.print(&format!(
+            "Fig 7 — median round breakdown, {name} ({})",
+            model.as_str()
+        ));
+        all.set(*name, sessions_json(&sessions, 0.0));
+    }
+    let j = Json::Obj(all);
+    write_report(&format!("fig7_{}", model.as_str()), &j);
+    Ok(j)
+}
+
+pub fn fig8(model: ModelKind, datasets: &[&str]) -> Result<Json> {
+    let mut all = JsonObj::new();
+    for name in datasets {
+        let sessions = ladder_sessions(name, model, 5, &Strategy::ladder(), None)?;
+        println!("\n== Fig 8 — convergence (5-round moving avg), {name} ==");
+        for m in &sessions {
+            let series: Vec<String> = m
+                .smoothed_accuracies()
+                .iter()
+                .map(|a| format!("{:.2}", a * 100.0))
+                .collect();
+            println!("{:>6}: {}", m.strategy, series.join(" "));
+        }
+        all.set(*name, sessions_json(&sessions, 0.0));
+    }
+    let j = Json::Obj(all);
+    write_report("fig8", &j);
+    Ok(j)
+}
+
+/// Fig 9 — SAGEConv: TTA/accuracy + round breakdowns on 3 graphs.
+pub fn fig9() -> Result<Json> {
+    let datasets = ["reddit-s", "products-s", "arxiv-s"];
+    fig6(ModelKind::Sage, &datasets)?;
+    fig7(ModelKind::Sage, &datasets)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10 — retention-limit sweep
+// ---------------------------------------------------------------------------
+
+pub fn fig10() -> Result<Json> {
+    let mut all = JsonObj::new();
+    for name in ["reddit-s", "products-s", "arxiv-s"] {
+        let mut strategies = vec![Strategy::parse("P0").unwrap()];
+        for i in [2usize, 4, 8] {
+            strategies.push(Strategy::p(i));
+        }
+        strategies.push(Strategy::parse("Pinf").unwrap());
+        let sessions = ladder_sessions(name, ModelKind::Gc, 5, &strategies, None)?;
+        let mut t = Table::new(&[
+            "retention", "peak acc", "round(s)", "pull", "train", "push", "emb stored",
+        ]);
+        for m in &sessions {
+            let p = m.median_phases();
+            t.row(vec![
+                m.strategy.clone(),
+                fmt_pct(m.peak_accuracy()),
+                format!("{:.3}", m.median_round_time()),
+                format!("{:.3}", p.pull),
+                format!("{:.3}", p.train),
+                format!("{:.3}", p.push),
+                format!("{}", m.server_embeddings),
+            ]);
+        }
+        t.print(&format!("Fig 10 — retention sweep (P_i), {name}"));
+        all.set(name, sessions_json(&sessions, 0.0));
+    }
+    let j = Json::Obj(all);
+    write_report("fig10", &j);
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 11 — scoring ablation (Reddit, GC + SAGE)
+// ---------------------------------------------------------------------------
+
+pub fn fig11() -> Result<Json> {
+    let mut all = JsonObj::new();
+    for model in [ModelKind::Gc, ModelKind::Sage] {
+        let strategies = vec![
+            Strategy::e(),
+            Strategy::opg_with(0.25, ScoreKind::Random),
+            Strategy::opg_with(0.05, ScoreKind::Frequency),
+            Strategy::opg_with(0.25, ScoreKind::Frequency),
+            Strategy::opg_with(0.50, ScoreKind::Frequency),
+            Strategy::opg_with(0.75, ScoreKind::Frequency),
+            Strategy::opg_with(0.25, ScoreKind::Bridge),
+            Strategy::opg_with(0.25, ScoreKind::Degree),
+        ];
+        let sessions = ladder_sessions("reddit-s", model, 5, &strategies, None)?;
+        let (_, target) = tta_table(
+            &format!("Fig 11 — scoring ablation, reddit-s ({})", model.as_str()),
+            &sessions,
+        );
+        all.set(model.as_str(), sessions_json(&sessions, target));
+    }
+    let j = Json::Obj(all);
+    write_report("fig11", &j);
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 12 — pull-phase analysis (Products)
+// ---------------------------------------------------------------------------
+
+pub fn fig12() -> Result<Json> {
+    let strategies = vec![
+        Strategy::opp_with(0.0, ScoreKind::Frequency),  // OPP_T0
+        Strategy::opp_with(0.25, ScoreKind::Frequency), // OPP_T25
+        Strategy::opp_with(0.25, ScoreKind::Random),    // OPP_R25
+    ];
+    let sessions = ladder_sessions("products-s", ModelKind::Gc, 5, &strategies, None)?;
+    let mut all = JsonObj::new();
+
+    // 12a/12b: nodes per dynamic-pull RPC and its service time
+    let mut t = Table::new(&[
+        "strategy", "dyn RPCs", "nodes/RPC p25", "median", "p75", "time/RPC median(ms)",
+    ]);
+    for m in &sessions {
+        let recs = m.rpcs(RpcKind::PullOnDemand);
+        let rows: Vec<f64> = recs.iter().map(|r| r.rows as f64).collect();
+        let times: Vec<f64> = recs.iter().map(|r| r.time * 1e3).collect();
+        let rs = stats::summarize(&rows);
+        let ts = stats::summarize(&times);
+        t.row(vec![
+            m.strategy.clone(),
+            format!("{}", recs.len()),
+            format!("{:.0}", rs.p25),
+            format!("{:.0}", rs.median),
+            format!("{:.0}", rs.p75),
+            format!("{:.2}", ts.median),
+        ]);
+        let mut o = JsonObj::new();
+        o.set("nodes_per_rpc", rows).set("rpc_times_ms", times);
+        all.set(format!("dist_{}", m.strategy), o);
+    }
+    t.print("Fig 12a/12b — dynamic pull RPCs, products-s");
+
+    // 12c: nodes/RPC vs service-time fit
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for m in &sessions {
+        for r in m.rpcs(RpcKind::PullOnDemand) {
+            xs.push(r.rows as f64);
+            ys.push(r.time * 1e3);
+        }
+    }
+    if let Some(fit) = stats::linfit(&xs, &ys) {
+        println!(
+            "\nFig 12c — fit: time_ms = {:.3} + {:.5} * nodes (R^2 = {:.3}, n = {})",
+            fit.intercept,
+            fit.slope,
+            fit.r2,
+            xs.len()
+        );
+        let mut o = JsonObj::new();
+        o.set("intercept", fit.intercept)
+            .set("slope", fit.slope)
+            .set("r2", fit.r2)
+            .set("n", xs.len());
+        all.set("fit", o);
+    }
+
+    // 12d: total pull time vs minibatch count (T0 vs T25)
+    let (p, g) = load_dataset("products-s")?;
+    let engine = make_engine(ModelKind::Gc, 5)?;
+    let mut t = Table::new(&["batches/epoch", "T0 total pull(s)", "T25 total pull(s)"]);
+    let mut d = Vec::new();
+    for eb in [4usize, 8, 16, 32] {
+        let mut row = vec![format!("{eb}")];
+        let mut vals = JsonObj::new();
+        vals.set("batches", eb);
+        for s in [
+            Strategy::opp_with(0.0, ScoreKind::Frequency),
+            Strategy::opp_with(0.25, ScoreKind::Frequency),
+        ] {
+            let mut cfg = bench_config(&p, s.clone(), p.default_clients);
+            cfg.epoch_batches = eb;
+            cfg.rounds = 4;
+            let key = format!(
+                "{}_eb{eb}",
+                session_key("products-s", &s.name, ModelKind::Gc, 5, p.default_clients, 4)
+            );
+            let m = cached_session(&key, &g, &cfg, &engine)?;
+            let ph = m.median_phases();
+            let total_pull = ph.pull + ph.dyn_pull;
+            row.push(format!("{total_pull:.3}"));
+            vals.set(format!("pull_{}", s.name), total_pull);
+        }
+        d.push(Json::Obj(vals));
+        t.row(row);
+    }
+    t.print("Fig 12d — total pull time vs minibatches/epoch, products-s");
+    all.set("pull_vs_batches", Json::Arr(d));
+
+    let j = Json::Obj(all);
+    write_report("fig12", &j);
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 13 — client scaling (4/6/8)
+// ---------------------------------------------------------------------------
+
+pub fn fig13() -> Result<Json> {
+    let strategies = vec![
+        Strategy::d(),
+        Strategy::e(),
+        Strategy::o(),
+        Strategy::opp(),
+        Strategy::opg(),
+    ];
+    let mut all = JsonObj::new();
+    for name in ["reddit-s", "products-s"] {
+        let mut per_ds = JsonObj::new();
+        for clients in [4usize, 6, 8] {
+            let sessions =
+                ladder_sessions(name, ModelKind::Gc, 5, &strategies, Some(clients))?;
+            let (_, target) = tta_table(
+                &format!("Fig 13 — {name}, {clients} clients"),
+                &sessions,
+            );
+            per_ds.set(format!("c{clients}"), sessions_json(&sessions, target));
+        }
+        all.set(name, per_ds);
+    }
+    let j = Json::Obj(all);
+    write_report("fig13", &j);
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// Fig 14 — fanout sweep (Reddit)
+// ---------------------------------------------------------------------------
+
+pub fn fig14() -> Result<Json> {
+    let strategies = vec![
+        Strategy::e(),
+        Strategy::op(),
+        Strategy::opp(),
+        Strategy::opg(),
+    ];
+    let mut all = JsonObj::new();
+    for fanout in [5usize, 10, 15] {
+        let sessions = ladder_sessions("reddit-s", ModelKind::Gc, fanout, &strategies, None)?;
+        let (_, target) = tta_table(&format!("Fig 14 — reddit-s, fanout {fanout}"), &sessions);
+        all.set(format!("k{fanout}"), sessions_json(&sessions, target));
+    }
+    let j = Json::Obj(all);
+    write_report("fig14", &j);
+    Ok(j)
+}
+
+/// Run every table/figure (the `optimes fig all` path).
+pub fn run_all() -> Result<()> {
+    table1()?;
+    fig2a()?;
+    fig2b()?;
+    fig6(ModelKind::Gc, &ALL_DATASETS)?;
+    fig7(ModelKind::Gc, &ALL_DATASETS)?;
+    fig8(ModelKind::Gc, &ALL_DATASETS)?;
+    fig9()?;
+    fig10()?;
+    fig11()?;
+    fig12()?;
+    fig13()?;
+    fig14()?;
+    Ok(())
+}
+
+/// Dispatch by figure id ("table1", "2a", "6", "9", ...).
+pub fn run_figure(id: &str) -> Result<()> {
+    match id {
+        "table1" | "t1" => table1().map(|_| ()),
+        "2a" => fig2a().map(|_| ()),
+        "2b" => fig2b().map(|_| ()),
+        "6" => fig6(ModelKind::Gc, &ALL_DATASETS).map(|_| ()),
+        "7" => fig7(ModelKind::Gc, &ALL_DATASETS).map(|_| ()),
+        "8" => fig8(ModelKind::Gc, &ALL_DATASETS).map(|_| ()),
+        "9" => fig9().map(|_| ()),
+        "10" => fig10().map(|_| ()),
+        "11" => fig11().map(|_| ()),
+        "12" => fig12().map(|_| ()),
+        "13" => fig13().map(|_| ()),
+        "14" => fig14().map(|_| ()),
+        "all" => run_all(),
+        other => anyhow::bail!("unknown figure id {other:?} (try: table1, 2a, 2b, 6..14, all)"),
+    }
+}

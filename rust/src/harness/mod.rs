@@ -1,0 +1,262 @@
+//! Bench/figure harness: engine factory, session caching, ASCII tables,
+//! and one generator per paper table/figure (see DESIGN.md §6).
+//!
+//! Environment knobs (all optional):
+//! * `OPTIMES_ENGINE=ref|pjrt` — force the compute engine (default: PJRT
+//!   when `artifacts/manifest.json` exists, RefEngine otherwise).
+//! * `OPTIMES_SCALE=n` — dataset shrink divisor (default 2 for benches).
+//! * `OPTIMES_ROUNDS=n` — override federated rounds per session.
+//! * `OPTIMES_FRESH=1` — ignore the session cache under `reports/`.
+
+pub mod figures;
+pub mod report;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{run_session, SessionConfig, SessionMetrics, Strategy};
+use crate::graph::datasets::{self, DatasetPreset};
+use crate::graph::Graph;
+use crate::runtime::{Manifest, ModelGeom, ModelKind, PjrtEngine, RefEngine, StepEngine};
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+pub fn reports_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/reports"));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+pub fn dataset_scale() -> usize {
+    env_usize("OPTIMES_SCALE").unwrap_or(2).max(1)
+}
+
+pub fn rounds_override() -> Option<usize> {
+    env_usize("OPTIMES_ROUNDS")
+}
+
+/// Default RefEngine geometry for a fanout (mirrors `DEFAULT_CONFIGS`).
+pub fn default_geom(model: ModelKind, fanout: usize) -> ModelGeom {
+    let batch = match fanout {
+        10 => 8,
+        15 => 4,
+        _ => 32,
+    };
+    ModelGeom {
+        model,
+        layers: 3,
+        feat: 32,
+        hidden: 32,
+        classes: 16,
+        batch,
+        fanout,
+        push_batch: 64,
+    }
+}
+
+/// Engine name actually in use ("pjrt" or "ref") for table footers.
+pub fn engine_kind() -> &'static str {
+    match std::env::var("OPTIMES_ENGINE").as_deref() {
+        Ok("ref") => "ref",
+        Ok("pjrt") => "pjrt",
+        _ => {
+            if artifacts_dir().join("manifest.json").exists() {
+                "pjrt"
+            } else {
+                "ref"
+            }
+        }
+    }
+}
+
+/// Build the compute engine for (model, fanout).
+pub fn make_engine(model: ModelKind, fanout: usize) -> Result<Arc<dyn StepEngine>> {
+    match engine_kind() {
+        "pjrt" => {
+            let manifest = Manifest::load(artifacts_dir())
+                .map_err(|e| anyhow!("artifacts missing (run `make artifacts`): {e}"))?;
+            manifest.validate()?;
+            Ok(Arc::new(PjrtEngine::start(&manifest, model, fanout)?))
+        }
+        _ => Ok(Arc::new(RefEngine::new(default_geom(model, fanout)))),
+    }
+}
+
+/// Load a dataset preset at the harness scale.
+pub fn load_dataset(name: &str) -> Result<(DatasetPreset, Graph)> {
+    datasets::load(name, dataset_scale()).ok_or_else(|| anyhow!("unknown dataset {name}"))
+}
+
+/// Default session config for a (preset, strategy) pair at bench scale.
+pub fn bench_config(p: &DatasetPreset, strategy: Strategy, clients: usize) -> SessionConfig {
+    SessionConfig {
+        dataset: p.name.to_string(),
+        clients,
+        strategy,
+        rounds: rounds_override().unwrap_or(16),
+        epochs: 3,
+        lr: 0.01,
+        epoch_batches: p.epoch_batches,
+        eval_batches: 16,
+        seed: 42,
+        parallel_clients: false,
+        ..Default::default()
+    }
+}
+
+/// Run (or reload from `reports/sessions/`) one session.
+pub fn cached_session(
+    key: &str,
+    g: &Graph,
+    cfg: &SessionConfig,
+    engine: &Arc<dyn StepEngine>,
+) -> Result<SessionMetrics> {
+    let dir = reports_dir().join("sessions");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{key}.json"));
+    let fresh = std::env::var("OPTIMES_FRESH").is_ok();
+    if !fresh && path.exists() {
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Some(m) = report::session_from_json(&text) {
+                return Ok(m);
+            }
+        }
+    }
+    let m = run_session(g, cfg, Arc::clone(engine))?;
+    let _ = std::fs::write(&path, report::session_to_json(&m).to_string_pretty());
+    Ok(m)
+}
+
+/// Cache key for a session: dataset/strategy/model/geometry/knobs.
+pub fn session_key(
+    dataset: &str,
+    strategy: &str,
+    model: ModelKind,
+    fanout: usize,
+    clients: usize,
+    rounds: usize,
+) -> String {
+    format!(
+        "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}",
+        model.as_str(),
+        dataset_scale(),
+        engine_kind()
+    )
+}
+
+// ---------------------------------------------------------------------------
+// ASCII tables
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            out.push('|');
+            for (c, w) in cells.iter().zip(widths) {
+                out.push_str(&format!(" {c:<w$} |"));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers, &widths);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        print!("{}", self.render());
+    }
+}
+
+pub fn fmt_f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+pub fn fmt_pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+pub fn fmt_opt_time(t: Option<f64>) -> String {
+    match t {
+        Some(t) => format!("{t:.2}s"),
+        None => "—".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "strategy", "x"]);
+        t.row(vec!["1".into(), "OPP".into(), "2.50s".into()]);
+        t.row(vec!["22".into(), "D".into(), "—".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // compare display width in chars (cells may contain multi-byte
+        // glyphs like the em-dash)
+        let w = lines[0].chars().count();
+        assert!(lines.iter().all(|l| l.chars().count() == w));
+    }
+
+    #[test]
+    fn default_geoms_match_artifact_family() {
+        let g = default_geom(ModelKind::Gc, 5);
+        assert_eq!((g.batch, g.fanout), (32, 5));
+        let g = default_geom(ModelKind::Gc, 10);
+        assert_eq!((g.batch, g.fanout), (8, 10));
+        let g = default_geom(ModelKind::Gc, 15);
+        assert_eq!((g.batch, g.fanout), (4, 15));
+    }
+
+    #[test]
+    fn session_key_distinguishes_configs() {
+        let a = session_key("reddit-s", "E", ModelKind::Gc, 5, 4, 16);
+        let b = session_key("reddit-s", "E", ModelKind::Sage, 5, 4, 16);
+        let c = session_key("reddit-s", "OP", ModelKind::Gc, 5, 4, 16);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,189 @@
+//! SessionMetrics <-> JSON (report persistence + the session cache).
+//!
+//! The serialized form keeps everything the figure generators consume:
+//! round traces (times, phase breakdowns, accuracy), session-level remote
+//! stats, and the flattened RPC records (Fig 12). Per-client traces are
+//! collapsed — the cache stores the aggregate view.
+
+use crate::coordinator::metrics::{
+    ClientRoundMetrics, PhaseTimes, RoundMetrics, RpcKind, RpcRecord, SessionMetrics,
+};
+use crate::util::json::{Json, JsonObj};
+
+fn phases_json(p: &PhaseTimes) -> Json {
+    let mut o = JsonObj::new();
+    o.set("pull", p.pull)
+        .set("train", p.train)
+        .set("dyn_pull", p.dyn_pull)
+        .set("push", p.push)
+        .set("push_hidden", p.push_hidden);
+    Json::Obj(o)
+}
+
+fn phases_from(j: &Json) -> PhaseTimes {
+    PhaseTimes {
+        pull: j.at("pull").as_f64().unwrap_or(0.0),
+        train: j.at("train").as_f64().unwrap_or(0.0),
+        dyn_pull: j.at("dyn_pull").as_f64().unwrap_or(0.0),
+        push: j.at("push").as_f64().unwrap_or(0.0),
+        push_hidden: j.at("push_hidden").as_f64().unwrap_or(0.0),
+    }
+}
+
+fn kind_tag(k: RpcKind) -> f64 {
+    match k {
+        RpcKind::Pull => 0.0,
+        RpcKind::PullOnDemand => 1.0,
+        RpcKind::Push => 2.0,
+    }
+}
+
+fn kind_from(v: f64) -> RpcKind {
+    match v as usize {
+        0 => RpcKind::Pull,
+        1 => RpcKind::PullOnDemand,
+        _ => RpcKind::Push,
+    }
+}
+
+pub fn session_to_json(m: &SessionMetrics) -> Json {
+    let mut o = JsonObj::new();
+    o.set("strategy", m.strategy.as_str());
+    o.set("dataset", m.dataset.as_str());
+    o.set("n_clients", m.n_clients);
+    o.set("server_embeddings", m.server_embeddings);
+    o.set("pull_candidates", m.pull_candidates);
+    o.set("retained_remotes", m.retained_remotes);
+    let rounds: Vec<Json> = m
+        .rounds
+        .iter()
+        .map(|r| {
+            let mut ro = JsonObj::new();
+            ro.set("round", r.round)
+                .set("round_time", r.round_time)
+                .set("accuracy", r.accuracy)
+                .set("val_loss", r.val_loss)
+                .set("mean_phases", phases_json(&r.mean_phases))
+                .set("critical", phases_json(&r.critical));
+            Json::Obj(ro)
+        })
+        .collect();
+    o.set("rounds", Json::Arr(rounds));
+    // flattened rpc triples [kind, rows, time]
+    let mut rpcs: Vec<Json> = Vec::new();
+    for r in &m.rounds {
+        for c in &r.clients {
+            for rec in &c.rpcs {
+                rpcs.push(Json::Arr(vec![
+                    Json::Num(kind_tag(rec.kind)),
+                    Json::Num(rec.rows as f64),
+                    Json::Num(rec.time),
+                    Json::Num(rec.bytes as f64),
+                ]));
+            }
+        }
+    }
+    o.set("rpcs", Json::Arr(rpcs));
+    Json::Obj(o)
+}
+
+pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
+    let j = Json::parse(text).ok()?;
+    let mut m = SessionMetrics {
+        strategy: j.at("strategy").as_str()?.to_string(),
+        dataset: j.at("dataset").as_str()?.to_string(),
+        n_clients: j.at("n_clients").as_usize()?,
+        server_embeddings: j.at("server_embeddings").as_usize().unwrap_or(0),
+        pull_candidates: j.at("pull_candidates").as_usize().unwrap_or(0),
+        retained_remotes: j.at("retained_remotes").as_usize().unwrap_or(0),
+        ..Default::default()
+    };
+    for rj in j.at("rounds").as_arr()? {
+        m.rounds.push(RoundMetrics {
+            round: rj.at("round").as_usize().unwrap_or(0),
+            round_time: rj.at("round_time").as_f64().unwrap_or(0.0),
+            accuracy: rj.at("accuracy").as_f64().unwrap_or(0.0),
+            val_loss: rj.at("val_loss").as_f64().unwrap_or(0.0),
+            mean_phases: phases_from(rj.at("mean_phases")),
+            critical: phases_from(rj.at("critical")),
+            clients: Vec::new(),
+        });
+    }
+    // re-attach the flattened RPC records to a synthetic client on the
+    // first round so `SessionMetrics::rpcs()` keeps working
+    let rpcs: Vec<RpcRecord> = j
+        .at("rpcs")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|t| {
+            Some(RpcRecord {
+                kind: kind_from(t.idx(0).as_f64()?),
+                rows: t.idx(1).as_usize()?,
+                time: t.idx(2).as_f64()?,
+                bytes: t.idx(3).as_usize().unwrap_or(0),
+            })
+        })
+        .collect();
+    if !rpcs.is_empty() {
+        if m.rounds.is_empty() {
+            m.rounds.push(RoundMetrics::default());
+        }
+        m.rounds[0].clients.push(ClientRoundMetrics {
+            client: 0,
+            rpcs,
+            ..Default::default()
+        });
+    }
+    Some(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_json_roundtrip() {
+        let mut m = SessionMetrics {
+            strategy: "OPP".into(),
+            dataset: "reddit-s".into(),
+            n_clients: 4,
+            server_embeddings: 123,
+            pull_candidates: 500,
+            retained_remotes: 400,
+            ..Default::default()
+        };
+        for i in 0..3 {
+            let mut r = RoundMetrics {
+                round: i,
+                round_time: 1.5 + i as f64,
+                accuracy: 0.5 + 0.1 * i as f64,
+                val_loss: 2.0 - 0.1 * i as f64,
+                ..Default::default()
+            };
+            r.mean_phases.pull = 0.2;
+            r.mean_phases.train = 1.0;
+            r.clients.push(ClientRoundMetrics {
+                client: 0,
+                rpcs: vec![RpcRecord {
+                    kind: RpcKind::PullOnDemand,
+                    rows: 40 + i,
+                    bytes: 100,
+                    time: 0.01,
+                }],
+                ..Default::default()
+            });
+            m.rounds.push(r);
+        }
+        let text = session_to_json(&m).to_string_pretty();
+        let back = session_from_json(&text).unwrap();
+        assert_eq!(back.strategy, "OPP");
+        assert_eq!(back.rounds.len(), 3);
+        assert!((back.rounds[2].accuracy - 0.7).abs() < 1e-9);
+        assert!((back.median_round_time() - m.median_round_time()).abs() < 1e-9);
+        assert_eq!(back.rpcs(RpcKind::PullOnDemand).len(), 3);
+        assert_eq!(back.server_embeddings, 123);
+        // derived metrics survive the roundtrip
+        assert!((back.peak_accuracy() - m.peak_accuracy()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,24 @@
+//! # OptimES
+//!
+//! A Rust + JAX + Pallas reproduction of *OptimES: Optimizing Federated
+//! Learning Using Remote Embeddings for Graph Neural Networks* (Naman &
+//! Simmhan, 2025).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L3 (this crate)** — the federated coordinator: aggregation server,
+//!   embedding server, clients, pruning/overlap/prefetch strategies.
+//! * **L2 (python/compile/model.py)** — GraphConv/SAGEConv forward +
+//!   backward + Adam, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels)** — fused Pallas aggregation kernels
+//!   inside the same artifacts.
+//!
+//! The crate is organized bottom-up: [`util`] (hand-rolled substrates),
+//! [`graph`] (data + sampling), [`runtime`] (PJRT execution engines), and
+//! [`coordinator`] (the paper's system contribution).
+
+pub mod graph;
+pub mod util;
+
+pub mod coordinator;
+pub mod harness;
+pub mod runtime;

@@ -1,0 +1,239 @@
+//! `optimes` — the L3 coordinator CLI (leader entrypoint).
+//!
+//! ```text
+//! optimes info                         # datasets, artifacts, engine
+//! optimes run   --dataset reddit-s --strategy OPP [--rounds 16]
+//!               [--model gc|sage] [--clients N] [--fanout 5|10|15]
+//!               [--epochs 3] [--lr 0.01] [--engine ref|pjrt]
+//!               [--scale N] [--seed S] [--report out.json]
+//! optimes sweep --dataset reddit-s --strategies D,E,OP,OPP,OPG
+//! optimes fig   <table1|2a|2b|6|7|8|9|10|11|12|13|14|all>
+//! optimes smoke                        # PJRT round-trip health check
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use optimes::coordinator::metrics::paper_target_accuracy;
+use optimes::coordinator::{SessionConfig, SessionMetrics, Strategy};
+use optimes::graph::datasets;
+use optimes::harness::{self, figures};
+use optimes::runtime::{Manifest, ModelKind};
+use optimes::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match dispatch(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    // --engine / --scale / --rounds flags map onto the harness env knobs
+    if let Some(e) = args.get("engine") {
+        std::env::set_var("OPTIMES_ENGINE", e);
+    }
+    if let Some(s) = args.get("scale") {
+        std::env::set_var("OPTIMES_SCALE", s);
+    }
+    if let Some(r) = args.get("rounds") {
+        std::env::set_var("OPTIMES_ROUNDS", r);
+    }
+    match cmd {
+        "info" => info(),
+        "run" => run(args),
+        "sweep" => sweep(args),
+        "fig" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            figures::run_figure(id)
+        }
+        "smoke" => smoke(),
+        "emb-server" => emb_server(args),
+        "help" | _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+optimes — federated GNN training with remote embeddings (OptimES reproduction)
+
+commands:
+  info                       show datasets, artifacts, engine
+  run    --dataset D --strategy S [--model gc|sage] [--clients N]
+         [--rounds R] [--epochs E] [--lr LR] [--fanout K]
+         [--engine ref|pjrt] [--scale N] [--seed S] [--report FILE]
+  sweep  --dataset D --strategies D,E,O,P,OP,OPP,OPG
+  fig    table1|2a|2b|6|7|8|9|10|11|12|13|14|all
+  smoke  PJRT artifact health check
+  emb-server --listen ADDR [--layers 2] [--hidden 32]
+         run the embedding server as a standalone TCP daemon
+";
+
+fn info() -> Result<()> {
+    println!("engine: {}", harness::engine_kind());
+    println!("dataset scale: 1/{}", harness::dataset_scale());
+    match Manifest::load(harness::artifacts_dir()) {
+        Ok(m) => {
+            println!("artifacts: {} entrypoints", m.entrypoints.len());
+            for e in &m.entrypoints {
+                println!(
+                    "  {} (B={}, K={}, {} inputs)",
+                    e.name,
+                    e.geom.batch,
+                    e.geom.fanout,
+                    e.inputs.len()
+                );
+            }
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    println!("datasets:");
+    for p in datasets::presets() {
+        println!(
+            "  {:11} ~{} paper={} clients={} batches/epoch={}",
+            p.name, p.gen.n, p.paper_name, p.default_clients, p.epoch_batches
+        );
+    }
+    Ok(())
+}
+
+fn parse_model(args: &Args) -> Result<ModelKind> {
+    match args.str_or("model", "gc") {
+        "gc" => Ok(ModelKind::Gc),
+        "sage" => Ok(ModelKind::Sage),
+        other => bail!("unknown model {other:?}"),
+    }
+}
+
+fn session_summary(m: &SessionMetrics) {
+    println!(
+        "\n[{} / {}] peak accuracy {:.2}%  median round {:.3}s  total {:.1}s",
+        m.dataset,
+        m.strategy,
+        m.peak_accuracy() * 100.0,
+        m.median_round_time(),
+        m.total_time()
+    );
+    let p = m.median_phases();
+    println!(
+        "  phases: pull {:.3}s | train {:.3}s | dyn-pull {:.3}s | push {:.3}s (hidden {:.3}s)",
+        p.pull, p.train, p.dyn_pull, p.push, p.push_hidden
+    );
+    println!(
+        "  remotes: {} candidates -> {} retained; {} embeddings at server",
+        m.pull_candidates, m.retained_remotes, m.server_embeddings
+    );
+    let accs: Vec<String> = m
+        .smoothed_accuracies()
+        .iter()
+        .map(|a| format!("{:.1}", a * 100.0))
+        .collect();
+    println!("  smoothed accuracy: {}", accs.join(" "));
+}
+
+fn run(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "reddit-s").to_string();
+    let strategy = Strategy::parse(args.str_or("strategy", "OPP"))
+        .ok_or_else(|| anyhow::anyhow!("bad --strategy"))?;
+    let model = parse_model(args)?;
+    let fanout = args.usize_or("fanout", 5);
+    let (p, g) = harness::load_dataset(&dataset)?;
+    let clients = args.usize_or("clients", p.default_clients);
+    let engine = harness::make_engine(model, fanout)?;
+    let cfg = SessionConfig {
+        dataset: dataset.clone(),
+        clients,
+        strategy,
+        rounds: args.usize_or("rounds", 16),
+        epochs: args.usize_or("epochs", 3),
+        lr: args.f64_or("lr", 0.01) as f32,
+        epoch_batches: args.usize_or("epoch-batches", p.epoch_batches),
+        eval_batches: args.usize_or("eval-batches", 16),
+        seed: args.u64_or("seed", 42),
+        parallel_clients: !args.flag("sequential"),
+        ..Default::default()
+    };
+    println!(
+        "running {dataset} / {} on {} engine, {} clients, {} rounds ...",
+        cfg.strategy.name,
+        harness::engine_kind(),
+        clients,
+        cfg.rounds
+    );
+    let m = optimes::coordinator::run_session(&g, &cfg, Arc::clone(&engine))?;
+    session_summary(&m);
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, optimes::harness::report::session_to_json(&m).to_string_pretty())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "reddit-s").to_string();
+    let names = args
+        .list("strategies")
+        .unwrap_or_else(|| vec!["D", "E", "O", "P", "OP", "OPP", "OPG"].iter().map(|s| s.to_string()).collect());
+    let strategies: Vec<Strategy> = names
+        .iter()
+        .map(|n| Strategy::parse(n).ok_or_else(|| anyhow::anyhow!("bad strategy {n:?}")))
+        .collect::<Result<_>>()?;
+    let model = parse_model(args)?;
+    let sessions = figures::ladder_sessions(&dataset, model, args.usize_or("fanout", 5), &strategies, args.get("clients").map(|c| c.parse().unwrap()))?;
+    let refs: Vec<&SessionMetrics> = sessions.iter().collect();
+    let target = paper_target_accuracy(&refs);
+    for m in &sessions {
+        println!(
+            "{:8} peak={:.2}% TTA={} round={:.3}s",
+            m.strategy,
+            m.peak_accuracy() * 100.0,
+            harness::fmt_opt_time(m.time_to_accuracy(target)),
+            m.median_round_time()
+        );
+    }
+    Ok(())
+}
+
+fn smoke() -> Result<()> {
+    let manifest = Manifest::load(harness::artifacts_dir())?;
+    manifest.validate()?;
+    let v = optimes::runtime::pjrt::run_smoke(&manifest)?;
+    println!("smoke artifact: {v:?} (expect [5, 5, 9, 9])");
+    anyhow::ensure!(v == vec![5.0, 5.0, 9.0, 9.0], "smoke mismatch");
+    println!("OK");
+    Ok(())
+}
+
+fn emb_server(args: &Args) -> Result<()> {
+    use optimes::coordinator::net_transport::EmbServerDaemon;
+    use optimes::coordinator::{EmbeddingServer, NetConfig};
+    let listen = args.str_or("listen", "127.0.0.1:7070").to_string();
+    let layers = args.usize_or("layers", 2);
+    let hidden = args.usize_or("hidden", 32);
+    let server = Arc::new(EmbeddingServer::new(layers, hidden, NetConfig::default()));
+    let daemon = EmbServerDaemon::start(Arc::clone(&server), listen.as_str())?;
+    println!(
+        "embedding server listening on {} ({} layer DBs, hidden {})",
+        daemon.addr, layers, hidden
+    );
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        let (nodes, rows) = (server.stored_nodes(), server.stored_rows());
+        let (pulls, pushes) = server.rpc_counts();
+        println!("stored {nodes} nodes / {rows} rows; rpcs: {pulls} pulls {pushes} pushes");
+    }
+}

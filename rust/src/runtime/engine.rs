@@ -1,0 +1,178 @@
+//! `StepEngine`: the compute interface between the L3 coordinator and the
+//! AOT-compiled model. Two implementations:
+//!
+//! * [`crate::runtime::pjrt::PjrtEngine`] — loads `artifacts/*.hlo.txt`
+//!   (jax-lowered GraphConv/SAGE with the Pallas kernels inlined) and runs
+//!   them on the PJRT CPU client. The production path.
+//! * [`crate::runtime::refengine::RefEngine`] — a pure-Rust analytic
+//!   forward/backward/Adam oracle used in tests (no artifacts required)
+//!   and to cross-check PJRT numerics.
+
+use anyhow::Result;
+
+use super::manifest::ModelGeom;
+use crate::util::rng::Rng;
+
+/// Model parameters + Adam optimizer state, flat canonical order.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// 1-based Adam step counter (as f32 for the HLO input).
+    pub t: f32,
+}
+
+impl ModelState {
+    /// Glorot-uniform init matching `python/compile/model.py::init_params`
+    /// in distribution (not bitwise — jax PRNG differs; cross-checks use
+    /// explicitly shared weights).
+    pub fn init(geom: &ModelGeom, seed: u64) -> Self {
+        let mut rng = Rng::new(seed, 0x1817);
+        let params = geom
+            .param_shapes()
+            .iter()
+            .map(|shape| {
+                if shape.len() == 2 {
+                    let (fi, fo) = (shape[0], shape[1]);
+                    let limit = (6.0 / (fi + fo) as f64).sqrt();
+                    (0..fi * fo)
+                        .map(|_| ((rng.f64() * 2.0 - 1.0) * limit) as f32)
+                        .collect()
+                } else {
+                    vec![0f32; shape[0]]
+                }
+            })
+            .collect::<Vec<_>>();
+        let zeros: Vec<Vec<f32>> = geom
+            .param_shapes()
+            .iter()
+            .map(|s| vec![0f32; s.iter().product()])
+            .collect();
+        Self {
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            t: 0.0,
+        }
+    }
+
+    pub fn zeros(geom: &ModelGeom) -> Self {
+        let zeros: Vec<Vec<f32>> = geom
+            .param_shapes()
+            .iter()
+            .map(|s| vec![0f32; s.iter().product()])
+            .collect();
+        Self {
+            params: zeros.clone(),
+            m: zeros.clone(),
+            v: zeros,
+            t: 0.0,
+        }
+    }
+
+    /// Total scalar parameter count.
+    pub fn numel(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+}
+
+/// A fully-assembled padded minibatch in the AOT tensor layout. `depth` is
+/// L for train/eval, L-1 for embed; `width` is the root row count.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub depth: usize,
+    pub width: usize,
+    /// `[s_depth, F]` features (deepest level).
+    pub x: Vec<f32>,
+    /// `adj[d]` is `[s_d, K]` i32 into level d+1.
+    pub adj: Vec<Vec<i32>>,
+    /// `msk[d]` is `[s_d, K]`.
+    pub msk: Vec<Vec<f32>>,
+    /// `rmask[l-1]` is `[s_{depth-l}]` for hidden layer l.
+    pub rmask: Vec<Vec<f32>>,
+    /// `cache[l-1]` is `[s_{depth-l}, H]` cached remote h^l.
+    pub cache: Vec<Vec<f32>>,
+    /// `[width]`; empty for embed batches.
+    pub labels: Vec<i32>,
+    pub lmask: Vec<f32>,
+}
+
+/// Scalar results of a train/eval step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    pub correct: f32,
+    pub total: f32,
+}
+
+impl StepStats {
+    pub fn accuracy(&self) -> f64 {
+        if self.total > 0.0 {
+            self.correct as f64 / self.total as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The compute interface. All methods take `&self`; engines are shared
+/// across client threads (`Send + Sync`) — PJRT executions are internally
+/// synchronized, the RefEngine is stateless.
+pub trait StepEngine: Send + Sync {
+    fn geom(&self) -> &ModelGeom;
+
+    /// One minibatch: forward + backward + Adam. Mutates `state` in place
+    /// and returns the pre-update loss/accuracy scalars.
+    fn train_step(&self, state: &mut ModelState, batch: &Batch, lr: f32) -> Result<StepStats>;
+
+    /// Forward-only evaluation on a labelled batch.
+    fn evaluate(&self, state: &ModelState, batch: &Batch) -> Result<StepStats>;
+
+    /// Compute `h^1..h^{L-1}` for a push batch (depth L-1). Returns one
+    /// `[push_batch, H]` row-major tensor per hidden layer.
+    fn embed(&self, state: &ModelState, batch: &Batch) -> Result<Vec<Vec<f32>>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelKind;
+
+    fn geom() -> ModelGeom {
+        ModelGeom {
+            model: ModelKind::Gc,
+            layers: 3,
+            feat: 8,
+            hidden: 8,
+            classes: 4,
+            batch: 4,
+            fanout: 2,
+            push_batch: 4,
+        }
+    }
+
+    #[test]
+    fn model_state_shapes() {
+        let g = geom();
+        let s = ModelState::init(&g, 1);
+        assert_eq!(s.params.len(), 6);
+        assert_eq!(s.params[0].len(), 64);
+        assert_eq!(s.params[5].len(), 4);
+        assert_eq!(s.numel(), 64 + 8 + 64 + 8 + 32 + 4);
+        // weights nonzero, biases zero
+        assert!(s.params[0].iter().any(|&x| x != 0.0));
+        assert!(s.params[1].iter().all(|&x| x == 0.0));
+        assert!(s.m.iter().flatten().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let g = geom();
+        let a = ModelState::init(&g, 5);
+        let b = ModelState::init(&g, 5);
+        assert_eq!(a.params, b.params);
+        let c = ModelState::init(&g, 6);
+        assert_ne!(a.params, c.params);
+    }
+}

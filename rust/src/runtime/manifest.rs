@@ -1,0 +1,360 @@
+//! `artifacts/manifest.json` model: the AOT contract written by
+//! `python/compile/aot.py` and validated here at startup.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::BlockDims;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j
+                .at("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("spec missing name"))?
+                .to_string(),
+            dtype: Dtype::parse(j.at("dtype").as_str().unwrap_or(""))?,
+            shape: j
+                .at("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Train,
+    Eval,
+    Embed,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "train" => Ok(Kind::Train),
+            "eval" => Ok(Kind::Eval),
+            "embed" => Ok(Kind::Embed),
+            other => bail!("unknown entrypoint kind {other:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Gc,
+    Sage,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gc" => Ok(ModelKind::Gc),
+            "sage" => Ok(ModelKind::Sage),
+            other => bail!("unknown model {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Gc => "gc",
+            ModelKind::Sage => "sage",
+        }
+    }
+
+    /// Weight matrices per layer (SAGE has self + neigh).
+    pub fn mats_per_layer(&self) -> usize {
+        match self {
+            ModelKind::Gc => 1,
+            ModelKind::Sage => 2,
+        }
+    }
+}
+
+/// One AOT entrypoint (an HLO file plus its flat I/O contract).
+#[derive(Clone, Debug)]
+pub struct Entrypoint {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: Kind,
+    pub model: ModelKind,
+    pub geom: ModelGeom,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Static model geometry; mirrors `ModelConfig` in `python/compile/config.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelGeom {
+    pub model: ModelKind,
+    pub layers: usize,
+    pub feat: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub fanout: usize,
+    pub push_batch: usize,
+}
+
+impl ModelGeom {
+    pub fn dims(&self) -> BlockDims {
+        BlockDims {
+            layers: self.layers,
+            fanout: self.fanout,
+            batch: self.batch,
+            feat: self.feat,
+            hidden: self.hidden,
+            classes: self.classes,
+            push_batch: self.push_batch,
+        }
+    }
+
+    /// Canonical flat parameter shapes (must match Python's param_specs).
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes = Vec::new();
+        let mut d_in = self.feat;
+        for l in 0..self.layers {
+            let d_out = if l == self.layers - 1 {
+                self.classes
+            } else {
+                self.hidden
+            };
+            for _ in 0..self.model.mats_per_layer() {
+                shapes.push(vec![d_in, d_out]);
+            }
+            shapes.push(vec![d_out]);
+            d_in = d_out;
+        }
+        shapes
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_shapes().len()
+    }
+
+    pub fn level_size(&self, d: usize) -> usize {
+        self.batch * (self.fanout + 1).pow(d as u32)
+    }
+
+    pub fn embed_level_size(&self, d: usize) -> usize {
+        self.push_batch * (self.fanout + 1).pow(d as u32)
+    }
+}
+
+/// Parsed manifest: all entrypoints plus the smoke artifact.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entrypoints: Vec<Entrypoint>,
+    pub smoke_file: Option<PathBuf>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if j.at("version").as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut entrypoints = Vec::new();
+        let mut by_name = HashMap::new();
+        for ep in j
+            .at("entrypoints")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing entrypoints"))?
+        {
+            let cfg = ep.at("config");
+            let model = ModelKind::parse(ep.at("model").as_str().unwrap_or(""))?;
+            let geom = ModelGeom {
+                model,
+                layers: cfg.at("layers").as_usize().context("layers")?,
+                feat: cfg.at("feat").as_usize().context("feat")?,
+                hidden: cfg.at("hidden").as_usize().context("hidden")?,
+                classes: cfg.at("classes").as_usize().context("classes")?,
+                batch: cfg.at("batch").as_usize().context("batch")?,
+                fanout: cfg.at("fanout").as_usize().context("fanout")?,
+                push_batch: cfg.at("push_batch").as_usize().context("push_batch")?,
+            };
+            let name = ep
+                .at("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("entrypoint missing name"))?
+                .to_string();
+            let e = Entrypoint {
+                file: dir.join(ep.at("file").as_str().unwrap_or("")),
+                kind: Kind::parse(ep.at("kind").as_str().unwrap_or(""))?,
+                model,
+                geom,
+                inputs: ep
+                    .at("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+                outputs: ep
+                    .at("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()?,
+                name: name.clone(),
+            };
+            by_name.insert(name, entrypoints.len());
+            entrypoints.push(e);
+        }
+        let smoke_file = j
+            .at("smoke")
+            .at("file")
+            .as_str()
+            .map(|f| dir.join(f));
+        Ok(Self {
+            dir,
+            entrypoints,
+            smoke_file,
+            by_name,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Entrypoint> {
+        self.by_name.get(name).map(|&i| &self.entrypoints[i])
+    }
+
+    /// Find the entrypoint for a (model, kind, fanout) triple.
+    pub fn find(&self, model: ModelKind, kind: Kind, fanout: usize) -> Option<&Entrypoint> {
+        self.entrypoints
+            .iter()
+            .find(|e| e.model == model && e.kind == kind && e.geom.fanout == fanout)
+    }
+
+    /// Sanity-check every entrypoint's declared I/O against the geometry
+    /// (catches Python/Rust contract drift at startup, not mid-round).
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.entrypoints {
+            let g = &e.geom;
+            let expect_inputs = match e.kind {
+                Kind::Train => 3 * g.n_params() + 2 + 1 + 2 * g.layers + 2 * (g.layers - 1) + 2,
+                Kind::Eval => g.n_params() + 1 + 2 * g.layers + 2 * (g.layers - 1) + 2,
+                Kind::Embed => {
+                    let depth = g.layers - 1;
+                    g.n_params() + 1 + 2 * depth + 2 * (depth - 1)
+                }
+            };
+            if e.inputs.len() != expect_inputs {
+                bail!(
+                    "{}: expected {} inputs, manifest has {}",
+                    e.name,
+                    expect_inputs,
+                    e.inputs.len()
+                );
+            }
+            // params prefix must match canonical shapes
+            for (spec, shape) in e.inputs.iter().zip(g.param_shapes()) {
+                if spec.shape != shape {
+                    bail!("{}: param {} shape {:?} != {:?}", e.name, spec.name, spec.shape, shape);
+                }
+            }
+            if !e.file.exists() {
+                bail!("{}: missing HLO file {}", e.name, e.file.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_and_validates_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        m.validate().unwrap();
+        assert!(m.entrypoints.len() >= 12);
+        let e = m.find(ModelKind::Gc, Kind::Train, 5).unwrap();
+        assert_eq!(e.geom.layers, 3);
+        assert_eq!(e.geom.batch, 32);
+        // x input is [s_L, F]
+        let x = e.inputs.iter().find(|s| s.name == "x").unwrap();
+        assert_eq!(x.shape, vec![32 * 6 * 6 * 6, 32]);
+        assert!(m.get(&e.name).is_some());
+        assert!(m.smoke_file.is_some());
+    }
+
+    #[test]
+    fn param_shapes_gc_vs_sage() {
+        let mut g = ModelGeom {
+            model: ModelKind::Gc,
+            layers: 3,
+            feat: 32,
+            hidden: 32,
+            classes: 16,
+            batch: 32,
+            fanout: 5,
+            push_batch: 64,
+        };
+        assert_eq!(g.n_params(), 6);
+        assert_eq!(g.param_shapes()[0], vec![32, 32]);
+        assert_eq!(g.param_shapes()[4], vec![32, 16]);
+        g.model = ModelKind::Sage;
+        assert_eq!(g.n_params(), 9);
+        assert_eq!(g.param_shapes()[1], vec![32, 32]);
+        assert_eq!(g.param_shapes()[8], vec![16]);
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime bridge: manifest-driven loading and execution of the AOT
+//! artifacts (PJRT), plus a pure-Rust reference engine for artifact-free
+//! tests and numerics cross-checks.
+
+pub mod engine;
+pub mod manifest;
+pub mod pjrt;
+pub mod refengine;
+
+pub use engine::{Batch, ModelState, StepEngine, StepStats};
+pub use manifest::{Kind, Manifest, ModelGeom, ModelKind};
+pub use pjrt::PjrtEngine;
+pub use refengine::RefEngine;

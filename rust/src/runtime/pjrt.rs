@@ -1,0 +1,472 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and runs them
+//! on the CPU PJRT client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the
+//! client + compiled executables live on a dedicated **engine host
+//! thread**; coordinator threads talk to it through a channel-backed
+//! [`PjrtEngine`] handle that implements [`StepEngine`] and is `Send +
+//! Sync`. Requests are served FIFO — which also models the paper's
+//! observed contention between concurrent push-embedding computation and
+//! the final training epoch on a shared accelerator (§5.4).
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::engine::{Batch, ModelState, StepEngine, StepStats};
+use super::manifest::{Entrypoint, Kind, Manifest, ModelGeom, ModelKind, TensorSpec};
+
+enum Request {
+    Train {
+        state: ModelState,
+        batch: Batch,
+        lr: f32,
+        reply: mpsc::Sender<Result<(ModelState, StepStats)>>,
+    },
+    Eval {
+        state: ModelState,
+        batch: Batch,
+        reply: mpsc::Sender<Result<StepStats>>,
+    },
+    Embed {
+        state: ModelState,
+        batch: Batch,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Shutdown,
+}
+
+/// `Send + Sync` handle to the engine host thread.
+pub struct PjrtEngine {
+    geom: ModelGeom,
+    tx: mpsc::Sender<Request>,
+    _host: HostGuard,
+}
+
+struct HostGuard {
+    handle: Option<thread::JoinHandle<()>>,
+    tx: mpsc::Sender<Request>,
+}
+
+impl Drop for HostGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PjrtEngine {
+    /// Compile the (train, eval, embed) entrypoints for `(model, fanout)`
+    /// from `manifest` on a fresh host thread.
+    pub fn start(manifest: &Manifest, model: ModelKind, fanout: usize) -> Result<Self> {
+        let train = manifest
+            .find(model, Kind::Train, fanout)
+            .ok_or_else(|| anyhow!("no train entrypoint for {model:?} k={fanout}"))?
+            .clone();
+        let eval = manifest
+            .find(model, Kind::Eval, fanout)
+            .ok_or_else(|| anyhow!("no eval entrypoint"))?
+            .clone();
+        let embed = manifest
+            .find(model, Kind::Embed, fanout)
+            .ok_or_else(|| anyhow!("no embed entrypoint"))?
+            .clone();
+        let geom = train.geom;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = thread::Builder::new()
+            .name("pjrt-host".into())
+            .spawn(move || host_main(train, eval, embed, rx, ready_tx))
+            .context("spawn pjrt host")?;
+        ready_rx
+            .recv()
+            .context("pjrt host died during startup")??;
+        Ok(Self {
+            geom,
+            tx: tx.clone(),
+            _host: HostGuard {
+                handle: Some(handle),
+                tx,
+            },
+        })
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow!("pjrt host thread is gone"))
+    }
+}
+
+impl StepEngine for PjrtEngine {
+    fn geom(&self) -> &ModelGeom {
+        &self.geom
+    }
+
+    fn train_step(&self, state: &mut ModelState, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let (reply, rx) = mpsc::channel();
+        let moved = std::mem::replace(state, ModelState::zeros(&self.geom));
+        self.send(Request::Train {
+            state: moved,
+            batch: batch.clone(),
+            lr,
+            reply,
+        })?;
+        let (new_state, stats) = rx.recv().map_err(|_| anyhow!("pjrt host dropped reply"))??;
+        *state = new_state;
+        Ok(stats)
+    }
+
+    fn evaluate(&self, state: &ModelState, batch: &Batch) -> Result<StepStats> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Eval {
+            state: state.clone(),
+            batch: batch.clone(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("pjrt host dropped reply"))?
+    }
+
+    fn embed(&self, state: &ModelState, batch: &Batch) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Embed {
+            state: state.clone(),
+            batch: batch.clone(),
+            reply,
+        })?;
+        rx.recv().map_err(|_| anyhow!("pjrt host dropped reply"))?
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host thread
+// ---------------------------------------------------------------------------
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    ep: Entrypoint,
+    client: xla::PjRtClient,
+}
+
+fn compile(client: &xla::PjRtClient, ep: &Entrypoint) -> Result<Compiled> {
+    let proto = xla::HloModuleProto::from_text_file(&ep.file)
+        .map_err(|e| anyhow!("loading {}: {e:?}", ep.file.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e:?}", ep.name))?;
+    Ok(Compiled {
+        exe,
+        ep: ep.clone(),
+        client: client.clone(),
+    })
+}
+
+fn host_main(
+    train: Entrypoint,
+    eval: Entrypoint,
+    embed: Entrypoint,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(Compiled, Compiled, Compiled)> {
+        // On low-core hosts the Eigen intra-op pool costs more than it
+        // buys (dispatch + spin overhead): -22%/-35% on train/eval step
+        // latency with it disabled on a 1-core box (EXPERIMENTS.md §Perf).
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cores <= 2 && !std::env::var("XLA_FLAGS").map(|f| f.contains("multi_thread_eigen")).unwrap_or(false)
+        {
+            let prev = std::env::var("XLA_FLAGS").unwrap_or_default();
+            std::env::set_var(
+                "XLA_FLAGS",
+                format!("--xla_cpu_multi_thread_eigen=false {prev}"),
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok((
+            compile(&client, &train)?,
+            compile(&client, &eval)?,
+            compile(&client, &embed)?,
+        ))
+    })();
+    let (train_c, eval_c, embed_c) = match setup {
+        Ok(t) => {
+            let _ = ready.send(Ok(()));
+            t
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Train {
+                state,
+                batch,
+                lr,
+                reply,
+            } => {
+                let _ = reply.send(run_train(&train_c, state, &batch, lr));
+            }
+            Request::Eval {
+                state,
+                batch,
+                reply,
+            } => {
+                let _ = reply.send(run_eval(&eval_c, &state, &batch));
+            }
+            Request::Embed {
+                state,
+                batch,
+                reply,
+            } => {
+                let _ = reply.send(run_embed(&embed_c, &state, &batch));
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Marshaling
+// ---------------------------------------------------------------------------
+
+/// Single-copy host->device transfer. We marshal straight to
+/// `PjRtBuffer`s and run via `execute_b`: the crate's literal-based
+/// `execute` leaks every input device buffer it creates
+/// (`buffer.release()` without a matching delete in `xla_rs.cc`), ~1.1 MB
+/// per training step (§Perf — found via RSS bisection; `execute_b`
+/// borrows caller-owned buffers which free on Drop).
+fn buf_f32(client: &xla::PjRtClient, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, shape, None)
+        .map_err(|e| anyhow!("buffer f32 {shape:?}: {e:?}"))
+}
+
+fn buf_i32(client: &xla::PjRtClient, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, shape, None)
+        .map_err(|e| anyhow!("buffer i32 {shape:?}: {e:?}"))
+}
+
+fn check_len(spec: &TensorSpec, len: usize) -> Result<()> {
+    if spec.numel() != len {
+        bail!(
+            "input {}: expected {} elements ({:?}), got {len}",
+            spec.name,
+            spec.numel(),
+            spec.shape
+        );
+    }
+    Ok(())
+}
+
+/// Push params (+optionally m, v) in canonical order.
+fn push_params(
+    client: &xla::PjRtClient,
+    lits: &mut Vec<xla::PjRtBuffer>,
+    specs: &[TensorSpec],
+    state: &ModelState,
+    with_opt: bool,
+) -> Result<usize> {
+    let np = state.params.len();
+    let mut idx = 0;
+    for p in &state.params {
+        check_len(&specs[idx], p.len())?;
+        lits.push(buf_f32(client, p, &specs[idx].shape)?);
+        idx += 1;
+    }
+    if with_opt {
+        for m in &state.m {
+            check_len(&specs[idx], m.len())?;
+            lits.push(buf_f32(client, m, &specs[idx].shape)?);
+            idx += 1;
+        }
+        for v in &state.v {
+            check_len(&specs[idx], v.len())?;
+            lits.push(buf_f32(client, v, &specs[idx].shape)?);
+            idx += 1;
+        }
+        debug_assert_eq!(idx, 3 * np);
+    }
+    Ok(idx)
+}
+
+/// Push the block tensors (x, adj*, msk*, rmask*, cache*) in manifest order.
+fn push_blocks(
+    client: &xla::PjRtClient,
+    lits: &mut Vec<xla::PjRtBuffer>,
+    specs: &[TensorSpec],
+    mut idx: usize,
+    batch: &Batch,
+) -> Result<usize> {
+    check_len(&specs[idx], batch.x.len())?;
+    lits.push(buf_f32(client, &batch.x, &specs[idx].shape)?);
+    idx += 1;
+    for a in &batch.adj {
+        check_len(&specs[idx], a.len())?;
+        lits.push(buf_i32(client, a, &specs[idx].shape)?);
+        idx += 1;
+    }
+    for m in &batch.msk {
+        check_len(&specs[idx], m.len())?;
+        lits.push(buf_f32(client, m, &specs[idx].shape)?);
+        idx += 1;
+    }
+    for r in &batch.rmask {
+        check_len(&specs[idx], r.len())?;
+        lits.push(buf_f32(client, r, &specs[idx].shape)?);
+        idx += 1;
+    }
+    for c in &batch.cache {
+        check_len(&specs[idx], c.len())?;
+        lits.push(buf_f32(client, c, &specs[idx].shape)?);
+        idx += 1;
+    }
+    Ok(idx)
+}
+
+fn execute(c: &Compiled, lits: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+    if lits.len() != c.ep.inputs.len() {
+        bail!(
+            "{}: marshaled {} inputs, entrypoint takes {}",
+            c.ep.name,
+            lits.len(),
+            c.ep.inputs.len()
+        );
+    }
+    let bufs = c
+        .exe
+        .execute_b::<xla::PjRtBuffer>(lits)
+        .map_err(|e| anyhow!("{} execute: {e:?}", c.ep.name))?;
+    let out = bufs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    // lowered with return_tuple=True
+    out.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+}
+
+fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+    l.to_vec::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))
+        .map(|v| v[0])
+}
+
+fn run_train(
+    c: &Compiled,
+    mut state: ModelState,
+    batch: &Batch,
+    lr: f32,
+) -> Result<(ModelState, StepStats)> {
+    let specs = &c.ep.inputs;
+    let np = state.params.len();
+    let mut lits = Vec::with_capacity(specs.len());
+    let mut idx = push_params(&c.client, &mut lits, specs, &state, true)?;
+    state.t += 1.0;
+    lits.push(buf_f32(&c.client, &[state.t], &[])?);
+    idx += 1;
+    lits.push(buf_f32(&c.client, &[lr], &[])?);
+    idx += 1;
+    idx = push_blocks(&c.client, &mut lits, specs, idx, batch)?;
+    check_len(&specs[idx], batch.labels.len())?;
+    lits.push(buf_i32(&c.client, &batch.labels, &specs[idx].shape)?);
+    idx += 1;
+    check_len(&specs[idx], batch.lmask.len())?;
+    lits.push(buf_f32(&c.client, &batch.lmask, &specs[idx].shape)?);
+    let outs = execute(c, &lits)?;
+    if outs.len() != 3 * np + 3 {
+        bail!("train: expected {} outputs, got {}", 3 * np + 3, outs.len());
+    }
+    for (i, o) in outs[..np].iter().enumerate() {
+        state.params[i] = o.to_vec::<f32>().map_err(|e| anyhow!("out p{i}: {e:?}"))?;
+    }
+    for (i, o) in outs[np..2 * np].iter().enumerate() {
+        state.m[i] = o.to_vec::<f32>().map_err(|e| anyhow!("out m{i}: {e:?}"))?;
+    }
+    for (i, o) in outs[2 * np..3 * np].iter().enumerate() {
+        state.v[i] = o.to_vec::<f32>().map_err(|e| anyhow!("out v{i}: {e:?}"))?;
+    }
+    let stats = StepStats {
+        loss: scalar_f32(&outs[3 * np])?,
+        correct: scalar_f32(&outs[3 * np + 1])?,
+        total: scalar_f32(&outs[3 * np + 2])?,
+    };
+    Ok((state, stats))
+}
+
+fn run_eval(c: &Compiled, state: &ModelState, batch: &Batch) -> Result<StepStats> {
+    let specs = &c.ep.inputs;
+    let mut lits = Vec::with_capacity(specs.len());
+    let mut idx = push_params(&c.client, &mut lits, specs, state, false)?;
+    idx = push_blocks(&c.client, &mut lits, specs, idx, batch)?;
+    check_len(&specs[idx], batch.labels.len())?;
+    lits.push(buf_i32(&c.client, &batch.labels, &specs[idx].shape)?);
+    idx += 1;
+    check_len(&specs[idx], batch.lmask.len())?;
+    lits.push(buf_f32(&c.client, &batch.lmask, &specs[idx].shape)?);
+    let outs = execute(c, &lits)?;
+    Ok(StepStats {
+        loss: scalar_f32(&outs[0])?,
+        correct: scalar_f32(&outs[1])?,
+        total: scalar_f32(&outs[2])?,
+    })
+}
+
+fn run_embed(c: &Compiled, state: &ModelState, batch: &Batch) -> Result<Vec<Vec<f32>>> {
+    let specs = &c.ep.inputs;
+    let mut lits = Vec::with_capacity(specs.len());
+    let idx = push_params(&c.client, &mut lits, specs, state, false)?;
+    push_blocks(&c.client, &mut lits, specs, idx, batch)?;
+    let outs = execute(c, &lits)?;
+    outs.iter()
+        .enumerate()
+        .map(|(i, o)| o.to_vec::<f32>().map_err(|e| anyhow!("embed out {i}: {e:?}")))
+        .collect()
+}
+
+/// Run the tiny smoke artifact (fn(x,y)=x@y+2): startup health check.
+pub fn run_smoke(manifest: &Manifest) -> Result<Vec<f32>> {
+    let file = manifest
+        .smoke_file
+        .as_ref()
+        .ok_or_else(|| anyhow!("manifest has no smoke artifact"))?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(file).map_err(|e| anyhow!("{e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| anyhow!("{e:?}"))?;
+    let x = buf_f32(&client, &[1.0, 2.0, 3.0, 4.0], &[2, 2])?;
+    let y = buf_f32(&client, &[1.0, 1.0, 1.0, 1.0], &[2, 2])?;
+    let out = exe
+        .execute_b::<xla::PjRtBuffer>(&[x, y])
+        .map_err(|e| anyhow!("{e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("{e:?}"))?;
+    let t = out.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+    t.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn smoke_artifact_runs() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let v = run_smoke(&m).unwrap();
+        assert_eq!(v, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+}

@@ -1,0 +1,579 @@
+//! Pure-Rust reference engine: analytic GraphConv/SAGEConv forward,
+//! backward, and Adam over the padded block layout.
+//!
+//! This duplicates the L2 JAX semantics exactly (same op order as
+//! `python/compile/kernels/ref.py` + `model.py`) so that:
+//! * every coordinator test can run without building artifacts, and
+//! * integration tests can cross-check PJRT numerics bit-for-bit-ish
+//!   (<= 1e-4 abs) against an independent implementation.
+
+use anyhow::{ensure, Result};
+
+use super::engine::{Batch, ModelState, StepEngine, StepStats};
+use super::manifest::{ModelGeom, ModelKind};
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+pub struct RefEngine {
+    geom: ModelGeom,
+}
+
+impl RefEngine {
+    pub fn new(geom: ModelGeom) -> Self {
+        Self { geom }
+    }
+}
+
+/// `out[r,:] += a[r,:] @ w` for row-major `a [n,di]`, `w [di,do]`.
+fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
+    for r in 0..n {
+        let ar = &a[r * di..(r + 1) * di];
+        let or = &mut out[r * dout..(r + 1) * dout];
+        for (i, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let wr = &w[i * dout..(i + 1) * dout];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += av * wv;
+            }
+        }
+    }
+}
+
+/// `gw += a^T g` for `a [n,di]`, `g [n,do]`.
+fn matmul_at_b(a: &[f32], g: &[f32], gw: &mut [f32], n: usize, di: usize, dout: usize) {
+    for r in 0..n {
+        let ar = &a[r * di..(r + 1) * di];
+        let gr = &g[r * dout..(r + 1) * dout];
+        for (i, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let row = &mut gw[i * dout..(i + 1) * dout];
+            for (o, &gv) in row.iter_mut().zip(gr) {
+                *o += av * gv;
+            }
+        }
+    }
+}
+
+/// `out[r,:] += g[r,:] @ w^T` for `g [n,do]`, `w [di,do]`.
+fn matmul_b_wt(g: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
+    for r in 0..n {
+        let gr = &g[r * dout..(r + 1) * dout];
+        let or = &mut out[r * di..(r + 1) * di];
+        for i in 0..di {
+            let wr = &w[i * dout..(i + 1) * dout];
+            let mut acc = 0f32;
+            for (gv, wv) in gr.iter().zip(wr) {
+                acc += gv * wv;
+            }
+            or[i] += acc;
+        }
+    }
+}
+
+/// Residuals captured per layer during forward (for backward).
+struct LayerRes {
+    /// masked-mean over children `[s_out, d_in]`
+    mean: Vec<f32>,
+    /// clamped valid-child count `[s_out]`
+    cnt: Vec<f32>,
+    /// relu input positivity `[s_out, d_out]` (empty when no relu)
+    zpos: Vec<bool>,
+    s_out: usize,
+    d_in: usize,
+    d_out: usize,
+}
+
+struct Forward {
+    /// `h[0]` = x over the deepest level; `h[l]` = layer-l output
+    /// (post-substitution) over its level.
+    h: Vec<Vec<f32>>,
+    res: Vec<LayerRes>,
+}
+
+impl RefEngine {
+    fn layer_dims(&self, l: usize) -> (usize, usize) {
+        let g = &self.geom;
+        let d_in = if l == 1 { g.feat } else { g.hidden };
+        let d_out = if l == g.layers { g.classes } else { g.hidden };
+        (d_in, d_out)
+    }
+
+    /// Flat parameter index of layer l's weight mats + bias.
+    fn pidx(&self, l: usize) -> usize {
+        (l - 1) * (self.geom.model.mats_per_layer() + 1)
+    }
+
+    fn forward(&self, state: &ModelState, batch: &Batch) -> Result<Forward> {
+        let g = &self.geom;
+        let k = g.fanout;
+        let depth = batch.depth;
+        ensure!(depth <= g.layers && depth >= 1, "bad depth {depth}");
+        let mut h: Vec<Vec<f32>> = vec![batch.x.clone()];
+        let mut res = Vec::with_capacity(depth);
+        for l in 1..=depth {
+            let lvl = depth - l;
+            let (d_in, d_out) = self.layer_dims(l);
+            let s_out = batch.adj[lvl].len() / k;
+            let h_prev = h.last().unwrap();
+            ensure!(
+                h_prev.len() >= s_out * d_in,
+                "layer {l}: prev level too small"
+            );
+            // masked mean over sampled children
+            let mut mean = vec![0f32; s_out * d_in];
+            let mut cnt = vec![0f32; s_out];
+            for i in 0..s_out {
+                let mut c = 0f32;
+                let row = &mut mean[i * d_in..(i + 1) * d_in];
+                for j in 0..k {
+                    let m = batch.msk[lvl][i * k + j];
+                    if m == 0.0 {
+                        continue;
+                    }
+                    c += m;
+                    let child = batch.adj[lvl][i * k + j] as usize;
+                    let cr = &h_prev[child * d_in..(child + 1) * d_in];
+                    for (o, &v) in row.iter_mut().zip(cr) {
+                        *o += m * v;
+                    }
+                }
+                let cc = c.max(1.0);
+                cnt[i] = cc;
+                for o in row.iter_mut() {
+                    *o /= cc;
+                }
+            }
+            // transform
+            let mut z = vec![0f32; s_out * d_out];
+            let p = self.pidx(l);
+            match g.model {
+                ModelKind::Gc => {
+                    // (self + mean) @ W
+                    let mut agg = mean.clone();
+                    for i in 0..s_out * d_in {
+                        agg[i] += h_prev[i];
+                    }
+                    matmul_acc(&agg, &state.params[p], &mut z, s_out, d_in, d_out);
+                }
+                ModelKind::Sage => {
+                    matmul_acc(&h_prev[..s_out * d_in], &state.params[p], &mut z, s_out, d_in, d_out);
+                    matmul_acc(&mean, &state.params[p + 1], &mut z, s_out, d_in, d_out);
+                }
+            }
+            let bias = &state.params[p + g.model.mats_per_layer()];
+            for i in 0..s_out {
+                for (zc, &bv) in z[i * d_out..(i + 1) * d_out].iter_mut().zip(bias) {
+                    *zc += bv;
+                }
+            }
+            // activation (all but the model's last layer)
+            let relu = l < g.layers;
+            let mut zpos = Vec::new();
+            if relu {
+                zpos = z.iter().map(|&v| v > 0.0).collect();
+                for v in z.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            // remote substitution
+            if l - 1 < batch.rmask.len() {
+                let r = &batch.rmask[l - 1];
+                let c = &batch.cache[l - 1];
+                ensure!(r.len() == s_out, "rmask size");
+                for i in 0..s_out {
+                    let ri = r[i];
+                    if ri != 0.0 {
+                        for d in 0..d_out {
+                            z[i * d_out + d] =
+                                (1.0 - ri) * z[i * d_out + d] + ri * c[i * d_out + d];
+                        }
+                    }
+                }
+            }
+            res.push(LayerRes {
+                mean,
+                cnt,
+                zpos,
+                s_out,
+                d_in,
+                d_out,
+            });
+            h.push(z);
+        }
+        Ok(Forward { h, res })
+    }
+
+    /// Masked softmax cross-entropy over the root level.
+    fn loss_grad(
+        &self,
+        logits: &[f32],
+        labels: &[i32],
+        lmask: &[f32],
+    ) -> (StepStats, Vec<f32>) {
+        let c = self.geom.classes;
+        let n = labels.len();
+        let total: f32 = lmask.iter().sum();
+        let denom = total.max(1.0);
+        let mut loss = 0f32;
+        let mut correct = 0f32;
+        let mut grad = vec![0f32; n * c];
+        for i in 0..n {
+            let row = &logits[i * c..(i + 1) * c];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for &v in row {
+                sum += (v - maxv).exp();
+            }
+            let lse = maxv + sum.ln();
+            let y = labels[i] as usize;
+            let m = lmask[i];
+            if m != 0.0 {
+                loss += m * (lse - row[y]);
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                if argmax == y {
+                    correct += m;
+                }
+            }
+            let gr = &mut grad[i * c..(i + 1) * c];
+            for (j, g) in gr.iter_mut().enumerate() {
+                let p = (row[j] - lse).exp();
+                let ind = if j == y { 1.0 } else { 0.0 };
+                *g = (p - ind) * m / denom;
+            }
+        }
+        (
+            StepStats {
+                loss: loss / denom,
+                correct,
+                total,
+            },
+            grad,
+        )
+    }
+
+    /// Backward pass producing flat param grads (canonical order).
+    fn backward(
+        &self,
+        state: &ModelState,
+        batch: &Batch,
+        fwd: &Forward,
+        g_logits: Vec<f32>,
+    ) -> Vec<Vec<f32>> {
+        let g = &self.geom;
+        let k = g.fanout;
+        let depth = batch.depth;
+        let mut grads: Vec<Vec<f32>> = state.params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let mut g_out = g_logits; // grad wrt layer `depth` output
+        for l in (1..=depth).rev() {
+            let lvl = depth - l;
+            let r = &fwd.res[l - 1];
+            let (s_out, d_in, d_out) = (r.s_out, r.d_in, r.d_out);
+            let h_prev = &fwd.h[l - 1];
+            // substitution: d out / d computed = (1 - rmask)
+            if l - 1 < batch.rmask.len() {
+                let rm = &batch.rmask[l - 1];
+                for i in 0..s_out {
+                    if rm[i] != 0.0 {
+                        let f = 1.0 - rm[i];
+                        for d in 0..d_out {
+                            g_out[i * d_out + d] *= f;
+                        }
+                    }
+                }
+            }
+            // relu
+            if !r.zpos.is_empty() {
+                for (gv, &pos) in g_out.iter_mut().zip(&r.zpos) {
+                    if !pos {
+                        *gv = 0.0;
+                    }
+                }
+            }
+            let g_z = g_out;
+            let p = self.pidx(l);
+            let s_in = h_prev.len() / d_in;
+            let mut g_h_prev = vec![0f32; s_in * d_in];
+            let mut g_mean = vec![0f32; s_out * d_in];
+            match g.model {
+                ModelKind::Gc => {
+                    let mut agg = r.mean.clone();
+                    for i in 0..s_out * d_in {
+                        agg[i] += h_prev[i];
+                    }
+                    matmul_at_b(&agg, &g_z, &mut grads[p], s_out, d_in, d_out);
+                    // g_agg = g_z W^T; feeds both self and mean paths
+                    let mut g_agg = vec![0f32; s_out * d_in];
+                    matmul_b_wt(&g_z, &state.params[p], &mut g_agg, s_out, d_in, d_out);
+                    g_h_prev[..s_out * d_in].copy_from_slice(&g_agg);
+                    g_mean.copy_from_slice(&g_agg);
+                }
+                ModelKind::Sage => {
+                    matmul_at_b(&h_prev[..s_out * d_in], &g_z, &mut grads[p], s_out, d_in, d_out);
+                    matmul_at_b(&r.mean, &g_z, &mut grads[p + 1], s_out, d_in, d_out);
+                    matmul_b_wt(&g_z, &state.params[p], &mut g_h_prev[..s_out * d_in], s_out, d_in, d_out);
+                    matmul_b_wt(&g_z, &state.params[p + 1], &mut g_mean, s_out, d_in, d_out);
+                }
+            }
+            // bias grad
+            {
+                let gb = &mut grads[p + g.model.mats_per_layer()];
+                for i in 0..s_out {
+                    for (b, &gv) in gb.iter_mut().zip(&g_z[i * d_out..(i + 1) * d_out]) {
+                        *b += gv;
+                    }
+                }
+            }
+            // scatter mean grads into children: g_child += msk/cnt * g_mean
+            for i in 0..s_out {
+                let gm = &g_mean[i * d_in..(i + 1) * d_in];
+                let inv = 1.0 / r.cnt[i];
+                for j in 0..k {
+                    let m = batch.msk[lvl][i * k + j];
+                    if m == 0.0 {
+                        continue;
+                    }
+                    let child = batch.adj[lvl][i * k + j] as usize;
+                    let cr = &mut g_h_prev[child * d_in..(child + 1) * d_in];
+                    for (o, &gv) in cr.iter_mut().zip(gm) {
+                        *o += m * inv * gv;
+                    }
+                }
+            }
+            g_out = g_h_prev;
+        }
+        grads
+    }
+
+    fn adam(&self, state: &mut ModelState, grads: &[Vec<f32>], lr: f32) {
+        state.t += 1.0;
+        let b1t = ADAM_B1.powf(state.t);
+        let b2t = ADAM_B2.powf(state.t);
+        for ((p, m), (v, g)) in state
+            .params
+            .iter_mut()
+            .zip(state.m.iter_mut())
+            .zip(state.v.iter_mut().zip(grads))
+        {
+            for i in 0..p.len() {
+                m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+                v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+                let mhat = m[i] / (1.0 - b1t);
+                let vhat = v[i] / (1.0 - b2t);
+                p[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+            }
+        }
+    }
+}
+
+impl StepEngine for RefEngine {
+    fn geom(&self) -> &ModelGeom {
+        &self.geom
+    }
+
+    fn train_step(&self, state: &mut ModelState, batch: &Batch, lr: f32) -> Result<StepStats> {
+        ensure!(batch.depth == self.geom.layers, "train batch depth");
+        let fwd = self.forward(state, batch)?;
+        let logits = fwd.h.last().unwrap();
+        let (stats, g_logits) = self.loss_grad(logits, &batch.labels, &batch.lmask);
+        let grads = self.backward(state, batch, &fwd, g_logits);
+        self.adam(state, &grads, lr);
+        Ok(stats)
+    }
+
+    fn evaluate(&self, state: &ModelState, batch: &Batch) -> Result<StepStats> {
+        let fwd = self.forward(state, batch)?;
+        let logits = fwd.h.last().unwrap();
+        let (stats, _) = self.loss_grad(logits, &batch.labels, &batch.lmask);
+        Ok(stats)
+    }
+
+    fn embed(&self, state: &ModelState, batch: &Batch) -> Result<Vec<Vec<f32>>> {
+        let depth = self.geom.layers - 1;
+        ensure!(batch.depth == depth, "embed batch depth");
+        let fwd = self.forward(state, batch)?;
+        let p = self.geom.push_batch;
+        let h = self.geom.hidden;
+        Ok((1..=depth)
+            .map(|l| fwd.h[l][..p * h].to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn geom() -> ModelGeom {
+        ModelGeom {
+            model: ModelKind::Gc,
+            layers: 3,
+            feat: 8,
+            hidden: 8,
+            classes: 4,
+            batch: 4,
+            fanout: 2,
+            push_batch: 4,
+        }
+    }
+
+    /// Random fully-local batch with the constant tree adjacency.
+    fn rand_batch(g: &ModelGeom, depth: usize, width: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed, 0xBA7);
+        let k = g.fanout;
+        let mut adj = Vec::new();
+        let mut msk = Vec::new();
+        let mut s = width;
+        let mut sizes = vec![width];
+        for _ in 0..depth {
+            adj.push((0..s * k).map(|e| (s + e) as i32).collect::<Vec<i32>>());
+            msk.push((0..s * k).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect());
+            s += s * k;
+            sizes.push(s);
+        }
+        let deepest = *sizes.last().unwrap();
+        let x = (0..deepest * g.feat).map(|_| rng.normal() as f32).collect();
+        let n_sub = if depth == g.layers { g.layers - 1 } else { depth - 1 };
+        let rmask = (1..=n_sub)
+            .map(|l| {
+                let lvl = depth - l;
+                (0..sizes[lvl]).map(|_| if rng.chance(0.2) { 1.0 } else { 0.0 }).collect()
+            })
+            .collect::<Vec<Vec<f32>>>();
+        let cache = (1..=n_sub)
+            .map(|l| {
+                let lvl = depth - l;
+                (0..sizes[lvl] * g.hidden).map(|_| rng.normal() as f32).collect()
+            })
+            .collect();
+        let labels = (0..width).map(|_| rng.below(g.classes) as i32).collect();
+        let lmask = vec![1.0; width];
+        Batch {
+            depth,
+            width,
+            x,
+            adj,
+            msk,
+            rmask,
+            cache,
+            labels,
+            lmask,
+        }
+    }
+
+    #[test]
+    fn train_reduces_loss_on_fixed_batch() {
+        for model in [ModelKind::Gc, ModelKind::Sage] {
+            let mut g = geom();
+            g.model = model;
+            let eng = RefEngine::new(g);
+            let mut st = ModelState::init(&g, 3);
+            let batch = rand_batch(&g, 3, 4, 7);
+            let first = eng.train_step(&mut st, &batch, 0.01).unwrap().loss;
+            let mut last = first;
+            for _ in 0..60 {
+                last = eng.train_step(&mut st, &batch, 0.01).unwrap().loss;
+            }
+            assert!(last < first * 0.5, "{model:?}: {first} -> {last}");
+            assert!(last.is_finite());
+        }
+    }
+
+    #[test]
+    fn numeric_gradient_check() {
+        // finite-difference check on a few weights for both models
+        for model in [ModelKind::Gc, ModelKind::Sage] {
+            let mut g = geom();
+            g.model = model;
+            let eng = RefEngine::new(g);
+            let st = ModelState::init(&g, 5);
+            let batch = rand_batch(&g, 3, 4, 9);
+            let fwd = eng.forward(&st, &batch).unwrap();
+            let (_, g_logits) =
+                eng.loss_grad(fwd.h.last().unwrap(), &batch.labels, &batch.lmask);
+            let grads = eng.backward(&st, &batch, &fwd, g_logits);
+            let eps = 3e-3_f32;
+            let mut checked = 0;
+            for pi in 0..st.params.len() {
+                for wi in [0usize, st.params[pi].len() / 2] {
+                    let mut plus = st.clone();
+                    plus.params[pi][wi] += eps;
+                    let lp = eng.evaluate(&plus, &batch).unwrap().loss;
+                    let mut minus = st.clone();
+                    minus.params[pi][wi] -= eps;
+                    let lm = eng.evaluate(&minus, &batch).unwrap().loss;
+                    let fd = (lp - lm) / (2.0 * eps);
+                    let an = grads[pi][wi];
+                    assert!(
+                        (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                        "{model:?} p{pi}[{wi}]: fd={fd} analytic={an}"
+                    );
+                    checked += 1;
+                }
+            }
+            assert!(checked >= 12);
+        }
+    }
+
+    #[test]
+    fn remote_substitution_blocks_gradient() {
+        // If every level-1 and level-2 row is remote, parameter grads of
+        // layer 1 must be zero (its compute is fully overridden).
+        let g = geom();
+        let eng = RefEngine::new(g);
+        let st = ModelState::init(&g, 4);
+        let mut batch = rand_batch(&g, 3, 4, 11);
+        for r in batch.rmask.iter_mut() {
+            r.iter_mut().for_each(|v| *v = 1.0);
+        }
+        let fwd = eng.forward(&st, &batch).unwrap();
+        let (_, g_logits) = eng.loss_grad(fwd.h.last().unwrap(), &batch.labels, &batch.lmask);
+        let grads = eng.backward(&st, &batch, &fwd, g_logits);
+        // layer-1 W grad: index 0
+        assert!(grads[0].iter().all(|&v| v == 0.0));
+        assert!(grads[1].iter().all(|&v| v == 0.0));
+        // layer-3 grads must be nonzero
+        assert!(grads[4].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn embed_outputs_have_expected_shapes_and_match_forward() {
+        let g = geom();
+        let eng = RefEngine::new(g);
+        let st = ModelState::init(&g, 6);
+        let batch = rand_batch(&g, 2, g.push_batch, 13);
+        let outs = eng.embed(&st, &batch).unwrap();
+        assert_eq!(outs.len(), 2);
+        for o in &outs {
+            assert_eq!(o.len(), g.push_batch * g.hidden);
+        }
+        let fwd = eng.forward(&st, &batch).unwrap();
+        assert_eq!(outs[0], fwd.h[1][..g.push_batch * g.hidden].to_vec());
+        assert_eq!(outs[1], fwd.h[2][..g.push_batch * g.hidden].to_vec());
+    }
+
+    #[test]
+    fn eval_is_pure() {
+        let g = geom();
+        let eng = RefEngine::new(g);
+        let st = ModelState::init(&g, 8);
+        let batch = rand_batch(&g, 3, 4, 15);
+        let a = eng.evaluate(&st, &batch).unwrap();
+        let b = eng.evaluate(&st, &batch).unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.correct, b.correct);
+    }
+}

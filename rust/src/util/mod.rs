@@ -1,0 +1,51 @@
+//! Hand-rolled substrates: the offline crate registry only carries the
+//! `xla` crate's dependency closure, so the PRNG, JSON, CLI, threading,
+//! statistics, and property-testing layers are implemented here from
+//! scratch (see DESIGN.md §3, substitutions table).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Wall-clock stopwatch used by phase metrics.
+#[derive(Debug)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Format seconds human-readably for log lines and tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}m", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(0.0000005).ends_with("us"));
+        assert!(fmt_secs(0.005).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(300.0).ends_with('m'));
+    }
+}

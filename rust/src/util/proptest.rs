@@ -1,0 +1,162 @@
+//! Mini property-testing substrate (no proptest crate offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! and, on failure, retries the failing seed with progressively "smaller"
+//! regenerations (seeded shrink-lite): the generator receives a size hint it
+//! can use to produce smaller cases, and the smallest failing case is
+//! reported. This is deliberately simple but gives the coordinator
+//! invariants real randomized coverage with reproducible failures.
+
+use super::rng::Rng;
+
+/// Generation context handed to case generators.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// Size hint in [1, 100]; shrink passes re-run with smaller sizes.
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in [lo, hi] scaled by the size hint (inclusive bounds).
+    pub fn int_scaled(&mut self, lo: usize, hi: usize) -> usize {
+        let span = hi.saturating_sub(lo);
+        let scaled = (span * self.size) / 100;
+        lo + self.rng.below(scaled + 1)
+    }
+
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run a property over `cases` random cases. Panics (failing the enclosing
+/// test) with the seed, case index, and message of the smallest failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut generate: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> PropResult,
+) {
+    let base_seed = 0xC0FFEE_u64 ^ name.len() as u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed, 0);
+        let mut gen = Gen {
+            rng: &mut rng,
+            size: 100,
+        };
+        let input = generate(&mut gen);
+        if let Err(msg) = prop(&input) {
+            // shrink-lite: re-generate from the same seed at smaller sizes
+            // and keep the smallest size that still fails.
+            let mut smallest: Option<(usize, T, String)> = None;
+            for size in [50usize, 25, 12, 6, 3, 1] {
+                let mut rng = Rng::new(seed, 0);
+                let mut gen = Gen {
+                    rng: &mut rng,
+                    size,
+                };
+                let candidate = generate(&mut gen);
+                if let Err(m) = prop(&candidate) {
+                    smallest = Some((size, candidate, m));
+                }
+            }
+            match smallest {
+                Some((size, small, m)) => panic!(
+                    "property '{name}' failed (case {case}, seed {seed:#x}).\n\
+                     original: {msg}\n\
+                     shrunk (size {size}): {m}\n\
+                     shrunk input: {small:#?}"
+                ),
+                None => panic!(
+                    "property '{name}' failed (case {case}, seed {seed:#x}): {msg}\n\
+                     input: {input:#?}"
+                ),
+            }
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "sum-commutes",
+            50,
+            |g| (g.int(0, 100), g.int(0, 100)),
+            |&(a, b)| {
+                count += 1;
+                prop_assert!(a + b == b + a, "not commutative");
+                Ok(())
+            },
+        );
+        assert!(count >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            10,
+            |g| g.int_scaled(0, 1000),
+            |&x| {
+                prop_assert!(x > 10_000, "x={x} too small");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn size_hint_scales_generation() {
+        let mut rng = Rng::new(1, 0);
+        let mut g = Gen {
+            rng: &mut rng,
+            size: 1,
+        };
+        for _ in 0..100 {
+            assert!(g.int_scaled(0, 1000) <= 10);
+        }
+    }
+}

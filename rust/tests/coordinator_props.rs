@@ -1,0 +1,262 @@
+//! Property-based tests of coordinator invariants (using the in-tree
+//! mini property-testing substrate, `util::proptest`):
+//!
+//! * routing   — every pulled row comes from the correct layer DB and the
+//!   most recent push wins;
+//! * batching  — OPP issues at most one on-demand RPC per minibatch and
+//!   never re-pulls a cached node;
+//! * state     — client cache is coherent with the server after
+//!   push+pull; pruning never exceeds the retention limit;
+//! * blocks    — every sampled block satisfies the AOT shape contract.
+
+use optimes::coordinator::{EmbCache, EmbeddingServer, NetConfig};
+use optimes::graph::generate::{generate, GenParams};
+use optimes::graph::partition::metis_lite;
+use optimes::graph::sampler::{BlockDims, SampledNode, Sampler};
+use optimes::graph::subgraph::{build_all, Prune};
+use optimes::util::proptest::{check, Gen};
+use optimes::{prop_assert, prop_assert_eq};
+
+fn random_graph(g: &mut Gen) -> optimes::graph::Graph {
+    let n = 100 + g.int_scaled(0, 800);
+    generate(&GenParams {
+        n,
+        avg_degree: 3.0 + g.int(0, 12) as f64,
+        communities: 2 + g.int(0, 6),
+        classes: 4,
+        feat_dim: 8,
+        homophily: 0.5 + g.f64() * 0.45,
+        hub_alpha: 1.2 + g.f64(),
+        signal: 0.5,
+        community_bias: g.f64() * 0.5,
+        train_frac: 0.4,
+        test_frac: 0.2,
+        seed: g.int(0, 1_000_000) as u64,
+    })
+}
+
+#[test]
+fn prop_blocks_satisfy_aot_contract() {
+    check(
+        "blocks-shape-contract",
+        25,
+        |g| {
+            let graph = random_graph(g);
+            let k = 2 + g.int(0, 2);
+            let batch = 2 + g.int(0, 6);
+            let clients = 2 + g.int(0, 2);
+            let seed = g.int(0, 9999) as u64;
+            (graph, k, batch, clients, seed)
+        },
+        |(graph, k, batch, clients, seed)| {
+            let part = metis_lite(graph, *clients, *seed);
+            let subs = build_all(graph, &part, &Prune::None, *seed);
+            let dims = BlockDims {
+                layers: 3,
+                fanout: *k,
+                batch: *batch,
+                feat: 8,
+                hidden: 8,
+                classes: 4,
+                push_batch: *batch,
+            };
+            for sub in &subs {
+                let mut sampler = Sampler::new(dims, *seed, sub.client_id as u64);
+                let targets: Vec<u32> =
+                    sub.train_local.iter().copied().take(*batch).collect();
+                if targets.is_empty() {
+                    continue;
+                }
+                let b = sampler.sample_batch(sub, &targets);
+                // level sizes follow s_d = batch * (K+1)^d
+                for d in 0..=3usize {
+                    prop_assert_eq!(b.levels[d].len(), batch * (k + 1).pow(d as u32));
+                }
+                // prefix property
+                for d in 0..3 {
+                    prop_assert!(
+                        b.levels[d + 1][..b.levels[d].len()] == b.levels[d][..],
+                        "prefix property violated at level {d}"
+                    );
+                }
+                // no remote at deepest; remote/pad children masked
+                let prefix = b.levels[2].len();
+                for n in &b.levels[3][prefix..] {
+                    prop_assert!(
+                        !matches!(n, SampledNode::Remote(_)),
+                        "remote at hop L"
+                    );
+                }
+                for d in 0..3usize {
+                    for (i, parent) in b.levels[d].iter().enumerate() {
+                        if !matches!(parent, SampledNode::Local(_)) {
+                            for j in 0..*k {
+                                prop_assert!(
+                                    b.msk[d][i * k + j] == 0.0,
+                                    "unmasked child of non-local parent"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_retention_limit_enforced() {
+    check(
+        "retention-limit",
+        25,
+        |g| {
+            let graph = random_graph(g);
+            let limit = g.int(0, 5);
+            let clients = 2 + g.int(0, 2);
+            let seed = g.int(0, 9999) as u64;
+            (graph, limit, clients, seed)
+        },
+        |(graph, limit, clients, seed)| {
+            let part = metis_lite(graph, *clients, *seed);
+            let subs = build_all(graph, &part, &Prune::Retention(*limit), *seed);
+            for sub in &subs {
+                for rems in &sub.in_remote {
+                    prop_assert!(
+                        rems.len() <= *limit,
+                        "client {} kept {} remotes (limit {})",
+                        sub.client_id,
+                        rems.len(),
+                        limit
+                    );
+                }
+                // every push node must actually be pulled by someone
+                for p in &sub.push_nodes {
+                    let pulled = subs
+                        .iter()
+                        .any(|o| o.client_id != sub.client_id && o.remote.contains(p));
+                    prop_assert!(pulled, "push node {p} pulled by nobody");
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_kv_routing_last_push_wins() {
+    check(
+        "kv-routing",
+        40,
+        |g| {
+            let layers = 1 + g.int(0, 2);
+            let hidden = 1 + g.int(0, 7);
+            let n = 1 + g.int_scaled(0, 200);
+            let writes = 1 + g.int(0, 4);
+            let seed = g.int(0, 9999) as u64;
+            (layers, hidden, n, writes, seed)
+        },
+        |(layers, hidden, n, writes, seed)| {
+            let server = EmbeddingServer::new(*layers, *hidden, NetConfig::default());
+            let nodes: Vec<u32> = (0..*n as u32).map(|i| i * 7 + (*seed as u32 % 5)).collect();
+            let mut last = Vec::new();
+            for w in 0..*writes {
+                let per_layer: Vec<Vec<f32>> = (0..*layers)
+                    .map(|l| {
+                        nodes
+                            .iter()
+                            .flat_map(|&nd| {
+                                (0..*hidden)
+                                    .map(move |j| (nd as f32) + (l as f32) * 0.1 + (w as f32) * 100.0 + j as f32)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                server.push(&nodes, &per_layer);
+                last = per_layer;
+            }
+            let (got, _) = server.pull(&nodes, false);
+            for l in 0..*layers {
+                prop_assert!(
+                    got[l] == last[l],
+                    "layer {l}: pulled rows differ from last push"
+                );
+            }
+            prop_assert_eq!(server.stored_nodes(), nodes.len());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_coherent_after_pull() {
+    check(
+        "cache-coherence",
+        30,
+        |g| {
+            let n_remote = 1 + g.int_scaled(0, 150);
+            let hidden = 1 + g.int(0, 7);
+            let pulls = 1 + g.int(0, 3);
+            let seed = g.int(0, 9999) as u64;
+            (n_remote, hidden, pulls, seed)
+        },
+        |(n_remote, hidden, pulls, seed)| {
+            let server = EmbeddingServer::new(2, *hidden, NetConfig::default());
+            let globals: Vec<u32> = (0..*n_remote as u32).collect();
+            let rows: Vec<f32> = globals
+                .iter()
+                .flat_map(|&nd| (0..*hidden).map(move |j| nd as f32 * 10.0 + j as f32))
+                .collect();
+            server.push(&globals, &[rows.clone(), rows.clone()]);
+            let mut cache = EmbCache::new(2, *hidden, *n_remote);
+            let mut rng = optimes::util::rng::Rng::new(*seed, 1);
+            for _ in 0..*pulls {
+                let take = 1 + rng.below(*n_remote);
+                let idxs: Vec<u32> = rng
+                    .sample_indices(*n_remote, take)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                let gl: Vec<u32> = idxs.iter().map(|&i| globals[i as usize]).collect();
+                let (per_layer, _) = server.pull(&gl, true);
+                cache.insert(&idxs, &per_layer);
+                // coherence: every pulled idx present with the exact row
+                for (pos, &i) in idxs.iter().enumerate() {
+                    prop_assert!(cache.is_present(i), "idx {i} missing after pull");
+                    let want: Vec<f32> = (0..*hidden)
+                        .map(|j| globals[i as usize] as f32 * 10.0 + j as f32)
+                        .collect();
+                    prop_assert!(
+                        cache.row(1, i) == &want[..],
+                        "cache row mismatch at idx {i} (pos {pos})"
+                    );
+                }
+                prop_assert!(cache.missing_of(&idxs).is_empty(), "missing after insert");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_netsim_monotone() {
+    check(
+        "netsim-monotone",
+        50,
+        |g| {
+            let a = g.int_scaled(0, 1_000_000);
+            let b = g.int_scaled(0, 1_000_000);
+            (a, b)
+        },
+        |&(a, b)| {
+            let n = NetConfig::default();
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            prop_assert!(
+                n.time_for_bytes(lo) <= n.time_for_bytes(hi),
+                "cost model not monotone"
+            );
+            prop_assert!(n.time_for_bytes(lo) >= n.latency, "below latency floor");
+            Ok(())
+        },
+    );
+}

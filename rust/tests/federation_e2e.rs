@@ -1,0 +1,165 @@
+//! End-to-end federation tests over the full coordinator stack.
+//!
+//! RefEngine-backed tests always run; PJRT-backed tests skip without
+//! artifacts. These assert the paper's *qualitative* invariants on a tiny
+//! graph: strategy semantics, footprint ordering, determinism, and the
+//! overlap/prefetch mechanics surfacing in the metrics.
+
+use std::sync::Arc;
+
+use optimes::coordinator::metrics::RpcKind;
+use optimes::coordinator::{run_session, SessionConfig, SessionMetrics, Strategy};
+use optimes::graph::datasets::tiny;
+use optimes::runtime::{Manifest, ModelGeom, ModelKind, RefEngine, StepEngine};
+
+fn ref_engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: 16,
+        classes: 4,
+        batch: 8,
+        fanout: 3,
+        push_batch: 8,
+    }))
+}
+
+fn cfg(strategy: Strategy, rounds: usize) -> SessionConfig {
+    SessionConfig {
+        strategy,
+        rounds,
+        epochs: 3,
+        epoch_batches: 6,
+        eval_batches: 6,
+        lr: 0.01,
+        parallel_clients: false,
+        ..Default::default()
+    }
+}
+
+fn run(strategy: Strategy, rounds: usize, seed: u64) -> SessionMetrics {
+    let g = tiny(seed);
+    run_session(&g, &cfg(strategy, rounds), ref_engine()).unwrap()
+}
+
+#[test]
+fn sessions_are_deterministic() {
+    let a = run(Strategy::opp(), 4, 91);
+    let b = run(Strategy::opp(), 4, 91);
+    assert_eq!(a.accuracies(), b.accuracies());
+    assert_eq!(a.server_embeddings, b.server_embeddings);
+    // phases mix modeled time (deterministic) with measured in-memory
+    // service time (µs jitter) — agree to sub-millisecond
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert!((x.mean_phases.pull - y.mean_phases.pull).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn footprint_ordering_d_p_e() {
+    let d = run(Strategy::d(), 2, 93);
+    let p2 = run(Strategy::parse("P2").unwrap(), 2, 93);
+    let p4 = run(Strategy::p(4), 2, 93);
+    let e = run(Strategy::e(), 2, 93);
+    assert_eq!(d.server_embeddings, 0);
+    assert!(p2.server_embeddings <= p4.server_embeddings);
+    assert!(p4.server_embeddings <= e.server_embeddings);
+    assert!(e.server_embeddings > 0);
+    // retained remotes follow the same ladder
+    assert!(p2.retained_remotes <= p4.retained_remotes);
+    assert!(p4.retained_remotes <= e.retained_remotes);
+    // pull volume ordering shows up in the modeled pull time
+    let pull = |m: &SessionMetrics| m.median_phases().pull;
+    assert_eq!(pull(&d), 0.0);
+    assert!(pull(&p2) <= pull(&e) + 1e-12);
+}
+
+#[test]
+fn overlap_reduces_visible_push() {
+    let e = run(Strategy::e(), 3, 95);
+    let o = run(Strategy::o(), 3, 95);
+    // O's visible push must be below E's (most of it hides under the
+    // final epoch), and hidden push must appear.
+    assert!(o.median_phases().push <= e.median_phases().push + 1e-9);
+    let hidden: f64 = o.rounds.iter().map(|r| r.mean_phases.push_hidden).sum();
+    assert!(hidden > 0.0, "overlap never hid any push work");
+    let e_hidden: f64 = e.rounds.iter().map(|r| r.mean_phases.push_hidden).sum();
+    assert_eq!(e_hidden, 0.0);
+}
+
+#[test]
+fn opp_splits_pull_between_prefetch_and_on_demand() {
+    let e = run(Strategy::e(), 3, 97);
+    let opp = run(Strategy::opp(), 3, 97);
+    // initial pull strictly smaller (only top-25% prefetched)
+    assert!(opp.median_phases().pull < e.median_phases().pull);
+    // and on-demand pulls appear with bounded RPC count
+    let dyn_rpcs = opp.rpcs(RpcKind::PullOnDemand);
+    assert!(!dyn_rpcs.is_empty());
+    // at most one on-demand RPC per minibatch
+    let max_rpcs = 3 /*rounds*/ * 3 /*epochs*/ * 6 /*batches*/ * 4 /*clients*/;
+    assert!(dyn_rpcs.len() <= max_rpcs);
+    // E never pulls on demand
+    assert!(e.rpcs(RpcKind::PullOnDemand).is_empty());
+}
+
+#[test]
+fn opg_prunes_but_still_exchanges() {
+    let e = run(Strategy::e(), 3, 99);
+    let opg = run(Strategy::opg(), 3, 99);
+    assert!(opg.retained_remotes < e.retained_remotes);
+    assert!(opg.server_embeddings > 0);
+    assert!(opg.median_phases().pull < e.median_phases().pull);
+}
+
+#[test]
+fn accuracy_improves_over_training() {
+    let m = run(Strategy::e(), 10, 101);
+    let smoothed = m.smoothed_accuracies();
+    let early = smoothed[1];
+    let late = *smoothed.last().unwrap();
+    assert!(
+        late > early + 0.05,
+        "no learning: early {early:.3} late {late:.3}"
+    );
+}
+
+#[test]
+fn parallel_clients_run_concurrently_and_converge() {
+    let g = tiny(103);
+    let mut c = cfg(Strategy::o(), 5);
+    c.parallel_clients = true;
+    let m = run_session(&g, &c, ref_engine()).unwrap();
+    assert_eq!(m.rounds.len(), 5);
+    assert!(m.rounds.iter().all(|r| r.clients.len() == 4));
+    assert!(m.peak_accuracy() > 0.3);
+}
+
+#[test]
+fn pjrt_end_to_end_session() {
+    // full stack through the real AOT artifacts (skips without them)
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine: Arc<dyn StepEngine> = Arc::new(
+        optimes::runtime::PjrtEngine::start(&manifest, ModelKind::Gc, 5).unwrap(),
+    );
+    let g = tiny(105);
+    let cfg = SessionConfig {
+        strategy: Strategy::opp(),
+        rounds: 3,
+        epochs: 2,
+        epoch_batches: 3,
+        eval_batches: 4,
+        lr: 0.01,
+        parallel_clients: true,
+        ..Default::default()
+    };
+    let m = run_session(&g, &cfg, engine).unwrap();
+    assert_eq!(m.rounds.len(), 3);
+    assert!(m.rounds.iter().all(|r| r.accuracy.is_finite()));
+    assert!(m.server_embeddings > 0);
+}

@@ -1,0 +1,160 @@
+//! Integration: the PJRT engine (AOT HLO with Pallas kernels) must agree
+//! with the pure-Rust RefEngine on identical weights and batches.
+//!
+//! Requires `make artifacts`; tests skip gracefully when artifacts are
+//! missing so `cargo test` stays runnable pre-build.
+
+use optimes::runtime::{
+    Batch, Manifest, ModelKind, ModelState, PjrtEngine, RefEngine, StepEngine,
+};
+use optimes::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match Manifest::load(dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping pjrt cross-check: {e}");
+            None
+        }
+    }
+}
+
+/// Random batch with the constant tree adjacency for a given geometry.
+fn rand_batch(
+    geom: &optimes::runtime::ModelGeom,
+    depth: usize,
+    width: usize,
+    seed: u64,
+) -> Batch {
+    let mut rng = Rng::new(seed, 0x7E57);
+    let k = geom.fanout;
+    let mut adj = Vec::new();
+    let mut msk = Vec::new();
+    let mut s = width;
+    let mut sizes = vec![width];
+    for _ in 0..depth {
+        adj.push((0..s * k).map(|e| (s + e) as i32).collect::<Vec<i32>>());
+        msk.push(
+            (0..s * k)
+                .map(|_| if rng.chance(0.75) { 1.0 } else { 0.0 })
+                .collect(),
+        );
+        s += s * k;
+        sizes.push(s);
+    }
+    let deepest = *sizes.last().unwrap();
+    let x = (0..deepest * geom.feat)
+        .map(|_| rng.normal() as f32 * 0.5)
+        .collect();
+    let n_sub = if depth == geom.layers {
+        geom.layers - 1
+    } else {
+        depth - 1
+    };
+    let rmask: Vec<Vec<f32>> = (1..=n_sub)
+        .map(|l| {
+            let lvl = depth - l;
+            (0..sizes[lvl])
+                .map(|_| if rng.chance(0.25) { 1.0 } else { 0.0 })
+                .collect()
+        })
+        .collect();
+    let cache: Vec<Vec<f32>> = (1..=n_sub)
+        .map(|l| {
+            let lvl = depth - l;
+            (0..sizes[lvl] * geom.hidden)
+                .map(|_| rng.normal() as f32 * 0.3)
+                .collect()
+        })
+        .collect();
+    let labels = (0..width).map(|_| rng.below(geom.classes) as i32).collect();
+    let lmask = (0..width)
+        .map(|i| if i + 2 < width { 1.0 } else { 0.0 })
+        .collect();
+    Batch {
+        depth,
+        width,
+        x,
+        adj,
+        msk,
+        rmask,
+        cache,
+        labels,
+        lmask,
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+fn cross_check(model: ModelKind) {
+    let Some(m) = manifest() else { return };
+    let pjrt = PjrtEngine::start(&m, model, 5).expect("pjrt engine");
+    let geom = *pjrt.geom();
+    let reff = RefEngine::new(geom);
+
+    // --- eval agreement
+    let state = ModelState::init(&geom, 42);
+    let batch = rand_batch(&geom, geom.layers, geom.batch, 1);
+    let ep = pjrt.evaluate(&state, &batch).unwrap();
+    let er = reff.evaluate(&state, &batch).unwrap();
+    assert!(
+        (ep.loss - er.loss).abs() < 1e-3,
+        "{model:?} eval loss pjrt={} ref={}",
+        ep.loss,
+        er.loss
+    );
+    assert_eq!(ep.correct, er.correct, "{model:?} eval correct");
+    assert_eq!(ep.total, er.total);
+
+    // --- train agreement over several steps
+    let mut sp = state.clone();
+    let mut sr = state.clone();
+    for step in 0..3 {
+        let b = rand_batch(&geom, geom.layers, geom.batch, 10 + step);
+        let tp = pjrt.train_step(&mut sp, &b, 0.01).unwrap();
+        let tr = reff.train_step(&mut sr, &b, 0.01).unwrap();
+        assert!(
+            (tp.loss - tr.loss).abs() < 2e-3,
+            "{model:?} step {step} loss pjrt={} ref={}",
+            tp.loss,
+            tr.loss
+        );
+        for (i, (p, r)) in sp.params.iter().zip(&sr.params).enumerate() {
+            let d = max_abs_diff(p, r);
+            assert!(d < 5e-3, "{model:?} step {step} param {i} drift {d}");
+        }
+    }
+
+    // --- embed agreement
+    let eb = rand_batch(&geom, geom.layers - 1, geom.push_batch, 77);
+    let hp = pjrt.embed(&state, &eb).unwrap();
+    let hr = reff.embed(&state, &eb).unwrap();
+    assert_eq!(hp.len(), hr.len());
+    for (l, (a, b)) in hp.iter().zip(&hr).enumerate() {
+        let d = max_abs_diff(a, b);
+        assert!(d < 1e-3, "{model:?} embed h{} drift {d}", l + 1);
+    }
+}
+
+#[test]
+fn pjrt_matches_ref_gc() {
+    cross_check(ModelKind::Gc);
+}
+
+#[test]
+fn pjrt_matches_ref_sage() {
+    cross_check(ModelKind::Sage);
+}
+
+#[test]
+fn smoke_artifact() {
+    let Some(m) = manifest() else { return };
+    let v = optimes::runtime::pjrt::run_smoke(&m).unwrap();
+    assert_eq!(v, vec![5.0, 5.0, 9.0, 9.0]);
+}
