@@ -1,0 +1,104 @@
+//! End-to-end round-time harness: a 4-client, 3-round federated session
+//! (the `federation_e2e` configuration) run twice at the same seed — once
+//! with the tiled parallel kernels, once with the naive scalar oracle
+//! forced — to record the wall-clock speedup and confirm the final
+//! validation accuracy is unchanged (EXPERIMENTS.md §Perf).
+//!
+//! Merges a `roundtime` section into the repo-root `BENCH_micro.json`.
+
+use std::sync::Arc;
+
+use optimes::coordinator::{run_session, SessionConfig, SessionMetrics, Strategy};
+use optimes::graph::datasets::tiny;
+use optimes::harness;
+use optimes::runtime::{kernels, ModelGeom, ModelKind, RefEngine, StepEngine};
+use optimes::util::json::JsonObj;
+
+const CLIENTS: usize = 4;
+const ROUNDS: usize = 3;
+
+/// Geometry sized so the layer-1 matmuls (~2.4M MACs at B=32, K=5,
+/// hidden=64) cross the kernels' parallel-dispatch threshold — the timed
+/// sessions exercise the full tiled + row-tile-parallel path, not just
+/// the serial tiling. (feat/classes must match the `tiny` generator.)
+fn engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: 64,
+        classes: 4,
+        batch: 32,
+        fanout: 5,
+        push_batch: 32,
+    }))
+}
+
+fn cfg(rounds: usize) -> SessionConfig {
+    SessionConfig {
+        clients: CLIENTS,
+        strategy: Strategy::o(),
+        rounds,
+        epochs: 3,
+        epoch_batches: 6,
+        eval_batches: 6,
+        lr: 0.01,
+        seed: 42,
+        parallel_clients: false,
+        ..Default::default()
+    }
+}
+
+fn run_once(label: &str) -> (f64, SessionMetrics) {
+    let g = tiny(42);
+    let t0 = std::time::Instant::now();
+    let m = run_session(&g, &cfg(ROUNDS), engine()).expect(label);
+    let wall = t0.elapsed().as_secs_f64();
+    let final_acc = m.rounds.last().map(|r| r.accuracy).unwrap_or(0.0);
+    println!(
+        "{label:<18} wall {wall:>8.3}s  ({:.3}s/round)  final acc {final_acc:.4}",
+        wall / ROUNDS as f64
+    );
+    (wall, m)
+}
+
+fn main() {
+    println!("== bench_roundtime ({CLIENTS} clients, {ROUNDS} rounds, seed 42) ==");
+    // Untimed warm-up round: spawns the kernel thread pool, faults in the
+    // dataset/allocator working set, so neither timed run pays one-time
+    // process start-up costs.
+    kernels::set_force_naive(false);
+    let g = tiny(42);
+    run_session(&g, &cfg(1), engine()).expect("warm-up");
+    let (tiled_wall, tiled) = run_once("kernels: tiled");
+    kernels::set_force_naive(true);
+    let (naive_wall, naive) = run_once("kernels: naive");
+    kernels::set_force_naive(false);
+
+    let acc_t = tiled.rounds.last().map(|r| r.accuracy).unwrap_or(0.0);
+    let acc_n = naive.rounds.last().map(|r| r.accuracy).unwrap_or(0.0);
+    let acc_delta = (acc_t - acc_n).abs();
+    let speedup = naive_wall / tiled_wall.max(1e-12);
+    println!(
+        "speedup {speedup:.2}x  |final acc delta| {acc_delta:.2e} (target <= 1e-4)"
+    );
+    if acc_delta > 1e-4 {
+        eprintln!("WARNING: accuracy drifted beyond 1e-4 between kernel paths");
+    }
+
+    let mut o = JsonObj::new();
+    o.set("clients", CLIENTS);
+    o.set("rounds", ROUNDS);
+    o.set("tiled_wall_s", tiled_wall);
+    o.set("naive_wall_s", naive_wall);
+    o.set("tiled_s_per_round", tiled_wall / ROUNDS as f64);
+    o.set("naive_s_per_round", naive_wall / ROUNDS as f64);
+    o.set("wall_speedup", speedup);
+    o.set("final_acc_tiled", acc_t);
+    o.set("final_acc_naive", acc_n);
+    o.set("final_acc_delta", acc_delta);
+    o.set("train_phase_tiled_s", tiled.median_phases().train);
+    o.set("train_phase_naive_s", naive.median_phases().train);
+    harness::record_bench_section("roundtime", o);
+    println!("[bench_roundtime] recorded to {}", harness::bench_json_path().display());
+}

@@ -1,11 +1,12 @@
 //! Micro-benchmarks of the L3 hot-path substrates (hand-rolled harness —
 //! the offline registry carries no criterion). Reports ns/op with simple
-//! repetition + median-of-runs, which is what the §Perf iteration log in
-//! EXPERIMENTS.md tracks.
+//! repetition + median-of-runs, prints one machine-readable JSON line per
+//! substrate, and merges the full result set into the repo-root
+//! `BENCH_micro.json` (the §Perf iteration log in EXPERIMENTS.md).
 
 use std::sync::Arc;
 
-use optimes::coordinator::trainer::assemble_batch;
+use optimes::coordinator::trainer::{assemble_batch, BatchScratch};
 use optimes::coordinator::{EmbeddingServer, NetConfig};
 use optimes::graph::datasets;
 use optimes::graph::partition::{hash_partition, metis_lite};
@@ -13,61 +14,128 @@ use optimes::graph::sampler::{static_adj, Sampler};
 use optimes::graph::scoring;
 use optimes::graph::subgraph::{build_all, Prune};
 use optimes::harness;
-use optimes::runtime::{ModelState, StepEngine};
+use optimes::runtime::{kernels, ModelState, StepEngine};
+use optimes::util::json::{Json, JsonObj};
+use optimes::util::rng::Rng;
 
-/// Time `f` over `iters` iterations, repeated 5 times; report the median.
-fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
-    let mut runs = Vec::new();
-    for _ in 0..5 {
-        let t0 = std::time::Instant::now();
-        for _ in 0..iters {
-            f();
+/// Collected (name, seconds-per-op) results for the JSON section.
+struct Results(Vec<(String, f64)>);
+
+impl Results {
+    /// Time `f` over `iters` iterations, repeated 5 times; report and
+    /// record the median. Prints a human line plus a JSON line.
+    fn bench(&mut self, name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+        let mut runs = Vec::new();
+        for _ in 0..5 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            runs.push(t0.elapsed().as_secs_f64() / iters as f64);
         }
-        runs.push(t0.elapsed().as_secs_f64() / iters as f64);
+        runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = runs[2];
+        let unit = if med < 1e-6 {
+            format!("{:.0} ns/op", med * 1e9)
+        } else if med < 1e-3 {
+            format!("{:.2} us/op", med * 1e6)
+        } else if med < 1.0 {
+            format!("{:.3} ms/op", med * 1e3)
+        } else {
+            format!("{:.3} s/op", med)
+        };
+        println!("{name:<44} {unit:>16}   ({iters} iters x 5 runs)");
+        println!(
+            "{{\"substrate\":{:?},\"ns_per_op\":{:.1},\"iters\":{iters}}}",
+            name,
+            med * 1e9
+        );
+        self.0.push((name.to_string(), med));
+        med
     }
-    runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let med = runs[2];
-    let unit = if med < 1e-6 {
-        format!("{:.0} ns/op", med * 1e9)
-    } else if med < 1e-3 {
-        format!("{:.2} us/op", med * 1e6)
-    } else if med < 1.0 {
-        format!("{:.3} ms/op", med * 1e3)
-    } else {
-        format!("{:.3} s/op", med)
-    };
-    println!("{name:<44} {unit:>16}   ({iters} iters x 5 runs)");
+
+    fn to_json(&self, extra: &[(&str, f64)]) -> JsonObj {
+        let mut o = JsonObj::new();
+        let entries: Vec<Json> = self
+            .0
+            .iter()
+            .map(|(name, secs)| {
+                let mut e = JsonObj::new();
+                e.set("substrate", name.as_str());
+                e.set("ns_per_op", secs * 1e9);
+                Json::Obj(e)
+            })
+            .collect();
+        o.set("entries", Json::Arr(entries));
+        for (k, v) in extra {
+            o.set(*k, *v);
+        }
+        o
+    }
 }
 
 fn main() {
     let t0 = std::time::Instant::now();
     println!("== micro_substrates ==");
+    let mut res = Results(Vec::new());
     let (p, g) = harness::load_dataset("reddit-s").expect("dataset");
 
-    bench("graph: generate reddit-s (scaled)", 1, || {
+    res.bench("graph: generate reddit-s (scaled)", 1, || {
         let _ = datasets::load("reddit-s", harness::dataset_scale() * 2).unwrap();
     });
 
     let part = metis_lite(&g, p.default_clients, 42);
-    bench("partition: metis_lite k=4", 1, || {
+    res.bench("partition: metis_lite k=4", 1, || {
         let _ = metis_lite(&g, 4, 43);
     });
-    bench("partition: hash k=4", 1, || {
+    res.bench("partition: hash k=4", 1, || {
         let _ = hash_partition(&g, 4, 43);
     });
 
     let subs = build_all(&g, &part, &Prune::None, 42);
-    bench("subgraph: build_all (expansion, no prune)", 1, || {
+    res.bench("subgraph: build_all (expansion, no prune)", 1, || {
         let _ = build_all(&g, &part, &Prune::None, 43);
     });
-    bench("subgraph: build_all (P4 retention)", 1, || {
+    res.bench("subgraph: build_all (P4 retention)", 1, || {
         let _ = build_all(&g, &part, &Prune::Retention(4), 43);
     });
 
     let sub = subs.iter().max_by_key(|s| s.n_remote()).unwrap();
-    bench("scoring: frequency (768 sources)", 1, || {
+    res.bench("scoring: frequency (768 sources)", 1, || {
         let _ = scoring::frequency_scores(sub, 3, 768, 7);
     });
+
+    // ---- tiled vs naive matmul kernels (the acceptance shape) ----------
+    let (kn, kdi, kdo) = (1024usize, 256usize, 256usize);
+    let mut rng = Rng::new(0xBE7C4, 0);
+    let ka: Vec<f32> = (0..kn * kdi.max(kdo)).map(|_| rng.normal() as f32).collect();
+    let kw: Vec<f32> = (0..kdi * kdo).map(|_| rng.normal() as f32).collect();
+    let mut kout = vec![0f32; kn * kdi.max(kdo)];
+    let naive_acc = res.bench("kernel: matmul_acc naive 1024x256x256", 3, || {
+        kernels::naive::matmul_acc(&ka, &kw, &mut kout, kn, kdi, kdo);
+    });
+    let tiled_acc = res.bench("kernel: matmul_acc tiled 1024x256x256", 3, || {
+        kernels::matmul_acc(&ka, &kw, &mut kout, kn, kdi, kdo);
+    });
+    let naive_atb = res.bench("kernel: matmul_at_b naive 1024x256x256", 3, || {
+        kernels::naive::matmul_at_b(&ka, &ka, &mut kout, kn, kdi, kdo);
+    });
+    let tiled_atb = res.bench("kernel: matmul_at_b tiled 1024x256x256", 3, || {
+        kernels::matmul_at_b(&ka, &ka, &mut kout, kn, kdi, kdo);
+    });
+    let naive_bwt = res.bench("kernel: matmul_b_wt naive 1024x256x256", 3, || {
+        kernels::naive::matmul_b_wt(&ka, &kw, &mut kout, kn, kdi, kdo);
+    });
+    let tiled_bwt = res.bench("kernel: matmul_b_wt tiled 1024x256x256", 3, || {
+        kernels::matmul_b_wt(&ka, &kw, &mut kout, kn, kdi, kdo);
+    });
+    let acc_speedup = naive_acc / tiled_acc.max(1e-12);
+    println!(
+        "kernel speedups vs naive: acc {:.2}x  at_b {:.2}x  b_wt {:.2}x",
+        acc_speedup,
+        naive_atb / tiled_atb.max(1e-12),
+        naive_bwt / tiled_bwt.max(1e-12),
+    );
 
     // sampling + assembly hot path (the per-minibatch L3 work)
     let engine = harness::make_engine(optimes::runtime::ModelKind::Gc, 5).expect("engine");
@@ -75,40 +143,52 @@ fn main() {
     let dims = geom.dims();
     let mut sampler = Sampler::new(dims, 1, 0);
     let targets: Vec<u32> = sub.train_local.iter().copied().take(dims.batch).collect();
-    bench("sampler: sample_batch (B=32, K=5, L=3)", 100, || {
+    res.bench("sampler: sample_batch (B=32, K=5, L=3)", 100, || {
         let _ = sampler.sample_batch(sub, &targets);
     });
 
     let adj = static_adj(&dims, dims.batch, dims.layers);
     let blocks = sampler.sample_batch(sub, &targets);
     let cache = optimes::coordinator::EmbCache::new(geom.layers - 1, geom.hidden, sub.n_remote());
-    bench("trainer: assemble_batch (B=32)", 100, || {
+    let alloc_asm = res.bench("trainer: assemble_batch alloc (B=32)", 100, || {
         let _ = assemble_batch(&blocks, sub, &cache, &g, &adj, true);
     });
+    let mut scratch = BatchScratch::default();
+    let scratch_asm = res.bench("trainer: BatchScratch::assemble (B=32)", 100, || {
+        let _ = scratch.assemble(&blocks, sub, &cache, &g, &adj, true);
+    });
+    println!(
+        "assembly speedup scratch vs alloc: {:.2}x",
+        alloc_asm / scratch_asm.max(1e-12)
+    );
 
-    // embedding server batched RPCs
+    // embedding server batched RPCs (slab arena)
     let server = EmbeddingServer::new(2, geom.hidden, NetConfig::default());
     let nodes: Vec<u32> = (0..10_000u32).collect();
     let rows = vec![0.5f32; nodes.len() * geom.hidden];
-    bench("kv: push 10k x 2 layers", 10, || {
+    res.bench("kv: push 10k x 2 layers", 10, || {
         let _ = server.push(&nodes, &[rows.clone(), rows.clone()]);
     });
-    bench("kv: pull 10k x 2 layers", 10, || {
+    res.bench("kv: pull 10k x 2 layers (alloc)", 10, || {
         let _ = server.pull(&nodes, false);
+    });
+    let mut pull_buf = Vec::new();
+    res.bench("kv: pull_into 10k x 2 layers (reuse)", 10, || {
+        let _ = server.pull_into(&nodes, false, &mut pull_buf);
     });
 
     // engine step latency (the L1/L2 hot path through PJRT or Ref)
     let batch = assemble_batch(&blocks, sub, &cache, &g, &adj, true);
     let mut state = ModelState::init(&geom, 3);
     let eng: &Arc<dyn StepEngine> = &engine;
-    bench(
+    res.bench(
         &format!("engine({}): train_step B=32", harness::engine_kind()),
         20,
         || {
             let _ = eng.train_step(&mut state, &batch, 0.01).unwrap();
         },
     );
-    bench(
+    res.bench(
         &format!("engine({}): evaluate B=32", harness::engine_kind()),
         20,
         || {
@@ -116,5 +196,14 @@ fn main() {
         },
     );
 
+    harness::record_bench_section(
+        "micro_substrates",
+        res.to_json(&[
+            ("matmul_acc_speedup_vs_naive", acc_speedup),
+            ("matmul_at_b_speedup_vs_naive", naive_atb / tiled_atb.max(1e-12)),
+            ("matmul_b_wt_speedup_vs_naive", naive_bwt / tiled_bwt.max(1e-12)),
+            ("assemble_speedup_scratch_vs_alloc", alloc_asm / scratch_asm.max(1e-12)),
+        ]),
+    );
     println!("\n[micro_substrates] done in {:.1}s", t0.elapsed().as_secs_f64());
 }

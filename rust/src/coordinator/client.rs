@@ -3,7 +3,8 @@
 
 use std::sync::Arc;
 
-use crate::graph::sampler::{static_adj, Sampler};
+use super::trainer::BatchScratch;
+use crate::graph::sampler::{static_adj, Sampler, SharedAdj};
 use crate::graph::{BlockDims, ClientSubgraph};
 use crate::runtime::{ModelState, StepEngine};
 use crate::util::rng::Rng;
@@ -96,9 +97,14 @@ pub struct Client {
     pub scores: Vec<f32>,
     /// Remote indices to prefetch at round start (top-x% by score), OPP.
     pub prefetch_rows: Vec<u32>,
-    /// Constant gather adjacency for train and embed geometries.
-    pub adj_train: Vec<Vec<i32>>,
-    pub adj_embed: Vec<Vec<i32>>,
+    /// Constant gather adjacency for train and embed geometries, shared
+    /// by refcount into every assembled batch.
+    pub adj_train: SharedAdj,
+    pub adj_embed: SharedAdj,
+    /// Reusable batch-assembly arena (zero-alloc steady state).
+    pub scratch: BatchScratch,
+    /// Reusable buffer for batched embedding pulls (`pull_into`).
+    pub pull_buf: Vec<Vec<f32>>,
     pub epoch_batches: usize,
     pub(crate) train_cursor: usize,
     pub(crate) train_order: Vec<u32>,
@@ -141,6 +147,8 @@ impl Client {
             prefetch_rows: Vec::new(),
             adj_train: static_adj(&dims, dims.batch, dims.layers),
             adj_embed: static_adj(&dims, dims.push_batch, dims.layers - 1),
+            scratch: BatchScratch::default(),
+            pull_buf: Vec::new(),
             epoch_batches,
             train_cursor: 0,
             train_order,

@@ -1,15 +1,24 @@
-//! The embedding server: a sharded in-memory KV store holding the
+//! The embedding server: a sharded in-memory store holding the
 //! `h^1..h^{L-1}` embeddings of every cross-client (push/pull) vertex,
 //! with batched pipelined get/set RPCs (the paper implements this with
 //! Redis + pipelining; we build the store ourselves, DESIGN.md §3).
 //!
 //! One logical database per layer (paper §5.1 "separate database for each
 //! layer's embeddings to allow scoped updates"), each sharded across
-//! `SHARDS` RwLock'd hash maps keyed by global vertex id. Concurrent
-//! clients push/pull in parallel; every call is one *batched* RPC whose
-//! cost is accounted through the [`NetConfig`] model plus the measured
-//! in-memory service time (the small real-time jitter keeps the Fig 12c
-//! fit realistic rather than exactly R²=1).
+//! `SHARDS` RwLock'd **slab arenas**: rows live contiguously in one
+//! `Vec<f32>` per shard with a small id → slot index, instead of one heap
+//! `Box<[f32]>` per vertex. This removes the per-row allocation on push,
+//! keeps pulls streaming over contiguous memory, and lets [`pull_into`]
+//! write directly into a caller-provided buffer (zero-alloc steady state
+//! on both sides of the RPC). Batched calls take each shard lock once per
+//! layer rather than once per row.
+//!
+//! Every call is one *batched* RPC whose cost is accounted through the
+//! [`NetConfig`] model plus the measured in-memory service time (the small
+//! real-time jitter keeps the Fig 12c fit realistic rather than exactly
+//! R²=1).
+//!
+//! [`pull_into`]: EmbeddingServer::pull_into
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -20,26 +29,72 @@ use super::netsim::NetConfig;
 
 const SHARDS: usize = 16;
 
-/// Embedding rows for one layer, keyed by global vertex id.
+/// One shard of a layer's slab arena: a dense contiguous row store plus
+/// the id → slot index. Slots are append-only; overwrites reuse the slot.
+#[derive(Default)]
+struct SlabShard {
+    index: HashMap<u32, u32>,
+    rows: Vec<f32>,
+}
+
+impl SlabShard {
+    /// Insert or overwrite the row for `id` (`src.len()` = hidden dim).
+    fn upsert(&mut self, id: u32, src: &[f32]) {
+        let h = src.len();
+        let next = self.index.len() as u32;
+        let slot = *self.index.entry(id).or_insert(next) as usize;
+        let end = (slot + 1) * h;
+        if self.rows.len() < end {
+            self.rows.resize(end, 0.0);
+        }
+        self.rows[slot * h..end].copy_from_slice(src);
+    }
+
+    /// Row for `id`, if present.
+    fn row(&self, id: u32, h: usize) -> Option<&[f32]> {
+        self.index
+            .get(&id)
+            .map(|&s| &self.rows[s as usize * h..(s as usize + 1) * h])
+    }
+}
+
+/// Embedding rows for one layer, slab-sharded by global vertex id.
 struct LayerDb {
-    shards: Vec<RwLock<HashMap<u32, Box<[f32]>>>>,
+    shards: Vec<RwLock<SlabShard>>,
 }
 
 impl LayerDb {
     fn new() -> Self {
         Self {
-            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            shards: (0..SHARDS).map(|_| RwLock::new(SlabShard::default())).collect(),
         }
     }
 
-    #[inline]
-    fn shard(&self, key: u32) -> &RwLock<HashMap<u32, Box<[f32]>>> {
-        &self.shards[(key as usize) & (SHARDS - 1)]
-    }
-
     fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.read().unwrap().index.len()).sum()
     }
+}
+
+/// Bucket `nodes` by shard as `groups[shard] = [(position in the batched
+/// call, vertex id)]` and hand the buckets to `f`. The bucket buffers are
+/// thread-local and reused across RPCs, so the batched hot path stays
+/// allocation-free at steady state.
+fn with_shard_groups<R>(nodes: &[u32], f: impl FnOnce(&[Vec<(usize, u32)>]) -> R) -> R {
+    thread_local! {
+        static GROUPS: std::cell::RefCell<Vec<Vec<(usize, u32)>>> =
+            std::cell::RefCell::new(Vec::new());
+    }
+    GROUPS.with(|cell| {
+        let mut groups = cell.borrow_mut();
+        groups.resize_with(SHARDS, Vec::new);
+        for g in groups.iter_mut() {
+            g.clear();
+        }
+        for (i, &node) in nodes.iter().enumerate() {
+            groups[(node as usize) & (SHARDS - 1)].push((i, node));
+        }
+        f(&groups)
+    })
 }
 
 pub struct EmbeddingServer {
@@ -69,18 +124,25 @@ impl EmbeddingServer {
 
     /// Batched push: store `h^l` rows for `nodes` (one call for all
     /// layers, like a pipelined Redis MSET). `per_layer[l-1]` is row-major
-    /// `[nodes.len(), hidden]`.
+    /// `[nodes.len(), hidden]`. Each shard lock is taken once per layer.
     pub fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> RpcRecord {
         assert_eq!(per_layer.len(), self.layers.len());
         let t0 = std::time::Instant::now();
         let h = self.hidden;
-        for (db, rows) in self.layers.iter().zip(per_layer) {
-            assert_eq!(rows.len(), nodes.len() * h, "push rows shape");
-            for (i, &node) in nodes.iter().enumerate() {
-                let row: Box<[f32]> = rows[i * h..(i + 1) * h].into();
-                db.shard(node).write().unwrap().insert(node, row);
+        with_shard_groups(nodes, |groups| {
+            for (db, rows) in self.layers.iter().zip(per_layer) {
+                assert_eq!(rows.len(), nodes.len() * h, "push rows shape");
+                for (sid, group) in groups.iter().enumerate() {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    let mut shard = db.shards[sid].write().unwrap();
+                    for &(i, node) in group {
+                        shard.upsert(node, &rows[i * h..(i + 1) * h]);
+                    }
+                }
             }
-        }
+        });
         self.pushes.fetch_add(1, Ordering::Relaxed);
         let bytes = self.net.emb_bytes(nodes.len(), self.layers.len(), h);
         RpcRecord {
@@ -91,25 +153,39 @@ impl EmbeddingServer {
         }
     }
 
-    /// Batched pull of all layers for `nodes`. Returns `out[l-1]` row-major
-    /// `[nodes.len(), hidden]`; missing nodes yield zero rows (only
-    /// possible before their owner's first push).
-    pub fn pull(&self, nodes: &[u32], on_demand: bool) -> (Vec<Vec<f32>>, RpcRecord) {
+    /// Batched pull of all layers for `nodes`, written directly into the
+    /// caller-provided buffer: `out` is resized to one `[nodes.len(),
+    /// hidden]` row-major tensor per layer (reusing capacity), missing
+    /// nodes yield zero rows (only possible before their owner's first
+    /// push). This is the zero-alloc hot path; [`pull`] wraps it.
+    ///
+    /// [`pull`]: EmbeddingServer::pull
+    pub fn pull_into(&self, nodes: &[u32], on_demand: bool, out: &mut Vec<Vec<f32>>) -> RpcRecord {
         let t0 = std::time::Instant::now();
         let h = self.hidden;
-        let mut out = Vec::with_capacity(self.layers.len());
-        for db in &self.layers {
-            let mut rows = vec![0f32; nodes.len() * h];
-            for (i, &node) in nodes.iter().enumerate() {
-                if let Some(row) = db.shard(node).read().unwrap().get(&node) {
-                    rows[i * h..(i + 1) * h].copy_from_slice(row);
+        let n_layers = self.layers.len();
+        out.truncate(n_layers);
+        out.resize_with(n_layers, Vec::new);
+        with_shard_groups(nodes, |groups| {
+            for (db, rows) in self.layers.iter().zip(out.iter_mut()) {
+                rows.clear();
+                rows.resize(nodes.len() * h, 0.0);
+                for (sid, group) in groups.iter().enumerate() {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    let shard = db.shards[sid].read().unwrap();
+                    for &(i, node) in group {
+                        if let Some(src) = shard.row(node, h) {
+                            rows[i * h..(i + 1) * h].copy_from_slice(src);
+                        }
+                    }
                 }
             }
-            out.push(rows);
-        }
+        });
         self.pulls.fetch_add(1, Ordering::Relaxed);
-        let bytes = self.net.emb_bytes(nodes.len(), self.layers.len(), h);
-        let rec = RpcRecord {
+        let bytes = self.net.emb_bytes(nodes.len(), n_layers, h);
+        RpcRecord {
             kind: if on_demand {
                 RpcKind::PullOnDemand
             } else {
@@ -118,7 +194,13 @@ impl EmbeddingServer {
             rows: nodes.len(),
             bytes,
             time: self.net.time_for_bytes(bytes) + t0.elapsed().as_secs_f64(),
-        };
+        }
+    }
+
+    /// Allocating wrapper around [`EmbeddingServer::pull_into`].
+    pub fn pull(&self, nodes: &[u32], on_demand: bool) -> (Vec<Vec<f32>>, RpcRecord) {
+        let mut out = Vec::new();
+        let rec = self.pull_into(nodes, on_demand, &mut out);
         (out, rec)
     }
 
@@ -188,6 +270,30 @@ mod tests {
     }
 
     #[test]
+    fn pull_into_reuses_and_overwrites_caller_buffer() {
+        let s = server();
+        let nodes = [2u32, 18]; // same shard (16 apart) and distinct slots
+        s.push(&nodes, &[rows(&nodes, 4, 0.0), rows(&nodes, 4, 1.0)]);
+        // dirty, wrongly-sized buffer must be fully overwritten
+        let mut buf = vec![vec![9.9f32; 3], vec![9.9f32; 99], vec![1.0f32; 7]];
+        let rec = s.pull_into(&[18, 5, 2], false, &mut buf);
+        assert_eq!(rec.rows, 3);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf[0].len(), 3 * 4);
+        assert_eq!(&buf[0][0..4], &rows(&[18], 4, 0.0)[..]);
+        assert!(buf[0][4..8].iter().all(|&v| v == 0.0)); // node 5 missing
+        assert_eq!(&buf[0][8..12], &rows(&[2], 4, 0.0)[..]);
+        assert_eq!(&buf[1][0..4], &rows(&[18], 4, 1.0)[..]);
+        // second pull reuses the buffer without reallocating
+        let cap = (buf[0].capacity(), buf[1].capacity());
+        s.pull_into(&[2], false, &mut buf);
+        assert_eq!(buf[0].len(), 4);
+        assert!(buf[0].capacity() <= cap.0.max(4) && buf[0].capacity() >= 4);
+        assert_eq!(&buf[0][0..4], &rows(&[2], 4, 0.0)[..]);
+        assert!(buf[1].capacity() >= 4 && buf[1].capacity() <= cap.1);
+    }
+
+    #[test]
     fn overwrite_updates_in_place() {
         let s = server();
         let nodes = [5u32];
@@ -197,6 +303,8 @@ mod tests {
         assert_eq!(got[0], vec![9.0; 4]);
         assert_eq!(got[1], vec![8.0; 4]);
         assert_eq!(s.stored_nodes(), 1);
+        // slot reuse: a re-push of the same node must not grow the slab
+        assert_eq!(s.stored_rows(), 2);
     }
 
     #[test]
@@ -234,5 +342,54 @@ mod tests {
         let (pulls, pushes) = s.rpc_counts();
         assert_eq!(pulls, 160);
         assert_eq!(pushes, 160);
+    }
+
+    #[test]
+    fn slab_store_survives_interleaved_push_pull_hammer() {
+        // Writers race on a SHARED node set with per-writer row values;
+        // readers assert every pulled row is internally consistent (all
+        // `hidden` lanes agree), i.e. rows are never torn even while the
+        // slab grows and slots are being overwritten.
+        let h = 8;
+        let s = Arc::new(EmbeddingServer::new(2, h, NetConfig::default()));
+        let nodes: Vec<u32> = (0..128).collect();
+        let mut handles = Vec::new();
+        for w in 0..6u32 {
+            let s = Arc::clone(&s);
+            let nodes = nodes.clone();
+            handles.push(std::thread::spawn(move || {
+                for iter in 0..30 {
+                    let v = (w * 1000 + iter) as f32;
+                    let layer: Vec<f32> = vec![v; nodes.len() * h];
+                    s.push(&nodes, &[layer.clone(), layer]);
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let s = Arc::clone(&s);
+            let nodes = nodes.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut buf = Vec::new();
+                for _ in 0..60 {
+                    s.pull_into(&nodes, false, &mut buf);
+                    for layer in &buf {
+                        for row in layer.chunks_exact(h) {
+                            assert!(
+                                row.iter().all(|&x| x == row[0]),
+                                "torn row: {row:?}"
+                            );
+                        }
+                    }
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(s.stored_nodes(), 128);
+        assert_eq!(s.stored_rows(), 256);
+        let (pulls, pushes) = s.rpc_counts();
+        assert_eq!(pulls, 240);
+        assert_eq!(pushes, 180);
     }
 }

@@ -45,6 +45,34 @@ impl PhaseTimes {
     }
 }
 
+/// Embedding-cache lookup accounting over one scope (an epoch's batch
+/// assemblies, a push pass, a whole round). A *miss* is a remote row whose
+/// cached embedding was absent at batch-assembly time and therefore
+/// contributed a silent zero embedding — previously invisible accuracy
+/// loss, now observable as a staleness/miss rate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Remote rows whose cached embedding was needed.
+    pub lookups: usize,
+    /// Of those, rows that were absent and substituted with zeros.
+    pub misses: usize,
+}
+
+impl CacheStats {
+    pub fn add(&mut self, other: CacheStats) {
+        self.lookups += other.lookups;
+        self.misses += other.misses;
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.lookups as f64
+        }
+    }
+}
+
 /// One client's contribution to a round.
 #[derive(Clone, Debug, Default)]
 pub struct ClientRoundMetrics {
@@ -53,6 +81,9 @@ pub struct ClientRoundMetrics {
     pub rpcs: Vec<RpcRecord>,
     pub embeddings_pulled: usize,
     pub embeddings_pushed: usize,
+    /// Remote-embedding cache lookups/misses across the round's batch
+    /// assemblies (training epochs + push-embed computation).
+    pub cache: CacheStats,
     pub train_loss: f32,
 }
 
@@ -146,6 +177,17 @@ impl SessionMetrics {
         None
     }
 
+    /// Aggregate remote-embedding cache stats across every client round.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for r in &self.rounds {
+            for c in &r.clients {
+                total.add(c.cache);
+            }
+        }
+        total
+    }
+
     /// All RPC records of a kind across the session (Fig 12 violins).
     pub fn rpcs(&self, kind: RpcKind) -> Vec<RpcRecord> {
         self.rounds
@@ -172,6 +214,10 @@ impl SessionMetrics {
         o.set("server_embeddings", self.server_embeddings);
         o.set("pull_candidates", self.pull_candidates);
         o.set("retained_remotes", self.retained_remotes);
+        let cs = self.cache_stats();
+        o.set("cache_lookups", cs.lookups);
+        o.set("cache_misses", cs.misses);
+        o.set("cache_miss_rate", cs.miss_rate());
         o.set("accuracies", self.accuracies());
         o.set(
             "round_times",

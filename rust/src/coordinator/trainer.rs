@@ -1,6 +1,12 @@
 //! The client-side round lifecycle: pull phase, ε training epochs (with
 //! OPP on-demand pulls), and the push phase — optionally overlapped with
 //! the final epoch (paper §3.2.2, §4.2, §4.3).
+//!
+//! Batch assembly goes through a reusable per-client [`BatchScratch`]
+//! arena: after the first minibatch, assembly performs no heap allocation
+//! (buffers are resized in place) and the geometry-constant adjacency is
+//! shared by refcount ([`SharedAdj`]) instead of deep-cloned (DESIGN.md
+//! §3, EXPERIMENTS.md §Perf).
 
 use std::sync::Arc;
 
@@ -8,9 +14,9 @@ use anyhow::{ensure, Result};
 
 use super::client::{Client, EmbCache};
 use super::embedding_server::EmbeddingServer;
-use super::metrics::{ClientRoundMetrics, RpcRecord};
+use super::metrics::{CacheStats, ClientRoundMetrics, RpcRecord};
 use super::strategy::Strategy;
-use crate::graph::sampler::{Blocks, Sampler};
+use crate::graph::sampler::{Blocks, Sampler, SharedAdj};
 use crate::graph::{ClientSubgraph, Graph};
 use crate::runtime::{Batch, ModelState, StepEngine};
 use crate::util::Stopwatch;
@@ -27,68 +33,126 @@ pub struct RoundOutcome {
     pub overlapped: bool,
 }
 
-/// Assemble a `Batch` from sampled blocks + the client's cache. Remote
-/// rows absent from the cache contribute zero embeddings (only possible
-/// for OPP pre-pull misses, which are pulled on demand before assembly,
-/// or for push-embed computation with stale/missing entries).
+/// Reusable batch-assembly arena. Owns one [`Batch`] whose buffers are
+/// resized in place on every [`assemble`](BatchScratch::assemble) call, so
+/// the per-minibatch hot path allocates nothing once the buffers have
+/// grown to the geometry's steady-state sizes.
+///
+/// Remote rows absent from the cache contribute zero embeddings (only
+/// possible for OPP pre-pull misses, which are pulled on demand before
+/// assembly, or for push-embed computation with stale/missing entries);
+/// each assembly counts them into `last_lookups`/`last_misses` so the
+/// round metrics can surface the miss rate instead of silently losing
+/// accuracy.
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    batch: Batch,
+    /// Remote-cache lookups performed by the most recent `assemble`.
+    pub last_lookups: usize,
+    /// Of those, rows that were missing (zero-filled).
+    pub last_misses: usize,
+}
+
+impl BatchScratch {
+    /// Cache stats of the most recent `assemble`.
+    pub fn last_stats(&self) -> CacheStats {
+        CacheStats {
+            lookups: self.last_lookups,
+            misses: self.last_misses,
+        }
+    }
+
+    /// Assemble a [`Batch`] from sampled blocks + the client's cache into
+    /// the internal arena, reusing every buffer. The returned reference is
+    /// valid until the next `assemble` call.
+    pub fn assemble(
+        &mut self,
+        blocks: &Blocks,
+        sub: &ClientSubgraph,
+        cache: &EmbCache,
+        g: &Graph,
+        adj: &SharedAdj,
+        with_labels: bool,
+    ) -> &Batch {
+        let dims = blocks.dims;
+        let depth = blocks.depth;
+        let b = &mut self.batch;
+        b.depth = depth;
+        b.width = blocks.width;
+        if !Arc::ptr_eq(&b.adj, adj) {
+            b.adj = Arc::clone(adj);
+        }
+        b.msk.clone_from(&blocks.msk);
+
+        let s_deep = blocks.levels[depth].len();
+        b.x.resize(s_deep * dims.feat, 0.0);
+        blocks.fill_x(sub, g, &mut b.x);
+
+        let n_sub = depth.min(dims.layers) - 1;
+        resize_nested(&mut b.rmask, n_sub);
+        resize_nested(&mut b.cache, n_sub);
+        let mut lookups = 0usize;
+        let mut misses = 0usize;
+        for l in 1..=n_sub {
+            let lvl = depth - l;
+            let s = blocks.levels[lvl].len();
+            let rm = &mut b.rmask[l - 1];
+            rm.resize(s, 0.0);
+            blocks.fill_rmask(lvl, rm);
+            let ct = &mut b.cache[l - 1];
+            ct.clear();
+            ct.resize(s * dims.hidden, 0.0);
+            for (row, ridx) in blocks.remote_rows(lvl) {
+                lookups += 1;
+                if cache.is_present(ridx) {
+                    ct[row * dims.hidden..(row + 1) * dims.hidden]
+                        .copy_from_slice(cache.row(l, ridx));
+                } else {
+                    misses += 1;
+                }
+            }
+        }
+
+        if with_labels {
+            b.labels.resize(blocks.width, 0);
+            b.lmask.resize(blocks.width, 0.0);
+            blocks.fill_labels(sub, g, &mut b.labels, &mut b.lmask);
+        } else {
+            b.labels.clear();
+            b.lmask.clear();
+        }
+        self.last_lookups = lookups;
+        self.last_misses = misses;
+        &self.batch
+    }
+}
+
+/// Truncate/grow a nested buffer list without dropping inner capacity.
+fn resize_nested<T>(v: &mut Vec<Vec<T>>, n: usize) {
+    v.truncate(n);
+    while v.len() < n {
+        v.push(Vec::new());
+    }
+}
+
+/// Allocating convenience wrapper over [`BatchScratch::assemble`] for
+/// callers outside the hot loop (benches, tests, one-off assemblies).
 pub fn assemble_batch(
     blocks: &Blocks,
     sub: &ClientSubgraph,
     cache: &EmbCache,
     g: &Graph,
-    adj: &[Vec<i32>],
+    adj: &SharedAdj,
     with_labels: bool,
 ) -> Batch {
-    let dims = blocks.dims;
-    let depth = blocks.depth;
-    let s_deep = blocks.levels[depth].len();
-    let mut x = vec![0f32; s_deep * dims.feat];
-    blocks.fill_x(sub, g, &mut x);
-
-    let n_sub = depth.min(dims.layers) - 1;
-    let mut rmask = Vec::with_capacity(n_sub);
-    let mut cache_t = Vec::with_capacity(n_sub);
-    for l in 1..=n_sub {
-        let lvl = depth - l;
-        let s = blocks.levels[lvl].len();
-        let mut rm = vec![0f32; s];
-        blocks.fill_rmask(lvl, &mut rm);
-        let mut ct = vec![0f32; s * dims.hidden];
-        for (row, ridx) in blocks.remote_rows(lvl) {
-            if cache.is_present(ridx) {
-                ct[row * dims.hidden..(row + 1) * dims.hidden]
-                    .copy_from_slice(cache.row(l, ridx));
-            }
-        }
-        rmask.push(rm);
-        cache_t.push(ct);
-    }
-
-    let (labels, lmask) = if with_labels {
-        let mut labels = vec![0i32; blocks.width];
-        let mut lmask = vec![0f32; blocks.width];
-        blocks.fill_labels(sub, g, &mut labels, &mut lmask);
-        (labels, lmask)
-    } else {
-        (Vec::new(), Vec::new())
-    };
-
-    Batch {
-        depth,
-        width: blocks.width,
-        x,
-        adj: adj.to_vec(),
-        msk: blocks.msk.clone(),
-        rmask,
-        cache: cache_t,
-        labels,
-        lmask,
-    }
+    let mut scratch = BatchScratch::default();
+    scratch.assemble(blocks, sub, cache, g, adj, with_labels).clone()
 }
 
 /// Compute h^1..h^{L-1} for the client's push nodes and push them to the
 /// embedding server in one batched RPC. Returns (embed-compute seconds,
-/// push RPC record). `local_only` selects the pre-training sampling mode.
+/// push RPC record, cache stats over the embed assemblies). `local_only`
+/// selects the pre-training sampling mode.
 #[allow(clippy::too_many_arguments)]
 pub fn compute_and_push(
     sub: &ClientSubgraph,
@@ -97,19 +161,21 @@ pub fn compute_and_push(
     engine: &Arc<dyn StepEngine>,
     server: &EmbeddingServer,
     sampler: &mut Sampler,
-    adj_embed: &[Vec<i32>],
+    adj_embed: &SharedAdj,
     push_local: &[u32],
     push_globals: &[u32],
     g: &Graph,
     local_only: bool,
-) -> Result<(f64, Option<RpcRecord>)> {
+) -> Result<(f64, Option<RpcRecord>, CacheStats)> {
     if push_local.is_empty() {
-        return Ok((0.0, None));
+        return Ok((0.0, None, CacheStats::default()));
     }
     let dims = sampler.dims;
     let h = dims.hidden;
     let n_layers = dims.layers - 1;
     let sw = Stopwatch::start();
+    let mut scratch = BatchScratch::default();
+    let mut stats = CacheStats::default();
     let mut per_layer: Vec<Vec<f32>> = (0..n_layers)
         .map(|_| Vec::with_capacity(push_local.len() * h))
         .collect();
@@ -119,8 +185,9 @@ pub fn compute_and_push(
         } else {
             sampler.sample_embed(sub, chunk)
         };
-        let batch = assemble_batch(&blocks, sub, cache, g, adj_embed, false);
-        let outs = engine.embed(state, &batch)?;
+        let batch = scratch.assemble(&blocks, sub, cache, g, adj_embed, false);
+        let outs = engine.embed(state, batch)?;
+        stats.add(scratch.last_stats());
         ensure!(outs.len() == n_layers, "embed returned {} layers", outs.len());
         for (l, rows) in outs.iter().enumerate() {
             per_layer[l].extend_from_slice(&rows[..chunk.len() * h]);
@@ -128,7 +195,7 @@ pub fn compute_and_push(
     }
     let compute = sw.secs();
     let rec = server.push(push_globals, &per_layer);
-    Ok((compute, Some(rec)))
+    Ok((compute, Some(rec), stats))
 }
 
 /// Pre-training round (paper §3.2.1): embeddings for every push node are
@@ -140,7 +207,7 @@ pub fn pretrain_push(
     engine: &Arc<dyn StepEngine>,
     server: &EmbeddingServer,
 ) -> Result<()> {
-    let (_, _rec) = compute_and_push(
+    let (_, _rec, _stats) = compute_and_push(
         &client.sub,
         &client.cache,
         &client.state,
@@ -209,8 +276,8 @@ pub fn run_round_stale(
         };
         if !rows.is_empty() {
             let globals: Vec<u32> = rows.iter().map(|&r| client.sub.remote[r as usize]).collect();
-            let (per_layer, rec) = server.pull(&globals, false);
-            client.cache.insert(&rows, &per_layer);
+            let rec = server.pull_into(&globals, false, &mut client.pull_buf);
+            client.cache.insert(&rows, &client.pull_buf);
             out.metrics.phases.pull += rec.time;
             out.metrics.embeddings_pulled += rec.rows;
             out.metrics.rpcs.push(rec);
@@ -229,7 +296,7 @@ pub fn run_round_stale(
     // ---- epochs (push of the ε-k state overlaps the last k epochs) ------
     let mut loss_acc = 0f64;
     let mut loss_n = 0usize;
-    let mut push_result: Option<(f64, Option<RpcRecord>)> = None;
+    let mut push_result: Option<(f64, Option<RpcRecord>, CacheStats)> = None;
     let do_overlap = out.overlapped && sharing && !client.push_local.is_empty();
     // epoch index at which the push snapshot is taken / thread launched
     let overlap_at = epochs.saturating_sub(stale);
@@ -242,6 +309,8 @@ pub fn run_round_stale(
             cache,
             state,
             adj_train,
+            scratch,
+            pull_buf,
             ..
         } = client;
         let mut ctx = EpochCtx {
@@ -250,6 +319,8 @@ pub fn run_round_stale(
             cache,
             state,
             adj_train,
+            scratch,
+            pull_buf,
         };
         let (el, et) = run_epoch(&mut ctx, g, strategy, engine, server, targets, lr, &mut out)?;
         loss_acc += el;
@@ -276,6 +347,8 @@ pub fn run_round_stale(
             cache,
             state,
             adj_train,
+            scratch,
+            pull_buf,
             ..
         } = client;
         let mut ctx = EpochCtx {
@@ -284,6 +357,8 @@ pub fn run_round_stale(
             cache,
             state,
             adj_train,
+            scratch,
+            pull_buf,
         };
         let sub_ref: &ClientSubgraph = ctx.sub;
         let (epoch_res, push_res) = std::thread::scope(|s| {
@@ -339,9 +414,10 @@ pub fn run_round_stale(
         )?);
     }
 
-    if let Some((compute, rec)) = push_result {
+    if let Some((compute, rec, push_stats)) = push_result {
         let comm = rec.as_ref().map(|r| r.time).unwrap_or(0.0);
         out.push_total = compute + comm;
+        out.metrics.cache.add(push_stats);
         if let Some(r) = rec {
             out.metrics.embeddings_pushed += r.rows;
             out.metrics.rpcs.push(r);
@@ -378,7 +454,9 @@ struct EpochCtx<'a> {
     sampler: &'a mut Sampler,
     cache: &'a mut EmbCache,
     state: &'a mut ModelState,
-    adj_train: &'a [Vec<i32>],
+    adj_train: &'a SharedAdj,
+    scratch: &'a mut BatchScratch,
+    pull_buf: &'a mut Vec<Vec<f32>>,
 }
 
 /// One local epoch. Returns (summed batch loss, measured epoch seconds).
@@ -410,8 +488,8 @@ fn run_epoch(
                     .iter()
                     .map(|&r| ctx.sub.remote[r as usize])
                     .collect();
-                let (per_layer, rec) = server.pull(&globals, true);
-                ctx.cache.insert(&missing, &per_layer);
+                let rec = server.pull_into(&globals, true, ctx.pull_buf);
+                ctx.cache.insert(&missing, &*ctx.pull_buf);
                 out.metrics.phases.dyn_pull += rec.time;
                 out.metrics.embeddings_pulled += rec.rows;
                 out.metrics.rpcs.push(rec);
@@ -422,8 +500,12 @@ fn run_epoch(
                 "non-prefetch strategy must have pulled everything"
             );
         }
-        let batch = assemble_batch(&blocks, ctx.sub, ctx.cache, g, ctx.adj_train, true);
-        let stats = engine.train_step(ctx.state, &batch, lr)?;
+        let batch = ctx
+            .scratch
+            .assemble(&blocks, ctx.sub, ctx.cache, g, ctx.adj_train, true);
+        let stats = engine.train_step(ctx.state, batch, lr)?;
+        out.metrics.cache.lookups += ctx.scratch.last_lookups;
+        out.metrics.cache.misses += ctx.scratch.last_misses;
         loss += stats.loss as f64;
     }
     Ok((loss, sw.secs()))
@@ -499,6 +581,9 @@ mod tests {
         assert!(!out.overlapped);
         assert_eq!(out.metrics.phases.push, out.push_total);
         assert_eq!(c.cache.present_count(), c.sub.n_remote());
+        // E pulls everything up front: training assemblies never miss
+        // (push-embed assemblies may see zero lookups or hits only).
+        assert_eq!(out.metrics.cache.misses, 0);
     }
 
     #[test]
@@ -543,6 +628,63 @@ mod tests {
         assert!(dyn_calls <= 2 * 3, "dyn_calls={dyn_calls}");
         // every remote the round used is now cached
         assert!(c.cache.present_count() >= prefetch_n);
+        // OPP pulls used remotes on demand pre-assembly: training batches
+        // never assemble with a missing row
+        assert_eq!(out.metrics.cache.misses, 0);
+        assert!(out.metrics.cache.lookups > 0 || c.sub.n_remote() == 0);
+    }
+
+    #[test]
+    fn misses_are_counted_when_cache_is_cold() {
+        // Assemble directly against an empty cache: every remote row in
+        // the blocks must be counted as a miss (the silent zero-fill is
+        // now observable).
+        let (g, clients, _eng, _server) = setup(&Prune::None);
+        let c = clients
+            .iter()
+            .max_by_key(|c| c.sub.n_remote())
+            .expect("clients");
+        let mut sampler = Sampler::new(c.dims, 77, 0);
+        let targets: Vec<u32> = c.sub.train_local.iter().copied().take(c.dims.batch).collect();
+        if targets.is_empty() {
+            return;
+        }
+        let mut scratch = BatchScratch::default();
+        let mut total_remote = 0;
+        for _ in 0..8 {
+            let blocks = sampler.sample_batch(&c.sub, &targets);
+            let n_remote: usize = (1..c.dims.layers)
+                .map(|l| blocks.remote_rows(blocks.depth - l).count())
+                .sum();
+            total_remote += n_remote;
+            scratch.assemble(&blocks, &c.sub, &c.cache, &g, &c.adj_train, true);
+            assert_eq!(scratch.last_lookups, n_remote);
+            assert_eq!(scratch.last_misses, n_remote);
+        }
+        assert!(total_remote > 0, "test graph sampled no remotes");
+    }
+
+    #[test]
+    fn scratch_assembly_matches_allocating_assembly() {
+        let (g, clients, _eng, _server) = setup(&Prune::None);
+        let c = &clients[0];
+        let mut sampler = Sampler::new(c.dims, 9, 1);
+        let targets: Vec<u32> = c.sub.train_local.iter().copied().take(c.dims.batch).collect();
+        let mut scratch = BatchScratch::default();
+        for i in 0..5 {
+            let blocks = sampler.sample_batch(&c.sub, &targets);
+            let fresh = assemble_batch(&blocks, &c.sub, &c.cache, &g, &c.adj_train, i % 2 == 0);
+            let reused = scratch.assemble(&blocks, &c.sub, &c.cache, &g, &c.adj_train, i % 2 == 0);
+            assert_eq!(fresh.depth, reused.depth);
+            assert_eq!(fresh.width, reused.width);
+            assert_eq!(fresh.x, reused.x);
+            assert!(Arc::ptr_eq(&fresh.adj, &reused.adj));
+            assert_eq!(fresh.msk, reused.msk);
+            assert_eq!(fresh.rmask, reused.rmask);
+            assert_eq!(fresh.cache, reused.cache);
+            assert_eq!(fresh.labels, reused.labels);
+            assert_eq!(fresh.lmask, reused.lmask);
+        }
     }
 
     #[test]

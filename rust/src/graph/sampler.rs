@@ -69,16 +69,22 @@ pub struct Blocks {
     pub msk: Vec<Vec<f32>>,
 }
 
+/// Shared, geometry-constant gather adjacency: computed once per client
+/// geometry and refcounted into every `Batch` (sampler → trainer → engine)
+/// instead of being deep-cloned per minibatch (EXPERIMENTS.md §Perf).
+pub type SharedAdj = std::sync::Arc<[Vec<i32>]>;
+
 /// The constant gather adjacency for a geometry: `adj[d][i*K + j] =
 /// s_d + i*K + j` (child rows follow the parent level's prefix copy).
-pub fn static_adj(dims: &BlockDims, width: usize, depth: usize) -> Vec<Vec<i32>> {
+pub fn static_adj(dims: &BlockDims, width: usize, depth: usize) -> SharedAdj {
     let k = dims.fanout;
     (0..depth)
         .map(|d| {
             let s_d = dims.level_size_for(width, d);
             (0..s_d * k).map(|e| (s_d + e) as i32).collect()
         })
-        .collect()
+        .collect::<Vec<Vec<i32>>>()
+        .into()
 }
 
 pub struct Sampler {

@@ -24,6 +24,44 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
 }
 
+/// Repo-root perf trajectory file (EXPERIMENTS.md §Perf).
+pub fn bench_json_path() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_micro.json"))
+}
+
+/// Merge one bench's section into `BENCH_micro.json`, preserving the
+/// other sections so `micro_substrates` and `bench_roundtime` can each
+/// record their numbers independently.
+pub fn record_bench_section(section: &str, payload: crate::util::json::JsonObj) {
+    use crate::util::json::{Json, JsonObj};
+    let path = bench_json_path();
+    let existing = std::fs::read_to_string(&path).ok();
+    let parsed = existing
+        .as_deref()
+        .and_then(|t| Json::parse(t).ok())
+        .and_then(|j| j.as_obj().cloned());
+    if let (Some(text), None) = (&existing, &parsed) {
+        if !text.trim().is_empty() {
+            eprintln!(
+                "warning: {} exists but is not a JSON object; its previous \
+                 sections will be replaced",
+                path.display()
+            );
+        }
+    }
+    let mut root = parsed.unwrap_or_default();
+    let mut meta = JsonObj::new();
+    meta.set(
+        "regenerate",
+        "cargo bench --bench micro_substrates && cargo bench --bench bench_roundtime",
+    );
+    root.set("_meta", meta);
+    root.set(section, payload);
+    if let Err(e) = std::fs::write(&path, Json::Obj(root).to_string_pretty()) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+}
+
 pub fn reports_dir() -> std::path::PathBuf {
     let d = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/reports"));
     let _ = std::fs::create_dir_all(&d);

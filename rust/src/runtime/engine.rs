@@ -11,6 +11,7 @@
 use anyhow::Result;
 
 use super::manifest::ModelGeom;
+use crate::graph::sampler::SharedAdj;
 use crate::util::rng::Rng;
 
 /// Model parameters + Adam optimizer state, flat canonical order.
@@ -85,8 +86,9 @@ pub struct Batch {
     pub width: usize,
     /// `[s_depth, F]` features (deepest level).
     pub x: Vec<f32>,
-    /// `adj[d]` is `[s_d, K]` i32 into level d+1.
-    pub adj: Vec<Vec<i32>>,
+    /// `adj[d]` is `[s_d, K]` i32 into level d+1. Geometry-constant, so it
+    /// is shared (refcounted) across every minibatch rather than cloned.
+    pub adj: SharedAdj,
     /// `msk[d]` is `[s_d, K]`.
     pub msk: Vec<Vec<f32>>,
     /// `rmask[l-1]` is `[s_{depth-l}]` for hidden layer l.
@@ -96,6 +98,22 @@ pub struct Batch {
     /// `[width]`; empty for embed batches.
     pub labels: Vec<i32>,
     pub lmask: Vec<f32>,
+}
+
+impl Default for Batch {
+    fn default() -> Self {
+        Self {
+            depth: 0,
+            width: 0,
+            x: Vec::new(),
+            adj: Vec::<Vec<i32>>::new().into(),
+            msk: Vec::new(),
+            rmask: Vec::new(),
+            cache: Vec::new(),
+            labels: Vec::new(),
+            lmask: Vec::new(),
+        }
+    }
 }
 
 /// Scalar results of a train/eval step.

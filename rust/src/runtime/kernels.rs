@@ -1,0 +1,527 @@
+//! Register-blocked, cache-tiled, thread-parallel matmul kernels for the
+//! reference engine's hot path (DESIGN.md §3).
+//!
+//! Three primitives, matching the analytic forward/backward of
+//! [`super::refengine`]:
+//!
+//! * [`matmul_acc`]  — `out[n,do] += a[n,di] @ w[di,do]` (forward transform)
+//! * [`matmul_at_b`] — `gw[di,do] += a[n,di]^T @ g[n,do]` (weight grads)
+//! * [`matmul_b_wt`] — `out[n,di] += g[n,do] @ w[di,do]^T` (input grads)
+//!
+//! Design:
+//! * **Register blocking.** Inner loops are unrolled 8-wide (axpy) or use
+//!   4 independent accumulators (dot) so LLVM vectorizes without
+//!   fast-math. `matmul_acc` additionally processes row *pairs* so each
+//!   streamed `w` row is used twice per load.
+//! * **Cache tiling.** Reductions are blocked (`KB`/`RB`) so the streamed
+//!   operand stays L1/L2-resident across a tile instead of being re-read
+//!   from memory per output row.
+//! * **Row-tile parallelism.** Output rows are partitioned into disjoint
+//!   tiles dispatched on the shared [`crate::util::pool`] ThreadPool once
+//!   the multiply-accumulate count crosses [`par_min_macs`]. Tiles write
+//!   disjoint output ranges, so results are bitwise-identical to the
+//!   serial path regardless of thread count.
+//!
+//! Reduction order is preserved for `matmul_acc` / `matmul_at_b` (bitwise
+//! vs the oracle); `matmul_b_wt` uses a 4-accumulator dot, so it agrees
+//! within f32 reassociation error (property-tested to 1e-5 relative).
+//!
+//! The pre-tiling scalar loops are kept verbatim in [`naive`] as the
+//! correctness oracle for property tests and the A/B micro-bench, and can
+//! be forced at runtime ([`set_force_naive`] or `OPTIMES_NAIVE_KERNELS=1`)
+//! so `benches/bench_roundtime.rs` can measure end-to-end speedup.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::pool::{self, SendPtr};
+
+/// Reduction-dimension block for `matmul_acc`: bounds the slice of `w`
+/// streamed per pass so it stays cache-hot across a row pair.
+const KB: usize = 64;
+/// Row block for `matmul_at_b`: bounds the slice of `g` re-read per
+/// output row so it stays L2-resident.
+const RB: usize = 64;
+/// Default minimum multiply-accumulate count before tiles are dispatched
+/// to the thread pool (below this, spawn/steal overhead dominates).
+const DEFAULT_PAR_MIN_MACS: usize = 1 << 20;
+
+static PAR_MIN_MACS: AtomicUsize = AtomicUsize::new(DEFAULT_PAR_MIN_MACS);
+/// 0 = unset (defer to `OPTIMES_NAIVE_KERNELS`), 1 = naive, 2 = tiled.
+static FORCE_NAIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// Current parallel-dispatch threshold in multiply-accumulates.
+pub fn par_min_macs() -> usize {
+    PAR_MIN_MACS.load(Ordering::Relaxed)
+}
+
+/// Override the parallel-dispatch threshold; returns the previous value.
+/// `0` forces every call through the pool (used by tests/benches to
+/// exercise the parallel path on small shapes).
+pub fn set_par_min_macs(v: usize) -> usize {
+    PAR_MIN_MACS.swap(v, Ordering::Relaxed)
+}
+
+/// Route all kernels through the scalar [`naive`] oracle (A/B benching).
+/// The explicit setter is authoritative: it overrides the
+/// `OPTIMES_NAIVE_KERNELS` env var in both directions, so A/B harnesses
+/// can't be silently poisoned by ambient environment.
+pub fn set_force_naive(on: bool) {
+    FORCE_NAIVE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+fn force_naive() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    match FORCE_NAIVE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            *ENV.get_or_init(|| {
+                std::env::var("OPTIMES_NAIVE_KERNELS")
+                    .map(|v| v != "0")
+                    .unwrap_or(false)
+            })
+        }
+    }
+}
+
+/// `y += s * x`, 8-wide unrolled. `x.len() == y.len()`.
+#[inline]
+fn axpy(s: f32, x: &[f32], y: &mut [f32]) {
+    let mut yc = y.chunks_exact_mut(8);
+    let mut xc = x.chunks_exact(8);
+    for (yy, xx) in (&mut yc).zip(&mut xc) {
+        yy[0] += s * xx[0];
+        yy[1] += s * xx[1];
+        yy[2] += s * xx[2];
+        yy[3] += s * xx[3];
+        yy[4] += s * xx[4];
+        yy[5] += s * xx[5];
+        yy[6] += s * xx[6];
+        yy[7] += s * xx[7];
+    }
+    for (yy, xx) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *yy += s * xx;
+    }
+}
+
+/// `y0 += s0 * x; y1 += s1 * x` — row-pair axpy sharing each load of `x`.
+#[inline]
+fn axpy2(s0: f32, s1: f32, x: &[f32], y0: &mut [f32], y1: &mut [f32]) {
+    let mut y0c = y0.chunks_exact_mut(4);
+    let mut y1c = y1.chunks_exact_mut(4);
+    let mut xc = x.chunks_exact(4);
+    while let ((Some(a), Some(b)), Some(xx)) =
+        (((&mut y0c).next(), (&mut y1c).next()), (&mut xc).next())
+    {
+        a[0] += s0 * xx[0];
+        a[1] += s0 * xx[1];
+        a[2] += s0 * xx[2];
+        a[3] += s0 * xx[3];
+        b[0] += s1 * xx[0];
+        b[1] += s1 * xx[1];
+        b[2] += s1 * xx[2];
+        b[3] += s1 * xx[3];
+    }
+    let y0r = y0c.into_remainder();
+    let y1r = y1c.into_remainder();
+    for (i, xx) in xc.remainder().iter().enumerate() {
+        y0r[i] += s0 * xx;
+        y1r[i] += s1 * xx;
+    }
+}
+
+/// 4-accumulator dot product (vectorizable; reassociates the reduction).
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let mut xc = x.chunks_exact(4);
+    let mut yc = y.chunks_exact(4);
+    let mut acc = [0f32; 4];
+    for (xx, yy) in (&mut xc).zip(&mut yc) {
+        acc[0] += xx[0] * yy[0];
+        acc[1] += xx[1] * yy[1];
+        acc[2] += xx[2] * yy[2];
+        acc[3] += xx[3] * yy[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (xx, yy) in xc.remainder().iter().zip(yc.remainder()) {
+        s += xx * yy;
+    }
+    s
+}
+
+/// Rows-per-tile for dispatching `n` rows across the shared pool.
+fn tile_rows(n: usize) -> usize {
+    let t = pool::global().threads().max(1);
+    // ~2 tiles per worker for load balance, at least 8 rows per tile
+    n.div_ceil(2 * t).max(8)
+}
+
+fn should_par(n: usize, macs: usize) -> bool {
+    macs >= par_min_macs().max(1) && n >= 2 && pool::global().threads() > 1
+}
+
+/// `out[r,:] += a[r,:] @ w` for row-major `a [n,di]`, `w [di,do]`.
+/// Bitwise-equal to [`naive::matmul_acc`] for any thread count.
+pub fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
+    assert!(
+        a.len() >= n * di && w.len() >= di * dout && out.len() >= n * dout,
+        "matmul_acc shape mismatch"
+    );
+    if force_naive() {
+        return naive::matmul_acc(a, w, out, n, di, dout);
+    }
+    if !should_par(n, n * di * dout) {
+        return acc_rows(&a[..n * di], w, &mut out[..n * dout], di, dout);
+    }
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let out_ptr = &out_ptr;
+    pool::global().run_chunks(n, tile_rows(n), move |r0, r1| {
+        // SAFETY: row ranges are disjoint across tiles.
+        let o =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * dout), (r1 - r0) * dout) };
+        acc_rows(&a[r0 * di..r1 * di], w, o, di, dout);
+    });
+}
+
+/// Serial row-pair + k-blocked body of [`matmul_acc`]. `a`/`out` are
+/// already sliced to the tile's rows.
+fn acc_rows(a: &[f32], w: &[f32], out: &mut [f32], di: usize, dout: usize) {
+    let n = if di == 0 { 0 } else { a.len() / di };
+    let mut r = 0;
+    while r + 2 <= n {
+        let a0 = &a[r * di..(r + 1) * di];
+        let a1 = &a[(r + 1) * di..(r + 2) * di];
+        let (o0, o1) = out[r * dout..(r + 2) * dout].split_at_mut(dout);
+        let mut k0 = 0;
+        while k0 < di {
+            let k1 = (k0 + KB).min(di);
+            for i in k0..k1 {
+                let (v0, v1) = (a0[i], a1[i]);
+                let wr = &w[i * dout..(i + 1) * dout];
+                if v0 != 0.0 && v1 != 0.0 {
+                    axpy2(v0, v1, wr, o0, o1);
+                } else if v0 != 0.0 {
+                    axpy(v0, wr, o0);
+                } else if v1 != 0.0 {
+                    axpy(v1, wr, o1);
+                }
+            }
+            k0 = k1;
+        }
+        r += 2;
+    }
+    if r < n {
+        let ar = &a[r * di..(r + 1) * di];
+        let or = &mut out[r * dout..(r + 1) * dout];
+        for (i, &av) in ar.iter().enumerate() {
+            if av != 0.0 {
+                axpy(av, &w[i * dout..(i + 1) * dout], or);
+            }
+        }
+    }
+}
+
+/// `gw += a^T g` for `a [n,di]`, `g [n,do]`. Parallel over `gw` rows
+/// (the `di` dimension); bitwise-equal to [`naive::matmul_at_b`].
+pub fn matmul_at_b(a: &[f32], g: &[f32], gw: &mut [f32], n: usize, di: usize, dout: usize) {
+    assert!(
+        a.len() >= n * di && g.len() >= n * dout && gw.len() >= di * dout,
+        "matmul_at_b shape mismatch"
+    );
+    if force_naive() {
+        return naive::matmul_at_b(a, g, gw, n, di, dout);
+    }
+    if !should_par(di, n * di * dout) {
+        return atb_rows(a, g, &mut gw[..di * dout], 0, n, di, dout);
+    }
+    let gw_ptr = SendPtr(gw.as_mut_ptr());
+    let gw_ptr = &gw_ptr;
+    pool::global().run_chunks(di, tile_rows(di), move |i0, i1| {
+        // SAFETY: gw row ranges are disjoint across tiles.
+        let rows =
+            unsafe { std::slice::from_raw_parts_mut(gw_ptr.0.add(i0 * dout), (i1 - i0) * dout) };
+        atb_rows(a, g, rows, i0, n, di, dout);
+    });
+}
+
+/// Body of [`matmul_at_b`] for `gw` rows `i0..i0 + rows.len()/dout`,
+/// r-blocked so the streamed `g` block stays cache-resident while every
+/// output row in the tile consumes it.
+fn atb_rows(a: &[f32], g: &[f32], rows: &mut [f32], i0: usize, n: usize, di: usize, dout: usize) {
+    let n_rows = if dout == 0 { 0 } else { rows.len() / dout };
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + RB).min(n);
+        for ri in 0..n_rows {
+            let i = i0 + ri;
+            let row = &mut rows[ri * dout..(ri + 1) * dout];
+            for r in r0..r1 {
+                let av = a[r * di + i];
+                if av != 0.0 {
+                    axpy(av, &g[r * dout..(r + 1) * dout], row);
+                }
+            }
+        }
+        r0 = r1;
+    }
+}
+
+/// `out[r,:] += g[r,:] @ w^T` for `g [n,do]`, `w [di,do]`. Parallel over
+/// output rows; the 4-accumulator dot reassociates the `do` reduction, so
+/// results match [`naive::matmul_b_wt`] to f32 rounding (not bitwise).
+pub fn matmul_b_wt(g: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
+    assert!(
+        g.len() >= n * dout && w.len() >= di * dout && out.len() >= n * di,
+        "matmul_b_wt shape mismatch"
+    );
+    if force_naive() {
+        return naive::matmul_b_wt(g, w, out, n, di, dout);
+    }
+    if !should_par(n, n * di * dout) {
+        return bwt_rows(&g[..n * dout], w, &mut out[..n * di], di, dout);
+    }
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let out_ptr = &out_ptr;
+    pool::global().run_chunks(n, tile_rows(n), move |r0, r1| {
+        // SAFETY: row ranges are disjoint across tiles.
+        let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(r0 * di), (r1 - r0) * di) };
+        bwt_rows(&g[r0 * dout..r1 * dout], w, o, di, dout);
+    });
+}
+
+/// Serial body of [`matmul_b_wt`]; `g`/`out` already sliced to the tile.
+fn bwt_rows(g: &[f32], w: &[f32], out: &mut [f32], di: usize, dout: usize) {
+    let n = if dout == 0 { 0 } else { g.len() / dout };
+    for r in 0..n {
+        let gr = &g[r * dout..(r + 1) * dout];
+        let or = &mut out[r * di..(r + 1) * di];
+        for (i, ov) in or.iter_mut().enumerate() {
+            *ov += dot(gr, &w[i * dout..(i + 1) * dout]);
+        }
+    }
+}
+
+/// The pre-tiling scalar kernels, kept verbatim from the seed engine as
+/// the correctness oracle for property tests and the A/B micro-bench.
+pub mod naive {
+    /// `out[r,:] += a[r,:] @ w` for row-major `a [n,di]`, `w [di,do]`.
+    pub fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
+        for r in 0..n {
+            let ar = &a[r * di..(r + 1) * di];
+            let or = &mut out[r * dout..(r + 1) * dout];
+            for (i, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let wr = &w[i * dout..(i + 1) * dout];
+                for (o, &wv) in or.iter_mut().zip(wr) {
+                    *o += av * wv;
+                }
+            }
+        }
+    }
+
+    /// `gw += a^T g` for `a [n,di]`, `g [n,do]`.
+    pub fn matmul_at_b(a: &[f32], g: &[f32], gw: &mut [f32], n: usize, di: usize, dout: usize) {
+        for r in 0..n {
+            let ar = &a[r * di..(r + 1) * di];
+            let gr = &g[r * dout..(r + 1) * dout];
+            for (i, &av) in ar.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let row = &mut gw[i * dout..(i + 1) * dout];
+                for (o, &gv) in row.iter_mut().zip(gr) {
+                    *o += av * gv;
+                }
+            }
+        }
+    }
+
+    /// `out[r,:] += g[r,:] @ w^T` for `g [n,do]`, `w [di,do]`.
+    pub fn matmul_b_wt(g: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
+        for r in 0..n {
+            let gr = &g[r * dout..(r + 1) * dout];
+            let or = &mut out[r * di..(r + 1) * di];
+            for i in 0..di {
+                let wr = &w[i * dout..(i + 1) * dout];
+                let mut acc = 0f32;
+                for (gv, wv) in gr.iter().zip(wr) {
+                    acc += gv * wv;
+                }
+                or[i] += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    /// One random case: shapes (odd ones included), inputs with planted
+    /// zeros (the kernels skip zero scalars), and a nonzero initial `out`
+    /// so the `+=` contract is covered.
+    #[derive(Debug)]
+    struct Case {
+        n: usize,
+        di: usize,
+        dout: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        out0: Vec<f32>,
+    }
+
+    fn gen_case(g: &mut crate::util::proptest::Gen<'_>, a_len: fn(&Case) -> usize) -> Case {
+        let n = g.int(1, 40);
+        let di = g.int(1, 45);
+        let dout = g.int(1, 37);
+        let mut c = Case {
+            n,
+            di,
+            dout,
+            a: Vec::new(),
+            b: Vec::new(),
+            out0: Vec::new(),
+        };
+        let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len)
+                .map(|_| {
+                    if rng.chance(0.15) {
+                        0.0
+                    } else {
+                        rng.normal() as f32
+                    }
+                })
+                .collect()
+        };
+        c.a = mk(g.rng, n * di.max(dout));
+        c.b = mk(g.rng, di * dout);
+        c.out0 = mk(g.rng, a_len(&c));
+        c
+    }
+
+    fn close(x: &[f32], y: &[f32], tol: f32) -> Result<(), String> {
+        for (i, (a, b)) in x.iter().zip(y).enumerate() {
+            let lim = tol * (1.0 + a.abs().max(b.abs()));
+            if (a - b).abs() > lim {
+                return Err(format!("elem {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn tiled_matmul_acc_matches_oracle() {
+        check(
+            "matmul_acc~oracle",
+            80,
+            |g| gen_case(g, |c| c.n * c.dout),
+            |c| {
+                let mut tiled = c.out0.clone();
+                let mut ref_out = c.out0.clone();
+                matmul_acc(&c.a, &c.b, &mut tiled, c.n, c.di, c.dout);
+                naive::matmul_acc(&c.a, &c.b, &mut ref_out, c.n, c.di, c.dout);
+                prop_assert!(tiled == ref_out, "acc not bitwise: {:?}", close(&tiled, &ref_out, 0.0));
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tiled_matmul_at_b_matches_oracle() {
+        check(
+            "matmul_at_b~oracle",
+            80,
+            |g| gen_case(g, |c| c.di * c.dout),
+            |c| {
+                let gmat: Vec<f32> = c.a.iter().map(|v| v * 0.5 + 0.1).collect();
+                let mut tiled = c.out0.clone();
+                let mut ref_out = c.out0.clone();
+                matmul_at_b(&c.a, &gmat, &mut tiled, c.n, c.di, c.dout);
+                naive::matmul_at_b(&c.a, &gmat, &mut ref_out, c.n, c.di, c.dout);
+                prop_assert!(tiled == ref_out, "at_b not bitwise: {:?}", close(&tiled, &ref_out, 0.0));
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tiled_matmul_b_wt_matches_oracle_within_tolerance() {
+        check(
+            "matmul_b_wt~oracle",
+            80,
+            |g| gen_case(g, |c| c.n * c.di),
+            |c| {
+                let mut tiled = c.out0.clone();
+                let mut ref_out = c.out0.clone();
+                matmul_b_wt(&c.a, &c.b, &mut tiled, c.n, c.di, c.dout);
+                naive::matmul_b_wt(&c.a, &c.b, &mut ref_out, c.n, c.di, c.dout);
+                if let Err(e) = close(&tiled, &ref_out, 1e-5) {
+                    return Err(format!("b_wt drift: {e}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_path_is_bitwise_equal_to_serial() {
+        // Force every call through the pool and compare against the
+        // serial tiled path on shapes too small to auto-parallelize.
+        let mut rng = Rng::new(0xD15BA7C4, 1);
+        for &(n, di, dout) in &[(63usize, 17usize, 9usize), (128, 33, 31), (200, 64, 48)] {
+            let a: Vec<f32> = (0..n * di.max(dout)).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..di * dout).map(|_| rng.normal() as f32).collect();
+
+            let run = |f: &dyn Fn(&mut [f32]), len: usize| -> (Vec<f32>, Vec<f32>) {
+                let mut serial = vec![0.1f32; len];
+                f(&mut serial);
+                let old = set_par_min_macs(0);
+                let mut par = vec![0.1f32; len];
+                f(&mut par);
+                set_par_min_macs(old);
+                (serial, par)
+            };
+
+            let (s, p) = run(&|o| matmul_acc(&a, &b, o, n, di, dout), n * dout);
+            assert_eq!(s, p, "acc parallel != serial ({n}x{di}x{dout})");
+            let (s, p) = run(&|o| matmul_at_b(&a, &a, o, n, di, dout), di * dout);
+            assert_eq!(s, p, "at_b parallel != serial ({n}x{di}x{dout})");
+            let (s, p) = run(&|o| matmul_b_wt(&a, &b, o, n, di, dout), n * di);
+            assert_eq!(s, p, "b_wt parallel != serial ({n}x{di}x{dout})");
+        }
+    }
+
+    #[test]
+    fn known_small_product() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let w = [5.0, 6.0, 7.0, 8.0];
+        let mut out = [0f32; 4];
+        matmul_acc(&a, &w, &mut out, 2, 2, 2);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+        // a^T @ w = [26 30; 38 44]
+        let mut gw = [0f32; 4];
+        matmul_at_b(&a, &w, &mut gw, 2, 2, 2);
+        assert_eq!(gw, [26.0, 30.0, 38.0, 44.0]);
+        // a @ w^T = [17 23; 39 53]
+        let mut bt = [0f32; 4];
+        matmul_b_wt(&a, &w, &mut bt, 2, 2, 2);
+        assert_eq!(bt, [17.0, 23.0, 39.0, 53.0]);
+    }
+
+    #[test]
+    fn accumulates_into_existing_output() {
+        let a = [1.0f32, 1.0];
+        let w = [2.0f32, 3.0];
+        let mut out = [10.0f32];
+        // 1x2 @ 2x1: 1*2 + 1*3 = 5, += onto 10
+        matmul_acc(&a, &w, &mut out, 1, 2, 1);
+        assert_eq!(out, [15.0]);
+    }
+}

@@ -1,11 +1,63 @@
 //! Runtime bridge: manifest-driven loading and execution of the AOT
-//! artifacts (PJRT), plus a pure-Rust reference engine for artifact-free
-//! tests and numerics cross-checks.
+//! artifacts (PJRT), plus a pure-Rust reference engine (with tiled
+//! parallel kernels) for artifact-free tests and numerics cross-checks.
 
 pub mod engine;
+pub mod kernels;
 pub mod manifest;
-pub mod pjrt;
 pub mod refengine;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+/// Stub when built without the `pjrt` feature (the offline registry may
+/// not carry the `xla` crate): keeps the public API shape so callers and
+/// tests compile; construction fails at runtime with a pointer to
+/// `OPTIMES_ENGINE=ref`.
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt {
+    use anyhow::{bail, Result};
+
+    use super::engine::{Batch, ModelState, StepEngine, StepStats};
+    use super::manifest::{Manifest, ModelGeom, ModelKind};
+
+    pub struct PjrtEngine {
+        geom: ModelGeom,
+    }
+
+    impl PjrtEngine {
+        pub fn start(_manifest: &Manifest, _model: ModelKind, _fanout: usize) -> Result<Self> {
+            bail!(
+                "optimes was built without the `pjrt` feature; set \
+                 OPTIMES_ENGINE=ref or rebuild with `--features pjrt` \
+                 (requires the vendored `xla` crate, see rust/Cargo.toml)"
+            )
+        }
+    }
+
+    impl StepEngine for PjrtEngine {
+        fn geom(&self) -> &ModelGeom {
+            &self.geom
+        }
+
+        fn train_step(&self, _s: &mut ModelState, _b: &Batch, _lr: f32) -> Result<StepStats> {
+            bail!("pjrt feature disabled")
+        }
+
+        fn evaluate(&self, _s: &ModelState, _b: &Batch) -> Result<StepStats> {
+            bail!("pjrt feature disabled")
+        }
+
+        fn embed(&self, _s: &ModelState, _b: &Batch) -> Result<Vec<Vec<f32>>> {
+            bail!("pjrt feature disabled")
+        }
+    }
+
+    /// Artifact smoke test (real implementation in the `pjrt` feature).
+    pub fn run_smoke(_m: &Manifest) -> Result<Vec<f32>> {
+        bail!("pjrt feature disabled")
+    }
+}
 
 pub use engine::{Batch, ModelState, StepEngine, StepStats};
 pub use manifest::{Kind, Manifest, ModelGeom, ModelKind};

@@ -309,7 +309,7 @@ fn push_blocks(
     check_len(&specs[idx], batch.x.len())?;
     lits.push(buf_f32(client, &batch.x, &specs[idx].shape)?);
     idx += 1;
-    for a in &batch.adj {
+    for a in batch.adj.iter() {
         check_len(&specs[idx], a.len())?;
         lits.push(buf_i32(client, a, &specs[idx].shape)?);
         idx += 1;

@@ -10,6 +10,7 @@
 use anyhow::{ensure, Result};
 
 use super::engine::{Batch, ModelState, StepEngine, StepStats};
+use super::kernels::{matmul_acc, matmul_at_b, matmul_b_wt};
 use super::manifest::{ModelGeom, ModelKind};
 
 const ADAM_B1: f32 = 0.9;
@@ -23,56 +24,6 @@ pub struct RefEngine {
 impl RefEngine {
     pub fn new(geom: ModelGeom) -> Self {
         Self { geom }
-    }
-}
-
-/// `out[r,:] += a[r,:] @ w` for row-major `a [n,di]`, `w [di,do]`.
-fn matmul_acc(a: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
-    for r in 0..n {
-        let ar = &a[r * di..(r + 1) * di];
-        let or = &mut out[r * dout..(r + 1) * dout];
-        for (i, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let wr = &w[i * dout..(i + 1) * dout];
-            for (o, &wv) in or.iter_mut().zip(wr) {
-                *o += av * wv;
-            }
-        }
-    }
-}
-
-/// `gw += a^T g` for `a [n,di]`, `g [n,do]`.
-fn matmul_at_b(a: &[f32], g: &[f32], gw: &mut [f32], n: usize, di: usize, dout: usize) {
-    for r in 0..n {
-        let ar = &a[r * di..(r + 1) * di];
-        let gr = &g[r * dout..(r + 1) * dout];
-        for (i, &av) in ar.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let row = &mut gw[i * dout..(i + 1) * dout];
-            for (o, &gv) in row.iter_mut().zip(gr) {
-                *o += av * gv;
-            }
-        }
-    }
-}
-
-/// `out[r,:] += g[r,:] @ w^T` for `g [n,do]`, `w [di,do]`.
-fn matmul_b_wt(g: &[f32], w: &[f32], out: &mut [f32], n: usize, di: usize, dout: usize) {
-    for r in 0..n {
-        let gr = &g[r * dout..(r + 1) * dout];
-        let or = &mut out[r * di..(r + 1) * di];
-        for i in 0..di {
-            let wr = &w[i * dout..(i + 1) * dout];
-            let mut acc = 0f32;
-            for (gv, wv) in gr.iter().zip(wr) {
-                acc += gv * wv;
-            }
-            or[i] += acc;
-        }
     }
 }
 
@@ -465,7 +416,7 @@ mod tests {
             depth,
             width,
             x,
-            adj,
+            adj: adj.into(),
             msk,
             rmask,
             cache,

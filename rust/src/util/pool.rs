@@ -1,15 +1,25 @@
 //! Threading substrate (no tokio in the offline registry): a small
-//! fixed-size thread pool for fire-and-forget jobs plus scoped data-parallel
-//! helpers used by the graph algorithms and the multi-client session driver.
+//! fixed-size thread pool for fire-and-forget jobs, a scoped data-parallel
+//! chunk API used by the tiled matmul kernels, and scoped map helpers used
+//! by the graph algorithms and the multi-client session driver.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+thread_local! {
+    /// True on pool worker threads; lets [`ThreadPool::run_chunks`] detect
+    /// nested dispatch (which would deadlock `wait_idle`) and run inline.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
 /// Fixed-size thread pool. Jobs are executed FIFO; `wait_idle` blocks until
-/// every submitted job has finished (used by the embedding push overlap).
+/// every submitted job has finished (used by the embedding push overlap and
+/// the kernel tile dispatch). Panicking jobs are caught so workers survive;
+/// `run_chunks` re-raises panics from its own tiles on the calling thread.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     handles: Vec<thread::JoinHandle<()>>,
@@ -29,22 +39,32 @@ impl ThreadPool {
             handles.push(
                 thread::Builder::new()
                     .name(format!("optimes-pool-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                let (lock, cv) = &*inflight;
-                                let mut n = lock.lock().unwrap();
-                                *n -= 1;
-                                if *n == 0 {
-                                    cv.notify_all();
+                    .spawn(move || {
+                        IN_POOL_WORKER.with(|c| c.set(true));
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match job {
+                                Ok(job) => {
+                                    let r = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(job),
+                                    );
+                                    if r.is_err() {
+                                        eprintln!(
+                                            "optimes-pool: job panicked (worker kept alive)"
+                                        );
+                                    }
+                                    let (lock, cv) = &*inflight;
+                                    let mut n = lock.lock().unwrap();
+                                    *n -= 1;
+                                    if *n == 0 {
+                                        cv.notify_all();
+                                    }
                                 }
+                                Err(_) => break, // channel closed
                             }
-                            Err(_) => break, // channel closed
                         }
                     })
                     .expect("spawn pool thread"),
@@ -55,6 +75,11 @@ impl ThreadPool {
             handles,
             inflight,
         }
+    }
+
+    /// Worker count (used by callers to size chunks).
+    pub fn threads(&self) -> usize {
+        self.handles.len()
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -75,6 +100,73 @@ impl ThreadPool {
             n = cv.wait(n).unwrap();
         }
     }
+
+    /// Run `f(start, end)` over disjoint `chunk`-sized ranges of `0..n` on
+    /// the pool, blocking until every range has been processed. Ranges are
+    /// disjoint, so `f` may write through raw pointers into per-range slices
+    /// of a shared output buffer (the kernel tile pattern).
+    ///
+    /// Completion is tracked by a per-dispatch latch (not the pool-wide
+    /// inflight count), so concurrent `run_chunks` callers on the shared
+    /// pool never wait on each other's tiles. Runs inline when the work is
+    /// a single chunk or when called from a pool worker thread (nested
+    /// dispatch would starve the latch).
+    pub fn run_chunks<F: Fn(usize, usize) + Sync>(&self, n: usize, chunk: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        if n <= chunk || IN_POOL_WORKER.with(|c| c.get()) {
+            f(0, n);
+            return;
+        }
+        let n_chunks = n.div_ceil(chunk);
+        // Per-dispatch state: remaining-tile latch + panic flag, so callers
+        // neither convoy on nor observe failures of other dispatches.
+        let latch = (Mutex::new(n_chunks), std::sync::Condvar::new());
+        let panicked = AtomicBool::new(false);
+        let f_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        // SAFETY: the latch wait below blocks until every job dispatched
+        // here has finished, so no 'static borrow outlives its referent.
+        let f_static = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize, usize) + Sync),
+                &'static (dyn Fn(usize, usize) + Sync),
+            >(f_ref)
+        };
+        let p_static =
+            unsafe { std::mem::transmute::<&AtomicBool, &'static AtomicBool>(&panicked) };
+        let l_static = unsafe {
+            std::mem::transmute::<
+                &(Mutex<usize>, std::sync::Condvar),
+                &'static (Mutex<usize>, std::sync::Condvar),
+            >(&latch)
+        };
+        let mut s = 0;
+        while s < n {
+            let e = (s + chunk).min(n);
+            self.execute(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_static(s, e)));
+                if r.is_err() {
+                    p_static.store(true, Ordering::SeqCst);
+                }
+                let mut left = l_static.0.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    l_static.1.notify_all();
+                }
+            });
+            s = e;
+        }
+        let mut left = latch.0.lock().unwrap();
+        while *left > 0 {
+            left = latch.1.wait(left).unwrap();
+        }
+        drop(left);
+        if panicked.load(Ordering::SeqCst) {
+            panic!("ThreadPool job panicked");
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -84,6 +176,13 @@ impl Drop for ThreadPool {
             let _ = h.join();
         }
     }
+}
+
+/// Process-wide shared pool for data-parallel kernel tiles, sized to
+/// [`default_threads`]. Lazily created on first use.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL_POOL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL_POOL.get_or_init(|| ThreadPool::new(default_threads()))
 }
 
 /// Run `f(i, &items[i])` over all items on up to `threads` scoped workers,
@@ -123,7 +222,10 @@ pub fn parallel_map<T: Sync, R: Send>(
     slots.into_iter().map(|r| r.expect("slot filled")).collect()
 }
 
-struct SendPtr<T>(*mut T);
+/// Raw pointer wrapper that may cross a thread dispatch. Safe only when
+/// the dispatch writes disjoint regions and the referent outlives every
+/// job (the `parallel_map` slot pattern and the kernel tile pattern).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Sync for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 
@@ -158,6 +260,72 @@ mod tests {
     fn pool_wait_idle_without_jobs() {
         let pool = ThreadPool::new(2);
         pool.wait_idle();
+    }
+
+    #[test]
+    fn run_chunks_covers_every_index_disjointly() {
+        let pool = ThreadPool::new(4);
+        let n = 1003; // deliberately not a multiple of the chunk size
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_chunks(n, 64, |s, e| {
+            assert!(s < e && e <= n);
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn run_chunks_single_chunk_runs_inline() {
+        let pool = ThreadPool::new(2);
+        // a single chunk must run on the calling thread, not a worker
+        let tid = std::sync::Mutex::new(None);
+        pool.run_chunks(10, 64, |s, e| {
+            assert_eq!((s, e), (0, 10));
+            *tid.lock().unwrap() = Some(thread::current().id());
+        });
+        assert_eq!(tid.into_inner().unwrap(), Some(thread::current().id()));
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.wait_idle();
+        // workers must still be alive and processing
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "ThreadPool job panicked")]
+    fn run_chunks_propagates_job_panics() {
+        let pool = ThreadPool::new(2);
+        pool.run_chunks(100, 10, |s, _| {
+            if s == 50 {
+                panic!("tile failed");
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_usable() {
+        let a = global() as *const ThreadPool;
+        let b = global() as *const ThreadPool;
+        assert_eq!(a, b);
+        let total = AtomicUsize::new(0);
+        global().run_chunks(256, 16, |s, e| {
+            total.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 256);
     }
 
     #[test]

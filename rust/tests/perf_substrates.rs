@@ -1,0 +1,150 @@
+//! Integration coverage for the perf substrates: the slab embedding
+//! store's caller-buffer pulls, the zero-alloc `BatchScratch` assembly
+//! path, the shared gather adjacency, and the cache-miss observability
+//! wired through session metrics.
+
+use std::sync::Arc;
+
+use optimes::coordinator::trainer::{assemble_batch, BatchScratch};
+use optimes::coordinator::{
+    run_session, EmbCache, EmbeddingServer, NetConfig, SessionConfig, Strategy,
+};
+use optimes::graph::datasets::tiny;
+use optimes::graph::partition::metis_lite;
+use optimes::graph::sampler::Sampler;
+use optimes::graph::subgraph::{build_all, Prune};
+use optimes::runtime::{ModelGeom, ModelKind, RefEngine, StepEngine};
+
+fn ref_engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: 16,
+        classes: 4,
+        batch: 8,
+        fanout: 3,
+        push_batch: 8,
+    }))
+}
+
+#[test]
+fn pull_into_agrees_with_allocating_pull() {
+    let s = EmbeddingServer::new(2, 16, NetConfig::default());
+    let nodes: Vec<u32> = (0..500).collect();
+    let l1: Vec<f32> = (0..nodes.len() * 16).map(|i| i as f32).collect();
+    let l2: Vec<f32> = (0..nodes.len() * 16).map(|i| -(i as f32)).collect();
+    s.push(&nodes, &[l1, l2]);
+    let mixed: Vec<u32> = vec![499, 0, 777, 250, 13]; // 777 is missing
+    let (alloc, _) = s.pull(&mixed, false);
+    let mut buf = vec![vec![1.0f32; 3]]; // dirty + wrongly shaped
+    s.pull_into(&mixed, false, &mut buf);
+    assert_eq!(alloc, buf);
+}
+
+#[test]
+fn scratch_reuse_across_train_and_embed_geometries() {
+    // A single scratch must be safe to reuse across batches of different
+    // depth/width (train depth L, embed depth L-1) with identical results
+    // to fresh allocation each time.
+    let g = tiny(57);
+    let part = metis_lite(&g, 4, 2);
+    let subs = build_all(&g, &part, &Prune::None, 5);
+    let eng = ref_engine();
+    let geom = *eng.geom();
+    let dims = geom.dims();
+    let sub = subs.iter().max_by_key(|s| s.n_remote()).unwrap();
+    let cache = EmbCache::new(geom.layers - 1, geom.hidden, sub.n_remote());
+    let adj_train = optimes::graph::sampler::static_adj(&dims, dims.batch, dims.layers);
+    let adj_embed =
+        optimes::graph::sampler::static_adj(&dims, dims.push_batch, dims.layers - 1);
+    let mut sampler = Sampler::new(dims, 3, 0);
+    let targets: Vec<u32> = sub.train_local.iter().copied().take(dims.batch).collect();
+    let push: Vec<u32> = sub
+        .push_nodes
+        .iter()
+        .filter_map(|gid| sub.local_index(*gid))
+        .take(dims.push_batch)
+        .collect();
+    if targets.is_empty() || push.is_empty() {
+        panic!("test graph produced no targets/push nodes");
+    }
+    let mut scratch = BatchScratch::default();
+    for round in 0..3 {
+        let tb = sampler.sample_batch(sub, &targets);
+        let fresh = assemble_batch(&tb, sub, &cache, &g, &adj_train, true);
+        let reused = scratch.assemble(&tb, sub, &cache, &g, &adj_train, true);
+        assert_eq!(fresh.x, reused.x, "round {round} train x");
+        assert_eq!(fresh.rmask, reused.rmask);
+        assert_eq!(fresh.cache, reused.cache);
+        assert_eq!(fresh.labels, reused.labels);
+
+        let eb = sampler.sample_embed(sub, &push);
+        let fresh = assemble_batch(&eb, sub, &cache, &g, &adj_embed, false);
+        let reused = scratch.assemble(&eb, sub, &cache, &g, &adj_embed, false);
+        assert_eq!(fresh.depth, reused.depth);
+        assert_eq!(fresh.x, reused.x, "round {round} embed x");
+        assert_eq!(fresh.rmask, reused.rmask);
+        assert_eq!(fresh.cache, reused.cache);
+        assert!(reused.labels.is_empty() && reused.lmask.is_empty());
+    }
+}
+
+#[test]
+fn scratch_batches_train_identically_to_fresh_batches() {
+    // Driving the engine through scratch-assembled batches must produce
+    // the exact same parameter trajectory as fresh allocation.
+    let g = tiny(59);
+    let part = metis_lite(&g, 4, 2);
+    let subs = build_all(&g, &part, &Prune::None, 5);
+    let eng = ref_engine();
+    let geom = *eng.geom();
+    let dims = geom.dims();
+    let sub = &subs[0];
+    let cache = EmbCache::new(geom.layers - 1, geom.hidden, sub.n_remote());
+    let adj = optimes::graph::sampler::static_adj(&dims, dims.batch, dims.layers);
+    let targets: Vec<u32> = sub.train_local.iter().copied().take(dims.batch).collect();
+
+    let mut s1 = optimes::runtime::ModelState::init(&geom, 11);
+    let mut s2 = s1.clone();
+    let mut scratch = BatchScratch::default();
+    let mut sampler_a = Sampler::new(dims, 21, 7);
+    let mut sampler_b = Sampler::new(dims, 21, 7);
+    for _ in 0..4 {
+        let ba = sampler_a.sample_batch(sub, &targets);
+        let bb = sampler_b.sample_batch(sub, &targets);
+        let fresh = assemble_batch(&ba, sub, &cache, &g, &adj, true);
+        let st1 = eng.train_step(&mut s1, &fresh, 0.01).unwrap();
+        let reused = scratch.assemble(&bb, sub, &cache, &g, &adj, true);
+        let st2 = eng.train_step(&mut s2, reused, 0.01).unwrap();
+        assert_eq!(st1.loss, st2.loss);
+    }
+    assert_eq!(s1.params, s2.params);
+}
+
+#[test]
+fn session_surfaces_cache_stats() {
+    let g = tiny(71);
+    let mk = |strategy| SessionConfig {
+        strategy,
+        rounds: 2,
+        epochs: 2,
+        epoch_batches: 4,
+        eval_batches: 4,
+        parallel_clients: false,
+        ..Default::default()
+    };
+    // E pulls everything before training: lookups observed, zero misses
+    let e = run_session(&g, &mk(Strategy::e()), ref_engine()).unwrap();
+    let cs = e.cache_stats();
+    assert!(cs.lookups > 0, "E session sampled no remote rows");
+    assert_eq!(cs.misses, 0, "E must never assemble a missing remote row");
+    assert_eq!(cs.miss_rate(), 0.0);
+    // D exchanges nothing and retains no remotes: no lookups at all
+    let d = run_session(&g, &mk(Strategy::d()), ref_engine()).unwrap();
+    assert_eq!(d.cache_stats().lookups, 0);
+    // the JSON report carries the counters
+    let j = e.to_json();
+    assert_eq!(j.at("cache_misses").as_usize(), Some(0));
+    assert!(j.at("cache_lookups").as_usize().unwrap() > 0);
+}

@@ -76,7 +76,7 @@ fn rand_batch(
         depth,
         width,
         x,
-        adj,
+        adj: adj.into(),
         msk,
         rmask,
         cache,

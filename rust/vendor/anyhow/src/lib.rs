@@ -1,0 +1,225 @@
+//! Minimal, dependency-free shim of the `anyhow` error-handling API,
+//! covering exactly the surface this workspace uses:
+//!
+//! * [`Error`] — message + boxed cause chain, `Send + Sync`
+//! * [`Result`] — `Result<T, Error>` alias with default type parameter
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result<T, E:
+//!   Into<Error>>` (including `Result<T, Error>` itself) and `Option<T>`
+//! * `anyhow!`, `bail!`, `ensure!` macros
+//! * blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts std errors
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! appends the cause chain (`msg: cause: cause`), matching how the CLI
+//! reports errors. `Debug` shows the chain on separate lines like the
+//! upstream crate. Like upstream, [`Error`] deliberately does **not**
+//! implement `std::error::Error` (that would conflict with the blanket
+//! `From`).
+
+use std::fmt;
+
+/// Error with an optional chain of causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the upstream default-parameter shape.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` as the cause of a new outer message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error {
+            msg: c.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+}
+
+fn from_std(e: &(dyn std::error::Error + 'static)) -> Error {
+    Error {
+        msg: e.to_string(),
+        source: e.source().map(|s| Box::new(from_std(s))),
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        from_std(&e)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Attach context to errors (and turn `None` into an error).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "gone");
+    }
+
+    #[test]
+    fn context_wraps_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        // context on an already-anyhow Result (the Into<Error> reflexive case)
+        let r2: Result<()> = Err(e);
+        let e2 = r2.with_context(|| format!("round {}", 3)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "round 3: reading manifest: gone");
+        // Option -> Result
+        let n: Option<usize> = None;
+        assert_eq!(format!("{}", n.context("layers").unwrap_err()), "layers");
+        assert_eq!(Some(5).context("layers").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_format_and_return() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 1, "x too small: {x}");
+            ensure!(x < 100);
+            if x == 13 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x too small: 0");
+        assert!(format!("{}", f(200).unwrap_err()).contains("x < 100"));
+        assert_eq!(format!("{}", f(13).unwrap_err()), "unlucky 13");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn error_is_send_sync_debug() {
+        fn assert_bounds<T: Send + Sync + std::fmt::Debug>(_t: &T) {}
+        let e = anyhow!("a").context("b");
+        assert_bounds(&e);
+        let d = format!("{e:?}");
+        assert!(d.contains('b') && d.contains("Caused by") && d.contains('a'));
+    }
+}
