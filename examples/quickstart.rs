@@ -1,4 +1,4 @@
-//! Quickstart: train a federated GNN with remote embeddings in ~30 lines.
+//! Quickstart: train a federated GNN with remote embeddings in ~40 lines.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
@@ -6,11 +6,36 @@
 //!
 //! Loads the scaled Reddit dataset, partitions it onto 4 clients, and runs
 //! 12 federated rounds of the full OptimES strategy (OPP: push overlap +
-//! uniform pruning + scored pull prefetch), printing per-round accuracy
-//! and the phase breakdown.
+//! uniform pruning + scored pull prefetch) through the composable session
+//! API: a [`SessionBuilder`] wires the embedding store and a streaming
+//! [`RoundObserver`], and per-round accuracy prints as it happens.
+//!
+//! To run the same session against a *remote* embedding store, start
+//! `optimes serve --port 7070` in another terminal and pass
+//! `.store(Arc::new(TcpEmbeddingStore::connect("127.0.0.1:7070", 2, 32)?))`
+//! to the builder — the accuracy trajectory is identical.
 
-use optimes::coordinator::{run_session, SessionConfig, Strategy};
+use optimes::coordinator::{RoundMetrics, RoundObserver, SessionBuilder, SessionConfig, Strategy};
 use optimes::harness;
+
+/// Prints each round's accuracy and phase breakdown as it completes.
+struct LivePrinter;
+
+impl RoundObserver for LivePrinter {
+    fn on_round(&mut self, r: &RoundMetrics) {
+        let p = &r.mean_phases;
+        println!(
+            "round {:>2}: acc {:5.2}%  time {:.3}s  (pull {:.3} + train {:.3} + dyn {:.3} + push {:.3})",
+            r.round,
+            r.accuracy * 100.0,
+            r.round_time,
+            p.pull,
+            p.train,
+            p.dyn_pull,
+            p.push
+        );
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     // 1. dataset: a synthetic stand-in for Reddit (see DESIGN.md §3)
@@ -39,27 +64,18 @@ fn main() -> anyhow::Result<()> {
         cfg.strategy,
         harness::engine_kind()
     );
-    let metrics = run_session(&graph, &cfg, engine)?;
+    let metrics = SessionBuilder::new(cfg)
+        .observer(Box::new(LivePrinter))
+        .build(&graph, engine)?
+        .run()?;
 
     // 4. results
-    for r in &metrics.rounds {
-        let p = &r.mean_phases;
-        println!(
-            "round {:>2}: acc {:5.2}%  time {:.3}s  (pull {:.3} + train {:.3} + dyn {:.3} + push {:.3})",
-            r.round,
-            r.accuracy * 100.0,
-            r.round_time,
-            p.pull,
-            p.train,
-            p.dyn_pull,
-            p.push
-        );
-    }
     println!(
-        "\npeak accuracy {:.2}%  |  median round {:.3}s  |  {} embeddings at the server",
+        "\npeak accuracy {:.2}%  |  median round {:.3}s  |  {} embeddings at the {} store",
         metrics.peak_accuracy() * 100.0,
         metrics.median_round_time(),
-        metrics.server_embeddings
+        metrics.server_embeddings,
+        metrics.store_backend
     );
     Ok(())
 }

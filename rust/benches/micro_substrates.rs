@@ -3,11 +3,15 @@
 //! repetition + median-of-runs, prints one machine-readable JSON line per
 //! substrate, and merges the full result set into the repo-root
 //! `BENCH_micro.json` (the §Perf iteration log in EXPERIMENTS.md).
+//!
+//! `-- --quick` runs every substrate once with minimal repetition — a CI
+//! smoke that proves the bench paths execute without recording numbers.
 
 use std::sync::Arc;
 
+use optimes::coordinator::net_transport::{EmbServerDaemon, TcpEmbeddingStore};
 use optimes::coordinator::trainer::{assemble_batch, BatchScratch};
-use optimes::coordinator::{EmbeddingServer, NetConfig};
+use optimes::coordinator::{EmbeddingServer, EmbeddingStore, NetConfig};
 use optimes::graph::datasets;
 use optimes::graph::partition::{hash_partition, metis_lite};
 use optimes::graph::sampler::{static_adj, Sampler};
@@ -19,14 +23,19 @@ use optimes::util::json::{Json, JsonObj};
 use optimes::util::rng::Rng;
 
 /// Collected (name, seconds-per-op) results for the JSON section.
-struct Results(Vec<(String, f64)>);
+struct Results {
+    entries: Vec<(String, f64)>,
+    /// Smoke mode: 1 iteration x 2 runs per substrate, nothing recorded.
+    quick: bool,
+}
 
 impl Results {
     /// Time `f` over `iters` iterations, repeated 5 times; report and
     /// record the median. Prints a human line plus a JSON line.
     fn bench(&mut self, name: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+        let (iters, reps) = if self.quick { (1, 2) } else { (iters, 5) };
         let mut runs = Vec::new();
-        for _ in 0..5 {
+        for _ in 0..reps {
             let t0 = std::time::Instant::now();
             for _ in 0..iters {
                 f();
@@ -34,7 +43,7 @@ impl Results {
             runs.push(t0.elapsed().as_secs_f64() / iters as f64);
         }
         runs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let med = runs[2];
+        let med = runs[reps / 2];
         let unit = if med < 1e-6 {
             format!("{:.0} ns/op", med * 1e9)
         } else if med < 1e-3 {
@@ -44,20 +53,20 @@ impl Results {
         } else {
             format!("{:.3} s/op", med)
         };
-        println!("{name:<44} {unit:>16}   ({iters} iters x 5 runs)");
+        println!("{name:<44} {unit:>16}   ({iters} iters x {reps} runs)");
         println!(
             "{{\"substrate\":{:?},\"ns_per_op\":{:.1},\"iters\":{iters}}}",
             name,
             med * 1e9
         );
-        self.0.push((name.to_string(), med));
+        self.entries.push((name.to_string(), med));
         med
     }
 
     fn to_json(&self, extra: &[(&str, f64)]) -> JsonObj {
         let mut o = JsonObj::new();
         let entries: Vec<Json> = self
-            .0
+            .entries
             .iter()
             .map(|(name, secs)| {
                 let mut e = JsonObj::new();
@@ -76,8 +85,15 @@ impl Results {
 
 fn main() {
     let t0 = std::time::Instant::now();
-    println!("== micro_substrates ==");
-    let mut res = Results(Vec::new());
+    let quick = std::env::args().any(|a| a == "--quick");
+    println!(
+        "== micro_substrates{} ==",
+        if quick { " (--quick smoke)" } else { "" }
+    );
+    let mut res = Results {
+        entries: Vec::new(),
+        quick,
+    };
     let (p, g) = harness::load_dataset("reddit-s").expect("dataset");
 
     res.bench("graph: generate reddit-s (scaled)", 1, || {
@@ -177,6 +193,23 @@ fn main() {
         let _ = server.pull_into(&nodes, false, &mut pull_buf);
     });
 
+    // the same batched RPCs through the loopback TCP transport (wire
+    // codec + socket overhead on top of the slab store)
+    let tcp_backend = Arc::new(EmbeddingServer::new(2, geom.hidden, NetConfig::default()));
+    let daemon = EmbServerDaemon::start(
+        Arc::clone(&tcp_backend) as Arc<dyn EmbeddingStore>,
+        "127.0.0.1:0",
+    )
+    .expect("loopback daemon");
+    let tcp = TcpEmbeddingStore::connect(daemon.addr.to_string(), 2, geom.hidden)
+        .expect("loopback connect");
+    res.bench("kv: tcp push 10k x 2 layers (loopback)", 10, || {
+        let _ = tcp.push(&nodes, &[rows.clone(), rows.clone()]).unwrap();
+    });
+    res.bench("kv: tcp pull_into 10k x 2 layers (loopback)", 10, || {
+        let _ = tcp.pull_into(&nodes, false, &mut pull_buf).unwrap();
+    });
+
     // engine step latency (the L1/L2 hot path through PJRT or Ref)
     let batch = assemble_batch(&blocks, sub, &cache, &g, &adj, true);
     let mut state = ModelState::init(&geom, 3);
@@ -196,6 +229,13 @@ fn main() {
         },
     );
 
+    if quick {
+        println!(
+            "\n[micro_substrates] --quick smoke passed in {:.1}s (numbers not recorded)",
+            t0.elapsed().as_secs_f64()
+        );
+        return;
+    }
     harness::record_bench_section(
         "micro_substrates",
         res.to_json(&[

@@ -1,13 +1,112 @@
-//! Aggregation server: FedAvg over client models + global validation on a
-//! held-out test set (paper §3.2.3).
+//! Aggregation server: model aggregation over client states + global
+//! validation on a held-out test set (paper §3.2.3).
+//!
+//! Aggregation is a pluggable seam: the session calls an [`Aggregator`]
+//! trait object, so the paper's weighted FedAvg ([`FedAvg`]) can be
+//! swapped for robust variants ([`UniformAvg`], [`TrimmedMean`]) without
+//! touching the round loop.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::graph::sampler::{static_adj, Sampler};
 use crate::graph::{Graph, Partition, Prune};
 use crate::runtime::{Batch, ModelState, StepEngine, StepStats};
+
+/// Combines the clients' post-round model states into the next global
+/// parameter set. `clients` pairs each state with its aggregation weight
+/// (the session passes local-training-set sizes).
+pub trait Aggregator: Send + Sync {
+    /// Short name for reports / `optimes info` ("fedavg", "trimmed2", ...).
+    fn name(&self) -> String;
+
+    fn aggregate(&self, clients: &[(&ModelState, f64)]) -> Vec<Vec<f32>>;
+}
+
+/// The paper's aggregation: example-count-weighted FedAvg.
+pub struct FedAvg;
+
+impl Aggregator for FedAvg {
+    fn name(&self) -> String {
+        "fedavg".into()
+    }
+
+    fn aggregate(&self, clients: &[(&ModelState, f64)]) -> Vec<Vec<f32>> {
+        fedavg(clients)
+    }
+}
+
+/// Unweighted mean — every client counts equally regardless of how much
+/// local data it holds.
+pub struct UniformAvg;
+
+impl Aggregator for UniformAvg {
+    fn name(&self) -> String {
+        "uniform".into()
+    }
+
+    fn aggregate(&self, clients: &[(&ModelState, f64)]) -> Vec<Vec<f32>> {
+        let uniform: Vec<(&ModelState, f64)> = clients.iter().map(|(s, _)| (*s, 1.0)).collect();
+        fedavg(&uniform)
+    }
+}
+
+/// Coordinate-wise trimmed mean: per parameter, drop the `trim` lowest
+/// and `trim` highest client values and average the rest (robust to
+/// stragglers/outliers; weights are ignored). Falls back to the plain
+/// mean when `2*trim >= n`.
+pub struct TrimmedMean {
+    pub trim: usize,
+}
+
+impl Aggregator for TrimmedMean {
+    fn name(&self) -> String {
+        format!("trimmed{}", self.trim)
+    }
+
+    fn aggregate(&self, clients: &[(&ModelState, f64)]) -> Vec<Vec<f32>> {
+        assert!(!clients.is_empty());
+        let n = clients.len();
+        let trim = if 2 * self.trim >= n { 0 } else { self.trim };
+        let keep = (n - 2 * trim) as f32;
+        let shapes: Vec<usize> = clients[0].0.params.iter().map(|p| p.len()).collect();
+        let mut out: Vec<Vec<f32>> = shapes.iter().map(|&m| vec![0f32; m]).collect();
+        let mut vals = vec![0f32; n];
+        for (t, acc) in out.iter_mut().enumerate() {
+            for (j, a) in acc.iter_mut().enumerate() {
+                for (slot, (state, _)) in vals.iter_mut().zip(clients) {
+                    *slot = state.params[t][j];
+                }
+                vals.sort_by(|x, y| x.partial_cmp(y).expect("finite params"));
+                *a = vals[trim..n - trim].iter().sum::<f32>() / keep;
+            }
+        }
+        out
+    }
+}
+
+/// Parse a CLI aggregator spec: `fedavg` | `uniform` | `trimmed[:k]`
+/// (`trimmed` alone trims 1 from each tail).
+pub fn parse_aggregator(s: &str) -> Result<Arc<dyn Aggregator>> {
+    let lower = s.to_ascii_lowercase();
+    if lower == "fedavg" {
+        return Ok(Arc::new(FedAvg));
+    }
+    if lower == "uniform" {
+        return Ok(Arc::new(UniformAvg));
+    }
+    if let Some(rest) = lower.strip_prefix("trimmed") {
+        let core = rest.strip_prefix(':').unwrap_or(rest);
+        if core.is_empty() {
+            return Ok(Arc::new(TrimmedMean { trim: 1 }));
+        }
+        if let Ok(trim) = core.parse::<usize>() {
+            return Ok(Arc::new(TrimmedMean { trim }));
+        }
+    }
+    bail!("unknown aggregator {s:?} (expected fedavg | uniform | trimmed[:k])")
+}
 
 /// FedAvg: weighted average of client parameter vectors. Optimizer state
 /// stays client-local (standard FedAvg aggregates parameters only).
@@ -145,9 +244,16 @@ mod tests {
         }))
     }
 
-    #[test]
-    fn fedavg_weighted_mean() {
-        let geom = ModelGeom {
+    fn const_state(geom: &ModelGeom, v: f32) -> ModelState {
+        let mut s = ModelState::zeros(geom);
+        for p in s.params.iter_mut() {
+            p.iter_mut().for_each(|x| *x = v);
+        }
+        s
+    }
+
+    fn small_geom() -> ModelGeom {
+        ModelGeom {
             model: ModelKind::Gc,
             layers: 3,
             feat: 4,
@@ -156,19 +262,65 @@ mod tests {
             batch: 2,
             fanout: 2,
             push_batch: 2,
-        };
-        let mut a = ModelState::zeros(&geom);
-        let mut b = ModelState::zeros(&geom);
-        for p in a.params.iter_mut() {
-            p.iter_mut().for_each(|v| *v = 1.0);
         }
-        for p in b.params.iter_mut() {
-            p.iter_mut().for_each(|v| *v = 3.0);
-        }
+    }
+
+    #[test]
+    fn fedavg_weighted_mean() {
+        let geom = small_geom();
+        let a = const_state(&geom, 1.0);
+        let b = const_state(&geom, 3.0);
         let avg = fedavg(&[(&a, 1.0), (&b, 1.0)]);
         assert!(avg.iter().flatten().all(|&v| (v - 2.0).abs() < 1e-6));
         let weighted = fedavg(&[(&a, 3.0), (&b, 1.0)]);
         assert!(weighted.iter().flatten().all(|&v| (v - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn uniform_aggregator_ignores_weights() {
+        let geom = small_geom();
+        let a = const_state(&geom, 1.0);
+        let b = const_state(&geom, 3.0);
+        // heavily skewed weights: FedAvg leans to `a`, uniform does not
+        let clients = [(&a, 100.0), (&b, 1.0)];
+        let fed = FedAvg.aggregate(&clients);
+        let uni = UniformAvg.aggregate(&clients);
+        assert!(fed.iter().flatten().all(|&v| v < 1.1));
+        assert!(uni.iter().flatten().all(|&v| (v - 2.0).abs() < 1e-6));
+        assert_eq!(FedAvg.name(), "fedavg");
+        assert_eq!(UniformAvg.name(), "uniform");
+    }
+
+    #[test]
+    fn trimmed_mean_resists_outlier_client() {
+        let geom = small_geom();
+        let honest: Vec<ModelState> =
+            [1.0, 2.0, 3.0].iter().map(|&v| const_state(&geom, v)).collect();
+        let outlier = const_state(&geom, 1e6);
+        let clients: Vec<(&ModelState, f64)> = honest
+            .iter()
+            .chain(std::iter::once(&outlier))
+            .map(|s| (s, 1.0))
+            .collect();
+        let t = TrimmedMean { trim: 1 }.aggregate(&clients);
+        // trims 1e6 and 1.0, averages {2, 3}
+        assert!(t.iter().flatten().all(|&v| (v - 2.5).abs() < 1e-6));
+        // over-trimming falls back to the plain mean
+        let two = [(&honest[0], 1.0), (&honest[1], 1.0)];
+        let fallback = TrimmedMean { trim: 5 }.aggregate(&two);
+        assert!(fallback.iter().flatten().all(|&v| (v - 1.5).abs() < 1e-6));
+        assert_eq!(TrimmedMean { trim: 2 }.name(), "trimmed2");
+    }
+
+    #[test]
+    fn aggregator_spec_parses() {
+        assert_eq!(parse_aggregator("fedavg").unwrap().name(), "fedavg");
+        assert_eq!(parse_aggregator("UNIFORM").unwrap().name(), "uniform");
+        assert_eq!(parse_aggregator("trimmed").unwrap().name(), "trimmed1");
+        assert_eq!(parse_aggregator("trimmed:2").unwrap().name(), "trimmed2");
+        assert_eq!(parse_aggregator("trimmed3").unwrap().name(), "trimmed3");
+        let err = parse_aggregator("median").unwrap_err().to_string();
+        assert!(err.contains("fedavg"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Wire codec for the embedding plane: little-endian, length-delimited
+//! primitives shared by the client and server sides of
+//! [`net_transport`](super::net_transport).
+//!
+//! This is the single place where numbers meet bytes. Every conversion
+//! goes through `to_le_bytes` / `from_le_bytes`, so the encoding is
+//! little-endian *by construction* on every target — big-endian hosts
+//! interoperate with little-endian ones, and there is no `unsafe`
+//! slice transmutation anywhere on the wire path. Bulk f32/u32 payloads
+//! are staged through a fixed stack buffer so the hot path stays
+//! allocation-free and I/O happens in 4 KiB writes; on little-endian
+//! targets the per-element `to_le_bytes` loop compiles down to plain
+//! memory copies.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+/// Elements staged per chunk (4 KiB of payload for 4-byte scalars).
+const CHUNK: usize = 1024;
+
+/// Hard ceiling on wire-declared element counts: a corrupt or hostile
+/// length prefix must not drive a multi-gigabyte allocation.
+pub const MAX_WIRE_ELEMS: usize = 50_000_000;
+
+pub fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("write u32")
+}
+
+pub fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("write u64")
+}
+
+pub fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("read u32")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("read u64")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Write a f32 slice as packed LE rows (bit-exact: NaN payloads and
+/// signed zeros survive the trip).
+pub fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    let mut buf = [0u8; CHUNK * 4];
+    for chunk in data.chunks(CHUNK) {
+        let bytes = &mut buf[..chunk.len() * 4];
+        for (b, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            b.copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(bytes).context("write f32 payload")?;
+    }
+    Ok(())
+}
+
+/// Read exactly `n` packed LE f32 values into `out` (cleared first,
+/// capacity reused across calls).
+pub fn read_f32s_into(r: &mut impl Read, n: usize, out: &mut Vec<f32>) -> Result<()> {
+    if n > MAX_WIRE_ELEMS {
+        bail!("absurd f32 payload length {n}");
+    }
+    out.clear();
+    out.reserve(n);
+    let mut buf = [0u8; CHUNK * 4];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(CHUNK);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes).context("read f32 payload")?;
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().expect("4-byte chunk"))),
+        );
+        left -= take;
+    }
+    Ok(())
+}
+
+/// Allocating wrapper over [`read_f32s_into`].
+pub fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    read_f32s_into(r, n, &mut out)?;
+    Ok(out)
+}
+
+/// Write a u32 slice as packed LE values (no length prefix — callers
+/// frame with [`write_u32`]).
+pub fn write_u32s(w: &mut impl Write, data: &[u32]) -> Result<()> {
+    let mut buf = [0u8; CHUNK * 4];
+    for chunk in data.chunks(CHUNK) {
+        let bytes = &mut buf[..chunk.len() * 4];
+        for (b, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+            b.copy_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(bytes).context("write u32 payload")?;
+    }
+    Ok(())
+}
+
+/// Read exactly `n` packed LE u32 values.
+pub fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    if n > MAX_WIRE_ELEMS {
+        bail!("absurd u32 payload length {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; CHUNK * 4];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(CHUNK);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes).context("read u32 payload")?;
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte chunk"))),
+        );
+        left -= take;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u32_u64_roundtrip() {
+        let mut buf = Vec::new();
+        write_u32(&mut buf, 0).unwrap();
+        write_u32(&mut buf, u32::MAX).unwrap();
+        write_u64(&mut buf, 0xDEAD_BEEF_CAFE_F00D).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_u32(&mut r).unwrap(), 0);
+        assert_eq!(read_u32(&mut r).unwrap(), u32::MAX);
+        assert_eq!(read_u64(&mut r).unwrap(), 0xDEAD_BEEF_CAFE_F00D);
+    }
+
+    #[test]
+    fn f32_payload_is_bit_exact() {
+        // values straddling several chunk boundaries, plus the bit
+        // patterns a numeric cast would destroy
+        let mut data: Vec<f32> = (0..3 * CHUNK + 7).map(|i| i as f32 * 0.25 - 100.0).collect();
+        data.push(f32::NEG_INFINITY);
+        data.push(-0.0);
+        data.push(f32::from_bits(0x7FC0_1234)); // NaN with payload
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &data).unwrap();
+        assert_eq!(buf.len(), data.len() * 4);
+        let back = read_f32s(&mut &buf[..], data.len()).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&data), bits(&back));
+    }
+
+    #[test]
+    fn f32_read_reuses_buffer() {
+        let data = vec![1.5f32; 10];
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &data).unwrap();
+        let mut out = vec![9.9f32; 500]; // dirty, oversized
+        read_f32s_into(&mut &buf[..], 10, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn u32_payload_roundtrip_across_chunks() {
+        let data: Vec<u32> = (0..2 * CHUNK as u32 + 3)
+            .map(|i| i.wrapping_mul(2654435761))
+            .collect();
+        let mut buf = Vec::new();
+        write_u32s(&mut buf, &data).unwrap();
+        let back = read_u32s(&mut &buf[..], data.len()).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn absurd_lengths_rejected() {
+        let empty: &[u8] = &[];
+        assert!(read_u32s(&mut &empty[..], MAX_WIRE_ELEMS + 1).is_err());
+        let mut out = Vec::new();
+        assert!(read_f32s_into(&mut &empty[..], MAX_WIRE_ELEMS + 1, &mut out).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_errors() {
+        let data = vec![1.0f32; 8];
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &data).unwrap();
+        let short = &buf[..buf.len() - 1];
+        assert!(read_f32s(&mut &short[..], 8).is_err());
+    }
+}

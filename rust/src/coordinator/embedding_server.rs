@@ -26,6 +26,7 @@ use std::sync::RwLock;
 
 use super::metrics::{RpcKind, RpcRecord};
 use super::netsim::NetConfig;
+use super::store::{EmbeddingStore, StoreStats};
 
 const SHARDS: usize = 16;
 
@@ -225,6 +226,42 @@ impl EmbeddingServer {
             self.pulls.load(Ordering::Relaxed),
             self.pushes.load(Ordering::Relaxed),
         )
+    }
+}
+
+/// The in-process backend of the embedding plane: the trait surface
+/// simply wraps the (infallible) inherent batched calls.
+impl EmbeddingStore for EmbeddingServer {
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> anyhow::Result<RpcRecord> {
+        Ok(EmbeddingServer::push(self, nodes, per_layer))
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> anyhow::Result<RpcRecord> {
+        Ok(EmbeddingServer::pull_into(self, nodes, on_demand, out))
+    }
+
+    fn stats(&self) -> anyhow::Result<StoreStats> {
+        Ok(StoreStats {
+            nodes: self.stored_nodes(),
+            rows: self.stored_rows(),
+        })
+    }
+
+    fn describe(&self) -> String {
+        "in-process".into()
     }
 }
 

@@ -108,6 +108,9 @@ pub struct RoundMetrics {
 pub struct SessionMetrics {
     pub strategy: String,
     pub dataset: String,
+    /// Embedding-plane backend the session ran against
+    /// ("in-process", "tcp(host:port)", "sharded(4 shards ...)").
+    pub store_backend: String,
     pub rounds: Vec<RoundMetrics>,
     /// Embeddings resident at the server after the first full round.
     pub server_embeddings: usize,
@@ -208,6 +211,7 @@ impl SessionMetrics {
         let mut o = JsonObj::new();
         o.set("strategy", self.strategy.as_str());
         o.set("dataset", self.dataset.as_str());
+        o.set("store_backend", self.store_backend.as_str());
         o.set("n_clients", self.n_clients);
         o.set("peak_accuracy", self.peak_accuracy());
         o.set("median_round_time", self.median_round_time());

@@ -1,20 +1,31 @@
 //! The L3 coordinator — the paper's system contribution: federated round
-//! orchestration with an embedding server, push-overlap, pruning, and
-//! scored prefetching (OptimES strategies D/E/O/P/OP/OPP/OPG).
+//! orchestration with a transport-agnostic embedding plane
+//! ([`EmbeddingStore`]: in-process slab / TCP / sharded), push-overlap,
+//! pruning, scored prefetching (OptimES strategies D/E/O/P/OP/OPP/OPG),
+//! and a composable session API ([`SessionBuilder`] with pluggable
+//! [`Aggregator`] and [`RoundObserver`] seams).
 
 pub mod aggregation;
 pub mod client;
+pub mod codec;
 pub mod embedding_server;
 pub mod metrics;
 pub mod net_transport;
 pub mod netsim;
 pub mod session;
+pub mod store;
 pub mod strategy;
 pub mod trainer;
 
+pub use aggregation::{fedavg, Aggregator, FedAvg, TrimmedMean, UniformAvg, Validator};
 pub use client::{Client, EmbCache};
 pub use embedding_server::EmbeddingServer;
 pub use metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
+pub use net_transport::{EmbServerDaemon, RemoteEmbClient, TcpEmbeddingStore};
 pub use netsim::NetConfig;
-pub use session::{run_session, SessionConfig};
-pub use strategy::{ScoreKind, Strategy};
+pub use session::{
+    run_session, NullObserver, RoundObserver, Session, SessionBuilder, SessionConfig,
+    SessionPhase,
+};
+pub use store::{EmbeddingStore, ShardedStore, StoreStats};
+pub use strategy::{ParseStrategyError, ScoreKind, Strategy};

@@ -1,8 +1,9 @@
-//! TCP transport for the embedding server: lets the KV store run as a
+//! TCP transport for the embedding plane: lets the store run as a
 //! separate process (the paper deploys it as a Redis server on the
 //! aggregation host, reached over 1 Gbps Ethernet by all clients).
 //!
-//! Wire protocol (little-endian, length-delimited):
+//! Wire protocol (little-endian, length-delimited; all numeric encoding
+//! via the safe [`codec`](super::codec) helpers):
 //!
 //! ```text
 //! request  := op:u8 payload
@@ -17,73 +18,35 @@
 //!
 //! All transfers are *batched* — one frame per pull/push phase, mirroring
 //! the Redis pipelining the paper uses to amortize RPC overheads (§5.1).
+//!
+//! Three pieces live here: [`EmbServerDaemon`] serves any
+//! `Arc<dyn EmbeddingStore>` (in-process slab or a sharded compound) over
+//! a listening socket; [`RemoteEmbClient`] is one connection speaking the
+//! protocol; [`TcpEmbeddingStore`] wraps a reconnecting connection pool
+//! behind the [`EmbeddingStore`] trait so sessions are transport-blind.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use super::embedding_server::EmbeddingServer;
+use super::codec;
 use super::metrics::{RpcKind, RpcRecord};
+use super::store::{EmbeddingStore, StoreStats};
 
 const OP_PULL: u8 = 1;
 const OP_PUSH: u8 = 2;
 const OP_STATS: u8 = 3;
 
-fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("write u32")
-}
-
-fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("write u64")
-}
-
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b).context("read u32")?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b).context("read u64")?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
-    // SAFETY: f32 slice viewed as bytes for the wire; endianness is LE on
-    // every supported target (checked at server startup).
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    w.write_all(bytes).context("write f32s")
-}
-
-fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-    let mut out = vec![0f32; n];
-    let bytes = unsafe {
-        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
-    };
-    r.read_exact(bytes).context("read f32s")?;
-    Ok(out)
-}
-
 fn read_ids(r: &mut impl Read) -> Result<Vec<u32>> {
-    let n = read_u32(r)? as usize;
-    if n > 50_000_000 {
-        bail!("absurd node count {n}");
-    }
-    let mut out = vec![0u32; n];
-    let bytes = unsafe {
-        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, out.len() * 4)
-    };
-    r.read_exact(bytes).context("read ids")?;
-    Ok(out)
+    let n = codec::read_u32(r)? as usize;
+    codec::read_u32s(r, n)
 }
 
-/// Daemon wrapping an in-process [`EmbeddingServer`]: accepts connections
-/// until `stop` is raised, one service thread per client (cross-silo
+/// Daemon serving an embedding store over TCP: accepts connections until
+/// `stop` is raised, one service thread per client (cross-silo
 /// federations have few, long-lived clients).
 pub struct EmbServerDaemon {
     pub addr: std::net::SocketAddr,
@@ -92,7 +55,7 @@ pub struct EmbServerDaemon {
 }
 
 impl EmbServerDaemon {
-    pub fn start(server: Arc<EmbeddingServer>, bind: impl ToSocketAddrs) -> Result<Self> {
+    pub fn start(store: Arc<dyn EmbeddingStore>, bind: impl ToSocketAddrs) -> Result<Self> {
         let listener = TcpListener::bind(bind).context("bind")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -112,10 +75,10 @@ impl EmbServerDaemon {
                             stream
                                 .set_read_timeout(Some(std::time::Duration::from_millis(100)))
                                 .ok();
-                            let server = Arc::clone(&server);
+                            let store = Arc::clone(&store);
                             let stop = Arc::clone(&stop2);
                             conns.push(std::thread::spawn(move || {
-                                let _ = serve_conn(server, stream, stop);
+                                let _ = serve_conn(store, stream, stop);
                             }));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -154,12 +117,14 @@ impl Drop for EmbServerDaemon {
 
 /// Serve one client connection until EOF or daemon stop.
 fn serve_conn(
-    server: Arc<EmbeddingServer>,
+    store: Arc<dyn EmbeddingStore>,
     stream: TcpStream,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
     let mut r = std::io::BufReader::new(stream.try_clone()?);
     let mut w = std::io::BufWriter::new(stream.try_clone()?);
+    // per-connection pull buffer: steady-state pulls allocate nothing
+    let mut pull_buf: Vec<Vec<f32>> = Vec::new();
     loop {
         let mut op = [0u8; 1];
         match r.read_exact(&mut op) {
@@ -184,31 +149,32 @@ fn serve_conn(
         match op[0] {
             OP_PULL => {
                 let nodes = read_ids(&mut r)?;
-                let (per_layer, _) = server.pull(&nodes, false);
+                store.pull_into(&nodes, false, &mut pull_buf)?;
                 w.write_all(&[0u8])?;
-                write_u32(&mut w, per_layer.len() as u32)?;
-                write_u32(&mut w, server.hidden as u32)?;
-                for rows in &per_layer {
-                    write_f32s(&mut w, rows)?;
+                codec::write_u32(&mut w, pull_buf.len() as u32)?;
+                codec::write_u32(&mut w, store.hidden() as u32)?;
+                for rows in &pull_buf {
+                    codec::write_f32s(&mut w, rows)?;
                 }
             }
             OP_PUSH => {
                 let nodes = read_ids(&mut r)?;
-                let layers = read_u32(&mut r)? as usize;
-                if layers != server.n_layers() {
-                    bail!("push layer count {layers} != {}", server.n_layers());
+                let layers = codec::read_u32(&mut r)? as usize;
+                if layers != store.n_layers() {
+                    bail!("push layer count {layers} != {}", store.n_layers());
                 }
                 let mut per_layer = Vec::with_capacity(layers);
                 for _ in 0..layers {
-                    per_layer.push(read_f32s(&mut r, nodes.len() * server.hidden)?);
+                    per_layer.push(codec::read_f32s(&mut r, nodes.len() * store.hidden())?);
                 }
-                server.push(&nodes, &per_layer);
+                store.push(&nodes, &per_layer)?;
                 w.write_all(&[0u8])?;
             }
             OP_STATS => {
+                let stats = store.stats()?;
                 w.write_all(&[0u8])?;
-                write_u64(&mut w, server.stored_nodes() as u64)?;
-                write_u64(&mut w, server.stored_rows() as u64)?;
+                codec::write_u64(&mut w, stats.nodes as u64)?;
+                codec::write_u64(&mut w, stats.rows as u64)?;
             }
             other => bail!("unknown op {other}"),
         }
@@ -219,9 +185,9 @@ fn serve_conn(
     }
 }
 
-/// Client-side handle speaking the wire protocol. API mirrors
-/// [`EmbeddingServer`]; RPC records carry the *measured* wall time (the
-/// network is real here, no cost model).
+/// One connection speaking the wire protocol. API mirrors the store
+/// trait; RPC records carry the *measured* wall time (the network is
+/// real here, no cost model).
 pub struct RemoteEmbClient {
     r: std::io::BufReader<TcpStream>,
     w: std::io::BufWriter<TcpStream>,
@@ -250,48 +216,60 @@ impl RemoteEmbClient {
         Ok(())
     }
 
-    pub fn pull(&mut self, nodes: &[u32]) -> Result<(Vec<Vec<f32>>, RpcRecord)> {
+    /// Batched pull of all layers for `nodes` into a caller buffer.
+    pub fn pull_into(
+        &mut self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
         let t0 = std::time::Instant::now();
         self.w.write_all(&[OP_PULL])?;
-        write_u32(&mut self.w, nodes.len() as u32)?;
-        let bytes = unsafe {
-            std::slice::from_raw_parts(nodes.as_ptr() as *const u8, nodes.len() * 4)
-        };
-        self.w.write_all(bytes)?;
+        codec::write_u32(&mut self.w, nodes.len() as u32)?;
+        codec::write_u32s(&mut self.w, nodes)?;
         self.w.flush()?;
         self.check_status()?;
-        let layers = read_u32(&mut self.r)? as usize;
-        let hidden = read_u32(&mut self.r)? as usize;
+        let layers = codec::read_u32(&mut self.r)? as usize;
+        let hidden = codec::read_u32(&mut self.r)? as usize;
+        if layers != self.n_layers {
+            bail!("server layer count {layers} != client {}", self.n_layers);
+        }
         if hidden != self.hidden {
             bail!("server hidden {hidden} != client {}", self.hidden);
         }
-        let mut per_layer = Vec::with_capacity(layers);
-        for _ in 0..layers {
-            per_layer.push(read_f32s(&mut self.r, nodes.len() * hidden)?);
+        out.truncate(layers);
+        out.resize_with(layers, Vec::new);
+        for rows in out.iter_mut() {
+            codec::read_f32s_into(&mut self.r, nodes.len() * hidden, rows)?;
         }
         let payload = nodes.len() * layers * (hidden * 4 + 4);
-        Ok((
-            per_layer,
-            RpcRecord {
-                kind: RpcKind::Pull,
-                rows: nodes.len(),
-                bytes: payload,
-                time: t0.elapsed().as_secs_f64(),
+        Ok(RpcRecord {
+            kind: if on_demand {
+                RpcKind::PullOnDemand
+            } else {
+                RpcKind::Pull
             },
-        ))
+            rows: nodes.len(),
+            bytes: payload,
+            time: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Allocating wrapper over [`RemoteEmbClient::pull_into`].
+    pub fn pull(&mut self, nodes: &[u32]) -> Result<(Vec<Vec<f32>>, RpcRecord)> {
+        let mut out = Vec::new();
+        let rec = self.pull_into(nodes, false, &mut out)?;
+        Ok((out, rec))
     }
 
     pub fn push(&mut self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
         let t0 = std::time::Instant::now();
         self.w.write_all(&[OP_PUSH])?;
-        write_u32(&mut self.w, nodes.len() as u32)?;
-        let bytes = unsafe {
-            std::slice::from_raw_parts(nodes.as_ptr() as *const u8, nodes.len() * 4)
-        };
-        self.w.write_all(bytes)?;
-        write_u32(&mut self.w, per_layer.len() as u32)?;
+        codec::write_u32(&mut self.w, nodes.len() as u32)?;
+        codec::write_u32s(&mut self.w, nodes)?;
+        codec::write_u32(&mut self.w, per_layer.len() as u32)?;
         for rows in per_layer {
-            write_f32s(&mut self.w, rows)?;
+            codec::write_f32s(&mut self.w, rows)?;
         }
         self.w.flush()?;
         self.check_status()?;
@@ -308,18 +286,138 @@ impl RemoteEmbClient {
         self.w.write_all(&[OP_STATS])?;
         self.w.flush()?;
         self.check_status()?;
-        Ok((read_u64(&mut self.r)? as usize, read_u64(&mut self.r)? as usize))
+        Ok((
+            codec::read_u64(&mut self.r)? as usize,
+            codec::read_u64(&mut self.r)? as usize,
+        ))
+    }
+}
+
+/// [`EmbeddingStore`] backend speaking the wire protocol against a
+/// remote daemon (e.g. a standalone `optimes serve` process).
+///
+/// Connections are pooled and reused: each concurrent caller checks one
+/// out for the duration of an RPC (so parallel clients don't serialize
+/// on a single socket) and returns it afterwards. A failed RPC drops its
+/// connection and retries exactly once on a fresh one; every op is an
+/// idempotent upsert/read, so re-sending is safe. Caveat: if the daemon
+/// itself restarted (state lost), a retried *pull* succeeds against the
+/// now-empty store and returns the contractual zero rows — the session
+/// keeps running on a cold store rather than failing. Restart the
+/// session too if the daemon's lifetime doesn't cover it.
+pub struct TcpEmbeddingStore {
+    addr: String,
+    n_layers: usize,
+    hidden: usize,
+    pool: Mutex<Vec<RemoteEmbClient>>,
+}
+
+impl TcpEmbeddingStore {
+    /// Connect to `addr` ("host:port"). The first connection is opened
+    /// eagerly and an empty pull is exchanged as a geometry handshake, so
+    /// a wrong address *or* a server with a different layer count/hidden
+    /// width fails here (session build time), not mid-round.
+    pub fn connect(addr: impl Into<String>, n_layers: usize, hidden: usize) -> Result<Self> {
+        let store = Self {
+            addr: addr.into(),
+            n_layers,
+            hidden,
+            pool: Mutex::new(Vec::new()),
+        };
+        let mut conn = store.open()?;
+        let mut probe = Vec::new();
+        conn.pull_into(&[], false, &mut probe)
+            .with_context(|| format!("geometry handshake with {}", store.addr))?;
+        store.pool.lock().unwrap().push(conn);
+        Ok(store)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn open(&self) -> Result<RemoteEmbClient> {
+        RemoteEmbClient::connect(self.addr.as_str(), self.n_layers, self.hidden)
+            .with_context(|| format!("embedding store at {}", self.addr))
+    }
+
+    /// Run `f` on a pooled connection; on failure, reconnect and retry
+    /// once (a pooled connection may be stale after a daemon restart).
+    /// If the retry fails too, the error chain names both failures, so a
+    /// deterministic server-side rejection is not mistaken for a
+    /// transport problem.
+    fn with_conn<R>(&self, mut f: impl FnMut(&mut RemoteEmbClient) -> Result<R>) -> Result<R> {
+        let pooled = self.pool.lock().unwrap().pop();
+        if let Some(mut conn) = pooled {
+            match f(&mut conn) {
+                Ok(r) => {
+                    self.pool.lock().unwrap().push(conn);
+                    return Ok(r);
+                }
+                Err(first) => {
+                    // drop the (possibly stale) connection, retry fresh
+                    drop(conn);
+                    let mut fresh = self
+                        .open()
+                        .with_context(|| format!("reconnect after RPC failure ({first:#})"))?;
+                    let r = f(&mut fresh)
+                        .with_context(|| format!("retried after RPC failure ({first:#})"))?;
+                    self.pool.lock().unwrap().push(fresh);
+                    return Ok(r);
+                }
+            }
+        }
+        let mut fresh = self.open()?;
+        let r = f(&mut fresh)?;
+        self.pool.lock().unwrap().push(fresh);
+        Ok(r)
+    }
+}
+
+impl EmbeddingStore for TcpEmbeddingStore {
+    fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        self.with_conn(|c| c.push(nodes, per_layer))
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        self.with_conn(|c| c.pull_into(nodes, on_demand, out))
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        self.with_conn(|c| {
+            let (nodes, rows) = c.stats()?;
+            Ok(StoreStats { nodes, rows })
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!("tcp({})", self.addr)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::embedding_server::EmbeddingServer;
     use crate::coordinator::netsim::NetConfig;
 
     fn daemon() -> (EmbServerDaemon, Arc<EmbeddingServer>) {
         let server = Arc::new(EmbeddingServer::new(2, 4, NetConfig::default()));
-        let d = EmbServerDaemon::start(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let store = Arc::clone(&server) as Arc<dyn EmbeddingStore>;
+        let d = EmbServerDaemon::start(store, "127.0.0.1:0").unwrap();
         (d, server)
     }
 
@@ -407,6 +505,96 @@ mod tests {
             .push(&nodes, &[vec![0.0; 4], vec![0.0; 4], vec![0.0; 4]])
             .and_then(|_| c.stats().map(|_| ()));
         assert!(res.is_err());
+        d.shutdown();
+    }
+
+    #[test]
+    fn tcp_store_connect_rejects_geometry_mismatch() {
+        let (d, _server) = daemon(); // 2 layer DBs, hidden 4
+        let err = TcpEmbeddingStore::connect(d.addr.to_string(), 3, 4)
+            .err()
+            .expect("layer mismatch must fail at connect");
+        assert!(format!("{err:#}").contains("layer count"), "{err:#}");
+        assert!(TcpEmbeddingStore::connect(d.addr.to_string(), 2, 8).is_err());
+        assert!(TcpEmbeddingStore::connect(d.addr.to_string(), 2, 4).is_ok());
+        d.shutdown();
+    }
+
+    #[test]
+    fn daemon_serves_a_sharded_store() {
+        // the daemon is store-agnostic: front a 3-shard compound with TCP
+        let sharded: Arc<dyn EmbeddingStore> = Arc::new(
+            crate::coordinator::store::ShardedStore::in_process(3, 2, 4, NetConfig::default()),
+        );
+        let d = EmbServerDaemon::start(Arc::clone(&sharded), "127.0.0.1:0").unwrap();
+        let tcp = TcpEmbeddingStore::connect(d.addr.to_string(), 2, 4).unwrap();
+        let nodes: Vec<u32> = (0..100).collect();
+        let l = rows(&nodes, 4, 2.0);
+        tcp.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        let (got, _) = tcp.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], l);
+        assert_eq!(
+            tcp.stats().unwrap(),
+            StoreStats {
+                nodes: 100,
+                rows: 200
+            }
+        );
+        d.shutdown();
+    }
+
+    #[test]
+    fn tcp_store_pools_and_reconnects() {
+        let (d, server) = daemon();
+        let tcp = TcpEmbeddingStore::connect(d.addr.to_string(), 2, 4).unwrap();
+        let nodes = [1u32, 2, 3];
+        let l = rows(&nodes, 4, 0.0);
+        tcp.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        assert_eq!(tcp.stats().unwrap().nodes, 3);
+        // restart the daemon on the same address: the pooled connection
+        // goes stale and the next RPC must transparently reconnect
+        let addr = d.addr;
+        d.shutdown();
+        let mut d2 = None;
+        for _ in 0..50 {
+            match EmbServerDaemon::start(Arc::clone(&server) as Arc<dyn EmbeddingStore>, addr) {
+                Ok(daemon) => {
+                    d2 = Some(daemon);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+            }
+        }
+        let d2 = d2.expect("rebind daemon address");
+        let stats = tcp.stats().expect("reconnect after daemon restart");
+        assert_eq!(stats.nodes, 3);
+        let (got, _) = tcp.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], l);
+        d2.shutdown();
+    }
+
+    #[test]
+    fn tcp_store_parallel_callers_use_distinct_connections() {
+        let (d, server) = daemon();
+        let tcp = Arc::new(TcpEmbeddingStore::connect(d.addr.to_string(), 2, 4).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let tcp = Arc::clone(&tcp);
+            handles.push(std::thread::spawn(move || {
+                let nodes: Vec<u32> = (t * 500..t * 500 + 100).collect();
+                let mut buf = Vec::new();
+                for round in 0..5 {
+                    let l = rows(&nodes, 4, round as f32);
+                    tcp.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+                    tcp.pull_into(&nodes, false, &mut buf).unwrap();
+                    assert_eq!(buf[0], l);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.stored_nodes(), 400);
         d.shutdown();
     }
 }

@@ -1,26 +1,32 @@
-//! Session driver: the full federated lifecycle of Fig 3 / Fig 5 —
-//! partition, pre-training round, then `rounds` iterations of
-//! {broadcast global model → pull → ε local epochs → push → FedAvg →
-//! global validation} across all clients, with virtual-time round
-//! accounting (DESIGN.md §7).
+//! Session driver: the full federated lifecycle of Fig 3 / Fig 5 as a
+//! composable API. [`SessionBuilder`] wires the seams (embedding store
+//! backend, [`Aggregator`], [`RoundObserver`]) and runs the offline
+//! phases (partition → prune/score); the resulting [`Session`] exposes
+//! the online phases explicitly — [`pretrain`](Session::pretrain), then
+//! [`run_round`](Session::run_round) per federated round of {broadcast
+//! global model → pull → ε local epochs → push → aggregate → global
+//! validation}, with virtual-time round accounting (DESIGN.md §7, §8).
+//!
+//! [`run_session`] is the one-call convenience wrapper (in-process
+//! store, FedAvg, no observer) that every bench and test drives.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use super::aggregation::{fedavg, Validator};
+use super::aggregation::{Aggregator, FedAvg, Validator};
 use super::client::Client;
 use super::embedding_server::EmbeddingServer;
 use super::metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
 use super::netsim::NetConfig;
+use super::store::EmbeddingStore;
 use super::strategy::{ScoreKind, Strategy};
-use super::trainer::pretrain_push;
+use super::trainer::{self, pretrain_push};
 use crate::graph::partition::metis_lite;
 use crate::graph::scoring;
 use crate::graph::subgraph::{build_all_per_client, Prune};
 use crate::graph::{Graph, Partition};
 use crate::runtime::{ModelState, StepEngine};
-use crate::util::rng::Rng;
 use crate::util::Stopwatch;
 
 #[derive(Clone, Debug)]
@@ -71,6 +77,36 @@ impl Default for SessionConfig {
     }
 }
 
+/// Lifecycle phase markers delivered to a [`RoundObserver`] as each
+/// phase *starts*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionPhase {
+    /// Graph partitioning across clients.
+    Partition,
+    /// Subgraph expansion, pruning, and score exchange (offline work).
+    PruneScore,
+    /// Pre-training push round (paper §3.2.1).
+    Pretrain,
+    /// Federated rounds begin.
+    Rounds,
+}
+
+/// Streaming callbacks over a session's lifecycle, so the CLI and the
+/// figure harness observe per-round metrics as they happen instead of
+/// scraping [`SessionMetrics`] afterwards. All methods default to no-ops.
+pub trait RoundObserver {
+    fn on_phase(&mut self, _phase: SessionPhase) {}
+    /// A federated round finished (aggregation + validation included).
+    fn on_round(&mut self, _round: &RoundMetrics) {}
+    /// The session completed all planned rounds.
+    fn on_complete(&mut self, _metrics: &SessionMetrics) {}
+}
+
+/// Default observer: ignores everything.
+pub struct NullObserver;
+
+impl RoundObserver for NullObserver {}
+
 /// Per-remote-index scores for a client under a [`ScoreKind`].
 fn client_scores(
     kind: ScoreKind,
@@ -82,7 +118,7 @@ fn client_scores(
     match kind {
         ScoreKind::Frequency => scoring::frequency_scores(sub, layers, 768, seed),
         ScoreKind::Random => {
-            let mut rng = Rng::new(seed, 0x5C02E + sub.client_id as u64);
+            let mut rng = crate::util::rng::Rng::new(seed, 0x5C02E + sub.client_id as u64);
             (0..sub.n_remote()).map(|_| rng.f32()).collect()
         }
         ScoreKind::Degree | ScoreKind::Bridge => sub
@@ -115,98 +151,226 @@ fn merged_centrality(
     }
 }
 
-pub fn run_session(
-    g: &Graph,
-    cfg: &SessionConfig,
-    engine: Arc<dyn StepEngine>,
-) -> Result<SessionMetrics> {
-    let geom = *engine.geom();
-    let strat = &cfg.strategy;
-    let part = metis_lite(g, cfg.clients, cfg.seed);
+/// Configures the pluggable seams of a federated session and runs its
+/// offline phases. Defaults: fresh in-process slab store, [`FedAvg`],
+/// no observer.
+pub struct SessionBuilder {
+    cfg: SessionConfig,
+    store: Option<Arc<dyn EmbeddingStore>>,
+    aggregator: Arc<dyn Aggregator>,
+    observer: Box<dyn RoundObserver>,
+}
 
-    // ---- subgraph expansion + pruning ------------------------------------
-    let base_prune = match strat.retention {
-        // dynamic pruning expands un-pruned and re-samples per round
-        Some(_) if strat.dynamic_prune => Prune::None,
-        Some(i) => Prune::Retention(i),
-        None => Prune::None,
-    };
-    let prunes: Vec<Prune> = if let Some(sp) = strat.scored_prune {
-        // two-phase: expand un-scored first, score, then re-expand with
-        // the per-client top-f% (offline pre-training work, §4.1.2)
-        let probe = build_all_per_client(g, &part, &vec![base_prune.clone(); part.k], cfg.seed);
-        let merged = merged_centrality(sp.score, g, &part, cfg.seed);
-        probe
-            .iter()
+impl SessionBuilder {
+    pub fn new(cfg: SessionConfig) -> Self {
+        Self {
+            cfg,
+            store: None,
+            aggregator: Arc::new(FedAvg),
+            observer: Box::new(NullObserver),
+        }
+    }
+
+    /// Use an explicit embedding-plane backend (TCP client, sharded
+    /// compound, pre-warmed in-process server, ...).
+    pub fn store(mut self, store: Arc<dyn EmbeddingStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Replace the aggregation rule (default: weighted FedAvg).
+    pub fn aggregator(mut self, aggregator: Arc<dyn Aggregator>) -> Self {
+        self.aggregator = aggregator;
+        self
+    }
+
+    /// Attach a streaming observer for phase/round callbacks.
+    pub fn observer(mut self, observer: Box<dyn RoundObserver>) -> Self {
+        self.observer = observer;
+        self
+    }
+
+    /// Run the offline phases (partition → subgraph expansion/prune →
+    /// scoring) and assemble the session infrastructure.
+    pub fn build<'g>(self, g: &'g Graph, engine: Arc<dyn StepEngine>) -> Result<Session<'g>> {
+        let SessionBuilder {
+            cfg,
+            store,
+            aggregator,
+            mut observer,
+        } = self;
+        let geom = *engine.geom();
+        let strat = &cfg.strategy;
+
+        // ---- partition -----------------------------------------------------
+        observer.on_phase(SessionPhase::Partition);
+        let part = metis_lite(g, cfg.clients, cfg.seed);
+
+        // ---- subgraph expansion + pruning + scoring ------------------------
+        observer.on_phase(SessionPhase::PruneScore);
+        let base_prune = match strat.retention {
+            // dynamic pruning expands un-pruned and re-samples per round
+            Some(_) if strat.dynamic_prune => Prune::None,
+            Some(i) => Prune::Retention(i),
+            None => Prune::None,
+        };
+        let prunes: Vec<Prune> = if let Some(sp) = strat.scored_prune {
+            // two-phase: expand un-scored first, score, then re-expand with
+            // the per-client top-f% (offline pre-training work, §4.1.2)
+            let probe = build_all_per_client(g, &part, &vec![base_prune.clone(); part.k], cfg.seed);
+            let merged = merged_centrality(sp.score, g, &part, cfg.seed);
+            probe
+                .iter()
+                .map(|sub| {
+                    let scores = client_scores(sp.score, sub, geom.layers, &merged, cfg.seed);
+                    let map: std::collections::HashMap<u32, f32> = sub
+                        .remote
+                        .iter()
+                        .zip(&scores)
+                        .map(|(gid, s)| (*gid, *s))
+                        .collect();
+                    Prune::TopFrac {
+                        frac: sp.top_frac,
+                        scores: map,
+                    }
+                })
+                .collect()
+        } else {
+            vec![base_prune; part.k]
+        };
+        let subs = build_all_per_client(g, &part, &prunes, cfg.seed);
+        let pull_candidates: usize = subs.iter().map(|s| s.pull_candidates).sum();
+        let retained_remotes: usize = subs.iter().map(|s| s.n_remote()).sum();
+
+        // ---- infrastructure ------------------------------------------------
+        let store: Arc<dyn EmbeddingStore> = store.unwrap_or_else(|| {
+            Arc::new(EmbeddingServer::new(geom.layers - 1, geom.hidden, cfg.net))
+        });
+        ensure!(
+            store.n_layers() == geom.layers - 1 && store.hidden() == geom.hidden,
+            "embedding store geometry {}x{} does not match engine geometry {}x{} \
+             (layers-1 x hidden)",
+            store.n_layers(),
+            store.hidden(),
+            geom.layers - 1,
+            geom.hidden
+        );
+        let validator = Validator::new(g, &engine, cfg.eval_batches, cfg.seed ^ 0xEA);
+        let global = ModelState::init(&geom, cfg.seed).params;
+
+        let mut clients: Vec<Client> = subs
+            .into_iter()
             .map(|sub| {
-                let scores = client_scores(sp.score, sub, geom.layers, &merged, cfg.seed);
-                let map: std::collections::HashMap<u32, f32> = sub
-                    .remote
-                    .iter()
-                    .zip(&scores)
-                    .map(|(gid, s)| (*gid, *s))
-                    .collect();
-                Prune::TopFrac {
-                    frac: sp.top_frac,
-                    scores: map,
+                let mut c = Client::new(sub, &engine, cfg.epoch_batches, cfg.seed);
+                c.state.params = global.clone();
+                if let (true, Some(limit)) = (strat.dynamic_prune, strat.retention) {
+                    c.enable_dynamic_prune(limit);
                 }
+                c
             })
-            .collect()
-    } else {
-        vec![base_prune; part.k]
-    };
-    let subs = build_all_per_client(g, &part, &prunes, cfg.seed);
-    let pull_candidates: usize = subs.iter().map(|s| s.pull_candidates).sum();
-    let retained_remotes: usize = subs.iter().map(|s| s.n_remote()).sum();
+            .collect();
 
-    // ---- infrastructure ---------------------------------------------------
-    let server = EmbeddingServer::new(geom.layers - 1, geom.hidden, cfg.net);
-    let validator = Validator::new(g, &engine, cfg.eval_batches, cfg.seed ^ 0xEA);
-    let mut global = ModelState::init(&geom, cfg.seed).params;
-
-    let mut clients: Vec<Client> = subs
-        .into_iter()
-        .map(|sub| {
-            let mut c = Client::new(sub, &engine, cfg.epoch_batches, cfg.seed);
-            c.state.params = global.clone();
-            if let (true, Some(limit)) = (strat.dynamic_prune, strat.retention) {
-                c.enable_dynamic_prune(limit);
+        // OPP prefetch scores on the *final* (possibly pruned) subgraphs.
+        if let Some(pf) = strat.prefetch {
+            let merged = merged_centrality(pf.score, g, &part, cfg.seed);
+            for c in clients.iter_mut() {
+                let scores = client_scores(pf.score, &c.sub, geom.layers, &merged, cfg.seed);
+                c.set_scores(scores, Some(pf.top_frac));
             }
-            c
+        }
+
+        let metrics = SessionMetrics {
+            strategy: strat.name.clone(),
+            dataset: cfg.dataset.clone(),
+            n_clients: cfg.clients,
+            pull_candidates,
+            retained_remotes,
+            store_backend: store.describe(),
+            ..Default::default()
+        };
+
+        Ok(Session {
+            g,
+            cfg,
+            engine,
+            store,
+            aggregator,
+            observer,
+            validator,
+            clients,
+            global,
+            metrics,
+            pretrained: false,
         })
-        .collect();
+    }
+}
 
-    // OPP prefetch scores on the *final* (possibly pruned) subgraphs.
-    if let Some(pf) = strat.prefetch {
-        let merged = merged_centrality(pf.score, g, &part, cfg.seed);
-        for c in clients.iter_mut() {
-            let scores = client_scores(pf.score, &c.sub, geom.layers, &merged, cfg.seed);
-            c.set_scores(scores, Some(pf.top_frac));
+/// A built federated session: drive it phase by phase
+/// ([`pretrain`](Session::pretrain), [`run_round`](Session::run_round))
+/// or all at once ([`run`](Session::run)).
+pub struct Session<'g> {
+    g: &'g Graph,
+    cfg: SessionConfig,
+    engine: Arc<dyn StepEngine>,
+    store: Arc<dyn EmbeddingStore>,
+    aggregator: Arc<dyn Aggregator>,
+    observer: Box<dyn RoundObserver>,
+    validator: Validator,
+    clients: Vec<Client>,
+    global: Vec<Vec<f32>>,
+    metrics: SessionMetrics,
+    pretrained: bool,
+}
+
+impl Session<'_> {
+    /// Pre-training round (§3.2.1): every client computes and pushes its
+    /// boundary embeddings so round-1 pulls never cold-start. Idempotent;
+    /// [`run_round`](Session::run_round) calls it automatically.
+    pub fn pretrain(&mut self) -> Result<()> {
+        if self.pretrained {
+            return Ok(());
         }
+        self.pretrained = true;
+        if self.cfg.strategy.share_embeddings {
+            self.observer.on_phase(SessionPhase::Pretrain);
+            let store_ref: &dyn EmbeddingStore = self.store.as_ref();
+            for c in self.clients.iter_mut() {
+                pretrain_push(c, self.g, &self.engine, store_ref).context("pretrain push")?;
+            }
+        }
+        Ok(())
     }
 
-    // ---- pre-training round (§3.2.1) --------------------------------------
-    if strat.share_embeddings {
-        for c in clients.iter_mut() {
-            pretrain_push(c, g, &engine, &server).context("pretrain push")?;
-        }
+    /// Rounds completed so far.
+    pub fn completed_rounds(&self) -> usize {
+        self.metrics.rounds.len()
     }
 
-    // ---- federated rounds --------------------------------------------------
-    let mut metrics = SessionMetrics {
-        strategy: strat.name.clone(),
-        dataset: cfg.dataset.clone(),
-        n_clients: cfg.clients,
-        pull_candidates,
-        retained_remotes,
-        ..Default::default()
-    };
+    /// Rounds the config plans in total.
+    pub fn planned_rounds(&self) -> usize {
+        self.cfg.rounds
+    }
 
-    for round in 0..cfg.rounds {
+    /// Metrics accumulated so far.
+    pub fn metrics(&self) -> &SessionMetrics {
+        &self.metrics
+    }
+
+    /// One federated round: broadcast → client local rounds → aggregate →
+    /// global validation. Returns the round's composed metrics.
+    pub fn run_round(&mut self) -> Result<&RoundMetrics> {
+        if !self.pretrained {
+            self.pretrain()?;
+        }
+        let round = self.metrics.rounds.len();
+        if round == 0 {
+            self.observer.on_phase(SessionPhase::Rounds);
+        }
+
         // broadcast the global model
-        for c in clients.iter_mut() {
-            c.state.params = global.clone();
-            if cfg.reset_opt_each_round {
+        for c in self.clients.iter_mut() {
+            c.state.params = self.global.clone();
+            if self.cfg.reset_opt_each_round {
                 for m in c.state.m.iter_mut() {
                     m.iter_mut().for_each(|v| *v = 0.0);
                 }
@@ -216,60 +380,59 @@ pub fn run_session(
                 c.state.t = 0.0;
             }
         }
+
         // run every client's local round
-        let outcomes: Vec<super::trainer::RoundOutcome> = if cfg.parallel_clients {
-            let engine_ref = &engine;
-            let server_ref = &server;
-            let results: Vec<Result<super::trainer::RoundOutcome>> =
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = clients
-                        .iter_mut()
-                        .map(|c| {
-                            s.spawn(move || {
-                                super::trainer::run_round_stale(
-                                    c,
-                                    g,
-                                    strat,
-                                    engine_ref,
-                                    server_ref,
-                                    cfg.epochs,
-                                    cfg.lr,
-                                    cfg.overlap_stale,
-                                )
-                            })
+        let outcomes: Vec<trainer::RoundOutcome> = if self.cfg.parallel_clients {
+            let engine_ref = &self.engine;
+            let store_ref: &dyn EmbeddingStore = self.store.as_ref();
+            let g = self.g;
+            let strat = &self.cfg.strategy;
+            let (epochs, lr, stale) = (self.cfg.epochs, self.cfg.lr, self.cfg.overlap_stale);
+            let results: Vec<Result<trainer::RoundOutcome>> = std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .clients
+                    .iter_mut()
+                    .map(|c| {
+                        s.spawn(move || {
+                            trainer::run_round_stale(
+                                c, g, strat, engine_ref, store_ref, epochs, lr, stale,
+                            )
                         })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("client thread"))
-                        .collect()
-                });
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("client thread"))
+                    .collect()
+            });
             results.into_iter().collect::<Result<Vec<_>>>()?
         } else {
-            let mut outs = Vec::with_capacity(clients.len());
-            for c in clients.iter_mut() {
-                outs.push(super::trainer::run_round_stale(
+            let store_ref: &dyn EmbeddingStore = self.store.as_ref();
+            let mut outs = Vec::with_capacity(self.clients.len());
+            for c in self.clients.iter_mut() {
+                outs.push(trainer::run_round_stale(
                     c,
-                    g,
-                    strat,
-                    &engine,
-                    &server,
-                    cfg.epochs,
-                    cfg.lr,
-                    cfg.overlap_stale,
+                    self.g,
+                    &self.cfg.strategy,
+                    &self.engine,
+                    store_ref,
+                    self.cfg.epochs,
+                    self.cfg.lr,
+                    self.cfg.overlap_stale,
                 )?);
             }
             outs
         };
 
-        // aggregate
+        // aggregate + validate
         let agg_sw = Stopwatch::start();
-        let weighted: Vec<(&ModelState, f64)> = clients
+        let weighted: Vec<(&ModelState, f64)> = self
+            .clients
             .iter()
             .map(|c| (&c.state, c.sub.train_local.len().max(1) as f64))
             .collect();
-        global = fedavg(&weighted);
-        let (acc, val_loss) = validator.evaluate(&engine, &global)?;
+        self.global = self.aggregator.aggregate(&weighted);
+        let (acc, val_loss) = self.validator.evaluate(&self.engine, &self.global)?;
         let agg_time = agg_sw.secs();
 
         // compose round metrics (virtual time; DESIGN.md §7)
@@ -301,22 +464,57 @@ pub fn run_session(
         mean.push /= n;
         mean.push_hidden /= n;
         rm.mean_phases = mean;
-        rm.round_time = worst + agg_time + cfg.net.params_time(global.iter().map(|p| p.len()).sum());
-        metrics.rounds.push(rm);
+        rm.round_time = worst
+            + agg_time
+            + self
+                .cfg
+                .net
+                .params_time(self.global.iter().map(|p| p.len()).sum());
 
         if round == 0 {
-            metrics.server_embeddings = server.stored_nodes();
+            self.metrics.server_embeddings = self.store.stats()?.nodes;
         }
+        self.observer.on_round(&rm);
+        self.metrics.rounds.push(rm);
+        Ok(self.metrics.rounds.last().expect("round just pushed"))
     }
-    Ok(metrics)
+
+    /// Drive every remaining phase and return the session metrics.
+    pub fn run(mut self) -> Result<SessionMetrics> {
+        self.pretrain()?;
+        while self.completed_rounds() < self.planned_rounds() {
+            self.run_round()?;
+        }
+        Ok(self.finish())
+    }
+
+    /// Stop here (even mid-session) and hand back the metrics.
+    pub fn finish(mut self) -> SessionMetrics {
+        self.observer.on_complete(&self.metrics);
+        self.metrics
+    }
+}
+
+/// One-call convenience wrapper: in-process embedding store, FedAvg
+/// aggregation, no observer — the configuration every figure, bench,
+/// and test drives by default.
+pub fn run_session(
+    g: &Graph,
+    cfg: &SessionConfig,
+    engine: Arc<dyn StepEngine>,
+) -> Result<SessionMetrics> {
+    SessionBuilder::new(cfg.clone()).build(g, engine)?.run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::aggregation::TrimmedMean;
     use crate::graph::datasets::tiny;
     use crate::runtime::manifest::{ModelGeom, ModelKind};
     use crate::runtime::RefEngine;
+    use std::cell::RefCell;
+    use std::rc::Rc;
 
     fn engine() -> Arc<dyn StepEngine> {
         Arc::new(RefEngine::new(ModelGeom {
@@ -356,6 +554,7 @@ mod tests {
         );
         assert!(m.server_embeddings > 0);
         assert!(m.median_round_time() > 0.0);
+        assert_eq!(m.store_backend, "in-process");
         // every round pulled + pushed
         for r in &m.rounds {
             assert!(r.mean_phases.pull > 0.0);
@@ -433,5 +632,115 @@ mod tests {
         let m = run_session(&g, &c, engine()).unwrap();
         assert_eq!(m.rounds.len(), 2);
         assert_eq!(m.rounds[0].clients.len(), 4);
+    }
+
+    // ---- the builder seams ------------------------------------------------
+
+    #[derive(Default)]
+    struct Recorded {
+        phases: Vec<SessionPhase>,
+        rounds: Vec<usize>,
+        completed: bool,
+    }
+
+    struct Recorder(Rc<RefCell<Recorded>>);
+
+    impl RoundObserver for Recorder {
+        fn on_phase(&mut self, phase: SessionPhase) {
+            self.0.borrow_mut().phases.push(phase);
+        }
+
+        fn on_round(&mut self, round: &RoundMetrics) {
+            self.0.borrow_mut().rounds.push(round.round);
+        }
+
+        fn on_complete(&mut self, _metrics: &SessionMetrics) {
+            self.0.borrow_mut().completed = true;
+        }
+    }
+
+    #[test]
+    fn observer_streams_phases_and_rounds() {
+        let g = tiny(85);
+        let rec = Rc::new(RefCell::new(Recorded::default()));
+        let m = SessionBuilder::new(cfg(Strategy::e(), 3))
+            .observer(Box::new(Recorder(Rc::clone(&rec))))
+            .build(&g, engine())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(m.rounds.len(), 3);
+        let r = rec.borrow();
+        assert_eq!(
+            r.phases,
+            vec![
+                SessionPhase::Partition,
+                SessionPhase::PruneScore,
+                SessionPhase::Pretrain,
+                SessionPhase::Rounds
+            ]
+        );
+        assert_eq!(r.rounds, vec![0, 1, 2]);
+        assert!(r.completed);
+    }
+
+    #[test]
+    fn builder_matches_run_session_exactly() {
+        let g = tiny(87);
+        let a = run_session(&g, &cfg(Strategy::opp(), 3), engine()).unwrap();
+        let b = SessionBuilder::new(cfg(Strategy::opp(), 3))
+            .build(&g, engine())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(a.accuracies(), b.accuracies());
+        assert_eq!(a.server_embeddings, b.server_embeddings);
+    }
+
+    #[test]
+    fn phase_driving_matches_run() {
+        let g = tiny(89);
+        let a = run_session(&g, &cfg(Strategy::e(), 3), engine()).unwrap();
+        let mut session = SessionBuilder::new(cfg(Strategy::e(), 3))
+            .build(&g, engine())
+            .unwrap();
+        session.pretrain().unwrap();
+        session.pretrain().unwrap(); // idempotent
+        while session.completed_rounds() < session.planned_rounds() {
+            let r = session.run_round().unwrap();
+            assert!(r.accuracy.is_finite());
+        }
+        let b = session.finish();
+        assert_eq!(a.accuracies(), b.accuracies());
+    }
+
+    #[test]
+    fn trimmed_mean_session_learns() {
+        let g = tiny(91);
+        let m = SessionBuilder::new(cfg(Strategy::e(), 8))
+            .aggregator(Arc::new(TrimmedMean { trim: 1 }))
+            .build(&g, engine())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(m.rounds.len(), 8);
+        assert!(
+            m.peak_accuracy() > 0.4,
+            "trimmed-mean session failed to learn: {}",
+            m.peak_accuracy()
+        );
+    }
+
+    #[test]
+    fn mismatched_store_geometry_rejected() {
+        let g = tiny(93);
+        let wrong: Arc<dyn EmbeddingStore> =
+            Arc::new(EmbeddingServer::new(2, 99, NetConfig::default()));
+        let err = SessionBuilder::new(cfg(Strategy::e(), 1))
+            .store(wrong)
+            .build(&g, engine())
+            .err()
+            .expect("geometry mismatch must fail build");
+        assert!(format!("{err:#}").contains("geometry"), "{err:#}");
     }
 }

@@ -1,0 +1,348 @@
+//! The transport-agnostic embedding plane: [`EmbeddingStore`] is the
+//! narrow trait every consumer of remote embeddings (trainer, session,
+//! harness, CLI) programs against, with three implementations —
+//!
+//! * the in-process slab [`EmbeddingServer`] (default; zero transport),
+//! * [`TcpEmbeddingStore`] speaking the wire protocol of
+//!   `net_transport.rs` against a standalone `optimes serve` process
+//!   (the paper's deployment shape: a separate Redis-style store reached
+//!   over the network by all clients, §5.1),
+//! * [`ShardedStore`] hash-partitioning vertex ids across N backends of
+//!   either kind (scale-out of the embedding plane itself).
+//!
+//! Every call is batched (one logical RPC per pull/push phase) and
+//! `Send + Sync`, so parallel clients share one `Arc<dyn EmbeddingStore>`
+//! exactly as they previously shared `&EmbeddingServer`.
+//!
+//! [`EmbeddingServer`]: super::embedding_server::EmbeddingServer
+//! [`TcpEmbeddingStore`]: super::net_transport::TcpEmbeddingStore
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::embedding_server::EmbeddingServer;
+use super::metrics::{RpcKind, RpcRecord};
+use super::netsim::NetConfig;
+
+/// Aggregate store occupancy, as reported by `stats` RPCs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Unique vertices stored (any layer).
+    pub nodes: usize,
+    /// Total embedding rows across layers.
+    pub rows: usize,
+}
+
+/// A store of per-vertex hidden embeddings `h^1..h^{L-1}`, keyed by
+/// global vertex id, with one logical DB per layer (paper §5.1).
+///
+/// Contract shared by all impls:
+/// * `push` upserts `per_layer[l]` as row-major `[nodes.len(), hidden]`.
+/// * `pull_into` resizes `out` to one `[nodes.len(), hidden]` tensor per
+///   layer (reusing capacity) and zero-fills rows of never-pushed nodes.
+/// * Values round-trip bit-exactly; a session run against any backend
+///   follows the same accuracy trajectory for the same seed.
+/// * Returned [`RpcRecord`]s carry the backend's notion of service time
+///   (modeled virtual time in-process, measured wall time over TCP).
+///
+/// Sessions additionally assume the store holds *no rows for their
+/// graph* when they start (the in-process default is constructed fresh
+/// per session). A long-lived remote daemon reused across sessions
+/// serves rows pushed by earlier ones where the contract promises
+/// zeros — restart the daemon (or run one daemon per session) when
+/// cross-backend reproducibility matters.
+pub trait EmbeddingStore: Send + Sync {
+    /// Number of hidden-layer DBs (L-1 for an L-layer GNN).
+    fn n_layers(&self) -> usize;
+
+    /// Embedding row width.
+    fn hidden(&self) -> usize;
+
+    /// Batched upsert of all layers for `nodes`.
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord>;
+
+    /// Batched pull of all layers for `nodes` into a caller buffer.
+    fn pull_into(&self, nodes: &[u32], on_demand: bool, out: &mut Vec<Vec<f32>>)
+        -> Result<RpcRecord>;
+
+    /// Allocating wrapper over [`pull_into`](EmbeddingStore::pull_into).
+    fn pull(&self, nodes: &[u32], on_demand: bool) -> Result<(Vec<Vec<f32>>, RpcRecord)> {
+        let mut out = Vec::new();
+        let rec = self.pull_into(nodes, on_demand, &mut out)?;
+        Ok((out, rec))
+    }
+
+    /// Occupancy counters (the paper's "embeddings maintained" marker).
+    fn stats(&self) -> Result<StoreStats>;
+
+    /// Human-readable backend descriptor for `optimes info` / reports,
+    /// e.g. `in-process`, `tcp(127.0.0.1:7070)`, `sharded(4 shards ...)`.
+    fn describe(&self) -> String;
+}
+
+/// Hash-partitions vertex ids across N child stores. Pushes and pulls
+/// fan out as one batched sub-RPC per shard that owns at least one of
+/// the requested ids; shard RPCs are accounted as running in parallel
+/// (`time = max over shards`, `bytes = sum`).
+pub struct ShardedStore {
+    backends: Vec<Arc<dyn EmbeddingStore>>,
+    n_layers: usize,
+    hidden: usize,
+}
+
+impl ShardedStore {
+    /// Build over existing backends; all must share one geometry.
+    pub fn new(backends: Vec<Arc<dyn EmbeddingStore>>) -> Result<Self> {
+        ensure!(!backends.is_empty(), "sharded store needs at least one backend");
+        let (n_layers, hidden) = (backends[0].n_layers(), backends[0].hidden());
+        for (i, b) in backends.iter().enumerate() {
+            ensure!(
+                b.n_layers() == n_layers && b.hidden() == hidden,
+                "shard {i} geometry {}x{} != shard 0 geometry {n_layers}x{hidden}",
+                b.n_layers(),
+                b.hidden()
+            );
+        }
+        Ok(Self {
+            backends,
+            n_layers,
+            hidden,
+        })
+    }
+
+    /// Convenience: N in-process slab servers (single-host scale-out).
+    pub fn in_process(shards: usize, n_layers: usize, hidden: usize, net: NetConfig) -> Self {
+        let backends: Vec<Arc<dyn EmbeddingStore>> = (0..shards.max(1))
+            .map(|_| {
+                Arc::new(EmbeddingServer::new(n_layers, hidden, net)) as Arc<dyn EmbeddingStore>
+            })
+            .collect();
+        Self::new(backends).expect("uniform in-process shards")
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// Owning shard of a vertex id (splitmix-style avalanche so dense id
+    /// ranges spread evenly regardless of shard count).
+    fn shard_of(&self, node: u32) -> usize {
+        let mut x = node as u64 ^ 0x9E37_79B9_7F4A_7C15;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        x ^= x >> 33;
+        (x % self.backends.len() as u64) as usize
+    }
+
+    /// `groups[shard]` = positions into `nodes` owned by that shard.
+    fn group(&self, nodes: &[u32]) -> Vec<Vec<usize>> {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.backends.len()];
+        for (i, &node) in nodes.iter().enumerate() {
+            groups[self.shard_of(node)].push(i);
+        }
+        groups
+    }
+}
+
+impl EmbeddingStore for ShardedStore {
+    fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        ensure!(
+            per_layer.len() == self.n_layers,
+            "push layer count {} != {}",
+            per_layer.len(),
+            self.n_layers
+        );
+        let h = self.hidden;
+        let mut rec = RpcRecord {
+            kind: RpcKind::Push,
+            rows: nodes.len(),
+            bytes: 0,
+            time: 0.0,
+        };
+        for (sid, group) in self.group(nodes).iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let sub_nodes: Vec<u32> = group.iter().map(|&i| nodes[i]).collect();
+            let sub_layers: Vec<Vec<f32>> = per_layer
+                .iter()
+                .map(|rows| {
+                    let mut v = Vec::with_capacity(group.len() * h);
+                    for &i in group {
+                        v.extend_from_slice(&rows[i * h..(i + 1) * h]);
+                    }
+                    v
+                })
+                .collect();
+            let r = self.backends[sid].push(&sub_nodes, &sub_layers)?;
+            rec.bytes += r.bytes;
+            rec.time = rec.time.max(r.time);
+        }
+        Ok(rec)
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        let h = self.hidden;
+        out.truncate(self.n_layers);
+        out.resize_with(self.n_layers, Vec::new);
+        for rows in out.iter_mut() {
+            rows.clear();
+            rows.resize(nodes.len() * h, 0.0);
+        }
+        let mut rec = RpcRecord {
+            kind: if on_demand {
+                RpcKind::PullOnDemand
+            } else {
+                RpcKind::Pull
+            },
+            rows: nodes.len(),
+            bytes: 0,
+            time: 0.0,
+        };
+        let mut shard_buf: Vec<Vec<f32>> = Vec::new();
+        for (sid, group) in self.group(nodes).iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let sub_nodes: Vec<u32> = group.iter().map(|&i| nodes[i]).collect();
+            let r = self.backends[sid].pull_into(&sub_nodes, on_demand, &mut shard_buf)?;
+            for (layer, rows) in out.iter_mut().zip(&shard_buf) {
+                for (j, &i) in group.iter().enumerate() {
+                    layer[i * h..(i + 1) * h].copy_from_slice(&rows[j * h..(j + 1) * h]);
+                }
+            }
+            rec.bytes += r.bytes;
+            rec.time = rec.time.max(r.time);
+        }
+        Ok(rec)
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        let mut total = StoreStats::default();
+        for b in &self.backends {
+            let s = b.stats()?;
+            total.nodes += s.nodes;
+            total.rows += s.rows;
+        }
+        Ok(total)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sharded({} shards over {})",
+            self.backends.len(),
+            self.backends[0].describe()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(nodes: &[u32], h: usize, salt: f32) -> Vec<f32> {
+        nodes
+            .iter()
+            .flat_map(|&n| (0..h).map(move |j| n as f32 * 10.0 + j as f32 + salt))
+            .collect()
+    }
+
+    fn dyn_server(h: usize) -> Arc<dyn EmbeddingStore> {
+        Arc::new(EmbeddingServer::new(2, h, NetConfig::default()))
+    }
+
+    #[test]
+    fn sharded_matches_single_backend() {
+        let h = 4;
+        let single = dyn_server(h);
+        let sharded = ShardedStore::in_process(4, 2, h, NetConfig::default());
+        assert_eq!(sharded.n_shards(), 4);
+        let nodes: Vec<u32> = (0..257).collect();
+        let l1 = rows(&nodes, h, 0.0);
+        let l2 = rows(&nodes, h, 0.5);
+        single.push(&nodes, &[l1.clone(), l2.clone()]).unwrap();
+        sharded.push(&nodes, &[l1, l2]).unwrap();
+
+        // mixed order + a missing node must agree exactly
+        let query = [250u32, 3, 99_999, 0, 128];
+        let (a, _) = single.pull(&query, false).unwrap();
+        let (b, rec) = sharded.pull(&query, false).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(rec.rows, query.len());
+        assert!(rec.time > 0.0);
+
+        // occupancy sums across shards to the single-backend total
+        let sa = single.stats().unwrap();
+        let sb = sharded.stats().unwrap();
+        assert_eq!(sa, sb);
+        assert_eq!(sa.nodes, 257);
+        assert_eq!(sa.rows, 514);
+    }
+
+    #[test]
+    fn sharding_spreads_dense_id_ranges() {
+        let sharded = ShardedStore::in_process(4, 2, 4, NetConfig::default());
+        let nodes: Vec<u32> = (0..4000).collect();
+        let groups = sharded.group(&nodes);
+        for (sid, g) in groups.iter().enumerate() {
+            let frac = g.len() as f64 / nodes.len() as f64;
+            assert!(
+                (0.15..=0.35).contains(&frac),
+                "shard {sid} holds {:.2} of a dense range",
+                frac
+            );
+        }
+    }
+
+    #[test]
+    fn pull_into_reuses_dirty_buffer() {
+        let h = 4;
+        let sharded = ShardedStore::in_process(3, 2, h, NetConfig::default());
+        let nodes = [7u32, 21];
+        sharded
+            .push(&nodes, &[rows(&nodes, h, 0.0), rows(&nodes, h, 1.0)])
+            .unwrap();
+        let mut buf = vec![vec![9.9f32; 1], vec![9.9f32; 77], vec![9.9f32; 5]];
+        sharded.pull_into(&[21, 5, 7], false, &mut buf).unwrap();
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf[0].len(), 3 * h);
+        assert_eq!(&buf[0][0..h], &rows(&[21], h, 0.0)[..]);
+        assert!(buf[0][h..2 * h].iter().all(|&v| v == 0.0)); // node 5 missing
+        assert_eq!(&buf[0][2 * h..3 * h], &rows(&[7], h, 0.0)[..]);
+        assert_eq!(&buf[1][0..h], &rows(&[21], h, 1.0)[..]);
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let a: Arc<dyn EmbeddingStore> = Arc::new(EmbeddingServer::new(2, 4, NetConfig::default()));
+        let b: Arc<dyn EmbeddingStore> = Arc::new(EmbeddingServer::new(2, 8, NetConfig::default()));
+        assert!(ShardedStore::new(vec![a, b]).is_err());
+        assert!(ShardedStore::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let sharded = ShardedStore::in_process(4, 2, 4, NetConfig::default());
+        let rec = sharded.push(&[], &[Vec::new(), Vec::new()]).unwrap();
+        assert_eq!((rec.rows, rec.bytes), (0, 0));
+        let (got, rec) = sharded.pull(&[], true).unwrap();
+        assert_eq!(rec.kind, RpcKind::PullOnDemand);
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|l| l.is_empty()));
+        assert_eq!(sharded.stats().unwrap(), StoreStats::default());
+    }
+}

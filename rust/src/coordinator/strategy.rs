@@ -77,6 +77,30 @@ pub struct ScoredPruneCfg {
 pub const DEFAULT_RETENTION: usize = 4;
 pub const DEFAULT_FRAC: f64 = 0.25;
 
+/// The strategy-string grammar accepted by [`Strategy::parse`]
+/// (case-insensitive).
+pub const STRATEGY_GRAMMAR: &str =
+    "D | E | O | P | P<i> | P<i>dyn | Pinf | OP | OPP | OPG | \
+     OPP_<T|R|D|B><pct> | OPG_<T|R|D|B><pct>  (e.g. P2, P4dyn, OPP_T25, OPG_B50)";
+
+/// A strategy string that matched none of [`STRATEGY_GRAMMAR`]'s rules.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseStrategyError {
+    input: String,
+}
+
+impl fmt::Display for ParseStrategyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown strategy {:?}; expected {STRATEGY_GRAMMAR}",
+            self.input
+        )
+    }
+}
+
+impl std::error::Error for ParseStrategyError {}
+
 impl Strategy {
     pub fn d() -> Self {
         Strategy {
@@ -198,8 +222,15 @@ impl Strategy {
     }
 
     /// Parse "D" | "E" | "O" | "P" | "P2" | "OP" | "OPP" | "OPP_T0" |
-    /// "OPP_R25" | "OPG" | "OPG_B25" | "OPG_T75" | ...
-    pub fn parse(s: &str) -> Option<Strategy> {
+    /// "OPP_R25" | "OPG" | "OPG_B25" | "OPG_T75" | ... The error names
+    /// the full grammar ([`STRATEGY_GRAMMAR`]).
+    pub fn parse(s: &str) -> Result<Strategy, ParseStrategyError> {
+        Self::try_parse(s).ok_or_else(|| ParseStrategyError {
+            input: s.to_string(),
+        })
+    }
+
+    fn try_parse(s: &str) -> Option<Strategy> {
         let up = s.to_ascii_uppercase();
         match up.as_str() {
             "D" => return Some(Self::d()),
@@ -211,7 +242,7 @@ impl Strategy {
             "OPG" => return Some(Self::opg()),
             _ => {}
         }
-        if let Some(rest) = up.strip_prefix("P") {
+        if let Some(rest) = up.strip_prefix('P') {
             if let Some(core) = rest.strip_suffix("DYN") {
                 if let Ok(i) = core.parse::<usize>() {
                     return Some(Self::p_dynamic(i));
@@ -229,14 +260,19 @@ impl Strategy {
         }
         for (prefix, is_prefetch) in [("OPP_", true), ("OPG_", false)] {
             if let Some(rest) = up.strip_prefix(prefix) {
-                let score = match &rest[..1] {
-                    "T" => ScoreKind::Frequency,
-                    "R" => ScoreKind::Random,
-                    "D" => ScoreKind::Degree,
-                    "B" => ScoreKind::Bridge,
+                let mut chars = rest.chars();
+                let score = match chars.next()? {
+                    'T' => ScoreKind::Frequency,
+                    'R' => ScoreKind::Random,
+                    'D' => ScoreKind::Degree,
+                    'B' => ScoreKind::Bridge,
                     _ => return None,
                 };
-                let frac = rest[1..].parse::<f64>().ok()? / 100.0;
+                let pct = chars.as_str().parse::<f64>().ok()?;
+                if !(0.0..=100.0).contains(&pct) {
+                    return None;
+                }
+                let frac = pct / 100.0;
                 return Some(if is_prefetch {
                     Self::opp_with(frac, score)
                 } else {
@@ -293,7 +329,25 @@ mod tests {
         assert_eq!(b25.scored_prune.unwrap().score, ScoreKind::Bridge);
         let t75 = Strategy::parse("OPG_T75").unwrap();
         assert!((t75.scored_prune.unwrap().top_frac - 0.75).abs() < 1e-9);
-        assert!(Strategy::parse("XYZ").is_none());
+        let p4dyn = Strategy::parse("p4dyn").unwrap();
+        assert!(p4dyn.dynamic_prune && p4dyn.retention == Some(4));
+        assert!(Strategy::parse("XYZ").is_err());
+    }
+
+    #[test]
+    fn parse_error_names_the_grammar() {
+        for bad in ["XYZ", "OPP_", "OPP_Q25", "OPG_T250", "P-1", ""] {
+            let err = Strategy::parse(bad).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(&format!("{bad:?}")), "{msg}");
+            assert!(msg.contains("OPP_<T|R|D|B><pct>"), "{msg}");
+        }
+        // the error converts into anyhow::Error via `?`
+        fn through_anyhow(s: &str) -> anyhow::Result<Strategy> {
+            Ok(Strategy::parse(s)?)
+        }
+        assert!(through_anyhow("nope").is_err());
+        assert!(through_anyhow("OPP").is_ok());
     }
 
     #[test]

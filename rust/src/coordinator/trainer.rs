@@ -13,8 +13,8 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use super::client::{Client, EmbCache};
-use super::embedding_server::EmbeddingServer;
 use super::metrics::{CacheStats, ClientRoundMetrics, RpcRecord};
+use super::store::EmbeddingStore;
 use super::strategy::Strategy;
 use crate::graph::sampler::{Blocks, Sampler, SharedAdj};
 use crate::graph::{ClientSubgraph, Graph};
@@ -150,7 +150,7 @@ pub fn assemble_batch(
 }
 
 /// Compute h^1..h^{L-1} for the client's push nodes and push them to the
-/// embedding server in one batched RPC. Returns (embed-compute seconds,
+/// embedding store in one batched RPC. Returns (embed-compute seconds,
 /// push RPC record, cache stats over the embed assemblies). `local_only`
 /// selects the pre-training sampling mode.
 #[allow(clippy::too_many_arguments)]
@@ -159,7 +159,7 @@ pub fn compute_and_push(
     cache: &EmbCache,
     state: &ModelState,
     engine: &Arc<dyn StepEngine>,
-    server: &EmbeddingServer,
+    store: &dyn EmbeddingStore,
     sampler: &mut Sampler,
     adj_embed: &SharedAdj,
     push_local: &[u32],
@@ -194,7 +194,7 @@ pub fn compute_and_push(
         }
     }
     let compute = sw.secs();
-    let rec = server.push(push_globals, &per_layer);
+    let rec = store.push(push_globals, &per_layer)?;
     Ok((compute, Some(rec), stats))
 }
 
@@ -205,14 +205,14 @@ pub fn pretrain_push(
     client: &mut Client,
     g: &Graph,
     engine: &Arc<dyn StepEngine>,
-    server: &EmbeddingServer,
+    store: &dyn EmbeddingStore,
 ) -> Result<()> {
     let (_, _rec, _stats) = compute_and_push(
         &client.sub,
         &client.cache,
         &client.state,
         engine,
-        server,
+        store,
         &mut client.sampler,
         &client.adj_embed,
         &client.push_local,
@@ -230,11 +230,11 @@ pub fn run_round(
     g: &Graph,
     strategy: &Strategy,
     engine: &Arc<dyn StepEngine>,
-    server: &EmbeddingServer,
+    store: &dyn EmbeddingStore,
     epochs: usize,
     lr: f32,
 ) -> Result<RoundOutcome> {
-    run_round_stale(client, g, strategy, engine, server, epochs, lr, 1)
+    run_round_stale(client, g, strategy, engine, store, epochs, lr, 1)
 }
 
 /// Run one full client round. `overlap_stale = k` pushes the state from
@@ -248,7 +248,7 @@ pub fn run_round_stale(
     g: &Graph,
     strategy: &Strategy,
     engine: &Arc<dyn StepEngine>,
-    server: &EmbeddingServer,
+    store: &dyn EmbeddingStore,
     epochs: usize,
     lr: f32,
     overlap_stale: usize,
@@ -276,7 +276,7 @@ pub fn run_round_stale(
         };
         if !rows.is_empty() {
             let globals: Vec<u32> = rows.iter().map(|&r| client.sub.remote[r as usize]).collect();
-            let rec = server.pull_into(&globals, false, &mut client.pull_buf);
+            let rec = store.pull_into(&globals, false, &mut client.pull_buf)?;
             client.cache.insert(&rows, &client.pull_buf);
             out.metrics.phases.pull += rec.time;
             out.metrics.embeddings_pulled += rec.rows;
@@ -322,7 +322,7 @@ pub fn run_round_stale(
             scratch,
             pull_buf,
         };
-        let (el, et) = run_epoch(&mut ctx, g, strategy, engine, server, targets, lr, &mut out)?;
+        let (el, et) = run_epoch(&mut ctx, g, strategy, engine, store, targets, lr, &mut out)?;
         loss_acc += el;
         loss_n += targets.len();
         out.epoch_times.push(et);
@@ -368,7 +368,7 @@ pub fn run_round_stale(
                     &cache_snap,
                     &state_snap,
                     engine,
-                    server,
+                    store,
                     &mut push_sampler,
                     &adj_embed,
                     &push_local,
@@ -380,7 +380,7 @@ pub fn run_round_stale(
             let mut results = Vec::new();
             for targets in target_lists.iter().skip(overlap_at) {
                 results.push((
-                    run_epoch(&mut ctx, g, strategy, engine, server, targets, lr, &mut out),
+                    run_epoch(&mut ctx, g, strategy, engine, store, targets, lr, &mut out),
                     targets.len(),
                 ));
             }
@@ -404,7 +404,7 @@ pub fn run_round_stale(
             &client.cache,
             &client.state,
             engine,
-            server,
+            store,
             &mut push_sampler,
             &client.adj_embed,
             &client.push_local,
@@ -466,7 +466,7 @@ fn run_epoch(
     g: &Graph,
     strategy: &Strategy,
     engine: &Arc<dyn StepEngine>,
-    server: &EmbeddingServer,
+    store: &dyn EmbeddingStore,
     targets: &[Vec<u32>],
     lr: f32,
     out: &mut RoundOutcome,
@@ -488,7 +488,7 @@ fn run_epoch(
                     .iter()
                     .map(|&r| ctx.sub.remote[r as usize])
                     .collect();
-                let rec = server.pull_into(&globals, true, ctx.pull_buf);
+                let rec = store.pull_into(&globals, true, ctx.pull_buf)?;
                 ctx.cache.insert(&missing, &*ctx.pull_buf);
                 out.metrics.phases.dyn_pull += rec.time;
                 out.metrics.embeddings_pulled += rec.rows;
@@ -514,6 +514,7 @@ fn run_epoch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::embedding_server::EmbeddingServer;
     use crate::coordinator::netsim::NetConfig;
     use crate::graph::datasets::tiny;
     use crate::graph::partition::metis_lite;

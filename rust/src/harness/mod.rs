@@ -1,5 +1,6 @@
-//! Bench/figure harness: engine factory, session caching, ASCII tables,
-//! and one generator per paper table/figure (see DESIGN.md §6).
+//! Bench/figure harness: engine + store factories, session caching,
+//! ASCII tables, and one generator per paper table/figure (see
+//! DESIGN.md §6).
 //!
 //! Environment knobs (all optional):
 //! * `OPTIMES_ENGINE=ref|pjrt` — force the compute engine (default: PJRT
@@ -7,6 +8,10 @@
 //! * `OPTIMES_SCALE=n` — dataset shrink divisor (default 2 for benches).
 //! * `OPTIMES_ROUNDS=n` — override federated rounds per session.
 //! * `OPTIMES_FRESH=1` — ignore the session cache under `reports/`.
+//! * `OPTIMES_SERVER=host:port[,host:port...]` — back sessions by remote
+//!   embedding stores over TCP (several addresses = hash-sharded).
+//! * `OPTIMES_SHARDS=n` — back sessions by an n-way sharded in-process
+//!   store (ignored when `OPTIMES_SERVER` is set).
 
 pub mod figures;
 pub mod report;
@@ -15,7 +20,11 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{run_session, SessionConfig, SessionMetrics, Strategy};
+use crate::coordinator::metrics::RoundMetrics;
+use crate::coordinator::{
+    EmbeddingServer, EmbeddingStore, NetConfig, RoundObserver, SessionBuilder, SessionConfig,
+    SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore,
+};
 use crate::graph::datasets::{self, DatasetPreset};
 use crate::graph::Graph;
 use crate::runtime::{Manifest, ModelGeom, ModelKind, PjrtEngine, RefEngine, StepEngine};
@@ -132,6 +141,109 @@ pub fn load_dataset(name: &str) -> Result<(DatasetPreset, Graph)> {
     datasets::load(name, dataset_scale()).ok_or_else(|| anyhow!("unknown dataset {name}"))
 }
 
+/// The embedding-plane backend selected by the environment knobs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreSpec {
+    /// Default: one fresh in-process slab server per session.
+    InProcess,
+    /// Remote TCP stores; >1 address means hash-sharding across them.
+    Tcp(Vec<String>),
+    /// N-way sharded in-process store.
+    ShardedInProcess(usize),
+}
+
+/// Read `OPTIMES_SERVER` / `OPTIMES_SHARDS` into a [`StoreSpec`].
+pub fn store_spec() -> StoreSpec {
+    if let Ok(s) = std::env::var("OPTIMES_SERVER") {
+        let addrs: Vec<String> = s
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+        if !addrs.is_empty() {
+            return StoreSpec::Tcp(addrs);
+        }
+    }
+    if let Some(n) = env_usize("OPTIMES_SHARDS") {
+        if n > 1 {
+            return StoreSpec::ShardedInProcess(n);
+        }
+    }
+    StoreSpec::InProcess
+}
+
+/// Human-readable description of the active store backend + shard count
+/// (the `optimes info` line). The strings deliberately match what
+/// [`EmbeddingStore::describe`] reports into `SessionMetrics`, so `info`
+/// and the session reports never disagree about the backend.
+pub fn store_desc() -> String {
+    match store_spec() {
+        StoreSpec::InProcess => "in-process".into(),
+        StoreSpec::Tcp(addrs) if addrs.len() == 1 => format!("tcp({})", addrs[0]),
+        StoreSpec::Tcp(addrs) => {
+            format!("sharded({} shards over tcp({}))", addrs.len(), addrs[0])
+        }
+        StoreSpec::ShardedInProcess(n) => format!("sharded({n} shards over in-process)"),
+    }
+}
+
+/// Number of embedding-plane shards (backend count) the active
+/// [`StoreSpec`] fans out over.
+pub fn store_shards() -> usize {
+    match store_spec() {
+        StoreSpec::InProcess => 1,
+        StoreSpec::Tcp(addrs) => addrs.len(),
+        StoreSpec::ShardedInProcess(n) => n,
+    }
+}
+
+/// Build the embedding store for the active [`StoreSpec`] at the given
+/// engine geometry.
+pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingStore>> {
+    let (n_layers, hidden) = (geom.layers - 1, geom.hidden);
+    let store: Arc<dyn EmbeddingStore> = match store_spec() {
+        StoreSpec::InProcess => Arc::new(EmbeddingServer::new(n_layers, hidden, net)),
+        StoreSpec::Tcp(addrs) => {
+            let backends: Vec<Arc<dyn EmbeddingStore>> = addrs
+                .iter()
+                .map(|a| {
+                    TcpEmbeddingStore::connect(a.as_str(), n_layers, hidden)
+                        .map(|s| Arc::new(s) as Arc<dyn EmbeddingStore>)
+                })
+                .collect::<Result<_>>()?;
+            if backends.len() == 1 {
+                backends.into_iter().next().expect("one backend")
+            } else {
+                Arc::new(ShardedStore::new(backends)?)
+            }
+        }
+        StoreSpec::ShardedInProcess(n) => {
+            Arc::new(ShardedStore::in_process(n, n_layers, hidden, net))
+        }
+    };
+    Ok(store)
+}
+
+/// Streams per-round progress of harness-driven sessions to stderr (the
+/// tables still render from the final metrics on stdout).
+struct ProgressObserver {
+    key: String,
+    total: usize,
+}
+
+impl RoundObserver for ProgressObserver {
+    fn on_round(&mut self, r: &RoundMetrics) {
+        eprintln!(
+            "  [{}] round {:>2}/{} acc {:5.2}%  time {:.3}s",
+            self.key,
+            r.round + 1,
+            self.total,
+            r.accuracy * 100.0,
+            r.round_time
+        );
+    }
+}
+
 /// Default session config for a (preset, strategy) pair at bench scale.
 pub fn bench_config(p: &DatasetPreset, strategy: Strategy, clients: usize) -> SessionConfig {
     SessionConfig {
@@ -167,7 +279,15 @@ pub fn cached_session(
             }
         }
     }
-    let m = run_session(g, cfg, Arc::clone(engine))?;
+    let store = make_store(engine.geom(), cfg.net)?;
+    let m = SessionBuilder::new(cfg.clone())
+        .store(store)
+        .observer(Box::new(ProgressObserver {
+            key: key.to_string(),
+            total: cfg.rounds,
+        }))
+        .build(g, Arc::clone(engine))?
+        .run()?;
     let _ = std::fs::write(&path, report::session_to_json(&m).to_string_pretty());
     Ok(m)
 }

@@ -50,6 +50,7 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
     let mut o = JsonObj::new();
     o.set("strategy", m.strategy.as_str());
     o.set("dataset", m.dataset.as_str());
+    o.set("store_backend", m.store_backend.as_str());
     o.set("n_clients", m.n_clients);
     o.set("server_embeddings", m.server_embeddings);
     o.set("pull_candidates", m.pull_candidates);
@@ -92,6 +93,11 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
     let mut m = SessionMetrics {
         strategy: j.at("strategy").as_str()?.to_string(),
         dataset: j.at("dataset").as_str()?.to_string(),
+        store_backend: j
+            .at("store_backend")
+            .as_str()
+            .unwrap_or_default()
+            .to_string(),
         n_clients: j.at("n_clients").as_usize()?,
         server_embeddings: j.at("server_embeddings").as_usize().unwrap_or(0),
         pull_candidates: j.at("pull_candidates").as_usize().unwrap_or(0),
@@ -147,6 +153,7 @@ mod tests {
         let mut m = SessionMetrics {
             strategy: "OPP".into(),
             dataset: "reddit-s".into(),
+            store_backend: "tcp(10.0.0.2:7070)".into(),
             n_clients: 4,
             server_embeddings: 123,
             pull_candidates: 500,
@@ -183,6 +190,7 @@ mod tests {
         assert!((back.median_round_time() - m.median_round_time()).abs() < 1e-9);
         assert_eq!(back.rpcs(RpcKind::PullOnDemand).len(), 3);
         assert_eq!(back.server_embeddings, 123);
+        assert_eq!(back.store_backend, "tcp(10.0.0.2:7070)");
         // derived metrics survive the roundtrip
         assert!((back.peak_accuracy() - m.peak_accuracy()).abs() < 1e-9);
     }

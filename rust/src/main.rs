@@ -1,13 +1,16 @@
 //! `optimes` — the L3 coordinator CLI (leader entrypoint).
 //!
 //! ```text
-//! optimes info                         # datasets, artifacts, engine
+//! optimes info                         # datasets, artifacts, engine, store
 //! optimes run   --dataset reddit-s --strategy OPP [--rounds 16]
 //!               [--model gc|sage] [--clients N] [--fanout 5|10|15]
 //!               [--epochs 3] [--lr 0.01] [--engine ref|pjrt]
+//!               [--server host:port[,host:port...]] [--shards N]
+//!               [--agg fedavg|uniform|trimmed[:k]]
 //!               [--scale N] [--seed S] [--report out.json]
 //! optimes sweep --dataset reddit-s --strategies D,E,OP,OPP,OPG
 //! optimes fig   <table1|2a|2b|6|7|8|9|10|11|12|13|14|all>
+//! optimes serve --port 7070 [--layers 2] [--hidden 32] [--shards N]
 //! optimes smoke                        # PJRT round-trip health check
 //! ```
 
@@ -16,7 +19,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use optimes::coordinator::metrics::paper_target_accuracy;
-use optimes::coordinator::{SessionConfig, SessionMetrics, Strategy};
+use optimes::coordinator::{
+    aggregation, EmbServerDaemon, EmbeddingServer, EmbeddingStore, NetConfig, RoundMetrics,
+    RoundObserver, SessionBuilder, SessionConfig, SessionMetrics, ShardedStore, Strategy,
+};
 use optimes::graph::datasets;
 use optimes::harness::{self, figures};
 use optimes::runtime::{Manifest, ModelKind};
@@ -36,7 +42,8 @@ fn main() {
 }
 
 fn dispatch(cmd: &str, args: &Args) -> Result<()> {
-    // --engine / --scale / --rounds flags map onto the harness env knobs
+    // --engine / --scale / --rounds / --server / --shards flags map onto
+    // the harness env knobs
     if let Some(e) = args.get("engine") {
         std::env::set_var("OPTIMES_ENGINE", e);
     }
@@ -45,6 +52,12 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     }
     if let Some(r) = args.get("rounds") {
         std::env::set_var("OPTIMES_ROUNDS", r);
+    }
+    if let Some(s) = args.get("server") {
+        std::env::set_var("OPTIMES_SERVER", s);
+    }
+    if let Some(s) = args.get("shards") {
+        std::env::set_var("OPTIMES_SHARDS", s);
     }
     match cmd {
         "info" => info(),
@@ -59,9 +72,9 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             figures::run_figure(id)
         }
         "smoke" => smoke(),
-        "emb-server" => emb_server(args),
-        "help" | _ => {
-            println!("{}", HELP);
+        "serve" | "emb-server" => serve(args),
+        _ => {
+            println!("{HELP}");
             Ok(())
         }
     }
@@ -71,19 +84,27 @@ const HELP: &str = "\
 optimes — federated GNN training with remote embeddings (OptimES reproduction)
 
 commands:
-  info                       show datasets, artifacts, engine
+  info                       show datasets, artifacts, engine, store backend
   run    --dataset D --strategy S [--model gc|sage] [--clients N]
          [--rounds R] [--epochs E] [--lr LR] [--fanout K]
          [--engine ref|pjrt] [--scale N] [--seed S] [--report FILE]
+         [--server HOST:PORT[,HOST:PORT...]]   use remote embedding store(s)
+         [--shards N]                          shard the in-process store
+         [--agg fedavg|uniform|trimmed[:k]]    aggregation rule
   sweep  --dataset D --strategies D,E,O,P,OP,OPP,OPG
   fig    table1|2a|2b|6|7|8|9|10|11|12|13|14|all
+  serve  --port 7070 [--listen ADDR] [--layers 2] [--hidden 32] [--shards N]
+         run the embedding store as a standalone TCP daemon
   smoke  PJRT artifact health check
-  emb-server --listen ADDR [--layers 2] [--hidden 32]
-         run the embedding server as a standalone TCP daemon
 ";
 
 fn info() -> Result<()> {
     println!("engine: {}", harness::engine_kind());
+    println!(
+        "store backend: {} [{} shard(s)]",
+        harness::store_desc(),
+        harness::store_shards()
+    );
     println!("dataset scale: 1/{}", harness::dataset_scale());
     match Manifest::load(harness::artifacts_dir()) {
         Ok(m) => {
@@ -144,15 +165,37 @@ fn session_summary(m: &SessionMetrics) {
     println!("  smoothed accuracy: {}", accs.join(" "));
 }
 
+/// Streams one line per federated round as the session runs.
+struct CliRoundPrinter {
+    total: usize,
+}
+
+impl RoundObserver for CliRoundPrinter {
+    fn on_round(&mut self, r: &RoundMetrics) {
+        let p = &r.mean_phases;
+        println!(
+            "round {:>2}/{}: acc {:5.2}%  time {:.3}s  (pull {:.3} + train {:.3} + dyn {:.3} + push {:.3})",
+            r.round + 1,
+            self.total,
+            r.accuracy * 100.0,
+            r.round_time,
+            p.pull,
+            p.train,
+            p.dyn_pull,
+            p.push
+        );
+    }
+}
+
 fn run(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "reddit-s").to_string();
-    let strategy = Strategy::parse(args.str_or("strategy", "OPP"))
-        .ok_or_else(|| anyhow::anyhow!("bad --strategy"))?;
+    let strategy = Strategy::parse(args.str_or("strategy", "OPP"))?;
     let model = parse_model(args)?;
     let fanout = args.usize_or("fanout", 5);
     let (p, g) = harness::load_dataset(&dataset)?;
     let clients = args.usize_or("clients", p.default_clients);
     let engine = harness::make_engine(model, fanout)?;
+    let aggregator = aggregation::parse_aggregator(args.str_or("agg", "fedavg"))?;
     let cfg = SessionConfig {
         dataset: dataset.clone(),
         clients,
@@ -166,14 +209,23 @@ fn run(args: &Args) -> Result<()> {
         parallel_clients: !args.flag("sequential"),
         ..Default::default()
     };
+    let store = harness::make_store(engine.geom(), cfg.net)?;
     println!(
-        "running {dataset} / {} on {} engine, {} clients, {} rounds ...",
+        "running {dataset} / {} on {} engine, {} clients, {} rounds, store {}, agg {} ...",
         cfg.strategy.name,
         harness::engine_kind(),
         clients,
-        cfg.rounds
+        cfg.rounds,
+        store.describe(),
+        aggregator.name()
     );
-    let m = optimes::coordinator::run_session(&g, &cfg, Arc::clone(&engine))?;
+    let total = cfg.rounds;
+    let m = SessionBuilder::new(cfg)
+        .store(store)
+        .aggregator(aggregator)
+        .observer(Box::new(CliRoundPrinter { total }))
+        .build(&g, Arc::clone(&engine))?
+        .run()?;
     session_summary(&m);
     if let Some(path) = args.get("report") {
         std::fs::write(path, optimes::harness::report::session_to_json(&m).to_string_pretty())?;
@@ -184,15 +236,24 @@ fn run(args: &Args) -> Result<()> {
 
 fn sweep(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "reddit-s").to_string();
-    let names = args
-        .list("strategies")
-        .unwrap_or_else(|| vec!["D", "E", "O", "P", "OP", "OPP", "OPG"].iter().map(|s| s.to_string()).collect());
+    let names = args.list("strategies").unwrap_or_else(|| {
+        ["D", "E", "O", "P", "OP", "OPP", "OPG"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    });
     let strategies: Vec<Strategy> = names
         .iter()
-        .map(|n| Strategy::parse(n).ok_or_else(|| anyhow::anyhow!("bad strategy {n:?}")))
+        .map(|n| Ok(Strategy::parse(n)?))
         .collect::<Result<_>>()?;
     let model = parse_model(args)?;
-    let sessions = figures::ladder_sessions(&dataset, model, args.usize_or("fanout", 5), &strategies, args.get("clients").map(|c| c.parse().unwrap()))?;
+    let sessions = figures::ladder_sessions(
+        &dataset,
+        model,
+        args.usize_or("fanout", 5),
+        &strategies,
+        args.get("clients").map(|c| c.parse().unwrap()),
+    )?;
     let refs: Vec<&SessionMetrics> = sessions.iter().collect();
     let target = paper_target_accuracy(&refs);
     for m in &sessions {
@@ -217,23 +278,40 @@ fn smoke() -> Result<()> {
     Ok(())
 }
 
-fn emb_server(args: &Args) -> Result<()> {
-    use optimes::coordinator::net_transport::EmbServerDaemon;
-    use optimes::coordinator::{EmbeddingServer, NetConfig};
-    let listen = args.str_or("listen", "127.0.0.1:7070").to_string();
+/// Standalone embedding-store daemon: the paper's deployment shape, where
+/// every training process reaches the store over the network.
+fn serve(args: &Args) -> Result<()> {
+    use std::io::Write;
+    let listen = match args.get("listen") {
+        Some(a) => a.to_string(),
+        None => format!("127.0.0.1:{}", args.usize_or("port", 7070)),
+    };
     let layers = args.usize_or("layers", 2);
     let hidden = args.usize_or("hidden", 32);
-    let server = Arc::new(EmbeddingServer::new(layers, hidden, NetConfig::default()));
-    let daemon = EmbServerDaemon::start(Arc::clone(&server), listen.as_str())?;
+    let shards = args.usize_or("shards", 1);
+    let store: Arc<dyn EmbeddingStore> = if shards > 1 {
+        Arc::new(ShardedStore::in_process(
+            shards,
+            layers,
+            hidden,
+            NetConfig::default(),
+        ))
+    } else {
+        Arc::new(EmbeddingServer::new(layers, hidden, NetConfig::default()))
+    };
+    let daemon = EmbServerDaemon::start(Arc::clone(&store), listen.as_str())?;
     println!(
-        "embedding server listening on {} ({} layer DBs, hidden {})",
-        daemon.addr, layers, hidden
+        "embedding store listening on {} ({layers} layer DBs, hidden {hidden}, backend {})",
+        daemon.addr,
+        store.describe()
     );
     println!("press ctrl-c to stop");
+    // explicit flush: the bound address must reach a piped parent
+    // (`optimes run --server` scripts, the spawned-process test) promptly
+    std::io::stdout().flush().ok();
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
-        let (nodes, rows) = (server.stored_nodes(), server.stored_rows());
-        let (pulls, pushes) = server.rpc_counts();
-        println!("stored {nodes} nodes / {rows} rows; rpcs: {pulls} pulls {pushes} pushes");
+        let stats = store.stats()?;
+        println!("stored {} nodes / {} rows", stats.nodes, stats.rows);
     }
 }

@@ -1,0 +1,254 @@
+//! The transport-agnostic embedding plane, end to end: the wire protocol
+//! over loopback (including empty and larger-than-push-batch payloads),
+//! and the acceptance checks that a federated session produces the exact
+//! same accuracy curve no matter which [`EmbeddingStore`] backend carries
+//! the embeddings — in-process slab, `TcpEmbeddingStore` against an
+//! in-test daemon, `TcpEmbeddingStore` against a *spawned* `optimes
+//! serve` process, and a 4-way `ShardedStore`.
+
+use std::sync::Arc;
+
+use optimes::coordinator::{
+    EmbServerDaemon, EmbeddingServer, EmbeddingStore, NetConfig, RemoteEmbClient, SessionBuilder,
+    SessionConfig, SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore,
+};
+use optimes::graph::datasets::tiny;
+use optimes::runtime::{ModelGeom, ModelKind, RefEngine, StepEngine};
+
+const HIDDEN: usize = 16;
+const N_LAYERS: usize = 2; // layers - 1
+
+fn ref_engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: HIDDEN,
+        classes: 4,
+        batch: 8,
+        fanout: 3,
+        push_batch: 8,
+    }))
+}
+
+fn cfg(strategy: Strategy, rounds: usize) -> SessionConfig {
+    SessionConfig {
+        strategy,
+        rounds,
+        epochs: 2,
+        epoch_batches: 4,
+        eval_batches: 4,
+        // sequential clients: a deterministic push/pull order makes the
+        // accuracy curves comparable bit-for-bit across backends
+        parallel_clients: false,
+        ..Default::default()
+    }
+}
+
+/// Run one session on `tiny(seed)` against the given store (None = the
+/// builder's default in-process server).
+fn run_with(
+    store: Option<Arc<dyn EmbeddingStore>>,
+    strategy: Strategy,
+    rounds: usize,
+    seed: u64,
+) -> SessionMetrics {
+    let g = tiny(seed);
+    let mut b = SessionBuilder::new(cfg(strategy, rounds));
+    if let Some(s) = store {
+        b = b.store(s);
+    }
+    b.build(&g, ref_engine()).unwrap().run().unwrap()
+}
+
+fn assert_same_curve(a: &SessionMetrics, b: &SessionMetrics) {
+    assert_eq!(
+        a.accuracies(),
+        b.accuracies(),
+        "accuracy curves diverged between store backends"
+    );
+    assert_eq!(a.server_embeddings, b.server_embeddings);
+    let va: Vec<f64> = a.rounds.iter().map(|r| r.val_loss).collect();
+    let vb: Vec<f64> = b.rounds.iter().map(|r| r.val_loss).collect();
+    assert_eq!(va, vb, "validation losses diverged between store backends");
+}
+
+// ---------------------------------------------------------------------------
+// wire-protocol edges over loopback
+// ---------------------------------------------------------------------------
+
+fn daemon(hidden: usize) -> (EmbServerDaemon, Arc<EmbeddingServer>) {
+    let server = Arc::new(EmbeddingServer::new(N_LAYERS, hidden, NetConfig::default()));
+    let d = EmbServerDaemon::start(
+        Arc::clone(&server) as Arc<dyn EmbeddingStore>,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    (d, server)
+}
+
+#[test]
+fn wire_empty_push_pull_stats() {
+    let (d, _server) = daemon(4);
+    let mut c = RemoteEmbClient::connect(d.addr, N_LAYERS, 4).unwrap();
+    // empty payloads are legal frames, not protocol errors
+    let rec = c.push(&[], &[Vec::new(), Vec::new()]).unwrap();
+    assert_eq!(rec.rows, 0);
+    let (got, rec) = c.pull(&[]).unwrap();
+    assert_eq!(rec.rows, 0);
+    assert_eq!(got.len(), N_LAYERS);
+    assert!(got.iter().all(|l| l.is_empty()));
+    assert_eq!(c.stats().unwrap(), (0, 0));
+    // and the connection still serves real traffic afterwards
+    c.push(&[7], &[vec![1.0; 4], vec![2.0; 4]]).unwrap();
+    assert_eq!(c.stats().unwrap(), (1, 2));
+    d.shutdown();
+}
+
+#[test]
+fn wire_batches_larger_than_push_batch() {
+    // one frame far beyond the engine's push_batch (8): the protocol is
+    // framed by explicit lengths, not by geometry
+    let (d, server) = daemon(4);
+    let mut c = RemoteEmbClient::connect(d.addr, N_LAYERS, 4).unwrap();
+    let nodes: Vec<u32> = (0..10_000).collect();
+    let rows: Vec<f32> = (0..nodes.len() * 4).map(|i| i as f32 * 0.5).collect();
+    c.push(&nodes, &[rows.clone(), rows.clone()]).unwrap();
+    let (got, _) = c.pull(&nodes).unwrap();
+    assert_eq!(got[0], rows);
+    assert_eq!(got[1], rows);
+    assert_eq!(server.stored_nodes(), 10_000);
+    d.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// session-level backend parity (the acceptance criteria)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_store_session_matches_in_process() {
+    let (d, _server) = daemon(HIDDEN);
+    let tcp = TcpEmbeddingStore::connect(d.addr.to_string(), N_LAYERS, HIDDEN).unwrap();
+    let in_proc = run_with(None, Strategy::opp(), 4, 111);
+    let over_tcp = run_with(Some(Arc::new(tcp)), Strategy::opp(), 4, 111);
+    assert_same_curve(&in_proc, &over_tcp);
+    assert!(over_tcp.store_backend.starts_with("tcp("));
+    assert_eq!(in_proc.store_backend, "in-process");
+    // OPP exercises both the prefetch pull and the on-demand path, so
+    // both curves must have seen real communication
+    assert!(over_tcp.server_embeddings > 0);
+    d.shutdown();
+}
+
+#[test]
+fn sharded_store_session_matches_in_process() {
+    let sharded = ShardedStore::in_process(4, N_LAYERS, HIDDEN, NetConfig::default());
+    let in_proc = run_with(None, Strategy::opp(), 4, 113);
+    let over_shards = run_with(Some(Arc::new(sharded)), Strategy::opp(), 4, 113);
+    assert_same_curve(&in_proc, &over_shards);
+    assert!(over_shards.store_backend.starts_with("sharded(4 shards"));
+}
+
+#[test]
+fn sharded_tcp_daemons_session_matches_in_process() {
+    // four separate daemons, each fronting its own slab — the full
+    // "multiple remote stores" deployment, hash-partitioned by the client
+    let daemons: Vec<(EmbServerDaemon, Arc<EmbeddingServer>)> =
+        (0..4).map(|_| daemon(HIDDEN)).collect();
+    let backends: Vec<Arc<dyn EmbeddingStore>> = daemons
+        .iter()
+        .map(|(d, _)| {
+            Arc::new(TcpEmbeddingStore::connect(d.addr.to_string(), N_LAYERS, HIDDEN).unwrap())
+                as Arc<dyn EmbeddingStore>
+        })
+        .collect();
+    let sharded = ShardedStore::new(backends).unwrap();
+    let in_proc = run_with(None, Strategy::e(), 3, 117);
+    let federated = run_with(Some(Arc::new(sharded)), Strategy::e(), 3, 117);
+    assert_same_curve(&in_proc, &federated);
+    // every daemon ended up owning a non-trivial share of the embeddings
+    let total: usize = daemons.iter().map(|(_, s)| s.stored_nodes()).sum();
+    assert_eq!(total, in_proc.server_embeddings);
+    for (_, s) in &daemons {
+        assert!(s.stored_nodes() > 0, "a shard owned no embeddings");
+    }
+    for (d, _) in daemons {
+        d.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// against a real spawned `optimes serve` process
+// ---------------------------------------------------------------------------
+
+/// Kills the child even when an assertion fails mid-test.
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn session_through_spawned_serve_process_matches_in_process() {
+    use std::io::BufRead;
+    let exe = env!("CARGO_BIN_EXE_optimes");
+    let mut child = ChildGuard(
+        std::process::Command::new(exe)
+            .args([
+                "serve",
+                "--port",
+                "0",
+                "--layers",
+                &N_LAYERS.to_string(),
+                "--hidden",
+                &HIDDEN.to_string(),
+            ])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn optimes serve"),
+    );
+    let stdout = child.0.stdout.take().expect("child stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = None;
+    for _ in 0..20 {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(pos) = line.find("listening on ") {
+            let rest = &line[pos + "listening on ".len()..];
+            addr = rest.split_whitespace().next().map(|s| s.to_string());
+            break;
+        }
+    }
+    let addr = addr.expect("serve process never reported its bound address");
+    let tcp = TcpEmbeddingStore::connect(addr, N_LAYERS, HIDDEN).unwrap();
+    let in_proc = run_with(None, Strategy::e(), 3, 119);
+    let remote = run_with(Some(Arc::new(tcp)), Strategy::e(), 3, 119);
+    assert_same_curve(&in_proc, &remote);
+}
+
+#[test]
+fn tcp_store_works_with_parallel_clients() {
+    // parallel clients share the pooled TCP store: results must still be
+    // structurally sound (bit-parity is only guaranteed sequentially)
+    let (d, _server) = daemon(HIDDEN);
+    let tcp = TcpEmbeddingStore::connect(d.addr.to_string(), N_LAYERS, HIDDEN).unwrap();
+    let g = tiny(121);
+    let mut c = cfg(Strategy::o(), 3);
+    c.parallel_clients = true;
+    let m = SessionBuilder::new(c)
+        .store(Arc::new(tcp))
+        .build(&g, ref_engine())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(m.rounds.len(), 3);
+    assert!(m.rounds.iter().all(|r| r.accuracy.is_finite()));
+    assert!(m.server_embeddings > 0);
+    d.shutdown();
+}
