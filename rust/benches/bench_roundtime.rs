@@ -2,13 +2,21 @@
 //! (the `federation_e2e` configuration) run twice at the same seed — once
 //! with the tiled parallel kernels, once with the naive scalar oracle
 //! forced — to record the wall-clock speedup and confirm the final
-//! validation accuracy is unchanged (EXPERIMENTS.md §Perf).
+//! validation accuracy is unchanged (EXPERIMENTS.md §Perf). A second A/B
+//! measures the async store pipeline: the same session with `pipeline`
+//! on vs. off against a *throttled* store (the netsim cost model slept
+//! out for real), recording the real-vs-virtual overlap
+//! (`overlap_saved`, `push_wall`) and verifying accuracy parity.
 //!
-//! Merges a `roundtime` section into the repo-root `BENCH_micro.json`.
+//! Merges `roundtime` + `pipeline` sections into the repo-root
+//! `BENCH_micro.json`.
 
 use std::sync::Arc;
 
-use optimes::coordinator::{run_session, SessionConfig, SessionMetrics, Strategy};
+use optimes::coordinator::{
+    run_session, EmbeddingServer, EmbeddingStore, NetConfig, SessionBuilder, SessionConfig,
+    SessionMetrics, Strategy, ThrottledStore,
+};
 use optimes::graph::datasets::tiny;
 use optimes::harness;
 use optimes::runtime::{kernels, ModelGeom, ModelKind, RefEngine, StepEngine};
@@ -62,6 +70,51 @@ fn run_once(label: &str) -> (f64, SessionMetrics) {
     (wall, m)
 }
 
+/// Pipeline A/B config: sequential clients for bit-parity, OPP so both
+/// the prefetch and the overlapped-push paths are exercised.
+fn pipeline_cfg(pipeline: bool) -> SessionConfig {
+    SessionConfig {
+        clients: CLIENTS,
+        strategy: Strategy::opp(),
+        rounds: ROUNDS,
+        epochs: 3,
+        epoch_batches: 6,
+        eval_batches: 6,
+        lr: 0.01,
+        seed: 42,
+        parallel_clients: false,
+        pipeline,
+        ..Default::default()
+    }
+}
+
+fn run_pipeline(label: &str, pipeline: bool) -> (f64, SessionMetrics) {
+    let g = tiny(42);
+    // throttle the in-process store so its netsim virtual time becomes
+    // real wall time: the on/off wall delta is then the pipeline's true
+    // overlap win, deterministic and network-free
+    let net = NetConfig {
+        latency: 2e-3,
+        ..NetConfig::default()
+    };
+    let store: Arc<dyn EmbeddingStore> =
+        Arc::new(ThrottledStore::new(Arc::new(EmbeddingServer::new(2, 64, net))));
+    let t0 = std::time::Instant::now();
+    let m = SessionBuilder::new(pipeline_cfg(pipeline))
+        .store(store)
+        .build(&g, engine())
+        .expect(label)
+        .run()
+        .expect(label);
+    let wall = t0.elapsed().as_secs_f64();
+    let ov = m.overlap_stats();
+    println!(
+        "{label:<18} wall {wall:>8.3}s  push_wall {:.3}s  overlap_saved {:.3}s  queue<= {}",
+        ov.push_wall, ov.overlap_saved, ov.queue_peak
+    );
+    (wall, m)
+}
+
 fn main() {
     println!("== bench_roundtime ({CLIENTS} clients, {ROUNDS} rounds, seed 42) ==");
     // Untimed warm-up round: spawns the kernel thread pool, faults in the
@@ -100,5 +153,30 @@ fn main() {
     o.set("train_phase_tiled_s", tiled.median_phases().train);
     o.set("train_phase_naive_s", naive.median_phases().train);
     harness::record_bench_section("roundtime", o);
+
+    // ---- async-pipeline A/B: real overlap under a throttled store -------
+    println!("\n== pipeline A/B ({CLIENTS} clients, {ROUNDS} rounds, throttled store, OPP) ==");
+    let (on_wall, on) = run_pipeline("pipeline: on", true);
+    let (off_wall, off) = run_pipeline("pipeline: off", false);
+    let ov = on.overlap_stats();
+    let parity = on.accuracies() == off.accuracies();
+    let pipe_speedup = off_wall / on_wall.max(1e-12);
+    println!(
+        "pipeline speedup {pipe_speedup:.2}x  overlap_saved {:.3}s (real)  \
+         virtual push_hidden {:.3}s  accuracy parity {parity}",
+        ov.overlap_saved,
+        on.rounds.iter().map(|r| r.mean_phases.push_hidden).sum::<f64>(),
+    );
+    if !parity {
+        eprintln!("WARNING: pipeline on/off accuracy curves diverged");
+    }
+
+    let mut p = JsonObj::new();
+    p.set("pipeline_on_wall_s", on_wall);
+    p.set("pipeline_off_wall_s", off_wall);
+    p.set("pipeline_speedup", pipe_speedup);
+    p.set("overlap", ov.to_json());
+    p.set("accuracy_parity", parity);
+    harness::record_bench_section("pipeline", p);
     println!("[bench_roundtime] recorded to {}", harness::bench_json_path().display());
 }

@@ -3,6 +3,7 @@
 
 use std::sync::Arc;
 
+use super::pipeline::PendingPull;
 use super::trainer::BatchScratch;
 use crate::graph::sampler::{static_adj, Sampler, SharedAdj};
 use crate::graph::{BlockDims, ClientSubgraph};
@@ -105,6 +106,11 @@ pub struct Client {
     pub scratch: BatchScratch,
     /// Reusable buffer for batched embedding pulls (`pull_into`).
     pub pull_buf: Vec<Vec<f32>>,
+    /// In-flight prefetch of this client's next initial pull, parked by
+    /// the session between rounds (`--pipeline on`; DESIGN.md §9) and
+    /// consumed — or discarded, if the pull set changed — by the next
+    /// `run_round_pipelined` call.
+    pub pending_pull: Option<PendingPull>,
     pub epoch_batches: usize,
     pub(crate) train_cursor: usize,
     pub(crate) train_order: Vec<u32>,
@@ -149,6 +155,7 @@ impl Client {
             adj_embed: static_adj(&dims, dims.push_batch, dims.layers - 1),
             scratch: BatchScratch::default(),
             pull_buf: Vec::new(),
+            pending_pull: None,
             epoch_batches,
             train_cursor: 0,
             train_order,

@@ -73,6 +73,59 @@ impl CacheStats {
     }
 }
 
+/// *Measured* wall-clock overlap accounting for the asynchronous
+/// pipeline (`--pipeline on`), recorded **next to** the virtual-time
+/// model of [`PhaseTimes`] (DESIGN.md §9): the virtual model says how
+/// much push work the overlap *should* hide; these fields say how much
+/// real wall time it actually hid.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverlapMetrics {
+    /// At least one pipelined ticket (push or prefetch) was consumed.
+    pub pipelined: bool,
+    /// Measured wall of the async push pipeline: embed compute plus
+    /// queue wait plus store I/O, issue to completion.
+    pub push_wall: f64,
+    /// Measured stall actually paid joining the push ticket at round
+    /// end (the part of `push_wall` that was *not* hidden).
+    pub push_wait: f64,
+    /// Measured wall of prefetched initial pulls (issue → completion).
+    pub pull_wall: f64,
+    /// Measured stall actually paid joining the prefetch ticket at the
+    /// start of the pull phase.
+    pub pull_wait: f64,
+    /// Measured work that truly ran under training/aggregation:
+    /// `max(0, push_wall − push_wait) + max(0, pull_wall − pull_wait)`.
+    pub overlap_saved: f64,
+    /// Peak async-queue depth observed on the session's store handle.
+    pub queue_peak: usize,
+}
+
+impl OverlapMetrics {
+    pub fn add(&mut self, o: &OverlapMetrics) {
+        self.pipelined |= o.pipelined;
+        self.push_wall += o.push_wall;
+        self.push_wait += o.push_wait;
+        self.pull_wall += o.pull_wall;
+        self.pull_wait += o.pull_wait;
+        self.overlap_saved += o.overlap_saved;
+        self.queue_peak = self.queue_peak.max(o.queue_peak);
+    }
+
+    /// The canonical JSON shape of these fields, shared by every report
+    /// path (session JSON, cache round-trip, bench sections, figures).
+    pub fn to_json(&self) -> JsonObj {
+        let mut o = JsonObj::new();
+        o.set("pipelined", self.pipelined)
+            .set("push_wall", self.push_wall)
+            .set("push_wait", self.push_wait)
+            .set("pull_wall", self.pull_wall)
+            .set("pull_wait", self.pull_wait)
+            .set("overlap_saved", self.overlap_saved)
+            .set("queue_peak", self.queue_peak);
+        o
+    }
+}
+
 /// One client's contribution to a round.
 #[derive(Clone, Debug, Default)]
 pub struct ClientRoundMetrics {
@@ -84,6 +137,9 @@ pub struct ClientRoundMetrics {
     /// Remote-embedding cache lookups/misses across the round's batch
     /// assemblies (training epochs + push-embed computation).
     pub cache: CacheStats,
+    /// Measured pipeline overlap (zeros when the round ran without the
+    /// async pipeline).
+    pub overlap: OverlapMetrics,
     pub train_loss: f32,
 }
 
@@ -111,6 +167,9 @@ pub struct SessionMetrics {
     /// Embedding-plane backend the session ran against
     /// ("in-process", "tcp(host:port)", "sharded(4 shards ...)").
     pub store_backend: String,
+    /// Whether the session ran with the asynchronous store pipeline
+    /// (`--pipeline on`, DESIGN.md §9).
+    pub pipelined: bool,
     pub rounds: Vec<RoundMetrics>,
     /// Embeddings resident at the server after the first full round.
     pub server_embeddings: usize,
@@ -180,6 +239,19 @@ impl SessionMetrics {
         None
     }
 
+    /// Aggregate *measured* pipeline overlap across every client round
+    /// (all-zero when the session ran `--pipeline off`). Wall/wait
+    /// fields are summed; `queue_peak` is the maximum observed.
+    pub fn overlap_stats(&self) -> OverlapMetrics {
+        let mut total = OverlapMetrics::default();
+        for r in &self.rounds {
+            for c in &r.clients {
+                total.add(&c.overlap);
+            }
+        }
+        total
+    }
+
     /// Aggregate remote-embedding cache stats across every client round.
     pub fn cache_stats(&self) -> CacheStats {
         let mut total = CacheStats::default();
@@ -235,6 +307,8 @@ impl SessionMetrics {
             .set("push", p.push)
             .set("push_hidden", p.push_hidden);
         o.set("median_phases", ph);
+        o.set("pipelined", self.pipelined);
+        o.set("overlap", self.overlap_stats().to_json());
         Json::Obj(o)
     }
 }

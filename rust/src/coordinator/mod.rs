@@ -1,9 +1,11 @@
 //! The L3 coordinator — the paper's system contribution: federated round
 //! orchestration with a transport-agnostic embedding plane
-//! ([`EmbeddingStore`]: in-process slab / TCP / sharded), push-overlap,
-//! pruning, scored prefetching (OptimES strategies D/E/O/P/OP/OPP/OPG),
-//! and a composable session API ([`SessionBuilder`] with pluggable
-//! [`Aggregator`] and [`RoundObserver`] seams).
+//! ([`EmbeddingStore`]: in-process slab / TCP / sharded), a real
+//! asynchronous push/pull pipeline over it ([`AsyncStoreHandle`],
+//! DESIGN.md §9), push-overlap, pruning, scored prefetching (OptimES
+//! strategies D/E/O/P/OP/OPP/OPG), and a composable session API
+//! ([`SessionBuilder`] with pluggable [`Aggregator`] and
+//! [`RoundObserver`] seams).
 
 pub mod aggregation;
 pub mod client;
@@ -12,6 +14,7 @@ pub mod embedding_server;
 pub mod metrics;
 pub mod net_transport;
 pub mod netsim;
+pub mod pipeline;
 pub mod session;
 pub mod store;
 pub mod strategy;
@@ -20,9 +23,13 @@ pub mod trainer;
 pub use aggregation::{fedavg, Aggregator, FedAvg, TrimmedMean, UniformAvg, Validator};
 pub use client::{Client, EmbCache};
 pub use embedding_server::EmbeddingServer;
-pub use metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
+pub use metrics::{OverlapMetrics, PhaseTimes, RoundMetrics, SessionMetrics};
 pub use net_transport::{EmbServerDaemon, RemoteEmbClient, TcpEmbeddingStore};
 pub use netsim::NetConfig;
+pub use pipeline::{
+    pipeline_default, AsyncStoreHandle, PendingPull, PullDone, PullTicket, PushDone, PushTicket,
+    ThrottledStore, Ticket,
+};
 pub use session::{
     run_session, NullObserver, RoundObserver, Session, SessionBuilder, SessionConfig,
     SessionPhase,

@@ -27,7 +27,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
@@ -296,20 +296,44 @@ impl RemoteEmbClient {
 /// [`EmbeddingStore`] backend speaking the wire protocol against a
 /// remote daemon (e.g. a standalone `optimes serve` process).
 ///
-/// Connections are pooled and reused: each concurrent caller checks one
-/// out for the duration of an RPC (so parallel clients don't serialize
-/// on a single socket) and returns it afterwards. A failed RPC drops its
-/// connection and retries exactly once on a fresh one; every op is an
-/// idempotent upsert/read, so re-sending is safe. Caveat: if the daemon
-/// itself restarted (state lost), a retried *pull* succeeds against the
-/// now-empty store and returns the contractual zero rows — the session
-/// keeps running on a cold store rather than failing. Restart the
-/// session too if the daemon's lifetime doesn't cover it.
+/// Connections are pooled with a **per-connection in-flight request
+/// slot**: the wire protocol is strictly request→response per socket, so
+/// each RPC leases a whole connection for its duration (checked out of
+/// the pool, returned afterwards) and concurrent callers — parallel
+/// clients, the async pipeline's push/prefetch workers — each get their
+/// own socket instead of serializing or interleaving frames on one. The
+/// pool therefore grows to the peak number of *simultaneous* RPCs and no
+/// further; [`in_flight`](TcpEmbeddingStore::in_flight) /
+/// [`peak_in_flight`](TcpEmbeddingStore::peak_in_flight) expose the
+/// gauge.
+///
+/// A failed RPC drops its connection and retries exactly once on a fresh
+/// one; every op is an idempotent upsert/read, so re-sending is safe.
+/// Caveat: if the daemon itself restarted (state lost), a retried *pull*
+/// succeeds against the now-empty store and returns the contractual zero
+/// rows — the session keeps running on a cold store rather than failing.
+/// Restart the session too if the daemon's lifetime doesn't cover it.
 pub struct TcpEmbeddingStore {
     addr: String,
     n_layers: usize,
     hidden: usize,
     pool: Mutex<Vec<RemoteEmbClient>>,
+    /// RPCs currently holding a connection lease.
+    in_flight: AtomicUsize,
+    /// Highest simultaneous lease count observed (== pool high-water
+    /// mark: one socket per in-flight request).
+    peak_in_flight: AtomicUsize,
+}
+
+/// RAII lease on the store's in-flight gauge: constructed when an RPC
+/// checks a connection out ([`TcpEmbeddingStore::enter_slot`]), released
+/// (even on error/panic unwind) when the RPC finishes.
+struct InFlightSlot<'a>(&'a TcpEmbeddingStore);
+
+impl Drop for InFlightSlot<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl TcpEmbeddingStore {
@@ -323,6 +347,8 @@ impl TcpEmbeddingStore {
             n_layers,
             hidden,
             pool: Mutex::new(Vec::new()),
+            in_flight: AtomicUsize::new(0),
+            peak_in_flight: AtomicUsize::new(0),
         };
         let mut conn = store.open()?;
         let mut probe = Vec::new();
@@ -336,6 +362,25 @@ impl TcpEmbeddingStore {
         &self.addr
     }
 
+    /// RPCs currently in flight (each holds one pooled connection).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Peak simultaneous in-flight RPCs over the store's lifetime — the
+    /// connection pool's high-water mark.
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Acquire the in-flight slot for one RPC (RAII; see
+    /// [`InFlightSlot`]).
+    fn enter_slot(&self) -> InFlightSlot<'_> {
+        let d = self.in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+        self.peak_in_flight.fetch_max(d, Ordering::SeqCst);
+        InFlightSlot(self)
+    }
+
     fn open(&self) -> Result<RemoteEmbClient> {
         RemoteEmbClient::connect(self.addr.as_str(), self.n_layers, self.hidden)
             .with_context(|| format!("embedding store at {}", self.addr))
@@ -345,8 +390,10 @@ impl TcpEmbeddingStore {
     /// once (a pooled connection may be stale after a daemon restart).
     /// If the retry fails too, the error chain names both failures, so a
     /// deterministic server-side rejection is not mistaken for a
-    /// transport problem.
+    /// transport problem. The whole call holds one [`InFlightSlot`]: a
+    /// connection serves exactly one request at a time.
     fn with_conn<R>(&self, mut f: impl FnMut(&mut RemoteEmbClient) -> Result<R>) -> Result<R> {
+        let _slot = self.enter_slot();
         let pooled = self.pool.lock().unwrap().pop();
         if let Some(mut conn) = pooled {
             match f(&mut conn) {
@@ -595,6 +642,22 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(server.stored_nodes(), 400);
+        // every lease was returned; the gauge saw at least one RPC and
+        // never exceeded the number of concurrent callers
+        assert_eq!(tcp.in_flight(), 0);
+        assert!(tcp.peak_in_flight() >= 1);
+        assert!(tcp.peak_in_flight() <= 4);
+        d.shutdown();
+    }
+
+    #[test]
+    fn in_flight_slot_counts_a_single_rpc() {
+        let (d, _server) = daemon();
+        let tcp = TcpEmbeddingStore::connect(d.addr.to_string(), 2, 4).unwrap();
+        assert_eq!(tcp.in_flight(), 0);
+        tcp.push(&[1], &[vec![0.0; 4], vec![0.0; 4]]).unwrap();
+        assert_eq!(tcp.in_flight(), 0, "lease leaked after a completed RPC");
+        assert!(tcp.peak_in_flight() >= 1);
         d.shutdown();
     }
 }

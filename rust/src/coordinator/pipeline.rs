@@ -1,0 +1,479 @@
+//! The asynchronous push/pull pipeline over the embedding plane
+//! (DESIGN.md §9).
+//!
+//! [`AsyncStoreHandle`] owns a small background worker pool (the shared
+//! [`ThreadPool`] substrate of `util/pool.rs`) and turns store calls into
+//! *tickets*: [`push_async`](AsyncStoreHandle::push_async) and
+//! [`prefetch`](AsyncStoreHandle::prefetch) return immediately while the
+//! RPC runs on a worker, and the caller joins the returned [`PushTicket`]
+//! / [`PullTicket`] (via [`Ticket::wait`] or [`Ticket::try_take`])
+//! wherever the result is actually needed. Works over *any*
+//! [`EmbeddingStore`] backend — the in-process slab, the pooled TCP
+//! client (each in-flight RPC leases its own connection), or a sharded
+//! compound (whose sub-RPCs already fan out concurrently).
+//!
+//! This is what makes the paper's headline overlap (§1, §3) *real* rather
+//! than only modeled: with `--pipeline on`, the ε−k push RPC runs while
+//! the remaining training epochs execute (ticket joined at round end),
+//! and the next round's initial pull is prefetched while the previous
+//! round aggregates, validates, and broadcasts
+//! (`trainer::run_round_pipelined` / `Session::run_round`). The *measured*
+//! wall time of that overlap is recorded next to the virtual-time model
+//! in [`OverlapMetrics`](super::metrics::OverlapMetrics).
+//!
+//! Pipelining never changes values: every ticket carries the exact rows a
+//! synchronous call at the join point would have produced (the session
+//! only issues a prefetch once the store has reached the state the
+//! synchronous pull would read — see DESIGN.md §9 for the ordering
+//! argument), so accuracy curves are bit-identical to `--pipeline off`
+//! for a fixed seed (`tests/store_parity.rs`).
+//!
+//! [`ThreadPool`]: crate::util::pool::ThreadPool
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::RpcRecord;
+use super::store::{EmbeddingStore, StoreStats};
+use crate::util::pool::ThreadPool;
+
+/// Result of a completed asynchronous push.
+#[derive(Debug)]
+pub struct PushDone {
+    /// The backend's RPC record (modeled virtual time in-process,
+    /// measured wall time over TCP) — identical to what a synchronous
+    /// `push` would have returned.
+    pub rec: RpcRecord,
+    /// Measured wall seconds from ticket issue to RPC completion
+    /// (queue wait + store I/O).
+    pub wall: f64,
+}
+
+/// Result of a completed asynchronous pull.
+#[derive(Debug)]
+pub struct PullDone {
+    /// Pulled rows, one row-major `[nodes, hidden]` tensor per layer —
+    /// identical to what a synchronous `pull_into` would have produced.
+    pub rows: Vec<Vec<f32>>,
+    /// The backend's RPC record.
+    pub rec: RpcRecord,
+    /// Measured wall seconds from ticket issue to RPC completion.
+    pub wall: f64,
+}
+
+enum SlotState<T> {
+    Pending,
+    Done(Result<T>),
+    Taken,
+}
+
+/// One-shot completion slot shared between a worker and a ticket.
+struct Slot<T> {
+    state: Mutex<SlotState<T>>,
+    cv: Condvar,
+}
+
+impl<T> Slot<T> {
+    fn fulfil(&self, r: Result<T>) {
+        *self.state.lock().unwrap() = SlotState::Done(r);
+        self.cv.notify_all();
+    }
+}
+
+/// Completion handle for one asynchronous store operation. Join it with
+/// [`wait`](Ticket::wait) (blocking) or poll it with
+/// [`try_take`](Ticket::try_take) (non-blocking). Dropping a ticket is
+/// safe: the operation still completes on its worker, the result is
+/// simply discarded.
+pub struct Ticket<T> {
+    slot: Arc<Slot<T>>,
+}
+
+/// Ticket for an asynchronous [`AsyncStoreHandle::push_async`].
+pub type PushTicket = Ticket<PushDone>;
+
+/// Ticket for an asynchronous [`AsyncStoreHandle::prefetch`].
+pub type PullTicket = Ticket<PullDone>;
+
+impl<T> Ticket<T> {
+    fn new() -> (Self, Arc<Slot<T>>) {
+        let slot = Arc::new(Slot {
+            state: Mutex::new(SlotState::Pending),
+            cv: Condvar::new(),
+        });
+        (
+            Self {
+                slot: Arc::clone(&slot),
+            },
+            slot,
+        )
+    }
+
+    /// Block until the operation completes and take its result.
+    pub fn wait(self) -> Result<T> {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, SlotState::Taken) {
+                SlotState::Done(r) => return r,
+                SlotState::Pending => {
+                    *st = SlotState::Pending;
+                    st = self.slot.cv.wait(st).unwrap();
+                }
+                SlotState::Taken => unreachable!("ticket consumed twice"),
+            }
+        }
+    }
+
+    /// Non-blocking join: the result if the operation has completed, or
+    /// the ticket back if it is still in flight.
+    pub fn try_take(self) -> std::result::Result<Result<T>, Self> {
+        {
+            let mut st = self.slot.state.lock().unwrap();
+            match std::mem::replace(&mut *st, SlotState::Taken) {
+                SlotState::Done(r) => return Ok(r),
+                prev => *st = prev,
+            }
+        }
+        Err(self)
+    }
+
+    /// Has the operation completed (result still un-taken)?
+    pub fn is_done(&self) -> bool {
+        matches!(*self.slot.state.lock().unwrap(), SlotState::Done(_))
+    }
+}
+
+/// A prefetched initial pull waiting to be consumed by the next
+/// `run_round_pipelined` call of the same client. The pull set is kept
+/// alongside the ticket so the consumer can verify the prefetch matches
+/// the pull it is about to perform (and fall back to a synchronous pull
+/// otherwise — e.g. after a dynamic-pruning re-sample).
+pub struct PendingPull {
+    /// Global vertex ids the prefetch requested, in request order.
+    pub globals: Vec<u32>,
+    pub ticket: PullTicket,
+}
+
+impl PendingPull {
+    /// The ticket, if this prefetch was issued for exactly `globals`.
+    pub fn into_matching(self, globals: &[u32]) -> Option<PullTicket> {
+        if self.globals == globals {
+            Some(self.ticket)
+        } else {
+            None
+        }
+    }
+}
+
+/// Current / peak number of queued-or-running async operations.
+struct QueueGauge {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl QueueGauge {
+    /// Count an operation in, returning the RAII lease that counts it
+    /// back out (dropped explicitly before the ticket is fulfilled so a
+    /// woken waiter already sees the decremented depth; drop-on-unwind
+    /// keeps the gauge exact even on unexpected panics).
+    fn enter(gauge: &Arc<QueueGauge>) -> GaugeLease {
+        let d = gauge.cur.fetch_add(1, Ordering::SeqCst) + 1;
+        gauge.peak.fetch_max(d, Ordering::SeqCst);
+        GaugeLease(Arc::clone(gauge))
+    }
+}
+
+struct GaugeLease(Arc<QueueGauge>);
+
+impl Drop for GaugeLease {
+    fn drop(&mut self) {
+        self.0.cur.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Asynchronous pipeline layer over any [`EmbeddingStore`]: a background
+/// worker pool executes pushes and pulls submitted as tickets, so store
+/// I/O overlaps training compute and aggregation in *real* wall time.
+///
+/// The handle is `Send + Sync`; parallel clients share one handle exactly
+/// as they share the underlying `Arc<dyn EmbeddingStore>`. Dropping the
+/// handle joins the workers after draining in-flight operations.
+pub struct AsyncStoreHandle {
+    store: Arc<dyn EmbeddingStore>,
+    workers: ThreadPool,
+    gauge: Arc<QueueGauge>,
+}
+
+impl AsyncStoreHandle {
+    /// Pipeline over `store` with the default worker count (2: one push
+    /// and one prefetch can fly concurrently per handle).
+    pub fn new(store: Arc<dyn EmbeddingStore>) -> Self {
+        Self::with_workers(store, 2)
+    }
+
+    /// Pipeline with an explicit I/O worker count (e.g. one per client
+    /// for wide parallel federations).
+    pub fn with_workers(store: Arc<dyn EmbeddingStore>, workers: usize) -> Self {
+        Self {
+            store,
+            workers: ThreadPool::new(workers.max(1)),
+            gauge: Arc::new(QueueGauge {
+                cur: AtomicUsize::new(0),
+                peak: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// The wrapped backend (for synchronous calls on the same store).
+    pub fn store(&self) -> &Arc<dyn EmbeddingStore> {
+        &self.store
+    }
+
+    /// Operations currently queued or running.
+    pub fn queue_depth(&self) -> usize {
+        self.gauge.cur.load(Ordering::SeqCst)
+    }
+
+    /// Highest queue depth observed over the handle's lifetime.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.gauge.peak.load(Ordering::SeqCst)
+    }
+
+    /// Submit a batched upsert of all layers for `nodes` to the worker
+    /// pool. `per_layer[l]` is row-major `[nodes.len(), hidden]`, exactly
+    /// as [`EmbeddingStore::push`] takes it. Join the ticket where the
+    /// round actually needs the RPC record.
+    pub fn push_async(&self, nodes: Vec<u32>, per_layer: Vec<Vec<f32>>) -> PushTicket {
+        let (ticket, slot) = Ticket::new();
+        let store = Arc::clone(&self.store);
+        let lease = QueueGauge::enter(&self.gauge);
+        let t0 = Instant::now();
+        self.workers.execute(move || {
+            // catch panics so a misbehaving backend yields an Err ticket
+            // instead of leaving the waiter blocked forever
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                store.push(&nodes, &per_layer)
+            }))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("async store push panicked")))
+            .map(|rec| PushDone { rec, wall: t0.elapsed().as_secs_f64() });
+            drop(lease);
+            slot.fulfil(r);
+        });
+        ticket
+    }
+
+    /// Submit a batched pull of all layers for `nodes` to the worker
+    /// pool. The completed ticket owns the pulled rows (one tensor per
+    /// layer), bit-identical to a synchronous `pull_into` against the
+    /// same store state.
+    pub fn prefetch(&self, nodes: Vec<u32>, on_demand: bool) -> PullTicket {
+        let (ticket, slot) = Ticket::new();
+        let store = Arc::clone(&self.store);
+        let lease = QueueGauge::enter(&self.gauge);
+        let t0 = Instant::now();
+        self.workers.execute(move || {
+            let mut rows = Vec::new();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                store.pull_into(&nodes, on_demand, &mut rows)
+            }))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("async store pull panicked")))
+            .map(|rec| PullDone { rows, rec, wall: t0.elapsed().as_secs_f64() });
+            drop(lease);
+            slot.fulfil(r);
+        });
+        ticket
+    }
+}
+
+/// Default for the session pipeline toggle, read from `OPTIMES_PIPELINE`
+/// (`0` / `off` / `false` / `no` disable; anything else — or unset —
+/// enables). The CLI's `run --pipeline on|off` flag writes this variable
+/// so flag and env agree.
+pub fn pipeline_default() -> bool {
+    match std::env::var("OPTIMES_PIPELINE") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "0" | "off" | "false" | "no"
+        ),
+        Err(_) => true,
+    }
+}
+
+/// Wraps a store and *sleeps out* each RPC's virtual-time cost, turning
+/// the [`NetConfig`](super::netsim::NetConfig) model into real wall time
+/// (the in-process slab computes virtual RPC times but returns
+/// instantly). Values and RPC records are unchanged, so sessions keep
+/// bit-exact accuracy parity — only wall clock becomes link-shaped. Used
+/// by `bench_roundtime`'s pipeline A/B and the overlap tests to measure
+/// real overlap deterministically without a network.
+pub struct ThrottledStore {
+    inner: Arc<dyn EmbeddingStore>,
+}
+
+impl ThrottledStore {
+    pub fn new(inner: Arc<dyn EmbeddingStore>) -> Self {
+        Self { inner }
+    }
+
+    /// Sleep until at least `rec.time` wall seconds have passed since
+    /// `t0`, then hand the record back.
+    fn throttle(t0: Instant, rec: RpcRecord) -> RpcRecord {
+        let elapsed = t0.elapsed().as_secs_f64();
+        if rec.time > elapsed {
+            std::thread::sleep(std::time::Duration::from_secs_f64(rec.time - elapsed));
+        }
+        rec
+    }
+}
+
+impl EmbeddingStore for ThrottledStore {
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn hidden(&self) -> usize {
+        self.inner.hidden()
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        let t0 = Instant::now();
+        Ok(Self::throttle(t0, self.inner.push(nodes, per_layer)?))
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        let t0 = Instant::now();
+        Ok(Self::throttle(t0, self.inner.pull_into(nodes, on_demand, out)?))
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        self.inner.stats()
+    }
+
+    fn describe(&self) -> String {
+        format!("throttled({})", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::embedding_server::EmbeddingServer;
+    use crate::coordinator::netsim::NetConfig;
+
+    fn handle(h: usize) -> AsyncStoreHandle {
+        AsyncStoreHandle::new(Arc::new(EmbeddingServer::new(2, h, NetConfig::default())))
+    }
+
+    fn rows(nodes: &[u32], h: usize, salt: f32) -> Vec<f32> {
+        nodes
+            .iter()
+            .flat_map(|&n| (0..h).map(move |j| n as f32 + j as f32 * 0.5 + salt))
+            .collect()
+    }
+
+    #[test]
+    fn async_push_then_prefetch_roundtrips() {
+        let h = handle(4);
+        let nodes = vec![3u32, 7, 11];
+        let l1 = rows(&nodes, 4, 0.0);
+        let l2 = rows(&nodes, 4, 9.0);
+        let push = h.push_async(nodes.clone(), vec![l1.clone(), l2.clone()]);
+        let done = push.wait().unwrap();
+        assert_eq!(done.rec.rows, 3);
+        assert!(done.wall >= 0.0);
+
+        let pull = h.prefetch(vec![7u32, 3], false);
+        let done = pull.wait().unwrap();
+        assert_eq!(done.rec.rows, 2);
+        assert_eq!(&done.rows[0][0..4], &l1[4..8]);
+        assert_eq!(&done.rows[0][4..8], &l1[0..4]);
+        assert_eq!(&done.rows[1][0..4], &l2[4..8]);
+        assert_eq!(h.queue_depth(), 0);
+        assert!(h.peak_queue_depth() >= 1);
+    }
+
+    #[test]
+    fn try_take_returns_ticket_while_in_flight() {
+        // throttle with a large latency so the op is reliably pending
+        let net = NetConfig {
+            latency: 0.15,
+            ..NetConfig::default()
+        };
+        let store: Arc<dyn EmbeddingStore> =
+            Arc::new(ThrottledStore::new(Arc::new(EmbeddingServer::new(2, 4, net))));
+        let h = AsyncStoreHandle::new(store);
+        let ticket = h.prefetch(vec![1u32, 2], true);
+        assert!(!ticket.is_done());
+        let ticket = match ticket.try_take() {
+            Err(t) => t,
+            Ok(_) => panic!("throttled op completed implausibly fast"),
+        };
+        let done = ticket.wait().unwrap();
+        assert_eq!(done.rec.kind, crate::coordinator::metrics::RpcKind::PullOnDemand);
+        // the throttled RPC's measured wall covers at least its latency
+        assert!(done.wall >= 0.15, "wall {}", done.wall);
+    }
+
+    #[test]
+    fn errors_propagate_through_tickets() {
+        let h = handle(4);
+        // wrong layer count: the sharded/slab store rejects the push
+        let bad = h.push_async(vec![1u32], vec![vec![0.0; 4]; 3]);
+        assert!(bad.wait().is_err());
+        // handle still serves later operations
+        let ok = h.push_async(vec![1u32], vec![vec![0.5; 4], vec![1.5; 4]]);
+        assert!(ok.wait().is_ok());
+    }
+
+    #[test]
+    fn pending_pull_matches_only_its_own_set() {
+        let h = handle(4);
+        let globals = vec![5u32, 9];
+        let p = PendingPull {
+            globals: globals.clone(),
+            ticket: h.prefetch(globals.clone(), false),
+        };
+        assert!(p.into_matching(&[5, 9]).is_some());
+        let p = PendingPull {
+            globals,
+            ticket: h.prefetch(vec![5u32, 9], false),
+        };
+        assert!(p.into_matching(&[9, 5]).is_none());
+    }
+
+    #[test]
+    fn throttled_store_sleeps_virtual_time_without_changing_records() {
+        let net = NetConfig {
+            latency: 0.05,
+            ..NetConfig::default()
+        };
+        let raw = Arc::new(EmbeddingServer::new(2, 4, net));
+        let throttled = ThrottledStore::new(Arc::clone(&raw) as Arc<dyn EmbeddingStore>);
+        let nodes = vec![1u32, 2];
+        let l = rows(&nodes, 4, 0.0);
+        let t0 = Instant::now();
+        let rec = throttled.push(&nodes, &[l.clone(), l]).unwrap();
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert!(elapsed >= rec.time, "slept {elapsed}, modeled {}", rec.time);
+        assert!(rec.time >= 0.05);
+        assert!(throttled.describe().starts_with("throttled("));
+        assert_eq!(throttled.stats().unwrap().nodes, 2);
+    }
+
+    #[test]
+    fn pipeline_env_default_semantics() {
+        // do not mutate the env here (tests run in parallel); just pin
+        // the unset default
+        if std::env::var("OPTIMES_PIPELINE").is_err() {
+            assert!(pipeline_default());
+        }
+    }
+}

@@ -19,6 +19,7 @@ use super::client::Client;
 use super::embedding_server::EmbeddingServer;
 use super::metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
 use super::netsim::NetConfig;
+use super::pipeline::{pipeline_default, AsyncStoreHandle};
 use super::store::EmbeddingStore;
 use super::strategy::{ScoreKind, Strategy};
 use super::trainer::{self, pretrain_push};
@@ -55,6 +56,13 @@ pub struct SessionConfig {
     /// (FedAvg resets the loss surface; stale moments from the
     /// pre-aggregation parameters are destructive).
     pub reset_opt_each_round: bool,
+    /// Run the embedding plane through the asynchronous pipeline
+    /// ([`AsyncStoreHandle`], DESIGN.md §9): the ε−k push RPC truly runs
+    /// under the tail epochs and initial pulls are prefetched across
+    /// round boundaries. Results are bit-identical either way; only wall
+    /// clock changes. Default: on (`OPTIMES_PIPELINE=off` / `run
+    /// --pipeline off` disables).
+    pub pipeline: bool,
 }
 
 impl Default for SessionConfig {
@@ -73,6 +81,7 @@ impl Default for SessionConfig {
             parallel_clients: true,
             overlap_stale: 1,
             reset_opt_each_round: true,
+            pipeline: pipeline_default(),
         }
     }
 }
@@ -286,7 +295,22 @@ impl SessionBuilder {
             pull_candidates,
             retained_remotes,
             store_backend: store.describe(),
+            pipelined: cfg.pipeline,
             ..Default::default()
+        };
+
+        // the async pipeline layer over the chosen backend (DESIGN.md §9);
+        // workers sized so every parallel client can keep one push in
+        // flight while prefetches drain (sequential rounds use at most 2)
+        let pipeline = if cfg.pipeline {
+            let workers = if cfg.parallel_clients {
+                cfg.clients + 1
+            } else {
+                2
+            };
+            Some(Arc::new(AsyncStoreHandle::with_workers(Arc::clone(&store), workers)))
+        } else {
+            None
         };
 
         Ok(Session {
@@ -294,6 +318,7 @@ impl SessionBuilder {
             cfg,
             engine,
             store,
+            pipeline,
             aggregator,
             observer,
             validator,
@@ -313,6 +338,9 @@ pub struct Session<'g> {
     cfg: SessionConfig,
     engine: Arc<dyn StepEngine>,
     store: Arc<dyn EmbeddingStore>,
+    /// Async pipeline over `store` (`cfg.pipeline`); `None` runs every
+    /// store call synchronously on the round's own threads.
+    pipeline: Option<Arc<AsyncStoreHandle>>,
     aggregator: Arc<dyn Aggregator>,
     observer: Box<dyn RoundObserver>,
     validator: Validator,
@@ -382,6 +410,7 @@ impl Session<'_> {
         }
 
         // run every client's local round
+        let pipe = self.pipeline.as_deref();
         let outcomes: Vec<trainer::RoundOutcome> = if self.cfg.parallel_clients {
             let engine_ref = &self.engine;
             let store_ref: &dyn EmbeddingStore = self.store.as_ref();
@@ -394,8 +423,8 @@ impl Session<'_> {
                     .iter_mut()
                     .map(|c| {
                         s.spawn(move || {
-                            trainer::run_round_stale(
-                                c, g, strat, engine_ref, store_ref, epochs, lr, stale,
+                            trainer::run_round_pipelined(
+                                c, g, strat, engine_ref, store_ref, epochs, lr, stale, pipe,
                             )
                         })
                     })
@@ -408,10 +437,11 @@ impl Session<'_> {
             results.into_iter().collect::<Result<Vec<_>>>()?
         } else {
             let store_ref: &dyn EmbeddingStore = self.store.as_ref();
-            let mut outs = Vec::with_capacity(self.clients.len());
-            for c in self.clients.iter_mut() {
-                outs.push(trainer::run_round_stale(
-                    c,
+            let n = self.clients.len();
+            let mut outs = Vec::with_capacity(n);
+            for i in 0..n {
+                outs.push(trainer::run_round_pipelined(
+                    &mut self.clients[i],
                     self.g,
                     &self.cfg.strategy,
                     &self.engine,
@@ -419,10 +449,41 @@ impl Session<'_> {
                     self.cfg.epochs,
                     self.cfg.lr,
                     self.cfg.overlap_stale,
+                    pipe,
                 )?);
+                // client i's push ticket is joined, so the store now holds
+                // exactly what client i+1's synchronous initial pull would
+                // read — fly that pull ahead of its round (DESIGN.md §9)
+                if let Some(handle) = pipe {
+                    if i + 1 < n {
+                        let next = &mut self.clients[i + 1];
+                        let prefetch = trainer::issue_prefetch(next, &self.cfg.strategy, handle);
+                        next.pending_pull = prefetch;
+                    }
+                }
             }
             outs
         };
+
+        // pipeline: every push of this round is joined, so next-round
+        // pulls read their final values — issue them now and let the RPCs
+        // overlap aggregation, validation, and the model broadcast. In
+        // sequential mode only client 0's next pull sees exactly this
+        // state (later clients also see same-round pushes of earlier
+        // ones, and were prefetched inside the loop above).
+        if let Some(handle) = self.pipeline.as_deref() {
+            if round + 1 < self.cfg.rounds {
+                if self.cfg.parallel_clients {
+                    for c in self.clients.iter_mut() {
+                        let prefetch = trainer::issue_prefetch(c, &self.cfg.strategy, handle);
+                        c.pending_pull = prefetch;
+                    }
+                } else if let Some(c) = self.clients.first_mut() {
+                    let prefetch = trainer::issue_prefetch(c, &self.cfg.strategy, handle);
+                    c.pending_pull = prefetch;
+                }
+            }
+        }
 
         // aggregate + validate
         let agg_sw = Stopwatch::start();

@@ -24,6 +24,7 @@ use anyhow::{ensure, Result};
 use super::embedding_server::EmbeddingServer;
 use super::metrics::{RpcKind, RpcRecord};
 use super::netsim::NetConfig;
+use crate::util::pool;
 
 /// Aggregate store occupancy, as reported by `stats` RPCs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -37,14 +38,44 @@ pub struct StoreStats {
 /// A store of per-vertex hidden embeddings `h^1..h^{L-1}`, keyed by
 /// global vertex id, with one logical DB per layer (paper §5.1).
 ///
-/// Contract shared by all impls:
+/// # Contract shared by all impls
+///
 /// * `push` upserts `per_layer[l]` as row-major `[nodes.len(), hidden]`.
 /// * `pull_into` resizes `out` to one `[nodes.len(), hidden]` tensor per
 ///   layer (reusing capacity) and zero-fills rows of never-pushed nodes.
 /// * Values round-trip bit-exactly; a session run against any backend
-///   follows the same accuracy trajectory for the same seed.
+///   follows the same accuracy trajectory for the same seed
+///   (`tests/store_parity.rs`).
 /// * Returned [`RpcRecord`]s carry the backend's notion of service time
 ///   (modeled virtual time in-process, measured wall time over TCP).
+///
+/// # Thread safety
+///
+/// Every impl is `Send + Sync` and every method takes `&self`: parallel
+/// clients — and the async pipeline's background workers
+/// ([`AsyncStoreHandle`](super::pipeline::AsyncStoreHandle)) — share one
+/// `Arc<dyn EmbeddingStore>` and may issue concurrent batched calls.
+/// Concurrent upserts of *disjoint* node sets (the federated case: each
+/// client pushes only nodes it owns) commute; concurrent upserts of the
+/// same node last-write-win per shard. A pull that races a push may
+/// observe either version of a row, never a torn one (rows are written
+/// under a per-shard lock in-process and within one frame over TCP).
+///
+/// # Geometry handshake
+///
+/// `n_layers`/`hidden` are fixed at construction. Consumers must agree:
+/// the session builder rejects a store whose geometry differs from the
+/// engine's at `build` time, and [`TcpEmbeddingStore::connect`] performs
+/// an empty-pull handshake so a mismatched remote daemon fails at
+/// connect, not mid-round.
+///
+/// # Error semantics
+///
+/// In-process calls are infallible (geometry violations panic — they are
+/// caller bugs). Transport-backed calls return `Err` for connection and
+/// protocol failures after one transparent reconnect-and-retry (all ops
+/// are idempotent upserts/reads, so the retry is safe); a deterministic
+/// server-side rejection surfaces with both attempts in the error chain.
 ///
 /// Sessions additionally assume the store holds *no rows for their
 /// graph* when they start (the in-process default is constructed fresh
@@ -52,6 +83,8 @@ pub struct StoreStats {
 /// serves rows pushed by earlier ones where the contract promises
 /// zeros — restart the daemon (or run one daemon per session) when
 /// cross-backend reproducibility matters.
+///
+/// [`TcpEmbeddingStore::connect`]: super::net_transport::TcpEmbeddingStore::connect
 pub trait EmbeddingStore: Send + Sync {
     /// Number of hidden-layer DBs (L-1 for an L-layer GNN).
     fn n_layers(&self) -> usize;
@@ -83,8 +116,18 @@ pub trait EmbeddingStore: Send + Sync {
 
 /// Hash-partitions vertex ids across N child stores. Pushes and pulls
 /// fan out as one batched sub-RPC per shard that owns at least one of
-/// the requested ids; shard RPCs are accounted as running in parallel
-/// (`time = max over shards`, `bytes = sum`).
+/// the requested ids; when more than one shard participates, the
+/// sub-RPCs *execute concurrently* (scoped threads, one per shard), and
+/// the record accounts them accordingly (`time = max over shards`,
+/// `bytes = sum`). Results are position-scattered into the caller's
+/// buffers, so the merged output is independent of shard completion
+/// order — sharding never changes values.
+///
+/// Shard hashing: the owning shard of a vertex is
+/// `splitmix64(id) % n_shards` (an avalanche hash, so dense id ranges
+/// spread evenly regardless of shard count). The mapping is stable for a
+/// fixed shard count; resizing the shard set re-homes ids and requires a
+/// fresh store.
 pub struct ShardedStore {
     backends: Vec<Arc<dyn EmbeddingStore>>,
     n_layers: usize,
@@ -168,6 +211,8 @@ impl EmbeddingStore for ShardedStore {
             bytes: 0,
             time: 0.0,
         };
+        // slice the batch per owning shard...
+        let mut jobs: Vec<(usize, Vec<u32>, Vec<Vec<f32>>)> = Vec::new();
         for (sid, group) in self.group(nodes).iter().enumerate() {
             if group.is_empty() {
                 continue;
@@ -183,7 +228,22 @@ impl EmbeddingStore for ShardedStore {
                     v
                 })
                 .collect();
-            let r = self.backends[sid].push(&sub_nodes, &sub_layers)?;
+            jobs.push((sid, sub_nodes, sub_layers));
+        }
+        // ...and fan the sub-RPCs out concurrently (one scoped worker per
+        // shard); upserts of disjoint id sets commute, so concurrency
+        // never changes the stored values
+        let results: Vec<Result<RpcRecord>> = if jobs.len() > 1 {
+            pool::parallel_map(&jobs, jobs.len(), |_, (sid, sub_nodes, sub_layers)| {
+                self.backends[*sid].push(sub_nodes, sub_layers)
+            })
+        } else {
+            jobs.iter()
+                .map(|(sid, n, l)| self.backends[*sid].push(n, l))
+                .collect()
+        };
+        for r in results {
+            let r = r?;
             rec.bytes += r.bytes;
             rec.time = rec.time.max(r.time);
         }
@@ -213,13 +273,33 @@ impl EmbeddingStore for ShardedStore {
             bytes: 0,
             time: 0.0,
         };
-        let mut shard_buf: Vec<Vec<f32>> = Vec::new();
-        for (sid, group) in self.group(nodes).iter().enumerate() {
-            if group.is_empty() {
-                continue;
-            }
-            let sub_nodes: Vec<u32> = group.iter().map(|&i| nodes[i]).collect();
-            let r = self.backends[sid].pull_into(&sub_nodes, on_demand, &mut shard_buf)?;
+        let groups = self.group(nodes);
+        let jobs: Vec<(usize, Vec<u32>)> = groups
+            .iter()
+            .enumerate()
+            .filter(|(_, group)| !group.is_empty())
+            .map(|(sid, group)| (sid, group.iter().map(|&i| nodes[i]).collect()))
+            .collect();
+        // concurrent sub-pulls into per-shard buffers; the scatter below
+        // writes disjoint row positions, so completion order is invisible
+        let results: Vec<Result<(usize, Vec<Vec<f32>>, RpcRecord)>> = if jobs.len() > 1 {
+            pool::parallel_map(&jobs, jobs.len(), |_, (sid, sub_nodes)| {
+                let mut buf = Vec::new();
+                let r = self.backends[*sid].pull_into(sub_nodes, on_demand, &mut buf)?;
+                Ok((*sid, buf, r))
+            })
+        } else {
+            jobs.iter()
+                .map(|(sid, sub_nodes)| {
+                    let mut buf = Vec::new();
+                    let r = self.backends[*sid].pull_into(sub_nodes, on_demand, &mut buf)?;
+                    Ok((*sid, buf, r))
+                })
+                .collect()
+        };
+        for res in results {
+            let (sid, shard_buf, r) = res?;
+            let group = &groups[sid];
             for (layer, rows) in out.iter_mut().zip(&shard_buf) {
                 for (j, &i) in group.iter().enumerate() {
                     layer[i * h..(i + 1) * h].copy_from_slice(&rows[j * h..(j + 1) * h]);

@@ -11,6 +11,52 @@
 //! * `OPP` — OP + scored pull prefetch (top-x%, default 25%, rest
 //!   on-demand)
 //! * `OPG` — OP + scored graph pruning (top-f%, default 25%, static)
+//!
+//! # Strategy-string grammar
+//!
+//! [`Strategy::parse`] accepts exactly this grammar (case-insensitive;
+//! it is the same text a [`ParseStrategyError`] prints, kept verbatim in
+//! [`STRATEGY_GRAMMAR`]):
+//!
+//! ```text
+//! strategy := "D" | "E" | "O"                    the ladder's unparameterized rungs
+//!           | "P" | "P"<i> | "P"<i>"dyn" | "Pinf"
+//!           | "OP" | "OPP" | "OPG"
+//!           | "OPP_" score pct                   scored-prefetch ablations
+//!           | "OPG_" score pct                   scored-pruning ablations
+//! score    := "T" | "R" | "D" | "B"              frequency | random | degree | bridge
+//! pct      := number in 0..=100                  top percentage (decimals allowed)
+//! <i>      := unsigned integer                   per-vertex retention limit
+//! ```
+//!
+//! `P` alone means `P4` (the paper's default retention); the `dyn`
+//! suffix re-samples the retained sets every round instead of once
+//! offline; `Pinf` is an unlimited-retention alias of `E`.
+//!
+//! ```
+//! use optimes::coordinator::{ScoreKind, Strategy};
+//!
+//! // the seven headline strategies parse to their canonical names
+//! for name in ["D", "E", "O", "P", "OP", "OPP", "OPG"] {
+//!     assert_eq!(Strategy::parse(name).unwrap().name, name);
+//! }
+//!
+//! // P<i>: retention limit; the "dyn" suffix re-samples per round
+//! let p2 = Strategy::parse("p2").unwrap();
+//! assert_eq!(p2.retention, Some(2));
+//! let p4dyn = Strategy::parse("P4dyn").unwrap();
+//! assert!(p4dyn.dynamic_prune && p4dyn.retention == Some(4));
+//!
+//! // OPP_<score><pct>: prefetch the top pct% by the chosen score
+//! let opp = Strategy::parse("OPP_B50").unwrap();
+//! let pf = opp.prefetch.unwrap();
+//! assert_eq!(pf.score, ScoreKind::Bridge);
+//! assert!((pf.top_frac - 0.5).abs() < 1e-9);
+//!
+//! // anything else errors, naming the full grammar
+//! let err = Strategy::parse("OPP_Q25").unwrap_err();
+//! assert!(err.to_string().contains("OPP_<T|R|D|B><pct>"));
+//! ```
 
 use std::fmt;
 
@@ -221,9 +267,26 @@ impl Strategy {
         ]
     }
 
-    /// Parse "D" | "E" | "O" | "P" | "P2" | "OP" | "OPP" | "OPP_T0" |
-    /// "OPP_R25" | "OPG" | "OPG_B25" | "OPG_T75" | ... The error names
-    /// the full grammar ([`STRATEGY_GRAMMAR`]).
+    /// Parse a strategy string against the grammar documented at the
+    /// [module level](crate::coordinator::strategy) and in
+    /// [`STRATEGY_GRAMMAR`] — `"D"`, `"E"`,
+    /// `"O"`, `"P"`, `"P2"`, `"P4dyn"`, `"Pinf"`, `"OP"`, `"OPP"`,
+    /// `"OPG"`, `"OPP_T0"`, `"OPG_B25"`, ... (case-insensitive). The
+    /// error names the full grammar.
+    ///
+    /// ```
+    /// use optimes::coordinator::Strategy;
+    ///
+    /// let s = Strategy::parse("opg_t75").unwrap();
+    /// assert_eq!(s.name, "OPG_T75");
+    /// assert!((s.scored_prune.unwrap().top_frac - 0.75).abs() < 1e-9);
+    ///
+    /// // the error converts into `anyhow::Error` via `?`
+    /// fn pick(s: &str) -> anyhow::Result<Strategy> {
+    ///     Ok(Strategy::parse(s)?)
+    /// }
+    /// assert!(pick("XYZ").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<Strategy, ParseStrategyError> {
         Self::try_parse(s).ok_or_else(|| ParseStrategyError {
             input: s.to_string(),

@@ -2,6 +2,15 @@
 //! OPP on-demand pulls), and the push phase — optionally overlapped with
 //! the final epoch (paper §3.2.2, §4.2, §4.3).
 //!
+//! With an [`AsyncStoreHandle`] attached ([`run_round_pipelined`]), the
+//! overlap is *real*: the ε−k push RPC is handed to a background worker
+//! and its ticket joined at round end, and a round's initial pull can be
+//! served from a [`PendingPull`] prefetch issued while the previous
+//! round was still aggregating ([`issue_prefetch`]). Measured wall times
+//! of the hidden work land in
+//! [`OverlapMetrics`](super::metrics::OverlapMetrics), next to the
+//! virtual-time model (DESIGN.md §7, §9).
+//!
 //! Batch assembly goes through a reusable per-client [`BatchScratch`]
 //! arena: after the first minibatch, assembly performs no heap allocation
 //! (buffers are resized in place) and the geometry-constant adjacency is
@@ -14,6 +23,7 @@ use anyhow::{ensure, Result};
 
 use super::client::{Client, EmbCache};
 use super::metrics::{CacheStats, ClientRoundMetrics, RpcRecord};
+use super::pipeline::{AsyncStoreHandle, PendingPull, PushTicket};
 use super::store::EmbeddingStore;
 use super::strategy::Strategy;
 use crate::graph::sampler::{Blocks, Sampler, SharedAdj};
@@ -149,27 +159,22 @@ pub fn assemble_batch(
     scratch.assemble(blocks, sub, cache, g, adj, with_labels).clone()
 }
 
-/// Compute h^1..h^{L-1} for the client's push nodes and push them to the
-/// embedding store in one batched RPC. Returns (embed-compute seconds,
-/// push RPC record, cache stats over the embed assemblies). `local_only`
-/// selects the pre-training sampling mode.
+/// Compute the h^1..h^{L-1} push rows for `push_local` (the push-embed
+/// forward pass). Returns (measured embed-compute seconds, per-layer
+/// row-major rows aligned with `push_local`, cache stats over the embed
+/// assemblies). `local_only` selects the pre-training sampling mode.
 #[allow(clippy::too_many_arguments)]
-pub fn compute_and_push(
+fn compute_push_layers(
     sub: &ClientSubgraph,
     cache: &EmbCache,
     state: &ModelState,
     engine: &Arc<dyn StepEngine>,
-    store: &dyn EmbeddingStore,
     sampler: &mut Sampler,
     adj_embed: &SharedAdj,
     push_local: &[u32],
-    push_globals: &[u32],
     g: &Graph,
     local_only: bool,
-) -> Result<(f64, Option<RpcRecord>, CacheStats)> {
-    if push_local.is_empty() {
-        return Ok((0.0, None, CacheStats::default()));
-    }
+) -> Result<(f64, Vec<Vec<f32>>, CacheStats)> {
     let dims = sampler.dims;
     let h = dims.hidden;
     let n_layers = dims.layers - 1;
@@ -193,7 +198,33 @@ pub fn compute_and_push(
             per_layer[l].extend_from_slice(&rows[..chunk.len() * h]);
         }
     }
-    let compute = sw.secs();
+    Ok((sw.secs(), per_layer, stats))
+}
+
+/// Compute h^1..h^{L-1} for the client's push nodes and push them to the
+/// embedding store in one batched RPC. Returns (embed-compute seconds,
+/// push RPC record, cache stats over the embed assemblies). `local_only`
+/// selects the pre-training sampling mode.
+#[allow(clippy::too_many_arguments)]
+pub fn compute_and_push(
+    sub: &ClientSubgraph,
+    cache: &EmbCache,
+    state: &ModelState,
+    engine: &Arc<dyn StepEngine>,
+    store: &dyn EmbeddingStore,
+    sampler: &mut Sampler,
+    adj_embed: &SharedAdj,
+    push_local: &[u32],
+    push_globals: &[u32],
+    g: &Graph,
+    local_only: bool,
+) -> Result<(f64, Option<RpcRecord>, CacheStats)> {
+    if push_local.is_empty() {
+        return Ok((0.0, None, CacheStats::default()));
+    }
+    let (compute, per_layer, stats) = compute_push_layers(
+        sub, cache, state, engine, sampler, adj_embed, push_local, g, local_only,
+    )?;
     let rec = store.push(push_globals, &per_layer)?;
     Ok((compute, Some(rec), stats))
 }
@@ -242,6 +273,10 @@ pub fn run_round(
 /// paper's §1 "different staleness configurations in overlapping
 /// communication"; k=1 is the published configuration). Returns phase
 /// metrics + epoch timings; the session composes virtual round time.
+///
+/// This entry point runs without the async pipeline (the overlap is
+/// carried by a scoped thread and modeled in virtual time);
+/// [`run_round_pipelined`] is the superset that makes it real.
 #[allow(clippy::too_many_arguments)]
 pub fn run_round_stale(
     client: &mut Client,
@@ -253,6 +288,45 @@ pub fn run_round_stale(
     lr: f32,
     overlap_stale: usize,
 ) -> Result<RoundOutcome> {
+    run_round_pipelined(client, g, strategy, engine, store, epochs, lr, overlap_stale, None)
+}
+
+/// The push pipeline's state after the overlap window: either a
+/// synchronous push already completed on the scoped thread, or an async
+/// ticket still (possibly) in flight on the store handle's workers.
+enum PushJob {
+    Sync(f64, Option<RpcRecord>, CacheStats),
+    Async(f64, PushTicket, CacheStats),
+}
+
+/// [`run_round_stale`] with an optional [`AsyncStoreHandle`]. When the
+/// handle is present (`--pipeline on`):
+///
+/// * the ε−k push RPC is submitted to the handle's background workers as
+///   soon as its embeddings are computed and its ticket is joined at
+///   round end, so the store I/O truly runs under the remaining epochs
+///   (measured in [`OverlapMetrics`](super::metrics::OverlapMetrics)
+///   `push_wall` / `push_wait`);
+/// * the initial pull is served from the client's [`PendingPull`]
+///   prefetch when one matching this round's pull set is waiting (issued
+///   by [`issue_prefetch`] while the previous round aggregated), paying
+///   only the residual `pull_wait`.
+///
+/// Pipelining changes *when* wall time is spent, never values: the
+/// virtual phase accounting and the accuracy trajectory are identical to
+/// the unpipelined round for a fixed seed (`tests/store_parity.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_round_pipelined(
+    client: &mut Client,
+    g: &Graph,
+    strategy: &Strategy,
+    engine: &Arc<dyn StepEngine>,
+    store: &dyn EmbeddingStore,
+    epochs: usize,
+    lr: f32,
+    overlap_stale: usize,
+    pipeline: Option<&AsyncStoreHandle>,
+) -> Result<RoundOutcome> {
     let dims = client.dims;
     let stale = overlap_stale.clamp(1, epochs.saturating_sub(1).max(1));
     let mut out = RoundOutcome {
@@ -263,6 +337,8 @@ pub fn run_round_stale(
         overlapped: strategy.overlap_push && epochs >= 2,
         ..Default::default()
     };
+    // take any waiting prefetch before the pull set can change below
+    let pending = client.pending_pull.take();
     client.resample_dynamic_prune();
 
     // ---- pull phase ------------------------------------------------------
@@ -276,7 +352,21 @@ pub fn run_round_stale(
         };
         if !rows.is_empty() {
             let globals: Vec<u32> = rows.iter().map(|&r| client.sub.remote[r as usize]).collect();
-            let rec = store.pull_into(&globals, false, &mut client.pull_buf)?;
+            let rec = match pending.and_then(|p| p.into_matching(&globals)) {
+                Some(ticket) => {
+                    // the RPC ran while the previous round aggregated /
+                    // the previous client pushed; only the residual wait
+                    // is a real stall
+                    let join_sw = Stopwatch::start();
+                    let done = ticket.wait()?;
+                    out.metrics.overlap.pipelined = true;
+                    out.metrics.overlap.pull_wall += done.wall;
+                    out.metrics.overlap.pull_wait += join_sw.secs();
+                    client.pull_buf = done.rows;
+                    done.rec
+                }
+                None => store.pull_into(&globals, false, &mut client.pull_buf)?,
+            };
             client.cache.insert(&rows, &client.pull_buf);
             out.metrics.phases.pull += rec.time;
             out.metrics.embeddings_pulled += rec.rows;
@@ -361,21 +451,31 @@ pub fn run_round_stale(
             pull_buf,
         };
         let sub_ref: &ClientSubgraph = ctx.sub;
-        let (epoch_res, push_res) = std::thread::scope(|s| {
-            let push_handle = s.spawn(move || {
-                compute_and_push(
+        let overlap_sw = Stopwatch::start();
+        let (epoch_res, push_res, epochs_wall) = std::thread::scope(|s| {
+            let push_handle = s.spawn(move || -> Result<PushJob> {
+                let (compute, per_layer, stats) = compute_push_layers(
                     sub_ref,
                     &cache_snap,
                     &state_snap,
                     engine,
-                    store,
                     &mut push_sampler,
                     &adj_embed,
                     &push_local,
-                    &push_globals,
                     g,
                     false,
-                )
+                )?;
+                Ok(match pipeline {
+                    // hand the RPC to the async plane; its ticket is
+                    // joined at round end, after the tail epochs
+                    Some(handle) => {
+                        PushJob::Async(compute, handle.push_async(push_globals, per_layer), stats)
+                    }
+                    None => {
+                        let rec = store.push(&push_globals, &per_layer)?;
+                        PushJob::Sync(compute, Some(rec), stats)
+                    }
+                })
             });
             let mut results = Vec::new();
             for targets in target_lists.iter().skip(overlap_at) {
@@ -384,15 +484,33 @@ pub fn run_round_stale(
                     targets.len(),
                 ));
             }
-            (results, push_handle.join().expect("push thread"))
+            let epochs_wall = overlap_sw.secs();
+            (results, push_handle.join().expect("push thread"), epochs_wall)
         });
+        let scope_wall = overlap_sw.secs();
         for (res, n) in epoch_res {
             let (el, et) = res?;
             loss_acc += el;
             loss_n += n;
             out.epoch_times.push(et);
         }
-        push_result = Some(push_res?);
+        match push_res? {
+            PushJob::Sync(compute, rec, stats) => {
+                push_result = Some((compute, rec, stats));
+            }
+            PushJob::Async(compute, ticket, stats) => {
+                let join_sw = Stopwatch::start();
+                let done = ticket.wait()?;
+                let ov = &mut out.metrics.overlap;
+                ov.pipelined = true;
+                // real work of the push pipeline vs. the stall the round
+                // actually paid for it: the overhang of the embed-compute
+                // thread past the tail epochs plus the ticket join
+                ov.push_wall += compute + done.wall;
+                ov.push_wait += (scope_wall - epochs_wall).max(0.0) + join_sw.secs();
+                push_result = Some((compute, Some(done.rec), stats));
+            }
+        }
     }
 
     // ---- push phase (synchronous when not overlapped) --------------------
@@ -438,6 +556,16 @@ pub fn run_round_stale(
     } else {
         out.metrics.phases.push = out.push_total;
     }
+    // measured overlap summary (real wall clock, recorded next to the §7
+    // virtual model): pipeline work minus the stall actually paid for it
+    if out.metrics.overlap.pipelined {
+        let ov = &mut out.metrics.overlap;
+        ov.overlap_saved = (ov.push_wall - ov.push_wait).max(0.0)
+            + (ov.pull_wall - ov.pull_wait).max(0.0);
+        if let Some(handle) = pipeline {
+            ov.queue_peak = handle.peak_queue_depth();
+        }
+    }
     out.metrics.phases.train = out.epoch_times.iter().sum();
     out.metrics.train_loss = if loss_n > 0 {
         (loss_acc / loss_n as f64) as f32
@@ -445,6 +573,38 @@ pub fn run_round_stale(
         0.0
     };
     Ok(out)
+}
+
+/// Issue the *next* initial pull of `client` on the async plane, if its
+/// pull set is statically known (dynamic per-round pruning re-samples
+/// the set at round start, so those rounds pull synchronously). Returns
+/// the pending ticket to park on the client.
+///
+/// Value-safety contract (DESIGN.md §9): call this only once the store
+/// already holds exactly what the client's next synchronous pull would
+/// read — i.e. after the preceding client's push ticket is joined
+/// (sequential mode) or after every client's round completed (parallel
+/// mode / round boundary). Under that contract the prefetched rows are
+/// bit-identical to an unpipelined pull and accuracy parity holds.
+pub fn issue_prefetch(
+    client: &Client,
+    strategy: &Strategy,
+    handle: &AsyncStoreHandle,
+) -> Option<PendingPull> {
+    if !strategy.share_embeddings || strategy.dynamic_prune || client.sub.n_remote() == 0 {
+        return None;
+    }
+    let rows: Vec<u32> = if strategy.prefetch.is_some() {
+        client.prefetch_rows.clone()
+    } else {
+        client.active_remote_rows()
+    };
+    if rows.is_empty() {
+        return None;
+    }
+    let globals: Vec<u32> = rows.iter().map(|&r| client.sub.remote[r as usize]).collect();
+    let ticket = handle.prefetch(globals.clone(), false);
+    Some(PendingPull { globals, ticket })
 }
 
 /// Disjoint mutable parts of a client used by the epoch loop (lets the
@@ -704,6 +864,59 @@ mod tests {
         assert!((p.push + p.push_hidden - out.push_total).abs() < 1e-9);
         // model still updated by the final epoch
         assert!(c.state.t >= 3.0);
+    }
+
+    #[test]
+    fn pipelined_round_records_real_overlap() {
+        let (g, mut clients, eng, server) = setup(&Prune::None);
+        for c in clients.iter_mut() {
+            pretrain_push(c, &g, &eng, &server).unwrap();
+        }
+        let store: Arc<dyn EmbeddingStore> = Arc::new(server);
+        let handle = AsyncStoreHandle::new(Arc::clone(&store));
+        let c = &mut clients[1];
+        let out = run_round_pipelined(
+            c, &g, &Strategy::o(), &eng, store.as_ref(), 3, 0.01, 1, Some(&handle),
+        )
+        .unwrap();
+        assert!(out.overlapped);
+        let ov = out.metrics.overlap;
+        assert!(ov.pipelined, "async push consumed no ticket");
+        assert!(ov.push_wall > 0.0);
+        assert!(ov.overlap_saved >= 0.0);
+        assert!(ov.queue_peak >= 1);
+        // the virtual model is untouched by the pipeline
+        let p = out.metrics.phases;
+        assert!((p.push + p.push_hidden - out.push_total).abs() < 1e-9);
+        // model still updated by the final epoch
+        assert!(c.state.t >= 3.0);
+    }
+
+    #[test]
+    fn prefetch_ticket_is_consumed_by_next_round() {
+        let (g, mut clients, eng, server) = setup(&Prune::None);
+        for c in clients.iter_mut() {
+            pretrain_push(c, &g, &eng, &server).unwrap();
+        }
+        let store: Arc<dyn EmbeddingStore> = Arc::new(server);
+        let handle = AsyncStoreHandle::new(Arc::clone(&store));
+        let c = &mut clients[0];
+        let pending = issue_prefetch(c, &Strategy::e(), &handle);
+        c.pending_pull = pending;
+        assert!(c.pending_pull.is_some(), "static pull set must prefetch");
+        let out = run_round_pipelined(
+            c, &g, &Strategy::e(), &eng, store.as_ref(), 2, 0.01, 1, Some(&handle),
+        )
+        .unwrap();
+        assert!(c.pending_pull.is_none(), "ticket must be consumed");
+        let ov = out.metrics.overlap;
+        assert!(ov.pipelined, "prefetched pull consumed no ticket");
+        assert!(ov.pull_wall > 0.0);
+        // pull accounting identical to the synchronous path
+        assert_eq!(out.metrics.embeddings_pulled, c.sub.n_remote());
+        assert!(out.metrics.phases.pull > 0.0);
+        // D never prefetches (nothing shared)
+        assert!(issue_prefetch(c, &Strategy::d(), &handle).is_none());
     }
 
     #[test]

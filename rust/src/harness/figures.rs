@@ -81,6 +81,12 @@ fn sessions_json(sessions: &[SessionMetrics], target: f64) -> Json {
                     .set("dyn_pull", p.dyn_pull)
                     .set("push", p.push);
                 o.set("median_phases", ph);
+                // measured (real) pipeline overlap, next to the virtual
+                // push_hidden model — DESIGN.md §9
+                let ov = m.overlap_stats();
+                if ov.pipelined {
+                    o.set("overlap", ov.to_json());
+                }
                 o.set("smoothed_accuracy", m.smoothed_accuracies());
                 o.set(
                     "round_times",
@@ -220,9 +226,13 @@ pub fn fig7(model: ModelKind, datasets: &[&str]) -> Result<Json> {
         let sessions = ladder_sessions(name, model, 5, &Strategy::ladder(), None)?;
         let mut t = Table::new(&[
             "strategy", "round(s)", "pull", "train", "dyn pull", "push", "push hidden",
+            "saved/round (real)",
         ]);
         for m in &sessions {
             let p = m.median_phases();
+            // per-round mean so the real column is comparable to the
+            // per-round virtual columns beside it
+            let saved = m.overlap_stats().overlap_saved / m.rounds.len().max(1) as f64;
             t.row(vec![
                 m.strategy.clone(),
                 format!("{:.3}", m.median_round_time()),
@@ -231,6 +241,7 @@ pub fn fig7(model: ModelKind, datasets: &[&str]) -> Result<Json> {
                 format!("{:.3}", p.dyn_pull),
                 format!("{:.3}", p.push),
                 format!("{:.3}", p.push_hidden),
+                format!("{:.3}", saved),
             ]);
         }
         t.print(&format!(

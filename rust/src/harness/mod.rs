@@ -12,6 +12,9 @@
 //!   embedding stores over TCP (several addresses = hash-sharded).
 //! * `OPTIMES_SHARDS=n` — back sessions by an n-way sharded in-process
 //!   store (ignored when `OPTIMES_SERVER` is set).
+//! * `OPTIMES_PIPELINE=off` — disable the asynchronous push/pull
+//!   pipeline over the store (default on; DESIGN.md §9). Results are
+//!   bit-identical either way, only wall clock changes.
 
 pub mod figures;
 pub mod report;

@@ -6,7 +6,8 @@
 //! collapsed — the cache stores the aggregate view.
 
 use crate::coordinator::metrics::{
-    ClientRoundMetrics, PhaseTimes, RoundMetrics, RpcKind, RpcRecord, SessionMetrics,
+    ClientRoundMetrics, OverlapMetrics, PhaseTimes, RoundMetrics, RpcKind, RpcRecord,
+    SessionMetrics,
 };
 use crate::util::json::{Json, JsonObj};
 
@@ -51,10 +52,13 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
     o.set("strategy", m.strategy.as_str());
     o.set("dataset", m.dataset.as_str());
     o.set("store_backend", m.store_backend.as_str());
+    o.set("pipelined", m.pipelined);
     o.set("n_clients", m.n_clients);
     o.set("server_embeddings", m.server_embeddings);
     o.set("pull_candidates", m.pull_candidates);
     o.set("retained_remotes", m.retained_remotes);
+    // aggregate measured pipeline overlap (per-client traces collapse)
+    o.set("overlap", m.overlap_stats().to_json());
     let rounds: Vec<Json> = m
         .rounds
         .iter()
@@ -98,6 +102,7 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             .as_str()
             .unwrap_or_default()
             .to_string(),
+        pipelined: j.at("pipelined").as_bool().unwrap_or(false),
         n_clients: j.at("n_clients").as_usize()?,
         server_embeddings: j.at("server_embeddings").as_usize().unwrap_or(0),
         pull_candidates: j.at("pull_candidates").as_usize().unwrap_or(0),
@@ -131,13 +136,26 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             })
         })
         .collect();
-    if !rpcs.is_empty() {
+    // re-attach the aggregate overlap stats to the same synthetic client
+    // so `SessionMetrics::overlap_stats()` survives the cache round-trip
+    let ovj = j.at("overlap");
+    let overlap = OverlapMetrics {
+        pipelined: ovj.at("pipelined").as_bool().unwrap_or(false),
+        push_wall: ovj.at("push_wall").as_f64().unwrap_or(0.0),
+        push_wait: ovj.at("push_wait").as_f64().unwrap_or(0.0),
+        pull_wall: ovj.at("pull_wall").as_f64().unwrap_or(0.0),
+        pull_wait: ovj.at("pull_wait").as_f64().unwrap_or(0.0),
+        overlap_saved: ovj.at("overlap_saved").as_f64().unwrap_or(0.0),
+        queue_peak: ovj.at("queue_peak").as_usize().unwrap_or(0),
+    };
+    if !rpcs.is_empty() || overlap.pipelined {
         if m.rounds.is_empty() {
             m.rounds.push(RoundMetrics::default());
         }
         m.rounds[0].clients.push(ClientRoundMetrics {
             client: 0,
             rpcs,
+            overlap,
             ..Default::default()
         });
     }
@@ -178,6 +196,14 @@ mod tests {
                     bytes: 100,
                     time: 0.01,
                 }],
+                overlap: OverlapMetrics {
+                    pipelined: true,
+                    push_wall: 0.5,
+                    push_wait: 0.1,
+                    overlap_saved: 0.4,
+                    queue_peak: 2,
+                    ..Default::default()
+                },
                 ..Default::default()
             });
             m.rounds.push(r);
@@ -193,5 +219,11 @@ mod tests {
         assert_eq!(back.store_backend, "tcp(10.0.0.2:7070)");
         // derived metrics survive the roundtrip
         assert!((back.peak_accuracy() - m.peak_accuracy()).abs() < 1e-9);
+        // aggregate measured overlap survives too
+        let (a, b) = (m.overlap_stats(), back.overlap_stats());
+        assert!(b.pipelined);
+        assert!((a.push_wall - b.push_wall).abs() < 1e-9);
+        assert!((a.overlap_saved - b.overlap_saved).abs() < 1e-9);
+        assert_eq!(a.queue_peak, b.queue_peak);
     }
 }

@@ -6,7 +6,7 @@
 //!               [--model gc|sage] [--clients N] [--fanout 5|10|15]
 //!               [--epochs 3] [--lr 0.01] [--engine ref|pjrt]
 //!               [--server host:port[,host:port...]] [--shards N]
-//!               [--agg fedavg|uniform|trimmed[:k]]
+//!               [--pipeline on|off] [--agg fedavg|uniform|trimmed[:k]]
 //!               [--scale N] [--seed S] [--report out.json]
 //! optimes sweep --dataset reddit-s --strategies D,E,OP,OPP,OPG
 //! optimes fig   <table1|2a|2b|6|7|8|9|10|11|12|13|14|all>
@@ -59,6 +59,14 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     if let Some(s) = args.get("shards") {
         std::env::set_var("OPTIMES_SHARDS", s);
     }
+    if let Some(p) = args.get("pipeline") {
+        match p.to_ascii_lowercase().as_str() {
+            "on" | "off" | "1" | "0" | "true" | "false" | "yes" | "no" => {
+                std::env::set_var("OPTIMES_PIPELINE", p)
+            }
+            other => bail!("--pipeline expects on|off, got {other:?}"),
+        }
+    }
     match cmd {
         "info" => info(),
         "run" => run(args),
@@ -90,6 +98,7 @@ commands:
          [--engine ref|pjrt] [--scale N] [--seed S] [--report FILE]
          [--server HOST:PORT[,HOST:PORT...]]   use remote embedding store(s)
          [--shards N]                          shard the in-process store
+         [--pipeline on|off]                   async push/pull pipeline (default on)
          [--agg fedavg|uniform|trimmed[:k]]    aggregation rule
   sweep  --dataset D --strategies D,E,O,P,OP,OPP,OPG
   fig    table1|2a|2b|6|7|8|9|10|11|12|13|14|all
@@ -104,6 +113,14 @@ fn info() -> Result<()> {
         "store backend: {} [{} shard(s)]",
         harness::store_desc(),
         harness::store_shards()
+    );
+    println!(
+        "pipeline: {}",
+        if optimes::coordinator::pipeline_default() {
+            "on (async push/pull; OPTIMES_PIPELINE=off disables)"
+        } else {
+            "off (synchronous store calls)"
+        }
     );
     println!("dataset scale: 1/{}", harness::dataset_scale());
     match Manifest::load(harness::artifacts_dir()) {
@@ -157,6 +174,14 @@ fn session_summary(m: &SessionMetrics) {
         "  remotes: {} candidates -> {} retained; {} embeddings at server",
         m.pull_candidates, m.retained_remotes, m.server_embeddings
     );
+    let ov = m.overlap_stats();
+    if ov.pipelined {
+        println!(
+            "  pipeline: push_wall {:.3}s / stalled {:.3}s, prefetch {:.3}s / stalled {:.3}s, \
+             overlap saved {:.3}s (real), queue depth <= {}",
+            ov.push_wall, ov.push_wait, ov.pull_wall, ov.pull_wait, ov.overlap_saved, ov.queue_peak
+        );
+    }
     let accs: Vec<String> = m
         .smoothed_accuracies()
         .iter()
@@ -211,12 +236,14 @@ fn run(args: &Args) -> Result<()> {
     };
     let store = harness::make_store(engine.geom(), cfg.net)?;
     println!(
-        "running {dataset} / {} on {} engine, {} clients, {} rounds, store {}, agg {} ...",
+        "running {dataset} / {} on {} engine, {} clients, {} rounds, store {}, \
+         pipeline {}, agg {} ...",
         cfg.strategy.name,
         harness::engine_kind(),
         clients,
         cfg.rounds,
         store.describe(),
+        if cfg.pipeline { "on" } else { "off" },
         aggregator.name()
     );
     let total = cfg.rounds;

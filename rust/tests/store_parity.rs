@@ -4,13 +4,15 @@
 //! same accuracy curve no matter which [`EmbeddingStore`] backend carries
 //! the embeddings — in-process slab, `TcpEmbeddingStore` against an
 //! in-test daemon, `TcpEmbeddingStore` against a *spawned* `optimes
-//! serve` process, and a 4-way `ShardedStore`.
+//! serve` process, and a 4-way `ShardedStore` — and no matter whether
+//! the asynchronous pipeline is on or off (`--pipeline`, DESIGN.md §9):
+//! overlap may change wall time, never results.
 
 use std::sync::Arc;
 
 use optimes::coordinator::{
     EmbServerDaemon, EmbeddingServer, EmbeddingStore, NetConfig, RemoteEmbClient, SessionBuilder,
-    SessionConfig, SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore,
+    SessionConfig, SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore, ThrottledStore,
 };
 use optimes::graph::datasets::tiny;
 use optimes::runtime::{ModelGeom, ModelKind, RefEngine, StepEngine};
@@ -55,6 +57,24 @@ fn run_with(
 ) -> SessionMetrics {
     let g = tiny(seed);
     let mut b = SessionBuilder::new(cfg(strategy, rounds));
+    if let Some(s) = store {
+        b = b.store(s);
+    }
+    b.build(&g, ref_engine()).unwrap().run().unwrap()
+}
+
+/// Like [`run_with`], with the async pipeline forced on or off.
+fn run_with_pipeline(
+    store: Option<Arc<dyn EmbeddingStore>>,
+    strategy: Strategy,
+    rounds: usize,
+    seed: u64,
+    pipeline: bool,
+) -> SessionMetrics {
+    let g = tiny(seed);
+    let mut c = cfg(strategy, rounds);
+    c.pipeline = pipeline;
+    let mut b = SessionBuilder::new(c);
     if let Some(s) = store {
         b = b.store(s);
     }
@@ -230,6 +250,77 @@ fn session_through_spawned_serve_process_matches_in_process() {
     let in_proc = run_with(None, Strategy::e(), 3, 119);
     let remote = run_with(Some(Arc::new(tcp)), Strategy::e(), 3, 119);
     assert_same_curve(&in_proc, &remote);
+}
+
+// ---------------------------------------------------------------------------
+// async-pipeline parity: --pipeline on|off must be bit-identical on every
+// backend for a fixed seed (overlap changes wall time, never results)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_parity_in_process() {
+    let off = run_with_pipeline(None, Strategy::opp(), 4, 211, false);
+    let on = run_with_pipeline(None, Strategy::opp(), 4, 211, true);
+    assert_same_curve(&off, &on);
+    assert!(on.pipelined && !off.pipelined);
+    let ov = on.overlap_stats();
+    assert!(ov.pipelined, "pipelined session consumed no tickets");
+    assert!(ov.push_wall > 0.0, "no measured push pipeline wall");
+    assert_eq!(off.overlap_stats(), Default::default());
+}
+
+#[test]
+fn pipeline_parity_tcp() {
+    // fresh daemon per session: both runs must start on an empty store
+    let (d_off, _s) = daemon(HIDDEN);
+    let tcp = TcpEmbeddingStore::connect(d_off.addr.to_string(), N_LAYERS, HIDDEN).unwrap();
+    let off = run_with_pipeline(Some(Arc::new(tcp)), Strategy::opp(), 4, 213, false);
+    d_off.shutdown();
+
+    let (d_on, _s) = daemon(HIDDEN);
+    let tcp = TcpEmbeddingStore::connect(d_on.addr.to_string(), N_LAYERS, HIDDEN).unwrap();
+    let on = run_with_pipeline(Some(Arc::new(tcp)), Strategy::opp(), 4, 213, true);
+    assert_same_curve(&off, &on);
+    let ov = on.overlap_stats();
+    assert!(ov.pipelined);
+    assert!(ov.push_wall > 0.0);
+    assert!(ov.queue_peak >= 1);
+    d_on.shutdown();
+}
+
+#[test]
+fn pipeline_parity_4shard() {
+    let mk = || -> Arc<dyn EmbeddingStore> {
+        Arc::new(ShardedStore::in_process(4, N_LAYERS, HIDDEN, NetConfig::default()))
+    };
+    let off = run_with_pipeline(Some(mk()), Strategy::opp(), 4, 217, false);
+    let on = run_with_pipeline(Some(mk()), Strategy::opp(), 4, 217, true);
+    assert_same_curve(&off, &on);
+    assert!(on.overlap_stats().pipelined);
+}
+
+#[test]
+fn pipeline_overlap_is_real_under_throttled_store() {
+    // sleep out the netsim cost model so store RPCs consume real wall
+    // time: the pipelined session must measurably hide push/pull work
+    // under training + aggregation while producing identical results
+    let slow = NetConfig {
+        latency: 0.02,
+        ..NetConfig::default()
+    };
+    let mk = || -> Arc<dyn EmbeddingStore> {
+        Arc::new(ThrottledStore::new(Arc::new(EmbeddingServer::new(N_LAYERS, HIDDEN, slow))))
+    };
+    let off = run_with_pipeline(Some(mk()), Strategy::o(), 3, 219, false);
+    let on = run_with_pipeline(Some(mk()), Strategy::o(), 3, 219, true);
+    assert_same_curve(&off, &on);
+    let ov = on.overlap_stats();
+    assert!(ov.pipelined);
+    assert!(ov.overlap_saved > 0.0, "pipeline hid no real work: {ov:?}");
+    // the real measurement and the virtual model agree that work was
+    // hidden (they need not agree on the amount)
+    let virtual_hidden: f64 = on.rounds.iter().map(|r| r.mean_phases.push_hidden).sum();
+    assert!(virtual_hidden > 0.0);
 }
 
 #[test]
