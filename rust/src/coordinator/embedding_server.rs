@@ -257,6 +257,7 @@ impl EmbeddingStore for EmbeddingServer {
         Ok(StoreStats {
             nodes: self.stored_nodes(),
             rows: self.stored_rows(),
+            ..Default::default()
         })
     }
 

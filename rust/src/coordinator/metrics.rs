@@ -98,6 +98,14 @@ pub struct OverlapMetrics {
     pub overlap_saved: f64,
     /// Peak async-queue depth observed on the session's store handle.
     pub queue_peak: usize,
+    /// Newest routing epoch observed at the issue of any consumed
+    /// ticket (`PushDone::epoch` / `PullDone::epoch`): after a
+    /// mid-session
+    /// [`ShardedStore::rebalance`](super::store::ShardedStore::rebalance),
+    /// this shows the pipeline landing on the new generation. 0 for
+    /// unsharded backends (and over TCP, where the epoch is reported via
+    /// `stats` instead).
+    pub store_epoch: u64,
 }
 
 impl OverlapMetrics {
@@ -109,6 +117,7 @@ impl OverlapMetrics {
         self.pull_wait += o.pull_wait;
         self.overlap_saved += o.overlap_saved;
         self.queue_peak = self.queue_peak.max(o.queue_peak);
+        self.store_epoch = self.store_epoch.max(o.store_epoch);
     }
 
     /// The canonical JSON shape of these fields, shared by every report
@@ -121,7 +130,8 @@ impl OverlapMetrics {
             .set("pull_wall", self.pull_wall)
             .set("pull_wait", self.pull_wait)
             .set("overlap_saved", self.overlap_saved)
-            .set("queue_peak", self.queue_peak);
+            .set("queue_peak", self.queue_peak)
+            .set("store_epoch", self.store_epoch);
         o
     }
 }
@@ -157,6 +167,11 @@ pub struct RoundMetrics {
     /// Global test accuracy after aggregation.
     pub accuracy: f64,
     pub val_loss: f64,
+    /// Cumulative store failover/retry events observed by round end
+    /// ([`StoreStats::failovers`](super::store::StoreStats)): replica
+    /// failovers and tolerated partial pushes absorbed by the embedding
+    /// plane without corrupting the round.
+    pub failovers: usize,
 }
 
 /// Full session trace + derived paper metrics.
@@ -170,6 +185,9 @@ pub struct SessionMetrics {
     /// Whether the session ran with the asynchronous store pipeline
     /// (`--pipeline on`, DESIGN.md §9).
     pub pipelined: bool,
+    /// Last routing epoch the store reported (0 until a
+    /// mid-session rebalance bumps it; DESIGN.md §10).
+    pub store_epoch: u64,
     pub rounds: Vec<RoundMetrics>,
     /// Embeddings resident at the server after the first full round.
     pub server_embeddings: usize,
@@ -237,6 +255,13 @@ impl SessionMetrics {
             }
         }
         None
+    }
+
+    /// Total store failover/retry events the session absorbed (the
+    /// per-round counter is cumulative, so this is the last round's
+    /// value; 0 for a fault-free run).
+    pub fn total_failovers(&self) -> usize {
+        self.rounds.last().map(|r| r.failovers).unwrap_or(0)
     }
 
     /// Aggregate *measured* pipeline overlap across every client round
@@ -308,6 +333,8 @@ impl SessionMetrics {
             .set("push_hidden", p.push_hidden);
         o.set("median_phases", ph);
         o.set("pipelined", self.pipelined);
+        o.set("store_epoch", self.store_epoch);
+        o.set("failovers", self.total_failovers());
         o.set("overlap", self.overlap_stats().to_json());
         Json::Obj(o)
     }

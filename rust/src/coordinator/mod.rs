@@ -2,7 +2,9 @@
 //! orchestration with a transport-agnostic embedding plane
 //! ([`EmbeddingStore`]: in-process slab / TCP / sharded), a real
 //! asynchronous push/pull pipeline over it ([`AsyncStoreHandle`],
-//! DESIGN.md §9), push-overlap, pruning, scored prefetching (OptimES
+//! DESIGN.md §9), a replication-aware router with online rebalancing and
+//! deterministic fault injection ([`ShardMap`] / [`FaultStore`],
+//! DESIGN.md §10), push-overlap, pruning, scored prefetching (OptimES
 //! strategies D/E/O/P/OP/OPP/OPG), and a composable session API
 //! ([`SessionBuilder`] with pluggable [`Aggregator`] and
 //! [`RoundObserver`] seams).
@@ -15,6 +17,7 @@ pub mod metrics;
 pub mod net_transport;
 pub mod netsim;
 pub mod pipeline;
+pub mod resilience;
 pub mod session;
 pub mod store;
 pub mod strategy;
@@ -34,5 +37,8 @@ pub use session::{
     run_session, NullObserver, RoundObserver, Session, SessionBuilder, SessionConfig,
     SessionPhase,
 };
-pub use store::{EmbeddingStore, ShardedStore, StoreStats};
+pub use resilience::{Fault, FaultHandle, FaultSpec, FaultStore, SnapshotStore};
+pub use store::{
+    sharded_desc, EmbeddingStore, RebalanceReport, ShardMap, ShardedStore, StoreStats,
+};
 pub use strategy::{ParseStrategyError, ScoreKind, Strategy};

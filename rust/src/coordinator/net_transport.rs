@@ -13,7 +13,7 @@
 //! response := status:u8 payload          (status 0 = ok)
 //!   PULL  -> layers:u32 hidden:u32 (row:f32*hidden)*n per layer
 //!   PUSH  -> (empty)
-//!   STATS -> stored_nodes:u64 stored_rows:u64
+//!   STATS -> stored_nodes:u64 stored_rows:u64 failovers:u64 epoch:u64
 //! ```
 //!
 //! All transfers are *batched* — one frame per pull/push phase, mirroring
@@ -175,6 +175,8 @@ fn serve_conn(
                 w.write_all(&[0u8])?;
                 codec::write_u64(&mut w, stats.nodes as u64)?;
                 codec::write_u64(&mut w, stats.rows as u64)?;
+                codec::write_u64(&mut w, stats.failovers as u64)?;
+                codec::write_u64(&mut w, stats.epoch)?;
             }
             other => bail!("unknown op {other}"),
         }
@@ -282,14 +284,19 @@ impl RemoteEmbClient {
         })
     }
 
-    pub fn stats(&mut self) -> Result<(usize, usize)> {
+    /// Full remote [`StoreStats`] (occupancy + failovers + routing
+    /// epoch) — so a daemon fronting a replicated sharded compound
+    /// reports its resilience health over the wire.
+    pub fn stats(&mut self) -> Result<StoreStats> {
         self.w.write_all(&[OP_STATS])?;
         self.w.flush()?;
         self.check_status()?;
-        Ok((
-            codec::read_u64(&mut self.r)? as usize,
-            codec::read_u64(&mut self.r)? as usize,
-        ))
+        Ok(StoreStats {
+            nodes: codec::read_u64(&mut self.r)? as usize,
+            rows: codec::read_u64(&mut self.r)? as usize,
+            failovers: codec::read_u64(&mut self.r)? as usize,
+            epoch: codec::read_u64(&mut self.r)?,
+        })
     }
 }
 
@@ -323,6 +330,10 @@ pub struct TcpEmbeddingStore {
     /// Highest simultaneous lease count observed (== pool high-water
     /// mark: one socket per in-flight request).
     peak_in_flight: AtomicUsize,
+    /// Reconnect-and-retry events (the transport's failover analogue;
+    /// surfaced in [`StoreStats::failovers`] alongside any failovers the
+    /// remote store itself reports).
+    retries: AtomicUsize,
 }
 
 /// RAII lease on the store's in-flight gauge: constructed when an RPC
@@ -349,6 +360,7 @@ impl TcpEmbeddingStore {
             pool: Mutex::new(Vec::new()),
             in_flight: AtomicUsize::new(0),
             peak_in_flight: AtomicUsize::new(0),
+            retries: AtomicUsize::new(0),
         };
         let mut conn = store.open()?;
         let mut probe = Vec::new();
@@ -371,6 +383,11 @@ impl TcpEmbeddingStore {
     /// connection pool's high-water mark.
     pub fn peak_in_flight(&self) -> usize {
         self.peak_in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Reconnect-and-retry events absorbed so far.
+    pub fn retries(&self) -> usize {
+        self.retries.load(Ordering::SeqCst)
     }
 
     /// Acquire the in-flight slot for one RPC (RAII; see
@@ -404,6 +421,7 @@ impl TcpEmbeddingStore {
                 Err(first) => {
                     // drop the (possibly stale) connection, retry fresh
                     drop(conn);
+                    self.retries.fetch_add(1, Ordering::SeqCst);
                     let mut fresh = self
                         .open()
                         .with_context(|| format!("reconnect after RPC failure ({first:#})"))?;
@@ -444,10 +462,10 @@ impl EmbeddingStore for TcpEmbeddingStore {
     }
 
     fn stats(&self) -> Result<StoreStats> {
-        self.with_conn(|c| {
-            let (nodes, rows) = c.stats()?;
-            Ok(StoreStats { nodes, rows })
-        })
+        let mut stats = self.with_conn(|c| c.stats())?;
+        // the transport's own failovers ride along with the remote ones
+        stats.failovers += self.retries.load(Ordering::SeqCst);
+        Ok(stats)
     }
 
     fn describe(&self) -> String {
@@ -489,8 +507,9 @@ mod tests {
         assert_eq!(&got[0][0..4], &l1[4..8]);
         assert_eq!(&got[0][4..8], &l1[0..4]);
         assert_eq!(&got[1][0..4], &l2[4..8]);
-        let (n, r) = c.stats().unwrap();
-        assert_eq!((n, r), (3, 6));
+        let s = c.stats().unwrap();
+        assert_eq!((s.nodes, s.rows), (3, 6));
+        assert_eq!((s.failovers, s.epoch), (0, 0));
         d.shutdown();
     }
 
@@ -584,7 +603,8 @@ mod tests {
             tcp.stats().unwrap(),
             StoreStats {
                 nodes: 100,
-                rows: 200
+                rows: 200,
+                ..Default::default()
             }
         );
         d.shutdown();
@@ -615,6 +635,10 @@ mod tests {
         let d2 = d2.expect("rebind daemon address");
         let stats = tcp.stats().expect("reconnect after daemon restart");
         assert_eq!(stats.nodes, 3);
+        // the transparent reconnect is visible as a failover, both on
+        // the store's own gauge and in the stats it reports
+        assert!(tcp.retries() >= 1, "reconnect not counted");
+        assert!(stats.failovers >= 1, "retry missing from stats");
         let (got, _) = tcp.pull(&nodes, false).unwrap();
         assert_eq!(got[0], l);
         d2.shutdown();

@@ -50,6 +50,12 @@ pub struct PushDone {
     /// Measured wall seconds from ticket issue to RPC completion
     /// (queue wait + store I/O).
     pub wall: f64,
+    /// Routing epoch observed when the worker issued the RPC
+    /// ([`EmbeddingStore::epoch`]). The rebalancing router guarantees
+    /// the RPC itself ran entirely under one generation ≥ this value —
+    /// exact unless a rebalance raced the ticket, in which case this is
+    /// the lower bound.
+    pub epoch: u64,
 }
 
 /// Result of a completed asynchronous pull.
@@ -62,6 +68,8 @@ pub struct PullDone {
     pub rec: RpcRecord,
     /// Measured wall seconds from ticket issue to RPC completion.
     pub wall: f64,
+    /// Routing epoch observed at RPC issue (see [`PushDone::epoch`]).
+    pub epoch: u64,
 }
 
 enum SlotState<T> {
@@ -252,13 +260,18 @@ impl AsyncStoreHandle {
         let lease = QueueGauge::enter(&self.gauge);
         let t0 = Instant::now();
         self.workers.execute(move || {
+            let epoch = store.epoch();
             // catch panics so a misbehaving backend yields an Err ticket
             // instead of leaving the waiter blocked forever
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 store.push(&nodes, &per_layer)
             }))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("async store push panicked")))
-            .map(|rec| PushDone { rec, wall: t0.elapsed().as_secs_f64() });
+            .map(|rec| PushDone {
+                rec,
+                wall: t0.elapsed().as_secs_f64(),
+                epoch,
+            });
             drop(lease);
             slot.fulfil(r);
         });
@@ -275,12 +288,18 @@ impl AsyncStoreHandle {
         let lease = QueueGauge::enter(&self.gauge);
         let t0 = Instant::now();
         self.workers.execute(move || {
+            let epoch = store.epoch();
             let mut rows = Vec::new();
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 store.pull_into(&nodes, on_demand, &mut rows)
             }))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("async store pull panicked")))
-            .map(|rec| PullDone { rows, rec, wall: t0.elapsed().as_secs_f64() });
+            .map(|rec| PullDone {
+                rows,
+                rec,
+                wall: t0.elapsed().as_secs_f64(),
+                epoch,
+            });
             drop(lease);
             slot.fulfil(r);
         });
@@ -355,6 +374,10 @@ impl EmbeddingStore for ThrottledStore {
 
     fn stats(&self) -> Result<StoreStats> {
         self.inner.stats()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.inner.epoch()
     }
 
     fn describe(&self) -> String {

@@ -1,0 +1,739 @@
+//! Resilience decorators for the embedding plane (DESIGN.md §10):
+//!
+//! * [`FaultStore`] wraps any [`EmbeddingStore`] and injects
+//!   *deterministic, seedable* failures into its data-plane RPCs —
+//!   error-on-the-Nth-call, error-every-Nth, latency spikes, seeded
+//!   random flakiness, and full blackout (from call N, or flipped live
+//!   through a [`FaultHandle`]). This is the substrate of the chaos
+//!   suite (`tests/fault_tolerance.rs`) and of the CLI's `--fault-spec`
+//!   flag: the same replicated deployment that must survive a dead
+//!   shard in production is killed *reproducibly* in CI.
+//! * [`SnapshotStore`] is the persistence-shaped decorator: it
+//!   write-throughs every pushed row into a shadow copy that can be
+//!   [`dump`](SnapshotStore::dump)ed to a byte stream (via the safe LE
+//!   [`codec`]) and [`restore`](SnapshotStore::restore)d into a fresh
+//!   backend — so a restarted shard comes back warm and rejoins the
+//!   replicated router via [`ShardedStore::rebalance`].
+//!
+//! Both decorators are value-transparent: [`FaultStore`] never corrupts
+//! a payload (an injected fault is a clean `Err` or a delay), and
+//! [`SnapshotStore`] round-trips rows bit-exactly (`to_le_bytes` all the
+//! way down). Fault injection applies to `push`/`pull_into` only — the
+//! `stats`/`describe`/`epoch` control plane stays reachable so tests and
+//! operators can observe a store that is refusing data traffic.
+//!
+//! [`ShardedStore::rebalance`]: super::store::ShardedStore::rebalance
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::codec;
+use super::metrics::RpcRecord;
+use super::store::{EmbeddingStore, StoreStats};
+use crate::util::rng::Rng;
+
+/// One deterministic fault rule, applied per data-plane RPC (push/pull)
+/// against the store's own 1-based call counter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Fail exactly the Nth RPC.
+    ErrOn(usize),
+    /// Fail every Nth RPC (N, 2N, ...).
+    ErrEvery(usize),
+    /// Fail every RPC from the Nth onward (a dead shard).
+    BlackoutFrom(usize),
+    /// Sleep `secs` before every Nth RPC (a latency spike).
+    DelayEvery { every: usize, secs: f64 },
+    /// Fail each RPC independently with probability `p`, derived from
+    /// `(seed, call index)` — reproducible across runs and threads.
+    Flaky { p: f64, seed: u64 },
+}
+
+fn parse_count(s: &str, what: &str) -> Result<usize> {
+    let n: usize = s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{what} expects a positive integer, got {s:?}"))?;
+    ensure!(n > 0, "{what} expects a positive integer, got 0");
+    Ok(n)
+}
+
+impl Fault {
+    /// Parse one fault term of the `--fault-spec` grammar:
+    ///
+    /// ```text
+    /// fault := 'err@' N           fail exactly RPC N
+    ///        | 'err%' N           fail every Nth RPC
+    ///        | 'blackout'         fail every RPC
+    ///        | 'blackout@' N      fail every RPC from N onward
+    ///        | 'delay%' N ':' S   sleep S seconds before every Nth RPC
+    ///        | 'flaky@' P [':' SEED]   fail with probability P (seeded)
+    /// ```
+    pub fn parse(s: &str) -> Result<Fault> {
+        let s = s.trim();
+        if let Some(n) = s.strip_prefix("err@") {
+            return Ok(Fault::ErrOn(parse_count(n, "err@N")?));
+        }
+        if let Some(n) = s.strip_prefix("err%") {
+            return Ok(Fault::ErrEvery(parse_count(n, "err%N")?));
+        }
+        if s == "blackout" {
+            return Ok(Fault::BlackoutFrom(1));
+        }
+        if let Some(n) = s.strip_prefix("blackout@") {
+            return Ok(Fault::BlackoutFrom(parse_count(n, "blackout@N")?));
+        }
+        if let Some(rest) = s.strip_prefix("delay%") {
+            let (n, secs) = rest
+                .split_once(':')
+                .with_context(|| format!("delay fault {s:?} wants delay%N:SECONDS"))?;
+            let secs: f64 = secs
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("delay seconds {secs:?} is not a number"))?;
+            ensure!(secs >= 0.0 && secs.is_finite(), "delay seconds {secs} out of range");
+            return Ok(Fault::DelayEvery {
+                every: parse_count(n, "delay%N")?,
+                secs,
+            });
+        }
+        if let Some(rest) = s.strip_prefix("flaky@") {
+            let (p, seed) = match rest.split_once(':') {
+                Some((p, seed)) => (
+                    p,
+                    seed.trim()
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("flaky seed {seed:?} is not an integer"))?,
+                ),
+                None => (rest, 0),
+            };
+            let p: f64 = p
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("flaky probability {p:?} is not a number"))?;
+            ensure!((0.0..=1.0).contains(&p), "flaky probability {p} not in [0, 1]");
+            return Ok(Fault::Flaky { p, seed });
+        }
+        bail!(
+            "unknown fault {s:?} \
+             (grammar: err@N | err%N | blackout[@N] | delay%N:SECS | flaky@P[:SEED])"
+        )
+    }
+}
+
+/// A parsed `--fault-spec`: which shard gets which [`Fault`]s.
+///
+/// Grammar (clauses separated by `;`):
+///
+/// ```text
+/// spec   := clause (';' clause)*
+/// clause := target '=' fault
+/// target := 'shard' INDEX | '*'          (* = every shard)
+/// ```
+///
+/// Example: `shard1=blackout@40;*=delay%10:0.005` kills shard 1 from its
+/// 40th RPC onward and adds a 5 ms spike to every 10th RPC of every
+/// shard.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    clauses: Vec<(Option<usize>, Fault)>,
+}
+
+impl FaultSpec {
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut clauses = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (target, fault) = clause.split_once('=').with_context(|| {
+                format!("fault clause {clause:?} missing '=' (grammar: shardK=FAULT or *=FAULT)")
+            })?;
+            let target = target.trim();
+            let shard = if target == "*" {
+                None
+            } else {
+                let k = target.strip_prefix("shard").with_context(|| {
+                    format!("fault target {target:?} (expected shardK or *)")
+                })?;
+                Some(k.trim().parse::<usize>().ok().with_context(|| {
+                    format!("fault target {target:?}: bad shard index")
+                })?)
+            };
+            clauses.push((shard, Fault::parse(fault)?));
+        }
+        Ok(FaultSpec { clauses })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Faults that apply to shard `shard` (its own clauses plus `*`).
+    pub fn faults_for(&self, shard: usize) -> Vec<Fault> {
+        self.clauses
+            .iter()
+            .filter(|(t, _)| t.is_none() || *t == Some(shard))
+            .map(|(_, f)| f.clone())
+            .collect()
+    }
+
+    /// Highest shard index any clause names (None if only `*` clauses).
+    pub fn max_shard(&self) -> Option<usize> {
+        self.clauses.iter().filter_map(|(t, _)| *t).max()
+    }
+
+    /// Fail fast when a clause names a shard outside `0..shards`: a
+    /// typo'd target would otherwise make a chaos run silently
+    /// fault-free.
+    pub fn validate_shards(&self, shards: usize) -> Result<()> {
+        if let Some(max) = self.max_shard() {
+            ensure!(
+                max < shards,
+                "fault spec targets shard{max}, but only {shards} shard(s) exist \
+                 (indices 0..={})",
+                shards.saturating_sub(1)
+            );
+        }
+        Ok(())
+    }
+
+    /// Wrap `store` in a [`FaultStore`] labeled `shard{shard}` when any
+    /// clause applies to that shard; hand it back untouched otherwise.
+    /// The shared deployment helper behind `run --fault-spec` and
+    /// `serve --fault-spec`.
+    pub fn wrap_shard(
+        &self,
+        shard: usize,
+        store: Arc<dyn EmbeddingStore>,
+    ) -> Arc<dyn EmbeddingStore> {
+        let faults = self.faults_for(shard);
+        if faults.is_empty() {
+            store
+        } else {
+            Arc::new(FaultStore::new(store, format!("shard{shard}"), faults))
+        }
+    }
+}
+
+struct FaultState {
+    faults: Mutex<Vec<Fault>>,
+    blackout: AtomicBool,
+    calls: AtomicUsize,
+    injected: AtomicUsize,
+}
+
+/// Shared live control of a [`FaultStore`]: tests and harnesses keep the
+/// handle and flip faults mid-run ("kill shard k at round r") while the
+/// store is owned by the session as an `Arc<dyn EmbeddingStore>`.
+#[derive(Clone)]
+pub struct FaultHandle(Arc<FaultState>);
+
+impl FaultHandle {
+    /// Kill (`true`) or revive (`false`) the store: while blacked out,
+    /// every data-plane RPC fails.
+    pub fn set_blackout(&self, on: bool) {
+        self.0.blackout.store(on, Ordering::SeqCst);
+    }
+
+    pub fn is_blacked_out(&self) -> bool {
+        self.0.blackout.load(Ordering::SeqCst)
+    }
+
+    /// Data-plane RPCs observed so far (faulted or not).
+    pub fn calls(&self) -> usize {
+        self.0.calls.load(Ordering::SeqCst)
+    }
+
+    /// Faults injected so far (errors only; delays don't count).
+    pub fn injected(&self) -> usize {
+        self.0.injected.load(Ordering::SeqCst)
+    }
+
+    /// Append a fault rule live.
+    pub fn add_fault(&self, fault: Fault) {
+        self.0.faults.lock().unwrap().push(fault);
+    }
+
+    /// Drop every static fault rule (the blackout switch is separate).
+    pub fn clear_faults(&self) {
+        self.0.faults.lock().unwrap().clear();
+    }
+}
+
+/// Deterministic fault-injection decorator over any [`EmbeddingStore`]
+/// (see the module docs). Construct with the faults parsed from a
+/// `--fault-spec` clause, keep the [`FaultHandle`] to script failures
+/// live, and hand the store itself to a session or a
+/// [`ShardedStore`](super::store::ShardedStore) backend slot.
+pub struct FaultStore {
+    inner: Arc<dyn EmbeddingStore>,
+    label: String,
+    state: Arc<FaultState>,
+}
+
+impl FaultStore {
+    pub fn new(
+        inner: Arc<dyn EmbeddingStore>,
+        label: impl Into<String>,
+        faults: Vec<Fault>,
+    ) -> Self {
+        Self {
+            inner,
+            label: label.into(),
+            state: Arc::new(FaultState {
+                faults: Mutex::new(faults),
+                blackout: AtomicBool::new(false),
+                calls: AtomicUsize::new(0),
+                injected: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Live control handle (cheap clone of a shared state).
+    pub fn handle(&self) -> FaultHandle {
+        FaultHandle(Arc::clone(&self.state))
+    }
+
+    /// Count one data-plane RPC and apply the fault plan to it.
+    fn intercept(&self) -> Result<()> {
+        let idx = self.state.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.state.blackout.load(Ordering::SeqCst) {
+            self.state.injected.fetch_add(1, Ordering::SeqCst);
+            bail!("injected fault: {} is blacked out (rpc #{idx})", self.label);
+        }
+        let mut delay = 0.0f64;
+        let mut fail = false;
+        for f in self.state.faults.lock().unwrap().iter() {
+            match *f {
+                Fault::ErrOn(n) => fail |= idx == n,
+                Fault::ErrEvery(n) => fail |= idx % n == 0,
+                Fault::BlackoutFrom(n) => fail |= idx >= n,
+                Fault::DelayEvery { every, secs } => {
+                    if idx % every == 0 {
+                        delay += secs;
+                    }
+                }
+                Fault::Flaky { p, seed } => {
+                    let mut rng = Rng::new(seed, idx as u64);
+                    fail |= rng.chance(p);
+                }
+            }
+        }
+        if delay > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+        }
+        if fail {
+            self.state.injected.fetch_add(1, Ordering::SeqCst);
+            bail!("injected fault: {} rpc #{idx}", self.label);
+        }
+        Ok(())
+    }
+}
+
+impl EmbeddingStore for FaultStore {
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn hidden(&self) -> usize {
+        self.inner.hidden()
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        self.intercept()?;
+        self.inner.push(nodes, per_layer)
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        self.intercept()?;
+        self.inner.pull_into(nodes, on_demand, out)
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        self.inner.stats()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.inner.epoch()
+    }
+
+    fn describe(&self) -> String {
+        format!("fault({} over {})", self.label, self.inner.describe())
+    }
+}
+
+/// Snapshot file magic ("SNAP", little-endian).
+const SNAP_MAGIC: u32 = 0x5350_414E;
+
+/// Write-through persistence decorator: every pushed row is mirrored
+/// into an in-memory shadow slab that [`dump`](SnapshotStore::dump)
+/// serializes (sorted by id, bit-exact LE floats) and
+/// [`restore`](SnapshotStore::restore) replays into a fresh backend as
+/// one batched push. A restarted shard is rebuilt by `restore` and then
+/// re-admitted to the replicated router via
+/// [`ShardedStore::rebalance`](super::store::ShardedStore::rebalance),
+/// which copies whatever it missed while down from the live replicas
+/// (DESIGN.md §10).
+///
+/// The shadow costs one extra in-memory copy of the shard's rows —
+/// acceptable at reproduction scale; a production deployment would swap
+/// the shadow for an mmap'd slab behind the same dump/restore surface.
+pub struct SnapshotStore {
+    inner: Arc<dyn EmbeddingStore>,
+    /// node id -> per-layer rows (each `hidden` wide).
+    shadow: Mutex<HashMap<u32, Vec<Vec<f32>>>>,
+}
+
+impl SnapshotStore {
+    pub fn new(inner: Arc<dyn EmbeddingStore>) -> Self {
+        Self {
+            inner,
+            shadow: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Nodes currently mirrored in the shadow slab.
+    pub fn shadow_nodes(&self) -> usize {
+        self.shadow.lock().unwrap().len()
+    }
+
+    /// Serialize the shadow slab (geometry header + rows sorted by id).
+    /// Returns the number of nodes written.
+    pub fn dump(&self, w: &mut impl Write) -> Result<usize> {
+        let shadow = self.shadow.lock().unwrap();
+        codec::write_u32(w, SNAP_MAGIC)?;
+        codec::write_u32(w, self.inner.n_layers() as u32)?;
+        codec::write_u32(w, self.inner.hidden() as u32)?;
+        codec::write_u64(w, shadow.len() as u64)?;
+        let mut ids: Vec<u32> = shadow.keys().copied().collect();
+        ids.sort_unstable();
+        for id in &ids {
+            codec::write_u32(w, *id)?;
+            for layer in &shadow[id] {
+                codec::write_f32s(w, layer)?;
+            }
+        }
+        Ok(ids.len())
+    }
+
+    /// [`dump`](SnapshotStore::dump) into a file.
+    pub fn dump_to(&self, path: impl AsRef<std::path::Path>) -> Result<usize> {
+        let path = path.as_ref();
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("create snapshot {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(file);
+        let n = self.dump(&mut w)?;
+        w.flush().context("flush snapshot")?;
+        Ok(n)
+    }
+
+    /// Rebuild a store from a snapshot: validates the geometry header
+    /// against `inner`, replays every row into it as one batched push,
+    /// and returns the decorator with its shadow warm.
+    pub fn restore(r: &mut impl Read, inner: Arc<dyn EmbeddingStore>) -> Result<Self> {
+        let magic = codec::read_u32(r)?;
+        ensure!(magic == SNAP_MAGIC, "not a snapshot stream (magic {magic:#010x})");
+        let n_layers = codec::read_u32(r)? as usize;
+        let hidden = codec::read_u32(r)? as usize;
+        ensure!(
+            n_layers == inner.n_layers() && hidden == inner.hidden(),
+            "snapshot geometry {n_layers}x{hidden} != store geometry {}x{}",
+            inner.n_layers(),
+            inner.hidden()
+        );
+        let count = codec::read_u64(r)? as usize;
+        ensure!(count <= codec::MAX_WIRE_ELEMS, "absurd snapshot node count {count}");
+        let mut nodes: Vec<u32> = Vec::with_capacity(count);
+        let mut per_layer: Vec<Vec<f32>> =
+            (0..n_layers).map(|_| Vec::with_capacity(count * hidden)).collect();
+        let mut shadow = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let id = codec::read_u32(r)?;
+            let mut row_layers = Vec::with_capacity(n_layers);
+            for dst in per_layer.iter_mut() {
+                let row = codec::read_f32s(r, hidden)?;
+                dst.extend_from_slice(&row);
+                row_layers.push(row);
+            }
+            nodes.push(id);
+            shadow.insert(id, row_layers);
+        }
+        if !nodes.is_empty() {
+            inner.push(&nodes, &per_layer).context("snapshot restore push")?;
+        }
+        Ok(Self {
+            inner,
+            shadow: Mutex::new(shadow),
+        })
+    }
+
+    /// [`restore`](SnapshotStore::restore) from a file.
+    pub fn restore_from(
+        path: impl AsRef<std::path::Path>,
+        inner: Arc<dyn EmbeddingStore>,
+    ) -> Result<Self> {
+        let path = path.as_ref();
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open snapshot {}", path.display()))?;
+        Self::restore(&mut std::io::BufReader::new(file), inner)
+    }
+}
+
+impl EmbeddingStore for SnapshotStore {
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn hidden(&self) -> usize {
+        self.inner.hidden()
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        // forward first: a rejected push must not poison the shadow
+        let rec = self.inner.push(nodes, per_layer)?;
+        let h = self.inner.hidden();
+        let mut shadow = self.shadow.lock().unwrap();
+        for (i, &node) in nodes.iter().enumerate() {
+            let entry = shadow
+                .entry(node)
+                .or_insert_with(|| vec![Vec::new(); per_layer.len()]);
+            for (dst, rows) in entry.iter_mut().zip(per_layer) {
+                dst.clear();
+                dst.extend_from_slice(&rows[i * h..(i + 1) * h]);
+            }
+        }
+        Ok(rec)
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        self.inner.pull_into(nodes, on_demand, out)
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        self.inner.stats()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.inner.epoch()
+    }
+
+    fn describe(&self) -> String {
+        format!("snapshot({})", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::embedding_server::EmbeddingServer;
+    use crate::coordinator::netsim::NetConfig;
+
+    fn server(h: usize) -> Arc<dyn EmbeddingStore> {
+        Arc::new(EmbeddingServer::new(2, h, NetConfig::default()))
+    }
+
+    fn rows(nodes: &[u32], h: usize, salt: f32) -> Vec<f32> {
+        nodes
+            .iter()
+            .flat_map(|&n| (0..h).map(move |j| n as f32 * 3.0 + j as f32 + salt))
+            .collect()
+    }
+
+    // ---- fault spec grammar -----------------------------------------------
+
+    #[test]
+    fn fault_spec_parses_the_documented_grammar() {
+        let spec = FaultSpec::parse("shard1=blackout@40; *=delay%10:0.005 ;shard0=err@3").unwrap();
+        assert!(!spec.is_empty());
+        assert_eq!(spec.max_shard(), Some(1));
+        assert_eq!(
+            spec.faults_for(1),
+            vec![
+                Fault::BlackoutFrom(40),
+                Fault::DelayEvery { every: 10, secs: 0.005 }
+            ]
+        );
+        assert_eq!(
+            spec.faults_for(0),
+            vec![
+                Fault::DelayEvery { every: 10, secs: 0.005 },
+                Fault::ErrOn(3)
+            ]
+        );
+        assert_eq!(spec.faults_for(7), vec![Fault::DelayEvery { every: 10, secs: 0.005 }]);
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+        assert_eq!(
+            FaultSpec::parse("shard2=flaky@0.25:99").unwrap().faults_for(2),
+            vec![Fault::Flaky { p: 0.25, seed: 99 }]
+        );
+        assert_eq!(
+            FaultSpec::parse("*=err%7").unwrap().faults_for(0),
+            vec![Fault::ErrEvery(7)]
+        );
+        assert_eq!(
+            FaultSpec::parse("*=blackout").unwrap().faults_for(3),
+            vec![Fault::BlackoutFrom(1)]
+        );
+    }
+
+    #[test]
+    fn fault_spec_rejects_malformed_input() {
+        for bad in [
+            "shard1",              // no '='
+            "volume1=err@3",       // bad target
+            "shardX=err@3",        // bad index
+            "shard1=err@0",        // zero count
+            "shard1=err@",         // empty count
+            "shard1=explode",      // unknown fault
+            "shard1=delay%5",      // missing seconds
+            "shard1=delay%5:fast", // bad seconds
+            "shard1=flaky@1.5",    // probability out of range
+            "shard1=flaky@0.5:pi", // bad seed
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    // ---- fault store behavior ---------------------------------------------
+
+    #[test]
+    fn err_on_nth_rpc_fires_exactly_once() {
+        let store = FaultStore::new(server(4), "shard0", vec![Fault::ErrOn(2)]);
+        let handle = store.handle();
+        let nodes = [1u32];
+        let l = rows(&nodes, 4, 0.0);
+        assert!(store.push(&nodes, &[l.clone(), l.clone()]).is_ok()); // rpc 1
+        let err = store.push(&nodes, &[l.clone(), l.clone()]).unwrap_err(); // rpc 2
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        assert!(store.push(&nodes, &[l.clone(), l.clone()]).is_ok()); // rpc 3
+        assert_eq!(handle.calls(), 3);
+        assert_eq!(handle.injected(), 1);
+        // values were never corrupted
+        let (got, _) = store.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], l);
+    }
+
+    #[test]
+    fn blackout_handle_kills_and_revives() {
+        let store = FaultStore::new(server(4), "shard3", Vec::new());
+        let handle = store.handle();
+        let nodes = [9u32];
+        let l = rows(&nodes, 4, 1.0);
+        store.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        handle.set_blackout(true);
+        assert!(handle.is_blacked_out());
+        assert!(store.pull(&nodes, false).is_err());
+        assert!(store.push(&nodes, &[l.clone(), l.clone()]).is_err());
+        // control plane stays reachable while data plane is dead
+        assert_eq!(store.stats().unwrap().nodes, 1);
+        assert!(store.describe().starts_with("fault(shard3 over "));
+        handle.set_blackout(false);
+        let (got, _) = store.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], l);
+        assert_eq!(handle.injected(), 2);
+    }
+
+    #[test]
+    fn flaky_faults_are_reproducible() {
+        let run = |seed: u64| -> Vec<bool> {
+            let store = FaultStore::new(server(4), "s", vec![Fault::Flaky { p: 0.5, seed }]);
+            (0..32).map(|_| store.pull(&[1], false).is_ok()).collect()
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed must fail the same calls");
+        assert!(a.iter().any(|&ok| ok) && a.iter().any(|&ok| !ok), "p=0.5 over 32 calls");
+        assert_ne!(a, run(8), "different seeds should differ");
+    }
+
+    #[test]
+    fn delay_fault_slows_without_failing() {
+        let store = FaultStore::new(
+            server(4),
+            "s",
+            vec![Fault::DelayEvery { every: 2, secs: 0.02 }],
+        );
+        let t0 = std::time::Instant::now();
+        store.pull(&[1], false).unwrap(); // rpc 1: no delay
+        let fast = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        store.pull(&[1], false).unwrap(); // rpc 2: delayed
+        let slow = t1.elapsed();
+        assert!(slow.as_secs_f64() >= 0.02, "delay not applied: {slow:?}");
+        assert!(fast < slow);
+        assert_eq!(store.handle().injected(), 0);
+    }
+
+    // ---- snapshot store ---------------------------------------------------
+
+    #[test]
+    fn snapshot_dump_restore_roundtrips_bit_exactly() {
+        let h = 4;
+        let snap = SnapshotStore::new(server(h));
+        let nodes: Vec<u32> = vec![5, 1, 300, 77];
+        let l1 = rows(&nodes, h, 0.0);
+        let l2 = rows(&nodes, h, 0.25);
+        snap.push(&nodes, &[l1.clone(), l2.clone()]).unwrap();
+        // overwrite one node so the shadow tracks the latest row
+        snap.push(&[77], &[vec![9.5; h], vec![-0.0; h]]).unwrap();
+        assert_eq!(snap.shadow_nodes(), 4);
+
+        let mut bytes = Vec::new();
+        let n = snap.dump(&mut bytes).unwrap();
+        assert_eq!(n, 4);
+
+        let restored = SnapshotStore::restore(&mut &bytes[..], server(h)).unwrap();
+        assert_eq!(restored.shadow_nodes(), 4);
+        let (a, _) = snap.pull(&[1, 5, 77, 300, 42], false).unwrap();
+        let (b, _) = restored.pull(&[1, 5, 77, 300, 42], false).unwrap();
+        let bits = |v: &Vec<f32>| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a[0]), bits(&b[0]));
+        assert_eq!(bits(&a[1]), bits(&b[1]));
+        assert_eq!(restored.stats().unwrap().nodes, 4);
+    }
+
+    #[test]
+    fn snapshot_restore_rejects_garbage_and_geometry_mismatch() {
+        let snap = SnapshotStore::new(server(4));
+        snap.push(&[1], &[vec![1.0; 4], vec![2.0; 4]]).unwrap();
+        let mut bytes = Vec::new();
+        snap.dump(&mut bytes).unwrap();
+        // wrong geometry target
+        let err = SnapshotStore::restore(&mut &bytes[..], server(8)).unwrap_err();
+        assert!(format!("{err:#}").contains("geometry"), "{err:#}");
+        // not a snapshot at all
+        let junk = vec![0u8; 32];
+        assert!(SnapshotStore::restore(&mut &junk[..], server(4)).is_err());
+        // truncated stream
+        let cut = &bytes[..bytes.len() - 3];
+        assert!(SnapshotStore::restore(&mut &cut[..], server(4)).is_err());
+    }
+
+    #[test]
+    fn snapshot_file_roundtrip() {
+        let h = 4;
+        let snap = SnapshotStore::new(server(h));
+        let nodes: Vec<u32> = (0..50).collect();
+        let l = rows(&nodes, h, 2.0);
+        snap.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        let dir = std::env::temp_dir().join(format!("optimes_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard.snap");
+        assert_eq!(snap.dump_to(&path).unwrap(), 50);
+        let restored = SnapshotStore::restore_from(&path, server(h)).unwrap();
+        let (got, _) = restored.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], l);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

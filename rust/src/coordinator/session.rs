@@ -532,9 +532,16 @@ impl Session<'_> {
                 .net
                 .params_time(self.global.iter().map(|p| p.len()).sum());
 
+        // store health: occupancy at round 0 (the paper's "embeddings
+        // maintained" marker), cumulative failovers + routing epoch every
+        // round — a replicated plane riding out a dead shard shows up
+        // here instead of corrupting the curve (DESIGN.md §10)
+        let st = self.store.stats().context("store stats")?;
         if round == 0 {
-            self.metrics.server_embeddings = self.store.stats()?.nodes;
+            self.metrics.server_embeddings = st.nodes;
         }
+        rm.failovers = st.failovers;
+        self.metrics.store_epoch = st.epoch;
         self.observer.on_round(&rm);
         self.metrics.rounds.push(rm);
         Ok(self.metrics.rounds.last().expect("round just pushed"))

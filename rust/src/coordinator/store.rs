@@ -1,14 +1,19 @@
 //! The transport-agnostic embedding plane: [`EmbeddingStore`] is the
 //! narrow trait every consumer of remote embeddings (trainer, session,
-//! harness, CLI) programs against, with three implementations —
+//! harness, CLI) programs against, with these implementations —
 //!
 //! * the in-process slab [`EmbeddingServer`] (default; zero transport),
 //! * [`TcpEmbeddingStore`] speaking the wire protocol of
 //!   `net_transport.rs` against a standalone `optimes serve` process
 //!   (the paper's deployment shape: a separate Redis-style store reached
 //!   over the network by all clients, §5.1),
-//! * [`ShardedStore`] hash-partitioning vertex ids across N backends of
-//!   either kind (scale-out of the embedding plane itself).
+//! * [`ShardedStore`] routing vertex ids across N backends of either
+//!   kind through an explicit, replication-aware [`ShardMap`]
+//!   (scale-out *and* fault tolerance of the embedding plane itself),
+//! * the [`resilience`](super::resilience) decorators
+//!   ([`FaultStore`](super::resilience::FaultStore) injecting
+//!   deterministic failures, [`SnapshotStore`](super::resilience::SnapshotStore)
+//!   adding dump/restore persistence) wrapping any of the above.
 //!
 //! Every call is batched (one logical RPC per pull/push phase) and
 //! `Send + Sync`, so parallel clients share one `Arc<dyn EmbeddingStore>`
@@ -17,7 +22,9 @@
 //! [`EmbeddingServer`]: super::embedding_server::EmbeddingServer
 //! [`TcpEmbeddingStore`]: super::net_transport::TcpEmbeddingStore
 
-use std::sync::Arc;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{ensure, Result};
 
@@ -26,13 +33,21 @@ use super::metrics::{RpcKind, RpcRecord};
 use super::netsim::NetConfig;
 use crate::util::pool;
 
-/// Aggregate store occupancy, as reported by `stats` RPCs.
+/// Aggregate store health, as reported by `stats` RPCs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StoreStats {
     /// Unique vertices stored (any layer).
     pub nodes: usize,
     /// Total embedding rows across layers.
     pub rows: usize,
+    /// Cumulative failover/retry events the store absorbed: replica
+    /// failovers and tolerated partial pushes in [`ShardedStore`],
+    /// reconnect-retries in `TcpEmbeddingStore`. Zero for stores with
+    /// nothing to fail over to.
+    pub failovers: usize,
+    /// Routing epoch of the store's shard map (bumped by every
+    /// [`ShardedStore::rebalance`]; 0 for unsharded backends).
+    pub epoch: u64,
 }
 
 /// A store of per-vertex hidden embeddings `h^1..h^{L-1}`, keyed by
@@ -76,6 +91,9 @@ pub struct StoreStats {
 /// protocol failures after one transparent reconnect-and-retry (all ops
 /// are idempotent upserts/reads, so the retry is safe); a deterministic
 /// server-side rejection surfaces with both attempts in the error chain.
+/// A replicated [`ShardedStore`] additionally absorbs up to R per-replica
+/// failures per row before surfacing an error (see its docs); absorbed
+/// failures are counted in [`StoreStats::failovers`].
 ///
 /// Sessions additionally assume the store holds *no rows for their
 /// graph* when they start (the in-process default is constructed fresh
@@ -106,38 +124,367 @@ pub trait EmbeddingStore: Send + Sync {
         Ok((out, rec))
     }
 
-    /// Occupancy counters (the paper's "embeddings maintained" marker).
+    /// Occupancy counters (the paper's "embeddings maintained" marker)
+    /// plus resilience health ([`StoreStats::failovers`] /
+    /// [`StoreStats::epoch`]).
     fn stats(&self) -> Result<StoreStats>;
+
+    /// Current routing epoch: which generation of the shard map calls
+    /// against this store land on. Bumped by every
+    /// [`ShardedStore::rebalance`]; 0 for backends without a router.
+    /// Decorators forward to their inner store; the TCP client reports 0
+    /// locally (the remote epoch travels in [`stats`](EmbeddingStore::stats)
+    /// instead — `epoch()` must stay cheap enough for the pipeline to
+    /// stamp every ticket).
+    fn epoch(&self) -> u64 {
+        0
+    }
 
     /// Human-readable backend descriptor for `optimes info` / reports,
     /// e.g. `in-process`, `tcp(127.0.0.1:7070)`, `sharded(4 shards ...)`.
     fn describe(&self) -> String;
 }
 
-/// Hash-partitions vertex ids across N child stores. Pushes and pulls
-/// fan out as one batched sub-RPC per shard that owns at least one of
-/// the requested ids; when more than one shard participates, the
-/// sub-RPCs *execute concurrently* (scoped threads, one per shard), and
-/// the record accounts them accordingly (`time = max over shards`,
-/// `bytes = sum`). Results are position-scattered into the caller's
-/// buffers, so the merged output is independent of shard completion
-/// order — sharding never changes values.
+/// Default bucket count of [`ShardMap::uniform`]: routing granularity of
+/// the rebalancer (rows move bucket-at-a-time). A multiple of the common
+/// shard counts so the uniform map's primary assignment matches the old
+/// bare `hash % n_shards` distribution.
+pub const SHARD_MAP_BUCKETS: usize = 64;
+
+/// Avalanche hash of a vertex id (splitmix-style finalizer), so dense id
+/// ranges spread evenly over buckets regardless of bucket count.
+fn splitmix_hash(node: u32) -> u64 {
+    let mut x = node as u64 ^ 0x9E37_79B9_7F4A_7C15;
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x
+}
+
+/// Explicit, versioned routing table of the embedding plane: vertex id →
+/// hash bucket → owner backends (primary first, then R replicas).
 ///
-/// Shard hashing: the owning shard of a vertex is
-/// `splitmix64(id) % n_shards` (an avalanche hash, so dense id ranges
-/// spread evenly regardless of shard count). The mapping is stable for a
-/// fixed shard count; resizing the shard set re-homes ids and requires a
-/// fresh store.
+/// * Buckets are the unit of ownership and of migration: a
+///   [`ShardedStore::rebalance`] moves rows bucket-at-a-time between
+///   backends, touching exactly the buckets whose owner *set* changed.
+/// * Every bucket has the same owner count (`replicas + 1`), owners are
+///   distinct, and the first owner is the read-preference primary —
+///   reads fail over left-to-right through the rest.
+/// * `epoch` versions the map: the router bumps it on every installed
+///   rebalance, and pipeline tickets record the epoch their RPC executed
+///   under ([`PushDone::epoch`](super::pipeline::PushDone)).
+///
+/// The map itself is plain data — cheap to clone, compare, and diff
+/// ([`changed_buckets`](ShardMap::changed_buckets)); the router holds the
+/// installed copy behind a lock.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    epoch: u64,
+    n_backends: usize,
+    replicas: usize,
+    /// `owners[bucket]` = distinct backend ids, primary first.
+    owners: Vec<Vec<u32>>,
+}
+
+impl ShardMap {
+    /// The uniform map: [`SHARD_MAP_BUCKETS`] buckets (at least one per
+    /// backend), bucket `b` owned by backends `b, b+1, .., b+R` (mod N).
+    /// With `replicas = 0` the primary assignment reduces to the classic
+    /// `hash % n_backends` partition for the common power-of-two shard
+    /// counts.
+    pub fn uniform(n_backends: usize, replicas: usize) -> Result<Self> {
+        ensure!(n_backends > 0, "shard map needs at least one backend");
+        ensure!(
+            replicas < n_backends,
+            "{replicas} replica(s) need at least {} backends, have {n_backends}",
+            replicas + 1
+        );
+        let buckets = SHARD_MAP_BUCKETS.max(n_backends);
+        let owners = (0..buckets)
+            .map(|b| (0..=replicas).map(|k| ((b + k) % n_backends) as u32).collect())
+            .collect();
+        Ok(Self {
+            epoch: 0,
+            n_backends,
+            replicas,
+            owners,
+        })
+    }
+
+    /// Build from an explicit per-bucket owner assignment (primary
+    /// first). Every bucket must list the same number of distinct,
+    /// in-range owners — the uniform replication factor is inferred.
+    pub fn from_owners(owners: Vec<Vec<u32>>, n_backends: usize) -> Result<Self> {
+        ensure!(n_backends > 0, "shard map needs at least one backend");
+        ensure!(!owners.is_empty(), "shard map needs at least one bucket");
+        let width = owners[0].len();
+        ensure!(width > 0, "bucket 0 has no owners");
+        for (b, os) in owners.iter().enumerate() {
+            ensure!(
+                os.len() == width,
+                "bucket {b} has {} owner(s), bucket 0 has {width} \
+                 (the replication factor must be uniform)",
+                os.len()
+            );
+            for (k, &o) in os.iter().enumerate() {
+                ensure!(
+                    (o as usize) < n_backends,
+                    "bucket {b} owner {o} out of range ({n_backends} backends)"
+                );
+                ensure!(!os[..k].contains(&o), "bucket {b} lists backend {o} twice");
+            }
+        }
+        Ok(Self {
+            epoch: 0,
+            n_backends,
+            replicas: width - 1,
+            owners,
+        })
+    }
+
+    /// Derive the map that removes `backend` from every owner set,
+    /// substituting (deterministically) the first backend in ring order
+    /// after the excluded one that is not already an owner. This is the
+    /// "route around a dead shard" half of the rejoin protocol
+    /// (DESIGN.md §10): rebalance to `excluding(k)`, and later rebalance
+    /// back to re-admit the restarted shard.
+    pub fn excluding(&self, backend: usize) -> Result<Self> {
+        ensure!(
+            backend < self.n_backends,
+            "backend {backend} out of range ({} backends)",
+            self.n_backends
+        );
+        ensure!(
+            self.replicas + 2 <= self.n_backends,
+            "cannot exclude backend {backend}: every owner set already \
+             uses {} of {} backends",
+            self.replicas + 1,
+            self.n_backends
+        );
+        let owners = self
+            .owners
+            .iter()
+            .map(|os| {
+                if !os.contains(&(backend as u32)) {
+                    return os.clone();
+                }
+                let mut out: Vec<u32> =
+                    os.iter().copied().filter(|&o| o != backend as u32).collect();
+                let mut cand = (backend + 1) % self.n_backends;
+                while cand == backend || out.contains(&(cand as u32)) {
+                    cand = (cand + 1) % self.n_backends;
+                }
+                out.push(cand as u32);
+                out
+            })
+            .collect();
+        Self::from_owners(owners, self.n_backends)
+    }
+
+    /// Version of this map as installed in a router (0 for maps built by
+    /// hand; assigned by [`ShardedStore::rebalance`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn n_backends(&self) -> usize {
+        self.n_backends
+    }
+
+    /// Extra copies per row beyond the primary.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// Hash bucket of a vertex id (stable for a fixed bucket count).
+    pub fn bucket_of(&self, node: u32) -> usize {
+        (splitmix_hash(node) % self.owners.len() as u64) as usize
+    }
+
+    /// Owner backends of a vertex, primary first.
+    pub fn owners_of(&self, node: u32) -> &[u32] {
+        &self.owners[self.bucket_of(node)]
+    }
+
+    /// Owner backends of a bucket, primary first.
+    pub fn owners_of_bucket(&self, bucket: usize) -> &[u32] {
+        &self.owners[bucket]
+    }
+
+    /// Read-preference primary of a vertex.
+    pub fn primary_of(&self, node: u32) -> usize {
+        self.owners_of(node)[0] as usize
+    }
+
+    /// Replica backends of a vertex (owners minus the primary).
+    pub fn replicas_of(&self, node: u32) -> &[u32] {
+        &self.owners_of(node)[1..]
+    }
+
+    /// Buckets whose owner *set* differs between the two maps — exactly
+    /// the buckets a rebalance between them must migrate. (A pure
+    /// primary-order change is not a data move, only a read-preference
+    /// change.) Panics if the maps have different bucket counts — they
+    /// are not comparable (a caller bug, like a geometry violation).
+    pub fn changed_buckets(&self, other: &ShardMap) -> Vec<usize> {
+        assert_eq!(
+            self.n_buckets(),
+            other.n_buckets(),
+            "maps with different bucket counts are not comparable"
+        );
+        self.owners
+            .iter()
+            .zip(&other.owners)
+            .enumerate()
+            .filter(|(_, (a, b))| !same_owner_set(a, b))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Owner-set equality (order-insensitive; owner lists are short).
+fn same_owner_set(a: &[u32], b: &[u32]) -> bool {
+    a.len() == b.len() && a.iter().all(|o| b.contains(o))
+}
+
+/// The canonical `describe()` string of a sharded deployment. Shared
+/// with the harness's `store_desc` so `optimes info` and the backend
+/// recorded in session reports can never drift apart.
+pub fn sharded_desc(shards: usize, inner: &str, replicas: usize) -> String {
+    if replicas == 0 {
+        format!("sharded({shards} shards over {inner})")
+    } else {
+        format!(
+            "sharded({shards} shards over {inner}, {replicas} replica{})",
+            if replicas == 1 { "" } else { "s" }
+        )
+    }
+}
+
+/// What one [`ShardedStore::rebalance`] did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RebalanceReport {
+    /// Epoch of the installed map (previous epoch + 1).
+    pub epoch: u64,
+    /// Buckets whose owner set changed.
+    pub buckets_changed: usize,
+    /// Node-rows copied to newly-added owners (`Σ bucket_rows × added
+    /// owners`); rows already resident on retained owners don't move.
+    pub rows_copied: usize,
+    /// Retained owners that had been quarantined by a missed push and
+    /// were re-copied in place (counted per owner per bucket) — so
+    /// rebalancing onto the *unchanged* map is a repair operation.
+    pub owners_repaired: usize,
+}
+
+/// Per-bucket router state: the logical occupancy (which ids were ever
+/// successfully pushed) plus the quarantine set of owners that missed a
+/// push. Occupancy is the source of truth for `stats` (replicas must
+/// not double-count) and the migration set of `rebalance`; quarantined
+/// owners never serve reads until a rebalance repairs them.
+#[derive(Default)]
+struct BucketState {
+    ids: HashSet<u32>,
+    /// Owners that failed at least one push for this bucket: they may
+    /// hold an incomplete copy, so reads skip them (DESIGN.md §10).
+    stale: HashSet<u32>,
+}
+
+/// Installed routing state: the current map plus per-bucket state.
+struct Routing {
+    map: ShardMap,
+    buckets: Vec<Mutex<BucketState>>,
+}
+
+/// Routes vertex ids across N child stores through a replication-aware
+/// [`ShardMap`]. Pushes fan out to *every* owner of a row (primary + R
+/// replicas) as one batched sub-RPC per backend; pulls read each row's
+/// primary and fail over left-to-right through its replicas on error.
+/// When more than one backend participates, the sub-RPCs *execute
+/// concurrently* (scoped threads, one per sub-RPC), and the record
+/// accounts them accordingly (`time = max`, `bytes = sum`). Results are
+/// position-scattered into the caller's buffers, so the merged output is
+/// independent of completion order — sharding never changes values.
+///
+/// # Fault tolerance
+///
+/// A push sub-RPC failure is absorbed as long as every row still landed
+/// on at least one owner (so with R replicas, up to R whole-backend
+/// failures per row); a pull falls back replica-by-replica. Every
+/// absorbed failure increments the failover counter surfaced in
+/// [`StoreStats::failovers`]. Only when *all* owners of some row fail
+/// does the call return `Err`.
+///
+/// An owner that misses a push is **quarantined** for the touched
+/// buckets: it keeps receiving subsequent pushes but never serves
+/// reads again until a [`rebalance`](ShardedStore::rebalance) re-copies
+/// it (so a transient fault can never surface stale or zero rows — the
+/// complete replica serves instead). If *every* owner of a bucket has
+/// missed a push, reads on that bucket refuse loudly rather than guess.
+/// Because pushes replicate synchronously and reads only ever come from
+/// owners with a complete copy, failover never changes values — a
+/// session's accuracy curve under injected faults matches the
+/// fault-free curve exactly (`tests/fault_tolerance.rs`).
+///
+/// # Rebalancing
+///
+/// [`rebalance`](ShardedStore::rebalance) migrates to a new map online:
+/// it copies each changed bucket's rows from a live old owner to the
+/// newly-added owners, then atomically installs the map with a bumped
+/// epoch. The router's lock drains in-flight calls first and holds new
+/// ones out, so every RPC — including queued pipeline tickets from
+/// [`AsyncStoreHandle`](super::pipeline::AsyncStoreHandle) — executes
+/// entirely under one map generation (DESIGN.md §10). Rows on owners
+/// that *lost* a bucket are left in place but never read again (the
+/// trait has no delete); a re-admitted backend is brought current by the
+/// rebalance that re-adds it.
+///
+/// # Occupancy caveat
+///
+/// `stats` reports the *logical* occupancy observed by this router
+/// (replicas are not double-counted). A fresh router constructed over
+/// already-warm backends reports 0 until rows are pushed through it —
+/// the same cross-session caveat as the trait's error-semantics note.
 pub struct ShardedStore {
     backends: Vec<Arc<dyn EmbeddingStore>>,
     n_layers: usize,
     hidden: usize,
+    routing: RwLock<Routing>,
+    failovers: AtomicUsize,
 }
 
 impl ShardedStore {
-    /// Build over existing backends; all must share one geometry.
+    /// Build over existing backends with the uniform unreplicated map
+    /// (the classic hash partition); all backends must share one
+    /// geometry.
     pub fn new(backends: Vec<Arc<dyn EmbeddingStore>>) -> Result<Self> {
         ensure!(!backends.is_empty(), "sharded store needs at least one backend");
+        let map = ShardMap::uniform(backends.len(), 0)?;
+        Self::with_map(backends, map)
+    }
+
+    /// Build with R replicas per row (uniform map): every row lives on
+    /// R+1 distinct backends and the store tolerates R whole-backend
+    /// failures per row.
+    pub fn replicated(backends: Vec<Arc<dyn EmbeddingStore>>, replicas: usize) -> Result<Self> {
+        ensure!(!backends.is_empty(), "sharded store needs at least one backend");
+        let map = ShardMap::uniform(backends.len(), replicas)?;
+        Self::with_map(backends, map)
+    }
+
+    /// Build with an explicit routing table.
+    pub fn with_map(backends: Vec<Arc<dyn EmbeddingStore>>, map: ShardMap) -> Result<Self> {
+        ensure!(!backends.is_empty(), "sharded store needs at least one backend");
+        ensure!(
+            map.n_backends() == backends.len(),
+            "shard map covers {} backend(s), store has {}",
+            map.n_backends(),
+            backends.len()
+        );
         let (n_layers, hidden) = (backends[0].n_layers(), backends[0].hidden());
         for (i, b) in backends.iter().enumerate() {
             ensure!(
@@ -147,14 +494,18 @@ impl ShardedStore {
                 b.hidden()
             );
         }
+        let buckets = (0..map.n_buckets()).map(|_| Mutex::new(BucketState::default())).collect();
         Ok(Self {
             backends,
             n_layers,
             hidden,
+            routing: RwLock::new(Routing { map, buckets }),
+            failovers: AtomicUsize::new(0),
         })
     }
 
-    /// Convenience: N in-process slab servers (single-host scale-out).
+    /// Convenience: N in-process slab servers, no replication
+    /// (single-host scale-out).
     pub fn in_process(shards: usize, n_layers: usize, hidden: usize, net: NetConfig) -> Self {
         let backends: Vec<Arc<dyn EmbeddingStore>> = (0..shards.max(1))
             .map(|_| {
@@ -164,27 +515,159 @@ impl ShardedStore {
         Self::new(backends).expect("uniform in-process shards")
     }
 
+    /// Convenience: N in-process slab servers with R replicas per row.
+    pub fn in_process_replicated(
+        shards: usize,
+        replicas: usize,
+        n_layers: usize,
+        hidden: usize,
+        net: NetConfig,
+    ) -> Result<Self> {
+        let backends: Vec<Arc<dyn EmbeddingStore>> = (0..shards.max(1))
+            .map(|_| {
+                Arc::new(EmbeddingServer::new(n_layers, hidden, net)) as Arc<dyn EmbeddingStore>
+            })
+            .collect();
+        Self::replicated(backends, replicas)
+    }
+
     pub fn n_shards(&self) -> usize {
         self.backends.len()
     }
 
-    /// Owning shard of a vertex id (splitmix-style avalanche so dense id
-    /// ranges spread evenly regardless of shard count).
-    fn shard_of(&self, node: u32) -> usize {
-        let mut x = node as u64 ^ 0x9E37_79B9_7F4A_7C15;
-        x ^= x >> 33;
-        x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
-        x ^= x >> 33;
-        (x % self.backends.len() as u64) as usize
+    /// Replication factor of the installed map.
+    pub fn replicas(&self) -> usize {
+        self.routing.read().unwrap().map.replicas()
     }
 
-    /// `groups[shard]` = positions into `nodes` owned by that shard.
-    fn group(&self, nodes: &[u32]) -> Vec<Vec<usize>> {
-        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.backends.len()];
-        for (i, &node) in nodes.iter().enumerate() {
-            groups[self.shard_of(node)].push(i);
+    /// Snapshot of the installed routing table.
+    pub fn map(&self) -> ShardMap {
+        self.routing.read().unwrap().map.clone()
+    }
+
+    /// Failover/partial-failure events absorbed so far.
+    pub fn failovers(&self) -> usize {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// Pull `sub_nodes` trying each owner in read-preference order;
+    /// returns the first success. Absorbed failures are counted into the
+    /// failover gauge.
+    fn pull_one_group(
+        &self,
+        owners: &[u32],
+        sub_nodes: &[u32],
+        on_demand: bool,
+    ) -> Result<(Vec<Vec<f32>>, RpcRecord)> {
+        let mut fails = 0usize;
+        let mut last: Option<anyhow::Error> = None;
+        for &b in owners {
+            let mut buf = Vec::new();
+            match self.backends[b as usize].pull_into(sub_nodes, on_demand, &mut buf) {
+                Ok(rec) => {
+                    if fails > 0 {
+                        self.failovers.fetch_add(fails, Ordering::Relaxed);
+                    }
+                    return Ok((buf, rec));
+                }
+                Err(e) => {
+                    fails += 1;
+                    last = Some(e);
+                }
+            }
         }
-        groups
+        // every owner failed: nothing was absorbed, so the gauge (which
+        // counts failures the plane *rode out*) is left untouched
+        Err(last
+            .expect("owner lists are never empty")
+            .context(format!("pull failed on all {} owner(s)", owners.len())))
+    }
+
+    /// Migrate to `new_map` online and install it under a bumped epoch.
+    ///
+    /// For every bucket whose owner *set* changed, the bucket's rows
+    /// (per this router's logical occupancy) are read from a live old
+    /// owner holding a complete copy (never a quarantined one; with
+    /// failover, so the migration itself routes around a dead shard)
+    /// and pushed to each newly-added owner. Retained owners that were
+    /// quarantined by a missed push are re-copied the same way — so
+    /// **rebalancing onto the unchanged map is the repair operation**
+    /// that lifts a bucket's quarantine. The whole operation holds the
+    /// routing lock exclusively: concurrent pushes/pulls and queued
+    /// pipeline tickets either complete before the migration starts or
+    /// run entirely under the new map — no RPC ever straddles
+    /// generations. Returns what moved.
+    pub fn rebalance(&self, new_map: ShardMap) -> Result<RebalanceReport> {
+        let mut routing = self.routing.write().unwrap();
+        ensure!(
+            new_map.n_backends() == self.backends.len(),
+            "rebalance map covers {} backend(s), store has {}",
+            new_map.n_backends(),
+            self.backends.len()
+        );
+        ensure!(
+            new_map.n_buckets() == routing.map.n_buckets(),
+            "rebalance map has {} buckets, installed map has {} \
+             (the bucket count is fixed at construction)",
+            new_map.n_buckets(),
+            routing.map.n_buckets()
+        );
+        let mut report = RebalanceReport {
+            epoch: routing.map.epoch() + 1,
+            ..Default::default()
+        };
+        for b in 0..routing.map.n_buckets() {
+            let old = routing.map.owners_of_bucket(b);
+            let new = new_map.owners_of_bucket(b);
+            if !same_owner_set(old, new) {
+                report.buckets_changed += 1;
+            }
+            let (mut ids, stale) = {
+                let state = routing.buckets[b].lock().unwrap();
+                let ids: Vec<u32> = state.ids.iter().copied().collect();
+                let stale: Vec<u32> = state.stale.iter().copied().collect();
+                (ids, stale)
+            };
+            // copy targets: owners joining the bucket, plus retained
+            // owners quarantined by a missed push (the repair path)
+            let added: Vec<u32> = new.iter().copied().filter(|o| !old.contains(o)).collect();
+            let repaired: Vec<u32> = new
+                .iter()
+                .copied()
+                .filter(|o| stale.contains(o) && !added.contains(o))
+                .collect();
+            if !ids.is_empty() && !(added.is_empty() && repaired.is_empty()) {
+                ids.sort_unstable();
+                // migration sources: old owners with a complete copy
+                let sources: Vec<u32> =
+                    old.iter().copied().filter(|o| !stale.contains(o)).collect();
+                ensure!(
+                    !sources.is_empty(),
+                    "rebalance: bucket {b} has no owner with a complete copy"
+                );
+                let (buf, _) = self.pull_one_group(&sources, &ids, false).map_err(|e| {
+                    e.context(format!("rebalance: reading bucket {b} from its old owners"))
+                })?;
+                for &t in added.iter().chain(&repaired) {
+                    self.backends[t as usize].push(&ids, &buf).map_err(|e| {
+                        e.context(format!("rebalance: copying bucket {b} to backend {t}"))
+                    })?;
+                }
+                report.rows_copied += ids.len() * added.len();
+                report.owners_repaired += repaired.len();
+            }
+        }
+        // Atomic install: only once *every* bucket migrated do the
+        // quarantines lift and the map switch. A failed migration above
+        // returns with the old map and all stale marks intact, so a
+        // half-rebalanced router never reads a not-yet-repaired owner.
+        for state in routing.buckets.iter() {
+            state.lock().unwrap().stale.clear();
+        }
+        let mut installed = new_map;
+        installed.epoch = report.epoch;
+        routing.map = installed;
+        Ok(report)
     }
 }
 
@@ -211,9 +694,20 @@ impl EmbeddingStore for ShardedStore {
             bytes: 0,
             time: 0.0,
         };
-        // slice the batch per owning shard...
+        if nodes.is_empty() {
+            return Ok(rec);
+        }
+        let routing = self.routing.read().unwrap();
+        // slice the batch per owning backend (a row appears once per
+        // owner: primary + R replicas)...
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.backends.len()];
+        for (i, &node) in nodes.iter().enumerate() {
+            for &b in routing.map.owners_of(node) {
+                groups[b as usize].push(i);
+            }
+        }
         let mut jobs: Vec<(usize, Vec<u32>, Vec<Vec<f32>>)> = Vec::new();
-        for (sid, group) in self.group(nodes).iter().enumerate() {
+        for (bid, group) in groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
@@ -228,24 +722,68 @@ impl EmbeddingStore for ShardedStore {
                     v
                 })
                 .collect();
-            jobs.push((sid, sub_nodes, sub_layers));
+            jobs.push((bid, sub_nodes, sub_layers));
         }
         // ...and fan the sub-RPCs out concurrently (one scoped worker per
-        // shard); upserts of disjoint id sets commute, so concurrency
+        // backend); upserts of disjoint id sets commute, so concurrency
         // never changes the stored values
         let results: Vec<Result<RpcRecord>> = if jobs.len() > 1 {
-            pool::parallel_map(&jobs, jobs.len(), |_, (sid, sub_nodes, sub_layers)| {
-                self.backends[*sid].push(sub_nodes, sub_layers)
+            pool::parallel_map(&jobs, jobs.len(), |_, (bid, sub_nodes, sub_layers)| {
+                self.backends[*bid].push(sub_nodes, sub_layers)
             })
         } else {
             jobs.iter()
-                .map(|(sid, n, l)| self.backends[*sid].push(n, l))
+                .map(|(bid, n, l)| self.backends[*bid].push(n, l))
                 .collect()
         };
-        for r in results {
-            let r = r?;
-            rec.bytes += r.bytes;
-            rec.time = rec.time.max(r.time);
+        // tolerate up to R whole-backend failures per row: the push
+        // succeeds iff every row landed on at least one owner
+        let mut dead: Vec<usize> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for ((bid, _, _), r) in jobs.iter().zip(results) {
+            match r {
+                Ok(sub) => {
+                    rec.bytes += sub.bytes;
+                    rec.time = rec.time.max(sub.time);
+                }
+                Err(e) => {
+                    dead.push(*bid);
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if !dead.is_empty() {
+            for &node in nodes {
+                let owners = routing.map.owners_of(node);
+                if owners.iter().all(|&b| dead.contains(&(b as usize))) {
+                    return Err(first_err
+                        .take()
+                        .expect("a failed sub-push recorded its error")
+                        .context(format!("push lost node {node}: every owner failed")));
+                }
+            }
+            self.failovers.fetch_add(dead.len(), Ordering::Relaxed);
+        }
+        // logical occupancy: every row is now durable on >= 1 owner.
+        // Owners that failed this push are quarantined for the touched
+        // buckets — they may hold an incomplete copy, so reads skip
+        // them until a rebalance re-copies them (DESIGN.md §10).
+        let mut per_bucket: HashMap<usize, Vec<u32>> = HashMap::new();
+        for &node in nodes {
+            per_bucket.entry(routing.map.bucket_of(node)).or_default().push(node);
+        }
+        for (b, ids) in per_bucket {
+            let mut state = routing.buckets[b].lock().unwrap();
+            for &o in routing.map.owners_of_bucket(b) {
+                if dead.contains(&(o as usize)) {
+                    state.stale.insert(o);
+                }
+            }
+            for id in ids {
+                state.ids.insert(id);
+            }
         }
         Ok(rec)
     }
@@ -273,60 +811,93 @@ impl EmbeddingStore for ShardedStore {
             bytes: 0,
             time: 0.0,
         };
-        let groups = self.group(nodes);
-        let jobs: Vec<(usize, Vec<u32>)> = groups
-            .iter()
-            .enumerate()
-            .filter(|(_, group)| !group.is_empty())
-            .map(|(sid, group)| (sid, group.iter().map(|&i| nodes[i]).collect()))
+        if nodes.is_empty() {
+            return Ok(rec);
+        }
+        let routing = self.routing.read().unwrap();
+        // the *effective* owner list of every touched bucket: the map's
+        // owners minus any quarantined ones, so a replica that missed a
+        // push never serves reads. A bucket with no complete replica
+        // left refuses loudly rather than serving stale or zero rows.
+        let mut effective: HashMap<usize, Vec<u32>> = HashMap::new();
+        for &node in nodes {
+            let b = routing.map.bucket_of(node);
+            if effective.contains_key(&b) {
+                continue;
+            }
+            let state = routing.buckets[b].lock().unwrap();
+            let owners: Vec<u32> = routing
+                .map
+                .owners_of_bucket(b)
+                .iter()
+                .copied()
+                .filter(|o| !state.stale.contains(o))
+                .collect();
+            drop(state);
+            ensure!(
+                !owners.is_empty(),
+                "bucket {b}: every replica missed a push and is quarantined \
+                 (rebalance to repair before reading)"
+            );
+            effective.insert(b, owners);
+        }
+        // group positions by effective owner list: rows sharing owners
+        // share one sub-RPC (for the uniform fault-free map this is the
+        // classic per-primary grouping)
+        let mut by_owners: HashMap<&[u32], Vec<usize>> = HashMap::new();
+        for (i, &node) in nodes.iter().enumerate() {
+            let owners = &effective[&routing.map.bucket_of(node)];
+            by_owners.entry(owners.as_slice()).or_default().push(i);
+        }
+        let jobs: Vec<(Vec<u32>, Vec<usize>, Vec<u32>)> = by_owners
+            .into_iter()
+            .map(|(owners, group)| {
+                let sub_nodes: Vec<u32> = group.iter().map(|&i| nodes[i]).collect();
+                (owners.to_vec(), group, sub_nodes)
+            })
             .collect();
-        // concurrent sub-pulls into per-shard buffers; the scatter below
-        // writes disjoint row positions, so completion order is invisible
-        let results: Vec<Result<(usize, Vec<Vec<f32>>, RpcRecord)>> = if jobs.len() > 1 {
-            pool::parallel_map(&jobs, jobs.len(), |_, (sid, sub_nodes)| {
-                let mut buf = Vec::new();
-                let r = self.backends[*sid].pull_into(sub_nodes, on_demand, &mut buf)?;
-                Ok((*sid, buf, r))
+        // concurrent sub-pulls (each failing over through its replicas)
+        // into per-group buffers; the scatter below writes disjoint row
+        // positions, so completion order is invisible
+        let results: Vec<Result<(Vec<Vec<f32>>, RpcRecord)>> = if jobs.len() > 1 {
+            pool::parallel_map(&jobs, jobs.len(), |_, (owners, _, sub_nodes)| {
+                self.pull_one_group(owners, sub_nodes, on_demand)
             })
         } else {
             jobs.iter()
-                .map(|(sid, sub_nodes)| {
-                    let mut buf = Vec::new();
-                    let r = self.backends[*sid].pull_into(sub_nodes, on_demand, &mut buf)?;
-                    Ok((*sid, buf, r))
-                })
+                .map(|(owners, _, sub_nodes)| self.pull_one_group(owners, sub_nodes, on_demand))
                 .collect()
         };
-        for res in results {
-            let (sid, shard_buf, r) = res?;
-            let group = &groups[sid];
+        for ((_, group, _), res) in jobs.iter().zip(results) {
+            let (shard_buf, sub) = res?;
             for (layer, rows) in out.iter_mut().zip(&shard_buf) {
                 for (j, &i) in group.iter().enumerate() {
                     layer[i * h..(i + 1) * h].copy_from_slice(&rows[j * h..(j + 1) * h]);
                 }
             }
-            rec.bytes += r.bytes;
-            rec.time = rec.time.max(r.time);
+            rec.bytes += sub.bytes;
+            rec.time = rec.time.max(sub.time);
         }
         Ok(rec)
     }
 
     fn stats(&self) -> Result<StoreStats> {
-        let mut total = StoreStats::default();
-        for b in &self.backends {
-            let s = b.stats()?;
-            total.nodes += s.nodes;
-            total.rows += s.rows;
-        }
-        Ok(total)
+        let routing = self.routing.read().unwrap();
+        let nodes: usize = routing.buckets.iter().map(|s| s.lock().unwrap().ids.len()).sum();
+        Ok(StoreStats {
+            nodes,
+            rows: nodes * self.n_layers,
+            failovers: self.failovers.load(Ordering::Relaxed),
+            epoch: routing.map.epoch(),
+        })
+    }
+
+    fn epoch(&self) -> u64 {
+        self.routing.read().unwrap().map.epoch()
     }
 
     fn describe(&self) -> String {
-        format!(
-            "sharded({} shards over {})",
-            self.backends.len(),
-            self.backends[0].describe()
-        )
+        sharded_desc(self.backends.len(), &self.backends[0].describe(), self.replicas())
     }
 }
 
@@ -345,12 +916,17 @@ mod tests {
         Arc::new(EmbeddingServer::new(2, h, NetConfig::default()))
     }
 
+    fn servers(n: usize, h: usize) -> Vec<Arc<dyn EmbeddingStore>> {
+        (0..n).map(|_| dyn_server(h)).collect()
+    }
+
     #[test]
     fn sharded_matches_single_backend() {
         let h = 4;
         let single = dyn_server(h);
         let sharded = ShardedStore::in_process(4, 2, h, NetConfig::default());
         assert_eq!(sharded.n_shards(), 4);
+        assert_eq!(sharded.replicas(), 0);
         let nodes: Vec<u32> = (0..257).collect();
         let l1 = rows(&nodes, h, 0.0);
         let l2 = rows(&nodes, h, 0.5);
@@ -365,7 +941,7 @@ mod tests {
         assert_eq!(rec.rows, query.len());
         assert!(rec.time > 0.0);
 
-        // occupancy sums across shards to the single-backend total
+        // occupancy agrees with the single-backend total
         let sa = single.stats().unwrap();
         let sb = sharded.stats().unwrap();
         assert_eq!(sa, sb);
@@ -375,15 +951,16 @@ mod tests {
 
     #[test]
     fn sharding_spreads_dense_id_ranges() {
-        let sharded = ShardedStore::in_process(4, 2, 4, NetConfig::default());
-        let nodes: Vec<u32> = (0..4000).collect();
-        let groups = sharded.group(&nodes);
-        for (sid, g) in groups.iter().enumerate() {
-            let frac = g.len() as f64 / nodes.len() as f64;
+        let map = ShardMap::uniform(4, 0).unwrap();
+        let mut counts = vec![0usize; 4];
+        for v in 0..4000u32 {
+            counts[map.primary_of(v)] += 1;
+        }
+        for (sid, c) in counts.iter().enumerate() {
+            let frac = *c as f64 / 4000.0;
             assert!(
                 (0.15..=0.35).contains(&frac),
-                "shard {sid} holds {:.2} of a dense range",
-                frac
+                "shard {sid} owns {frac:.2} of a dense range"
             );
         }
     }
@@ -407,11 +984,40 @@ mod tests {
     }
 
     #[test]
-    fn geometry_mismatch_rejected() {
+    fn constructor_error_paths() {
+        // geometry mismatch between backends
         let a: Arc<dyn EmbeddingStore> = Arc::new(EmbeddingServer::new(2, 4, NetConfig::default()));
         let b: Arc<dyn EmbeddingStore> = Arc::new(EmbeddingServer::new(2, 8, NetConfig::default()));
-        assert!(ShardedStore::new(vec![a, b]).is_err());
-        assert!(ShardedStore::new(Vec::new()).is_err());
+        let err = ShardedStore::new(vec![a, b]).err().expect("geometry mismatch");
+        assert!(format!("{err:#}").contains("geometry"), "{err:#}");
+        // no backends at all
+        let err = ShardedStore::new(Vec::new()).err().expect("empty backends");
+        assert!(format!("{err:#}").contains("at least one backend"), "{err:#}");
+        assert!(ShardedStore::replicated(Vec::new(), 1).is_err());
+        // more replicas than spare backends
+        let err = ShardedStore::replicated(servers(2, 4), 2).err().expect("replica overflow");
+        assert!(format!("{err:#}").contains("replica"), "{err:#}");
+        assert!(ShardedStore::in_process_replicated(2, 2, 2, 4, NetConfig::default()).is_err());
+        // map sized for a different backend count
+        let map = ShardMap::uniform(3, 1).unwrap();
+        let err = ShardedStore::with_map(servers(2, 4), map).err().expect("map size mismatch");
+        assert!(format!("{err:#}").contains("backend"), "{err:#}");
+        // malformed explicit maps
+        assert!(ShardMap::uniform(0, 0).is_err());
+        assert!(ShardMap::from_owners(Vec::new(), 2).is_err());
+        assert!(ShardMap::from_owners(vec![vec![]], 2).is_err());
+        assert!(ShardMap::from_owners(vec![vec![0], vec![0, 1]], 2).is_err()); // ragged
+        assert!(ShardMap::from_owners(vec![vec![2]], 2).is_err()); // out of range
+        assert!(ShardMap::from_owners(vec![vec![0, 0]], 2).is_err()); // duplicate
+        // rebalance with a foreign bucket count
+        let store = ShardedStore::in_process(2, 2, 4, NetConfig::default());
+        let foreign = ShardMap::from_owners(vec![vec![0], vec![1]], 2).unwrap();
+        let err = store.rebalance(foreign).err().expect("bucket count mismatch");
+        assert!(format!("{err:#}").contains("bucket"), "{err:#}");
+        // excluding a backend when every backend is an owner
+        let full = ShardMap::uniform(2, 1).unwrap();
+        assert!(full.excluding(0).is_err());
+        assert!(ShardMap::uniform(3, 1).unwrap().excluding(7).is_err());
     }
 
     #[test]
@@ -424,5 +1030,214 @@ mod tests {
         assert_eq!(got.len(), 2);
         assert!(got.iter().all(|l| l.is_empty()));
         assert_eq!(sharded.stats().unwrap(), StoreStats::default());
+    }
+
+    #[test]
+    fn replicated_push_lands_on_every_owner() {
+        let h = 4;
+        let backends = servers(3, h);
+        let store = ShardedStore::replicated(backends.clone(), 1).unwrap();
+        let nodes: Vec<u32> = (0..100).collect();
+        let l1 = rows(&nodes, h, 0.0);
+        let l2 = rows(&nodes, h, 0.5);
+        store.push(&nodes, &[l1.clone(), l2]).unwrap();
+        // logical stats count each node once despite two physical copies
+        let st = store.stats().unwrap();
+        assert_eq!((st.nodes, st.rows, st.failovers, st.epoch), (100, 200, 0, 0));
+        let map = store.map();
+        for &node in &nodes {
+            let want = rows(&[node], h, 0.0);
+            for &owner in map.owners_of(node) {
+                let (got, _) = backends[owner as usize].pull(&[node], false).unwrap();
+                assert_eq!(got[0], want, "node {node} missing on owner {owner}");
+            }
+            // and on nobody else
+            for b in 0..3u32 {
+                if !map.owners_of(node).contains(&b) {
+                    let (got, _) = backends[b as usize].pull(&[node], false).unwrap();
+                    assert!(got[0].iter().all(|&v| v == 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_rows_and_bumps_epoch() {
+        let h = 4;
+        let backends = servers(4, h);
+        let store = ShardedStore::replicated(backends.clone(), 1).unwrap();
+        let nodes: Vec<u32> = (0..200).collect();
+        store
+            .push(&nodes, &[rows(&nodes, h, 0.0), rows(&nodes, h, 1.0)])
+            .unwrap();
+        let before = store.stats().unwrap();
+
+        let old_map = store.map();
+        let new_map = old_map.excluding(2).unwrap();
+        let changed = old_map.changed_buckets(&new_map);
+        let report = store.rebalance(new_map.clone()).unwrap();
+        assert_eq!(report.epoch, 1);
+        assert_eq!(store.epoch(), 1);
+        assert_eq!(report.buckets_changed, changed.len());
+        assert!(report.rows_copied > 0);
+
+        // no row lost, none double-counted
+        let after = store.stats().unwrap();
+        assert_eq!((before.nodes, before.rows), (after.nodes, after.rows));
+        assert_eq!(after.epoch, 1);
+        // every row readable with its original values, and present on
+        // every owner of the *new* map
+        let installed = store.map();
+        for &node in &nodes {
+            let (got, _) = store.pull(&[node], false).unwrap();
+            assert_eq!(got[0], rows(&[node], h, 0.0));
+            assert!(!installed.owners_of(node).contains(&2), "node {node} still routed to 2");
+            for &owner in installed.owners_of(node) {
+                let (copy, _) = backends[owner as usize].pull(&[node], false).unwrap();
+                assert_eq!(copy[0], rows(&[node], h, 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn rebalance_of_empty_store_only_bumps_epoch() {
+        let store = ShardedStore::in_process_replicated(4, 1, 2, 4, NetConfig::default()).unwrap();
+        let new_map = store.map().excluding(0).unwrap();
+        let report = store.rebalance(new_map).unwrap();
+        assert_eq!(report.epoch, 1);
+        assert_eq!(report.rows_copied, 0);
+        assert_eq!(report.owners_repaired, 0);
+        assert!(report.buckets_changed > 0);
+        assert_eq!(store.stats().unwrap().nodes, 0);
+    }
+
+    #[test]
+    fn transient_push_failure_quarantines_the_stale_owner() {
+        use crate::coordinator::resilience::FaultStore;
+        let h = 4;
+        // 2 backends, R=1: every bucket is owned by both
+        let slabs: Vec<Arc<EmbeddingServer>> = (0..2)
+            .map(|_| Arc::new(EmbeddingServer::new(2, h, NetConfig::default())))
+            .collect();
+        let faulted = FaultStore::new(
+            Arc::clone(&slabs[0]) as Arc<dyn EmbeddingStore>,
+            "shard0",
+            Vec::new(),
+        );
+        let handle = faulted.handle();
+        let backends: Vec<Arc<dyn EmbeddingStore>> = vec![
+            Arc::new(faulted),
+            Arc::clone(&slabs[1]) as Arc<dyn EmbeddingStore>,
+        ];
+        let store = ShardedStore::replicated(backends, 1).unwrap();
+        let nodes: Vec<u32> = (0..64).collect();
+        store
+            .push(&nodes, &[rows(&nodes, h, 0.0), rows(&nodes, h, 1.0)])
+            .unwrap();
+
+        // shard 0 misses the second push entirely: tolerated, quarantined
+        handle.set_blackout(true);
+        store
+            .push(&nodes, &[rows(&nodes, h, 5.0), rows(&nodes, h, 6.0)])
+            .unwrap();
+        assert!(store.failovers() > 0);
+        handle.set_blackout(false);
+
+        // reads must come from the complete replica (shard 1), never the
+        // revived-but-stale shard 0 — fresh values, bit-exact
+        let (got, _) = store.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], rows(&nodes, h, 5.0));
+        assert_eq!(got[1], rows(&nodes, h, 6.0));
+
+        // rebalancing onto the SAME map is the repair: shard 0 gets
+        // re-copied and the quarantine lifts
+        let report = store.rebalance(store.map()).unwrap();
+        assert_eq!(report.buckets_changed, 0);
+        assert!(report.owners_repaired > 0);
+        let (direct, _) = slabs[0].pull(&nodes, false);
+        assert_eq!(direct[0], rows(&nodes, h, 5.0), "repair left shard 0 stale");
+        let (got, _) = store.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], rows(&nodes, h, 5.0));
+        assert_eq!(store.stats().unwrap().nodes, 64);
+    }
+
+    #[test]
+    fn bucket_with_no_complete_replica_refuses_reads_loudly() {
+        use crate::coordinator::resilience::FaultStore;
+        let h = 4;
+        let mk = || -> Arc<dyn EmbeddingStore> {
+            Arc::new(EmbeddingServer::new(2, h, NetConfig::default()))
+        };
+        let f0 = FaultStore::new(mk(), "shard0", Vec::new());
+        let f1 = FaultStore::new(mk(), "shard1", Vec::new());
+        let (h0, h1) = (f0.handle(), f1.handle());
+        let store = ShardedStore::replicated(vec![Arc::new(f0), Arc::new(f1)], 1).unwrap();
+        let nodes: Vec<u32> = (0..32).collect();
+        store
+            .push(&nodes, &[rows(&nodes, h, 0.0), rows(&nodes, h, 1.0)])
+            .unwrap();
+        // two disjoint transient failures exceed the R=1 fault budget
+        h0.set_blackout(true);
+        store
+            .push(&nodes, &[rows(&nodes, h, 2.0), rows(&nodes, h, 3.0)])
+            .unwrap();
+        h0.set_blackout(false);
+        h1.set_blackout(true);
+        store
+            .push(&nodes, &[rows(&nodes, h, 4.0), rows(&nodes, h, 5.0)])
+            .unwrap();
+        h1.set_blackout(false);
+        // no owner is guaranteed complete: reads refuse instead of
+        // silently serving possibly-stale rows
+        let err = store
+            .pull(&nodes, false)
+            .err()
+            .expect("quarantined bucket must not serve");
+        assert!(format!("{err:#}").contains("quarantine"), "{err:#}");
+        // and the same-map rebalance has no complete source either
+        assert!(store.rebalance(store.map()).is_err());
+    }
+
+    #[test]
+    fn shard_map_uniform_owner_sets_are_valid() {
+        for n in 1..6usize {
+            for r in 0..n {
+                let map = ShardMap::uniform(n, r).unwrap();
+                assert_eq!(map.replicas(), r);
+                assert!(map.n_buckets() >= n);
+                for v in 0..500u32 {
+                    let owners = map.owners_of(v);
+                    assert_eq!(owners.len(), r + 1);
+                    assert_eq!(owners[0] as usize, map.primary_of(v));
+                    assert!(!map.replicas_of(v).contains(&owners[0]));
+                    let mut sorted: Vec<u32> = owners.to_vec();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    assert_eq!(sorted.len(), r + 1, "duplicate owners for {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_map_excluding_reroutes_deterministically() {
+        let map = ShardMap::uniform(4, 1).unwrap();
+        let ex = map.excluding(1).unwrap();
+        assert_eq!(ex.replicas(), 1);
+        for b in 0..map.n_buckets() {
+            assert!(!ex.owners_of_bucket(b).contains(&1));
+            // buckets that never listed backend 1 are untouched
+            if !map.owners_of_bucket(b).contains(&1) {
+                assert_eq!(map.owners_of_bucket(b), ex.owners_of_bucket(b));
+            }
+        }
+        // deterministic: same derivation twice
+        assert_eq!(ex, map.excluding(1).unwrap());
+        // changed buckets are exactly those that listed backend 1
+        let changed = map.changed_buckets(&ex);
+        let expect: Vec<usize> = (0..map.n_buckets())
+            .filter(|&b| map.owners_of_bucket(b).contains(&1))
+            .collect();
+        assert_eq!(changed, expect);
     }
 }

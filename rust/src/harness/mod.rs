@@ -12,6 +12,12 @@
 //!   embedding stores over TCP (several addresses = hash-sharded).
 //! * `OPTIMES_SHARDS=n` — back sessions by an n-way sharded in-process
 //!   store (ignored when `OPTIMES_SERVER` is set).
+//! * `OPTIMES_REPLICAS=r` — keep r extra replicas of every embedding row
+//!   across the sharded backends (`run --replicas`; needs more shards
+//!   than replicas; DESIGN.md §10). Results are bit-identical to r=0.
+//! * `OPTIMES_FAULT_SPEC=spec` — wrap each shard backend in a
+//!   deterministic fault injector (`run --fault-spec`; grammar in
+//!   [`FaultSpec`], e.g. `shard1=blackout@40;*=delay%10:0.005`).
 //! * `OPTIMES_PIPELINE=off` — disable the asynchronous push/pull
 //!   pipeline over the store (default on; DESIGN.md §9). Results are
 //!   bit-identical either way, only wall clock changes.
@@ -21,12 +27,12 @@ pub mod report;
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::coordinator::metrics::RoundMetrics;
 use crate::coordinator::{
-    EmbeddingServer, EmbeddingStore, NetConfig, RoundObserver, SessionBuilder, SessionConfig,
-    SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore,
+    sharded_desc, EmbeddingServer, EmbeddingStore, FaultSpec, NetConfig, RoundObserver,
+    SessionBuilder, SessionConfig, SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore,
 };
 use crate::graph::datasets::{self, DatasetPreset};
 use crate::graph::Graph;
@@ -155,6 +161,20 @@ pub enum StoreSpec {
     ShardedInProcess(usize),
 }
 
+/// Replication factor of the embedding plane (`OPTIMES_REPLICAS`,
+/// default 0 = the classic unreplicated partition).
+pub fn store_replicas() -> usize {
+    env_usize("OPTIMES_REPLICAS").unwrap_or(0)
+}
+
+/// Parse `OPTIMES_FAULT_SPEC` (empty spec when unset).
+pub fn fault_spec() -> Result<FaultSpec> {
+    match std::env::var("OPTIMES_FAULT_SPEC") {
+        Ok(s) if !s.trim().is_empty() => FaultSpec::parse(&s),
+        _ => Ok(FaultSpec::default()),
+    }
+}
+
 /// Read `OPTIMES_SERVER` / `OPTIMES_SHARDS` into a [`StoreSpec`].
 pub fn store_spec() -> StoreSpec {
     if let Ok(s) = std::env::var("OPTIMES_SERVER") {
@@ -178,15 +198,19 @@ pub fn store_spec() -> StoreSpec {
 /// Human-readable description of the active store backend + shard count
 /// (the `optimes info` line). The strings deliberately match what
 /// [`EmbeddingStore::describe`] reports into `SessionMetrics`, so `info`
-/// and the session reports never disagree about the backend.
+/// and the session reports never disagree about the backend. (Under
+/// `OPTIMES_FAULT_SPEC`, the faulted shards additionally carry a
+/// `fault(..)` wrapper in the session's own describe string.)
 pub fn store_desc() -> String {
     match store_spec() {
         StoreSpec::InProcess => "in-process".into(),
-        StoreSpec::Tcp(addrs) if addrs.len() == 1 => format!("tcp({})", addrs[0]),
-        StoreSpec::Tcp(addrs) => {
-            format!("sharded({} shards over tcp({}))", addrs.len(), addrs[0])
+        StoreSpec::Tcp(addrs) if addrs.len() == 1 && store_replicas() == 0 => {
+            format!("tcp({})", addrs[0])
         }
-        StoreSpec::ShardedInProcess(n) => format!("sharded({n} shards over in-process)"),
+        StoreSpec::Tcp(addrs) => {
+            sharded_desc(addrs.len(), &format!("tcp({})", addrs[0]), store_replicas())
+        }
+        StoreSpec::ShardedInProcess(n) => sharded_desc(n, "in-process", store_replicas()),
     }
 }
 
@@ -201,27 +225,44 @@ pub fn store_shards() -> usize {
 }
 
 /// Build the embedding store for the active [`StoreSpec`] at the given
-/// engine geometry.
+/// engine geometry, honoring `OPTIMES_REPLICAS` (replicated routing)
+/// and `OPTIMES_FAULT_SPEC` (per-shard fault injection).
 pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingStore>> {
     let (n_layers, hidden) = (geom.layers - 1, geom.hidden);
+    let replicas = store_replicas();
+    let spec = fault_spec()?;
     let store: Arc<dyn EmbeddingStore> = match store_spec() {
-        StoreSpec::InProcess => Arc::new(EmbeddingServer::new(n_layers, hidden, net)),
+        StoreSpec::InProcess => {
+            ensure!(
+                replicas == 0,
+                "OPTIMES_REPLICAS={replicas} needs a sharded store \
+                 (--shards N with N > replicas, or multiple --server addresses)"
+            );
+            spec.validate_shards(1)?;
+            spec.wrap_shard(0, Arc::new(EmbeddingServer::new(n_layers, hidden, net)))
+        }
         StoreSpec::Tcp(addrs) => {
+            spec.validate_shards(addrs.len())?;
             let backends: Vec<Arc<dyn EmbeddingStore>> = addrs
                 .iter()
-                .map(|a| {
+                .enumerate()
+                .map(|(i, a)| {
                     TcpEmbeddingStore::connect(a.as_str(), n_layers, hidden)
-                        .map(|s| Arc::new(s) as Arc<dyn EmbeddingStore>)
+                        .map(|s| spec.wrap_shard(i, Arc::new(s)))
                 })
                 .collect::<Result<_>>()?;
-            if backends.len() == 1 {
+            if backends.len() == 1 && replicas == 0 {
                 backends.into_iter().next().expect("one backend")
             } else {
-                Arc::new(ShardedStore::new(backends)?)
+                Arc::new(ShardedStore::replicated(backends, replicas)?)
             }
         }
         StoreSpec::ShardedInProcess(n) => {
-            Arc::new(ShardedStore::in_process(n, n_layers, hidden, net))
+            spec.validate_shards(n)?;
+            let backends: Vec<Arc<dyn EmbeddingStore>> = (0..n)
+                .map(|i| spec.wrap_shard(i, Arc::new(EmbeddingServer::new(n_layers, hidden, net))))
+                .collect();
+            Arc::new(ShardedStore::replicated(backends, replicas)?)
         }
     };
     Ok(store)

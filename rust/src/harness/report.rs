@@ -53,6 +53,7 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
     o.set("dataset", m.dataset.as_str());
     o.set("store_backend", m.store_backend.as_str());
     o.set("pipelined", m.pipelined);
+    o.set("store_epoch", m.store_epoch);
     o.set("n_clients", m.n_clients);
     o.set("server_embeddings", m.server_embeddings);
     o.set("pull_candidates", m.pull_candidates);
@@ -68,6 +69,7 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
                 .set("round_time", r.round_time)
                 .set("accuracy", r.accuracy)
                 .set("val_loss", r.val_loss)
+                .set("failovers", r.failovers)
                 .set("mean_phases", phases_json(&r.mean_phases))
                 .set("critical", phases_json(&r.critical));
             Json::Obj(ro)
@@ -103,6 +105,7 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             .unwrap_or_default()
             .to_string(),
         pipelined: j.at("pipelined").as_bool().unwrap_or(false),
+        store_epoch: j.at("store_epoch").as_usize().unwrap_or(0) as u64,
         n_clients: j.at("n_clients").as_usize()?,
         server_embeddings: j.at("server_embeddings").as_usize().unwrap_or(0),
         pull_candidates: j.at("pull_candidates").as_usize().unwrap_or(0),
@@ -115,6 +118,7 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             round_time: rj.at("round_time").as_f64().unwrap_or(0.0),
             accuracy: rj.at("accuracy").as_f64().unwrap_or(0.0),
             val_loss: rj.at("val_loss").as_f64().unwrap_or(0.0),
+            failovers: rj.at("failovers").as_usize().unwrap_or(0),
             mean_phases: phases_from(rj.at("mean_phases")),
             critical: phases_from(rj.at("critical")),
             clients: Vec::new(),
@@ -147,6 +151,7 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
         pull_wait: ovj.at("pull_wait").as_f64().unwrap_or(0.0),
         overlap_saved: ovj.at("overlap_saved").as_f64().unwrap_or(0.0),
         queue_peak: ovj.at("queue_peak").as_usize().unwrap_or(0),
+        store_epoch: ovj.at("store_epoch").as_usize().unwrap_or(0) as u64,
     };
     if !rpcs.is_empty() || overlap.pipelined {
         if m.rounds.is_empty() {
@@ -172,6 +177,7 @@ mod tests {
             strategy: "OPP".into(),
             dataset: "reddit-s".into(),
             store_backend: "tcp(10.0.0.2:7070)".into(),
+            store_epoch: 2,
             n_clients: 4,
             server_embeddings: 123,
             pull_candidates: 500,
@@ -184,6 +190,7 @@ mod tests {
                 round_time: 1.5 + i as f64,
                 accuracy: 0.5 + 0.1 * i as f64,
                 val_loss: 2.0 - 0.1 * i as f64,
+                failovers: 3 + i,
                 ..Default::default()
             };
             r.mean_phases.pull = 0.2;
@@ -217,6 +224,9 @@ mod tests {
         assert_eq!(back.rpcs(RpcKind::PullOnDemand).len(), 3);
         assert_eq!(back.server_embeddings, 123);
         assert_eq!(back.store_backend, "tcp(10.0.0.2:7070)");
+        assert_eq!(back.store_epoch, 2);
+        assert_eq!(back.rounds[1].failovers, 4);
+        assert_eq!(back.total_failovers(), 5);
         // derived metrics survive the roundtrip
         assert!((back.peak_accuracy() - m.peak_accuracy()).abs() < 1e-9);
         // aggregate measured overlap survives too

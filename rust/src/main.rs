@@ -20,8 +20,9 @@ use anyhow::{bail, Result};
 
 use optimes::coordinator::metrics::paper_target_accuracy;
 use optimes::coordinator::{
-    aggregation, EmbServerDaemon, EmbeddingServer, EmbeddingStore, NetConfig, RoundMetrics,
-    RoundObserver, SessionBuilder, SessionConfig, SessionMetrics, ShardedStore, Strategy,
+    aggregation, EmbServerDaemon, EmbeddingServer, EmbeddingStore, FaultSpec, NetConfig,
+    RoundMetrics, RoundObserver, SessionBuilder, SessionConfig, SessionMetrics, ShardedStore,
+    Strategy,
 };
 use optimes::graph::datasets;
 use optimes::harness::{self, figures};
@@ -58,6 +59,14 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get("shards") {
         std::env::set_var("OPTIMES_SHARDS", s);
+    }
+    if let Some(r) = args.get("replicas") {
+        std::env::set_var("OPTIMES_REPLICAS", r);
+    }
+    if let Some(f) = args.get("fault-spec") {
+        // validate up front so a typo fails before any training work
+        FaultSpec::parse(f)?;
+        std::env::set_var("OPTIMES_FAULT_SPEC", f);
     }
     if let Some(p) = args.get("pipeline") {
         match p.to_ascii_lowercase().as_str() {
@@ -98,11 +107,15 @@ commands:
          [--engine ref|pjrt] [--scale N] [--seed S] [--report FILE]
          [--server HOST:PORT[,HOST:PORT...]]   use remote embedding store(s)
          [--shards N]                          shard the in-process store
+         [--replicas R]                        keep R replicas per row (needs shards > R)
+         [--fault-spec SPEC]                   inject deterministic store faults,
+                                               e.g. \"shard1=blackout@40;*=delay%10:0.005\"
          [--pipeline on|off]                   async push/pull pipeline (default on)
          [--agg fedavg|uniform|trimmed[:k]]    aggregation rule
   sweep  --dataset D --strategies D,E,O,P,OP,OPP,OPG
   fig    table1|2a|2b|6|7|8|9|10|11|12|13|14|all
   serve  --port 7070 [--listen ADDR] [--layers 2] [--hidden 32] [--shards N]
+         [--replicas R] [--fault-spec SPEC]
          run the embedding store as a standalone TCP daemon
   smoke  PJRT artifact health check
 ";
@@ -110,10 +123,16 @@ commands:
 fn info() -> Result<()> {
     println!("engine: {}", harness::engine_kind());
     println!(
-        "store backend: {} [{} shard(s)]",
+        "store backend: {} [{} shard(s), {} replica(s)]",
         harness::store_desc(),
-        harness::store_shards()
+        harness::store_shards(),
+        harness::store_replicas()
     );
+    if let Ok(spec) = std::env::var("OPTIMES_FAULT_SPEC") {
+        if !spec.trim().is_empty() {
+            println!("fault injection: {spec} (OPTIMES_FAULT_SPEC)");
+        }
+    }
     println!(
         "pipeline: {}",
         if optimes::coordinator::pipeline_default() {
@@ -174,6 +193,13 @@ fn session_summary(m: &SessionMetrics) {
         "  remotes: {} candidates -> {} retained; {} embeddings at server",
         m.pull_candidates, m.retained_remotes, m.server_embeddings
     );
+    if m.total_failovers() > 0 || m.store_epoch > 0 {
+        println!(
+            "  resilience: {} failover/retry event(s) absorbed, routing epoch {}",
+            m.total_failovers(),
+            m.store_epoch
+        );
+    }
     let ov = m.overlap_stats();
     if ov.pipelined {
         println!(
@@ -316,15 +342,23 @@ fn serve(args: &Args) -> Result<()> {
     let layers = args.usize_or("layers", 2);
     let hidden = args.usize_or("hidden", 32);
     let shards = args.usize_or("shards", 1);
+    let replicas = args.usize_or("replicas", 0);
+    let spec = match args.get("fault-spec") {
+        Some(s) => FaultSpec::parse(s)?,
+        None => FaultSpec::default(),
+    };
+    spec.validate_shards(shards.max(1))?;
     let store: Arc<dyn EmbeddingStore> = if shards > 1 {
-        Arc::new(ShardedStore::in_process(
-            shards,
-            layers,
-            hidden,
-            NetConfig::default(),
-        ))
+        let backends: Vec<Arc<dyn EmbeddingStore>> = (0..shards)
+            .map(|i| {
+                let slab = EmbeddingServer::new(layers, hidden, NetConfig::default());
+                spec.wrap_shard(i, Arc::new(slab))
+            })
+            .collect();
+        Arc::new(ShardedStore::replicated(backends, replicas)?)
     } else {
-        Arc::new(EmbeddingServer::new(layers, hidden, NetConfig::default()))
+        anyhow::ensure!(replicas == 0, "--replicas needs --shards > 1");
+        spec.wrap_shard(0, Arc::new(EmbeddingServer::new(layers, hidden, NetConfig::default())))
     };
     let daemon = EmbServerDaemon::start(Arc::clone(&store), listen.as_str())?;
     println!(

@@ -7,9 +7,17 @@
 //!   never re-pulls a cached node;
 //! * state     — client cache is coherent with the server after
 //!   push+pull; pruning never exceeds the retention limit;
-//! * blocks    — every sampled block satisfies the AOT shape contract.
+//! * blocks    — every sampled block satisfies the AOT shape contract;
+//! * shard map — routing is total (every id gets a full, distinct owner
+//!   set), replicas never alias the primary, and a rebalance between two
+//!   random maps moves exactly the rows whose owner set changed — no row
+//!   lost, no row double-counted.
 
-use optimes::coordinator::{EmbCache, EmbeddingServer, NetConfig};
+use std::sync::Arc;
+
+use optimes::coordinator::{
+    EmbCache, EmbeddingServer, EmbeddingStore, NetConfig, ShardMap, ShardedStore,
+};
 use optimes::graph::generate::{generate, GenParams};
 use optimes::graph::partition::metis_lite;
 use optimes::graph::sampler::{BlockDims, SampledNode, Sampler};
@@ -232,6 +240,152 @@ fn prop_cache_coherent_after_pull() {
                     );
                 }
                 prop_assert!(cache.missing_of(&idxs).is_empty(), "missing after insert");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random explicit map: every bucket gets `replicas + 1` distinct owners
+/// drawn by shuffling the backend set.
+fn random_map(g: &mut Gen, n_backends: usize, replicas: usize, buckets: usize) -> ShardMap {
+    let owners: Vec<Vec<u32>> = (0..buckets)
+        .map(|_| {
+            let mut ids: Vec<u32> = (0..n_backends as u32).collect();
+            g.rng.shuffle(&mut ids);
+            ids.truncate(replicas + 1);
+            ids
+        })
+        .collect();
+    ShardMap::from_owners(owners, n_backends).expect("random owner sets are valid")
+}
+
+#[test]
+fn prop_shardmap_routing_is_total_and_replicas_disjoint() {
+    check(
+        "shardmap-routing-total",
+        40,
+        |g| {
+            let n = 1 + g.int(0, 7);
+            let r = g.int(0, n - 1);
+            let buckets = 1 + g.int_scaled(0, 127);
+            let uniform = g.bool();
+            let map = if uniform {
+                ShardMap::uniform(n, r).expect("r < n")
+            } else {
+                random_map(g, n, r, buckets)
+            };
+            let ids: Vec<u32> = (0..64).map(|_| g.int(0, 5_000_000) as u32).collect();
+            (map, ids, n, r)
+        },
+        |(map, ids, n, r)| {
+            for &id in ids {
+                let bucket = map.bucket_of(id);
+                prop_assert!(bucket < map.n_buckets(), "bucket {bucket} out of range");
+                let owners = map.owners_of(id);
+                prop_assert_eq!(owners, map.owners_of_bucket(bucket));
+                prop_assert_eq!(owners.len(), *r + 1);
+                prop_assert_eq!(owners[0] as usize, map.primary_of(id));
+                for (k, &o) in owners.iter().enumerate() {
+                    prop_assert!((o as usize) < *n, "owner {o} out of range");
+                    prop_assert!(
+                        !owners[..k].contains(&o),
+                        "id {id}: backend {o} owns twice"
+                    );
+                }
+                prop_assert!(
+                    !map.replicas_of(id).contains(&owners[0]),
+                    "id {id}: replica set aliases the primary"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rebalance_moves_exactly_the_changed_rows() {
+    check(
+        "rebalance-moves-owner-changes",
+        12,
+        |g| {
+            let n = 2 + g.int(0, 3); // 2..=5 backends
+            let r = g.int(0, n - 1);
+            let buckets = 8 + g.int(0, 24);
+            let map_a = random_map(g, n, r, buckets);
+            let map_b = random_map(g, n, r, buckets);
+            let n_ids = 1 + g.int_scaled(0, 300);
+            let ids: Vec<u32> = (0..n_ids as u32).map(|i| i * 3 + 1).collect();
+            (n, map_a, map_b, ids)
+        },
+        |(n, map_a, map_b, ids)| {
+            let hidden = 4;
+            let backends: Vec<Arc<dyn EmbeddingStore>> = (0..*n)
+                .map(|_| {
+                    Arc::new(EmbeddingServer::new(2, hidden, NetConfig::default()))
+                        as Arc<dyn EmbeddingStore>
+                })
+                .collect();
+            let store = ShardedStore::with_map(backends.clone(), map_a.clone())
+                .map_err(|e| format!("with_map: {e:#}"))?;
+            let row = |id: u32, l: usize| -> Vec<f32> {
+                (0..hidden).map(|j| id as f32 * 7.0 + l as f32 + j as f32 * 0.5).collect()
+            };
+            let per_layer: Vec<Vec<f32>> = (0..2)
+                .map(|l| ids.iter().flat_map(|&id| row(id, l)).collect())
+                .collect();
+            store.push(ids, &per_layer).map_err(|e| format!("push: {e:#}"))?;
+            let before = store.stats().map_err(|e| format!("stats: {e:#}"))?;
+
+            let report = store
+                .rebalance(map_b.clone())
+                .map_err(|e| format!("rebalance: {e:#}"))?;
+            let after = store.stats().map_err(|e| format!("stats: {e:#}"))?;
+
+            // no row lost, no row double-counted
+            prop_assert_eq!(before.nodes, after.nodes);
+            prop_assert_eq!(before.rows, after.rows);
+            prop_assert_eq!(after.epoch, 1);
+
+            // the report covers exactly the buckets whose owner set
+            // changed, and copies exactly occupancy × added-owners rows
+            let changed = map_a.changed_buckets(map_b);
+            prop_assert_eq!(report.buckets_changed, changed.len());
+            let mut expected_copied = 0usize;
+            for &b in &changed {
+                let occupancy = ids.iter().filter(|&&id| map_a.bucket_of(id) == b).count();
+                let added = map_b
+                    .owners_of_bucket(b)
+                    .iter()
+                    .filter(|o| !map_a.owners_of_bucket(b).contains(o))
+                    .count();
+                expected_copied += occupancy * added;
+            }
+            prop_assert_eq!(report.rows_copied, expected_copied);
+
+            // a bucket is in the changed set iff its owner set differs
+            for &id in ids.iter() {
+                let a_owners = map_a.owners_of(id);
+                let b_owners = map_b.owners_of(id);
+                let set_changed = !(a_owners.len() == b_owners.len()
+                    && a_owners.iter().all(|o| b_owners.contains(o)));
+                prop_assert_eq!(changed.contains(&map_a.bucket_of(id)), set_changed);
+            }
+
+            // every row is now readable through the router AND resident
+            // on every owner of the new map, with its original values
+            for &id in ids.iter() {
+                let (got, _) = store.pull(&[id], false).map_err(|e| format!("pull: {e:#}"))?;
+                prop_assert!(got[0] == row(id, 0), "router lost row {id}");
+                for &owner in map_b.owners_of(id) {
+                    let (copy, _) = backends[owner as usize]
+                        .pull(&[id], false)
+                        .map_err(|e| format!("backend pull: {e:#}"))?;
+                    prop_assert!(
+                        copy[0] == row(id, 0) && copy[1] == row(id, 1),
+                        "row {id} missing or stale on new owner {owner}"
+                    );
+                }
             }
             Ok(())
         },

@@ -1,0 +1,379 @@
+//! Deterministic chaos suite for the replicated embedding plane
+//! (DESIGN.md §10): a federated session must ride out injected store
+//! failures — single RPC errors, latency spikes, and a *full shard
+//! blackout mid-training* — with an accuracy curve that is bit-identical
+//! to the fault-free run, as long as the shard map keeps at least one
+//! replica (`--shards 4 --replicas 1`). Without replicas the run must
+//! fail loudly, never corrupt silently.
+//!
+//! Every scenario here forces the async pipeline both off and on
+//! explicitly (`SessionConfig.pipeline`), independent of the
+//! environment. The CI `OPTIMES_PIPELINE=on|off` matrix re-runs this
+//! file alongside `store_parity` — the latter is what actually reads
+//! the env default — so the matrix legs differ through that suite, not
+//! this one. Sessions use sequential clients, which is what makes
+//! curves comparable bit-for-bit (the same guarantee
+//! `tests/store_parity.rs` leans on).
+//!
+//! Also here: the rebalance-away/rejoin protocol under training load,
+//! snapshot-based shard restart, and the interleaved
+//! push/pull/rebalance hammer (the sharded/replicated sibling of
+//! `embedding_server.rs`'s slab hammer).
+
+use std::sync::Arc;
+
+use optimes::coordinator::{
+    EmbeddingStore, Fault, FaultHandle, FaultStore, NetConfig, SessionBuilder, SessionConfig,
+    SessionMetrics, ShardMap, ShardedStore, SnapshotStore, Strategy,
+};
+use optimes::graph::datasets::tiny;
+use optimes::runtime::{ModelGeom, ModelKind, RefEngine, StepEngine};
+
+const HIDDEN: usize = 16;
+const N_LAYERS: usize = 2; // layers - 1
+const SHARDS: usize = 4;
+const ROUNDS: usize = 6;
+
+fn ref_engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: HIDDEN,
+        classes: 4,
+        batch: 8,
+        fanout: 3,
+        push_batch: 8,
+    }))
+}
+
+fn cfg(pipeline: bool) -> SessionConfig {
+    SessionConfig {
+        strategy: Strategy::e(),
+        rounds: ROUNDS,
+        epochs: 2,
+        epoch_batches: 4,
+        eval_batches: 4,
+        // sequential clients: deterministic push/pull order makes the
+        // accuracy curves comparable bit-for-bit across runs
+        parallel_clients: false,
+        pipeline,
+        ..Default::default()
+    }
+}
+
+/// In-process slab backends plus a FaultStore wrapper per shard, with
+/// the handles to script failures mid-run.
+fn faulted_backends(shards: usize) -> (Vec<Arc<dyn EmbeddingStore>>, Vec<FaultHandle>) {
+    let mut backends: Vec<Arc<dyn EmbeddingStore>> = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..shards {
+        let inner: Arc<dyn EmbeddingStore> = Arc::new(
+            optimes::coordinator::EmbeddingServer::new(N_LAYERS, HIDDEN, NetConfig::default()),
+        );
+        let faulted = FaultStore::new(inner, format!("shard{i}"), Vec::new());
+        handles.push(faulted.handle());
+        backends.push(Arc::new(faulted));
+    }
+    (backends, handles)
+}
+
+/// Run a full session against `store` on `tiny(seed)`, invoking `at_round`
+/// with the round index before each round runs (the chaos hook).
+fn run_with_hook(
+    store: Arc<dyn EmbeddingStore>,
+    pipeline: bool,
+    seed: u64,
+    mut at_round: impl FnMut(usize),
+) -> SessionMetrics {
+    let g = tiny(seed);
+    let mut session = SessionBuilder::new(cfg(pipeline))
+        .store(store)
+        .build(&g, ref_engine())
+        .unwrap();
+    session.pretrain().unwrap();
+    while session.completed_rounds() < session.planned_rounds() {
+        at_round(session.completed_rounds());
+        session.run_round().unwrap();
+    }
+    session.finish()
+}
+
+/// Fault-free baseline on a replicated store.
+fn baseline(pipeline: bool, seed: u64) -> SessionMetrics {
+    let store =
+        ShardedStore::in_process_replicated(SHARDS, 1, N_LAYERS, HIDDEN, NetConfig::default())
+            .unwrap();
+    run_with_hook(Arc::new(store), pipeline, seed, |_| {})
+}
+
+fn assert_same_curve(a: &SessionMetrics, b: &SessionMetrics) {
+    assert_eq!(
+        a.accuracies(),
+        b.accuracies(),
+        "accuracy curves diverged under injected faults"
+    );
+    let va: Vec<f64> = a.rounds.iter().map(|r| r.val_loss).collect();
+    let vb: Vec<f64> = b.rounds.iter().map(|r| r.val_loss).collect();
+    assert_eq!(va, vb, "validation losses diverged under injected faults");
+    assert_eq!(a.server_embeddings, b.server_embeddings);
+}
+
+// ---------------------------------------------------------------------------
+// the acceptance criterion: full shard blackout mid-training, R = 1
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_blackout_mid_training_matches_fault_free_curve() {
+    const SEED: u64 = 311;
+    const KILL_SHARD: usize = 1;
+    const KILL_AT_ROUND: usize = 2;
+    for pipeline in [false, true] {
+        let base = baseline(pipeline, SEED);
+        assert_eq!(base.total_failovers(), 0);
+
+        let (backends, handles) = faulted_backends(SHARDS);
+        let store = ShardedStore::replicated(backends, 1).unwrap();
+        let chaos = run_with_hook(Arc::new(store), pipeline, SEED, |round| {
+            if round == KILL_AT_ROUND {
+                handles[KILL_SHARD].set_blackout(true);
+            }
+        });
+
+        // the run completed all rounds with a bit-identical curve...
+        assert_eq!(chaos.rounds.len(), ROUNDS);
+        assert_same_curve(&base, &chaos);
+        // ...while genuinely absorbing failures on the dead shard
+        assert!(
+            chaos.total_failovers() > 0,
+            "pipeline={pipeline}: blackout absorbed no failovers"
+        );
+        assert!(handles[KILL_SHARD].injected() > 0, "blackout never fired");
+        // failovers only start once the shard dies
+        assert_eq!(chaos.rounds[KILL_AT_ROUND - 1].failovers, 0);
+        assert!(chaos.rounds[ROUNDS - 1].failovers >= chaos.rounds[KILL_AT_ROUND].failovers);
+    }
+}
+
+#[test]
+fn single_rpc_error_is_invisible_with_replicas() {
+    const SEED: u64 = 313;
+    for pipeline in [false, true] {
+        let base = baseline(pipeline, SEED);
+        let (backends, handles) = faulted_backends(SHARDS);
+        handles[2].add_fault(Fault::ErrOn(3));
+        handles[0].add_fault(Fault::ErrEvery(7));
+        let store = ShardedStore::replicated(backends, 1).unwrap();
+        let chaos = run_with_hook(Arc::new(store), pipeline, SEED, |_| {});
+        assert_same_curve(&base, &chaos);
+        assert!(chaos.total_failovers() > 0);
+    }
+}
+
+#[test]
+fn latency_spikes_change_wall_time_not_values() {
+    const SEED: u64 = 317;
+    for pipeline in [false, true] {
+        let base = baseline(pipeline, SEED);
+        let (backends, handles) = faulted_backends(SHARDS);
+        for h in &handles {
+            h.add_fault(Fault::DelayEvery { every: 3, secs: 0.002 });
+        }
+        let store = ShardedStore::replicated(backends, 1).unwrap();
+        let chaos = run_with_hook(Arc::new(store), pipeline, SEED, |_| {});
+        assert_same_curve(&base, &chaos);
+        // delays are not failures
+        assert_eq!(chaos.total_failovers(), 0);
+    }
+}
+
+#[test]
+fn blackout_without_replicas_fails_loudly_not_silently() {
+    // R = 0: a dead shard has nowhere to fail over to. The session must
+    // surface the injected error instead of training on zeros.
+    let (backends, handles) = faulted_backends(SHARDS);
+    handles[1].set_blackout(true);
+    let store = ShardedStore::new(backends).unwrap();
+    let g = tiny(331);
+    let err = SessionBuilder::new(cfg(false))
+        .store(Arc::new(store))
+        .build(&g, ref_engine())
+        .unwrap()
+        .run()
+        .err()
+        .expect("R=0 blackout must fail the run");
+    let chain = format!("{err:#}");
+    assert!(chain.contains("injected fault"), "unexpected error chain: {chain}");
+}
+
+// ---------------------------------------------------------------------------
+// rebalance under load: route around a dead shard, then re-admit it
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rebalance_away_and_rejoin_preserves_curve() {
+    const SEED: u64 = 337;
+    const DEAD: usize = 2;
+    for pipeline in [false, true] {
+        let base = baseline(pipeline, SEED);
+
+        let (backends, handles) = faulted_backends(SHARDS);
+        let sharded = Arc::new(ShardedStore::replicated(backends, 1).unwrap());
+        let router = Arc::clone(&sharded);
+        let chaos = run_with_hook(sharded, pipeline, SEED, |round| {
+            if round == 2 {
+                // shard DEAD dies; route every bucket away from it (the
+                // migration itself must fail over around the corpse)
+                handles[DEAD].set_blackout(true);
+                let away = router.map().excluding(DEAD).unwrap();
+                let report = router.rebalance(away).unwrap();
+                assert_eq!(report.epoch, 1);
+                assert!(report.buckets_changed > 0);
+                assert!(report.rows_copied > 0, "mid-training store had rows to move");
+            }
+            if round == 4 {
+                // the shard restarts (its slab intact but stale); the
+                // rejoin rebalance recopies every bucket it re-owns
+                handles[DEAD].set_blackout(false);
+                let back = ShardMap::uniform(SHARDS, 1).unwrap();
+                let report = router.rebalance(back).unwrap();
+                assert_eq!(report.epoch, 2);
+                assert!(report.rows_copied > 0);
+            }
+        });
+
+        assert_same_curve(&base, &chaos);
+        assert_eq!(chaos.store_epoch, 2, "session never saw the final epoch");
+        // after the rejoin the plane is whole again: the last rounds'
+        // reads go to the re-admitted primary without failing over
+        let last_round_failovers =
+            chaos.rounds[ROUNDS - 1].failovers - chaos.rounds[ROUNDS - 2].failovers;
+        assert_eq!(last_round_failovers, 0, "rejoined shard still failing over");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot-based shard restart
+// ---------------------------------------------------------------------------
+
+#[test]
+fn restarted_shard_rejoins_warm_from_snapshot() {
+    // shard 3 runs behind a SnapshotStore; after "crashing", a fresh
+    // slab is rebuilt from its dump and serves bit-identical rows.
+    let mk_slab = || -> Arc<dyn EmbeddingStore> {
+        Arc::new(optimes::coordinator::EmbeddingServer::new(N_LAYERS, HIDDEN, NetConfig::default()))
+    };
+    let snap = Arc::new(SnapshotStore::new(mk_slab()));
+    let mut backends: Vec<Arc<dyn EmbeddingStore>> = (0..SHARDS - 1).map(|_| mk_slab()).collect();
+    backends.push(Arc::clone(&snap) as Arc<dyn EmbeddingStore>);
+    let store = ShardedStore::replicated(backends, 1).unwrap();
+
+    let nodes: Vec<u32> = (0..300).collect();
+    let layer: Vec<f32> = nodes
+        .iter()
+        .flat_map(|&n| (0..HIDDEN).map(move |j| n as f32 + j as f32 * 0.125))
+        .collect();
+    store.push(&nodes, &[layer.clone(), layer.clone()]).unwrap();
+    assert!(snap.shadow_nodes() > 0, "shard 3 owned nothing");
+
+    // crash: dump the shadow, restore into a brand-new empty slab
+    let mut bytes = Vec::new();
+    let dumped = snap.dump(&mut bytes).unwrap();
+    assert_eq!(dumped, snap.shadow_nodes());
+    let restarted = SnapshotStore::restore(&mut &bytes[..], mk_slab()).unwrap();
+    assert_eq!(restarted.shadow_nodes(), dumped);
+
+    // the restarted shard serves exactly what the original served
+    let shard3_nodes: Vec<u32> = nodes
+        .iter()
+        .copied()
+        .filter(|&n| store.map().owners_of(n).contains(&((SHARDS - 1) as u32)))
+        .collect();
+    assert!(!shard3_nodes.is_empty());
+    let (a, _) = snap.pull(&shard3_nodes, false).unwrap();
+    let (b, _) = restarted.pull(&shard3_nodes, false).unwrap();
+    assert_eq!(a, b, "restored shard diverged from the original");
+}
+
+// ---------------------------------------------------------------------------
+// soak: interleaved push/pull/rebalance hammer on a 4-shard R=1 store
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replicated_store_survives_push_pull_rebalance_hammer() {
+    // Writers race on a SHARED node set with per-writer uniform rows;
+    // readers assert every pulled row is internally consistent (all
+    // `hidden` lanes agree — never torn, never lost) while a rebalancer
+    // keeps migrating buckets between two maps under their feet. This is
+    // the sharded/replicated sibling of the slab hammer in
+    // `embedding_server.rs`.
+    let h = 8;
+    let store = Arc::new(
+        ShardedStore::in_process_replicated(4, 1, 2, h, NetConfig::default()).unwrap(),
+    );
+    let nodes: Vec<u32> = (0..128).collect();
+    // seed every row so readers never observe a not-yet-pushed zero row
+    let seed_layer: Vec<f32> = vec![0.5; nodes.len() * h];
+    store.push(&nodes, &[seed_layer.clone(), seed_layer]).unwrap();
+
+    let mut handles = Vec::new();
+    for w in 0..4u32 {
+        let store = Arc::clone(&store);
+        let nodes = nodes.clone();
+        handles.push(std::thread::spawn(move || {
+            for iter in 0..25 {
+                let v = (w * 1000 + iter + 1) as f32;
+                let layer: Vec<f32> = vec![v; nodes.len() * h];
+                store.push(&nodes, &[layer.clone(), layer]).unwrap();
+            }
+        }));
+    }
+    for _ in 0..3 {
+        let store = Arc::clone(&store);
+        let nodes = nodes.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            for _ in 0..50 {
+                store.pull_into(&nodes, false, &mut buf).unwrap();
+                for layer in &buf {
+                    for row in layer.chunks_exact(h) {
+                        assert!(
+                            row.iter().all(|&x| x == row[0]),
+                            "torn row under rebalance: {row:?}"
+                        );
+                        assert!(row[0] != 0.0, "row lost under rebalance");
+                    }
+                }
+            }
+        }));
+    }
+    {
+        let store = Arc::clone(&store);
+        handles.push(std::thread::spawn(move || {
+            let uniform = ShardMap::uniform(4, 1).unwrap();
+            let rotated = uniform.excluding(3).unwrap();
+            for i in 0..8 {
+                let map = if i % 2 == 0 { rotated.clone() } else { uniform.clone() };
+                store.rebalance(map).unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }));
+    }
+    for t in handles {
+        t.join().unwrap();
+    }
+
+    let st = store.stats().unwrap();
+    assert_eq!((st.nodes, st.rows), (128, 256));
+    assert_eq!(st.epoch, 8);
+    assert_eq!(st.failovers, 0, "fault-free hammer must not fail over");
+    // final state: every row readable, uniform, and on the uniform map
+    // again after the even number of flips
+    assert_eq!(store.map().replicas(), 1);
+    let (rows, _) = store.pull(&nodes, false).unwrap();
+    for layer in &rows {
+        for row in layer.chunks_exact(h) {
+            assert!(row.iter().all(|&x| x == row[0]) && row[0] != 0.0);
+        }
+    }
+}

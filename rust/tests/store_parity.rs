@@ -4,9 +4,11 @@
 //! same accuracy curve no matter which [`EmbeddingStore`] backend carries
 //! the embeddings — in-process slab, `TcpEmbeddingStore` against an
 //! in-test daemon, `TcpEmbeddingStore` against a *spawned* `optimes
-//! serve` process, and a 4-way `ShardedStore` — and no matter whether
-//! the asynchronous pipeline is on or off (`--pipeline`, DESIGN.md §9):
-//! overlap may change wall time, never results.
+//! serve` process, a 4-way `ShardedStore`, and a replicated (R=1)
+//! 4-way `ShardedStore` — and no matter whether the asynchronous
+//! pipeline is on or off (`--pipeline`, DESIGN.md §9): overlap may
+//! change wall time, never results. (Fault-injected runs have their own
+//! suite, `tests/fault_tolerance.rs`.)
 
 use std::sync::Arc;
 
@@ -118,10 +120,12 @@ fn wire_empty_push_pull_stats() {
     assert_eq!(rec.rows, 0);
     assert_eq!(got.len(), N_LAYERS);
     assert!(got.iter().all(|l| l.is_empty()));
-    assert_eq!(c.stats().unwrap(), (0, 0));
+    let s = c.stats().unwrap();
+    assert_eq!((s.nodes, s.rows), (0, 0));
     // and the connection still serves real traffic afterwards
     c.push(&[7], &[vec![1.0; 4], vec![2.0; 4]]).unwrap();
-    assert_eq!(c.stats().unwrap(), (1, 2));
+    let s = c.stats().unwrap();
+    assert_eq!((s.nodes, s.rows, s.failovers, s.epoch), (1, 2, 0, 0));
     d.shutdown();
 }
 
@@ -167,6 +171,24 @@ fn sharded_store_session_matches_in_process() {
     let over_shards = run_with(Some(Arc::new(sharded)), Strategy::opp(), 4, 113);
     assert_same_curve(&in_proc, &over_shards);
     assert!(over_shards.store_backend.starts_with("sharded(4 shards"));
+}
+
+#[test]
+fn replicated_store_session_matches_in_process() {
+    // R=1: every row lives on two backends; replication must be
+    // invisible to the training loop (values, occupancy, curve)
+    let replicated =
+        ShardedStore::in_process_replicated(4, 1, N_LAYERS, HIDDEN, NetConfig::default()).unwrap();
+    let in_proc = run_with(None, Strategy::opp(), 4, 123);
+    let over_replicas = run_with(Some(Arc::new(replicated)), Strategy::opp(), 4, 123);
+    assert_same_curve(&in_proc, &over_replicas);
+    assert!(
+        over_replicas.store_backend.contains("1 replica"),
+        "{}",
+        over_replicas.store_backend
+    );
+    // a fault-free replicated run absorbs no failovers
+    assert_eq!(over_replicas.total_failovers(), 0);
 }
 
 #[test]
@@ -295,6 +317,20 @@ fn pipeline_parity_4shard() {
     };
     let off = run_with_pipeline(Some(mk()), Strategy::opp(), 4, 217, false);
     let on = run_with_pipeline(Some(mk()), Strategy::opp(), 4, 217, true);
+    assert_same_curve(&off, &on);
+    assert!(on.overlap_stats().pipelined);
+}
+
+#[test]
+fn pipeline_parity_replicated_4shard() {
+    let mk = || -> Arc<dyn EmbeddingStore> {
+        Arc::new(
+            ShardedStore::in_process_replicated(4, 1, N_LAYERS, HIDDEN, NetConfig::default())
+                .unwrap(),
+        )
+    };
+    let off = run_with_pipeline(Some(mk()), Strategy::opp(), 4, 223, false);
+    let on = run_with_pipeline(Some(mk()), Strategy::opp(), 4, 223, true);
     assert_same_curve(&off, &on);
     assert!(on.overlap_stats().pipelined);
 }
