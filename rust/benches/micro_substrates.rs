@@ -210,6 +210,33 @@ fn main() {
         let _ = tcp.pull_into(&nodes, false, &mut pull_buf).unwrap();
     });
 
+    // ---- wire codecs: encode/decode throughput + bytes ratio -----------
+    // (DESIGN.md §11; lands as the `wire` section of BENCH_micro.json)
+    let mut wire_res = Results {
+        entries: Vec::new(),
+        quick,
+    };
+    let whidden = 32usize;
+    let wrows_n = 4096usize;
+    let mut wrng = Rng::new(0x51BE, 1);
+    let wrows: Vec<f32> = (0..wrows_n * whidden).map(|_| wrng.normal() as f32).collect();
+    let raw_payload = (wrows_n * whidden * 4) as f64;
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+    for spec in ["raw", "f16", "bf16", "int8", "topk:8"] {
+        let codec = optimes::wire::CodecKind::parse(spec).expect("bench codec").build();
+        let mut enc = Vec::new();
+        wire_res.bench(&format!("wire: encode {spec} 4096x32"), 20, || {
+            codec.encode_rows(&wrows, whidden, &mut enc);
+        });
+        let mut dec = Vec::new();
+        wire_res.bench(&format!("wire: decode {spec} 4096x32"), 20, || {
+            codec.decode_rows(&enc, wrows_n, whidden, &mut dec).unwrap();
+        });
+        let ratio = raw_payload / enc.len() as f64;
+        println!("wire: {spec:<8} {} B encoded, {ratio:.2}x vs raw", enc.len());
+        ratios.push((format!("bytes_ratio_{}", spec.replace(':', "_")), ratio));
+    }
+
     // engine step latency (the L1/L2 hot path through PJRT or Ref)
     let batch = assemble_batch(&blocks, sub, &cache, &g, &adj, true);
     let mut state = ModelState::init(&geom, 3);
@@ -245,5 +272,7 @@ fn main() {
             ("assemble_speedup_scratch_vs_alloc", alloc_asm / scratch_asm.max(1e-12)),
         ]),
     );
+    let ratio_refs: Vec<(&str, f64)> = ratios.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    harness::record_bench_section("wire", wire_res.to_json(&ratio_refs));
     println!("\n[micro_substrates] done in {:.1}s", t0.elapsed().as_secs_f64());
 }

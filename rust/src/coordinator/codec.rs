@@ -88,6 +88,24 @@ pub fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// Hard ceiling on raw byte payload lengths declared on the wire
+/// (matches [`MAX_WIRE_ELEMS`] f32s).
+pub const MAX_WIRE_BYTES: usize = MAX_WIRE_ELEMS * 4;
+
+/// Read exactly `n` raw bytes into `out` (cleared first, capacity
+/// reused). Used for codec-encoded row payloads, whose length both
+/// sides derive from the row count and the negotiated codec's
+/// `bytes_per_row` (DESIGN.md §11).
+pub fn read_bytes_into(r: &mut impl Read, n: usize, out: &mut Vec<u8>) -> Result<()> {
+    if n > MAX_WIRE_BYTES {
+        bail!("absurd byte payload length {n}");
+    }
+    out.clear();
+    out.resize(n, 0);
+    r.read_exact(out).context("read byte payload")?;
+    Ok(())
+}
+
 /// Write a u32 slice as packed LE values (no length prefix — callers
 /// frame with [`write_u32`]).
 pub fn write_u32s(w: &mut impl Write, data: &[u32]) -> Result<()> {
@@ -183,6 +201,18 @@ mod tests {
         assert!(read_u32s(&mut &empty[..], MAX_WIRE_ELEMS + 1).is_err());
         let mut out = Vec::new();
         assert!(read_f32s_into(&mut &empty[..], MAX_WIRE_ELEMS + 1, &mut out).is_err());
+        let mut bytes = Vec::new();
+        assert!(read_bytes_into(&mut &empty[..], MAX_WIRE_BYTES + 1, &mut bytes).is_err());
+    }
+
+    #[test]
+    fn byte_payload_roundtrip_reuses_buffer() {
+        let data: Vec<u8> = (0..=255).collect();
+        let mut out = vec![7u8; 9]; // dirty, wrongly sized
+        read_bytes_into(&mut &data[..], 256, &mut out).unwrap();
+        assert_eq!(out, data);
+        // truncated stream errors
+        assert!(read_bytes_into(&mut &data[..10], 11, &mut out).is_err());
     }
 
     #[test]

@@ -105,6 +105,11 @@ pub struct EmbeddingServer {
     pub net: NetConfig,
     pulls: AtomicUsize,
     pushes: AtomicUsize,
+    /// Embedding-payload bytes received by pushes / served by pulls
+    /// (raw f32 — this backend is the uncompressed plane; a codec layer
+    /// wrapping it overrides these meters at the wire boundary).
+    bytes_tx: AtomicUsize,
+    bytes_rx: AtomicUsize,
 }
 
 impl EmbeddingServer {
@@ -116,6 +121,8 @@ impl EmbeddingServer {
             net,
             pulls: AtomicUsize::new(0),
             pushes: AtomicUsize::new(0),
+            bytes_tx: AtomicUsize::new(0),
+            bytes_rx: AtomicUsize::new(0),
         }
     }
 
@@ -145,6 +152,8 @@ impl EmbeddingServer {
             }
         });
         self.pushes.fetch_add(1, Ordering::Relaxed);
+        self.bytes_tx
+            .fetch_add(nodes.len() * self.layers.len() * h * 4, Ordering::Relaxed);
         let bytes = self.net.emb_bytes(nodes.len(), self.layers.len(), h);
         RpcRecord {
             kind: RpcKind::Push,
@@ -185,6 +194,7 @@ impl EmbeddingServer {
             }
         });
         self.pulls.fetch_add(1, Ordering::Relaxed);
+        self.bytes_rx.fetch_add(nodes.len() * n_layers * h * 4, Ordering::Relaxed);
         let bytes = self.net.emb_bytes(nodes.len(), n_layers, h);
         RpcRecord {
             kind: if on_demand {
@@ -254,9 +264,16 @@ impl EmbeddingStore for EmbeddingServer {
     }
 
     fn stats(&self) -> anyhow::Result<StoreStats> {
+        let tx = self.bytes_tx.load(Ordering::Relaxed);
+        let rx = self.bytes_rx.load(Ordering::Relaxed);
         Ok(StoreStats {
             nodes: self.stored_nodes(),
             rows: self.stored_rows(),
+            // the uncompressed plane: encoded == raw
+            bytes_tx: tx,
+            bytes_rx: rx,
+            raw_tx: tx,
+            raw_rx: rx,
             ..Default::default()
         })
     }

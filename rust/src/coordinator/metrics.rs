@@ -96,6 +96,12 @@ pub struct OverlapMetrics {
     /// Measured work that truly ran under training/aggregation:
     /// `max(0, push_wall − push_wait) + max(0, pull_wall − pull_wait)`.
     pub overlap_saved: f64,
+    /// Encoded wire bytes the consumed push tickets carried
+    /// (`PushDone::rec.bytes` — metered under the active codec, so the
+    /// pipeline's traffic responds to `--wire-codec`; DESIGN.md §11).
+    pub push_bytes: usize,
+    /// Encoded wire bytes the consumed prefetch tickets carried.
+    pub pull_bytes: usize,
     /// Peak async-queue depth observed on the session's store handle.
     pub queue_peak: usize,
     /// Newest routing epoch observed at the issue of any consumed
@@ -116,6 +122,8 @@ impl OverlapMetrics {
         self.pull_wall += o.pull_wall;
         self.pull_wait += o.pull_wait;
         self.overlap_saved += o.overlap_saved;
+        self.push_bytes += o.push_bytes;
+        self.pull_bytes += o.pull_bytes;
         self.queue_peak = self.queue_peak.max(o.queue_peak);
         self.store_epoch = self.store_epoch.max(o.store_epoch);
     }
@@ -130,6 +138,8 @@ impl OverlapMetrics {
             .set("pull_wall", self.pull_wall)
             .set("pull_wait", self.pull_wait)
             .set("overlap_saved", self.overlap_saved)
+            .set("push_bytes", self.push_bytes)
+            .set("pull_bytes", self.pull_bytes)
             .set("queue_peak", self.queue_peak)
             .set("store_epoch", self.store_epoch);
         o
@@ -172,6 +182,12 @@ pub struct RoundMetrics {
     /// failovers and tolerated partial pushes absorbed by the embedding
     /// plane without corrupting the round.
     pub failovers: usize,
+    /// Cumulative encoded embedding-payload bytes pushed through the
+    /// wire by round end ([`StoreStats::bytes_tx`](super::store::StoreStats)
+    /// — metered under the active codec; DESIGN.md §11).
+    pub bytes_tx: usize,
+    /// Cumulative encoded embedding-payload bytes pulled by round end.
+    pub bytes_rx: usize,
 }
 
 /// Full session trace + derived paper metrics.
@@ -185,9 +201,18 @@ pub struct SessionMetrics {
     /// Whether the session ran with the asynchronous store pipeline
     /// (`--pipeline on`, DESIGN.md §9).
     pub pipelined: bool,
+    /// Wire codec the embedding plane ran under (`raw` unless
+    /// `--wire-codec` selected a compression plane; DESIGN.md §11).
+    pub wire_codec: String,
     /// Last routing epoch the store reported (0 until a
     /// mid-session rebalance bumps it; DESIGN.md §10).
     pub store_epoch: u64,
+    /// Raw-f32 equivalent of the session's push traffic (including
+    /// delta-elided rows) — the denominator-free half of the
+    /// compression ratio; see [`wire_ratio`](SessionMetrics::wire_ratio).
+    pub bytes_raw_tx: usize,
+    /// Raw-f32 equivalent of the pull traffic.
+    pub bytes_raw_rx: usize,
     pub rounds: Vec<RoundMetrics>,
     /// Embeddings resident at the server after the first full round.
     pub server_embeddings: usize,
@@ -264,6 +289,35 @@ impl SessionMetrics {
         self.rounds.last().map(|r| r.failovers).unwrap_or(0)
     }
 
+    /// Encoded embedding-payload bytes the session pushed over the wire
+    /// (the per-round counter is cumulative; last round's value).
+    pub fn total_bytes_tx(&self) -> usize {
+        self.rounds.last().map(|r| r.bytes_tx).unwrap_or(0)
+    }
+
+    /// Encoded embedding-payload bytes the session pulled.
+    pub fn total_bytes_rx(&self) -> usize {
+        self.rounds.last().map(|r| r.bytes_rx).unwrap_or(0)
+    }
+
+    /// Compression ratio vs raw f32 across both directions
+    /// (`raw / encoded`; 1.0 for an idle plane, > 1 when a codec or
+    /// delta layer saved bytes). Always finite — a plane whose delta
+    /// layer elided everything is priced against a one-byte floor, the
+    /// same convention as
+    /// [`StoreStats::compression_ratio`](super::store::StoreStats::compression_ratio),
+    /// so the JSON report never degrades an infinite ratio into a
+    /// misleading sentinel.
+    pub fn wire_ratio(&self) -> f64 {
+        let enc = self.total_bytes_tx() + self.total_bytes_rx();
+        let raw = self.bytes_raw_tx + self.bytes_raw_rx;
+        if raw == 0 && enc == 0 {
+            1.0
+        } else {
+            raw as f64 / enc.max(1) as f64
+        }
+    }
+
     /// Aggregate *measured* pipeline overlap across every client round
     /// (all-zero when the session ran `--pipeline off`). Wall/wait
     /// fields are summed; `queue_peak` is the maximum observed.
@@ -335,6 +389,14 @@ impl SessionMetrics {
         o.set("pipelined", self.pipelined);
         o.set("store_epoch", self.store_epoch);
         o.set("failovers", self.total_failovers());
+        // the wire-compression plane (DESIGN.md §11), next to the
+        // resilience health it composes with
+        o.set("wire_codec", self.wire_codec.as_str());
+        o.set("bytes_tx", self.total_bytes_tx());
+        o.set("bytes_rx", self.total_bytes_rx());
+        o.set("bytes_raw_tx", self.bytes_raw_tx);
+        o.set("bytes_raw_rx", self.bytes_raw_rx);
+        o.set("wire_ratio", self.wire_ratio());
         o.set("overlap", self.overlap_stats().to_json());
         Json::Obj(o)
     }

@@ -8,13 +8,26 @@
 //! ```text
 //! request  := op:u8 payload
 //!   op=1 PULL  payload := n:u32 node_id*n
-//!   op=2 PUSH  payload := n:u32 node_id*n layers:u32 (row:f32*hidden)*n per layer
+//!   op=2 PUSH  payload := n:u32 node_id*n layers:u32 (row-payload)*layers
 //!   op=3 STATS payload := (empty)
+//!   op=4 CODEC payload := len:u32 name:utf8*len      (wire-codec handshake)
 //! response := status:u8 payload          (status 0 = ok)
-//!   PULL  -> layers:u32 hidden:u32 (row:f32*hidden)*n per layer
+//!   PULL  -> layers:u32 hidden:u32 (row-payload)*layers
 //!   PUSH  -> (empty)
 //!   STATS -> stored_nodes:u64 stored_rows:u64 failovers:u64 epoch:u64
+//!            bytes_tx:u64 bytes_rx:u64 raw_tx:u64 raw_rx:u64
+//!   CODEC -> (empty)
 //! ```
+//!
+//! A `row-payload` is `n` rows encoded under the **connection codec** —
+//! exactly `n * bytes_per_row` bytes, so no extra framing is needed.
+//! Every connection starts on the raw-f32 codec (byte-compatible with
+//! the pre-codec protocol); a CODEC handshake switches all subsequent
+//! frames on that connection to the named [`RowCodec`] (DESIGN.md §11).
+//! The server decodes pushes before storing (it always holds densified
+//! f32 rows) and encodes pull responses on the way out, so lossy codecs
+//! shape values identically to the in-process
+//! [`CodecStore`](crate::wire::CodecStore) round-trip.
 //!
 //! All transfers are *batched* — one frame per pull/push phase, mirroring
 //! the Redis pipelining the paper uses to amortize RPC overheads (§5.1).
@@ -35,10 +48,15 @@ use anyhow::{bail, Context, Result};
 use super::codec;
 use super::metrics::{RpcKind, RpcRecord};
 use super::store::{EmbeddingStore, StoreStats};
+use crate::wire::{CodecKind, RowCodec};
 
 const OP_PULL: u8 = 1;
 const OP_PUSH: u8 = 2;
 const OP_STATS: u8 = 3;
+const OP_CODEC: u8 = 4;
+
+/// Longest codec name a CODEC handshake may declare.
+const MAX_CODEC_NAME: usize = 64;
 
 fn read_ids(r: &mut impl Read) -> Result<Vec<u32>> {
     let n = codec::read_u32(r)? as usize;
@@ -125,6 +143,10 @@ fn serve_conn(
     let mut w = std::io::BufWriter::new(stream.try_clone()?);
     // per-connection pull buffer: steady-state pulls allocate nothing
     let mut pull_buf: Vec<Vec<f32>> = Vec::new();
+    // connection wire codec (raw until a CODEC handshake switches it)
+    // plus reusable encode/decode scratch
+    let mut wire_codec: Arc<dyn RowCodec> = CodecKind::Raw.build();
+    let mut enc_buf: Vec<u8> = Vec::new();
     loop {
         let mut op = [0u8; 1];
         match r.read_exact(&mut op) {
@@ -153,8 +175,15 @@ fn serve_conn(
                 w.write_all(&[0u8])?;
                 codec::write_u32(&mut w, pull_buf.len() as u32)?;
                 codec::write_u32(&mut w, store.hidden() as u32)?;
-                for rows in &pull_buf {
-                    codec::write_f32s(&mut w, rows)?;
+                if wire_codec.is_identity() {
+                    for rows in &pull_buf {
+                        codec::write_f32s(&mut w, rows)?;
+                    }
+                } else {
+                    for rows in &pull_buf {
+                        wire_codec.encode_rows(rows, store.hidden(), &mut enc_buf);
+                        w.write_all(&enc_buf).context("write encoded pull payload")?;
+                    }
                 }
             }
             OP_PUSH => {
@@ -163,9 +192,21 @@ fn serve_conn(
                 if layers != store.n_layers() {
                     bail!("push layer count {layers} != {}", store.n_layers());
                 }
+                let h = store.hidden();
                 let mut per_layer = Vec::with_capacity(layers);
-                for _ in 0..layers {
-                    per_layer.push(codec::read_f32s(&mut r, nodes.len() * store.hidden())?);
+                if wire_codec.is_identity() {
+                    for _ in 0..layers {
+                        per_layer.push(codec::read_f32s(&mut r, nodes.len() * h)?);
+                    }
+                } else {
+                    // densify: the store always holds decoded f32 rows
+                    let bpr = wire_codec.bytes_per_row(h);
+                    for _ in 0..layers {
+                        codec::read_bytes_into(&mut r, nodes.len() * bpr, &mut enc_buf)?;
+                        let mut rows = Vec::new();
+                        wire_codec.decode_rows(&enc_buf, nodes.len(), h, &mut rows)?;
+                        per_layer.push(rows);
+                    }
                 }
                 store.push(&nodes, &per_layer)?;
                 w.write_all(&[0u8])?;
@@ -177,6 +218,23 @@ fn serve_conn(
                 codec::write_u64(&mut w, stats.rows as u64)?;
                 codec::write_u64(&mut w, stats.failovers as u64)?;
                 codec::write_u64(&mut w, stats.epoch)?;
+                codec::write_u64(&mut w, stats.bytes_tx as u64)?;
+                codec::write_u64(&mut w, stats.bytes_rx as u64)?;
+                codec::write_u64(&mut w, stats.raw_tx as u64)?;
+                codec::write_u64(&mut w, stats.raw_rx as u64)?;
+            }
+            OP_CODEC => {
+                let len = codec::read_u32(&mut r)? as usize;
+                if len > MAX_CODEC_NAME {
+                    bail!("absurd codec name length {len}");
+                }
+                let mut name = vec![0u8; len];
+                r.read_exact(&mut name).context("read codec name")?;
+                let name = std::str::from_utf8(&name).context("codec name utf8")?;
+                // a bad name drops the connection (the client surfaces
+                // the failed handshake at connect time, not mid-round)
+                wire_codec = CodecKind::parse(name)?.build();
+                w.write_all(&[0u8])?;
             }
             other => bail!("unknown op {other}"),
         }
@@ -195,18 +253,57 @@ pub struct RemoteEmbClient {
     w: std::io::BufWriter<TcpStream>,
     pub hidden: usize,
     pub n_layers: usize,
+    /// Connection wire codec (negotiated at connect; raw by default).
+    wire_codec: Arc<dyn RowCodec>,
+    /// Reusable encode/decode scratch for non-raw codecs.
+    enc_buf: Vec<u8>,
 }
 
 impl RemoteEmbClient {
     pub fn connect(addr: impl ToSocketAddrs, n_layers: usize, hidden: usize) -> Result<Self> {
+        Self::connect_with_codec(addr, n_layers, hidden, &CodecKind::Raw)
+    }
+
+    /// Connect and negotiate `kind` as this connection's wire codec
+    /// (the CODEC handshake is skipped for raw — byte-compatible with
+    /// pre-codec daemons).
+    pub fn connect_with_codec(
+        addr: impl ToSocketAddrs,
+        n_layers: usize,
+        hidden: usize,
+        kind: &CodecKind,
+    ) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect")?;
         stream.set_nodelay(true).ok();
-        Ok(Self {
+        let mut client = Self {
             r: std::io::BufReader::new(stream.try_clone()?),
             w: std::io::BufWriter::new(stream),
             hidden,
             n_layers,
-        })
+            wire_codec: kind.build(),
+            enc_buf: Vec::new(),
+        };
+        if !client.wire_codec.is_identity() {
+            client
+                .negotiate()
+                .with_context(|| format!("negotiating wire codec {}", kind.name()))?;
+        }
+        Ok(client)
+    }
+
+    /// Send the CODEC handshake for this connection's codec.
+    fn negotiate(&mut self) -> Result<()> {
+        let name = self.wire_codec.name();
+        self.w.write_all(&[OP_CODEC])?;
+        codec::write_u32(&mut self.w, name.len() as u32)?;
+        self.w.write_all(name.as_bytes())?;
+        self.w.flush()?;
+        self.check_status()
+    }
+
+    /// Encoded payload bytes per row under this connection's codec.
+    pub fn bytes_per_row(&self) -> usize {
+        self.wire_codec.bytes_per_row(self.hidden)
     }
 
     fn check_status(&mut self) -> Result<()> {
@@ -241,10 +338,18 @@ impl RemoteEmbClient {
         }
         out.truncate(layers);
         out.resize_with(layers, Vec::new);
-        for rows in out.iter_mut() {
-            codec::read_f32s_into(&mut self.r, nodes.len() * hidden, rows)?;
+        if self.wire_codec.is_identity() {
+            for rows in out.iter_mut() {
+                codec::read_f32s_into(&mut self.r, nodes.len() * hidden, rows)?;
+            }
+        } else {
+            let bpr = self.wire_codec.bytes_per_row(hidden);
+            for rows in out.iter_mut() {
+                codec::read_bytes_into(&mut self.r, nodes.len() * bpr, &mut self.enc_buf)?;
+                self.wire_codec.decode_rows(&self.enc_buf, nodes.len(), hidden, rows)?;
+            }
         }
-        let payload = nodes.len() * layers * (hidden * 4 + 4);
+        let payload = nodes.len() * layers * (self.bytes_per_row() + 4);
         Ok(RpcRecord {
             kind: if on_demand {
                 RpcKind::PullOnDemand
@@ -270,12 +375,19 @@ impl RemoteEmbClient {
         codec::write_u32(&mut self.w, nodes.len() as u32)?;
         codec::write_u32s(&mut self.w, nodes)?;
         codec::write_u32(&mut self.w, per_layer.len() as u32)?;
-        for rows in per_layer {
-            codec::write_f32s(&mut self.w, rows)?;
+        if self.wire_codec.is_identity() {
+            for rows in per_layer {
+                codec::write_f32s(&mut self.w, rows)?;
+            }
+        } else {
+            for rows in per_layer {
+                self.wire_codec.encode_rows(rows, self.hidden, &mut self.enc_buf);
+                self.w.write_all(&self.enc_buf).context("write encoded push payload")?;
+            }
         }
         self.w.flush()?;
         self.check_status()?;
-        let payload = nodes.len() * per_layer.len() * (self.hidden * 4 + 4);
+        let payload = nodes.len() * per_layer.len() * (self.bytes_per_row() + 4);
         Ok(RpcRecord {
             kind: RpcKind::Push,
             rows: nodes.len(),
@@ -296,6 +408,10 @@ impl RemoteEmbClient {
             rows: codec::read_u64(&mut self.r)? as usize,
             failovers: codec::read_u64(&mut self.r)? as usize,
             epoch: codec::read_u64(&mut self.r)?,
+            bytes_tx: codec::read_u64(&mut self.r)? as usize,
+            bytes_rx: codec::read_u64(&mut self.r)? as usize,
+            raw_tx: codec::read_u64(&mut self.r)? as usize,
+            raw_rx: codec::read_u64(&mut self.r)? as usize,
         })
     }
 }
@@ -324,7 +440,20 @@ pub struct TcpEmbeddingStore {
     addr: String,
     n_layers: usize,
     hidden: usize,
+    /// Wire codec every pooled connection negotiates at open
+    /// (DESIGN.md §11).
+    codec_kind: CodecKind,
+    /// Cached `bytes_per_row(hidden)` of the negotiated codec.
+    codec_bpr: usize,
     pool: Mutex<Vec<RemoteEmbClient>>,
+    /// Encoded payload bytes this client wrote / read on the wire.
+    /// These *replace* whatever the remote daemon's own store metered
+    /// in [`stats`](EmbeddingStore::stats) — the socket is the wire
+    /// boundary, and the daemon's numbers describe its far side.
+    bytes_tx: AtomicUsize,
+    bytes_rx: AtomicUsize,
+    raw_tx: AtomicUsize,
+    raw_rx: AtomicUsize,
     /// RPCs currently holding a connection lease.
     in_flight: AtomicUsize,
     /// Highest simultaneous lease count observed (== pool high-water
@@ -353,11 +482,31 @@ impl TcpEmbeddingStore {
     /// a wrong address *or* a server with a different layer count/hidden
     /// width fails here (session build time), not mid-round.
     pub fn connect(addr: impl Into<String>, n_layers: usize, hidden: usize) -> Result<Self> {
+        Self::connect_with_codec(addr, n_layers, hidden, CodecKind::Raw)
+    }
+
+    /// [`connect`](Self::connect) with a negotiated wire codec: every
+    /// pooled connection (including reconnects) performs the CODEC
+    /// handshake at open, so an unsupported codec fails here rather
+    /// than mid-round.
+    pub fn connect_with_codec(
+        addr: impl Into<String>,
+        n_layers: usize,
+        hidden: usize,
+        codec_kind: CodecKind,
+    ) -> Result<Self> {
+        let codec_bpr = codec_kind.build().bytes_per_row(hidden);
         let store = Self {
             addr: addr.into(),
             n_layers,
             hidden,
+            codec_kind,
+            codec_bpr,
             pool: Mutex::new(Vec::new()),
+            bytes_tx: AtomicUsize::new(0),
+            bytes_rx: AtomicUsize::new(0),
+            raw_tx: AtomicUsize::new(0),
+            raw_rx: AtomicUsize::new(0),
             in_flight: AtomicUsize::new(0),
             peak_in_flight: AtomicUsize::new(0),
             retries: AtomicUsize::new(0),
@@ -368,6 +517,14 @@ impl TcpEmbeddingStore {
             .with_context(|| format!("geometry handshake with {}", store.addr))?;
         store.pool.lock().unwrap().push(conn);
         Ok(store)
+    }
+
+    /// Encoded payload bytes pushed / pulled over this store's sockets.
+    pub fn wire_bytes(&self) -> (usize, usize) {
+        (
+            self.bytes_tx.load(Ordering::SeqCst),
+            self.bytes_rx.load(Ordering::SeqCst),
+        )
     }
 
     pub fn addr(&self) -> &str {
@@ -399,8 +556,13 @@ impl TcpEmbeddingStore {
     }
 
     fn open(&self) -> Result<RemoteEmbClient> {
-        RemoteEmbClient::connect(self.addr.as_str(), self.n_layers, self.hidden)
-            .with_context(|| format!("embedding store at {}", self.addr))
+        RemoteEmbClient::connect_with_codec(
+            self.addr.as_str(),
+            self.n_layers,
+            self.hidden,
+            &self.codec_kind,
+        )
+        .with_context(|| format!("embedding store at {}", self.addr))
     }
 
     /// Run `f` on a pooled connection; on failure, reconnect and retry
@@ -449,7 +611,12 @@ impl EmbeddingStore for TcpEmbeddingStore {
     }
 
     fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
-        self.with_conn(|c| c.push(nodes, per_layer))
+        let rec = self.with_conn(|c| c.push(nodes, per_layer))?;
+        self.bytes_tx
+            .fetch_add(nodes.len() * per_layer.len() * self.codec_bpr, Ordering::SeqCst);
+        self.raw_tx
+            .fetch_add(nodes.len() * per_layer.len() * self.hidden * 4, Ordering::SeqCst);
+        Ok(rec)
     }
 
     fn pull_into(
@@ -458,18 +625,37 @@ impl EmbeddingStore for TcpEmbeddingStore {
         on_demand: bool,
         out: &mut Vec<Vec<f32>>,
     ) -> Result<RpcRecord> {
-        self.with_conn(|c| c.pull_into(nodes, on_demand, out))
+        let rec = self.with_conn(|c| c.pull_into(nodes, on_demand, out))?;
+        self.bytes_rx
+            .fetch_add(nodes.len() * self.n_layers * self.codec_bpr, Ordering::SeqCst);
+        self.raw_rx
+            .fetch_add(nodes.len() * self.n_layers * self.hidden * 4, Ordering::SeqCst);
+        Ok(rec)
     }
 
     fn stats(&self) -> Result<StoreStats> {
         let mut stats = self.with_conn(|c| c.stats())?;
         // the transport's own failovers ride along with the remote ones
         stats.failovers += self.retries.load(Ordering::SeqCst);
+        // this socket is the wire boundary: report what *we* moved, not
+        // what the daemon's store metered on its far side
+        stats.bytes_tx = self.bytes_tx.load(Ordering::SeqCst);
+        stats.bytes_rx = self.bytes_rx.load(Ordering::SeqCst);
+        stats.raw_tx = self.raw_tx.load(Ordering::SeqCst);
+        stats.raw_rx = self.raw_rx.load(Ordering::SeqCst);
         Ok(stats)
     }
 
+    fn codec(&self) -> String {
+        self.codec_kind.name()
+    }
+
     fn describe(&self) -> String {
-        format!("tcp({})", self.addr)
+        if self.codec_kind.is_raw() {
+            format!("tcp({})", self.addr)
+        } else {
+            format!("tcp({}, {})", self.addr, self.codec_kind.name())
+        }
     }
 }
 
@@ -599,15 +785,76 @@ mod tests {
         tcp.push(&nodes, &[l.clone(), l.clone()]).unwrap();
         let (got, _) = tcp.pull(&nodes, false).unwrap();
         assert_eq!(got[0], l);
-        assert_eq!(
-            tcp.stats().unwrap(),
-            StoreStats {
-                nodes: 100,
-                rows: 200,
-                ..Default::default()
-            }
-        );
+        let s = tcp.stats().unwrap();
+        assert_eq!((s.nodes, s.rows, s.failovers, s.epoch), (100, 200, 0, 0));
+        // wire meters: raw codec, 100 rows x 2 layers x 4 f32 each way
+        assert_eq!((s.bytes_tx, s.bytes_rx), (100 * 2 * 16, 100 * 2 * 16));
+        assert_eq!((s.raw_tx, s.raw_rx), (s.bytes_tx, s.bytes_rx));
         d.shutdown();
+    }
+
+    #[test]
+    fn negotiated_codec_shapes_values_and_meters_fewer_bytes() {
+        use crate::wire::CodecKind;
+        let (d, server) = daemon(); // 2 layers, hidden 4
+        let tcp =
+            TcpEmbeddingStore::connect_with_codec(d.addr.to_string(), 2, 4, CodecKind::F16)
+                .unwrap();
+        assert_eq!(tcp.codec(), "f16");
+        assert!(tcp.describe().contains("f16"), "{}", tcp.describe());
+        let nodes = [1u32, 2, 3];
+        // values exactly representable in f16 round-trip bit-perfectly
+        let exact = vec![1.5f32, -2.0, 0.25, 8.0, 0.5, -1.0, 4.0, 0.0, 1.0, 2.0, 3.0, -0.5];
+        tcp.push(&nodes, &[exact.clone(), exact.clone()]).unwrap();
+        let (got, rec) = tcp.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], exact);
+        // 2 B/element on the wire: record + meters both see it
+        assert_eq!(rec.bytes, 3 * 2 * (4 * 2 + 4));
+        let (wtx, wrx) = tcp.wire_bytes();
+        assert_eq!((wtx, wrx), (3 * 2 * 8, 3 * 2 * 8));
+        let s = tcp.stats().unwrap();
+        assert_eq!((s.bytes_tx, s.raw_tx), (3 * 2 * 8, 3 * 2 * 16));
+        assert!(s.compression_ratio() > 1.9);
+        // the daemon stored *decoded* rows: a raw connection to the same
+        // server reads the same values
+        let mut raw = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+        let (via_raw, _) = raw.pull(&nodes).unwrap();
+        assert_eq!(via_raw[0], exact);
+        assert_eq!(server.stored_nodes(), 3);
+        d.shutdown();
+    }
+
+    #[test]
+    fn negotiated_codec_survives_reconnect() {
+        use crate::wire::CodecKind;
+        let (d, server) = daemon();
+        let tcp =
+            TcpEmbeddingStore::connect_with_codec(d.addr.to_string(), 2, 4, CodecKind::Int8)
+                .unwrap();
+        let nodes = [9u32];
+        let l = rows(&nodes, 4, 0.0);
+        tcp.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        // restart the daemon: the fresh pooled connection must
+        // re-negotiate int8 before the retried RPC
+        let addr = d.addr;
+        d.shutdown();
+        let mut d2 = None;
+        for _ in 0..50 {
+            match EmbServerDaemon::start(Arc::clone(&server) as Arc<dyn EmbeddingStore>, addr) {
+                Ok(daemon) => {
+                    d2 = Some(daemon);
+                    break;
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+            }
+        }
+        let d2 = d2.expect("rebind daemon address");
+        let (got, _) = tcp.pull(&nodes, false).expect("reconnect with codec");
+        for (a, b) in l.iter().zip(&got[0]) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        assert!(tcp.retries() >= 1);
+        d2.shutdown();
     }
 
     #[test]

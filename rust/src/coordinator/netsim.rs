@@ -44,9 +44,21 @@ impl NetConfig {
     }
 
     /// Payload bytes for `rows` embedding rows of `hidden` f32 across
-    /// `layers` layer databases.
+    /// `layers` layer databases — the *raw* wire format (4 bytes per
+    /// element). Defined via [`emb_bytes_metered`](Self::emb_bytes_metered)
+    /// so the raw cost is just the metered cost of a raw payload.
     pub fn emb_bytes(&self, rows: usize, layers: usize, hidden: usize) -> usize {
-        rows * layers * (hidden * 4 + self.per_entry_overhead)
+        self.emb_bytes_metered(rows * layers * hidden * 4, rows, layers)
+    }
+
+    /// Wire bytes for an embedding RPC whose **metered encoded payload**
+    /// is `payload` bytes covering `rows` rows across `layers` layers:
+    /// the payload plus the per-entry key/length overhead. This is what
+    /// the codec plane charges (DESIGN.md §11) — virtual network time
+    /// responds to the negotiated wire codec instead of assuming every
+    /// element crosses as a 4-byte float.
+    pub fn emb_bytes_metered(&self, payload: usize, rows: usize, layers: usize) -> usize {
+        payload + rows * layers * self.per_entry_overhead
     }
 
     /// Virtual time for an embedding transfer RPC.
@@ -77,6 +89,24 @@ mod tests {
         assert!(n.emb_time(1000, 2, 32) > n.emb_time(10, 2, 32));
         // bytes: 1000 rows * 2 layers * (128+16)
         assert_eq!(n.emb_bytes(1000, 2, 32), 1000 * 2 * 144);
+    }
+
+    #[test]
+    fn metered_bytes_respond_to_encoded_payload() {
+        let n = NetConfig::default();
+        // a raw payload metered explicitly equals the raw formula
+        assert_eq!(
+            n.emb_bytes_metered(1000 * 2 * 32 * 4, 1000, 2),
+            n.emb_bytes(1000, 2, 32)
+        );
+        // an int8-sized payload (8 + hidden per row) costs less wire
+        // time than raw at the same row count — the codec moves the
+        // cost model, not just the accounting
+        let int8 = n.emb_bytes_metered(1000 * 2 * (8 + 32), 1000, 2);
+        assert!(int8 < n.emb_bytes(1000, 2, 32));
+        assert!(n.time_for_bytes(int8) < n.emb_time(1000, 2, 32));
+        // overhead is still charged per entry
+        assert_eq!(n.emb_bytes_metered(0, 10, 2), 10 * 2 * n.per_entry_overhead);
     }
 
     #[test]

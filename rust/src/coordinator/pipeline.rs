@@ -380,6 +380,10 @@ impl EmbeddingStore for ThrottledStore {
         self.inner.epoch()
     }
 
+    fn codec(&self) -> String {
+        self.inner.codec()
+    }
+
     fn describe(&self) -> String {
         format!("throttled({})", self.inner.describe())
     }

@@ -364,6 +364,10 @@ impl EmbeddingStore for FaultStore {
         self.inner.epoch()
     }
 
+    fn codec(&self) -> String {
+        self.inner.codec()
+    }
+
     fn describe(&self) -> String {
         format!("fault({} over {})", self.label, self.inner.describe())
     }
@@ -527,6 +531,10 @@ impl EmbeddingStore for SnapshotStore {
 
     fn epoch(&self) -> u64 {
         self.inner.epoch()
+    }
+
+    fn codec(&self) -> String {
+        self.inner.codec()
     }
 
     fn describe(&self) -> String {

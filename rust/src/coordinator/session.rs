@@ -295,6 +295,7 @@ impl SessionBuilder {
             pull_candidates,
             retained_remotes,
             store_backend: store.describe(),
+            wire_codec: store.codec(),
             pipelined: cfg.pipeline,
             ..Default::default()
         };
@@ -541,6 +542,12 @@ impl Session<'_> {
             self.metrics.server_embeddings = st.nodes;
         }
         rm.failovers = st.failovers;
+        // wire meters (cumulative, like the failover gauge): encoded
+        // bytes per round next to the raw-f32 baseline (DESIGN.md §11)
+        rm.bytes_tx = st.bytes_tx;
+        rm.bytes_rx = st.bytes_rx;
+        self.metrics.bytes_raw_tx = st.raw_tx;
+        self.metrics.bytes_raw_rx = st.raw_rx;
         self.metrics.store_epoch = st.epoch;
         self.observer.on_round(&rm);
         self.metrics.rounds.push(rm);
@@ -623,6 +630,13 @@ mod tests {
         assert!(m.server_embeddings > 0);
         assert!(m.median_round_time() > 0.0);
         assert_eq!(m.store_backend, "in-process");
+        // the wire meters see the exchange (raw plane: encoded == raw)
+        assert_eq!(m.wire_codec, "raw");
+        assert!(m.total_bytes_tx() > 0 && m.total_bytes_rx() > 0);
+        assert_eq!(m.bytes_raw_tx, m.total_bytes_tx());
+        assert!((m.wire_ratio() - 1.0).abs() < 1e-9);
+        // cumulative, like the failover gauge
+        assert!(m.rounds[0].bytes_tx <= m.rounds.last().unwrap().bytes_tx);
         // every round pulled + pushed
         for r in &m.rounds {
             assert!(r.mean_phases.pull > 0.0);

@@ -48,6 +48,35 @@ pub struct StoreStats {
     /// Routing epoch of the store's shard map (bumped by every
     /// [`ShardedStore::rebalance`]; 0 for unsharded backends).
     pub epoch: u64,
+    /// Encoded embedding-payload bytes moved client→server (push
+    /// payloads under the active wire codec; framing/id overhead is
+    /// accounted in RPC records, not here). DESIGN.md §11.
+    pub bytes_tx: usize,
+    /// Encoded embedding-payload bytes moved server→client (pulls).
+    pub bytes_rx: usize,
+    /// Raw-f32 equivalent of the same push traffic — what the payloads
+    /// would have cost uncompressed, *including* rows a delta layer
+    /// elided — so `raw_tx / bytes_tx` is the compression ratio.
+    pub raw_tx: usize,
+    /// Raw-f32 equivalent of the pull traffic.
+    pub raw_rx: usize,
+}
+
+impl StoreStats {
+    /// Raw-equivalent bytes over encoded bytes, both directions
+    /// combined: 1.0 for an idle or uncompressed plane. Always finite —
+    /// when a delta layer elided *everything*, the encoded total is
+    /// floored at one byte (so the ratio stays JSON-representable and
+    /// monotone instead of jumping to infinity).
+    pub fn compression_ratio(&self) -> f64 {
+        let enc = self.bytes_tx + self.bytes_rx;
+        let raw = self.raw_tx + self.raw_rx;
+        if raw == 0 && enc == 0 {
+            1.0
+        } else {
+            raw as f64 / enc.max(1) as f64
+        }
+    }
 }
 
 /// A store of per-vertex hidden embeddings `h^1..h^{L-1}`, keyed by
@@ -138,6 +167,15 @@ pub trait EmbeddingStore: Send + Sync {
     /// stamp every ticket).
     fn epoch(&self) -> u64 {
         0
+    }
+
+    /// Name of the wire codec this store's payloads travel under
+    /// (`raw` unless a codec layer is active — the `CodecStore`
+    /// decorator, a negotiated TCP connection, or a delta combinator;
+    /// DESIGN.md §11). Routers report their backends' codec; decorators
+    /// forward.
+    fn codec(&self) -> String {
+        "raw".into()
     }
 
     /// Human-readable backend descriptor for `optimes info` / reports,
@@ -884,16 +922,38 @@ impl EmbeddingStore for ShardedStore {
     fn stats(&self) -> Result<StoreStats> {
         let routing = self.routing.read().unwrap();
         let nodes: usize = routing.buckets.iter().map(|s| s.lock().unwrap().ids.len()).sum();
+        // wire meters: sum what every backend actually moved (replicas
+        // genuinely cost bytes, so they are *not* deduplicated here).
+        // A backend that is currently refusing its control plane (a
+        // dead TCP daemon) contributes nothing rather than failing the
+        // whole observability call.
+        let (mut bytes_tx, mut bytes_rx, mut raw_tx, mut raw_rx) = (0, 0, 0, 0);
+        for b in &self.backends {
+            if let Ok(s) = b.stats() {
+                bytes_tx += s.bytes_tx;
+                bytes_rx += s.bytes_rx;
+                raw_tx += s.raw_tx;
+                raw_rx += s.raw_rx;
+            }
+        }
         Ok(StoreStats {
             nodes,
             rows: nodes * self.n_layers,
             failovers: self.failovers.load(Ordering::Relaxed),
             epoch: routing.map.epoch(),
+            bytes_tx,
+            bytes_rx,
+            raw_tx,
+            raw_rx,
         })
     }
 
     fn epoch(&self) -> u64 {
         self.routing.read().unwrap().map.epoch()
+    }
+
+    fn codec(&self) -> String {
+        self.backends[0].codec()
     }
 
     fn describe(&self) -> String {

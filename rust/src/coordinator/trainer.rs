@@ -362,6 +362,7 @@ pub fn run_round_pipelined(
                     out.metrics.overlap.pipelined = true;
                     out.metrics.overlap.pull_wall += done.wall;
                     out.metrics.overlap.pull_wait += join_sw.secs();
+                    out.metrics.overlap.pull_bytes += done.rec.bytes;
                     out.metrics.overlap.store_epoch =
                         out.metrics.overlap.store_epoch.max(done.epoch);
                     client.pull_buf = done.rows;
@@ -510,6 +511,7 @@ pub fn run_round_pipelined(
                 // thread past the tail epochs plus the ticket join
                 ov.push_wall += compute + done.wall;
                 ov.push_wait += (scope_wall - epochs_wall).max(0.0) + join_sw.secs();
+                ov.push_bytes += done.rec.bytes;
                 ov.store_epoch = ov.store_epoch.max(done.epoch);
                 push_result = Some((compute, Some(done.rec), stats));
             }

@@ -360,16 +360,35 @@ pub fn fig12() -> Result<Json> {
     let sessions = ladder_sessions("products-s", ModelKind::Gc, 5, &strategies, None)?;
     let mut all = JsonObj::new();
 
-    // 12a/12b: nodes per dynamic-pull RPC and its service time
+    // 12a/12b: nodes per dynamic-pull RPC, its service time, and the
+    // bytes each strategy actually put on the wire (pulls + pushes, as
+    // metered by the active codec — DESIGN.md §11), so the paper's
+    // network-cost comparison is reproducible from bytes, not only time
     let mut t = Table::new(&[
-        "strategy", "dyn RPCs", "nodes/RPC p25", "median", "p75", "time/RPC median(ms)",
+        "strategy",
+        "dyn RPCs",
+        "nodes/RPC p25",
+        "median",
+        "p75",
+        "time/RPC median(ms)",
+        "wire KB/RPC",
+        "wire total",
     ]);
     for m in &sessions {
         let recs = m.rpcs(RpcKind::PullOnDemand);
         let rows: Vec<f64> = recs.iter().map(|r| r.rows as f64).collect();
         let times: Vec<f64> = recs.iter().map(|r| r.time * 1e3).collect();
+        let wire_kb: Vec<f64> = recs.iter().map(|r| r.bytes as f64 / 1e3).collect();
+        let total_bytes: usize = m
+            .rpcs(RpcKind::Pull)
+            .iter()
+            .chain(m.rpcs(RpcKind::PullOnDemand).iter())
+            .chain(m.rpcs(RpcKind::Push).iter())
+            .map(|r| r.bytes)
+            .sum();
         let rs = stats::summarize(&rows);
         let ts = stats::summarize(&times);
+        let ws = stats::summarize(&wire_kb);
         t.row(vec![
             m.strategy.clone(),
             format!("{}", recs.len()),
@@ -377,9 +396,14 @@ pub fn fig12() -> Result<Json> {
             format!("{:.0}", rs.median),
             format!("{:.0}", rs.p75),
             format!("{:.2}", ts.median),
+            format!("{:.1}", ws.median),
+            crate::harness::fmt_bytes(total_bytes),
         ]);
         let mut o = JsonObj::new();
-        o.set("nodes_per_rpc", rows).set("rpc_times_ms", times);
+        o.set("nodes_per_rpc", rows)
+            .set("rpc_times_ms", times)
+            .set("rpc_wire_kb", wire_kb)
+            .set("wire_total_bytes", total_bytes);
         all.set(format!("dist_{}", m.strategy), o);
     }
     t.print("Fig 12a/12b — dynamic pull RPCs, products-s");

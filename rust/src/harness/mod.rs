@@ -21,6 +21,11 @@
 //! * `OPTIMES_PIPELINE=off` — disable the asynchronous push/pull
 //!   pipeline over the store (default on; DESIGN.md §9). Results are
 //!   bit-identical either way, only wall clock changes.
+//! * `OPTIMES_WIRE_CODEC=raw|f16|bf16|int8|topk:K[,delta[:EPS]]` — run
+//!   the embedding plane under a wire codec (`run --wire-codec`;
+//!   DESIGN.md §11): TCP backends negotiate it per connection, model
+//!   backends round-trip values through it, and `bytes_tx`/`bytes_rx`
+//!   meter the encoded payload. Default `raw` (today's format).
 
 pub mod figures;
 pub mod report;
@@ -37,6 +42,7 @@ use crate::coordinator::{
 use crate::graph::datasets::{self, DatasetPreset};
 use crate::graph::Graph;
 use crate::runtime::{Manifest, ModelGeom, ModelKind, PjrtEngine, RefEngine, StepEngine};
+use crate::wire::{self, CodecSpec};
 
 pub fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
@@ -175,6 +181,11 @@ pub fn fault_spec() -> Result<FaultSpec> {
     }
 }
 
+/// Parse `OPTIMES_WIRE_CODEC` (plain raw when unset; DESIGN.md §11).
+pub fn wire_codec_spec() -> Result<CodecSpec> {
+    wire::spec_from_env()
+}
+
 /// Read `OPTIMES_SERVER` / `OPTIMES_SHARDS` into a [`StoreSpec`].
 pub fn store_spec() -> StoreSpec {
     if let Ok(s) = std::env::var("OPTIMES_SERVER") {
@@ -202,15 +213,30 @@ pub fn store_spec() -> StoreSpec {
 /// `OPTIMES_FAULT_SPEC`, the faulted shards additionally carry a
 /// `fault(..)` wrapper in the session's own describe string.)
 pub fn store_desc() -> String {
-    match store_spec() {
+    let codec = wire_codec_spec().unwrap_or_default();
+    let tcp_inner = |addr: &str| {
+        if codec.codec.is_raw() {
+            format!("tcp({addr})")
+        } else {
+            format!("tcp({addr}, {})", codec.codec.name())
+        }
+    };
+    let base = match store_spec() {
         StoreSpec::InProcess => "in-process".into(),
-        StoreSpec::Tcp(addrs) if addrs.len() == 1 && store_replicas() == 0 => {
-            format!("tcp({})", addrs[0])
-        }
-        StoreSpec::Tcp(addrs) => {
-            sharded_desc(addrs.len(), &format!("tcp({})", addrs[0]), store_replicas())
-        }
+        StoreSpec::Tcp(addrs) if addrs.len() == 1 && store_replicas() == 0 => tcp_inner(&addrs[0]),
+        StoreSpec::Tcp(addrs) => sharded_desc(addrs.len(), &tcp_inner(&addrs[0]), store_replicas()),
         StoreSpec::ShardedInProcess(n) => sharded_desc(n, "in-process", store_replicas()),
+    };
+    // TCP backends carry the codec on the wire; model backends get the
+    // CodecStore wrapper — mirror `make_store`'s composition exactly
+    if matches!(store_spec(), StoreSpec::Tcp(_)) {
+        CodecSpec {
+            codec: crate::wire::CodecKind::Raw,
+            delta: codec.delta,
+        }
+        .wrapped_desc(base)
+    } else {
+        codec.wrapped_desc(base)
     }
 }
 
@@ -231,6 +257,7 @@ pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingS
     let (n_layers, hidden) = (geom.layers - 1, geom.hidden);
     let replicas = store_replicas();
     let spec = fault_spec()?;
+    let wire_spec = wire_codec_spec()?;
     let store: Arc<dyn EmbeddingStore> = match store_spec() {
         StoreSpec::InProcess => {
             ensure!(
@@ -239,30 +266,39 @@ pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingS
                  (--shards N with N > replicas, or multiple --server addresses)"
             );
             spec.validate_shards(1)?;
-            spec.wrap_shard(0, Arc::new(EmbeddingServer::new(n_layers, hidden, net)))
+            let base = spec.wrap_shard(0, Arc::new(EmbeddingServer::new(n_layers, hidden, net)));
+            wire_spec.wrap_store(base, net)
         }
         StoreSpec::Tcp(addrs) => {
             spec.validate_shards(addrs.len())?;
+            // the codec rides the wire itself (per-connection CODEC
+            // handshake); only the delta combinator wraps client-side
             let backends: Vec<Arc<dyn EmbeddingStore>> = addrs
                 .iter()
                 .enumerate()
                 .map(|(i, a)| {
-                    TcpEmbeddingStore::connect(a.as_str(), n_layers, hidden)
-                        .map(|s| spec.wrap_shard(i, Arc::new(s)))
+                    TcpEmbeddingStore::connect_with_codec(
+                        a.as_str(),
+                        n_layers,
+                        hidden,
+                        wire_spec.codec.clone(),
+                    )
+                    .map(|s| spec.wrap_shard(i, Arc::new(s)))
                 })
                 .collect::<Result<_>>()?;
-            if backends.len() == 1 && replicas == 0 {
+            let base: Arc<dyn EmbeddingStore> = if backends.len() == 1 && replicas == 0 {
                 backends.into_iter().next().expect("one backend")
             } else {
                 Arc::new(ShardedStore::replicated(backends, replicas)?)
-            }
+            };
+            wire_spec.wrap_delta(base)
         }
         StoreSpec::ShardedInProcess(n) => {
             spec.validate_shards(n)?;
             let backends: Vec<Arc<dyn EmbeddingStore>> = (0..n)
                 .map(|i| spec.wrap_shard(i, Arc::new(EmbeddingServer::new(n_layers, hidden, net))))
                 .collect();
-            Arc::new(ShardedStore::replicated(backends, replicas)?)
+            wire_spec.wrap_store(Arc::new(ShardedStore::replicated(backends, replicas)?), net)
         }
     };
     Ok(store)
@@ -345,8 +381,16 @@ pub fn session_key(
     clients: usize,
     rounds: usize,
 ) -> String {
+    // non-raw wire codecs shape values, so they get their own cache
+    // slot; the raw default keeps the historical key unchanged
+    let wire = wire_codec_spec().map(|s| s.spec_string()).unwrap_or_else(|_| "raw".into());
+    let suffix = if wire == "raw" {
+        String::new()
+    } else {
+        format!("_w{}", wire.replace(':', "-").replace(',', "+"))
+    };
     format!(
-        "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}",
+        "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}{suffix}",
         model.as_str(),
         dataset_scale(),
         engine_kind()
@@ -425,6 +469,20 @@ pub fn fmt_opt_time(t: Option<f64>) -> String {
     }
 }
 
+/// Human-readable byte count (B / KB / MB / GB, decimal units).
+pub fn fmt_bytes(b: usize) -> String {
+    let b = b as f64;
+    if b < 1e3 {
+        format!("{b:.0} B")
+    } else if b < 1e6 {
+        format!("{:.1} KB", b / 1e3)
+    } else if b < 1e9 {
+        format!("{:.2} MB", b / 1e6)
+    } else {
+        format!("{:.2} GB", b / 1e9)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,5 +518,14 @@ mod tests {
         let c = session_key("reddit-s", "OP", ModelKind::Gc, 5, 4, 16);
         assert_ne!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn bytes_format_is_compact() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(999), "999 B");
+        assert_eq!(fmt_bytes(12_300), "12.3 KB");
+        assert_eq!(fmt_bytes(4_560_000), "4.56 MB");
+        assert_eq!(fmt_bytes(7_890_000_000), "7.89 GB");
     }
 }

@@ -52,8 +52,11 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
     o.set("strategy", m.strategy.as_str());
     o.set("dataset", m.dataset.as_str());
     o.set("store_backend", m.store_backend.as_str());
+    o.set("wire_codec", m.wire_codec.as_str());
     o.set("pipelined", m.pipelined);
     o.set("store_epoch", m.store_epoch);
+    o.set("bytes_raw_tx", m.bytes_raw_tx);
+    o.set("bytes_raw_rx", m.bytes_raw_rx);
     o.set("n_clients", m.n_clients);
     o.set("server_embeddings", m.server_embeddings);
     o.set("pull_candidates", m.pull_candidates);
@@ -70,6 +73,8 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
                 .set("accuracy", r.accuracy)
                 .set("val_loss", r.val_loss)
                 .set("failovers", r.failovers)
+                .set("bytes_tx", r.bytes_tx)
+                .set("bytes_rx", r.bytes_rx)
                 .set("mean_phases", phases_json(&r.mean_phases))
                 .set("critical", phases_json(&r.critical));
             Json::Obj(ro)
@@ -104,8 +109,11 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             .as_str()
             .unwrap_or_default()
             .to_string(),
+        wire_codec: j.at("wire_codec").as_str().unwrap_or("raw").to_string(),
         pipelined: j.at("pipelined").as_bool().unwrap_or(false),
         store_epoch: j.at("store_epoch").as_usize().unwrap_or(0) as u64,
+        bytes_raw_tx: j.at("bytes_raw_tx").as_usize().unwrap_or(0),
+        bytes_raw_rx: j.at("bytes_raw_rx").as_usize().unwrap_or(0),
         n_clients: j.at("n_clients").as_usize()?,
         server_embeddings: j.at("server_embeddings").as_usize().unwrap_or(0),
         pull_candidates: j.at("pull_candidates").as_usize().unwrap_or(0),
@@ -119,6 +127,8 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             accuracy: rj.at("accuracy").as_f64().unwrap_or(0.0),
             val_loss: rj.at("val_loss").as_f64().unwrap_or(0.0),
             failovers: rj.at("failovers").as_usize().unwrap_or(0),
+            bytes_tx: rj.at("bytes_tx").as_usize().unwrap_or(0),
+            bytes_rx: rj.at("bytes_rx").as_usize().unwrap_or(0),
             mean_phases: phases_from(rj.at("mean_phases")),
             critical: phases_from(rj.at("critical")),
             clients: Vec::new(),
@@ -150,6 +160,8 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
         pull_wall: ovj.at("pull_wall").as_f64().unwrap_or(0.0),
         pull_wait: ovj.at("pull_wait").as_f64().unwrap_or(0.0),
         overlap_saved: ovj.at("overlap_saved").as_f64().unwrap_or(0.0),
+        push_bytes: ovj.at("push_bytes").as_usize().unwrap_or(0),
+        pull_bytes: ovj.at("pull_bytes").as_usize().unwrap_or(0),
         queue_peak: ovj.at("queue_peak").as_usize().unwrap_or(0),
         store_epoch: ovj.at("store_epoch").as_usize().unwrap_or(0) as u64,
     };
@@ -177,7 +189,10 @@ mod tests {
             strategy: "OPP".into(),
             dataset: "reddit-s".into(),
             store_backend: "tcp(10.0.0.2:7070)".into(),
+            wire_codec: "int8".into(),
             store_epoch: 2,
+            bytes_raw_tx: 9000,
+            bytes_raw_rx: 4000,
             n_clients: 4,
             server_embeddings: 123,
             pull_candidates: 500,
@@ -191,6 +206,8 @@ mod tests {
                 accuracy: 0.5 + 0.1 * i as f64,
                 val_loss: 2.0 - 0.1 * i as f64,
                 failovers: 3 + i,
+                bytes_tx: 1000 * (i + 1),
+                bytes_rx: 300 * (i + 1),
                 ..Default::default()
             };
             r.mean_phases.pull = 0.2;
@@ -208,6 +225,7 @@ mod tests {
                     push_wall: 0.5,
                     push_wait: 0.1,
                     overlap_saved: 0.4,
+                    push_bytes: 77,
                     queue_peak: 2,
                     ..Default::default()
                 },
@@ -227,6 +245,12 @@ mod tests {
         assert_eq!(back.store_epoch, 2);
         assert_eq!(back.rounds[1].failovers, 4);
         assert_eq!(back.total_failovers(), 5);
+        // the wire-compression plane survives the roundtrip too
+        assert_eq!(back.wire_codec, "int8");
+        assert_eq!(back.rounds[1].bytes_tx, 2000);
+        assert_eq!((back.total_bytes_tx(), back.total_bytes_rx()), (3000, 900));
+        assert_eq!((back.bytes_raw_tx, back.bytes_raw_rx), (9000, 4000));
+        assert!((back.wire_ratio() - 13000.0 / 3900.0).abs() < 1e-9);
         // derived metrics survive the roundtrip
         assert!((back.peak_accuracy() - m.peak_accuracy()).abs() < 1e-9);
         // aggregate measured overlap survives too
@@ -235,5 +259,7 @@ mod tests {
         assert!((a.push_wall - b.push_wall).abs() < 1e-9);
         assert!((a.overlap_saved - b.overlap_saved).abs() < 1e-9);
         assert_eq!(a.queue_peak, b.queue_peak);
+        assert_eq!(a.push_bytes, b.push_bytes);
+        assert_eq!(b.push_bytes, 3 * 77);
     }
 }

@@ -22,3 +22,4 @@ pub mod util;
 pub mod coordinator;
 pub mod harness;
 pub mod runtime;
+pub mod wire;

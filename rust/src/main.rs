@@ -68,6 +68,11 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         FaultSpec::parse(f)?;
         std::env::set_var("OPTIMES_FAULT_SPEC", f);
     }
+    if let Some(c) = args.get("wire-codec") {
+        // validate up front so a typo fails before any training work
+        optimes::wire::CodecSpec::parse(c)?;
+        std::env::set_var("OPTIMES_WIRE_CODEC", c);
+    }
     if let Some(p) = args.get("pipeline") {
         match p.to_ascii_lowercase().as_str() {
             "on" | "off" | "1" | "0" | "true" | "false" | "yes" | "no" => {
@@ -110,6 +115,8 @@ commands:
          [--replicas R]                        keep R replicas per row (needs shards > R)
          [--fault-spec SPEC]                   inject deterministic store faults,
                                                e.g. \"shard1=blackout@40;*=delay%10:0.005\"
+         [--wire-codec C]                      embedding wire codec:
+                                               raw|f16|bf16|int8|topk:K[,delta[:EPS]]
          [--pipeline on|off]                   async push/pull pipeline (default on)
          [--agg fedavg|uniform|trimmed[:k]]    aggregation rule
   sweep  --dataset D --strategies D,E,O,P,OP,OPP,OPG
@@ -133,6 +140,10 @@ fn info() -> Result<()> {
             println!("fault injection: {spec} (OPTIMES_FAULT_SPEC)");
         }
     }
+    println!(
+        "wire codec: {} (OPTIMES_WIRE_CODEC; raw|f16|bf16|int8|topk:K[,delta[:EPS]])",
+        harness::wire_codec_spec()?
+    );
     println!(
         "pipeline: {}",
         if optimes::coordinator::pipeline_default() {
@@ -200,6 +211,21 @@ fn session_summary(m: &SessionMetrics) {
             m.store_epoch
         );
     }
+    let (tx, rx) = (m.total_bytes_tx(), m.total_bytes_rx());
+    if tx + rx + m.bytes_raw_tx + m.bytes_raw_rx > 0 {
+        println!(
+            "  wire: codec {}, {} tx / {} rx on the wire (raw {}, {:.2}x compression)",
+            if m.wire_codec.is_empty() {
+                "raw"
+            } else {
+                m.wire_codec.as_str()
+            },
+            harness::fmt_bytes(tx),
+            harness::fmt_bytes(rx),
+            harness::fmt_bytes(m.bytes_raw_tx + m.bytes_raw_rx),
+            m.wire_ratio()
+        );
+    }
     let ov = m.overlap_stats();
     if ov.pipelined {
         println!(
@@ -224,8 +250,17 @@ struct CliRoundPrinter {
 impl RoundObserver for CliRoundPrinter {
     fn on_round(&mut self, r: &RoundMetrics) {
         let p = &r.mean_phases;
+        let wire = if r.bytes_tx + r.bytes_rx > 0 {
+            format!(
+                "  wire {}↑ {}↓",
+                harness::fmt_bytes(r.bytes_tx),
+                harness::fmt_bytes(r.bytes_rx)
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "round {:>2}/{}: acc {:5.2}%  time {:.3}s  (pull {:.3} + train {:.3} + dyn {:.3} + push {:.3})",
+            "round {:>2}/{}: acc {:5.2}%  time {:.3}s  (pull {:.3} + train {:.3} + dyn {:.3} + push {:.3}){wire}",
             r.round + 1,
             self.total,
             r.accuracy * 100.0,

@@ -1,0 +1,594 @@
+//! The codec backends of the wire-compression plane (DESIGN.md §11):
+//! [`RawF32`] (today's format, the oracle), [`F16`]/[`Bf16`] truncation,
+//! [`Int8`] per-row affine quantization, and [`TopK`] sparsification.
+//!
+//! Every codec is **strictly row-granular**: encoding a row depends only
+//! on that row's values, never on its neighbours in the batch. That is
+//! what lets a sharded deployment slice a batch across backends (each
+//! with its own negotiated connection codec) without changing a single
+//! decoded value — the property `tests/store_parity.rs` pins with its
+//! codec parity matrix.
+//!
+//! All multi-byte fields are little-endian via `to_le_bytes` /
+//! `from_le_bytes`, like the rest of the wire path (no unsafe
+//! transmutes). The f16/bf16 converters are hand-rolled (the offline
+//! registry carries no `half` crate) with round-to-nearest-even and
+//! NaN/Inf preservation.
+
+use anyhow::{ensure, Result};
+
+use super::RowCodec;
+
+// ---------------------------------------------------------------------------
+// scalar converters
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even. Preserves sign,
+/// Inf, and NaN-ness (payload truncated to the top 10 bits, forced
+/// non-zero so a NaN never collapses into Inf).
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let mut exp = ((x >> 23) & 0xFF) as i32;
+    let man = x & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN
+        let nan_man = (man >> 13) as u16 & 0x03FF;
+        return sign | 0x7C00 | nan_man | u16::from(man != 0 && nan_man == 0);
+    }
+    exp -= 112; // re-bias 127 → 15
+    if exp >= 0x1F {
+        return sign | 0x7C00; // overflow → Inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal: add the implicit bit, shift out with RNE
+        let man = man | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half_man = man >> shift;
+        let round_bit = 1u32 << (shift - 1);
+        let rem = man & ((1u32 << shift) - 1);
+        let mut h = half_man as u16;
+        if rem > round_bit || (rem == round_bit && (half_man & 1) == 1) {
+            h += 1; // may carry into the smallest normal — still correct
+        }
+        return sign | h;
+    }
+    // normal: round the 23-bit mantissa to 10 bits, RNE; a mantissa
+    // overflow carries into the exponent (and possibly to Inf), which is
+    // exactly the IEEE behaviour
+    let mut h = (((exp as u32) << 10) as u16) | ((man >> 13) as u16);
+    let rem = man & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+        h = h.wrapping_add(1);
+    }
+    sign | h
+}
+
+/// IEEE 754 binary16 bits → f32 (exact: every f16 value is
+/// f32-representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: normalize into an f32 normal
+            let b = 31 - man.leading_zeros(); // top set bit, 0..=9
+            let exp_f = b + 103; // value = 1.x × 2^(b-24); b-24+127
+            let man_f = (man << (23 - b)) & 0x007F_FFFF;
+            sign | (exp_f << 23) | man_f
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13) // Inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits (top 16 bits, round-to-nearest-even; NaN kept
+/// NaN by forcing a mantissa bit after truncation).
+pub fn f32_to_bf16_bits(value: f32) -> u16 {
+    let bits = value.to_bits();
+    if value.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lower = bits & 0xFFFF;
+    let mut upper = (bits >> 16) as u16;
+    // RNE on the dropped 16 bits; a carry may roll into the exponent
+    // (up to Inf), matching IEEE rounding
+    if lower > 0x8000 || (lower == 0x8000 && (upper & 1) == 1) {
+        upper = upper.wrapping_add(1);
+    }
+    upper
+}
+
+/// bfloat16 bits → f32 (exact).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// codecs
+// ---------------------------------------------------------------------------
+
+fn check_encoded_len(bytes: &[u8], n_rows: usize, per_row: usize, what: &str) -> Result<()> {
+    ensure!(
+        bytes.len() == n_rows * per_row,
+        "{what}: encoded payload is {} bytes, {n_rows} row(s) x {per_row} B/row = {} expected",
+        bytes.len(),
+        n_rows * per_row
+    );
+    Ok(())
+}
+
+/// The identity codec: packed little-endian f32, exactly today's wire
+/// format. Bit-exact (NaN payloads and signed zeros survive), and the
+/// accounting oracle every other codec's ratio is measured against.
+pub struct RawF32;
+
+impl RowCodec for RawF32 {
+    fn name(&self) -> String {
+        "raw".into()
+    }
+
+    fn bytes_per_row(&self, hidden: usize) -> usize {
+        hidden * 4
+    }
+
+    fn lossless(&self) -> bool {
+        true
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    fn encode_rows(&self, rows: &[f32], _hidden: usize, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(rows.len() * 4);
+        for v in rows {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn decode_rows(
+        &self,
+        bytes: &[u8],
+        n_rows: usize,
+        hidden: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        check_encoded_len(bytes, n_rows, self.bytes_per_row(hidden), "raw")?;
+        out.clear();
+        out.reserve(n_rows * hidden);
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().expect("4-byte chunk"))),
+        );
+        Ok(())
+    }
+}
+
+/// IEEE binary16 truncation: 2 bytes/element, ~11 bits of mantissa.
+/// Lossy but *idempotent* — re-encoding a decoded payload is bit-exact,
+/// so the push→store→pull double round-trip settles after one hop.
+pub struct F16;
+
+impl RowCodec for F16 {
+    fn name(&self) -> String {
+        "f16".into()
+    }
+
+    fn bytes_per_row(&self, hidden: usize) -> usize {
+        hidden * 2
+    }
+
+    fn lossless(&self) -> bool {
+        false
+    }
+
+    fn encode_rows(&self, rows: &[f32], _hidden: usize, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(rows.len() * 2);
+        for v in rows {
+            out.extend_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+        }
+    }
+
+    fn decode_rows(
+        &self,
+        bytes: &[u8],
+        n_rows: usize,
+        hidden: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        check_encoded_len(bytes, n_rows, self.bytes_per_row(hidden), "f16")?;
+        out.clear();
+        out.reserve(n_rows * hidden);
+        out.extend(
+            bytes
+                .chunks_exact(2)
+                .map(|b| f16_bits_to_f32(u16::from_le_bytes(b.try_into().expect("2-byte chunk")))),
+        );
+        Ok(())
+    }
+}
+
+/// bfloat16 truncation: 2 bytes/element, f32 exponent range with 8 bits
+/// of mantissa. Idempotent like [`F16`].
+pub struct Bf16;
+
+impl RowCodec for Bf16 {
+    fn name(&self) -> String {
+        "bf16".into()
+    }
+
+    fn bytes_per_row(&self, hidden: usize) -> usize {
+        hidden * 2
+    }
+
+    fn lossless(&self) -> bool {
+        false
+    }
+
+    fn encode_rows(&self, rows: &[f32], _hidden: usize, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(rows.len() * 2);
+        for v in rows {
+            out.extend_from_slice(&f32_to_bf16_bits(*v).to_le_bytes());
+        }
+    }
+
+    fn decode_rows(
+        &self,
+        bytes: &[u8],
+        n_rows: usize,
+        hidden: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        check_encoded_len(bytes, n_rows, self.bytes_per_row(hidden), "bf16")?;
+        out.clear();
+        out.reserve(n_rows * hidden);
+        out.extend(
+            bytes
+                .chunks_exact(2)
+                .map(|b| bf16_bits_to_f32(u16::from_le_bytes(b.try_into().expect("2-byte chunk")))),
+        );
+        Ok(())
+    }
+}
+
+/// Per-row affine int8 quantization: each row carries an 8-byte header
+/// (`zero_point: f32` = the row minimum, `scale: f32` = span / 255)
+/// followed by one u8 per element. The worst-case reconstruction error
+/// is `scale / 2 = (max − min) / 510` per element — the bound
+/// `coordinator_props.rs` pins. Rows are expected to be finite
+/// (embedding rows always are); non-finite inputs saturate through the
+/// `as` cast rather than invoking UB.
+pub struct Int8;
+
+impl RowCodec for Int8 {
+    fn name(&self) -> String {
+        "int8".into()
+    }
+
+    fn bytes_per_row(&self, hidden: usize) -> usize {
+        8 + hidden
+    }
+
+    fn lossless(&self) -> bool {
+        false
+    }
+
+    fn encode_rows(&self, rows: &[f32], hidden: usize, out: &mut Vec<u8>) {
+        assert!(hidden > 0 && rows.len() % hidden == 0, "int8: ragged row batch");
+        out.clear();
+        out.reserve(rows.len() / hidden * self.bytes_per_row(hidden));
+        for row in rows.chunks_exact(hidden) {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in row {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let span = hi - lo;
+            let scale = if span > 0.0 && span.is_finite() {
+                span / 255.0
+            } else {
+                0.0
+            };
+            out.extend_from_slice(&lo.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            if scale == 0.0 {
+                let start = out.len();
+                out.resize(start + hidden, 0);
+            } else {
+                for &v in row {
+                    // saturating float→int cast: NaN → 0, out-of-range clamps
+                    out.push(((v - lo) / scale + 0.5) as u8);
+                }
+            }
+        }
+    }
+
+    fn decode_rows(
+        &self,
+        bytes: &[u8],
+        n_rows: usize,
+        hidden: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        check_encoded_len(bytes, n_rows, self.bytes_per_row(hidden), "int8")?;
+        out.clear();
+        out.reserve(n_rows * hidden);
+        for enc in bytes.chunks_exact(self.bytes_per_row(hidden)) {
+            let lo = f32::from_le_bytes(enc[0..4].try_into().expect("4-byte header"));
+            let scale = f32::from_le_bytes(enc[4..8].try_into().expect("4-byte header"));
+            for &q in &enc[8..] {
+                out.push(lo + q as f32 * scale);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Top-K magnitude sparsification: each row keeps its K
+/// largest-magnitude elements as `(index: u16, value: f32)` pairs
+/// (indices ascending; ties broken toward the lower index, so the
+/// selection is deterministic) and the server densifies the rest to
+/// zero. Fixed `6·min(K, hidden)` bytes per row — no per-row header.
+pub struct TopK {
+    pub k: usize,
+}
+
+impl TopK {
+    fn k_eff(&self, hidden: usize) -> usize {
+        self.k.min(hidden)
+    }
+}
+
+impl RowCodec for TopK {
+    fn name(&self) -> String {
+        format!("topk:{}", self.k)
+    }
+
+    fn bytes_per_row(&self, hidden: usize) -> usize {
+        6 * self.k_eff(hidden)
+    }
+
+    fn lossless(&self) -> bool {
+        false
+    }
+
+    fn encode_rows(&self, rows: &[f32], hidden: usize, out: &mut Vec<u8>) {
+        assert!(hidden > 0 && rows.len() % hidden == 0, "topk: ragged row batch");
+        assert!(hidden <= u16::MAX as usize, "topk: hidden exceeds u16 indices");
+        let k = self.k_eff(hidden);
+        out.clear();
+        out.reserve(rows.len() / hidden * self.bytes_per_row(hidden));
+        let mut order: Vec<u16> = Vec::with_capacity(hidden);
+        let mut kept: Vec<u16> = Vec::with_capacity(k);
+        for row in rows.chunks_exact(hidden) {
+            order.clear();
+            order.extend(0..hidden as u16);
+            // |v| of non-negative floats orders like its bit pattern
+            // (NaN sorts above Inf), so the key is total and the sort
+            // deterministic: magnitude descending, index ascending
+            order.sort_unstable_by(|&a, &b| {
+                let ka = row[a as usize].abs().to_bits();
+                let kb = row[b as usize].abs().to_bits();
+                kb.cmp(&ka).then(a.cmp(&b))
+            });
+            kept.clear();
+            kept.extend_from_slice(&order[..k]);
+            kept.sort_unstable();
+            for &idx in &kept {
+                out.extend_from_slice(&idx.to_le_bytes());
+                out.extend_from_slice(&row[idx as usize].to_le_bytes());
+            }
+        }
+    }
+
+    fn decode_rows(
+        &self,
+        bytes: &[u8],
+        n_rows: usize,
+        hidden: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        check_encoded_len(bytes, n_rows, self.bytes_per_row(hidden), "topk")?;
+        out.clear();
+        out.resize(n_rows * hidden, 0.0);
+        let per_row = self.bytes_per_row(hidden);
+        for (r, enc) in bytes.chunks_exact(per_row).enumerate() {
+            for pair in enc.chunks_exact(6) {
+                let idx = u16::from_le_bytes(pair[0..2].try_into().expect("2-byte index")) as usize;
+                ensure!(idx < hidden, "topk: index {idx} out of range (hidden {hidden})");
+                let val = f32::from_le_bytes(pair[2..6].try_into().expect("4-byte value"));
+                out[r * hidden + idx] = val;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(codec: &dyn RowCodec, rows: &[f32], hidden: usize) -> Vec<f32> {
+        let mut bytes = Vec::new();
+        codec.encode_rows(rows, hidden, &mut bytes);
+        assert_eq!(bytes.len(), rows.len() / hidden * codec.bytes_per_row(hidden));
+        let mut out = Vec::new();
+        codec.decode_rows(&bytes, rows.len() / hidden, hidden, &mut out).unwrap();
+        assert_eq!(out.len(), rows.len());
+        out
+    }
+
+    #[test]
+    fn raw_is_bit_exact_including_specials() {
+        let rows = vec![
+            1.5f32,
+            -0.0,
+            f32::NEG_INFINITY,
+            f32::from_bits(0x7FC0_1234), // NaN with payload
+            3.25,
+            -7.0,
+            0.125,
+            1e-30,
+        ];
+        let back = roundtrip(&RawF32, &rows, 4);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&rows), bits(&back));
+    }
+
+    #[test]
+    fn f16_known_values_and_idempotence() {
+        // exactly representable values survive bit-for-bit
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)).to_bits(), v.to_bits(), "{v}");
+        }
+        // canonical bit patterns
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00); // overflow → Inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // smallest half subnormal and underflow-to-zero
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000);
+        // idempotence: a second trip is bit-exact
+        for v in [1.0e-3f32, 3.14159, -123.456, 2.0e-5, 7.5e4, -9.9e-8] {
+            let once = f16_bits_to_f32(f32_to_f16_bits(v));
+            let twice = f16_bits_to_f32(f32_to_f16_bits(once));
+            assert_eq!(once.to_bits(), twice.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next f16 (1 + 2^-10):
+        // RNE picks the even mantissa (1.0)
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        // just above the midpoint rounds up
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3C01);
+        // 1 + 3·2^-11 is midway between 0x3C01 and 0x3C02: even is 0x3C02
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3C02);
+    }
+
+    #[test]
+    fn bf16_known_values_and_idempotence() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 2.0, 1.0e30, -1.0e-30] {
+            assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(v)).to_bits(), v.to_bits(), "{v}");
+        }
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3F80);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7F80);
+        for v in [3.14159f32, -0.007, 12345.678, 1.0e-20] {
+            let once = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            let twice = bf16_bits_to_f32(f32_to_bf16_bits(once));
+            assert_eq!(once.to_bits(), twice.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn int8_error_stays_within_the_stated_bound() {
+        let hidden = 16;
+        let rows: Vec<f32> = (0..4 * hidden)
+            .map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.173)
+            .collect();
+        let back = roundtrip(&Int8, &rows, hidden);
+        for (row, dec) in rows.chunks_exact(hidden).zip(back.chunks_exact(hidden)) {
+            let lo = row.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let bound = (hi - lo) / 510.0 * 1.001 + 1e-7;
+            for (a, b) in row.iter().zip(dec) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_constant_row_is_exact() {
+        let rows = vec![4.25f32; 8];
+        let back = roundtrip(&Int8, &rows, 8);
+        assert_eq!(back, rows);
+        // and the extremes of a varying row are exact too (q=0 and q=255)
+        let rows = vec![-3.0f32, 0.1, 0.2, 5.0];
+        let back = roundtrip(&Int8, &rows, 4);
+        assert_eq!(back[0], -3.0);
+        assert!((back[3] - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_magnitudes_exactly() {
+        let hidden = 8;
+        let rows = vec![0.1f32, -9.0, 0.2, 3.0, -0.05, 7.5, 0.0, -2.0];
+        let codec = TopK { k: 3 };
+        let back = roundtrip(&codec, &rows, hidden);
+        // kept: |−9| (idx 1), |7.5| (idx 5), |3| (idx 3); rest zero
+        assert_eq!(back, vec![0.0, -9.0, 0.0, 3.0, 0.0, 7.5, 0.0, 0.0]);
+        // ties break toward the lower index, deterministically
+        let rows = vec![1.0f32, -1.0, 1.0, 0.5];
+        let codec = TopK { k: 2 };
+        let back = roundtrip(&codec, &rows, 4);
+        assert_eq!(back, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_clamps_k_to_hidden() {
+        let codec = TopK { k: 100 };
+        assert_eq!(codec.bytes_per_row(4), 24);
+        let rows = vec![1.0f32, 2.0, 3.0, 4.0];
+        let back = roundtrip(&codec, &rows, 4);
+        assert_eq!(back, rows);
+    }
+
+    #[test]
+    fn decode_rejects_wrong_payload_sizes() {
+        let mut out = Vec::new();
+        assert!(RawF32.decode_rows(&[0u8; 7], 1, 2, &mut out).is_err());
+        assert!(F16.decode_rows(&[0u8; 3], 1, 2, &mut out).is_err());
+        assert!(Int8.decode_rows(&[0u8; 9], 1, 2, &mut out).is_err());
+        assert!(TopK { k: 1 }.decode_rows(&[0u8; 5], 1, 2, &mut out).is_err());
+        // topk with an out-of-range index is data corruption, not a panic
+        let codec = TopK { k: 1 };
+        let mut bytes = Vec::new();
+        codec.encode_rows(&[1.0, 2.0], 2, &mut bytes);
+        bytes[0] = 0xFF;
+        bytes[1] = 0xFF;
+        assert!(codec.decode_rows(&bytes, 1, 2, &mut out).is_err());
+    }
+
+    #[test]
+    fn bytes_per_row_matches_encode_output() {
+        let hidden = 32;
+        let rows: Vec<f32> = (0..3 * hidden).map(|i| i as f32 * 0.37 - 11.0).collect();
+        let codecs: Vec<Box<dyn RowCodec>> = vec![
+            Box::new(RawF32),
+            Box::new(F16),
+            Box::new(Bf16),
+            Box::new(Int8),
+            Box::new(TopK { k: 7 }),
+        ];
+        for c in &codecs {
+            let mut bytes = Vec::new();
+            c.encode_rows(&rows, hidden, &mut bytes);
+            assert_eq!(bytes.len(), 3 * c.bytes_per_row(hidden), "{}", c.name());
+        }
+        // the compression ratios the acceptance criteria lean on
+        assert_eq!(RawF32.bytes_per_row(hidden), 128);
+        assert_eq!(Int8.bytes_per_row(hidden), 40); // 3.2x
+        assert_eq!(TopK { k: 7 }.bytes_per_row(hidden), 42); // 3.05x
+        assert_eq!(F16.bytes_per_row(hidden), 64); // 2x
+    }
+}

@@ -1,0 +1,447 @@
+//! The [`DeltaStore`] combinator: push only the rows that changed since
+//! the client's last *acknowledged* push (DESIGN.md §11).
+//!
+//! A federated client re-pushes its whole boundary set every round, but
+//! many rows barely move between rounds (and between the pre-training
+//! push and round 1 some do not move at all). `DeltaStore` keeps the
+//! last acknowledged copy of every pushed row plus a per-node **version
+//! vector**, compares each incoming push against it, and forwards only
+//! the rows whose change exceeds the ε threshold (ε = 0 compares bit
+//! patterns, so skipping is value-exact and `raw` vs `raw+delta` runs
+//! are bit-identical — the acceptance criterion).
+//!
+//! # Versions vs routing epochs
+//!
+//! The delta cache is only valid while the rows it skipped are still
+//! *resident* wherever the inner store routes reads. Two server-side
+//! mechanisms cover that:
+//!
+//! * Skipped rows were acknowledged by an earlier push, so a replicated
+//!   [`ShardedStore`](crate::coordinator::ShardedStore) holds them on
+//!   every owner; its quarantine/failover machinery serves them through
+//!   faults exactly as it serves re-pushed rows (the blackout parity
+//!   test in `tests/fault_tolerance.rs`).
+//! * A [`rebalance`](crate::coordinator::ShardedStore::rebalance)
+//!   migrates rows by *logical occupancy* — everything ever pushed,
+//!   including delta-skipped rows — so routing changes preserve them.
+//!   Still, the delta layer treats a routing-epoch bump as a barrier:
+//!   when the *server-reported* epoch moves (`stats().epoch`, which
+//!   travels over TCP where the local [`EmbeddingStore::epoch`]
+//!   accessor cannot), the cache is dropped and the next push resyncs
+//!   in full. That keeps delta correct even for out-of-protocol rejoins
+//!   (a shard re-admitted with lost state) at the cost of one full push
+//!   per rebalance.
+//!
+//! The per-node version counter is bumped on every accepted changed-row
+//! push; [`DeltaStore::version_of`] exposes it so tests (and a future
+//! anti-entropy repair) can compare client and server generations.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::{RpcKind, RpcRecord};
+use crate::coordinator::store::{EmbeddingStore, StoreStats};
+
+struct DeltaState {
+    /// node → last acknowledged rows, concatenated per layer
+    /// (`layers * hidden` floats).
+    last: HashMap<u32, Vec<f32>>,
+    /// node → push version (bumped on every accepted changed push).
+    versions: HashMap<u32, u64>,
+    /// Routing epoch the cache is valid under.
+    epoch: u64,
+}
+
+/// Delta-push decorator over any [`EmbeddingStore`] (see module docs).
+///
+/// Pulls pass straight through. Pushes are filtered to changed rows;
+/// the returned [`RpcRecord`] keeps the *logical* row count (what the
+/// caller asked to push) while `bytes`/`time` reflect only what
+/// actually moved — so `embeddings_pushed` accounting stays comparable
+/// across codecs while the wire meters show the savings.
+///
+/// The state lock is held across the inner push so an acknowledgement
+/// and its cache update are atomic; parallel clients push disjoint node
+/// sets, so the serialization this adds is bounded by the store call
+/// itself.
+pub struct DeltaStore {
+    inner: Arc<dyn EmbeddingStore>,
+    eps: f32,
+    state: Mutex<DeltaState>,
+    rows_skipped: AtomicUsize,
+    /// Raw-f32 bytes the skipped rows would have cost — added to
+    /// `StoreStats::raw_tx` so compression ratios credit the delta.
+    skipped_raw: AtomicUsize,
+}
+
+impl DeltaStore {
+    /// Wrap `inner`; `eps = 0` skips only bit-identical rows, `eps > 0`
+    /// also skips rows whose every element moved by at most ε (lossy:
+    /// the store then serves the previous value).
+    pub fn new(inner: Arc<dyn EmbeddingStore>, eps: f32) -> Self {
+        assert!(eps >= 0.0 && eps.is_finite(), "delta epsilon must be finite and >= 0");
+        let epoch = Self::routing_epoch_of(inner.as_ref());
+        Self {
+            inner,
+            eps,
+            state: Mutex::new(DeltaState {
+                last: HashMap::new(),
+                versions: HashMap::new(),
+                epoch,
+            }),
+            rows_skipped: AtomicUsize::new(0),
+            skipped_raw: AtomicUsize::new(0),
+        }
+    }
+
+    /// The inner plane's routing epoch as the *server* reports it.
+    /// `EmbeddingStore::epoch()` is a cheap local accessor — a TCP
+    /// client always answers 0 because the remote epoch only travels in
+    /// `stats()` — so the barrier consults `stats().epoch` (one small
+    /// control-plane RPC per push; pushes happen once per round per
+    /// client). A store whose control plane is currently unreachable
+    /// reports the larger of the two sources, falling back to the local
+    /// accessor rather than failing the push.
+    fn routing_epoch_of(inner: &dyn EmbeddingStore) -> u64 {
+        let local = inner.epoch();
+        match inner.stats() {
+            Ok(st) => st.epoch.max(local),
+            Err(_) => local,
+        }
+    }
+
+    pub fn eps(&self) -> f32 {
+        self.eps
+    }
+
+    /// Rows elided from pushes so far.
+    pub fn rows_skipped(&self) -> usize {
+        self.rows_skipped.load(Ordering::Relaxed)
+    }
+
+    /// Push version of `node` (0 if never pushed through this store).
+    pub fn version_of(&self, node: u32) -> u64 {
+        self.state.lock().unwrap().versions.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Routing epoch the delta cache is currently valid under.
+    pub fn cache_epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Has `node` an acknowledged row cached (i.e. eligible to be
+    /// skipped)?
+    pub fn is_cached(&self, node: u32) -> bool {
+        self.state.lock().unwrap().last.contains_key(&node)
+    }
+
+    /// Does the cached copy differ from the candidate rows of batch
+    /// position `i` beyond ε?
+    fn changed(&self, old: &[f32], per_layer: &[Vec<f32>], i: usize, h: usize) -> bool {
+        for (l, rows) in per_layer.iter().enumerate() {
+            let new = &rows[i * h..(i + 1) * h];
+            let prev = &old[l * h..(l + 1) * h];
+            for (a, b) in new.iter().zip(prev) {
+                let moved = if self.eps == 0.0 {
+                    a.to_bits() != b.to_bits()
+                } else {
+                    (a - b).abs() > self.eps
+                };
+                if moved {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+impl EmbeddingStore for DeltaStore {
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn hidden(&self) -> usize {
+        self.inner.hidden()
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        if nodes.is_empty() {
+            return self.inner.push(nodes, per_layer);
+        }
+        let h = self.inner.hidden();
+        let layers = per_layer.len();
+        // routing-generation barrier: a rebalance under our feet drops
+        // the cache, so the next push resyncs in full (module docs).
+        // The epoch comes from the server side (`stats().epoch`) so the
+        // barrier also fires across a TCP transport, whose local
+        // `epoch()` accessor is always 0.
+        let epoch = Self::routing_epoch_of(self.inner.as_ref());
+        let mut state = self.state.lock().unwrap();
+        if epoch != state.epoch {
+            state.last.clear();
+            state.epoch = epoch;
+        }
+        let changed: Vec<usize> = (0..nodes.len())
+            .filter(|&i| match state.last.get(&nodes[i]) {
+                None => true,
+                Some(old) => self.changed(old, per_layer, i, h),
+            })
+            .collect();
+        let skipped = nodes.len() - changed.len();
+        let mut rec = if changed.len() == nodes.len() {
+            self.inner.push(nodes, per_layer)?
+        } else if changed.is_empty() {
+            // nothing moved: the store already holds every row
+            RpcRecord {
+                kind: RpcKind::Push,
+                rows: 0,
+                bytes: 0,
+                time: 0.0,
+            }
+        } else {
+            let sub_nodes: Vec<u32> = changed.iter().map(|&i| nodes[i]).collect();
+            let sub_layers: Vec<Vec<f32>> = per_layer
+                .iter()
+                .map(|rows| {
+                    let mut v = Vec::with_capacity(changed.len() * h);
+                    for &i in &changed {
+                        v.extend_from_slice(&rows[i * h..(i + 1) * h]);
+                    }
+                    v
+                })
+                .collect();
+            self.inner.push(&sub_nodes, &sub_layers)?
+        };
+        // acknowledged: record the pushed rows and bump their versions
+        for &i in &changed {
+            let node = nodes[i];
+            let entry = state.last.entry(node).or_default();
+            entry.clear();
+            entry.reserve(layers * h);
+            for rows in per_layer {
+                entry.extend_from_slice(&rows[i * h..(i + 1) * h]);
+            }
+            *state.versions.entry(node).or_insert(0) += 1;
+        }
+        drop(state);
+        if skipped > 0 {
+            self.rows_skipped.fetch_add(skipped, Ordering::Relaxed);
+            self.skipped_raw.fetch_add(skipped * layers * h * 4, Ordering::Relaxed);
+        }
+        // logical accounting: the caller pushed the whole batch
+        rec.rows = nodes.len();
+        Ok(rec)
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        self.inner.pull_into(nodes, on_demand, out)
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        let mut st = self.inner.stats()?;
+        // credit the elided rows to the raw baseline so ratios reflect
+        // what a delta-less run would have moved
+        st.raw_tx += self.skipped_raw.load(Ordering::Relaxed);
+        Ok(st)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.inner.epoch()
+    }
+
+    fn codec(&self) -> String {
+        if self.eps > 0.0 {
+            format!("{}+delta:{}", self.inner.codec(), self.eps)
+        } else {
+            format!("{}+delta", self.inner.codec())
+        }
+    }
+
+    fn describe(&self) -> String {
+        let eps = if self.eps > 0.0 {
+            format!("eps {}", self.eps)
+        } else {
+            "exact".into()
+        };
+        format!("delta({eps} over {})", self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::embedding_server::EmbeddingServer;
+    use crate::coordinator::netsim::NetConfig;
+    use crate::coordinator::store::ShardedStore;
+
+    fn server(h: usize) -> Arc<EmbeddingServer> {
+        Arc::new(EmbeddingServer::new(2, h, NetConfig::default()))
+    }
+
+    fn rows(nodes: &[u32], h: usize, salt: f32) -> Vec<f32> {
+        nodes
+            .iter()
+            .flat_map(|&n| (0..h).map(move |j| n as f32 * 2.0 + j as f32 + salt))
+            .collect()
+    }
+
+    #[test]
+    fn identical_repush_is_skipped_entirely() {
+        let h = 4;
+        let inner = server(h);
+        let delta = DeltaStore::new(Arc::clone(&inner) as Arc<dyn EmbeddingStore>, 0.0);
+        let nodes = [3u32, 7, 11];
+        let l1 = rows(&nodes, h, 0.0);
+        let l2 = rows(&nodes, h, 9.0);
+        let rec = delta.push(&nodes, &[l1.clone(), l2.clone()]).unwrap();
+        assert_eq!(rec.rows, 3);
+        assert!(rec.bytes > 0);
+        assert_eq!(delta.rows_skipped(), 0);
+
+        // bit-identical re-push: nothing crosses, logical rows intact
+        let rec = delta.push(&nodes, &[l1.clone(), l2.clone()]).unwrap();
+        assert_eq!(rec.rows, 3);
+        assert_eq!(rec.bytes, 0);
+        assert_eq!(rec.time, 0.0);
+        assert_eq!(delta.rows_skipped(), 3);
+        let (_, pushes) = inner.rpc_counts();
+        assert_eq!(pushes, 1, "skipped push still reached the server");
+        // values unchanged and versions bumped once
+        let (got, _) = delta.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], l1);
+        assert_eq!(delta.version_of(3), 1);
+        assert_eq!(delta.version_of(999), 0);
+    }
+
+    #[test]
+    fn partial_change_pushes_only_the_changed_rows() {
+        let h = 4;
+        let inner = server(h);
+        let delta = DeltaStore::new(Arc::clone(&inner) as Arc<dyn EmbeddingStore>, 0.0);
+        let nodes = [1u32, 2, 3, 4];
+        let l1 = rows(&nodes, h, 0.0);
+        let l2 = rows(&nodes, h, 1.0);
+        delta.push(&nodes, &[l1.clone(), l2.clone()]).unwrap();
+
+        // mutate only node 3 (batch position 2) in layer 2
+        let mut l2b = l2.clone();
+        l2b[2 * h] += 5.0;
+        delta.push(&nodes, &[l1.clone(), l2b.clone()]).unwrap();
+        assert_eq!(delta.rows_skipped(), 3);
+        assert_eq!(delta.version_of(3), 2);
+        assert_eq!(delta.version_of(1), 1);
+        // the store holds the new value for 3, old values elsewhere
+        let (got, _) = delta.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], l1);
+        assert_eq!(got[1], l2b);
+    }
+
+    #[test]
+    fn eps_threshold_suppresses_small_changes() {
+        let h = 2;
+        let inner = server(h);
+        let delta = DeltaStore::new(Arc::clone(&inner) as Arc<dyn EmbeddingStore>, 0.1);
+        let nodes = [5u32];
+        delta.push(&nodes, &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        // moves of <= eps are absorbed (store keeps the old row)...
+        delta.push(&nodes, &[vec![1.05, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(delta.rows_skipped(), 1);
+        let (got, _) = delta.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], vec![1.0, 2.0]);
+        // ...a move beyond eps goes through
+        delta.push(&nodes, &[vec![1.5, 2.0], vec![3.0, 4.0]]).unwrap();
+        let (got, _) = delta.pull(&nodes, false).unwrap();
+        assert_eq!(got[0], vec![1.5, 2.0]);
+    }
+
+    #[test]
+    fn epoch_bump_forces_a_full_resync() {
+        let h = 4;
+        let sharded = Arc::new(
+            ShardedStore::in_process_replicated(3, 1, 2, h, NetConfig::default()).unwrap(),
+        );
+        let delta = DeltaStore::new(Arc::clone(&sharded) as Arc<dyn EmbeddingStore>, 0.0);
+        let nodes: Vec<u32> = (0..40).collect();
+        let l = rows(&nodes, h, 0.0);
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        assert_eq!(delta.rows_skipped(), 40);
+        assert_eq!(delta.cache_epoch(), 0);
+
+        // a rebalance bumps the routing epoch: the next push resyncs
+        sharded.rebalance(sharded.map()).unwrap();
+        let before = delta.rows_skipped();
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        assert_eq!(delta.rows_skipped(), before, "post-rebalance push must not skip");
+        assert_eq!(delta.cache_epoch(), 1);
+        // and the cache is warm again afterwards
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        assert_eq!(delta.rows_skipped(), before + 40);
+    }
+
+    #[test]
+    fn epoch_barrier_fires_across_tcp() {
+        use crate::coordinator::net_transport::{EmbServerDaemon, TcpEmbeddingStore};
+        let h = 4;
+        let sharded = Arc::new(
+            ShardedStore::in_process_replicated(3, 1, 2, h, NetConfig::default()).unwrap(),
+        );
+        let daemon = EmbServerDaemon::start(
+            Arc::clone(&sharded) as Arc<dyn EmbeddingStore>,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let tcp: Arc<dyn EmbeddingStore> =
+            Arc::new(TcpEmbeddingStore::connect(daemon.addr.to_string(), 2, h).unwrap());
+        let delta = DeltaStore::new(tcp, 0.0);
+        let nodes: Vec<u32> = (0..20).collect();
+        let l = rows(&nodes, h, 0.0);
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        assert_eq!(delta.rows_skipped(), 20);
+        // a rebalance BEHIND the daemon bumps the remote routing epoch;
+        // the barrier must fire even though the TCP client's local
+        // `epoch()` accessor stays 0 (the epoch travels in stats)
+        sharded.rebalance(sharded.map()).unwrap();
+        let before = delta.rows_skipped();
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        assert_eq!(delta.rows_skipped(), before, "post-rebalance push must not skip");
+        assert_eq!(delta.cache_epoch(), 1);
+        daemon.shutdown();
+    }
+
+    #[test]
+    fn skipped_rows_credit_the_raw_baseline() {
+        let h = 4;
+        let delta = DeltaStore::new(server(h) as Arc<dyn EmbeddingStore>, 0.0);
+        let nodes = [1u32, 2];
+        let l = rows(&nodes, h, 0.0);
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        let tx_after_first = delta.stats().unwrap();
+        delta.push(&nodes, &[l.clone(), l.clone()]).unwrap();
+        let st = delta.stats().unwrap();
+        // encoded tx did not move (nothing crossed), but the raw
+        // baseline grew by the skipped rows' f32 cost
+        assert_eq!(st.bytes_tx, tx_after_first.bytes_tx);
+        assert_eq!(st.raw_tx, tx_after_first.raw_tx + 2 * 2 * h * 4);
+    }
+
+    #[test]
+    fn describe_and_codec_name_the_combinator() {
+        let exact = DeltaStore::new(server(4) as Arc<dyn EmbeddingStore>, 0.0);
+        assert_eq!(exact.codec(), "raw+delta");
+        assert!(exact.describe().starts_with("delta(exact over "));
+        let eps = DeltaStore::new(server(4) as Arc<dyn EmbeddingStore>, 0.5);
+        assert_eq!(eps.codec(), "raw+delta:0.5");
+        assert!(eps.describe().contains("eps 0.5"));
+    }
+}

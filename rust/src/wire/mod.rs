@@ -1,0 +1,628 @@
+//! The embedding wire-compression plane (DESIGN.md §11).
+//!
+//! OptimES's headline lever is shrinking the bytes that move
+//! boundary-vertex embeddings through the server — yet until this
+//! subsystem every row crossed the wire as raw little-endian f32, so
+//! the axis the paper cares most about was neither reduced nor
+//! measured. This module makes it both:
+//!
+//! * [`RowCodec`] — encode/decode a batch of embedding rows with exact
+//!   per-row size accounting. Backends in [`codecs`]: [`RawF32`] (the
+//!   oracle), [`F16`]/[`Bf16`] truncation, [`Int8`] per-row affine
+//!   quantization, [`TopK`] sparsification. All strictly row-granular,
+//!   so sharding a batch never changes decoded values.
+//! * [`DeltaStore`] ([`delta`]) — push only rows changed since the last
+//!   acknowledged push, versioned against the router's epoch.
+//! * [`CodecStore`] — the metering decorator for model-time backends:
+//!   values round-trip through the codec exactly as they would over a
+//!   real wire, `StoreStats::bytes_tx`/`bytes_rx` meter the encoded
+//!   payload, and the netsim virtual time is charged from those
+//!   *metered* bytes instead of assuming 4-byte floats.
+//! * [`CodecSpec`] — the `--wire-codec` grammar
+//!   (`raw|f16|bf16|int8|topk:K[,delta[:EPS]]`, env
+//!   `OPTIMES_WIRE_CODEC`) plus the wrap helpers the harness and tests
+//!   share.
+//!
+//! The TCP transport negotiates the codec per connection with a wire
+//! handshake op instead of using [`CodecStore`] — see
+//! `coordinator/net_transport.rs`; both paths produce identical decoded
+//! values (`tests/store_parity.rs` pins the matrix).
+
+pub mod codecs;
+pub mod delta;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::metrics::{RpcKind, RpcRecord};
+use crate::coordinator::netsim::NetConfig;
+use crate::coordinator::store::{EmbeddingStore, StoreStats};
+
+pub use codecs::{Bf16, F16, Int8, RawF32, TopK};
+pub use delta::DeltaStore;
+
+/// Encode/decode one batch of embedding rows, with exact size
+/// accounting.
+///
+/// # Contract
+///
+/// * `encode_rows` consumes row-major `[n, hidden]` floats and fills
+///   `out` (cleared first) with exactly `n * bytes_per_row(hidden)`
+///   bytes; `decode_rows` inverts it into `n * hidden` floats. Both
+///   sides compute the payload length from the row count, so encoded
+///   streams need no extra framing.
+/// * Encoding is **row-granular**: a row's bytes depend only on that
+///   row. Slicing a batch across shards and re-merging decoded rows is
+///   therefore value-identical to encoding the whole batch.
+/// * Lossy codecs must be *idempotent*: re-encoding a decoded payload
+///   is bit-exact, so the push→store→pull double round-trip settles
+///   after one hop and every backend (in-process decorator, TCP
+///   handshake, sharded compound) serves the same bits.
+pub trait RowCodec: Send + Sync {
+    /// Grammar name (`raw`, `f16`, `bf16`, `int8`, `topk:K`) — what the
+    /// wire handshake sends and reports display.
+    fn name(&self) -> String;
+
+    /// Exact encoded bytes per row of width `hidden`.
+    fn bytes_per_row(&self, hidden: usize) -> usize;
+
+    /// Does decode(encode(x)) reproduce x bit-for-bit for every input?
+    fn lossless(&self) -> bool;
+
+    /// Is this the identity (raw) codec? Identity paths skip the
+    /// encode/decode round-trip entirely.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Encode `rows` (row-major `[n, hidden]`) into `out` (cleared).
+    fn encode_rows(&self, rows: &[f32], hidden: usize, out: &mut Vec<u8>);
+
+    /// Decode exactly `n_rows * hidden` floats from `bytes` into `out`
+    /// (cleared). Fails on malformed payloads, never panics on wire
+    /// data.
+    fn decode_rows(
+        &self,
+        bytes: &[u8],
+        n_rows: usize,
+        hidden: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+}
+
+/// The codec half of a [`CodecSpec`]: which [`RowCodec`] to run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecKind {
+    Raw,
+    F16,
+    Bf16,
+    Int8,
+    TopK(usize),
+}
+
+impl CodecKind {
+    /// Parse one codec term of the `--wire-codec` grammar:
+    ///
+    /// ```text
+    /// codec := 'raw' | 'f16' | 'bf16' | 'int8' | 'topk:' K
+    /// ```
+    pub fn parse(s: &str) -> Result<CodecKind> {
+        let s = s.trim();
+        match s {
+            "raw" => Ok(CodecKind::Raw),
+            "f16" => Ok(CodecKind::F16),
+            "bf16" => Ok(CodecKind::Bf16),
+            "int8" => Ok(CodecKind::Int8),
+            _ => {
+                if let Some(k) = s.strip_prefix("topk:") {
+                    let k: usize = k.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("topk:K expects a positive integer, got {k:?}")
+                    })?;
+                    ensure!(k > 0, "topk:K expects a positive integer, got 0");
+                    return Ok(CodecKind::TopK(k));
+                }
+                bail!("unknown wire codec {s:?} (grammar: raw | f16 | bf16 | int8 | topk:K)")
+            }
+        }
+    }
+
+    /// Instantiate the codec.
+    pub fn build(&self) -> Arc<dyn RowCodec> {
+        match self {
+            CodecKind::Raw => Arc::new(RawF32),
+            CodecKind::F16 => Arc::new(F16),
+            CodecKind::Bf16 => Arc::new(Bf16),
+            CodecKind::Int8 => Arc::new(Int8),
+            CodecKind::TopK(k) => Arc::new(TopK { k: *k }),
+        }
+    }
+
+    pub fn is_raw(&self) -> bool {
+        matches!(self, CodecKind::Raw)
+    }
+
+    /// Grammar name (matches the built codec's `RowCodec::name`).
+    pub fn name(&self) -> String {
+        match self {
+            CodecKind::Raw => "raw".into(),
+            CodecKind::F16 => "f16".into(),
+            CodecKind::Bf16 => "bf16".into(),
+            CodecKind::Int8 => "int8".into(),
+            CodecKind::TopK(k) => format!("topk:{k}"),
+        }
+    }
+}
+
+/// A parsed `--wire-codec` / `OPTIMES_WIRE_CODEC` value: the codec plus
+/// the optional delta combinator.
+///
+/// Grammar:
+///
+/// ```text
+/// spec  := codec [',' delta]
+/// codec := 'raw' | 'f16' | 'bf16' | 'int8' | 'topk:' K
+/// delta := 'delta' [':' EPS]          (EPS >= 0; default 0 = exact)
+/// ```
+///
+/// Examples: `raw`, `int8`, `topk:8`, `raw,delta`, `int8,delta:0.001`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodecSpec {
+    pub codec: CodecKind,
+    /// `Some(eps)` enables the delta combinator (`eps = 0` → exact
+    /// change detection).
+    pub delta: Option<f32>,
+}
+
+impl Default for CodecSpec {
+    fn default() -> Self {
+        Self {
+            codec: CodecKind::Raw,
+            delta: None,
+        }
+    }
+}
+
+impl CodecSpec {
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        let s = s.trim();
+        ensure!(!s.is_empty(), "empty wire-codec spec (grammar: CODEC[,delta[:EPS]])");
+        let (codec_part, delta_part) = match s.split_once(',') {
+            Some((c, d)) => (c, Some(d.trim())),
+            None => (s, None),
+        };
+        let codec = CodecKind::parse(codec_part)?;
+        let delta = match delta_part {
+            None => None,
+            Some("delta") => Some(0.0),
+            Some(d) => {
+                let eps = d.strip_prefix("delta:").with_context(|| {
+                    format!("wire-codec combinator {d:?} (grammar: CODEC[,delta[:EPS]])")
+                })?;
+                let eps: f32 = eps
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("delta epsilon {eps:?} is not a number"))?;
+                ensure!(
+                    eps >= 0.0 && eps.is_finite(),
+                    "delta epsilon {eps} must be finite and >= 0"
+                );
+                Some(eps)
+            }
+        };
+        Ok(CodecSpec { codec, delta })
+    }
+
+    /// Is this the default plane (raw, no delta — i.e. no wrapping at
+    /// all)?
+    pub fn is_plain(&self) -> bool {
+        self.codec.is_raw() && self.delta.is_none()
+    }
+
+    /// Canonical spec string (parses back to `self`).
+    pub fn spec_string(&self) -> String {
+        let mut s = self.codec.name();
+        match self.delta {
+            Some(eps) if eps > 0.0 => s.push_str(&format!(",delta:{eps}")),
+            Some(_) => s.push_str(",delta"),
+            None => {}
+        }
+        s
+    }
+
+    /// Wrap a model-time store (in-process slab / sharded compound) in
+    /// the codec + delta layers this spec asks for. Raw-no-delta specs
+    /// hand the store back untouched. `net` prices the metered bytes.
+    pub fn wrap_store(
+        &self,
+        store: Arc<dyn EmbeddingStore>,
+        net: NetConfig,
+    ) -> Arc<dyn EmbeddingStore> {
+        let mut store = store;
+        if !self.codec.is_raw() {
+            store = Arc::new(CodecStore::new(store, self.codec.build(), net));
+        }
+        self.wrap_delta(store)
+    }
+
+    /// Apply only the delta combinator (for transports that already
+    /// carry the codec on the wire, i.e. TCP backends).
+    pub fn wrap_delta(&self, store: Arc<dyn EmbeddingStore>) -> Arc<dyn EmbeddingStore> {
+        match self.delta {
+            Some(eps) => Arc::new(DeltaStore::new(store, eps)),
+            None => store,
+        }
+    }
+
+    /// The `describe()` string `wrap_store` would produce over a store
+    /// described as `inner` — shared with `harness::store_desc` so
+    /// `optimes info` and session reports never drift apart.
+    pub fn wrapped_desc(&self, inner: String) -> String {
+        let mut d = inner;
+        if !self.codec.is_raw() {
+            d = format!("wire({} over {d})", self.codec.name());
+        }
+        if let Some(eps) = self.delta {
+            let eps = if eps > 0.0 {
+                format!("eps {eps}")
+            } else {
+                "exact".into()
+            };
+            d = format!("delta({eps} over {d})");
+        }
+        d
+    }
+}
+
+impl std::fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec_string())
+    }
+}
+
+/// Parse `OPTIMES_WIRE_CODEC` (default: plain raw).
+pub fn spec_from_env() -> Result<CodecSpec> {
+    match std::env::var("OPTIMES_WIRE_CODEC") {
+        Ok(s) if !s.trim().is_empty() => CodecSpec::parse(&s).context("OPTIMES_WIRE_CODEC"),
+        _ => Ok(CodecSpec::default()),
+    }
+}
+
+/// Wrap `store` per the environment spec (panics on a malformed env —
+/// the CLI validates it up front; tests use the default otherwise).
+pub fn wrap_from_env(store: Arc<dyn EmbeddingStore>, net: NetConfig) -> Arc<dyn EmbeddingStore> {
+    let spec = spec_from_env().expect("OPTIMES_WIRE_CODEC");
+    spec.wrap_store(store, net)
+}
+
+/// The codec boundary for model-time backends: values round-trip
+/// through the codec exactly as they would over a real wire (pushes are
+/// encoded→decoded before reaching the inner store, pulls on the way
+/// back out), the encoded payload is metered into
+/// [`StoreStats::bytes_tx`]/[`bytes_rx`], and each RPC's virtual time
+/// is recharged from the *metered* bytes via
+/// [`NetConfig::emb_bytes_metered`] — so the netsim cost model responds
+/// to the codec choice instead of assuming 4-byte floats.
+///
+/// The TCP transport does not need this decorator (it encodes on the
+/// socket and meters what it actually wrote); compose it over the
+/// in-process slab or a sharded compound, with [`DeltaStore`] outside
+/// if the spec asks for delta pushes.
+///
+/// [`bytes_rx`]: StoreStats::bytes_rx
+pub struct CodecStore {
+    inner: Arc<dyn EmbeddingStore>,
+    codec: Arc<dyn RowCodec>,
+    net: NetConfig,
+    bytes_tx: AtomicUsize,
+    bytes_rx: AtomicUsize,
+    raw_tx: AtomicUsize,
+    raw_rx: AtomicUsize,
+}
+
+/// Reusable per-thread codec scratch (encode buffer + decoded-layer
+/// arena), so steady-state RPCs through [`CodecStore`] allocate nothing
+/// — mirroring the per-connection `enc_buf` of the TCP path.
+fn with_codec_scratch<R>(f: impl FnOnce(&mut Vec<u8>, &mut Vec<Vec<f32>>) -> R) -> R {
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<(Vec<u8>, Vec<Vec<f32>>)> =
+            std::cell::RefCell::new((Vec::new(), Vec::new()));
+    }
+    SCRATCH.with(|cell| {
+        let mut s = cell.borrow_mut();
+        let (bytes, arena) = &mut *s;
+        f(bytes, arena)
+    })
+}
+
+impl CodecStore {
+    pub fn new(inner: Arc<dyn EmbeddingStore>, codec: Arc<dyn RowCodec>, net: NetConfig) -> Self {
+        Self {
+            inner,
+            codec,
+            net,
+            bytes_tx: AtomicUsize::new(0),
+            bytes_rx: AtomicUsize::new(0),
+            raw_tx: AtomicUsize::new(0),
+            raw_rx: AtomicUsize::new(0),
+        }
+    }
+
+    /// Encoded payload bytes pushed / pulled so far.
+    pub fn wire_bytes(&self) -> (usize, usize) {
+        (
+            self.bytes_tx.load(Ordering::Relaxed),
+            self.bytes_rx.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Re-price an inner RPC record under the codec and meter it.
+    ///
+    /// The inner plane already modeled this RPC at raw width — for a
+    /// sharded compound that is `time = max` over concurrent sub-RPCs
+    /// and `bytes = sum` over every *physical* copy (replicas included).
+    /// Both structures must survive the codec, so instead of recomputing
+    /// time from the byte total (which would charge a sharded transfer
+    /// as if one link carried everything), the bytes-dependent excess of
+    /// the inner time is *scaled* by the compression ratio: a
+    /// row-granular codec shrinks every sub-payload by the same factor,
+    /// so `latency + (t − latency) · ratio` reproduces the max-over-
+    /// shards model exactly (modulo the µs measured-service term). The
+    /// meters are scaled to physical copies via `rec.bytes / raw frame`
+    /// (≈ R+1 for replicated pushes, 1 otherwise), so codec runs and
+    /// raw runs count replication amplification identically.
+    fn recharge(&self, rec: &mut RpcRecord, rows: usize, layers: usize, codec_wall: f64) {
+        if rows == 0 {
+            return; // empty RPCs keep the inner record verbatim
+        }
+        let h = self.inner.hidden();
+        let payload = rows * layers * self.codec.bytes_per_row(h);
+        let raw_payload = rows * layers * h * 4;
+        let raw_frame = self.net.emb_bytes(rows, layers, h);
+        let copies = if raw_frame > 0 && rec.bytes > 0 {
+            rec.bytes as f64 / raw_frame as f64
+        } else {
+            1.0
+        };
+        let phys = |x: usize| (x as f64 * copies).round() as usize;
+        let metered = phys(self.net.emb_bytes_metered(payload, rows, layers));
+        let ratio = if rec.bytes > 0 {
+            metered as f64 / rec.bytes as f64
+        } else {
+            1.0
+        };
+        let tx = matches!(rec.kind, RpcKind::Push);
+        let (enc_gauge, raw_gauge) = if tx {
+            (&self.bytes_tx, &self.raw_tx)
+        } else {
+            (&self.bytes_rx, &self.raw_rx)
+        };
+        enc_gauge.fetch_add(phys(payload), Ordering::Relaxed);
+        raw_gauge.fetch_add(phys(raw_payload), Ordering::Relaxed);
+        rec.time = self.net.latency + (rec.time - self.net.latency).max(0.0) * ratio + codec_wall;
+        rec.bytes = metered;
+    }
+}
+
+impl EmbeddingStore for CodecStore {
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn hidden(&self) -> usize {
+        self.inner.hidden()
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        let h = self.inner.hidden();
+        let (n, layers) = (nodes.len(), per_layer.len());
+        let (mut rec, codec_wall) = if self.codec.is_identity() || n == 0 {
+            (self.inner.push(nodes, per_layer)?, 0.0)
+        } else {
+            // the wire round-trip: the server stores what the client's
+            // encoded payload decodes to, exactly like the TCP path
+            // (scratch reused per thread — zero-alloc steady state)
+            with_codec_scratch(|bytes, arena| -> Result<(RpcRecord, f64)> {
+                let t0 = Instant::now();
+                arena.truncate(layers);
+                while arena.len() < layers {
+                    arena.push(Vec::new());
+                }
+                for (rows, out) in per_layer.iter().zip(arena.iter_mut()) {
+                    self.codec.encode_rows(rows, h, bytes);
+                    self.codec.decode_rows(bytes, n, h, out)?;
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                Ok((self.inner.push(nodes, &arena[..layers])?, wall))
+            })?
+        };
+        self.recharge(&mut rec, n, layers, codec_wall);
+        Ok(rec)
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        let h = self.inner.hidden();
+        let mut rec = self.inner.pull_into(nodes, on_demand, out)?;
+        let (n, layers) = (nodes.len(), out.len());
+        let mut codec_wall = 0.0;
+        if !self.codec.is_identity() && n > 0 {
+            with_codec_scratch(|bytes, _| -> Result<()> {
+                let t0 = Instant::now();
+                for rows in out.iter_mut() {
+                    self.codec.encode_rows(rows, h, bytes);
+                    self.codec.decode_rows(bytes, n, h, rows)?;
+                }
+                codec_wall = t0.elapsed().as_secs_f64();
+                Ok(())
+            })?;
+        }
+        self.recharge(&mut rec, n, layers, codec_wall);
+        Ok(rec)
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        // this decorator *is* the wire boundary: its meters replace
+        // whatever the inner store accounted for hops that don't exist
+        let mut st = self.inner.stats()?;
+        st.bytes_tx = self.bytes_tx.load(Ordering::Relaxed);
+        st.bytes_rx = self.bytes_rx.load(Ordering::Relaxed);
+        st.raw_tx = self.raw_tx.load(Ordering::Relaxed);
+        st.raw_rx = self.raw_rx.load(Ordering::Relaxed);
+        Ok(st)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.inner.epoch()
+    }
+
+    fn codec(&self) -> String {
+        self.codec.name()
+    }
+
+    fn describe(&self) -> String {
+        format!("wire({} over {})", self.codec.name(), self.inner.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::embedding_server::EmbeddingServer;
+
+    fn server(h: usize) -> Arc<dyn EmbeddingStore> {
+        Arc::new(EmbeddingServer::new(2, h, NetConfig::default()))
+    }
+
+    #[test]
+    fn spec_grammar_parses_and_roundtrips() {
+        for (s, codec, delta) in [
+            ("raw", CodecKind::Raw, None),
+            ("f16", CodecKind::F16, None),
+            ("bf16", CodecKind::Bf16, None),
+            ("int8", CodecKind::Int8, None),
+            ("topk:8", CodecKind::TopK(8), None),
+            ("raw,delta", CodecKind::Raw, Some(0.0)),
+            ("int8,delta:0.001", CodecKind::Int8, Some(0.001)),
+            (" topk:4 , delta ", CodecKind::TopK(4), Some(0.0)),
+        ] {
+            let spec = CodecSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e:#}"));
+            assert_eq!(spec.codec, codec, "{s}");
+            assert_eq!(spec.delta, delta, "{s}");
+            // canonical form re-parses to the same spec
+            assert_eq!(CodecSpec::parse(&spec.spec_string()).unwrap(), spec, "{s}");
+        }
+        assert!(CodecSpec::parse("raw").unwrap().is_plain());
+        assert!(!CodecSpec::parse("raw,delta").unwrap().is_plain());
+        assert!(!CodecSpec::parse("f16").unwrap().is_plain());
+    }
+
+    #[test]
+    fn spec_grammar_rejects_malformed_input() {
+        for bad in [
+            "",
+            "gzip",
+            "topk",
+            "topk:0",
+            "topk:x",
+            "int8,delta:-1",
+            "int8,delta:fast",
+            "int8,zeta",
+            "raw,delta:inf",
+        ] {
+            assert!(CodecSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn plain_spec_wraps_nothing() {
+        let spec = CodecSpec::default();
+        let store = spec.wrap_store(server(4), NetConfig::default());
+        assert_eq!(store.describe(), "in-process");
+        assert_eq!(store.codec(), "raw");
+        assert_eq!(spec.wrapped_desc("in-process".into()), "in-process");
+    }
+
+    #[test]
+    fn wrapped_desc_matches_wrap_store() {
+        for s in ["int8", "raw,delta", "topk:4,delta:0.5", "f16,delta"] {
+            let spec = CodecSpec::parse(s).unwrap();
+            let store = spec.wrap_store(server(4), NetConfig::default());
+            assert_eq!(store.describe(), spec.wrapped_desc("in-process".into()), "{s}");
+        }
+    }
+
+    #[test]
+    fn codec_store_meters_and_recharges_virtual_time() {
+        let net = NetConfig::default();
+        let spec = CodecSpec::parse("int8").unwrap();
+        let store = spec.wrap_store(server(8), net);
+        let nodes: Vec<u32> = (0..100).collect();
+        let rows: Vec<f32> = (0..nodes.len() * 8).map(|i| i as f32 * 0.03).collect();
+        let rec = store.push(&nodes, &[rows.clone(), rows.clone()]).unwrap();
+        // int8 at hidden 8: 16 B/row vs 32 raw
+        let payload = 100 * 2 * 16;
+        assert_eq!(rec.bytes, net.emb_bytes_metered(payload, 100, 2));
+        let raw_rec_bytes = net.emb_bytes(100, 2, 8);
+        assert!(rec.bytes < raw_rec_bytes, "{} !< {raw_rec_bytes}", rec.bytes);
+
+        let (got, pull_rec) = store.pull(&nodes, false).unwrap();
+        assert_eq!(pull_rec.bytes, net.emb_bytes_metered(payload, 100, 2));
+        // values went through the quantizer: close, not exact
+        for (a, b) in rows.iter().zip(&got[0]) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        let st = store.stats().unwrap();
+        assert_eq!((st.bytes_tx, st.bytes_rx), (payload, payload));
+        assert_eq!((st.raw_tx, st.raw_rx), (100 * 2 * 32, 100 * 2 * 32));
+        assert!(st.compression_ratio() > 1.9, "{}", st.compression_ratio());
+        assert_eq!(st.nodes, 100);
+    }
+
+    #[test]
+    fn identity_codec_store_is_value_transparent() {
+        let spec = CodecSpec {
+            codec: CodecKind::Raw,
+            delta: None,
+        };
+        // force the decorator on despite is_plain, via explicit build
+        let store = CodecStore::new(server(4), spec.codec.build(), NetConfig::default());
+        let nodes = [1u32, 2];
+        let rows = vec![1.5f32, -0.0, f32::INFINITY, 3.25, 0.0, 1.0, 2.0, 4.5];
+        store.push(&nodes, &[rows.clone(), rows.clone()]).unwrap();
+        let (got, _) = store.pull(&nodes, false).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&rows), bits(&got[0]));
+        let st = store.stats().unwrap();
+        assert_eq!(st.bytes_tx, 2 * 2 * 16);
+        assert_eq!(st.raw_tx, st.bytes_tx);
+    }
+
+    #[test]
+    fn sharding_under_the_codec_matches_a_single_backend() {
+        use crate::coordinator::store::ShardedStore;
+        // row-granular codecs: slicing the batch across shards must not
+        // change a single decoded value
+        let spec = CodecSpec::parse("int8").unwrap();
+        let single = spec.wrap_store(server(8), NetConfig::default());
+        let sharded = spec.wrap_store(
+            Arc::new(ShardedStore::in_process(4, 2, 8, NetConfig::default())),
+            NetConfig::default(),
+        );
+        let nodes: Vec<u32> = (0..137).collect();
+        let rows: Vec<f32> = (0..nodes.len() * 8).map(|i| (i as f32).sin() * 9.0).collect();
+        single.push(&nodes, &[rows.clone(), rows.clone()]).unwrap();
+        sharded.push(&nodes, &[rows.clone(), rows.clone()]).unwrap();
+        let (a, _) = single.pull(&nodes, false).unwrap();
+        let (b, _) = sharded.pull(&nodes, false).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a[0]), bits(&b[0]));
+        assert_eq!(bits(&a[1]), bits(&b[1]));
+    }
+}

@@ -11,13 +11,20 @@
 //! * shard map — routing is total (every id gets a full, distinct owner
 //!   set), replicas never alias the primary, and a rebalance between two
 //!   random maps moves exactly the rows whose owner set changed — no row
-//!   lost, no row double-counted.
+//!   lost, no row double-counted;
+//! * wire codecs — lossless codecs round-trip bit-exactly, `f16`/`bf16`
+//!   are idempotent within their stated precision, `Int8` stays inside
+//!   its `(max − min)/510` per-row bound, `TopK` preserves exactly the
+//!   K largest magnitudes, and a delta plane replayed through faults
+//!   and rebalances converges to the same rows as full raw pushes
+//!   (DESIGN.md §11).
 
 use std::sync::Arc;
 
 use optimes::coordinator::{
-    EmbCache, EmbeddingServer, EmbeddingStore, NetConfig, ShardMap, ShardedStore,
+    EmbCache, EmbeddingServer, EmbeddingStore, FaultStore, NetConfig, ShardMap, ShardedStore,
 };
+use optimes::wire::{CodecKind, DeltaStore};
 use optimes::graph::generate::{generate, GenParams};
 use optimes::graph::partition::metis_lite;
 use optimes::graph::sampler::{BlockDims, SampledNode, Sampler};
@@ -387,6 +394,198 @@ fn prop_rebalance_moves_exactly_the_changed_rows() {
                     );
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_codec_roundtrips_respect_their_error_contracts() {
+    check(
+        "codec-roundtrip-bounds",
+        30,
+        |g| {
+            let hidden = 1 + g.int(0, 31);
+            let n = 1 + g.int(0, 15);
+            // magnitudes spanning 1e-3 .. 1e3 (comfortably inside the
+            // f16 normal range once multiplied by a unit uniform)
+            let scale = 10f64.powi(g.int(0, 6) as i32 - 3) as f32;
+            let rows: Vec<f32> = (0..n * hidden)
+                .map(|_| ((g.f64() - 0.5) * 2.0) as f32 * scale)
+                .collect();
+            let k = 1 + g.int(0, 7);
+            (hidden, n, rows, k)
+        },
+        |(hidden, n, rows, k)| {
+            let (hidden, n) = (*hidden, *n);
+            let mut bytes = Vec::new();
+            let mut out = Vec::new();
+
+            // raw: bit-exact, always
+            let raw = CodecKind::Raw.build();
+            raw.encode_rows(rows, hidden, &mut bytes);
+            raw.decode_rows(&bytes, n, hidden, &mut out)
+                .map_err(|e| format!("raw decode: {e:#}"))?;
+            prop_assert!(
+                rows.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "raw codec is not bit-exact"
+            );
+
+            // f16 / bf16: bounded error + idempotence (a second trip is
+            // bit-exact, so the push→pull double round-trip settles)
+            for (kind, rel, abs) in [
+                (CodecKind::F16, 1.0f32 / 1024.0, 1e-7f32),
+                (CodecKind::Bf16, 1.0f32 / 128.0, 1e-30f32),
+            ] {
+                let c = kind.build();
+                c.encode_rows(rows, hidden, &mut bytes);
+                c.decode_rows(&bytes, n, hidden, &mut out)
+                    .map_err(|e| format!("decode: {e:#}"))?;
+                for (a, b) in rows.iter().zip(&out) {
+                    prop_assert!(
+                        (a - b).abs() <= a.abs() * rel + abs,
+                        "{}: {a} decoded as {b}",
+                        c.name()
+                    );
+                }
+                let mut bytes2 = Vec::new();
+                c.encode_rows(&out, hidden, &mut bytes2);
+                prop_assert!(bytes == bytes2, "{} re-encode is not idempotent", c.name());
+            }
+
+            // int8: per-row affine bound (max − min)/510, plus fp slack
+            let c = CodecKind::Int8.build();
+            c.encode_rows(rows, hidden, &mut bytes);
+            c.decode_rows(&bytes, n, hidden, &mut out)
+                .map_err(|e| format!("int8 decode: {e:#}"))?;
+            for (row, dec) in rows.chunks_exact(hidden).zip(out.chunks_exact(hidden)) {
+                let lo = row.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let span = hi - lo;
+                let bound = span / 510.0 * 1.01 + (lo.abs() + span) * 1e-5 + 1e-12;
+                for (a, b) in row.iter().zip(dec) {
+                    prop_assert!(
+                        (a - b).abs() <= bound,
+                        "int8: {a} decoded as {b} (row span {span}, bound {bound})"
+                    );
+                }
+            }
+
+            // topk: exactly the K largest magnitudes survive, verbatim;
+            // everything else decodes to zero
+            let c = CodecKind::TopK(*k).build();
+            c.encode_rows(rows, hidden, &mut bytes);
+            c.decode_rows(&bytes, n, hidden, &mut out)
+                .map_err(|e| format!("topk decode: {e:#}"))?;
+            let k_eff = (*k).min(hidden);
+            for (row, dec) in rows.chunks_exact(hidden).zip(out.chunks_exact(hidden)) {
+                let kept: Vec<usize> = (0..hidden).filter(|&j| dec[j] != 0.0).collect();
+                prop_assert!(kept.len() <= k_eff, "kept {} > K {k_eff}", kept.len());
+                let min_kept = kept
+                    .iter()
+                    .map(|&j| row[j].abs())
+                    .fold(f32::INFINITY, f32::min);
+                for j in 0..hidden {
+                    if dec[j] != 0.0 {
+                        prop_assert!(
+                            dec[j].to_bits() == row[j].to_bits(),
+                            "topk altered a kept value"
+                        );
+                    } else {
+                        // dropped (or genuinely zero): magnitude never
+                        // exceeds the smallest kept one
+                        prop_assert!(
+                            kept.len() < k_eff || row[j].abs() <= min_kept,
+                            "topk dropped |{}| while keeping min |{min_kept}|",
+                            row[j]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_delta_replays_converge_through_faults_and_rebalance() {
+    check(
+        "delta-converges",
+        10,
+        |g| {
+            let n_nodes = 8 + g.int_scaled(0, 120);
+            let writes = 3 + g.int(0, 4);
+            let seed = g.int(0, 99_999) as u64;
+            (n_nodes, writes, seed)
+        },
+        |(n_nodes, writes, seed)| {
+            let h = 4;
+            // reference: a plain server receiving every push in full
+            let reference = EmbeddingServer::new(2, h, NetConfig::default());
+            // subject: exact delta over a replicated sharded plane with
+            // scripted shard blackouts and repair rebalances between
+            // writes — the replay must converge to the same rows
+            let mut handles = Vec::new();
+            let backends: Vec<Arc<dyn EmbeddingStore>> = (0..3)
+                .map(|i| {
+                    let slab: Arc<dyn EmbeddingStore> =
+                        Arc::new(EmbeddingServer::new(2, h, NetConfig::default()));
+                    let faulted = FaultStore::new(slab, format!("shard{i}"), Vec::new());
+                    handles.push(faulted.handle());
+                    Arc::new(faulted) as Arc<dyn EmbeddingStore>
+                })
+                .collect();
+            let sharded = Arc::new(
+                ShardedStore::replicated(backends, 1).map_err(|e| format!("{e:#}"))?,
+            );
+            let delta = DeltaStore::new(Arc::clone(&sharded) as Arc<dyn EmbeddingStore>, 0.0);
+
+            let nodes: Vec<u32> = (0..*n_nodes as u32).collect();
+            let mut rng = optimes::util::rng::Rng::new(*seed, 3);
+            let mut vals: Vec<f32> = nodes.iter().map(|&nd| nd as f32).collect();
+            for w in 0..*writes {
+                // mutate a random subset, leave the rest bit-identical
+                // (node 0 never mutates, so every cached-epoch push has
+                // at least one row to skip — deterministically)
+                for v in vals.iter_mut().skip(1) {
+                    if rng.chance(0.4) {
+                        *v += (w + 1) as f32 * 0.5;
+                    }
+                }
+                let layer: Vec<f32> = vals
+                    .iter()
+                    .flat_map(|&v| (0..h).map(move |j| v + j as f32))
+                    .collect();
+                reference.push(&nodes, &[layer.clone(), layer.clone()]);
+                // even writes land during a single-shard blackout (the
+                // R=1 budget absorbs it); odd writes are followed by a
+                // same-map rebalance that repairs the quarantine before
+                // the next shard dies — and bumps the epoch, forcing
+                // the delta layer to resync in full
+                let dead = w % 3;
+                if w % 2 == 0 {
+                    handles[dead].set_blackout(true);
+                }
+                delta
+                    .push(&nodes, &[layer.clone(), layer.clone()])
+                    .map_err(|e| format!("delta push {w}: {e:#}"))?;
+                handles[dead].set_blackout(false);
+                if w % 2 == 1 {
+                    sharded
+                        .rebalance(sharded.map())
+                        .map_err(|e| format!("repair rebalance {w}: {e:#}"))?;
+                }
+            }
+            // final repair so every owner is readable again
+            sharded.rebalance(sharded.map()).map_err(|e| format!("{e:#}"))?;
+
+            let (want, _) = reference.pull(&nodes, false);
+            let (got, _) = delta.pull(&nodes, false).map_err(|e| format!("{e:#}"))?;
+            prop_assert!(want == got, "delta replay diverged from full pushes");
+            // node 0 never changed after the first push, so the second
+            // write (whose cache epoch is still valid) must have
+            // skipped it
+            prop_assert!(delta.rows_skipped() > 0, "delta never skipped a row");
             Ok(())
         },
     );

@@ -79,13 +79,18 @@ fn faulted_backends(shards: usize) -> (Vec<Arc<dyn EmbeddingStore>>, Vec<FaultHa
 }
 
 /// Run a full session against `store` on `tiny(seed)`, invoking `at_round`
-/// with the round index before each round runs (the chaos hook).
+/// with the round index before each round runs (the chaos hook). The
+/// store is wrapped per `OPTIMES_WIRE_CODEC` — the CI `wire-codec` job
+/// reruns this suite as a `raw|int8` matrix, and every chaos scenario
+/// must hold under a codec exactly as it holds raw (baseline and chaos
+/// runs are wrapped identically; DESIGN.md §11).
 fn run_with_hook(
     store: Arc<dyn EmbeddingStore>,
     pipeline: bool,
     seed: u64,
     mut at_round: impl FnMut(usize),
 ) -> SessionMetrics {
+    let store = optimes::wire::wrap_from_env(store, NetConfig::default());
     let g = tiny(seed);
     let mut session = SessionBuilder::new(cfg(pipeline))
         .store(store)
@@ -196,7 +201,7 @@ fn blackout_without_replicas_fails_loudly_not_silently() {
     let store = ShardedStore::new(backends).unwrap();
     let g = tiny(331);
     let err = SessionBuilder::new(cfg(false))
-        .store(Arc::new(store))
+        .store(optimes::wire::wrap_from_env(Arc::new(store), NetConfig::default()))
         .build(&g, ref_engine())
         .unwrap()
         .run()
@@ -204,6 +209,51 @@ fn blackout_without_replicas_fails_loudly_not_silently() {
         .expect("R=0 blackout must fail the run");
     let chain = format!("{err:#}");
     assert!(chain.contains("injected fault"), "unexpected error chain: {chain}");
+}
+
+// ---------------------------------------------------------------------------
+// the wire-plane acceptance criterion: a lossless codec plane
+// (raw + delta) stays bit-identical through a mid-training shard
+// blackout at R = 1, pipeline on and off (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn raw_delta_blackout_matches_fault_free_curve() {
+    const SEED: u64 = 347;
+    const KILL_SHARD: usize = 2;
+    const KILL_AT_ROUND: usize = 2;
+    for pipeline in [false, true] {
+        let base = baseline(pipeline, SEED);
+
+        let (backends, handles) = faulted_backends(SHARDS);
+        let sharded = ShardedStore::replicated(backends, 1).unwrap();
+        let delta: Arc<dyn EmbeddingStore> = Arc::new(optimes::wire::DeltaStore::new(
+            Arc::new(sharded) as Arc<dyn EmbeddingStore>,
+            0.0,
+        ));
+        let chaos = run_with_hook(delta, pipeline, SEED, |round| {
+            if round == KILL_AT_ROUND {
+                handles[KILL_SHARD].set_blackout(true);
+            }
+        });
+
+        // delta elides only bit-identical rows and the replicated plane
+        // serves skipped rows through the blackout exactly like
+        // re-pushed ones — the curve must match the fault-free raw run
+        assert_eq!(chaos.rounds.len(), ROUNDS);
+        assert_same_curve(&base, &chaos);
+        assert!(
+            chaos.total_failovers() > 0,
+            "pipeline={pipeline}: delta blackout absorbed no failovers"
+        );
+        assert!(handles[KILL_SHARD].injected() > 0, "blackout never fired");
+        // (wire_codec reads `raw+delta` unless the CI codec matrix adds
+        // its own outer codec layer)
+        if optimes::wire::spec_from_env().unwrap().is_plain() {
+            assert_eq!(chaos.wire_codec, "raw+delta");
+            assert!(chaos.wire_ratio() >= 1.0 - 1e-9);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
