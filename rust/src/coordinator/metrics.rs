@@ -161,6 +161,10 @@ pub struct ClientRoundMetrics {
     /// async pipeline).
     pub overlap: OverlapMetrics,
     pub train_loss: f32,
+    /// Injected virtual report delay (seconds) this round
+    /// ([`ClientLatency`](super::netsim::ClientLatency); 0 when no
+    /// latency model is configured).
+    pub injected_latency: f64,
 }
 
 /// One federated round, aggregated across clients.
@@ -188,6 +192,20 @@ pub struct RoundMetrics {
     pub bytes_tx: usize,
     /// Cumulative encoded embedding-payload bytes pulled by round end.
     pub bytes_rx: usize,
+    /// Slack the round policy actually spent waiting past the bare quorum
+    /// (virtual seconds; 0 for sync/deadline policies — DESIGN.md §12).
+    pub quorum_wait: f64,
+    /// Clients that missed this round's barrier release and were deferred
+    /// to a later aggregation.
+    pub stragglers_late: usize,
+    /// Deferred updates dropped at this round's aggregation for exceeding
+    /// the staleness bound.
+    pub stragglers_dropped: usize,
+    /// Deferred updates folded into this round's aggregation.
+    pub stale_folded: usize,
+    /// Sum of the staleness decay factors applied to folded updates
+    /// (each in `(0, 1]`).
+    pub stale_weight_applied: f64,
 }
 
 /// Full session trace + derived paper metrics.
@@ -207,6 +225,9 @@ pub struct SessionMetrics {
     /// Last routing epoch the store reported (0 until a
     /// mid-session rebalance bumps it; DESIGN.md §10).
     pub store_epoch: u64,
+    /// Round-advancement policy the session ran under ("sync",
+    /// "quorum:K[:SLACK]", "deadline:SECS"; DESIGN.md §12).
+    pub round_policy: String,
     /// Raw-f32 equivalent of the session's push traffic (including
     /// delta-elided rows) — the denominator-free half of the
     /// compression ratio; see [`wire_ratio`](SessionMetrics::wire_ratio).
@@ -318,6 +339,32 @@ impl SessionMetrics {
         }
     }
 
+    /// Total client-rounds that missed their barrier release
+    /// (per-round counts summed; 0 under the sync policy).
+    pub fn total_stragglers_late(&self) -> usize {
+        self.rounds.iter().map(|r| r.stragglers_late).sum()
+    }
+
+    /// Total deferred updates dropped for exceeding the staleness bound.
+    pub fn total_stragglers_dropped(&self) -> usize {
+        self.rounds.iter().map(|r| r.stragglers_dropped).sum()
+    }
+
+    /// Total deferred updates folded into later aggregations.
+    pub fn total_stale_folded(&self) -> usize {
+        self.rounds.iter().map(|r| r.stale_folded).sum()
+    }
+
+    /// Total staleness decay weight applied across all folded updates.
+    pub fn total_stale_weight(&self) -> f64 {
+        self.rounds.iter().map(|r| r.stale_weight_applied).sum()
+    }
+
+    /// Total virtual time spent in quorum slack windows.
+    pub fn total_quorum_wait(&self) -> f64 {
+        self.rounds.iter().map(|r| r.quorum_wait).sum()
+    }
+
     /// Aggregate *measured* pipeline overlap across every client round
     /// (all-zero when the session ran `--pipeline off`). Wall/wait
     /// fields are summed; `queue_peak` is the maximum observed.
@@ -398,6 +445,13 @@ impl SessionMetrics {
         o.set("bytes_raw_rx", self.bytes_raw_rx);
         o.set("wire_ratio", self.wire_ratio());
         o.set("overlap", self.overlap_stats().to_json());
+        // straggler-tolerant round advancement (DESIGN.md §12)
+        o.set("round_policy", self.round_policy.as_str());
+        o.set("stragglers_late", self.total_stragglers_late());
+        o.set("stragglers_dropped", self.total_stragglers_dropped());
+        o.set("stale_folded", self.total_stale_folded());
+        o.set("stale_weight_applied", self.total_stale_weight());
+        o.set("quorum_wait", self.total_quorum_wait());
         Json::Obj(o)
     }
 }

@@ -5,7 +5,9 @@
 //! DESIGN.md §9), a replication-aware router with online rebalancing and
 //! deterministic fault injection ([`ShardMap`] / [`FaultStore`],
 //! DESIGN.md §10), push-overlap, pruning, scored prefetching (OptimES
-//! strategies D/E/O/P/OP/OPP/OPG), and a composable session API
+//! strategies D/E/O/P/OP/OPP/OPG), straggler-tolerant round advancement
+//! with bounded-staleness aggregation ([`RoundPolicy`] /
+//! [`StalenessWeighted`], DESIGN.md §12), and a composable session API
 //! ([`SessionBuilder`] with pluggable [`Aggregator`] and
 //! [`RoundObserver`] seams).
 
@@ -18,6 +20,7 @@ pub mod net_transport;
 pub mod netsim;
 pub mod pipeline;
 pub mod resilience;
+pub mod rounds;
 pub mod session;
 pub mod store;
 pub mod strategy;
@@ -28,10 +31,14 @@ pub use client::{Client, EmbCache};
 pub use embedding_server::EmbeddingServer;
 pub use metrics::{OverlapMetrics, PhaseTimes, RoundMetrics, SessionMetrics};
 pub use net_transport::{EmbServerDaemon, RemoteEmbClient, TcpEmbeddingStore};
-pub use netsim::NetConfig;
+pub use netsim::{client_latency_default, ClientLatency, NetConfig};
 pub use pipeline::{
     pipeline_default, AsyncStoreHandle, PendingPull, PullDone, PullTicket, PushDone, PushTicket,
     ThrottledStore, Ticket,
+};
+pub use rounds::{
+    round_policy_default, staleness_default, staleness_weight, Deadline, Quorum, RoundPlan,
+    RoundPolicy, RoundPolicySpec, StaleFold, StalenessWeighted, Synchronous,
 };
 pub use session::{
     run_session, NullObserver, RoundObserver, Session, SessionBuilder, SessionConfig,

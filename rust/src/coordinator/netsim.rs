@@ -7,6 +7,98 @@
 //! (see `metrics.rs`). This reproduces the paper's pull/train/push
 //! breakdowns, whose shape depends only on the comm-bytes : compute-time
 //! ratio, deterministically on a single host.
+//!
+//! [`ClientLatency`] extends the model with *per-client* heterogeneity:
+//! a heavy-tailed (lognormal) per-round report delay, deterministic per
+//! `(client, round)`, so straggler experiments (DESIGN.md §12) are
+//! reproducible. It is off by default and enabled with
+//! `--client-latency lognormal:MU:SIGMA[:SEED]` / `OPTIMES_CLIENT_LATENCY`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// Default seed for the client-latency stream when the spec omits one.
+const DEFAULT_LATENCY_SEED: u64 = 0x517A;
+
+/// Per-client heavy-tailed report-delay model: client `c` in round `r`
+/// reports `exp(mu + sigma * z)` virtual seconds after its compute
+/// finishes, with `z` standard normal drawn from a stream keyed on
+/// `(seed, client, round)` — deterministic regardless of scheduling.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientLatency {
+    /// Location of the underlying normal (log-seconds).
+    pub mu: f64,
+    /// Scale of the underlying normal; larger means heavier tail.
+    pub sigma: f64,
+    /// Stream seed (distinct seeds give independent straggler patterns).
+    pub seed: u64,
+}
+
+impl ClientLatency {
+    /// Parse `lognormal:MU:SIGMA[:SEED]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut parts = s.trim().split(':');
+        let kind = parts.next().unwrap_or("");
+        if kind != "lognormal" {
+            bail!("unknown client latency {s:?} (expected lognormal:MU:SIGMA[:SEED])");
+        }
+        let mu: f64 = parts
+            .next()
+            .with_context(|| format!("client latency {s:?}: missing MU"))?
+            .parse()
+            .with_context(|| format!("client latency {s:?}: bad MU"))?;
+        let sigma: f64 = parts
+            .next()
+            .with_context(|| format!("client latency {s:?}: missing SIGMA"))?
+            .parse()
+            .with_context(|| format!("client latency {s:?}: bad SIGMA"))?;
+        if !mu.is_finite() || !sigma.is_finite() || sigma < 0.0 {
+            bail!("client latency {s:?}: MU must be finite and SIGMA finite and >= 0");
+        }
+        let seed: u64 = match parts.next() {
+            Some(t) => t
+                .parse()
+                .with_context(|| format!("client latency {s:?}: bad SEED"))?,
+            None => DEFAULT_LATENCY_SEED,
+        };
+        if parts.next().is_some() {
+            bail!("client latency {s:?}: too many fields for lognormal:MU:SIGMA[:SEED]");
+        }
+        Ok(Self { mu, sigma, seed })
+    }
+
+    /// Canonical spec string (round-trips through [`parse`](Self::parse)).
+    pub fn spec_string(&self) -> String {
+        format!("lognormal:{}:{}:{}", self.mu, self.sigma, self.seed)
+    }
+
+    /// Virtual report delay (seconds) for `client` in `round`.
+    pub fn sample(&self, client: usize, round: usize) -> f64 {
+        let mut rng = Rng::new(
+            self.seed ^ 0x57A6_617E,
+            ((client as u64) << 32) ^ round as u64,
+        );
+        (self.mu + self.sigma * rng.normal()).exp()
+    }
+}
+
+/// Client latency model from `OPTIMES_CLIENT_LATENCY` (default: none).
+/// Unparseable values warn to stderr and fall back to no injected latency.
+pub fn client_latency_default() -> Option<ClientLatency> {
+    match std::env::var("OPTIMES_CLIENT_LATENCY") {
+        Ok(v) if !v.is_empty() => match ClientLatency::parse(&v) {
+            Ok(l) => Some(l),
+            Err(e) => {
+                eprintln!(
+                    "warning: OPTIMES_CLIENT_LATENCY={v:?} invalid ({e:#}); disabling"
+                );
+                None
+            }
+        },
+        _ => None,
+    }
+}
 
 /// Link + serialization parameters.
 #[derive(Clone, Copy, Debug)]
@@ -18,6 +110,10 @@ pub struct NetConfig {
     pub latency: f64,
     /// Key/entry overhead in bytes per embedding row (node id + lengths).
     pub per_entry_overhead: usize,
+    /// Optional per-client report-delay model (straggler injection). When
+    /// `None` every client reports instantly and all round policies
+    /// degenerate to the synchronous barrier.
+    pub client_latency: Option<ClientLatency>,
 }
 
 impl Default for NetConfig {
@@ -33,6 +129,7 @@ impl Default for NetConfig {
             bandwidth: 20_000_000.0,
             latency: 300e-6,
             per_entry_overhead: 16,
+            client_latency: client_latency_default(),
         }
     }
 }
@@ -117,5 +214,49 @@ mod tests {
         let n = NetConfig::default();
         let t = n.emb_time(3_000, 2, 32);
         assert!(t > 0.01 && t < 0.1, "{t}");
+    }
+
+    #[test]
+    fn client_latency_parse_and_roundtrip() {
+        let l = ClientLatency::parse("lognormal:-0.9:1.5:11").unwrap();
+        assert_eq!(l, ClientLatency { mu: -0.9, sigma: 1.5, seed: 11 });
+        assert_eq!(ClientLatency::parse(&l.spec_string()).unwrap(), l);
+        // seed is optional
+        let d = ClientLatency::parse("lognormal:0:1").unwrap();
+        assert_eq!(d.seed, DEFAULT_LATENCY_SEED);
+        for bad in [
+            "", "uniform:0:1", "lognormal", "lognormal:0", "lognormal:x:1",
+            "lognormal:0:-1", "lognormal:0:1:z", "lognormal:0:1:2:3",
+        ] {
+            assert!(ClientLatency::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn client_latency_is_deterministic_per_client_round() {
+        let l = ClientLatency::parse("lognormal:-1:1.2:7").unwrap();
+        for c in 0..4 {
+            for r in 0..4 {
+                let a = l.sample(c, r);
+                assert!(a.is_finite() && a > 0.0);
+                assert_eq!(a, l.sample(c, r), "sample not deterministic");
+            }
+        }
+        // different clients / rounds see different delays
+        assert_ne!(l.sample(0, 0), l.sample(1, 0));
+        assert_ne!(l.sample(0, 0), l.sample(0, 1));
+    }
+
+    #[test]
+    fn client_latency_has_a_heavy_tail() {
+        let l = ClientLatency { mu: 0.0, sigma: 1.5, seed: 3 };
+        let xs: Vec<f64> = (0..2000).map(|i| l.sample(i % 50, i / 50)).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let p95 = sorted[sorted.len() * 95 / 100];
+        // lognormal(0, 1.5): median e^0 = 1, p95 ~ e^{1.645*1.5} ~ 11.8
+        assert!((median - 1.0).abs() < 0.3, "median={median}");
+        assert!(p95 > 5.0 * median, "p95={p95} median={median}");
     }
 }

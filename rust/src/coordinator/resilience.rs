@@ -7,7 +7,12 @@
 //!   through a [`FaultHandle`]). This is the substrate of the chaos
 //!   suite (`tests/fault_tolerance.rs`) and of the CLI's `--fault-spec`
 //!   flag: the same replicated deployment that must survive a dead
-//!   shard in production is killed *reproducibly* in CI.
+//!   shard in production is killed *reproducibly* in CI. `delay%N:S`
+//!   spikes are charged to the **virtual clock** by default (added to
+//!   the RPC's netsim time, not slept) so chaos tests don't burn real
+//!   CI minutes; the standalone `serve` daemon — whose only clock is
+//!   wall time — opts into real sleeps via
+//!   [`FaultStore::with_real_delays`] / [`FaultSpec::wrap_shard_real`].
 //! * [`SnapshotStore`] is the persistence-shaped decorator: it
 //!   write-throughs every pushed row into a shadow copy that can be
 //!   [`dump`](SnapshotStore::dump)ed to a byte stream (via the safe LE
@@ -161,7 +166,9 @@ impl FaultSpec {
                     format!("fault target {target:?}: bad shard index")
                 })?)
             };
-            clauses.push((shard, Fault::parse(fault)?));
+            let fault = Fault::parse(fault)
+                .with_context(|| format!("in fault clause for {target:?}"))?;
+            clauses.push((shard, fault));
         }
         Ok(FaultSpec { clauses })
     }
@@ -201,18 +208,39 @@ impl FaultSpec {
 
     /// Wrap `store` in a [`FaultStore`] labeled `shard{shard}` when any
     /// clause applies to that shard; hand it back untouched otherwise.
-    /// The shared deployment helper behind `run --fault-spec` and
-    /// `serve --fault-spec`.
+    /// The shared deployment helper behind `run --fault-spec`. Injected
+    /// delays are charged to the virtual clock.
     pub fn wrap_shard(
         &self,
         shard: usize,
         store: Arc<dyn EmbeddingStore>,
     ) -> Arc<dyn EmbeddingStore> {
+        self.wrap_shard_inner(shard, store, false)
+    }
+
+    /// Like [`wrap_shard`](Self::wrap_shard), but injected delays sleep
+    /// real wall-clock time — for the standalone `serve` daemon, where
+    /// wall time is the only clock a remote client can observe.
+    pub fn wrap_shard_real(
+        &self,
+        shard: usize,
+        store: Arc<dyn EmbeddingStore>,
+    ) -> Arc<dyn EmbeddingStore> {
+        self.wrap_shard_inner(shard, store, true)
+    }
+
+    fn wrap_shard_inner(
+        &self,
+        shard: usize,
+        store: Arc<dyn EmbeddingStore>,
+        real_delays: bool,
+    ) -> Arc<dyn EmbeddingStore> {
         let faults = self.faults_for(shard);
         if faults.is_empty() {
             store
         } else {
-            Arc::new(FaultStore::new(store, format!("shard{shard}"), faults))
+            let fs = FaultStore::new(store, format!("shard{shard}"), faults);
+            Arc::new(if real_delays { fs.with_real_delays() } else { fs })
         }
     }
 }
@@ -271,6 +299,9 @@ pub struct FaultStore {
     inner: Arc<dyn EmbeddingStore>,
     label: String,
     state: Arc<FaultState>,
+    /// Sleep injected delays for real instead of charging them to the
+    /// RPC's virtual time (only the `serve` daemon wants this).
+    real_delays: bool,
 }
 
 impl FaultStore {
@@ -288,7 +319,18 @@ impl FaultStore {
                 calls: AtomicUsize::new(0),
                 injected: AtomicUsize::new(0),
             }),
+            real_delays: false,
         }
+    }
+
+    /// Make injected `delay%N:S` faults sleep real wall-clock time. The
+    /// default charges them to the RPC's virtual time instead, which is
+    /// what every model-time (netsim) run wants; only the standalone
+    /// `serve` daemon — observed by remote clients over real sockets —
+    /// needs the sleep.
+    pub fn with_real_delays(mut self) -> Self {
+        self.real_delays = true;
+        self
     }
 
     /// Live control handle (cheap clone of a shared state).
@@ -296,8 +338,10 @@ impl FaultStore {
         FaultHandle(Arc::clone(&self.state))
     }
 
-    /// Count one data-plane RPC and apply the fault plan to it.
-    fn intercept(&self) -> Result<()> {
+    /// Count one data-plane RPC and apply the fault plan to it. Returns
+    /// the virtual delay (seconds) to charge to the RPC's service time —
+    /// 0.0 when there is none or when it was slept for real.
+    fn intercept(&self) -> Result<f64> {
         let idx = self.state.calls.fetch_add(1, Ordering::SeqCst) + 1;
         if self.state.blackout.load(Ordering::SeqCst) {
             self.state.injected.fetch_add(1, Ordering::SeqCst);
@@ -321,14 +365,14 @@ impl FaultStore {
                 }
             }
         }
-        if delay > 0.0 {
+        if delay > 0.0 && self.real_delays {
             std::thread::sleep(std::time::Duration::from_secs_f64(delay));
         }
         if fail {
             self.state.injected.fetch_add(1, Ordering::SeqCst);
             bail!("injected fault: {} rpc #{idx}", self.label);
         }
-        Ok(())
+        Ok(if self.real_delays { 0.0 } else { delay })
     }
 }
 
@@ -342,8 +386,10 @@ impl EmbeddingStore for FaultStore {
     }
 
     fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
-        self.intercept()?;
-        self.inner.push(nodes, per_layer)
+        let delay = self.intercept()?;
+        let mut rec = self.inner.push(nodes, per_layer)?;
+        rec.time += delay;
+        Ok(rec)
     }
 
     fn pull_into(
@@ -352,8 +398,10 @@ impl EmbeddingStore for FaultStore {
         on_demand: bool,
         out: &mut Vec<Vec<f32>>,
     ) -> Result<RpcRecord> {
-        self.intercept()?;
-        self.inner.pull_into(nodes, on_demand, out)
+        let delay = self.intercept()?;
+        let mut rec = self.inner.pull_into(nodes, on_demand, out)?;
+        rec.time += delay;
+        Ok(rec)
     }
 
     fn stats(&self) -> Result<StoreStats> {
@@ -666,21 +714,59 @@ mod tests {
     }
 
     #[test]
-    fn delay_fault_slows_without_failing() {
+    fn delay_fault_charges_virtual_time_by_default() {
+        // a 5 s virtual spike must not sleep 5 real seconds
+        let store = FaultStore::new(
+            server(4),
+            "s",
+            vec![Fault::DelayEvery { every: 2, secs: 5.0 }],
+        );
+        let t0 = std::time::Instant::now();
+        let (_, r1) = store.pull(&[1], false).unwrap(); // rpc 1: no delay
+        let (_, r2) = store.pull(&[1], false).unwrap(); // rpc 2: delayed
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(wall < 2.0, "virtual delay slept for real: {wall}s");
+        assert!(
+            r2.time >= r1.time + 5.0,
+            "delay not charged to virtual time: {} vs {}",
+            r2.time,
+            r1.time
+        );
+        assert_eq!(store.handle().injected(), 0, "delays are not failures");
+    }
+
+    #[test]
+    fn delay_fault_sleeps_for_real_when_asked() {
         let store = FaultStore::new(
             server(4),
             "s",
             vec![Fault::DelayEvery { every: 2, secs: 0.02 }],
-        );
-        let t0 = std::time::Instant::now();
-        store.pull(&[1], false).unwrap(); // rpc 1: no delay
-        let fast = t0.elapsed();
+        )
+        .with_real_delays();
+        let (_, r1) = store.pull(&[1], false).unwrap(); // rpc 1: no delay
         let t1 = std::time::Instant::now();
-        store.pull(&[1], false).unwrap(); // rpc 2: delayed
+        let (_, r2) = store.pull(&[1], false).unwrap(); // rpc 2: delayed
         let slow = t1.elapsed();
         assert!(slow.as_secs_f64() >= 0.02, "delay not applied: {slow:?}");
-        assert!(fast < slow);
+        // the real sleep is not double-charged to virtual time
+        assert!(
+            (r2.time - r1.time).abs() < 0.01,
+            "real delay leaked into virtual time: {} vs {}",
+            r2.time,
+            r1.time
+        );
         assert_eq!(store.handle().injected(), 0);
+    }
+
+    #[test]
+    fn fault_spec_parse_errors_name_the_offending_target() {
+        let err = FaultSpec::parse("shard3=explode").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("shard3"), "{chain}");
+        assert!(chain.contains("unknown fault"), "{chain}");
+        let err = FaultSpec::parse("shard0=err@3;*=delay%5").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("\"*\""), "{chain}");
     }
 
     // ---- snapshot store ---------------------------------------------------

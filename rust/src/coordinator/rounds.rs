@@ -1,0 +1,606 @@
+//! Round-advancement policies and bounded-staleness aggregation.
+//!
+//! Every round the session collects one virtual *report delay* per client
+//! (injected by [`crate::coordinator::netsim::ClientLatency`]; zero when no
+//! latency model is configured) and asks the configured [`RoundPolicy`] when
+//! to release the barrier. The policy returns a [`RoundPlan`]: the virtual
+//! release time plus an on-time mask over clients.
+//!
+//! Three policies are provided:
+//!
+//! - [`Synchronous`] — today's hard barrier. Waits for every client, so the
+//!   release time is the slowest report. This is the bit-parity oracle: with
+//!   zero injected latency every other policy degenerates to it.
+//! - [`Quorum`] — advance once `k` of `n` clients have reported, then grant a
+//!   bounded `slack` window for the tail (the opportunistic-witness shape).
+//! - [`Deadline`] — advance when a fixed virtual-time budget expires,
+//!   dropping whoever has not reported (but never advancing before at least
+//!   one client has).
+//!
+//! Clients that miss the release are *not* discarded silently: the
+//! [`StalenessWeighted`] decorator wraps the session's
+//! [`Aggregator`](crate::coordinator::aggregation::Aggregator) and folds
+//! late updates into the first aggregation after they (virtually) arrive,
+//! scaled by [`staleness_weight`] — a decaying factor in `(0, 1]` — and
+//! drops (and counts) anything more than `max_stale` rounds old.
+//!
+//! Determinism: policies only ever see *injected* delays, never measured
+//! wall-clock time, so membership decisions (and therefore accuracy curves)
+//! are bit-reproducible regardless of host load or thread scheduling.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::aggregation::Aggregator;
+use crate::runtime::ModelState;
+
+/// What a [`RoundPolicy`] decided for one round, given per-client report
+/// delays.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundPlan {
+    /// Virtual time (seconds after the round's compute finishes) at which the
+    /// barrier releases. Charged to the round's wall time.
+    pub release: f64,
+    /// `on_time[i]` — did client `i` report at or before `release`?
+    pub on_time: Vec<bool>,
+    /// Extra virtual time spent waiting beyond the bare quorum (the slack
+    /// actually consumed). Zero for sync and deadline policies.
+    pub quorum_wait: f64,
+}
+
+impl RoundPlan {
+    /// Number of clients that made the barrier.
+    pub fn n_on_time(&self) -> usize {
+        self.on_time.iter().filter(|&&b| b).count()
+    }
+
+    /// Number of clients that missed the barrier this round.
+    pub fn stragglers(&self) -> usize {
+        self.on_time.len() - self.n_on_time()
+    }
+}
+
+/// Decides, from deterministic per-client report delays, when a round's
+/// barrier releases and which clients make it.
+pub trait RoundPolicy: Send + Sync {
+    /// Human-readable policy name (used in metrics and reports).
+    fn name(&self) -> String;
+
+    /// Plan one round. `delays[i]` is the virtual delay after which client
+    /// `i`'s update is available. Implementations must be pure functions of
+    /// `delays` (no clocks, no randomness) so runs stay reproducible.
+    fn plan(&self, delays: &[f64]) -> RoundPlan;
+}
+
+/// Today's hard barrier: wait for every client.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Synchronous;
+
+impl RoundPolicy for Synchronous {
+    fn name(&self) -> String {
+        "sync".to_string()
+    }
+
+    fn plan(&self, delays: &[f64]) -> RoundPlan {
+        let release = delays.iter().copied().fold(0.0, f64::max);
+        RoundPlan {
+            release,
+            on_time: vec![true; delays.len()],
+            quorum_wait: 0.0,
+        }
+    }
+}
+
+/// Advance once `k` clients have reported, then wait up to `slack` extra
+/// virtual seconds for the tail (never longer than the slowest client).
+#[derive(Clone, Copy, Debug)]
+pub struct Quorum {
+    /// Number of reports required before the slack window opens. Clamped to
+    /// `[1, n]` at plan time.
+    pub k: usize,
+    /// Bounded grace window (virtual seconds) granted after the k-th report.
+    pub slack: f64,
+}
+
+impl RoundPolicy for Quorum {
+    fn name(&self) -> String {
+        format!("quorum:{}:{}", self.k, self.slack)
+    }
+
+    fn plan(&self, delays: &[f64]) -> RoundPlan {
+        let n = delays.len();
+        if n == 0 {
+            return RoundPlan { release: 0.0, on_time: Vec::new(), quorum_wait: 0.0 };
+        }
+        let mut sorted = delays.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let t_max = sorted[n - 1];
+        let k = self.k.clamp(1, n);
+        let t_k = sorted[k - 1];
+        let release = (t_k + self.slack.max(0.0)).min(t_max);
+        let on_time = delays.iter().map(|&d| d <= release).collect();
+        RoundPlan { release, on_time, quorum_wait: release - t_k }
+    }
+}
+
+/// Advance when a fixed virtual-time budget expires. Never releases before
+/// the fastest client has reported (an empty aggregation is useless) and
+/// never waits past the slowest.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    /// Virtual seconds granted per round for reports to arrive.
+    pub budget: f64,
+}
+
+impl RoundPolicy for Deadline {
+    fn name(&self) -> String {
+        format!("deadline:{}", self.budget)
+    }
+
+    fn plan(&self, delays: &[f64]) -> RoundPlan {
+        let n = delays.len();
+        if n == 0 {
+            return RoundPlan { release: 0.0, on_time: Vec::new(), quorum_wait: 0.0 };
+        }
+        let t_max = delays.iter().copied().fold(f64::MIN, f64::max);
+        let t_min = delays.iter().copied().fold(f64::MAX, f64::min);
+        let release = self.budget.min(t_max).max(t_min);
+        let on_time = delays.iter().map(|&d| d <= release).collect();
+        RoundPlan { release, on_time, quorum_wait: 0.0 }
+    }
+}
+
+/// Parsed, serializable form of a round policy — what [`SessionConfig`]
+/// carries. Grammar: `sync | quorum:K[:SLACK] | deadline:SECS`.
+///
+/// [`SessionConfig`]: crate::coordinator::session::SessionConfig
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum RoundPolicySpec {
+    /// Hard barrier (the default).
+    #[default]
+    Sync,
+    /// Quorum of `k` reports plus a bounded slack window.
+    Quorum {
+        /// Reports required before the slack window opens.
+        k: usize,
+        /// Grace window (virtual seconds) after the k-th report.
+        slack: f64,
+    },
+    /// Fixed virtual-time budget per round.
+    Deadline {
+        /// Virtual seconds granted per round.
+        budget: f64,
+    },
+}
+
+impl RoundPolicySpec {
+    /// Parse `sync | quorum:K[:SLACK] | deadline:SECS` (case-insensitive).
+    pub fn parse(s: &str) -> Result<Self> {
+        let lower = s.trim().to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        let kind = parts.next().unwrap_or("");
+        let spec = match kind {
+            "sync" => {
+                if parts.next().is_some() {
+                    bail!("round policy \"sync\" takes no arguments (got {s:?})");
+                }
+                RoundPolicySpec::Sync
+            }
+            "quorum" => {
+                let k: usize = parts
+                    .next()
+                    .with_context(|| format!("round policy {s:?}: quorum requires K"))?
+                    .parse()
+                    .with_context(|| format!("round policy {s:?}: bad quorum K"))?;
+                if k == 0 {
+                    bail!("round policy {s:?}: quorum K must be >= 1");
+                }
+                let slack: f64 = match parts.next() {
+                    Some(t) => t
+                        .parse()
+                        .with_context(|| format!("round policy {s:?}: bad slack seconds"))?,
+                    None => 0.0,
+                };
+                if !slack.is_finite() || slack < 0.0 {
+                    bail!("round policy {s:?}: slack must be finite and >= 0");
+                }
+                if parts.next().is_some() {
+                    bail!("round policy {s:?}: too many fields for quorum:K[:SLACK]");
+                }
+                RoundPolicySpec::Quorum { k, slack }
+            }
+            "deadline" => {
+                let budget: f64 = parts
+                    .next()
+                    .with_context(|| format!("round policy {s:?}: deadline requires SECS"))?
+                    .parse()
+                    .with_context(|| format!("round policy {s:?}: bad deadline seconds"))?;
+                if !budget.is_finite() || budget < 0.0 {
+                    bail!("round policy {s:?}: deadline must be finite and >= 0");
+                }
+                if parts.next().is_some() {
+                    bail!("round policy {s:?}: too many fields for deadline:SECS");
+                }
+                RoundPolicySpec::Deadline { budget }
+            }
+            _ => bail!(
+                "unknown round policy {s:?} (expected sync | quorum:K[:SLACK] | deadline:SECS)"
+            ),
+        };
+        Ok(spec)
+    }
+
+    /// Canonical name, also the value of the `round_policy` metrics field.
+    pub fn name(&self) -> String {
+        match self {
+            RoundPolicySpec::Sync => "sync".to_string(),
+            RoundPolicySpec::Quorum { k, slack } => {
+                if *slack == 0.0 {
+                    format!("quorum:{k}")
+                } else {
+                    format!("quorum:{k}:{slack}")
+                }
+            }
+            RoundPolicySpec::Deadline { budget } => format!("deadline:{budget}"),
+        }
+    }
+
+    /// True for the hard barrier (no staleness machinery is installed).
+    pub fn is_sync(&self) -> bool {
+        matches!(self, RoundPolicySpec::Sync)
+    }
+
+    /// Instantiate the policy object the session loop consults.
+    pub fn build(&self) -> Arc<dyn RoundPolicy> {
+        match *self {
+            RoundPolicySpec::Sync => Arc::new(Synchronous),
+            RoundPolicySpec::Quorum { k, slack } => Arc::new(Quorum { k, slack }),
+            RoundPolicySpec::Deadline { budget } => Arc::new(Deadline { budget }),
+        }
+    }
+}
+
+/// Round policy from `OPTIMES_ROUND_POLICY` (default: `sync`). Unparseable
+/// values warn to stderr and fall back to the synchronous barrier.
+pub fn round_policy_default() -> RoundPolicySpec {
+    match std::env::var("OPTIMES_ROUND_POLICY") {
+        Ok(v) if !v.is_empty() => match RoundPolicySpec::parse(&v) {
+            Ok(spec) => spec,
+            Err(e) => {
+                eprintln!("warning: OPTIMES_ROUND_POLICY={v:?} invalid ({e:#}); using sync");
+                RoundPolicySpec::Sync
+            }
+        },
+        _ => RoundPolicySpec::Sync,
+    }
+}
+
+/// Staleness bound from `OPTIMES_STALENESS` (default: 2 rounds).
+pub fn staleness_default() -> usize {
+    match std::env::var("OPTIMES_STALENESS") {
+        Ok(v) if !v.is_empty() => match v.parse() {
+            Ok(s) => s,
+            Err(_) => {
+                eprintln!("warning: OPTIMES_STALENESS={v:?} is not an integer; using 2");
+                2
+            }
+        },
+        _ => 2,
+    }
+}
+
+/// Per-round-of-staleness decay applied by [`StalenessWeighted`].
+pub const DEFAULT_STALENESS_DECAY: f64 = 0.5;
+
+/// Weight multiplier for an update `staleness` rounds old: `decay^staleness`,
+/// in `(0, 1]` for `decay` in `(0, 1]` and monotone non-increasing in the
+/// staleness.
+pub fn staleness_weight(staleness: usize, decay: f64) -> f64 {
+    decay.powi(staleness as i32)
+}
+
+/// What one aggregation did with pending late updates.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StaleFold {
+    /// Late updates folded into this aggregation.
+    pub folded: usize,
+    /// Sum of the decay factors applied (each in `(0, 1]`).
+    pub weight_applied: f64,
+    /// Late updates dropped for exceeding the staleness bound.
+    pub dropped: usize,
+}
+
+struct PendingUpdate {
+    state: ModelState,
+    weight: f64,
+    round: usize,
+    arrival: f64,
+}
+
+#[derive(Default)]
+struct StaleState {
+    pending: Vec<PendingUpdate>,
+    round: usize,
+    now: f64,
+    last: StaleFold,
+    dropped_total: usize,
+}
+
+/// Decorator over any [`Aggregator`]: folds late client updates (deferred by
+/// the session when a [`RoundPolicy`] advances without them) into the next
+/// aggregation after their virtual arrival, down-weighted by
+/// [`staleness_weight`], and drops anything more than `max_stale` rounds old.
+///
+/// With no pending updates this is a pure pass-through — wrapping a sync run
+/// (which never defers) cannot change its results.
+pub struct StalenessWeighted {
+    inner: Arc<dyn Aggregator>,
+    max_stale: usize,
+    decay: f64,
+    state: Mutex<StaleState>,
+}
+
+impl StalenessWeighted {
+    /// Wrap `inner` with the default decay ([`DEFAULT_STALENESS_DECAY`]).
+    pub fn new(inner: Arc<dyn Aggregator>, max_stale: usize) -> Self {
+        Self::with_decay(inner, max_stale, DEFAULT_STALENESS_DECAY)
+    }
+
+    /// Wrap `inner` with an explicit per-round decay in `(0, 1]`.
+    pub fn with_decay(inner: Arc<dyn Aggregator>, max_stale: usize, decay: f64) -> Self {
+        Self { inner, max_stale, decay, state: Mutex::new(StaleState::default()) }
+    }
+
+    /// Tell the decorator which round is about to aggregate and what the
+    /// virtual clock reads at its barrier release.
+    pub fn begin_round(&self, round: usize, now: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.round = round;
+        st.now = now;
+    }
+
+    /// Defer a late client update: it was produced in `round` and (virtually)
+    /// arrives at absolute delay-clock time `arrival`.
+    pub fn defer(&self, state: ModelState, weight: f64, round: usize, arrival: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.pending.push(PendingUpdate { state, weight, round, arrival });
+    }
+
+    /// What the most recent aggregation did with late updates.
+    pub fn last_fold(&self) -> StaleFold {
+        self.state.lock().unwrap().last
+    }
+
+    /// Late updates currently queued (arrived or not).
+    pub fn pending_len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+
+    /// Total updates dropped over the session for exceeding `max_stale`.
+    pub fn dropped_total(&self) -> usize {
+        self.state.lock().unwrap().dropped_total
+    }
+}
+
+impl Aggregator for StalenessWeighted {
+    fn name(&self) -> String {
+        format!("stale{}({})", self.max_stale, self.inner.name())
+    }
+
+    fn aggregate(&self, clients: &[(&ModelState, f64)]) -> Vec<Vec<f32>> {
+        let mut st = self.state.lock().unwrap();
+        let now = st.now;
+        let round = st.round;
+        let (arrived, keep): (Vec<_>, Vec<_>) =
+            st.pending.drain(..).partition(|p| p.arrival <= now + 1e-12);
+        st.pending = keep;
+        let mut fold = StaleFold::default();
+        let mut scaled: Vec<(ModelState, f64)> = Vec::with_capacity(arrived.len());
+        for p in arrived {
+            let s = round.saturating_sub(p.round);
+            if s > self.max_stale {
+                fold.dropped += 1;
+                continue;
+            }
+            let factor = staleness_weight(s, self.decay);
+            fold.folded += 1;
+            fold.weight_applied += factor;
+            scaled.push((p.state, p.weight * factor));
+        }
+        st.last = fold;
+        st.dropped_total += fold.dropped;
+        let mut all: Vec<(&ModelState, f64)> = clients.to_vec();
+        all.extend(scaled.iter().map(|(s, w)| (s, *w)));
+        self.inner.aggregate(&all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::aggregation::FedAvg;
+    use crate::runtime::{ModelGeom, ModelKind};
+
+    fn small_geom() -> ModelGeom {
+        ModelGeom {
+            model: ModelKind::Gc,
+            layers: 2,
+            feat: 2,
+            hidden: 2,
+            classes: 2,
+            batch: 2,
+            fanout: 2,
+            push_batch: 2,
+        }
+    }
+
+    fn const_state(v: f32) -> ModelState {
+        let mut s = ModelState::zeros(&small_geom());
+        for p in s.params.iter_mut() {
+            for x in p.iter_mut() {
+                *x = v;
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn parse_grammar_round_trips() {
+        assert_eq!(RoundPolicySpec::parse("sync").unwrap(), RoundPolicySpec::Sync);
+        assert_eq!(
+            RoundPolicySpec::parse("quorum:3").unwrap(),
+            RoundPolicySpec::Quorum { k: 3, slack: 0.0 }
+        );
+        assert_eq!(
+            RoundPolicySpec::parse("QUORUM:4:0.25").unwrap(),
+            RoundPolicySpec::Quorum { k: 4, slack: 0.25 }
+        );
+        assert_eq!(
+            RoundPolicySpec::parse("deadline:1.5").unwrap(),
+            RoundPolicySpec::Deadline { budget: 1.5 }
+        );
+        for bad in [
+            "", "nope", "quorum", "quorum:0", "quorum:x", "quorum:2:-1", "quorum:2:0.1:9",
+            "deadline", "deadline:-3", "deadline:inf", "sync:1",
+        ] {
+            assert!(RoundPolicySpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        assert_eq!(RoundPolicySpec::parse("quorum:3").unwrap().name(), "quorum:3");
+        assert_eq!(
+            RoundPolicySpec::parse("quorum:3:0.5").unwrap().name(),
+            "quorum:3:0.5"
+        );
+        assert_eq!(RoundPolicySpec::parse("deadline:2").unwrap().name(), "deadline:2");
+    }
+
+    #[test]
+    fn sync_waits_for_the_slowest() {
+        let plan = Synchronous.plan(&[0.3, 0.1, 0.7, 0.2]);
+        assert_eq!(plan.release, 0.7);
+        assert_eq!(plan.n_on_time(), 4);
+        assert_eq!(plan.stragglers(), 0);
+        assert_eq!(plan.quorum_wait, 0.0);
+    }
+
+    #[test]
+    fn quorum_releases_after_kth_report_plus_slack() {
+        let delays = [0.1, 0.9, 0.2, 5.0];
+        let plan = Quorum { k: 2, slack: 0.0 }.plan(&delays);
+        assert_eq!(plan.release, 0.2);
+        assert_eq!(plan.on_time, vec![true, false, true, false]);
+        assert_eq!(plan.quorum_wait, 0.0);
+
+        // Slack lets the 0.9 client squeak in; quorum_wait records it.
+        let plan = Quorum { k: 2, slack: 1.0 }.plan(&delays);
+        assert_eq!(plan.release, 1.2);
+        assert_eq!(plan.on_time, vec![true, true, true, false]);
+        assert!((plan.quorum_wait - 1.0).abs() < 1e-12);
+
+        // Slack never extends past the slowest client.
+        let plan = Quorum { k: 3, slack: 100.0 }.plan(&delays);
+        assert_eq!(plan.release, 5.0);
+        assert_eq!(plan.n_on_time(), 4);
+    }
+
+    #[test]
+    fn quorum_k_n_is_sync_and_empty_is_safe() {
+        let delays = [0.4, 0.2, 0.8];
+        assert_eq!(Quorum { k: 3, slack: 0.3 }.plan(&delays), Synchronous.plan(&delays));
+        let empty = Quorum { k: 3, slack: 0.3 }.plan(&[]);
+        assert_eq!(empty.on_time.len(), 0);
+        assert_eq!(empty.release, 0.0);
+    }
+
+    #[test]
+    fn deadline_drops_the_tail_but_keeps_someone() {
+        let delays = [0.1, 0.9, 2.0];
+        let plan = Deadline { budget: 1.0 }.plan(&delays);
+        assert_eq!(plan.release, 1.0);
+        assert_eq!(plan.on_time, vec![true, true, false]);
+
+        // Budget below the fastest client still admits that client.
+        let plan = Deadline { budget: 0.01 }.plan(&delays);
+        assert_eq!(plan.release, 0.1);
+        assert_eq!(plan.n_on_time(), 1);
+
+        // Budget above the slowest is clipped to it.
+        let plan = Deadline { budget: 10.0 }.plan(&delays);
+        assert_eq!(plan.release, 2.0);
+        assert_eq!(plan.n_on_time(), 3);
+    }
+
+    #[test]
+    fn staleness_weight_decays() {
+        assert_eq!(staleness_weight(0, 0.5), 1.0);
+        assert_eq!(staleness_weight(1, 0.5), 0.5);
+        assert_eq!(staleness_weight(2, 0.5), 0.25);
+    }
+
+    #[test]
+    fn stale_updates_fold_with_decayed_weight() {
+        let agg = StalenessWeighted::new(Arc::new(FedAvg), 2);
+        // Round 4: a round-3 update (staleness 1) arrived at t=1.0.
+        agg.defer(const_state(3.0), 1.0, 3, 1.0);
+        agg.begin_round(4, 2.0);
+        let on_time = const_state(1.0);
+        let out = agg.aggregate(&[(&on_time, 1.0)]);
+        // FedAvg: (1*1.0 + 0.5*3.0) / 1.5 = 5/3.
+        for p in &out {
+            for &x in p {
+                assert!((x - 5.0 / 3.0).abs() < 1e-6, "got {x}");
+            }
+        }
+        let fold = agg.last_fold();
+        assert_eq!(fold.folded, 1);
+        assert_eq!(fold.dropped, 0);
+        assert!((fold.weight_applied - 0.5).abs() < 1e-12);
+        assert_eq!(agg.pending_len(), 0);
+    }
+
+    #[test]
+    fn not_yet_arrived_updates_stay_pending() {
+        let agg = StalenessWeighted::new(Arc::new(FedAvg), 2);
+        agg.defer(const_state(9.0), 1.0, 3, 10.0);
+        agg.begin_round(4, 2.0);
+        let on_time = const_state(1.0);
+        let out = agg.aggregate(&[(&on_time, 1.0)]);
+        for p in &out {
+            for &x in p {
+                assert!((x - 1.0).abs() < 1e-6, "pending update leaked: {x}");
+            }
+        }
+        assert_eq!(agg.last_fold(), StaleFold::default());
+        assert_eq!(agg.pending_len(), 1);
+    }
+
+    #[test]
+    fn too_stale_updates_are_dropped_and_counted() {
+        let agg = StalenessWeighted::new(Arc::new(FedAvg), 1);
+        agg.defer(const_state(9.0), 1.0, 1, 0.5);
+        agg.begin_round(4, 2.0); // staleness 3 > max_stale 1
+        let on_time = const_state(1.0);
+        let out = agg.aggregate(&[(&on_time, 1.0)]);
+        for p in &out {
+            for &x in p {
+                assert!((x - 1.0).abs() < 1e-6, "dropped update leaked: {x}");
+            }
+        }
+        let fold = agg.last_fold();
+        assert_eq!(fold.folded, 0);
+        assert_eq!(fold.dropped, 1);
+        assert_eq!(agg.dropped_total(), 1);
+    }
+
+    #[test]
+    fn empty_pending_is_pure_passthrough() {
+        let inner: Arc<dyn Aggregator> = Arc::new(FedAvg);
+        let agg = StalenessWeighted::new(Arc::clone(&inner), 2);
+        agg.begin_round(1, 0.0);
+        let a = const_state(1.0);
+        let b = const_state(2.0);
+        let direct = inner.aggregate(&[(&a, 2.0), (&b, 1.0)]);
+        let wrapped = agg.aggregate(&[(&a, 2.0), (&b, 1.0)]);
+        assert_eq!(direct, wrapped);
+    }
+}

@@ -20,6 +20,9 @@ use super::embedding_server::EmbeddingServer;
 use super::metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
 use super::netsim::NetConfig;
 use super::pipeline::{pipeline_default, AsyncStoreHandle};
+use super::rounds::{
+    round_policy_default, staleness_default, RoundPolicy, RoundPolicySpec, StalenessWeighted,
+};
 use super::store::EmbeddingStore;
 use super::strategy::{ScoreKind, Strategy};
 use super::trainer::{self, pretrain_push};
@@ -63,6 +66,19 @@ pub struct SessionConfig {
     /// clock changes. Default: on (`OPTIMES_PIPELINE=off` / `run
     /// --pipeline off` disables).
     pub pipeline: bool,
+    /// Round-advancement policy (DESIGN.md §12): the synchronous barrier
+    /// (default), a quorum with bounded slack, or a virtual-time
+    /// deadline. Non-sync policies only bite when
+    /// [`NetConfig::client_latency`] injects per-client report delays;
+    /// with zero delays every policy degenerates to the sync barrier
+    /// bit-exactly. Default from `OPTIMES_ROUND_POLICY` / `run
+    /// --round-policy`.
+    pub round_policy: RoundPolicySpec,
+    /// Bounded-staleness window S for non-sync policies: late updates up
+    /// to S rounds old fold into the next aggregation with decaying
+    /// weight; older ones are dropped and counted. Default from
+    /// `OPTIMES_STALENESS` / `run --staleness`.
+    pub staleness: usize,
 }
 
 impl Default for SessionConfig {
@@ -82,6 +98,8 @@ impl Default for SessionConfig {
             overlap_stale: 1,
             reset_opt_each_round: true,
             pipeline: pipeline_default(),
+            round_policy: round_policy_default(),
+            staleness: staleness_default(),
         }
     }
 }
@@ -208,6 +226,17 @@ impl SessionBuilder {
             aggregator,
             mut observer,
         } = self;
+        // Round-policy seam (DESIGN.md §12): non-sync policies get the
+        // staleness decorator so late clients fold into later
+        // aggregations. Sync keeps the bare aggregator — bit-parity with
+        // the pre-seam session loop is structural, not incidental.
+        let policy = cfg.round_policy.build();
+        let (aggregator, stale) = if cfg.round_policy.is_sync() {
+            (aggregator, None)
+        } else {
+            let sw = Arc::new(StalenessWeighted::new(aggregator, cfg.staleness));
+            (Arc::clone(&sw) as Arc<dyn Aggregator>, Some(sw))
+        };
         let geom = *engine.geom();
         let strat = &cfg.strategy;
 
@@ -297,6 +326,7 @@ impl SessionBuilder {
             store_backend: store.describe(),
             wire_codec: store.codec(),
             pipelined: cfg.pipeline,
+            round_policy: cfg.round_policy.name(),
             ..Default::default()
         };
 
@@ -321,6 +351,9 @@ impl SessionBuilder {
             store,
             pipeline,
             aggregator,
+            policy,
+            stale,
+            delay_clock: 0.0,
             observer,
             validator,
             clients,
@@ -343,6 +376,16 @@ pub struct Session<'g> {
     /// store call synchronously on the round's own threads.
     pipeline: Option<Arc<AsyncStoreHandle>>,
     aggregator: Arc<dyn Aggregator>,
+    /// Round-advancement policy (DESIGN.md §12); plans each round's
+    /// barrier release from the injected per-client delays.
+    policy: Arc<dyn RoundPolicy>,
+    /// The staleness decorator wrapped around `aggregator` under non-sync
+    /// policies (`None` ⇒ sync; the aggregator is the bare one).
+    stale: Option<Arc<StalenessWeighted>>,
+    /// Virtual clock of barrier releases: Σ of each round's release time.
+    /// Purely delay-derived, so deterministic; late updates are stamped
+    /// against it to decide which later round they (virtually) reach.
+    delay_clock: f64,
     observer: Box<dyn RoundObserver>,
     validator: Validator,
     clients: Vec<Client>,
@@ -395,6 +438,16 @@ impl Session<'_> {
         if round == 0 {
             self.observer.on_phase(SessionPhase::Rounds);
         }
+
+        // injected per-client report delays → the round policy's plan.
+        // Delays are deterministic per (client, round) and the policy is a
+        // pure function of them, so membership (and hence the accuracy
+        // curve) is bit-reproducible (DESIGN.md §12).
+        let delays: Vec<f64> = match self.cfg.net.client_latency {
+            Some(l) => (0..self.clients.len()).map(|c| l.sample(c, round)).collect(),
+            None => vec![0.0; self.clients.len()],
+        };
+        let plan = self.policy.plan(&delays);
 
         // broadcast the global model
         for c in self.clients.iter_mut() {
@@ -486,13 +539,34 @@ impl Session<'_> {
             }
         }
 
-        // aggregate + validate
+        // aggregate + validate. Only on-time clients enter this round's
+        // aggregation directly; late ones are deferred to the staleness
+        // decorator, stamped with their virtual arrival on the delay
+        // clock (a late update can never fold into its own round, since
+        // its delay exceeds the release it missed).
+        let clock_start = self.delay_clock;
+        self.delay_clock += plan.release;
         let agg_sw = Stopwatch::start();
         let weighted: Vec<(&ModelState, f64)> = self
             .clients
             .iter()
-            .map(|c| (&c.state, c.sub.train_local.len().max(1) as f64))
+            .enumerate()
+            .filter(|(i, _)| plan.on_time[*i])
+            .map(|(_, c)| (&c.state, c.sub.train_local.len().max(1) as f64))
             .collect();
+        if let Some(stale) = &self.stale {
+            stale.begin_round(round, self.delay_clock);
+            for (i, c) in self.clients.iter().enumerate() {
+                if !plan.on_time[i] {
+                    stale.defer(
+                        c.state.clone(),
+                        c.sub.train_local.len().max(1) as f64,
+                        round,
+                        clock_start + delays[i],
+                    );
+                }
+            }
+        }
         self.global = self.aggregator.aggregate(&weighted);
         let (acc, val_loss) = self.validator.evaluate(&self.engine, &self.global)?;
         let agg_time = agg_sw.secs();
@@ -506,9 +580,12 @@ impl Session<'_> {
         };
         let mut worst = 0f64;
         let mut mean = PhaseTimes::default();
-        for o in &outcomes {
+        for (i, o) in outcomes.iter().enumerate() {
             let t = o.metrics.phases.total();
-            if t >= worst {
+            // the critical path is the slowest *on-time* client — a
+            // straggler the policy released without does not stall the
+            // round (its delay is charged to a later fold instead)
+            if plan.on_time[i] && t >= worst {
                 worst = t;
                 rm.critical = o.metrics.phases;
             }
@@ -517,7 +594,9 @@ impl Session<'_> {
             mean.dyn_pull += o.metrics.phases.dyn_pull;
             mean.push += o.metrics.phases.push;
             mean.push_hidden += o.metrics.phases.push_hidden;
-            rm.clients.push(o.metrics.clone());
+            let mut cm = o.metrics.clone();
+            cm.injected_latency = delays[i];
+            rm.clients.push(cm);
         }
         let n = outcomes.len().max(1) as f64;
         mean.pull /= n;
@@ -527,11 +606,20 @@ impl Session<'_> {
         mean.push_hidden /= n;
         rm.mean_phases = mean;
         rm.round_time = worst
+            + plan.release
             + agg_time
             + self
                 .cfg
                 .net
                 .params_time(self.global.iter().map(|p| p.len()).sum());
+        rm.quorum_wait = plan.quorum_wait;
+        rm.stragglers_late = plan.stragglers();
+        if let Some(stale) = &self.stale {
+            let f = stale.last_fold();
+            rm.stale_folded = f.folded;
+            rm.stale_weight_applied = f.weight_applied;
+            rm.stragglers_dropped = f.dropped;
+        }
 
         // store health: occupancy at round 0 (the paper's "embeddings
         // maintained" marker), cumulative failovers + routing epoch every

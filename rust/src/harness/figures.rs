@@ -523,6 +523,87 @@ pub fn fig14() -> Result<Json> {
     Ok(j)
 }
 
+// ---------------------------------------------------------------------------
+// Fig straggler — TTA under heavy-tailed client latency, sync vs quorum vs
+// deadline (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+pub fn fig_straggler() -> Result<Json> {
+    let dataset = "reddit-s";
+    let latency = crate::coordinator::ClientLatency::parse("lognormal:-1.6:1.5:7")?;
+    let (p, g) = load_dataset(dataset)?;
+    let clients = p.default_clients;
+    let engine = make_engine(ModelKind::Gc, 5)?;
+    let policies = [
+        crate::coordinator::RoundPolicySpec::Sync,
+        crate::coordinator::RoundPolicySpec::Quorum {
+            k: (clients * 3 + 3) / 4,
+            slack: 0.05,
+        },
+        crate::coordinator::RoundPolicySpec::Deadline { budget: 0.5 },
+    ];
+    let mut sessions = Vec::with_capacity(policies.len());
+    for spec in &policies {
+        let mut cfg = bench_config(&p, Strategy::e(), clients);
+        cfg.round_policy = spec.clone();
+        cfg.net.client_latency = Some(latency);
+        let key = format!(
+            "{}_straggler_{}",
+            session_key(dataset, "E", ModelKind::Gc, 5, clients, cfg.rounds),
+            spec.name().replace(':', "-")
+        );
+        sessions.push(cached_session(&key, &g, &cfg, &engine)?);
+    }
+    let refs: Vec<&SessionMetrics> = sessions.iter().collect();
+    let target = paper_target_accuracy(&refs);
+    let mut t = Table::new(&[
+        "policy", "peak acc", "TTA(s)", "median round(s)", "late", "folded", "dropped",
+        "quorum wait(s)",
+    ]);
+    let mut arr = Vec::new();
+    for m in &sessions {
+        t.row(vec![
+            m.round_policy.clone(),
+            fmt_pct(m.peak_accuracy()),
+            fmt_opt_time(m.time_to_accuracy(target)),
+            format!("{:.3}", m.median_round_time()),
+            format!("{}", m.total_stragglers_late()),
+            format!("{}", m.total_stale_folded()),
+            format!("{}", m.total_stragglers_dropped()),
+            format!("{:.3}", m.total_quorum_wait()),
+        ]);
+        let mut o = JsonObj::new();
+        o.set("policy", m.round_policy.as_str())
+            .set("peak_accuracy", m.peak_accuracy())
+            .set("tta", m.time_to_accuracy(target).unwrap_or(-1.0))
+            .set("median_round_time", m.median_round_time())
+            .set("stragglers_late", m.total_stragglers_late())
+            .set("stale_folded", m.total_stale_folded())
+            .set("stragglers_dropped", m.total_stragglers_dropped())
+            .set("stale_weight_applied", m.total_stale_weight())
+            .set("quorum_wait", m.total_quorum_wait())
+            .set("smoothed_accuracy", m.smoothed_accuracies())
+            .set(
+                "round_times",
+                m.rounds.iter().map(|r| r.round_time).collect::<Vec<_>>(),
+            );
+        arr.push(Json::Obj(o));
+    }
+    t.print(&format!(
+        "Fig straggler — TTA under {} client latency, {dataset} (target acc {:.1}%)",
+        latency.spec_string(),
+        target * 100.0
+    ));
+    let mut all = JsonObj::new();
+    all.set("dataset", dataset)
+        .set("client_latency", latency.spec_string())
+        .set("target_accuracy", target)
+        .set("sessions", Json::Arr(arr));
+    let j = Json::Obj(all);
+    write_report("fig_straggler", &j);
+    Ok(j)
+}
+
 /// Run every table/figure (the `optimes fig all` path).
 pub fn run_all() -> Result<()> {
     table1()?;
@@ -537,6 +618,7 @@ pub fn run_all() -> Result<()> {
     fig12()?;
     fig13()?;
     fig14()?;
+    fig_straggler()?;
     Ok(())
 }
 
@@ -555,7 +637,10 @@ pub fn run_figure(id: &str) -> Result<()> {
         "12" => fig12().map(|_| ()),
         "13" => fig13().map(|_| ()),
         "14" => fig14().map(|_| ()),
+        "straggler" => fig_straggler().map(|_| ()),
         "all" => run_all(),
-        other => anyhow::bail!("unknown figure id {other:?} (try: table1, 2a, 2b, 6..14, all)"),
+        other => anyhow::bail!(
+            "unknown figure id {other:?} (try: table1, 2a, 2b, 6..14, straggler, all)"
+        ),
     }
 }

@@ -26,6 +26,14 @@
 //!   DESIGN.md §11): TCP backends negotiate it per connection, model
 //!   backends round-trip values through it, and `bytes_tx`/`bytes_rx`
 //!   meter the encoded payload. Default `raw` (today's format).
+//! * `OPTIMES_ROUND_POLICY=sync|quorum:K[:SLACK]|deadline:SECS` — the
+//!   round-advancement policy (`run --round-policy`; DESIGN.md §12).
+//!   With zero injected latency every policy matches sync bit-exactly.
+//! * `OPTIMES_STALENESS=S` — bounded-staleness window for late updates
+//!   under non-sync policies (`run --staleness`; default 2).
+//! * `OPTIMES_CLIENT_LATENCY=lognormal:MU:SIGMA[:SEED]` — per-client
+//!   heavy-tailed report delays, deterministic per (client, round)
+//!   (`run --client-latency`; stragglers for the policies to tolerate).
 
 pub mod figures;
 pub mod report;
@@ -389,8 +397,21 @@ pub fn session_key(
     } else {
         format!("_w{}", wire.replace(':', "-").replace(',', "+"))
     };
+    // non-sync round policies and injected client latency change the
+    // curve, so they get their own cache slots; the sync/no-latency
+    // default keeps the historical key unchanged
+    let policy = crate::coordinator::round_policy_default().name();
+    let psuffix = if policy == "sync" {
+        String::new()
+    } else {
+        format!("_p{}", policy.replace(':', "-"))
+    };
+    let lsuffix = match crate::coordinator::client_latency_default() {
+        Some(l) => format!("_l{}", l.spec_string().replace(':', "-")),
+        None => String::new(),
+    };
     format!(
-        "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}{suffix}",
+        "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}{suffix}{psuffix}{lsuffix}",
         model.as_str(),
         dataset_scale(),
         engine_kind()

@@ -53,6 +53,7 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
     o.set("dataset", m.dataset.as_str());
     o.set("store_backend", m.store_backend.as_str());
     o.set("wire_codec", m.wire_codec.as_str());
+    o.set("round_policy", m.round_policy.as_str());
     o.set("pipelined", m.pipelined);
     o.set("store_epoch", m.store_epoch);
     o.set("bytes_raw_tx", m.bytes_raw_tx);
@@ -75,6 +76,11 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
                 .set("failovers", r.failovers)
                 .set("bytes_tx", r.bytes_tx)
                 .set("bytes_rx", r.bytes_rx)
+                .set("quorum_wait", r.quorum_wait)
+                .set("stragglers_late", r.stragglers_late)
+                .set("stragglers_dropped", r.stragglers_dropped)
+                .set("stale_folded", r.stale_folded)
+                .set("stale_weight_applied", r.stale_weight_applied)
                 .set("mean_phases", phases_json(&r.mean_phases))
                 .set("critical", phases_json(&r.critical));
             Json::Obj(ro)
@@ -110,6 +116,7 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             .unwrap_or_default()
             .to_string(),
         wire_codec: j.at("wire_codec").as_str().unwrap_or("raw").to_string(),
+        round_policy: j.at("round_policy").as_str().unwrap_or("sync").to_string(),
         pipelined: j.at("pipelined").as_bool().unwrap_or(false),
         store_epoch: j.at("store_epoch").as_usize().unwrap_or(0) as u64,
         bytes_raw_tx: j.at("bytes_raw_tx").as_usize().unwrap_or(0),
@@ -129,6 +136,11 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             failovers: rj.at("failovers").as_usize().unwrap_or(0),
             bytes_tx: rj.at("bytes_tx").as_usize().unwrap_or(0),
             bytes_rx: rj.at("bytes_rx").as_usize().unwrap_or(0),
+            quorum_wait: rj.at("quorum_wait").as_f64().unwrap_or(0.0),
+            stragglers_late: rj.at("stragglers_late").as_usize().unwrap_or(0),
+            stragglers_dropped: rj.at("stragglers_dropped").as_usize().unwrap_or(0),
+            stale_folded: rj.at("stale_folded").as_usize().unwrap_or(0),
+            stale_weight_applied: rj.at("stale_weight_applied").as_f64().unwrap_or(0.0),
             mean_phases: phases_from(rj.at("mean_phases")),
             critical: phases_from(rj.at("critical")),
             clients: Vec::new(),
@@ -190,6 +202,7 @@ mod tests {
             dataset: "reddit-s".into(),
             store_backend: "tcp(10.0.0.2:7070)".into(),
             wire_codec: "int8".into(),
+            round_policy: "quorum:3:0.1".into(),
             store_epoch: 2,
             bytes_raw_tx: 9000,
             bytes_raw_rx: 4000,
@@ -208,6 +221,11 @@ mod tests {
                 failovers: 3 + i,
                 bytes_tx: 1000 * (i + 1),
                 bytes_rx: 300 * (i + 1),
+                quorum_wait: 0.05 * i as f64,
+                stragglers_late: i,
+                stragglers_dropped: i / 2,
+                stale_folded: i,
+                stale_weight_applied: 0.5 * i as f64,
                 ..Default::default()
             };
             r.mean_phases.pull = 0.2;
@@ -261,5 +279,13 @@ mod tests {
         assert_eq!(a.queue_peak, b.queue_peak);
         assert_eq!(a.push_bytes, b.push_bytes);
         assert_eq!(b.push_bytes, 3 * 77);
+        // straggler accounting (DESIGN.md §12) survives the roundtrip
+        assert_eq!(back.round_policy, "quorum:3:0.1");
+        assert_eq!(back.rounds[2].stragglers_late, 2);
+        assert_eq!(back.total_stragglers_late(), 3);
+        assert_eq!(back.total_stragglers_dropped(), 1);
+        assert_eq!(back.total_stale_folded(), 3);
+        assert!((back.total_stale_weight() - 1.5).abs() < 1e-9);
+        assert!((back.total_quorum_wait() - 0.15).abs() < 1e-9);
     }
 }

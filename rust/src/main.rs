@@ -20,9 +20,9 @@ use anyhow::{bail, Result};
 
 use optimes::coordinator::metrics::paper_target_accuracy;
 use optimes::coordinator::{
-    aggregation, EmbServerDaemon, EmbeddingServer, EmbeddingStore, FaultSpec, NetConfig,
-    RoundMetrics, RoundObserver, SessionBuilder, SessionConfig, SessionMetrics, ShardedStore,
-    Strategy,
+    aggregation, ClientLatency, EmbServerDaemon, EmbeddingServer, EmbeddingStore, FaultSpec,
+    NetConfig, RoundMetrics, RoundObserver, RoundPolicySpec, SessionBuilder, SessionConfig,
+    SessionMetrics, ShardedStore, Strategy,
 };
 use optimes::graph::datasets;
 use optimes::harness::{self, figures};
@@ -81,6 +81,22 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             other => bail!("--pipeline expects on|off, got {other:?}"),
         }
     }
+    if let Some(p) = args.get("round-policy") {
+        // validate up front so a typo fails before any training work
+        RoundPolicySpec::parse(p)?;
+        std::env::set_var("OPTIMES_ROUND_POLICY", p);
+    }
+    if let Some(s) = args.get("staleness") {
+        let _: usize = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--staleness expects an integer, got {s:?}"))?;
+        std::env::set_var("OPTIMES_STALENESS", s);
+    }
+    if let Some(l) = args.get("client-latency") {
+        // validate up front so a typo fails before any training work
+        ClientLatency::parse(l)?;
+        std::env::set_var("OPTIMES_CLIENT_LATENCY", l);
+    }
     match cmd {
         "info" => info(),
         "run" => run(args),
@@ -119,6 +135,11 @@ commands:
                                                raw|f16|bf16|int8|topk:K[,delta[:EPS]]
          [--pipeline on|off]                   async push/pull pipeline (default on)
          [--agg fedavg|uniform|trimmed[:k]]    aggregation rule
+         [--round-policy P]                    round advancement:
+                                               sync|quorum:K[:SLACK]|deadline:SECS
+         [--staleness S]                       fold updates up to S rounds stale (default 2)
+         [--client-latency L]                  injected per-client delay,
+                                               e.g. lognormal:-0.9:1.5[:SEED]
   sweep  --dataset D --strategies D,E,O,P,OP,OPP,OPG
   fig    table1|2a|2b|6|7|8|9|10|11|12|13|14|all
   serve  --port 7070 [--listen ADDR] [--layers 2] [--hidden 32] [--shards N]
@@ -152,6 +173,13 @@ fn info() -> Result<()> {
             "off (synchronous store calls)"
         }
     );
+    println!(
+        "round policy: {} (OPTIMES_ROUND_POLICY; sync|quorum:K[:SLACK]|deadline:SECS)",
+        optimes::coordinator::round_policy_default().name()
+    );
+    if let Some(l) = optimes::coordinator::client_latency_default() {
+        println!("client latency: {} (OPTIMES_CLIENT_LATENCY)", l.spec_string());
+    }
     println!("dataset scale: 1/{}", harness::dataset_scale());
     match Manifest::load(harness::artifacts_dir()) {
         Ok(m) => {
@@ -226,6 +254,16 @@ fn session_summary(m: &SessionMetrics) {
             m.wire_ratio()
         );
     }
+    if !m.round_policy.is_empty() && m.round_policy != "sync" {
+        println!(
+            "  stragglers: policy {}, {} late / {} folded / {} dropped, quorum wait {:.3}s",
+            m.round_policy,
+            m.total_stragglers_late(),
+            m.total_stale_folded(),
+            m.total_stragglers_dropped(),
+            m.total_quorum_wait()
+        );
+    }
     let ov = m.overlap_stats();
     if ov.pipelined {
         println!(
@@ -259,8 +297,16 @@ impl RoundObserver for CliRoundPrinter {
         } else {
             String::new()
         };
+        let stragglers = if r.stragglers_late + r.stale_folded + r.stragglers_dropped > 0 {
+            format!(
+                "  late {} fold {} drop {}",
+                r.stragglers_late, r.stale_folded, r.stragglers_dropped
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "round {:>2}/{}: acc {:5.2}%  time {:.3}s  (pull {:.3} + train {:.3} + dyn {:.3} + push {:.3}){wire}",
+            "round {:>2}/{}: acc {:5.2}%  time {:.3}s  (pull {:.3} + train {:.3} + dyn {:.3} + push {:.3}){wire}{stragglers}",
             r.round + 1,
             self.total,
             r.accuracy * 100.0,
@@ -298,14 +344,15 @@ fn run(args: &Args) -> Result<()> {
     let store = harness::make_store(engine.geom(), cfg.net)?;
     println!(
         "running {dataset} / {} on {} engine, {} clients, {} rounds, store {}, \
-         pipeline {}, agg {} ...",
+         pipeline {}, agg {}, policy {} ...",
         cfg.strategy.name,
         harness::engine_kind(),
         clients,
         cfg.rounds,
         store.describe(),
         if cfg.pipeline { "on" } else { "off" },
-        aggregator.name()
+        aggregator.name(),
+        cfg.round_policy.name()
     );
     let total = cfg.rounds;
     let m = SessionBuilder::new(cfg)
@@ -387,13 +434,16 @@ fn serve(args: &Args) -> Result<()> {
         let backends: Vec<Arc<dyn EmbeddingStore>> = (0..shards)
             .map(|i| {
                 let slab = EmbeddingServer::new(layers, hidden, NetConfig::default());
-                spec.wrap_shard(i, Arc::new(slab))
+                // a real daemon serves real clients: injected delays must
+                // actually stall the socket, not just a virtual clock
+                spec.wrap_shard_real(i, Arc::new(slab))
             })
             .collect();
         Arc::new(ShardedStore::replicated(backends, replicas)?)
     } else {
         anyhow::ensure!(replicas == 0, "--replicas needs --shards > 1");
-        spec.wrap_shard(0, Arc::new(EmbeddingServer::new(layers, hidden, NetConfig::default())))
+        let slab = EmbeddingServer::new(layers, hidden, NetConfig::default());
+        spec.wrap_shard_real(0, Arc::new(slab))
     };
     let daemon = EmbServerDaemon::start(Arc::clone(&store), listen.as_str())?;
     println!(

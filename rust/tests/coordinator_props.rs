@@ -22,7 +22,8 @@
 use std::sync::Arc;
 
 use optimes::coordinator::{
-    EmbCache, EmbeddingServer, EmbeddingStore, FaultStore, NetConfig, ShardMap, ShardedStore,
+    staleness_weight, Deadline, EmbCache, EmbeddingServer, EmbeddingStore, FaultStore, NetConfig,
+    Quorum, RoundPolicy, ShardMap, ShardedStore, Synchronous,
 };
 use optimes::wire::{CodecKind, DeltaStore};
 use optimes::graph::generate::{generate, GenParams};
@@ -586,6 +587,112 @@ fn prop_delta_replays_converge_through_faults_and_rebalance() {
             // write (whose cache epoch is still valid) must have
             // skipped it
             prop_assert!(delta.rows_skipped() > 0, "delta never skipped a row");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_round_policy_invariants() {
+    check(
+        "round-policy-invariants",
+        60,
+        |g| {
+            let n = 1 + g.int(0, 15);
+            let delays: Vec<f64> = (0..n).map(|_| g.f64() * 10.0).collect();
+            // k deliberately ranges past n to exercise the clamp
+            let k = 1 + g.int(0, n + 2);
+            let slack = g.f64() * 0.5;
+            let budget = g.f64() * 10.0;
+            (delays, k, slack, budget)
+        },
+        |(delays, k, slack, budget)| {
+            let n = delays.len();
+            let mut sorted = delays.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (t_min, t_max) = (sorted[0], sorted[n - 1]);
+
+            // sync: everyone on time, barrier at the slowest report
+            let p = Synchronous.plan(delays);
+            prop_assert_eq!(p.n_on_time(), n);
+            prop_assert!(p.release == t_max, "sync release {} != t_max {t_max}", p.release);
+            prop_assert!(p.quorum_wait == 0.0);
+
+            // quorum: at least min(k, n) on time, release bounded by the
+            // k-th report plus slack and by the slowest report, and the
+            // consumed wait never exceeds the slack window
+            let k_eff = (*k).min(n);
+            let t_k = sorted[k_eff - 1];
+            let p = Quorum { k: *k, slack: *slack }.plan(delays);
+            prop_assert!(
+                p.n_on_time() >= k_eff,
+                "quorum released with {} < k_eff {k_eff} on time",
+                p.n_on_time()
+            );
+            prop_assert!(p.release >= t_k, "released before the quorum formed");
+            prop_assert!(p.release <= t_k + slack + 1e-12, "release overshot the slack");
+            prop_assert!(p.release <= t_max, "release past the slowest client");
+            prop_assert!(
+                p.quorum_wait >= 0.0 && p.quorum_wait <= slack + 1e-12,
+                "quorum_wait {} outside [0, {slack}]",
+                p.quorum_wait
+            );
+            for (i, &d) in delays.iter().enumerate() {
+                prop_assert_eq!(p.on_time[i], d <= p.release);
+            }
+
+            // deadline: at least one client always makes it, release
+            // clamped to [t_min, t_max]
+            let p = Deadline { budget: *budget }.plan(delays);
+            prop_assert!(p.n_on_time() >= 1, "deadline released an empty round");
+            prop_assert!(p.release >= t_min && p.release <= t_max);
+            prop_assert!(p.quorum_wait == 0.0);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sync_equals_quorum_k_n() {
+    check(
+        "sync-equals-quorum-k-n",
+        60,
+        |g| {
+            let n = 1 + g.int(0, 15);
+            let delays: Vec<f64> = (0..n).map(|_| g.f64() * 10.0).collect();
+            (delays,)
+        },
+        |(delays,)| {
+            let sync = Synchronous.plan(delays);
+            let quorum = Quorum { k: delays.len(), slack: 0.0 }.plan(delays);
+            prop_assert_eq!(&sync, &quorum);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_staleness_weights_decay_monotonically() {
+    check(
+        "staleness-weights-decay",
+        60,
+        |g| {
+            // decay in (0, 1]
+            let decay = (g.f64() * 0.999 + 0.001).min(1.0);
+            (decay,)
+        },
+        |&(decay,)| {
+            let weights: Vec<f64> = (0..=10usize).map(|s| staleness_weight(s, decay)).collect();
+            prop_assert!(weights[0] == 1.0, "fresh updates must weigh 1.0");
+            for (s, w) in weights.iter().enumerate() {
+                prop_assert!(
+                    *w > 0.0 && *w <= 1.0,
+                    "weight {w} at staleness {s} outside (0, 1]"
+                );
+            }
+            for pair in weights.windows(2) {
+                prop_assert!(pair[1] <= pair[0], "weights not monotone non-increasing");
+            }
             Ok(())
         },
     );

@@ -176,8 +176,18 @@ fn single_rpc_error_is_invisible_with_replicas() {
 }
 
 #[test]
-fn latency_spikes_change_wall_time_not_values() {
+fn latency_spikes_change_virtual_time_not_values() {
+    use optimes::coordinator::metrics::RpcKind;
     const SEED: u64 = 317;
+    // summed model-time of every store RPC the session issued — injected
+    // delays are charged here (the virtual clock), not slept for real
+    let rpc_time = |m: &SessionMetrics| -> f64 {
+        [RpcKind::Pull, RpcKind::PullOnDemand, RpcKind::Push]
+            .into_iter()
+            .flat_map(|k| m.rpcs(k))
+            .map(|r| r.time)
+            .sum()
+    };
     for pipeline in [false, true] {
         let base = baseline(pipeline, SEED);
         let (backends, handles) = faulted_backends(SHARDS);
@@ -189,6 +199,11 @@ fn latency_spikes_change_wall_time_not_values() {
         assert_same_curve(&base, &chaos);
         // delays are not failures
         assert_eq!(chaos.total_failovers(), 0);
+        // ...but they do show up in the modeled RPC time
+        assert!(
+            rpc_time(&chaos) > rpc_time(&base),
+            "pipeline={pipeline}: injected delays never reached the virtual clock"
+        );
     }
 }
 

@@ -1,0 +1,238 @@
+//! Semi-synchronous round advancement under injected client latency
+//! (DESIGN.md §12). Two families of guarantees:
+//!
+//! 1. **Structural parity.** With zero injected latency, every policy's
+//!    release plan degenerates to the synchronous barrier (`release = 0`,
+//!    everyone on time), so `quorum:K` and `deadline:S` must reproduce
+//!    the `sync` accuracy curve *bit-for-bit* — on the plain slab store
+//!    and on the sharded/replicated plane, pipeline off and on. This is
+//!    what lets the CI `round-policy` matrix rerun the whole chaos and
+//!    parity suites under `quorum:3` without golden-file churn.
+//!
+//! 2. **The straggler win.** Under a heavy-tailed lognormal latency
+//!    model, `quorum:K` must reach the sync run's accuracy (±1 pt) in a
+//!    fraction of the virtual time, while actually exercising the
+//!    bounded-staleness fold (late updates folded with decayed weight,
+//!    not silently discarded).
+//!
+//! Latency here is *injected model time*, deterministic per
+//! `(client, round)` — never measured wall time — so every assertion
+//! below is exact and seed-stable (the same invariant
+//! `tests/store_parity.rs` leans on).
+
+use std::sync::Arc;
+
+use optimes::coordinator::{
+    ClientLatency, NetConfig, RoundPolicySpec, SessionBuilder, SessionConfig, SessionMetrics,
+    ShardedStore, Strategy,
+};
+use optimes::graph::datasets::tiny;
+use optimes::runtime::{ModelGeom, ModelKind, RefEngine, StepEngine};
+
+const HIDDEN: usize = 16;
+const N_LAYERS: usize = 2; // layers - 1
+const ROUNDS: usize = 8;
+const CLIENTS: usize = 4;
+
+fn ref_engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: HIDDEN,
+        classes: 4,
+        batch: 8,
+        fanout: 3,
+        push_batch: 8,
+    }))
+}
+
+fn cfg(
+    policy: RoundPolicySpec,
+    latency: Option<ClientLatency>,
+    pipeline: bool,
+) -> SessionConfig {
+    SessionConfig {
+        clients: CLIENTS,
+        strategy: Strategy::e(),
+        rounds: ROUNDS,
+        epochs: 2,
+        epoch_batches: 4,
+        eval_batches: 4,
+        // sequential clients: deterministic push/pull order makes the
+        // accuracy curves comparable bit-for-bit across runs
+        parallel_clients: false,
+        pipeline,
+        round_policy: policy,
+        staleness: 2,
+        net: NetConfig { client_latency: latency, ..NetConfig::default() },
+        ..Default::default()
+    }
+}
+
+fn run(config: SessionConfig, seed: u64) -> SessionMetrics {
+    let g = tiny(seed);
+    SessionBuilder::new(config)
+        .build(&g, ref_engine())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn assert_same_curve(a: &SessionMetrics, b: &SessionMetrics) {
+    assert_eq!(a.accuracies(), b.accuracies(), "accuracy curves diverged");
+    let va: Vec<f64> = a.rounds.iter().map(|r| r.val_loss).collect();
+    let vb: Vec<f64> = b.rounds.iter().map(|r| r.val_loss).collect();
+    assert_eq!(va, vb, "validation losses diverged");
+    assert_eq!(a.server_embeddings, b.server_embeddings);
+}
+
+fn assert_no_straggler_activity(m: &SessionMetrics) {
+    assert_eq!(m.total_stragglers_late(), 0, "[{}] saw late clients", m.round_policy);
+    assert_eq!(m.total_stale_folded(), 0, "[{}] folded stale updates", m.round_policy);
+    assert_eq!(m.total_stragglers_dropped(), 0, "[{}] dropped updates", m.round_policy);
+    assert_eq!(m.total_quorum_wait(), 0.0, "[{}] waited on a quorum", m.round_policy);
+}
+
+// ---------------------------------------------------------------------------
+// structural parity: zero latency => every policy is the sync barrier
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_latency_policies_match_sync_bitwise() {
+    const SEED: u64 = 401;
+    for pipeline in [false, true] {
+        let sync = run(cfg(RoundPolicySpec::Sync, None, pipeline), SEED);
+        assert_eq!(sync.round_policy, "sync");
+        for policy in [
+            RoundPolicySpec::Quorum { k: CLIENTS, slack: 0.0 },
+            RoundPolicySpec::Quorum { k: 2, slack: 0.05 },
+            RoundPolicySpec::Deadline { budget: 1.0 },
+        ] {
+            let m = run(cfg(policy.clone(), None, pipeline), SEED);
+            assert_eq!(m.round_policy, policy.name());
+            assert_same_curve(&sync, &m);
+            assert_no_straggler_activity(&m);
+        }
+    }
+}
+
+#[test]
+fn zero_latency_quorum_matches_sync_on_sharded_replicated_store() {
+    const SEED: u64 = 403;
+    let store = || {
+        Arc::new(
+            ShardedStore::in_process_replicated(4, 1, N_LAYERS, HIDDEN, NetConfig::default())
+                .unwrap(),
+        )
+    };
+    let g = tiny(SEED);
+    let run_on = |policy: RoundPolicySpec| -> SessionMetrics {
+        SessionBuilder::new(cfg(policy, None, false))
+            .store(store())
+            .build(&g, ref_engine())
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let sync = run_on(RoundPolicySpec::Sync);
+    let quorum = run_on(RoundPolicySpec::Quorum { k: 3, slack: 0.0 });
+    assert_same_curve(&sync, &quorum);
+    assert_no_straggler_activity(&quorum);
+}
+
+// ---------------------------------------------------------------------------
+// the straggler win: heavy-tailed latency, quorum advances early
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quorum_beats_sync_tta_under_heavy_tail() {
+    const SEED: u64 = 405;
+    let latency = ClientLatency::parse("lognormal:-0.9:1.5:11").unwrap();
+    let sync = run(cfg(RoundPolicySpec::Sync, Some(latency), false), SEED);
+    let quorum = run(
+        cfg(RoundPolicySpec::Quorum { k: 3, slack: 0.1 }, Some(latency), false),
+        SEED,
+    );
+
+    // the quorum run genuinely exercised the semi-synchronous path:
+    // somebody was late, and their update folded (or aged out) rather
+    // than being silently discarded
+    assert!(quorum.total_stragglers_late() > 0, "no client was ever late");
+    assert!(
+        quorum.total_stale_folded() + quorum.total_stragglers_dropped() > 0,
+        "late updates neither folded nor dropped"
+    );
+    assert!(
+        quorum.rounds.iter().any(|r| r.stale_weight_applied > 0.0),
+        "stale folds applied no decayed weight"
+    );
+    // sync, by definition, has no stragglers even under latency
+    assert_no_straggler_activity(&sync);
+
+    // both runs learn: same data, same model, quorum within a point
+    assert!(sync.peak_accuracy() > 0.4, "sync never learned: {}", sync.peak_accuracy());
+    assert!(quorum.peak_accuracy() > 0.4, "quorum never learned: {}", quorum.peak_accuracy());
+    assert!(
+        (sync.peak_accuracy() - quorum.peak_accuracy()).abs() < 0.1,
+        "peaks diverged: sync {} vs quorum {}",
+        sync.peak_accuracy(),
+        quorum.peak_accuracy()
+    );
+
+    // ...and the quorum run gets there much faster in virtual time,
+    // because each round releases after the 3rd report instead of the
+    // heavy-tailed maximum
+    let target = optimes::coordinator::metrics::paper_target_accuracy(&[&sync, &quorum]);
+    let tta_sync = sync.time_to_accuracy(target).expect("sync never hit target");
+    let tta_quorum = quorum.time_to_accuracy(target).expect("quorum never hit target");
+    assert!(
+        tta_quorum <= 0.5 * tta_sync,
+        "quorum TTA {tta_quorum:.3}s not <= half of sync TTA {tta_sync:.3}s"
+    );
+    assert!(quorum.total_time() < sync.total_time());
+}
+
+// ---------------------------------------------------------------------------
+// determinism + serialization of the straggler accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn straggler_runs_are_deterministic_and_serializable() {
+    const SEED: u64 = 407;
+    let latency = ClientLatency::parse("lognormal:-0.9:1.5:11").unwrap();
+    let mk = || run(cfg(RoundPolicySpec::Quorum { k: 3, slack: 0.1 }, Some(latency), false), SEED);
+    let a = mk();
+    let b = mk();
+    assert_same_curve(&a, &b);
+    assert_eq!(a.total_stragglers_late(), b.total_stragglers_late());
+    assert_eq!(a.total_stale_folded(), b.total_stale_folded());
+    assert_eq!(a.total_stragglers_dropped(), b.total_stragglers_dropped());
+    assert_eq!(a.total_stale_weight(), b.total_stale_weight());
+    assert_eq!(a.total_quorum_wait(), b.total_quorum_wait());
+
+    let text = optimes::harness::report::session_to_json(&a).to_string_pretty();
+    let back = optimes::harness::report::session_from_json(&text).expect("round-trip failed");
+    assert_eq!(back.round_policy, a.round_policy);
+    assert_eq!(back.total_stragglers_late(), a.total_stragglers_late());
+    assert_eq!(back.total_stale_folded(), a.total_stale_folded());
+    assert_eq!(back.total_stragglers_dropped(), a.total_stragglers_dropped());
+    assert!((back.total_stale_weight() - a.total_stale_weight()).abs() < 1e-9);
+    assert!((back.total_quorum_wait() - a.total_quorum_wait()).abs() < 1e-9);
+}
+
+#[test]
+fn pipeline_does_not_change_straggler_accounting() {
+    // lateness is decided on injected delays, never on measured wall
+    // time, so the async pipeline must not perturb any of it
+    const SEED: u64 = 409;
+    let latency = ClientLatency::parse("lognormal:-0.9:1.5:11").unwrap();
+    let off = run(cfg(RoundPolicySpec::Quorum { k: 3, slack: 0.1 }, Some(latency), false), SEED);
+    let on = run(cfg(RoundPolicySpec::Quorum { k: 3, slack: 0.1 }, Some(latency), true), SEED);
+    assert_same_curve(&off, &on);
+    assert_eq!(off.total_stragglers_late(), on.total_stragglers_late());
+    assert_eq!(off.total_stale_folded(), on.total_stale_folded());
+    assert_eq!(off.total_stragglers_dropped(), on.total_stragglers_dropped());
+    assert_eq!(off.total_stale_weight(), on.total_stale_weight());
+    assert_eq!(off.total_quorum_wait(), on.total_quorum_wait());
+}
