@@ -19,6 +19,7 @@ use optimes::graph::scoring;
 use optimes::graph::subgraph::{build_all, Prune};
 use optimes::harness;
 use optimes::runtime::{kernels, ModelState, StepEngine};
+use optimes::storage::{load_graph_file, write_graph_file, GraphBackend};
 use optimes::util::json::{Json, JsonObj};
 use optimes::util::rng::Rng;
 
@@ -237,6 +238,51 @@ fn main() {
         ratios.push((format!("bytes_ratio_{}", spec.replace(':', "_")), ratio));
     }
 
+    // ---- out-of-core graph plane: GraphFile write/load + backend scans
+    // (DESIGN.md §13; lands as the `graph_io` section of BENCH_micro.json)
+    let mut gio_res = Results {
+        entries: Vec::new(),
+        quick,
+    };
+    let gpath = std::env::temp_dir().join(format!("optimes-bench-{}.graph", std::process::id()));
+    let mut file_mb = 0f64;
+    let write_s = gio_res.bench("graph_io: write reddit-s GraphFile", 1, || {
+        let info = write_graph_file(&gpath, &g).expect("bench GraphFile write");
+        file_mb = info.file_len as f64 / (1024.0 * 1024.0);
+    });
+    let write_mb_s = file_mb / write_s.max(1e-12);
+    println!("graph_io: {file_mb:.1} MB on disk, {write_mb_s:.0} MB/s streamed write");
+    gio_res.bench("graph_io: load ram (verify + copy)", 1, || {
+        let _ = load_graph_file(&gpath, GraphBackend::Ram).expect("bench ram load");
+    });
+    gio_res.bench("graph_io: open mmap (verify + map)", 1, || {
+        let _ = load_graph_file(&gpath, GraphBackend::Mmap).expect("bench mmap open");
+    });
+    let g_ram = load_graph_file(&gpath, GraphBackend::Ram).expect("ram graph");
+    let g_map = load_graph_file(&gpath, GraphBackend::Mmap).expect("mapped graph");
+    for (tag, gx) in [("ram", &g_ram), ("mmap", &g_map)] {
+        gio_res.bench(&format!("graph_io: full neighbor scan ({tag})"), 5, || {
+            let mut acc = 0u64;
+            for v in 0..gx.n as u32 {
+                for &t in gx.inc.neighbors(v) {
+                    acc = acc.wrapping_add(t as u64);
+                }
+            }
+            std::hint::black_box(acc);
+        });
+        gio_res.bench(&format!("graph_io: feature gather 20k ({tag})"), 5, || {
+            let mut acc = 0f32;
+            let mut v = 1u32;
+            for _ in 0..20_000 {
+                v = v.wrapping_mul(0x9E37).wrapping_add(1) % gx.n as u32;
+                acc += gx.feature(v)[0];
+            }
+            std::hint::black_box(acc);
+        });
+    }
+    drop(g_map);
+    let _ = std::fs::remove_file(&gpath);
+
     // engine step latency (the L1/L2 hot path through PJRT or Ref)
     let batch = assemble_batch(&blocks, sub, &cache, &g, &adj, true);
     let mut state = ModelState::init(&geom, 3);
@@ -274,5 +320,9 @@ fn main() {
     );
     let ratio_refs: Vec<(&str, f64)> = ratios.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     harness::record_bench_section("wire", wire_res.to_json(&ratio_refs));
+    harness::record_bench_section(
+        "graph_io",
+        gio_res.to_json(&[("file_mb", file_mb), ("write_mb_per_s", write_mb_s)]),
+    );
     println!("\n[micro_substrates] done in {:.1}s", t0.elapsed().as_secs_f64());
 }

@@ -14,11 +14,12 @@
 //!   wall time — opts into real sleeps via
 //!   [`FaultStore::with_real_delays`] / [`FaultSpec::wrap_shard_real`].
 //! * [`SnapshotStore`] is the persistence-shaped decorator: it
-//!   write-throughs every pushed row into a shadow copy that can be
-//!   [`dump`](SnapshotStore::dump)ed to a byte stream (via the safe LE
-//!   [`codec`]) and [`restore`](SnapshotStore::restore)d into a fresh
-//!   backend — so a restarted shard comes back warm and rejoins the
-//!   replicated router via [`ShardedStore::rebalance`].
+//!   write-throughs every pushed row into an mmap-backed shadow slab
+//!   (a [`RowSlab`] over an unlinked temp file — page cache, not heap)
+//!   that can be [`dump`](SnapshotStore::dump)ed to a byte stream (via
+//!   the safe LE [`codec`]) and [`restore`](SnapshotStore::restore)d
+//!   into a fresh backend — so a restarted shard comes back warm and
+//!   rejoins the replicated router via [`ShardedStore::rebalance`].
 //!
 //! Both decorators are value-transparent: [`FaultStore`] never corrupts
 //! a payload (an injected fault is a clean `Err` or a delay), and
@@ -29,6 +30,7 @@
 //!
 //! [`ShardedStore::rebalance`]: super::store::ShardedStore::rebalance
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -39,6 +41,7 @@ use anyhow::{bail, ensure, Context, Result};
 use super::codec;
 use super::metrics::RpcRecord;
 use super::store::{EmbeddingStore, StoreStats};
+use crate::storage::RowSlab;
 use crate::util::rng::Rng;
 
 /// One deterministic fault rule, applied per data-plane RPC (push/pull)
@@ -425,8 +428,8 @@ impl EmbeddingStore for FaultStore {
 const SNAP_MAGIC: u32 = 0x5350_414E;
 
 /// Write-through persistence decorator: every pushed row is mirrored
-/// into an in-memory shadow slab that [`dump`](SnapshotStore::dump)
-/// serializes (sorted by id, bit-exact LE floats) and
+/// into a shadow slab that [`dump`](SnapshotStore::dump) serializes
+/// (sorted by id, bit-exact LE floats) and
 /// [`restore`](SnapshotStore::restore) replays into a fresh backend as
 /// one batched push. A restarted shard is rebuilt by `restore` and then
 /// re-admitted to the replicated router via
@@ -434,42 +437,59 @@ const SNAP_MAGIC: u32 = 0x5350_414E;
 /// which copies whatever it missed while down from the live replicas
 /// (DESIGN.md §10).
 ///
-/// The shadow costs one extra in-memory copy of the shard's rows —
-/// acceptable at reproduction scale; a production deployment would swap
-/// the shadow for an mmap'd slab behind the same dump/restore surface.
+/// The shadow lives in an mmap-backed [`RowSlab`] over an unlinked temp
+/// file (DESIGN.md §13.4): one fixed-width row of
+/// `n_layers * hidden` floats per mirrored node, so the dormant copy
+/// sits in the page cache — where the kernel can write it back and
+/// evict under pressure — instead of doubling the shard's heap. Only
+/// the id → slot index stays on the heap.
 pub struct SnapshotStore {
     inner: Arc<dyn EmbeddingStore>,
-    /// node id -> per-layer rows (each `hidden` wide).
-    shadow: Mutex<HashMap<u32, Vec<Vec<f32>>>>,
+    shadow: Mutex<Shadow>,
+}
+
+/// node id -> slab row slot; rows are `n_layers * hidden` floats laid
+/// out layer-major. The slab is created lazily on the first mirrored
+/// push (so `new` stays infallible).
+struct Shadow {
+    index: HashMap<u32, usize>,
+    slab: Option<RowSlab>,
 }
 
 impl SnapshotStore {
     pub fn new(inner: Arc<dyn EmbeddingStore>) -> Self {
         Self {
             inner,
-            shadow: Mutex::new(HashMap::new()),
+            shadow: Mutex::new(Shadow {
+                index: HashMap::new(),
+                slab: None,
+            }),
         }
     }
 
     /// Nodes currently mirrored in the shadow slab.
     pub fn shadow_nodes(&self) -> usize {
-        self.shadow.lock().unwrap().len()
+        self.shadow.lock().unwrap().index.len()
     }
 
     /// Serialize the shadow slab (geometry header + rows sorted by id).
     /// Returns the number of nodes written.
     pub fn dump(&self, w: &mut impl Write) -> Result<usize> {
         let shadow = self.shadow.lock().unwrap();
+        let h = self.inner.hidden();
+        let layers = self.inner.n_layers();
         codec::write_u32(w, SNAP_MAGIC)?;
-        codec::write_u32(w, self.inner.n_layers() as u32)?;
-        codec::write_u32(w, self.inner.hidden() as u32)?;
-        codec::write_u64(w, shadow.len() as u64)?;
-        let mut ids: Vec<u32> = shadow.keys().copied().collect();
+        codec::write_u32(w, layers as u32)?;
+        codec::write_u32(w, h as u32)?;
+        codec::write_u64(w, shadow.index.len() as u64)?;
+        let mut ids: Vec<u32> = shadow.index.keys().copied().collect();
         ids.sort_unstable();
         for id in &ids {
             codec::write_u32(w, *id)?;
-            for layer in &shadow[id] {
-                codec::write_f32s(w, layer)?;
+            let slot = shadow.index[id];
+            let row = shadow.slab.as_ref().expect("non-empty shadow has a slab").row(slot);
+            for l in 0..layers {
+                codec::write_f32s(w, &row[l * h..(l + 1) * h])?;
             }
         }
         Ok(ids.len())
@@ -505,24 +525,28 @@ impl SnapshotStore {
         let mut nodes: Vec<u32> = Vec::with_capacity(count);
         let mut per_layer: Vec<Vec<f32>> =
             (0..n_layers).map(|_| Vec::with_capacity(count * hidden)).collect();
-        let mut shadow = HashMap::with_capacity(count);
+        let mut index = HashMap::with_capacity(count);
+        let mut slab = RowSlab::new(n_layers * hidden).context("snapshot shadow slab")?;
         for _ in 0..count {
             let id = codec::read_u32(r)?;
-            let mut row_layers = Vec::with_capacity(n_layers);
-            for dst in per_layer.iter_mut() {
+            let slot = slab.alloc_row().context("snapshot shadow slab")?;
+            for (l, dst) in per_layer.iter_mut().enumerate() {
                 let row = codec::read_f32s(r, hidden)?;
                 dst.extend_from_slice(&row);
-                row_layers.push(row);
+                slab.row_mut(slot)[l * hidden..(l + 1) * hidden].copy_from_slice(&row);
             }
             nodes.push(id);
-            shadow.insert(id, row_layers);
+            index.insert(id, slot);
         }
         if !nodes.is_empty() {
             inner.push(&nodes, &per_layer).context("snapshot restore push")?;
         }
         Ok(Self {
             inner,
-            shadow: Mutex::new(shadow),
+            shadow: Mutex::new(Shadow {
+                index,
+                slab: Some(slab),
+            }),
         })
     }
 
@@ -552,13 +576,20 @@ impl EmbeddingStore for SnapshotStore {
         let rec = self.inner.push(nodes, per_layer)?;
         let h = self.inner.hidden();
         let mut shadow = self.shadow.lock().unwrap();
+        if shadow.slab.is_none() {
+            shadow.slab =
+                Some(RowSlab::new(per_layer.len() * h).context("snapshot shadow slab")?);
+        }
+        let Shadow { index, slab } = &mut *shadow;
+        let slab = slab.as_mut().expect("ensured just above");
         for (i, &node) in nodes.iter().enumerate() {
-            let entry = shadow
-                .entry(node)
-                .or_insert_with(|| vec![Vec::new(); per_layer.len()]);
-            for (dst, rows) in entry.iter_mut().zip(per_layer) {
-                dst.clear();
-                dst.extend_from_slice(&rows[i * h..(i + 1) * h]);
+            let slot = match index.entry(node) {
+                Entry::Occupied(e) => *e.get(),
+                Entry::Vacant(e) => *e.insert(slab.alloc_row().context("snapshot shadow slab")?),
+            };
+            let row = slab.row_mut(slot);
+            for (l, rows) in per_layer.iter().enumerate() {
+                row[l * h..(l + 1) * h].copy_from_slice(&rows[i * h..(i + 1) * h]);
             }
         }
         Ok(rec)

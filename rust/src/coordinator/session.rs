@@ -26,10 +26,9 @@ use super::rounds::{
 use super::store::EmbeddingStore;
 use super::strategy::{ScoreKind, Strategy};
 use super::trainer::{self, pretrain_push};
-use crate::graph::partition::metis_lite;
 use crate::graph::scoring;
 use crate::graph::subgraph::{build_all_per_client, Prune};
-use crate::graph::{Graph, Partition};
+use crate::graph::{Graph, Partition, PartitionerKind};
 use crate::runtime::{ModelState, StepEngine};
 use crate::util::Stopwatch;
 
@@ -79,6 +78,11 @@ pub struct SessionConfig {
     /// weight; older ones are dropped and counted. Default from
     /// `OPTIMES_STALENESS` / `run --staleness`.
     pub staleness: usize,
+    /// How the graph is split across clients: the in-RAM `metis_lite`
+    /// (default), the `hash` max-cut baseline, or the streaming `ldg`
+    /// greedy pass (DESIGN.md §13.3). Default from `OPTIMES_PARTITIONER`
+    /// / `run --partitioner`.
+    pub partitioner: PartitionerKind,
 }
 
 impl Default for SessionConfig {
@@ -100,6 +104,7 @@ impl Default for SessionConfig {
             pipeline: pipeline_default(),
             round_policy: round_policy_default(),
             staleness: staleness_default(),
+            partitioner: PartitionerKind::from_env(),
         }
     }
 }
@@ -242,7 +247,7 @@ impl SessionBuilder {
 
         // ---- partition -----------------------------------------------------
         observer.on_phase(SessionPhase::Partition);
-        let part = metis_lite(g, cfg.clients, cfg.seed);
+        let part = cfg.partitioner.partition(g, cfg.clients, cfg.seed);
 
         // ---- subgraph expansion + pruning + scoring ------------------------
         observer.on_phase(SessionPhase::PruneScore);

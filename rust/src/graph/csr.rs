@@ -5,12 +5,18 @@
 //! definition is the shortest-path distance along in-edges), so the CSR
 //! keeps both directions: `out` for push-set discovery and partition
 //! quality, `inc` for sampling and scoring.
+//!
+//! Bulk arrays are [`Slab`]s: heap `Vec`s for generated graphs (the `ram`
+//! backend) or typed views into a mapped `GraphFile` (the `mmap` backend,
+//! DESIGN.md §13). `Slab` derefs to `[T]`, so consumers are agnostic.
+
+use crate::storage::Slab;
 
 /// Compressed sparse row adjacency (one direction).
 #[derive(Clone, Debug, Default)]
 pub struct Csr {
-    pub offsets: Vec<u32>,
-    pub targets: Vec<u32>,
+    pub offsets: Slab<u32>,
+    pub targets: Slab<u32>,
 }
 
 impl Csr {
@@ -52,11 +58,15 @@ impl Csr {
             targets[pos as usize] = d;
             cursor[s as usize] += 1;
         }
-        Self { offsets, targets }
+        Self {
+            offsets: offsets.into(),
+            targets: targets.into(),
+        }
     }
 
     /// Reverse every edge (out-CSR -> in-CSR and vice versa).
-    pub fn reversed(&self, n: usize) -> Self {
+    pub fn reversed(&self) -> Self {
+        let n = self.n();
         let mut edges = Vec::with_capacity(self.m());
         for v in 0..n as u32 {
             for &u in self.neighbors(v) {
@@ -78,8 +88,8 @@ pub struct Graph {
     pub feat_dim: usize,
     pub classes: usize,
     /// Row-major `[n, feat_dim]`.
-    pub features: Vec<f32>,
-    pub labels: Vec<u16>,
+    pub features: Slab<f32>,
+    pub labels: Slab<u16>,
     pub train_nodes: Vec<u32>,
     pub test_nodes: Vec<u32>,
 }
@@ -98,7 +108,15 @@ impl Graph {
         }
     }
 
-    /// Structural sanity check used by tests and the generator.
+    /// True when bulk arrays are served from mapped `GraphFile` pages.
+    pub fn is_mapped(&self) -> bool {
+        self.out.targets.is_mapped()
+    }
+
+    /// Structural sanity check used by tests, the generator, and every
+    /// load path (both backends route through it on entry; the mmap
+    /// opener additionally verifies section checksums via a streaming
+    /// read *before* mapping, see `storage::format`).
     pub fn validate(&self) -> Result<(), String> {
         if self.out.n() != self.n || self.inc.n() != self.n {
             return Err("csr size mismatch".into());
@@ -117,7 +135,7 @@ impl Graph {
                 return Err(format!("edge target {v} out of range"));
             }
         }
-        for &l in &self.labels {
+        for &l in self.labels.iter() {
             if l as usize >= self.classes {
                 return Err(format!("label {l} out of range"));
             }
@@ -154,14 +172,14 @@ mod tests {
     #[test]
     fn reversed_swaps_directions() {
         let g = tiny();
-        let r = g.reversed(3);
+        let r = g.reversed();
         assert_eq!(r.m(), 4);
         let mut n2: Vec<u32> = r.neighbors(2).to_vec();
         n2.sort_unstable();
         assert_eq!(n2, vec![0, 1]);
         assert_eq!(r.neighbors(0), &[2]);
         // double reverse is identity up to per-vertex ordering
-        let rr = r.reversed(3);
+        let rr = r.reversed();
         for v in 0..3u32 {
             let mut a = g.neighbors(v).to_vec();
             let mut b = rr.neighbors(v).to_vec();

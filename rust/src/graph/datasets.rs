@@ -9,6 +9,14 @@
 
 use super::csr::Graph;
 use super::generate::{generate, GenParams};
+use crate::storage::{GraphBackend, GraphStore};
+
+/// Re-home a freshly generated graph onto the env-selected backend
+/// (`OPTIMES_GRAPH_BACKEND`). A failed adoption is a hard error — a
+/// silent fall-back to `ram` would fake backend parity in CI.
+fn adopt_env(g: Graph) -> Graph {
+    GraphStore::adopt(g, GraphBackend::from_env()).expect("adopt graph onto OPTIMES_GRAPH_BACKEND")
+}
 
 #[derive(Clone, Debug)]
 pub struct DatasetPreset {
@@ -137,13 +145,13 @@ pub fn load(name: &str, scale: usize) -> Option<(DatasetPreset, Graph)> {
         p.gen.n /= scale;
         p.epoch_batches = (p.epoch_batches / scale).max(2);
     }
-    let g = generate(&p.gen);
+    let g = adopt_env(generate(&p.gen));
     Some((p, g))
 }
 
 /// A tiny dataset for unit/integration tests (fast to generate and train).
 pub fn tiny(seed: u64) -> Graph {
-    generate(&GenParams {
+    adopt_env(generate(&GenParams {
         n: 600,
         avg_degree: 10.0,
         communities: 4,
@@ -156,7 +164,7 @@ pub fn tiny(seed: u64) -> Graph {
         train_frac: 0.5,
         test_frac: 0.25,
         seed,
-    })
+    }))
 }
 
 #[cfg(test)]

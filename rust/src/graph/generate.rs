@@ -15,7 +15,13 @@
 //! neighbours hurts (the paper's D-vs-E gap), and the hurt grows with
 //! density, reproducing the Reddit ≫ Arxiv sensitivity ordering.
 
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
 use super::csr::{Csr, Graph};
+use crate::storage::format::EdgeScatter;
+use crate::storage::{GraphFileInfo, GraphFileWriter};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -75,12 +81,16 @@ fn class_embeddings(classes: usize, dim: usize, rng: &mut Rng) -> Vec<Vec<f32>> 
         .collect()
 }
 
-pub fn generate(p: &GenParams) -> Graph {
-    assert!(p.n > 0 && p.communities > 0 && p.classes > 0);
-    let mut rng = Rng::new(p.seed, 0xFEED);
+/// Community layout shared by both generation paths: contiguous balanced
+/// blocks, then shuffled ids so partitioners can't trivially exploit
+/// vertex order, plus the per-community member index used for
+/// intra-community targeting.
+struct Communities {
+    comm_of: Vec<u32>,
+    members: Vec<Vec<u32>>,
+}
 
-    // --- community assignment: contiguous balanced blocks, then shuffled
-    // ids so partitioners can't trivially exploit vertex order.
+fn community_setup(p: &GenParams, rng: &mut Rng) -> Communities {
     let mut comm = vec![0u32; p.n];
     for (v, c) in comm.iter_mut().enumerate() {
         *c = (v * p.communities / p.n) as u32;
@@ -91,16 +101,24 @@ pub fn generate(p: &GenParams) -> Graph {
     for (orig, &newid) in perm.iter().enumerate() {
         comm_of[newid as usize] = comm[orig];
     }
-
-    // Index vertices per community for intra-community targeting.
     let mut members: Vec<Vec<u32>> = vec![Vec::new(); p.communities];
     for v in 0..p.n as u32 {
         members[comm_of[v as usize] as usize].push(v);
     }
+    Communities { comm_of, members }
+}
 
-    // --- edges: per-vertex out-degree ~ 1 + powerlaw with the requested
-    // mean; targets preferential within community, uniform-ish across.
-    let mut edges: Vec<(u32, u32)> = Vec::with_capacity((p.n as f64 * p.avg_degree) as usize);
+/// Drive the per-vertex degree + target draws, invoking `emit(src, dst)`
+/// for every surviving (deduplicated, loop-free) edge in ascending
+/// source order. [`generate`] and [`generate_to_file`] run this exact
+/// code, so their rng consumption — and therefore the emitted edge
+/// sequence — is identical.
+fn emit_edges(
+    p: &GenParams,
+    comm: &Communities,
+    rng: &mut Rng,
+    mut emit: impl FnMut(u32, u32) -> Result<()>,
+) -> Result<()> {
     let mut seen = std::collections::HashSet::new();
     for v in 0..p.n as u32 {
         // degree: mixture keeps a fat tail but matches the mean
@@ -112,7 +130,7 @@ pub fn generate(p: &GenParams) -> Graph {
             1 + rng.below((base * 8.0) as usize + 1)
         };
         seen.clear();
-        let my = comm_of[v as usize] as usize;
+        let my = comm.comm_of[v as usize] as usize;
         for _ in 0..deg {
             let intra = rng.chance(p.homophily);
             let t = if intra {
@@ -121,7 +139,7 @@ pub fn generate(p: &GenParams) -> Graph {
                 // homophilous (pure hub-targeting would concentrate all
                 // intra in-edges on a few hubs and let the cross-community
                 // edges dominate everyone else's in-degree).
-                let m = &members[my];
+                let m = &comm.members[my];
                 if rng.chance(0.5) {
                     m[rng.below(m.len())]
                 } else {
@@ -134,13 +152,58 @@ pub fn generate(p: &GenParams) -> Graph {
                 rng.powerlaw(p.n, 1.3) as u32
             };
             if t != v && seen.insert(t) {
-                edges.push((v, t));
+                emit(v, t)?;
             }
         }
     }
+    Ok(())
+}
+
+fn label_of(comm: u32, p: &GenParams) -> u16 {
+    (comm as usize * p.classes / p.communities) as u16
+}
+
+fn fill_feature_row(
+    row: &mut [f32],
+    class_emb: &[f32],
+    comm_bias: &[f32],
+    s: f32,
+    cb: f32,
+    noise_scale: f32,
+    rng: &mut Rng,
+) {
+    for (j, x) in row.iter_mut().enumerate() {
+        *x = s * class_emb[j] + cb * comm_bias[j] + noise_scale * rng.normal() as f32;
+    }
+}
+
+/// Disjoint train/test split over a shuffled vertex order.
+fn train_test_split(p: &GenParams, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let mut order: Vec<u32> = (0..p.n as u32).collect();
+    rng.shuffle(&mut order);
+    let n_train = ((p.n as f64) * p.train_frac) as usize;
+    let n_test = ((p.n as f64) * p.test_frac) as usize;
+    let train_nodes = order[..n_train].to_vec();
+    let test_nodes = order[n_train..(n_train + n_test).min(p.n)].to_vec();
+    (train_nodes, test_nodes)
+}
+
+pub fn generate(p: &GenParams) -> Graph {
+    assert!(p.n > 0 && p.communities > 0 && p.classes > 0);
+    let mut rng = Rng::new(p.seed, 0xFEED);
+    let comm = community_setup(p, &mut rng);
+
+    // --- edges: per-vertex out-degree ~ 1 + powerlaw with the requested
+    // mean; targets preferential within community, uniform-ish across.
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity((p.n as f64 * p.avg_degree) as usize);
+    emit_edges(p, &comm, &mut rng, |v, t| {
+        edges.push((v, t));
+        Ok(())
+    })
+    .expect("in-RAM edge emission cannot fail");
 
     let out = Csr::from_edges(p.n, &edges);
-    let inc = out.reversed(p.n);
+    let inc = out.reversed();
 
     // --- labels & features
     let class_emb = class_embeddings(p.classes, p.feat_dim, &mut rng);
@@ -151,23 +214,22 @@ pub fn generate(p: &GenParams) -> Graph {
     let cb = p.community_bias as f32;
     let noise_scale = (1.0 - (p.signal * p.signal)).max(0.0).sqrt() as f32;
     for v in 0..p.n {
-        let label = (comm_of[v] as usize * p.classes / p.communities) as u16;
+        let label = label_of(comm.comm_of[v], p);
         labels[v] = label;
-        let e = &class_emb[label as usize];
-        let b = &comm_bias[comm_of[v] as usize];
         let row = &mut features[v * p.feat_dim..(v + 1) * p.feat_dim];
-        for (j, x) in row.iter_mut().enumerate() {
-            *x = s * e[j] + cb * b[j] + noise_scale * rng.normal() as f32;
-        }
+        fill_feature_row(
+            row,
+            &class_emb[label as usize],
+            &comm_bias[comm.comm_of[v] as usize],
+            s,
+            cb,
+            noise_scale,
+            &mut rng,
+        );
     }
 
     // --- train/test split (disjoint)
-    let mut order: Vec<u32> = (0..p.n as u32).collect();
-    rng.shuffle(&mut order);
-    let n_train = ((p.n as f64) * p.train_frac) as usize;
-    let n_test = ((p.n as f64) * p.test_frac) as usize;
-    let train_nodes = order[..n_train].to_vec();
-    let test_nodes = order[n_train..(n_train + n_test).min(p.n)].to_vec();
+    let (train_nodes, test_nodes) = train_test_split(p, &mut rng);
 
     let g = Graph {
         n: p.n,
@@ -175,13 +237,126 @@ pub fn generate(p: &GenParams) -> Graph {
         inc,
         feat_dim: p.feat_dim,
         classes: p.classes,
-        features,
-        labels,
+        features: features.into(),
+        labels: labels.into(),
         train_nodes,
         test_nodes,
     };
     debug_assert!(g.validate().is_ok(), "{:?}", g.validate());
     g
+}
+
+/// Exclusive prefix sum of per-vertex degrees into CSR offsets.
+fn prefix_sum(degs: &[u32]) -> Result<Vec<u32>> {
+    let mut offsets = Vec::with_capacity(degs.len() + 1);
+    let mut acc = 0u64;
+    offsets.push(0u32);
+    for &d in degs {
+        acc += d as u64;
+        ensure!(
+            acc <= u32::MAX as u64,
+            "edge count {acc} exceeds the u32 offset format"
+        );
+        offsets.push(acc as u32);
+    }
+    Ok(offsets)
+}
+
+/// Stream a synthetic graph straight into a `GraphFile` at `path`
+/// without ever materializing the edge list or feature matrix in RAM
+/// (DESIGN.md §13.1). Pass 1 replays the edge draws on a cloned rng to
+/// count degrees; pass 2 re-draws the same edges with the main rng,
+/// writing out-targets sequentially (emission is source-ordered, which
+/// *is* out-CSR order) while scattering `(dst, src)` pairs through the
+/// external-memory [`EdgeScatter`] for the incoming direction. Features
+/// are synthesized one row at a time into the features section. The
+/// resulting file is bit-identical to `write_graph_file` over
+/// [`generate`] with the same params.
+pub fn generate_to_file(p: &GenParams, path: &Path) -> Result<GraphFileInfo> {
+    ensure!(
+        p.n > 0 && p.communities > 0 && p.classes > 0,
+        "degenerate GenParams (n/communities/classes must be positive)"
+    );
+    let mut rng = Rng::new(p.seed, 0xFEED);
+    let comm = community_setup(p, &mut rng);
+
+    // --- pass 1: count final (post-dedup) degrees on a cloned rng.
+    let mut out_deg = vec![0u32; p.n];
+    let mut in_deg = vec![0u32; p.n];
+    emit_edges(p, &comm, &mut rng.clone(), |v, t| {
+        out_deg[v as usize] += 1;
+        in_deg[t as usize] += 1;
+        Ok(())
+    })?;
+    let out_offsets = prefix_sum(&out_deg)?;
+    let in_offsets = prefix_sum(&in_deg)?;
+    drop(out_deg);
+    drop(in_deg);
+    let m = *out_offsets.last().expect("n+1 offsets") as usize;
+
+    let n_train = ((p.n as f64) * p.train_frac) as usize;
+    let n_test = ((p.n as f64) * p.test_frac) as usize;
+    let test_len = (n_train + n_test).min(p.n) - n_train;
+
+    let mut w = GraphFileWriter::create(path, p.n, m, p.feat_dim, p.classes, n_train, test_len)?;
+    w.section_u32s(0, &out_offsets)?;
+    drop(out_offsets);
+
+    // --- pass 2: re-draw the same edges with the main rng.
+    let mut scatter = EdgeScatter::new(in_offsets.clone(), 64 << 20);
+    w.begin_section(1)?;
+    {
+        let mut buf: Vec<u32> = Vec::with_capacity(4096);
+        emit_edges(p, &comm, &mut rng, |v, t| {
+            buf.push(t);
+            if buf.len() >= 4096 {
+                w.put_u32s(&buf)?;
+                buf.clear();
+            }
+            scatter.push(t, v)
+        })?;
+        w.put_u32s(&buf)?;
+    }
+    w.end_section()?;
+
+    w.section_u32s(2, &in_offsets)?;
+    drop(in_offsets);
+    w.begin_section(3)?;
+    scatter.finalize(&mut |chunk| w.put_u32s(chunk))?;
+    w.end_section()?;
+
+    // --- labels & features, one row in RAM at a time.
+    let class_emb = class_embeddings(p.classes, p.feat_dim, &mut rng);
+    let comm_bias = class_embeddings(p.communities, p.feat_dim, &mut rng);
+    let s = p.signal as f32;
+    let cb = p.community_bias as f32;
+    let noise_scale = (1.0 - (p.signal * p.signal)).max(0.0).sqrt() as f32;
+    let mut labels: Vec<u16> = Vec::with_capacity(p.n);
+    let mut row = vec![0f32; p.feat_dim];
+    w.begin_section(4)?;
+    for v in 0..p.n {
+        let label = label_of(comm.comm_of[v], p);
+        labels.push(label);
+        fill_feature_row(
+            &mut row,
+            &class_emb[label as usize],
+            &comm_bias[comm.comm_of[v] as usize],
+            s,
+            cb,
+            noise_scale,
+            &mut rng,
+        );
+        w.put_f32s(&row)?;
+    }
+    w.end_section()?;
+    w.begin_section(5)?;
+    w.put_u16s(&labels)?;
+    w.end_section()?;
+
+    let (train_nodes, test_nodes) = train_test_split(p, &mut rng);
+    w.section_u32s(6, &train_nodes)?;
+    w.section_u32s(7, &test_nodes)?;
+    w.finish()
 }
 
 #[cfg(test)]
@@ -239,6 +414,30 @@ mod tests {
         assert!(g.test_nodes.iter().all(|v| !train.contains(v)));
         assert!((g.train_nodes.len() as f64 - 500.0).abs() < 2.0);
         assert!((g.test_nodes.len() as f64 - 200.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn streamed_generation_matches_in_memory_bit_exactly() {
+        let p = GenParams {
+            n: 500,
+            community_bias: 0.3,
+            ..GenParams::default()
+        };
+        let g = generate(&p);
+        let path =
+            std::env::temp_dir().join(format!("optimes-gen-stream-{}.graph", std::process::id()));
+        let info = generate_to_file(&p, &path).unwrap();
+        assert_eq!(info.m, g.out.m());
+        let h = crate::storage::load_graph_file(&path, crate::storage::GraphBackend::Ram).unwrap();
+        assert_eq!(g.out.offsets, h.out.offsets);
+        assert_eq!(g.out.targets, h.out.targets);
+        assert_eq!(g.inc.offsets, h.inc.offsets);
+        assert_eq!(g.inc.targets, h.inc.targets);
+        assert_eq!(g.features, h.features);
+        assert_eq!(g.labels, h.labels);
+        assert_eq!(g.train_nodes, h.train_nodes);
+        assert_eq!(g.test_nodes, h.test_nodes);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub mod scoring;
 pub mod subgraph;
 
 pub use csr::{Csr, Graph};
-pub use partition::Partition;
+pub use partition::{Partition, PartitionerKind};
 pub use sampler::{BlockDims, Blocks, SampledNode, Sampler};
 pub use subgraph::{ClientSubgraph, NodeRef, Prune};

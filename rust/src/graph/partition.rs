@@ -57,10 +57,62 @@ impl Partition {
 }
 
 /// Hash partitioner: uniform random assignment (worst-case edge cut).
+/// Delegates to the streaming implementation — same rng stream, same
+/// assignments as ever.
 pub fn hash_partition(g: &Graph, k: usize, seed: u64) -> Partition {
-    let mut rng = Rng::new(seed, 0x44A5);
-    let assign = (0..g.n).map(|_| rng.below(k) as u32).collect();
-    Partition { k, assign }
+    crate::storage::hash_partition_n(g.n, k, seed)
+}
+
+/// Which partitioner a session uses to split the graph across clients
+/// (env `OPTIMES_PARTITIONER`, CLI `run --partitioner`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionerKind {
+    /// In-RAM balanced greedy edge-cut (the default; needs the CSR).
+    #[default]
+    Metis,
+    /// Uniform random (max-cut baseline; streaming, needs only n).
+    Hash,
+    /// Linear deterministic greedy (streaming edge-cut; one adjacency
+    /// pass, works straight off a `GraphFile`).
+    Ldg,
+}
+
+impl PartitionerKind {
+    pub fn parse(s: &str) -> anyhow::Result<PartitionerKind> {
+        match s {
+            "metis" => Ok(PartitionerKind::Metis),
+            "hash" => Ok(PartitionerKind::Hash),
+            "ldg" => Ok(PartitionerKind::Ldg),
+            other => anyhow::bail!("unknown partitioner {other:?} (expected metis|hash|ldg)"),
+        }
+    }
+
+    /// Resolve from `OPTIMES_PARTITIONER` (default `metis`). Panics on
+    /// an unparseable value rather than silently falling back.
+    pub fn from_env() -> PartitionerKind {
+        match std::env::var("OPTIMES_PARTITIONER") {
+            Ok(v) => PartitionerKind::parse(&v).expect("OPTIMES_PARTITIONER"),
+            Err(_) => PartitionerKind::Metis,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionerKind::Metis => "metis",
+            PartitionerKind::Hash => "hash",
+            PartitionerKind::Ldg => "ldg",
+        }
+    }
+
+    /// Run this partitioner over a loaded graph (either backend).
+    pub fn partition(&self, g: &Graph, k: usize, seed: u64) -> Partition {
+        match self {
+            PartitionerKind::Metis => metis_lite(g, k, seed),
+            PartitionerKind::Hash => hash_partition(g, k, seed),
+            PartitionerKind::Ldg => crate::storage::ldg_partition_graph(g, k, seed)
+                .expect("ldg over a validated in-RAM graph cannot fail"),
+        }
+    }
 }
 
 /// Balanced greedy edge-cut partitioner.

@@ -34,6 +34,13 @@
 //! * `OPTIMES_CLIENT_LATENCY=lognormal:MU:SIGMA[:SEED]` — per-client
 //!   heavy-tailed report delays, deterministic per (client, round)
 //!   (`run --client-latency`; stragglers for the policies to tolerate).
+//! * `OPTIMES_GRAPH_BACKEND=ram|mmap` — serve the graph's bulk arrays
+//!   from heap `Vec`s or from mapped `GraphFile` pages (`run
+//!   --graph-backend`; DESIGN.md §13). Accuracy curves are bit-identical
+//!   either way, only peak RSS changes.
+//! * `OPTIMES_PARTITIONER=metis|hash|ldg` — how the graph is split
+//!   across clients (`run --partitioner`; DESIGN.md §13.3). `ldg` is the
+//!   streaming greedy pass that also works straight off a `GraphFile`.
 
 pub mod figures;
 pub mod report;
@@ -410,8 +417,24 @@ pub fn session_key(
         Some(l) => format!("_l{}", l.spec_string().replace(':', "-")),
         None => String::new(),
     };
+    // a non-default partitioner changes the curve; a non-default graph
+    // backend doesn't, but gets its own slot anyway so backend-parity
+    // runs never read each other's caches
+    let partitioner = crate::graph::PartitionerKind::from_env();
+    let ksuffix = if partitioner == crate::graph::PartitionerKind::default() {
+        String::new()
+    } else {
+        format!("_k{}", partitioner.name())
+    };
+    let backend = crate::storage::GraphBackend::from_env();
+    let bsuffix = if backend == crate::storage::GraphBackend::default() {
+        String::new()
+    } else {
+        format!("_g{}", backend.name())
+    };
     format!(
-        "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}{suffix}{psuffix}{lsuffix}",
+        "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}\
+         {suffix}{psuffix}{lsuffix}{ksuffix}{bsuffix}",
         model.as_str(),
         dataset_scale(),
         engine_kind()

@@ -1,13 +1,16 @@
 //! `optimes` — the L3 coordinator CLI (leader entrypoint).
 //!
 //! ```text
-//! optimes info                         # datasets, artifacts, engine, store
+//! optimes info  [--graph FILE]         # datasets, artifacts, engine, store
 //! optimes run   --dataset reddit-s --strategy OPP [--rounds 16]
 //!               [--model gc|sage] [--clients N] [--fanout 5|10|15]
 //!               [--epochs 3] [--lr 0.01] [--engine ref|pjrt]
 //!               [--server host:port[,host:port...]] [--shards N]
 //!               [--pipeline on|off] [--agg fedavg|uniform|trimmed[:k]]
+//!               [--graph FILE] [--graph-backend ram|mmap]
+//!               [--partitioner metis|hash|ldg]
 //!               [--scale N] [--seed S] [--report out.json]
+//! optimes build-graph --out FILE [--dataset D] [--n N] [--seed S]
 //! optimes sweep --dataset reddit-s --strategies D,E,OP,OPP,OPG
 //! optimes fig   <table1|2a|2b|6|7|8|9|10|11|12|13|14|all>
 //! optimes serve --port 7070 [--layers 2] [--hidden 32] [--shards N]
@@ -97,9 +100,20 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         ClientLatency::parse(l)?;
         std::env::set_var("OPTIMES_CLIENT_LATENCY", l);
     }
+    if let Some(b) = args.get("graph-backend") {
+        // validate up front so a typo fails before any training work
+        optimes::storage::GraphBackend::parse(b)?;
+        std::env::set_var("OPTIMES_GRAPH_BACKEND", b);
+    }
+    if let Some(p) = args.get("partitioner") {
+        // validate up front so a typo fails before any training work
+        optimes::graph::PartitionerKind::parse(p)?;
+        std::env::set_var("OPTIMES_PARTITIONER", p);
+    }
     match cmd {
-        "info" => info(),
+        "info" => info(args),
         "run" => run(args),
+        "build-graph" => build_graph(args),
         "sweep" => sweep(args),
         "fig" => {
             let id = args
@@ -140,15 +154,23 @@ commands:
          [--staleness S]                       fold updates up to S rounds stale (default 2)
          [--client-latency L]                  injected per-client delay,
                                                e.g. lognormal:-0.9:1.5[:SEED]
+         [--graph FILE]                        train on a prebuilt GraphFile
+         [--graph-backend ram|mmap]            serve graph arrays from heap or
+                                               mapped pages (default ram)
+         [--partitioner metis|hash|ldg]        client split algorithm (default metis)
+  build-graph --out FILE [--dataset D] [--n N] [--seed S] [--avg-degree A]
+         [--scale N]        stream a synthetic graph to an on-disk GraphFile
+                            without materializing it in RAM
   sweep  --dataset D --strategies D,E,O,P,OP,OPP,OPG
   fig    table1|2a|2b|6|7|8|9|10|11|12|13|14|all
   serve  --port 7070 [--listen ADDR] [--layers 2] [--hidden 32] [--shards N]
          [--replicas R] [--fault-spec SPEC]
          run the embedding store as a standalone TCP daemon
   smoke  PJRT artifact health check
+  info   [--graph FILE]      also inspect a GraphFile's header + sections
 ";
 
-fn info() -> Result<()> {
+fn info(args: &Args) -> Result<()> {
     println!("engine: {}", harness::engine_kind());
     println!(
         "store backend: {} [{} shard(s), {} replica(s)]",
@@ -180,7 +202,33 @@ fn info() -> Result<()> {
     if let Some(l) = optimes::coordinator::client_latency_default() {
         println!("client latency: {} (OPTIMES_CLIENT_LATENCY)", l.spec_string());
     }
+    println!(
+        "graph backend: {} (OPTIMES_GRAPH_BACKEND; ram|mmap)",
+        optimes::storage::GraphBackend::from_env().name()
+    );
+    println!(
+        "partitioner: {} (OPTIMES_PARTITIONER; metis|hash|ldg)",
+        optimes::graph::PartitionerKind::from_env().name()
+    );
     println!("dataset scale: 1/{}", harness::dataset_scale());
+    if let Some(path) = args.get("graph") {
+        let gi = optimes::storage::format::read_info(std::path::Path::new(path))?;
+        println!(
+            "graph file {path}: v{} n={} m={} feat_dim={} classes={} train={} test={} \
+             ({} bytes)",
+            gi.version, gi.n, gi.m, gi.feat_dim, gi.classes, gi.train_count, gi.test_count,
+            gi.file_len
+        );
+        for (idx, sec) in gi.sections.iter().enumerate() {
+            println!(
+                "  {:12} off={:>14} len={:>14} fnv={:#018x}",
+                optimes::storage::format::SECTION_NAMES[idx],
+                sec.offset,
+                sec.byte_len,
+                sec.checksum
+            );
+        }
+    }
     match Manifest::load(harness::artifacts_dir()) {
         Ok(m) => {
             println!("artifacts: {} entrypoints", m.entrypoints.len());
@@ -320,12 +368,33 @@ impl RoundObserver for CliRoundPrinter {
 }
 
 fn run(args: &Args) -> Result<()> {
-    let dataset = args.str_or("dataset", "reddit-s").to_string();
     let strategy = Strategy::parse(args.str_or("strategy", "OPP"))?;
     let model = parse_model(args)?;
     let fanout = args.usize_or("fanout", 5);
-    let (p, g) = harness::load_dataset(&dataset)?;
-    let clients = args.usize_or("clients", p.default_clients);
+    // --graph FILE trains on a prebuilt GraphFile (opened on the active
+    // backend) instead of generating a preset dataset
+    let (dataset, default_clients, default_batches, g) = match args.get("graph") {
+        Some(path) => {
+            let backend = optimes::storage::GraphBackend::from_env();
+            let g =
+                optimes::storage::GraphStore::open(std::path::Path::new(path), backend)?;
+            println!(
+                "loaded {path}: n={} m={} feat_dim={} classes={} ({} backend)",
+                g.n,
+                g.out.m(),
+                g.feat_dim,
+                g.classes,
+                backend.name()
+            );
+            (path.to_string(), 4, 16, g)
+        }
+        None => {
+            let dataset = args.str_or("dataset", "reddit-s").to_string();
+            let (p, g) = harness::load_dataset(&dataset)?;
+            (dataset, p.default_clients, p.epoch_batches, g)
+        }
+    };
+    let clients = args.usize_or("clients", default_clients);
     let engine = harness::make_engine(model, fanout)?;
     let aggregator = aggregation::parse_aggregator(args.str_or("agg", "fedavg"))?;
     let cfg = SessionConfig {
@@ -335,7 +404,7 @@ fn run(args: &Args) -> Result<()> {
         rounds: args.usize_or("rounds", 16),
         epochs: args.usize_or("epochs", 3),
         lr: args.f64_or("lr", 0.01) as f32,
-        epoch_batches: args.usize_or("epoch-batches", p.epoch_batches),
+        epoch_batches: args.usize_or("epoch-batches", default_batches),
         eval_batches: args.usize_or("eval-batches", 16),
         seed: args.u64_or("seed", 42),
         parallel_clients: !args.flag("sequential"),
@@ -366,6 +435,55 @@ fn run(args: &Args) -> Result<()> {
         std::fs::write(path, optimes::harness::report::session_to_json(&m).to_string_pretty())?;
         println!("report written to {path}");
     }
+    Ok(())
+}
+
+/// Stream a synthetic dataset straight to an on-disk `GraphFile` — the
+/// out-of-core entry point: the edge list and feature matrix never
+/// exist in RAM, so this builds graphs far larger than memory.
+fn build_graph(args: &Args) -> Result<()> {
+    use optimes::graph::generate::{generate_to_file, GenParams};
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("build-graph needs --out FILE"))?;
+    let mut gen = match args.get("dataset") {
+        Some(name) => {
+            datasets::preset(name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown dataset preset {name:?} (see `optimes info`)")
+                })?
+                .gen
+        }
+        None => GenParams::default(),
+    };
+    let scale = args.usize_or("scale", 1).max(1);
+    gen.n /= scale;
+    if let Some(n) = args.get("n") {
+        gen.n = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--n expects an integer, got {n:?}"))?;
+    }
+    if let Some(d) = args.get("avg-degree") {
+        gen.avg_degree = d
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--avg-degree expects a number, got {d:?}"))?;
+    }
+    gen.seed = args.u64_or("seed", gen.seed);
+    anyhow::ensure!(gen.n > 0, "graph would have no vertices (n/scale = 0)");
+    let t0 = std::time::Instant::now();
+    let gi = generate_to_file(&gen, std::path::Path::new(out))?;
+    println!(
+        "wrote {out}: n={} m={} feat_dim={} classes={} train={} test={} \
+         ({} bytes in {:.1}s)",
+        gi.n,
+        gi.m,
+        gi.feat_dim,
+        gi.classes,
+        gi.train_count,
+        gi.test_count,
+        gi.file_len,
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 

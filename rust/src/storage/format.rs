@@ -1,0 +1,942 @@
+//! `GraphFile`: the versioned, checksummed on-disk CSR format
+//! (DESIGN.md §13.1).
+//!
+//! Layout (all integers little-endian, written via the same
+//! `to_le_bytes` discipline as `coordinator/codec.rs` — no `unsafe` on
+//! the write path):
+//!
+//! ```text
+//! offset   0  magic        8 B   "OPTMGRPH"
+//!          8  version      u32   1
+//!         12  endian mark  u32   0x0102_0304
+//!         16  n            u64   vertex count
+//!         24  m            u64   edge count (per direction)
+//!         32  feat_dim     u32
+//!         36  classes      u32
+//!         40  train_count  u64
+//!         48  test_count   u64
+//!         56  section table: 8 × { offset u64, byte_len u64, fnv1a64 u64 }
+//!        248  meta checksum u64  fnv1a64 over bytes [0, 248)
+//!        256  sections, each 64-byte aligned, zero-padded between:
+//!             out_offsets  (n+1)·u32      out_targets  m·u32
+//!             in_offsets   (n+1)·u32      in_targets   m·u32
+//!             features     n·feat_dim·f32 labels       n·u16
+//!             train        train_count·u32  test       test_count·u32
+//! ```
+//!
+//! 64-byte section alignment makes typed `&[u32]`/`&[f32]`/`&[u16]`
+//! views straight into mapped pages sound; offsets stay `u32` to match
+//! the in-RAM `Csr` (so the format caps at ~4.29 B edges per direction,
+//! plenty above the paper's Papers100M at 1.8 B).
+//!
+//! The reader never trusts the file: magic / endian / version / header
+//! checksum / section bounds are verified before any section is parsed,
+//! and every section checksum is verified with a bounded streaming read
+//! *before* the mmap backend maps the file (page cache, not process
+//! RSS). Both backends then route the assembled graph through
+//! [`Graph::validate`]. Corruption fails with a named error, never a
+//! panic.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::graph::csr::{Csr, Graph};
+
+use super::mmap::Mmap;
+use super::slab::Slab;
+
+pub const MAGIC: [u8; 8] = *b"OPTMGRPH";
+pub const VERSION: u32 = 1;
+pub const ENDIAN_MARK: u32 = 0x0102_0304;
+
+const HEADER_BYTES: u64 = 56;
+const TABLE_BYTES: u64 = 8 * 24;
+const META_CHECKSUM_OFF: u64 = HEADER_BYTES + TABLE_BYTES; // 248
+const SECTIONS_START: u64 = 256;
+const SECTION_ALIGN: u64 = 64;
+
+pub const N_SECTIONS: usize = 8;
+pub const SECTION_NAMES: [&str; N_SECTIONS] = [
+    "out_offsets",
+    "out_targets",
+    "in_offsets",
+    "in_targets",
+    "features",
+    "labels",
+    "train",
+    "test",
+];
+
+/// 64-bit FNV-1a, the format's checksum (fast, dependency-free; this
+/// guards against corruption and truncation, not adversaries).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+/// One section-table entry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Section {
+    pub offset: u64,
+    pub byte_len: u64,
+    pub checksum: u64,
+}
+
+/// Parsed, bounds-checked header of a `GraphFile`.
+#[derive(Clone, Debug)]
+pub struct GraphFileInfo {
+    pub version: u32,
+    pub n: usize,
+    pub m: usize,
+    pub feat_dim: usize,
+    pub classes: usize,
+    pub train_count: usize,
+    pub test_count: usize,
+    pub file_len: u64,
+    pub sections: [Section; N_SECTIONS],
+}
+
+impl GraphFileInfo {
+    /// Element count of section `idx`, derived from the header counts.
+    pub fn elems(&self, idx: usize) -> usize {
+        match idx {
+            0 | 2 => self.n + 1,
+            1 | 3 => self.m,
+            4 => self.n * self.feat_dim,
+            5 => self.n,
+            6 => self.train_count,
+            7 => self.test_count,
+            _ => unreachable!("section index {idx}"),
+        }
+    }
+
+    fn elem_size(idx: usize) -> u64 {
+        if idx == 5 {
+            2
+        } else {
+            4
+        }
+    }
+}
+
+fn align_up(v: u64) -> u64 {
+    v.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// Parse and fully bounds-check the header + section table. Every
+/// failure is a named error (magic / endian / version / checksum /
+/// section bounds); nothing here reads section payloads.
+pub fn read_info(path: &Path) -> Result<GraphFileInfo> {
+    let mut file =
+        File::open(path).with_context(|| format!("open GraphFile {}", path.display()))?;
+    let file_len = file
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    if file_len < SECTIONS_START {
+        bail!(
+            "GraphFile {}: truncated header ({file_len} bytes, need {SECTIONS_START})",
+            path.display()
+        );
+    }
+    let mut head = [0u8; SECTIONS_START as usize];
+    file.read_exact(&mut head)
+        .with_context(|| format!("read GraphFile header {}", path.display()))?;
+
+    let get_u32 = |off: usize| u32::from_le_bytes(head[off..off + 4].try_into().expect("4 bytes"));
+    let get_u64 = |off: usize| u64::from_le_bytes(head[off..off + 8].try_into().expect("8 bytes"));
+
+    if head[..8] != MAGIC {
+        bail!(
+            "GraphFile {}: bad magic {:02x?} (expected {:02x?})",
+            path.display(),
+            &head[..8],
+            MAGIC
+        );
+    }
+    let version = get_u32(8);
+    let endian = get_u32(12);
+    if endian != ENDIAN_MARK {
+        bail!(
+            "GraphFile {}: endian marker {endian:#010x} does not match {ENDIAN_MARK:#010x} \
+             (file written on a different-endian host?)",
+            path.display()
+        );
+    }
+    if version != VERSION {
+        bail!(
+            "GraphFile {}: unsupported version {version} (this build reads version {VERSION})",
+            path.display()
+        );
+    }
+    let mut meta = Fnv64::new();
+    meta.update(&head[..META_CHECKSUM_OFF as usize]);
+    let stored_meta = get_u64(META_CHECKSUM_OFF as usize);
+    if meta.digest() != stored_meta {
+        bail!(
+            "GraphFile {}: header checksum mismatch (stored {stored_meta:#018x}, \
+             computed {:#018x})",
+            path.display(),
+            meta.digest()
+        );
+    }
+
+    let n = get_u64(16);
+    let m = get_u64(24);
+    let feat_dim = get_u32(32) as u64;
+    let classes = get_u32(36) as u64;
+    let train_count = get_u64(40);
+    let test_count = get_u64(48);
+    ensure!(
+        n <= u32::MAX as u64 && m <= u32::MAX as u64,
+        "GraphFile {}: n={n} / m={m} exceed the u32 offset format",
+        path.display()
+    );
+    let feats = n.checked_mul(feat_dim).with_context(|| {
+        format!("GraphFile {}: feature section size overflows", path.display())
+    })?;
+    ensure!(
+        feats <= usize::MAX as u64 / 8,
+        "GraphFile {}: feature section ({feats} values) exceeds addressable memory",
+        path.display()
+    );
+    ensure!(
+        train_count <= n && test_count <= n,
+        "GraphFile {}: split counts ({train_count}/{test_count}) exceed n={n}",
+        path.display()
+    );
+
+    let mut info = GraphFileInfo {
+        version,
+        n: n as usize,
+        m: m as usize,
+        feat_dim: feat_dim as usize,
+        classes: classes as usize,
+        train_count: train_count as usize,
+        test_count: test_count as usize,
+        file_len,
+        sections: [Section::default(); N_SECTIONS],
+    };
+
+    let mut expected_off = SECTIONS_START;
+    for idx in 0..N_SECTIONS {
+        let base = HEADER_BYTES as usize + idx * 24;
+        let sec = Section {
+            offset: get_u64(base),
+            byte_len: get_u64(base + 8),
+            checksum: get_u64(base + 16),
+        };
+        let expect_len = info.elems(idx) as u64 * GraphFileInfo::elem_size(idx);
+        if sec.byte_len != expect_len {
+            bail!(
+                "GraphFile {}: section {} length {} disagrees with header geometry \
+                 (expected {expect_len})",
+                path.display(),
+                SECTION_NAMES[idx],
+                sec.byte_len
+            );
+        }
+        if sec.offset != expected_off {
+            bail!(
+                "GraphFile {}: section {} offset {} out of place (expected {expected_off})",
+                path.display(),
+                SECTION_NAMES[idx],
+                sec.offset
+            );
+        }
+        let end = sec
+            .offset
+            .checked_add(sec.byte_len)
+            .with_context(|| format!("section {} end overflows", SECTION_NAMES[idx]))?;
+        if end > file_len {
+            bail!(
+                "GraphFile {}: section {} bounds [{}, {end}) exceed file length {file_len} \
+                 (truncated?)",
+                path.display(),
+                SECTION_NAMES[idx],
+                sec.offset
+            );
+        }
+        expected_off = if idx + 1 == N_SECTIONS {
+            end
+        } else {
+            align_up(end)
+        };
+        info.sections[idx] = sec;
+    }
+    if expected_off != file_len {
+        bail!(
+            "GraphFile {}: file length {file_len} disagrees with section table end \
+             {expected_off} (truncated or trailing bytes)",
+            path.display()
+        );
+    }
+    Ok(info)
+}
+
+/// Verify every section checksum with a bounded streaming read (a 1 MiB
+/// scratch buffer — file bytes pass through the page cache, not the
+/// process heap, so this is safe to run on files far larger than RAM).
+pub fn verify_checksums(path: &Path, info: &GraphFileInfo) -> Result<()> {
+    let mut file =
+        File::open(path).with_context(|| format!("open GraphFile {}", path.display()))?;
+    let mut buf = vec![0u8; 1 << 20];
+    for (idx, sec) in info.sections.iter().enumerate() {
+        file.seek(SeekFrom::Start(sec.offset))
+            .with_context(|| format!("seek to section {}", SECTION_NAMES[idx]))?;
+        let mut fnv = Fnv64::new();
+        let mut left = sec.byte_len;
+        while left > 0 {
+            let take = left.min(buf.len() as u64) as usize;
+            file.read_exact(&mut buf[..take])
+                .with_context(|| format!("read section {}", SECTION_NAMES[idx]))?;
+            fnv.update(&buf[..take]);
+            left -= take as u64;
+        }
+        if fnv.digest() != sec.checksum {
+            bail!(
+                "GraphFile {}: checksum mismatch in section {} (stored {:#018x}, \
+                 computed {:#018x})",
+                path.display(),
+                SECTION_NAMES[idx],
+                sec.checksum,
+                fnv.digest()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Chunked LE readers for section payloads. Lengths are pre-validated
+/// against the file size by [`read_info`], so no `MAX_WIRE_ELEMS`-style
+/// cap applies (sections legitimately exceed the wire ceiling).
+fn read_u32_vec(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 4096];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(1024);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes).context("read u32 section")?;
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().expect("4-byte chunk"))),
+        );
+        left -= take;
+    }
+    Ok(out)
+}
+
+fn read_f32_vec(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 4096];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(1024);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes).context("read f32 section")?;
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().expect("4-byte chunk"))),
+        );
+        left -= take;
+    }
+    Ok(out)
+}
+
+fn read_u16_vec(r: &mut impl Read, n: usize) -> Result<Vec<u16>> {
+    let mut out = Vec::with_capacity(n);
+    let mut buf = [0u8; 4096];
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(2048);
+        let bytes = &mut buf[..take * 2];
+        r.read_exact(bytes).context("read u16 section")?;
+        out.extend(
+            bytes
+                .chunks_exact(2)
+                .map(|b| u16::from_le_bytes(b.try_into().expect("2-byte chunk"))),
+        );
+        left -= take;
+    }
+    Ok(out)
+}
+
+fn seek_reader(file: &mut File, off: u64) -> Result<BufReader<&mut File>> {
+    file.seek(SeekFrom::Start(off)).context("seek to section")?;
+    Ok(BufReader::with_capacity(1 << 20, file))
+}
+
+/// Load every section eagerly into heap `Vec`s (the `ram` backend).
+/// Decodes via `from_le_bytes`, so this path works on any endianness.
+pub fn load_ram(path: &Path, info: &GraphFileInfo) -> Result<Graph> {
+    let mut file =
+        File::open(path).with_context(|| format!("open GraphFile {}", path.display()))?;
+    let mut sec_u32 = |file: &mut File, idx: usize| -> Result<Vec<u32>> {
+        let off = info.sections[idx].offset;
+        read_u32_vec(&mut seek_reader(file, off)?, info.elems(idx))
+            .with_context(|| format!("section {}", SECTION_NAMES[idx]))
+    };
+    let out_offsets = sec_u32(&mut file, 0)?;
+    let out_targets = sec_u32(&mut file, 1)?;
+    let in_offsets = sec_u32(&mut file, 2)?;
+    let in_targets = sec_u32(&mut file, 3)?;
+    let features = read_f32_vec(
+        &mut seek_reader(&mut file, info.sections[4].offset)?,
+        info.elems(4),
+    )
+    .context("section features")?;
+    let labels = read_u16_vec(
+        &mut seek_reader(&mut file, info.sections[5].offset)?,
+        info.elems(5),
+    )
+    .context("section labels")?;
+    let train_nodes = sec_u32(&mut file, 6)?;
+    let test_nodes = sec_u32(&mut file, 7)?;
+    Ok(Graph {
+        n: info.n,
+        out: Csr {
+            offsets: out_offsets.into(),
+            targets: out_targets.into(),
+        },
+        inc: Csr {
+            offsets: in_offsets.into(),
+            targets: in_targets.into(),
+        },
+        feat_dim: info.feat_dim,
+        classes: info.classes,
+        features: features.into(),
+        labels: labels.into(),
+        train_nodes,
+        test_nodes,
+    })
+}
+
+/// Map the file and serve bulk sections straight from mapped pages (the
+/// `mmap` backend). Requires a little-endian host — the typed views are
+/// the on-disk bytes. Splits stay eager `Vec`s (small, and consumers
+/// shuffle them).
+pub fn load_mmap(path: &Path, info: &GraphFileInfo) -> Result<Graph> {
+    if !cfg!(target_endian = "little") {
+        bail!(
+            "GraphFile {}: the mmap backend serves raw little-endian pages and this host is \
+             big-endian; use OPTIMES_GRAPH_BACKEND=ram (which byte-swaps on read)",
+            path.display()
+        );
+    }
+    let map = Mmap::open(path)?;
+    ensure!(
+        map.len() as u64 == info.file_len,
+        "GraphFile {}: file changed size during open",
+        path.display()
+    );
+    let seg_u32 = |idx: usize| -> Result<Slab<u32>> {
+        let sec = &info.sections[idx];
+        Ok(Slab::Mapped(map.segment::<u32>(
+            sec.offset as usize,
+            info.elems(idx),
+        )?))
+    };
+    let out = Csr {
+        offsets: seg_u32(0)?,
+        targets: seg_u32(1)?,
+    };
+    let inc = Csr {
+        offsets: seg_u32(2)?,
+        targets: seg_u32(3)?,
+    };
+    let features =
+        Slab::Mapped(map.segment::<f32>(info.sections[4].offset as usize, info.elems(4))?);
+    let labels =
+        Slab::Mapped(map.segment::<u16>(info.sections[5].offset as usize, info.elems(5))?);
+    let train_nodes = map
+        .segment::<u32>(info.sections[6].offset as usize, info.elems(6))?
+        .as_slice()
+        .to_vec();
+    let test_nodes = map
+        .segment::<u32>(info.sections[7].offset as usize, info.elems(7))?
+        .as_slice()
+        .to_vec();
+    Ok(Graph {
+        n: info.n,
+        out,
+        inc,
+        feat_dim: info.feat_dim,
+        classes: info.classes,
+        features,
+        labels,
+        train_nodes,
+        test_nodes,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// Streaming `GraphFile` writer: sections are written strictly in file
+/// order, each fed incrementally (so multi-GB sections never exist in
+/// RAM), checksummed on the fly; `finish` seeks back and stamps the
+/// header + section table.
+pub struct GraphFileWriter {
+    w: BufWriter<File>,
+    pos: u64,
+    n: u64,
+    m: u64,
+    feat_dim: u32,
+    classes: u32,
+    train_count: u64,
+    test_count: u64,
+    sections: [Section; N_SECTIONS],
+    cur: usize,
+    fnv: Fnv64,
+    written: u64,
+}
+
+impl GraphFileWriter {
+    pub fn create(
+        path: &Path,
+        n: usize,
+        m: usize,
+        feat_dim: usize,
+        classes: usize,
+        train_count: usize,
+        test_count: usize,
+    ) -> Result<GraphFileWriter> {
+        ensure!(
+            n <= u32::MAX as usize && m <= u32::MAX as usize,
+            "graph too large for the u32 offset format (n={n}, m={m})"
+        );
+        let file =
+            File::create(path).with_context(|| format!("create GraphFile {}", path.display()))?;
+        let mut w = BufWriter::with_capacity(1 << 20, file);
+        w.write_all(&[0u8; SECTIONS_START as usize])
+            .context("reserve GraphFile header")?;
+        Ok(GraphFileWriter {
+            w,
+            pos: SECTIONS_START,
+            n: n as u64,
+            m: m as u64,
+            feat_dim: feat_dim as u32,
+            classes: classes as u32,
+            train_count: train_count as u64,
+            test_count: test_count as u64,
+            sections: [Section::default(); N_SECTIONS],
+            cur: 0,
+            fnv: Fnv64::new(),
+            written: 0,
+        })
+    }
+
+    fn info_counts(&self) -> GraphFileInfo {
+        GraphFileInfo {
+            version: VERSION,
+            n: self.n as usize,
+            m: self.m as usize,
+            feat_dim: self.feat_dim as usize,
+            classes: self.classes as usize,
+            train_count: self.train_count as usize,
+            test_count: self.test_count as usize,
+            file_len: 0,
+            sections: self.sections,
+        }
+    }
+
+    fn expected_len(&self, idx: usize) -> u64 {
+        self.info_counts().elems(idx) as u64 * GraphFileInfo::elem_size(idx)
+    }
+
+    /// Begin section `idx`; sections must be begun in order 0..8.
+    pub fn begin_section(&mut self, idx: usize) -> Result<()> {
+        ensure!(
+            idx == self.cur && idx < N_SECTIONS,
+            "GraphFile writer: begin_section({idx}) out of order (expected {})",
+            self.cur
+        );
+        let aligned = align_up(self.pos);
+        if aligned > self.pos {
+            let pad = [0u8; SECTION_ALIGN as usize];
+            self.w
+                .write_all(&pad[..(aligned - self.pos) as usize])
+                .context("write section padding")?;
+            self.pos = aligned;
+        }
+        self.sections[idx].offset = self.pos;
+        self.fnv = Fnv64::new();
+        self.written = 0;
+        Ok(())
+    }
+
+    fn raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes).context("write section payload")?;
+        self.fnv.update(bytes);
+        self.pos += bytes.len() as u64;
+        self.written += bytes.len() as u64;
+        Ok(())
+    }
+
+    pub fn put_u32s(&mut self, data: &[u32]) -> Result<()> {
+        let mut buf = [0u8; 4096];
+        for chunk in data.chunks(1024) {
+            let bytes = &mut buf[..chunk.len() * 4];
+            for (b, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+                b.copy_from_slice(&v.to_le_bytes());
+            }
+            self.raw(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn put_f32s(&mut self, data: &[f32]) -> Result<()> {
+        let mut buf = [0u8; 4096];
+        for chunk in data.chunks(1024) {
+            let bytes = &mut buf[..chunk.len() * 4];
+            for (b, v) in bytes.chunks_exact_mut(4).zip(chunk) {
+                b.copy_from_slice(&v.to_le_bytes());
+            }
+            self.raw(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn put_u16s(&mut self, data: &[u16]) -> Result<()> {
+        let mut buf = [0u8; 4096];
+        for chunk in data.chunks(2048) {
+            let bytes = &mut buf[..chunk.len() * 2];
+            for (b, v) in bytes.chunks_exact_mut(2).zip(chunk) {
+                b.copy_from_slice(&v.to_le_bytes());
+            }
+            self.raw(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Close the current section, checking its fed length against the
+    /// header geometry.
+    pub fn end_section(&mut self) -> Result<()> {
+        ensure!(self.cur < N_SECTIONS, "GraphFile writer: no open section");
+        let expect = self.expected_len(self.cur);
+        ensure!(
+            self.written == expect,
+            "GraphFile writer: section {} got {} bytes, geometry says {expect}",
+            SECTION_NAMES[self.cur],
+            self.written
+        );
+        self.sections[self.cur].byte_len = self.written;
+        self.sections[self.cur].checksum = self.fnv.digest();
+        self.cur += 1;
+        Ok(())
+    }
+
+    /// Convenience: a whole section from one slice.
+    pub fn section_u32s(&mut self, idx: usize, data: &[u32]) -> Result<()> {
+        self.begin_section(idx)?;
+        self.put_u32s(data)?;
+        self.end_section()
+    }
+
+    /// Stamp the header + section table and flush. Returns the parsed
+    /// info (as a reader would see it).
+    pub fn finish(mut self) -> Result<GraphFileInfo> {
+        ensure!(
+            self.cur == N_SECTIONS,
+            "GraphFile writer: finish() with only {} of {N_SECTIONS} sections written",
+            self.cur
+        );
+        let file_len = self.pos;
+        let mut head = [0u8; SECTIONS_START as usize];
+        head[..8].copy_from_slice(&MAGIC);
+        head[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        head[12..16].copy_from_slice(&ENDIAN_MARK.to_le_bytes());
+        head[16..24].copy_from_slice(&self.n.to_le_bytes());
+        head[24..32].copy_from_slice(&self.m.to_le_bytes());
+        head[32..36].copy_from_slice(&self.feat_dim.to_le_bytes());
+        head[36..40].copy_from_slice(&self.classes.to_le_bytes());
+        head[40..48].copy_from_slice(&self.train_count.to_le_bytes());
+        head[48..56].copy_from_slice(&self.test_count.to_le_bytes());
+        for (idx, sec) in self.sections.iter().enumerate() {
+            let base = HEADER_BYTES as usize + idx * 24;
+            head[base..base + 8].copy_from_slice(&sec.offset.to_le_bytes());
+            head[base + 8..base + 16].copy_from_slice(&sec.byte_len.to_le_bytes());
+            head[base + 16..base + 24].copy_from_slice(&sec.checksum.to_le_bytes());
+        }
+        let mut meta = Fnv64::new();
+        meta.update(&head[..META_CHECKSUM_OFF as usize]);
+        head[META_CHECKSUM_OFF as usize..].copy_from_slice(&meta.digest().to_le_bytes());
+
+        self.w.flush().context("flush GraphFile sections")?;
+        let file = self.w.get_mut();
+        file.seek(SeekFrom::Start(0)).context("seek to header")?;
+        file.write_all(&head).context("write GraphFile header")?;
+        file.flush().context("flush GraphFile header")?;
+
+        let mut info = self.info_counts();
+        info.file_len = file_len;
+        Ok(info)
+    }
+}
+
+/// Serialize an in-RAM [`Graph`] to `path` in one pass.
+pub fn write_graph_file(path: &Path, g: &Graph) -> Result<GraphFileInfo> {
+    let mut w = GraphFileWriter::create(
+        path,
+        g.n,
+        g.out.m(),
+        g.feat_dim,
+        g.classes,
+        g.train_nodes.len(),
+        g.test_nodes.len(),
+    )?;
+    ensure!(
+        g.out.m() == g.inc.m(),
+        "graph edge directions disagree ({} vs {})",
+        g.out.m(),
+        g.inc.m()
+    );
+    w.section_u32s(0, &g.out.offsets)?;
+    w.section_u32s(1, &g.out.targets)?;
+    w.section_u32s(2, &g.inc.offsets)?;
+    w.section_u32s(3, &g.inc.targets)?;
+    w.begin_section(4)?;
+    w.put_f32s(&g.features)?;
+    w.end_section()?;
+    w.begin_section(5)?;
+    w.put_u16s(&g.labels)?;
+    w.end_section()?;
+    w.section_u32s(6, &g.train_nodes)?;
+    w.section_u32s(7, &g.test_nodes)?;
+    w.finish()
+}
+
+/// Open a `GraphFile` with the requested backend: full header + checksum
+/// verification, then `Graph::validate` on the assembled graph (both
+/// backends — the satellite contract).
+pub fn load_graph_file(path: &Path, backend: super::GraphBackend) -> Result<Graph> {
+    let info = read_info(path)?;
+    verify_checksums(path, &info)?;
+    let g = match backend {
+        super::GraphBackend::Ram => load_ram(path, &info)?,
+        super::GraphBackend::Mmap => load_mmap(path, &info)?,
+    };
+    g.validate()
+        .map_err(|e| anyhow::anyhow!("GraphFile {}: invalid graph: {e}", path.display()))?;
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------
+// External-memory edge scatter (for the streaming generator)
+// ---------------------------------------------------------------------
+
+/// Scatters a stream of `(dst, src)` pairs into CSR target order without
+/// holding the edge list in RAM: pairs are staged per destination-range
+/// bucket, spilled to unlinked temp files, and each bucket is finalized
+/// with an in-RAM counting sort over a contiguous ~`target_bytes` slice
+/// of the targets section. Per-destination arrival order is preserved
+/// (spill append order), so the result is bit-identical to
+/// `Csr::from_edges` fed the same pair sequence.
+pub struct EdgeScatter {
+    offsets: Vec<u32>,
+    bounds: Vec<u32>,
+    staging: Vec<Vec<(u32, u32)>>,
+    spill: Vec<Option<File>>,
+    flush_at: usize,
+}
+
+impl EdgeScatter {
+    /// `offsets`: the (n+1) CSR offsets of the destination direction.
+    /// `target_bytes`: soft cap on per-bucket finalize RAM.
+    pub fn new(offsets: Vec<u32>, target_bytes: usize) -> EdgeScatter {
+        let n = offsets.len().saturating_sub(1);
+        let per_bucket = (target_bytes / 4).max(1) as u64;
+        let mut bounds = vec![0u32];
+        let mut start_edges = 0u64;
+        for v in 0..n {
+            let upto = offsets[v + 1] as u64;
+            if upto - start_edges > per_bucket && u64::from(offsets[v]) > start_edges {
+                bounds.push(v as u32);
+                start_edges = offsets[v] as u64;
+            }
+        }
+        bounds.push(n as u32);
+        let buckets = bounds.len() - 1;
+        EdgeScatter {
+            offsets,
+            bounds,
+            staging: vec![Vec::new(); buckets],
+            spill: (0..buckets).map(|_| None).collect(),
+            flush_at: 64 * 1024,
+        }
+    }
+
+    fn bucket_of(&self, dst: u32) -> usize {
+        // bounds[b] <= dst < bounds[b+1]
+        self.bounds.partition_point(|&b| b <= dst) - 1
+    }
+
+    pub fn push(&mut self, dst: u32, src: u32) -> Result<()> {
+        let b = self.bucket_of(dst);
+        self.staging[b].push((dst, src));
+        if self.staging[b].len() >= self.flush_at {
+            self.flush_bucket(b)?;
+        }
+        Ok(())
+    }
+
+    fn flush_bucket(&mut self, b: usize) -> Result<()> {
+        if self.staging[b].is_empty() {
+            return Ok(());
+        }
+        let mut pairs = std::mem::take(&mut self.staging[b]);
+        if self.spill[b].is_none() {
+            self.spill[b] = Some(super::mmap::anon_temp_file("scatter")?);
+        }
+        let file = self.spill[b].as_mut().expect("spill file just ensured");
+        let mut w = BufWriter::with_capacity(1 << 16, file);
+        for &(d, s) in &pairs {
+            w.write_all(&d.to_le_bytes()).context("spill scatter pair")?;
+            w.write_all(&s.to_le_bytes()).context("spill scatter pair")?;
+        }
+        w.flush().context("flush scatter spill")?;
+        drop(w);
+        // Hand the (now empty) buffer back so its capacity is reused.
+        pairs.clear();
+        self.staging[b] = pairs;
+        Ok(())
+    }
+
+    /// Finalize bucket-by-bucket in destination order, invoking `sink`
+    /// with each contiguous, CSR-ordered targets chunk exactly once.
+    pub fn finalize(mut self, sink: &mut dyn FnMut(&[u32]) -> Result<()>) -> Result<()> {
+        for b in 0..self.bounds.len() - 1 {
+            self.flush_bucket(b)?;
+            let lo = self.bounds[b] as usize;
+            let hi = self.bounds[b + 1] as usize;
+            let base = self.offsets[lo];
+            let len = (self.offsets[hi] - base) as usize;
+            let mut chunk = vec![0u32; len];
+            let mut cursor: Vec<u32> = self.offsets[lo..hi].to_vec();
+            if let Some(mut file) = self.spill[b].take() {
+                // Rewind: the handle's position is at the end after writes.
+                file.seek(SeekFrom::Start(0))
+                    .context("rewind scatter spill")?;
+                let mut r = BufReader::with_capacity(1 << 16, file);
+                let mut pair = [0u8; 8];
+                loop {
+                    match r.read_exact(&mut pair) {
+                        Ok(()) => {}
+                        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                        Err(e) => return Err(e).context("read scatter spill"),
+                    }
+                    let d = u32::from_le_bytes(pair[..4].try_into().expect("4 bytes"));
+                    let s = u32::from_le_bytes(pair[4..].try_into().expect("4 bytes"));
+                    let c = &mut cursor[d as usize - lo];
+                    chunk[(*c - base) as usize] = s;
+                    *c += 1;
+                }
+            }
+            sink(&chunk)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, GenParams};
+    use crate::storage::GraphBackend;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("optimes-fmt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_ram_and_mmap_bit_exact() {
+        let g = generate(&GenParams {
+            n: 300,
+            ..GenParams::default()
+        });
+        let path = tmp("roundtrip.graph");
+        let info = write_graph_file(&path, &g).unwrap();
+        assert_eq!(info.n, 300);
+        for backend in [GraphBackend::Ram, GraphBackend::Mmap] {
+            let h = load_graph_file(&path, backend).unwrap();
+            assert_eq!(g.out.offsets, h.out.offsets);
+            assert_eq!(g.out.targets, h.out.targets);
+            assert_eq!(g.inc.offsets, h.inc.offsets);
+            assert_eq!(g.inc.targets, h.inc.targets);
+            assert_eq!(g.features, h.features);
+            assert_eq!(g.labels, h.labels);
+            assert_eq!(g.train_nodes, h.train_nodes);
+            assert_eq!(g.test_nodes, h.test_nodes);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn edge_scatter_matches_from_edges() {
+        let g = generate(&GenParams {
+            n: 200,
+            ..GenParams::default()
+        });
+        // Rebuild the inc targets from the out edge stream with a tiny
+        // bucket budget to force multi-bucket spills.
+        let mut scatter = EdgeScatter::new(g.inc.offsets.to_vec(), 256);
+        for v in 0..g.n as u32 {
+            for &t in g.out.neighbors(v) {
+                scatter.push(t, v).unwrap();
+            }
+        }
+        let mut rebuilt: Vec<u32> = Vec::new();
+        scatter
+            .finalize(&mut |chunk| {
+                rebuilt.extend_from_slice(chunk);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(&rebuilt[..], &g.inc.targets[..]);
+    }
+
+    #[test]
+    fn writer_rejects_geometry_mismatch() {
+        let path = tmp("badgeom.graph");
+        let mut w = GraphFileWriter::create(&path, 3, 2, 1, 1, 0, 0).unwrap();
+        // out_offsets needs 4 entries; feed 3.
+        w.begin_section(0).unwrap();
+        w.put_u32s(&[0, 1, 2]).unwrap();
+        assert!(w.end_section().is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,492 @@
+//! Minimal mmap wrapper — the only `unsafe` in the storage plane.
+//!
+//! The offline build vendors no `libc`/`memmap2`, so on unix we declare
+//! the two syscall wrappers we need (`mmap`/`munmap`) directly; they are
+//! libc symbols that std already links. Everywhere else (`cfg(not(unix))`)
+//! the "mapping" is a heap buffer read from the file, which keeps the API
+//! total at the cost of residency — the portability note lives in
+//! DESIGN.md §13.
+//!
+//! Two capabilities are exposed:
+//!
+//! * [`Mmap`]: a read-only, `MAP_SHARED` mapping of a whole file, with
+//!   typed [`Segment`] views over 64-byte-aligned sections. Pages fault
+//!   in lazily, so opening a multi-GB `GraphFile` costs near-zero RSS
+//!   until neighborhoods are actually touched.
+//! * [`MmapMut`]: a growable read-write mapping over an (unlinked) temp
+//!   file, used by the snapshot shadow slab so dormant embedding copies
+//!   live in the page cache instead of the heap.
+
+use std::fs::File;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+#[cfg(unix)]
+mod sys {
+    use core::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const MAP_SHARED: i32 = 1;
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// The bytes behind a read-only mapping: a real kernel mapping on unix,
+/// a heap buffer elsewhere. Dropping the last `Arc` unmaps/frees.
+enum Region {
+    #[cfg(unix)]
+    Mapped { ptr: *mut u8, len: usize },
+    // u64-backed so typed segment views stay aligned on the fallback
+    // path (a Vec<u8> only guarantees 1-byte alignment).
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+// SAFETY: the mapped region is read-only for its entire lifetime (mapped
+// PROT_READ) and the pointer is never handed out mutably, so shared
+// access from multiple threads is sound.
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+impl Region {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+            // bytes (or dangling-aligned when len == 0), owned by `self`.
+            Region::Mapped { ptr, len } => unsafe {
+                if *len == 0 {
+                    &[]
+                } else {
+                    std::slice::from_raw_parts(*ptr, *len)
+                }
+            },
+            // SAFETY: viewing `len` bytes of a u64 buffer holding at
+            // least that many (alignment only ever loosens, 8 → 1).
+            Region::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr().cast::<u8>(), *len)
+            },
+        }
+    }
+}
+
+impl Drop for Region {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Region::Mapped { ptr, len } = self {
+            if *len > 0 {
+                // SAFETY: `ptr`/`len` came from a successful mmap and are
+                // unmapped exactly once, here.
+                unsafe { sys::munmap(ptr.cast(), *len) };
+            }
+        }
+    }
+}
+
+/// A read-only mapping of an entire file.
+#[derive(Clone)]
+pub struct Mmap {
+    region: Arc<Region>,
+}
+
+impl Mmap {
+    /// Map `path` read-only. On non-unix targets this reads the file into
+    /// a heap buffer instead (same API, eager residency).
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let mut file =
+            File::open(path).with_context(|| format!("open {} for mapping", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if len > usize::MAX as u64 {
+            bail!("{} is too large to map on this platform", path.display());
+        }
+        Self::from_file(&mut file, len as usize, path)
+    }
+
+    #[cfg(unix)]
+    fn from_file(file: &mut File, len: usize, path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Ok(Mmap {
+                region: Arc::new(Region::Heap {
+                    buf: Vec::new(),
+                    len: 0,
+                }),
+            });
+        }
+        // SAFETY: fd is open for reading; a PROT_READ MAP_SHARED mapping
+        // of `len` bytes at offset 0 is valid for any regular file of at
+        // least that length. Failure is reported as MAP_FAILED, checked
+        // below.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() {
+            bail!("mmap of {} ({} bytes) failed", path.display(), len);
+        }
+        Ok(Mmap {
+            region: Arc::new(Region::Mapped {
+                ptr: ptr.cast(),
+                len,
+            }),
+        })
+    }
+
+    #[cfg(not(unix))]
+    fn from_file(file: &mut File, len: usize, path: &Path) -> Result<Mmap> {
+        use std::io::Read;
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        // SAFETY: filling `len` bytes of a zeroed u64 buffer that holds
+        // at least that many.
+        let bytes = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr().cast::<u8>(), len) };
+        file.read_exact(bytes)
+            .with_context(|| format!("read {} (mmap fallback)", path.display()))?;
+        Ok(Mmap {
+            region: Arc::new(Region::Heap { buf, len }),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.region.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        self.region.as_slice()
+    }
+
+    /// A typed view of `count` elements of `T` starting at `byte_off`.
+    /// Fails (never panics) if the range is out of bounds or misaligned
+    /// for `T` — the `GraphFile` writer 64-byte-aligns every section
+    /// precisely so these views are sound.
+    pub fn segment<T: Pod>(&self, byte_off: usize, count: usize) -> Result<Segment<T>> {
+        let elem = std::mem::size_of::<T>();
+        let byte_len = count.checked_mul(elem).context("segment size overflows")?;
+        let end = byte_off
+            .checked_add(byte_len)
+            .context("segment end overflows")?;
+        if end > self.len() {
+            bail!(
+                "segment [{byte_off}, {end}) out of bounds for {}-byte mapping",
+                self.len()
+            );
+        }
+        let base = self.region.as_slice().as_ptr() as usize;
+        if (base + byte_off) % std::mem::align_of::<T>() != 0 {
+            bail!("segment at byte offset {byte_off} is misaligned for element size {elem}");
+        }
+        Ok(Segment {
+            region: Arc::clone(&self.region),
+            byte_off,
+            count,
+            _marker: std::marker::PhantomData,
+        })
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len()).finish()
+    }
+}
+
+/// Marker for element types that are plain bytes in file order: any bit
+/// pattern is a valid value and the on-disk little-endian layout matches
+/// the in-memory layout on LE hosts (the format reader enforces the LE
+/// host check before handing out segments).
+///
+/// Sealed: only the primitives the `GraphFile` sections use.
+pub trait Pod: Copy + sealed::Sealed + 'static {}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u8 {}
+    impl Sealed for u16 {}
+    impl Sealed for u32 {}
+    impl Sealed for f32 {}
+}
+
+impl Pod for u8 {}
+impl Pod for u16 {}
+impl Pod for u32 {}
+impl Pod for f32 {}
+
+/// A typed, bounds-checked window into an [`Mmap`]. Cloning is cheap
+/// (bumps the region's refcount); the region outlives every segment.
+#[derive(Clone)]
+pub struct Segment<T: Pod> {
+    region: Arc<Region>,
+    byte_off: usize,
+    count: usize,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Pod> Segment<T> {
+    pub fn as_slice(&self) -> &[T] {
+        if self.count == 0 {
+            return &[];
+        }
+        let bytes = self.region.as_slice();
+        // SAFETY: construction checked bounds and alignment; `T: Pod`
+        // guarantees every bit pattern is a valid `T`; the region is
+        // immutable and kept alive by our Arc.
+        unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr().add(self.byte_off).cast::<T>(), self.count)
+        }
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for Segment<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Segment").field("count", &self.count).finish()
+    }
+}
+
+/// A growable read-write mapping over `file` (typically an unlinked temp
+/// file): `MAP_SHARED`, so stores land in the page cache and the kernel
+/// may write dirty pages back instead of holding them resident. On
+/// non-unix targets this degrades to a heap buffer.
+pub struct MmapMut {
+    file: File,
+    state: MutState,
+}
+
+enum MutState {
+    #[cfg(unix)]
+    Mapped { ptr: *mut u8, len: usize },
+    // u64-backed so byte views handed to `RowSlab` are 8-byte aligned
+    // even on the heap fallback path.
+    Heap { buf: Vec<u64>, len: usize },
+}
+
+// SAFETY: `MmapMut` hands out `&mut [u8]` only through `&mut self`, so
+// the usual borrow rules serialize access to the mapped bytes.
+unsafe impl Send for MmapMut {}
+
+impl MmapMut {
+    /// Wrap `file` (resized to `len` bytes, zero-filled by the kernel).
+    pub fn with_len(file: File, len: usize) -> Result<MmapMut> {
+        let mut m = MmapMut {
+            file,
+            state: MutState::Heap {
+                buf: Vec::new(),
+                len: 0,
+            },
+        };
+        m.grow_to(len)?;
+        Ok(m)
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.state {
+            #[cfg(unix)]
+            MutState::Mapped { len, .. } => *len,
+            MutState::Heap { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.state {
+            #[cfg(unix)]
+            // SAFETY: live mapping of exactly `len` bytes; see grow_to.
+            MutState::Mapped { ptr, len } => unsafe {
+                if *len == 0 {
+                    &[]
+                } else {
+                    std::slice::from_raw_parts(*ptr, *len)
+                }
+            },
+            // SAFETY: viewing `len` bytes of a u64 buffer holding at
+            // least that many (alignment only ever loosens, 8 → 1).
+            MutState::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr().cast::<u8>(), *len)
+            },
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        match &mut self.state {
+            #[cfg(unix)]
+            // SAFETY: live PROT_READ|PROT_WRITE mapping; &mut self gives
+            // exclusive access.
+            MutState::Mapped { ptr, len } => unsafe {
+                if *len == 0 {
+                    &mut []
+                } else {
+                    std::slice::from_raw_parts_mut(*ptr, *len)
+                }
+            },
+            // SAFETY: as in `as_slice`, plus exclusivity via &mut self.
+            MutState::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts_mut(buf.as_mut_ptr().cast::<u8>(), *len)
+            },
+        }
+    }
+
+    /// Grow the region to `new_len` bytes (no-op if already at least as
+    /// large). Existing bytes are preserved; new bytes read as zero. On
+    /// unix this is munmap → `ftruncate` (via `File::set_len`) → remap,
+    /// so callers must not hold slices across a grow (the borrow checker
+    /// enforces this: `grow_to` takes `&mut self`).
+    pub fn grow_to(&mut self, new_len: usize) -> Result<()> {
+        if new_len <= self.len() {
+            return Ok(());
+        }
+        self.file
+            .set_len(new_len as u64)
+            .context("grow slab backing file")?;
+        self.remap(new_len)
+    }
+
+    #[cfg(unix)]
+    fn remap(&mut self, new_len: usize) -> Result<()> {
+        use std::os::unix::io::AsRawFd;
+        if let MutState::Mapped { ptr, len } = &self.state {
+            if *len > 0 {
+                // SAFETY: unmapping the mapping we created in a prior
+                // remap; the state is replaced immediately below.
+                unsafe { sys::munmap(ptr.cast::<core::ffi::c_void>(), *len) };
+            }
+        }
+        // SAFETY: fd is open read-write and the file was just extended
+        // to `new_len` bytes; MAP_FAILED is checked below.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                new_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                self.file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() {
+            bail!("mmap (rw, {new_len} bytes) failed for snapshot slab");
+        }
+        self.state = MutState::Mapped {
+            ptr: ptr.cast(),
+            len: new_len,
+        };
+        Ok(())
+    }
+
+    #[cfg(not(unix))]
+    fn remap(&mut self, new_len: usize) -> Result<()> {
+        if let MutState::Heap { buf, len } = &mut self.state {
+            buf.resize(new_len.div_ceil(8), 0);
+            *len = new_len;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for MmapMut {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let MutState::Mapped { ptr, len } = &self.state {
+            if *len > 0 {
+                // SAFETY: unmapping our own mapping exactly once.
+                unsafe { sys::munmap(ptr.cast::<core::ffi::c_void>(), *len) };
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapMut {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapMut").field("len", &self.len()).finish()
+    }
+}
+
+/// Create an anonymous temp file under `std::env::temp_dir()`. On unix
+/// the path is unlinked immediately after opening, so the bytes vanish
+/// with the last fd even on crash; elsewhere the named file persists
+/// until deleted by the caller or the OS temp cleaner.
+pub fn anon_temp_file(tag: &str) -> Result<File> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let pid = std::process::id();
+    let path = std::env::temp_dir().join(format!("optimes-{tag}-{pid}-{seq}.tmp"));
+    let file = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create_new(true)
+        .open(&path)
+        .with_context(|| format!("create temp file {}", path.display()))?;
+    #[cfg(unix)]
+    let _ = std::fs::remove_file(&path);
+    Ok(file)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn map_roundtrip_and_typed_segment() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("optimes-mmap-test-{}.bin", std::process::id()));
+        {
+            let mut f = File::create(&path).unwrap();
+            let vals: Vec<u32> = (0..64).collect();
+            for v in &vals {
+                f.write_all(&v.to_le_bytes()).unwrap();
+            }
+        }
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.len(), 256);
+        let seg: Segment<u32> = m.segment(0, 64).unwrap();
+        assert_eq!(seg.as_slice()[0], 0);
+        assert_eq!(seg.as_slice()[63], 63);
+        // Out-of-bounds and misaligned requests fail without panicking.
+        assert!(m.segment::<u32>(0, 65).is_err());
+        assert!(m.segment::<u32>(2, 1).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mmap_mut_grows_and_preserves() {
+        let f = anon_temp_file("mmaptest").unwrap();
+        let mut m = MmapMut::with_len(f, 8).unwrap();
+        m.as_mut_slice()[..4].copy_from_slice(&[1, 2, 3, 4]);
+        m.grow_to(4096).unwrap();
+        assert_eq!(&m.as_slice()[..4], &[1, 2, 3, 4]);
+        assert_eq!(m.as_slice()[4095], 0);
+        m.as_mut_slice()[4095] = 7;
+        assert_eq!(m.as_slice()[4095], 7);
+    }
+}

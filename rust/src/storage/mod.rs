@@ -1,0 +1,149 @@
+//! Out-of-core graph plane (DESIGN.md §13).
+//!
+//! Four pieces turn "graphs fit in RAM" from an architecture assumption
+//! into a per-run choice:
+//!
+//! * [`format`]: the versioned, checksummed on-disk CSR (`GraphFile`)
+//!   with a streaming two-pass writer and corruption-naming reader;
+//! * [`mmap`] + [`slab`]: the `Slab<T>` seam that lets `Csr`/`Graph`
+//!   bulk arrays be served from mapped pages instead of the heap;
+//! * [`stream_partition`]: hash and linear-deterministic-greedy
+//!   partitioners that assign a graph client-by-client from one
+//!   adjacency pass, no in-RAM CSR required;
+//! * [`GraphStore`]: the loading seam — every consumer (`partition`,
+//!   `sampler`, `subgraph`, trainer, figure harness) sees a plain
+//!   [`Graph`] and cannot tell the backends apart except by RSS.
+//!
+//! Backend selection: `OPTIMES_GRAPH_BACKEND=ram|mmap` (or CLI
+//! `run --graph-backend`). `ram` decodes sections into heap `Vec`s via
+//! `from_le_bytes` (works on any host endianness); `mmap` serves the
+//! file's little-endian pages directly and therefore refuses big-endian
+//! hosts with a named error. Accuracy curves are bit-identical across
+//! backends — the store-parity CI matrix enforces it.
+
+pub mod format;
+pub mod mmap;
+pub mod slab;
+pub mod stream_partition;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::csr::Graph;
+
+pub use format::{load_graph_file, write_graph_file, GraphFileInfo, GraphFileWriter};
+pub use slab::{RowSlab, Slab};
+pub use stream_partition::{
+    hash_partition_n, ldg_partition, ldg_partition_file, ldg_partition_graph, FileVertexStream,
+    GraphVertexStream, VertexStream,
+};
+
+/// Which medium serves a graph's bulk arrays.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GraphBackend {
+    #[default]
+    Ram,
+    Mmap,
+}
+
+impl GraphBackend {
+    pub fn parse(s: &str) -> Result<GraphBackend> {
+        match s {
+            "ram" => Ok(GraphBackend::Ram),
+            "mmap" => Ok(GraphBackend::Mmap),
+            other => bail!("unknown graph backend {other:?} (expected ram|mmap)"),
+        }
+    }
+
+    /// Resolve from `OPTIMES_GRAPH_BACKEND` (default `ram`). Panics on
+    /// an unparseable value — a typo silently falling back to `ram`
+    /// would fake backend parity in the CI matrix.
+    pub fn from_env() -> GraphBackend {
+        match std::env::var("OPTIMES_GRAPH_BACKEND") {
+            Ok(v) => GraphBackend::parse(&v).expect("OPTIMES_GRAPH_BACKEND"),
+            Err(_) => GraphBackend::Ram,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphBackend::Ram => "ram",
+            GraphBackend::Mmap => "mmap",
+        }
+    }
+}
+
+/// The loading seam over `GraphFile`s (tentpole (b) of DESIGN.md §13).
+pub struct GraphStore;
+
+impl GraphStore {
+    /// Open a `GraphFile` with full verification (header, checksums,
+    /// `Graph::validate`) on the requested backend.
+    pub fn open(path: &Path, backend: GraphBackend) -> Result<Graph> {
+        format::load_graph_file(path, backend)
+    }
+
+    /// Serialize a graph to `path`.
+    pub fn save(path: &Path, g: &Graph) -> Result<GraphFileInfo> {
+        format::write_graph_file(path, g)
+    }
+
+    /// Re-home an in-RAM graph onto the requested backend. `Ram` is a
+    /// no-op; `Mmap` round-trips through a temp `GraphFile` (unlinked
+    /// after opening on unix) so the result is served from mapped pages
+    /// — this is how `OPTIMES_GRAPH_BACKEND=mmap` routes generated
+    /// datasets through the on-disk format.
+    pub fn adopt(g: Graph, backend: GraphBackend) -> Result<Graph> {
+        match backend {
+            GraphBackend::Ram => Ok(g),
+            GraphBackend::Mmap => {
+                use std::sync::atomic::{AtomicU64, Ordering};
+                static SEQ: AtomicU64 = AtomicU64::new(0);
+                let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+                let pid = std::process::id();
+                let path = std::env::temp_dir().join(format!("optimes-adopt-{pid}-{seq}.graph"));
+                Self::save(&path, &g).context("write temp GraphFile for mmap adoption")?;
+                let mapped = Self::open(&path, GraphBackend::Mmap)
+                    .context("reopen temp GraphFile mmap-backed")?;
+                // Unlink immediately: the mapping keeps the bytes alive
+                // on unix; on other targets the fallback already copied.
+                let _ = std::fs::remove_file(&path);
+                Ok(mapped)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{generate, GenParams};
+
+    #[test]
+    fn backend_parse_and_names() {
+        assert_eq!(GraphBackend::parse("ram").unwrap(), GraphBackend::Ram);
+        assert_eq!(GraphBackend::parse("mmap").unwrap(), GraphBackend::Mmap);
+        assert!(GraphBackend::parse("tape").is_err());
+        assert_eq!(GraphBackend::default().name(), "ram");
+    }
+
+    #[test]
+    fn adopt_mmap_serves_identical_graph_from_pages() {
+        let g = generate(&GenParams {
+            n: 250,
+            ..GenParams::default()
+        });
+        let m = GraphStore::adopt(g.clone(), GraphBackend::Mmap).unwrap();
+        assert!(m.is_mapped());
+        assert!(!g.is_mapped());
+        assert_eq!(g.out.offsets, m.out.offsets);
+        assert_eq!(g.out.targets, m.out.targets);
+        assert_eq!(g.inc.targets, m.inc.targets);
+        assert_eq!(g.features, m.features);
+        assert_eq!(g.labels, m.labels);
+        assert_eq!(g.train_nodes, m.train_nodes);
+        assert_eq!(g.test_nodes, m.test_nodes);
+        m.validate().unwrap();
+    }
+}

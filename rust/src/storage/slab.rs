@@ -1,0 +1,191 @@
+//! `Slab<T>`: the storage seam behind `Csr`/`Graph` bulk fields.
+//!
+//! Every bulk array in the graph plane (`offsets`, `targets`, `features`,
+//! `labels`) is a `Slab<T>`, which is either an owned heap `Vec<T>` (the
+//! `ram` backend — exactly the pre-seam representation) or a typed view
+//! into a shared read-only mapping of a `GraphFile` (the `mmap` backend).
+//! `Deref<Target = [T]>` keeps every existing call site — indexing,
+//! slicing, `.len()`, `.iter()` — compiling unchanged, and `PartialEq`
+//! compares element-wise so parity tests can `assert_eq!` across
+//! backends.
+//!
+//! `RowSlab` is the second, mutable half of the seam: a fixed-row-width
+//! `f32` arena over a growable [`MmapMut`], used by the snapshot store's
+//! shadow copy (DESIGN.md §13.4).
+
+use std::ops::Deref;
+
+use anyhow::Result;
+
+use super::mmap::{anon_temp_file, MmapMut, Pod, Segment};
+
+/// Backing storage for a bulk array: heap-owned or mmap-backed.
+pub enum Slab<T: Pod> {
+    Ram(Vec<T>),
+    Mapped(Segment<T>),
+}
+
+impl<T: Pod> Slab<T> {
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            Slab::Ram(v) => v,
+            Slab::Mapped(seg) => seg.as_slice(),
+        }
+    }
+
+    /// True when served from mapped pages rather than the heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Slab::Mapped(_))
+    }
+
+    /// Materialize into an owned `Vec` (copies when mapped).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl<T: Pod> Deref for Slab<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Slab<T> {
+    fn from(v: Vec<T>) -> Slab<T> {
+        Slab::Ram(v)
+    }
+}
+
+impl<T: Pod> Default for Slab<T> {
+    fn default() -> Slab<T> {
+        Slab::Ram(Vec::new())
+    }
+}
+
+impl<T: Pod> Clone for Slab<T> {
+    fn clone(&self) -> Slab<T> {
+        match self {
+            Slab::Ram(v) => Slab::Ram(v.clone()),
+            // Segments are Arc-backed views; cloning shares the mapping.
+            Slab::Mapped(seg) => Slab::Mapped(seg.clone()),
+        }
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Slab<T> {
+    fn eq(&self, other: &Slab<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for Slab<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "mapped" } else { "ram" };
+        write!(f, "Slab<{kind}>(len={})", self.len())
+    }
+}
+
+/// Fixed-row-width `f32` arena over a growable mmap region (heap buffer
+/// on non-unix targets). Rows are allocated append-only; the caller maps
+/// node ids to row slots. Backed by an unlinked temp file, so the bytes
+/// are reclaimed by the OS on drop or crash.
+pub struct RowSlab {
+    map: MmapMut,
+    width: usize,
+    rows: usize,
+}
+
+impl RowSlab {
+    /// An empty slab whose rows hold `width` f32 values each.
+    pub fn new(width: usize) -> Result<RowSlab> {
+        let file = anon_temp_file("snapslab")?;
+        // Start with one page so the first grow is cheap.
+        let map = MmapMut::with_len(file, 4096)?;
+        Ok(RowSlab {
+            map,
+            width: width.max(1),
+            rows: 0,
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Allocate one zeroed row, returning its slot index.
+    pub fn alloc_row(&mut self) -> Result<usize> {
+        let slot = self.rows;
+        let need = (slot + 1) * self.width * 4;
+        if need > self.map.len() {
+            // Double (min one page) to amortize remaps.
+            let target = need.next_power_of_two().max(4096);
+            self.map.grow_to(target)?;
+        }
+        self.rows += 1;
+        Ok(slot)
+    }
+
+    pub fn row(&self, slot: usize) -> &[f32] {
+        assert!(slot < self.rows, "row slot {slot} out of bounds");
+        let bytes = &self.map.as_slice()[slot * self.width * 4..(slot + 1) * self.width * 4];
+        // SAFETY: the region starts page-aligned (mmap or Vec<u8> of a
+        // fresh allocation is at least 4-aligned on every supported
+        // target) and rows are whole multiples of 4 bytes; any bit
+        // pattern is a valid f32.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr().cast::<f32>(), self.width) }
+    }
+
+    pub fn row_mut(&mut self, slot: usize) -> &mut [f32] {
+        assert!(slot < self.rows, "row slot {slot} out of bounds");
+        let w = self.width;
+        let bytes = &mut self.map.as_mut_slice()[slot * w * 4..(slot + 1) * w * 4];
+        // SAFETY: as in `row`, plus exclusive access via &mut self.
+        unsafe { std::slice::from_raw_parts_mut(bytes.as_mut_ptr().cast::<f32>(), w) }
+    }
+}
+
+impl std::fmt::Debug for RowSlab {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RowSlab")
+            .field("rows", &self.rows)
+            .field("width", &self.width)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_derefs_like_a_vec() {
+        let s: Slab<u32> = vec![3, 1, 4, 1, 5].into();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[2], 4);
+        assert_eq!(&s[1..3], &[1, 4]);
+        assert_eq!(s.iter().sum::<u32>(), 14);
+        let t = s.clone();
+        assert_eq!(s, t);
+        assert!(!s.is_mapped());
+    }
+
+    #[test]
+    fn row_slab_allocates_and_persists_rows() {
+        let mut slab = RowSlab::new(8).unwrap();
+        for i in 0..100 {
+            let slot = slab.alloc_row().unwrap();
+            assert_eq!(slot, i);
+            slab.row_mut(slot).fill(i as f32);
+        }
+        for i in 0..100 {
+            assert_eq!(slab.row(i)[7], i as f32);
+        }
+        assert_eq!(slab.rows(), 100);
+    }
+}

@@ -1,0 +1,266 @@
+//! Streaming k-way partitioners (DESIGN.md §13.3).
+//!
+//! `metis_lite` needs the whole CSR in RAM (BFS seeding + frontier
+//! growth + a refinement sweep). These partitioners instead consume a
+//! single ordered pass over per-vertex adjacency — the [`VertexStream`]
+//! trait — so a `GraphFile` far larger than RAM can be assigned
+//! client-by-client with O(n + k) state (the assignment vector itself):
+//!
+//! * [`hash_partition_n`]: uniform random assignment, the max-cut
+//!   baseline. Identical stream to `partition::hash_partition` (which
+//!   now delegates here), so existing ablations are unchanged.
+//! * [`ldg_partition`]: linear deterministic greedy — each vertex joins
+//!   the part holding most of its already-seen neighbours, damped by a
+//!   fill factor `(1 - size/cap)`; the capacity cap bounds imbalance by
+//!   construction, and ties break by a seed-shuffled part order, then
+//!   by current size, so the result is a pure function of (stream,
+//!   k, seed).
+
+use anyhow::{ensure, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+
+use crate::graph::csr::Graph;
+use crate::graph::partition::Partition;
+use crate::util::rng::Rng;
+
+use super::format::{read_info, GraphFileInfo};
+
+/// One ordered pass over vertices 0..n with out- and in-neighbour lists.
+pub trait VertexStream {
+    fn n(&self) -> usize;
+
+    /// Visit every vertex in ascending id order. The slices are only
+    /// valid for the duration of the callback.
+    fn for_each_vertex(
+        &mut self,
+        f: &mut dyn FnMut(u32, &[u32], &[u32]) -> Result<()>,
+    ) -> Result<()>;
+}
+
+/// In-RAM adapter: any loaded [`Graph`] (either backend) is a stream.
+pub struct GraphVertexStream<'a> {
+    pub g: &'a Graph,
+}
+
+impl VertexStream for GraphVertexStream<'_> {
+    fn n(&self) -> usize {
+        self.g.n
+    }
+
+    fn for_each_vertex(
+        &mut self,
+        f: &mut dyn FnMut(u32, &[u32], &[u32]) -> Result<()>,
+    ) -> Result<()> {
+        for v in 0..self.g.n as u32 {
+            f(v, self.g.out.neighbors(v), self.g.inc.neighbors(v))?;
+        }
+        Ok(())
+    }
+}
+
+/// Sequentially streams a `GraphFile`'s adjacency sections through small
+/// reusable buffers — peak RSS is independent of graph size. The header
+/// is bounds-checked on open; payload integrity is the caller's call
+/// (`verify_checksums` is a separate pass).
+pub struct FileVertexStream {
+    info: GraphFileInfo,
+    path: std::path::PathBuf,
+}
+
+impl FileVertexStream {
+    pub fn open(path: &Path) -> Result<FileVertexStream> {
+        let info = read_info(path)?;
+        Ok(FileVertexStream {
+            info,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn info(&self) -> &GraphFileInfo {
+        &self.info
+    }
+
+    fn reader(&self, section: usize) -> Result<BufReader<File>> {
+        let mut file = File::open(&self.path)
+            .with_context(|| format!("open GraphFile {}", self.path.display()))?;
+        file.seek(SeekFrom::Start(self.info.sections[section].offset))
+            .context("seek to section")?;
+        Ok(BufReader::with_capacity(1 << 20, file))
+    }
+}
+
+fn next_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("read adjacency stream")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_targets(r: &mut impl Read, deg: usize, buf: &mut Vec<u32>) -> Result<()> {
+    buf.clear();
+    for _ in 0..deg {
+        buf.push(next_u32(r)?);
+    }
+    Ok(())
+}
+
+impl VertexStream for FileVertexStream {
+    fn n(&self) -> usize {
+        self.info.n
+    }
+
+    fn for_each_vertex(
+        &mut self,
+        f: &mut dyn FnMut(u32, &[u32], &[u32]) -> Result<()>,
+    ) -> Result<()> {
+        let mut out_off = self.reader(0)?;
+        let mut out_tgt = self.reader(1)?;
+        let mut in_off = self.reader(2)?;
+        let mut in_tgt = self.reader(3)?;
+        let mut prev_out = next_u32(&mut out_off)?;
+        let mut prev_in = next_u32(&mut in_off)?;
+        let mut out_buf = Vec::new();
+        let mut in_buf = Vec::new();
+        for v in 0..self.info.n as u32 {
+            let next_out = next_u32(&mut out_off)?;
+            let next_in = next_u32(&mut in_off)?;
+            ensure!(
+                next_out >= prev_out && next_in >= prev_in,
+                "GraphFile {}: offsets section not monotone at vertex {v}",
+                self.path.display()
+            );
+            read_targets(&mut out_tgt, (next_out - prev_out) as usize, &mut out_buf)?;
+            read_targets(&mut in_tgt, (next_in - prev_in) as usize, &mut in_buf)?;
+            prev_out = next_out;
+            prev_in = next_in;
+            f(v, &out_buf, &in_buf)?;
+        }
+        Ok(())
+    }
+}
+
+/// Uniform random assignment over `n` vertices — needs no adjacency at
+/// all. Same rng stream as the historical `hash_partition`, so results
+/// are unchanged for in-RAM callers.
+pub fn hash_partition_n(n: usize, k: usize, seed: u64) -> Partition {
+    let mut rng = Rng::new(seed, 0x44A5);
+    let assign = (0..n).map(|_| rng.below(k) as u32).collect();
+    Partition { k, assign }
+}
+
+/// Linear deterministic greedy over one adjacency pass.
+pub fn ldg_partition(stream: &mut dyn VertexStream, k: usize, seed: u64) -> Result<Partition> {
+    let n = stream.n();
+    ensure!(k >= 1 && n >= k, "ldg: need n >= k >= 1 (n={n}, k={k})");
+    // Same slack as metis_lite, so imbalance tolerances line up.
+    let cap = n.div_ceil(k) + (n / k / 20).max(1);
+    let mut rng = Rng::new(seed, 0x4C44);
+    let mut tie_order: Vec<u32> = (0..k as u32).collect();
+    rng.shuffle(&mut tie_order);
+
+    const UNASSIGNED: u32 = u32::MAX;
+    let mut assign = vec![UNASSIGNED; n];
+    let mut sizes = vec![0usize; k];
+    let mut counts = vec![0u64; k];
+    stream.for_each_vertex(&mut |v, out, inc| {
+        for c in counts.iter_mut() {
+            *c = 0;
+        }
+        for &t in out.iter().chain(inc.iter()) {
+            ensure!((t as usize) < n, "ldg: edge target {t} out of range (n={n})");
+            let a = assign[t as usize];
+            if a != UNASSIGNED {
+                counts[a as usize] += 1;
+            }
+        }
+        let mut best: Option<usize> = None;
+        let mut best_score = f64::NEG_INFINITY;
+        for &p in &tie_order {
+            let p = p as usize;
+            if sizes[p] >= cap {
+                continue;
+            }
+            let fill = 1.0 - sizes[p] as f64 / cap as f64;
+            let score = counts[p] as f64 * fill;
+            let better = match best {
+                None => true,
+                // Ties (including the all-zero cold start) go to the
+                // emptier part, then to seed-shuffled order.
+                Some(b) => score > best_score || (score == best_score && sizes[p] < sizes[b]),
+            };
+            if better {
+                best = Some(p);
+                best_score = score;
+            }
+        }
+        let p = best.expect("capacity k*cap > n leaves an open part");
+        assign[v as usize] = p as u32;
+        sizes[p] += 1;
+        Ok(())
+    })?;
+    Ok(Partition { k, assign })
+}
+
+/// LDG over an in-RAM graph (used by the session seam).
+pub fn ldg_partition_graph(g: &Graph, k: usize, seed: u64) -> Result<Partition> {
+    ldg_partition(&mut GraphVertexStream { g }, k, seed)
+}
+
+/// LDG straight off a `GraphFile`, never materializing the CSR.
+pub fn ldg_partition_file(path: &Path, k: usize, seed: u64) -> Result<Partition> {
+    ldg_partition(&mut FileVertexStream::open(path)?, k, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+    use crate::graph::partition::hash_partition;
+    use crate::storage::format::write_graph_file;
+
+    #[test]
+    fn ldg_is_deterministic_and_balanced() {
+        let g = tiny(11);
+        for k in [2, 4] {
+            let a = ldg_partition_graph(&g, k, 9).unwrap();
+            let b = ldg_partition_graph(&g, k, 9).unwrap();
+            assert_eq!(a.assign, b.assign);
+            assert!(a.imbalance() < 1.15, "imbalance {}", a.imbalance());
+            assert_eq!(a.sizes().iter().sum::<usize>(), g.n);
+        }
+    }
+
+    #[test]
+    fn ldg_beats_hash_on_communities() {
+        let g = tiny(12);
+        let ldg = ldg_partition_graph(&g, 4, 5).unwrap();
+        let hash = hash_partition(&g, 4, 5);
+        assert!(
+            ldg.cut_fraction(&g) < hash.cut_fraction(&g),
+            "ldg {} vs hash {}",
+            ldg.cut_fraction(&g),
+            hash.cut_fraction(&g)
+        );
+    }
+
+    #[test]
+    fn file_stream_matches_graph_stream() {
+        let g = tiny(13);
+        let path =
+            std::env::temp_dir().join(format!("optimes-ldgstream-{}.graph", std::process::id()));
+        write_graph_file(&path, &g).unwrap();
+        let from_graph = ldg_partition_graph(&g, 3, 7).unwrap();
+        let from_file = ldg_partition_file(&path, 3, 7).unwrap();
+        assert_eq!(from_graph.assign, from_file.assign);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn hash_partition_n_matches_graph_hash() {
+        let g = tiny(14);
+        let a = hash_partition(&g, 4, 3);
+        let b = hash_partition_n(g.n, 4, 3);
+        assert_eq!(a.assign, b.assign);
+    }
+}
