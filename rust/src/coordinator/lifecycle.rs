@@ -1,0 +1,582 @@
+//! Session run-state machine and elastic membership (DESIGN.md §14).
+//!
+//! A [`Session`](super::session::Session) moves through an explicit
+//! [`RunState`]: **warmup** (offline phases + pre-training push) →
+//! **rounds** (the federated loop) → **cooldown** (metrics finalized).
+//! Membership is no longer fixed at session start: a [`ChurnSpec`]
+//! schedules deterministic client joins/departures, applied at round
+//! boundaries and recorded in a [`Membership`] ledger of
+//! [`MembershipChange`] entries.
+//!
+//! Re-partitioning is *incremental* — no world re-partition on churn:
+//!
+//! * [`depart`] re-scores only the leaving client's vertices against the
+//!   remaining partitions (most-internal-edges wins, smallest-part then
+//!   smallest-id tie-breaks — the same gain rule as the `metis_lite`
+//!   refinement sweep), so unaffected partitions keep their exact vertex
+//!   sets and the untouched clients' state stays bit-identical.
+//! * [`join_split`] grows the new client from a BFS half-split of the
+//!   heaviest partition, keeping the split connected where the graph is.
+//!
+//! Every change records the exact `(vertex, from, to)` moves, so a
+//! checkpoint resume replays the ledger verbatim
+//! ([`Membership::apply`]) instead of re-deriving it, and property tests
+//! can revert it ([`Membership::revert_last`]) back to the original
+//! partition bit-for-bit.
+
+use std::collections::{HashSet, VecDeque};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::graph::{Graph, Partition};
+
+/// Explicit lifecycle state of a running session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Offline phases done or in progress; pre-training push not yet
+    /// complete.
+    Warmup,
+    /// Federated rounds are running.
+    Rounds,
+    /// The session finished (metrics handed back); no further rounds.
+    Cooldown,
+}
+
+impl RunState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RunState::Warmup => "warmup",
+            RunState::Rounds => "rounds",
+            RunState::Cooldown => "cooldown",
+        }
+    }
+}
+
+/// One scheduled membership event.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// Client `client` departs before the given round runs.
+    Leave { client: usize },
+    /// One new client joins before the given round runs (its id is
+    /// assigned at apply time: the next unused partition id).
+    Join,
+}
+
+/// A [`ChurnKind`] pinned to the round boundary it fires at.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// Round index (0-based) whose boundary applies the event.
+    pub round: usize,
+    pub kind: ChurnKind,
+}
+
+/// Deterministic scripted join/leave schedule. Grammar (comma-separated,
+/// whitespace-tolerant, case-insensitive):
+///
+/// ```text
+/// leave@ROUND:CLIENT   client CLIENT departs before round ROUND
+/// join@ROUND           one client joins before round ROUND
+/// ```
+///
+/// The empty spec is structurally inert: a session configured with it is
+/// bit-identical to one built before churn existed.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct ChurnSpec {
+    /// Events in spec order (same-round events apply in written order).
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnSpec {
+    /// Parse the `leave@R:ID,join@R` grammar. Empty input is the empty
+    /// (inert) spec.
+    pub fn parse(s: &str) -> Result<ChurnSpec> {
+        let mut events = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let lower = tok.to_ascii_lowercase();
+            let (kind, rest) = lower.split_once('@').with_context(|| {
+                format!("churn event {tok:?}: expected leave@ROUND:CLIENT or join@ROUND")
+            })?;
+            let kind = match kind {
+                "leave" => {
+                    let (round, client) = rest.split_once(':').with_context(|| {
+                        format!("churn event {tok:?}: leave requires leave@ROUND:CLIENT")
+                    })?;
+                    let round: usize = round
+                        .parse()
+                        .with_context(|| format!("churn event {tok:?}: bad round"))?;
+                    let client: usize = client
+                        .parse()
+                        .with_context(|| format!("churn event {tok:?}: bad client id"))?;
+                    ChurnEvent {
+                        round,
+                        kind: ChurnKind::Leave { client },
+                    }
+                }
+                "join" => {
+                    if rest.contains(':') {
+                        bail!("churn event {tok:?}: join takes only a round (join@ROUND)");
+                    }
+                    let round: usize = rest
+                        .parse()
+                        .with_context(|| format!("churn event {tok:?}: bad round"))?;
+                    ChurnEvent {
+                        round,
+                        kind: ChurnKind::Join,
+                    }
+                }
+                other => bail!("churn event {tok:?}: unknown kind {other:?} (leave|join)"),
+            };
+            events.push(kind);
+        }
+        Ok(ChurnSpec { events })
+    }
+
+    /// Churn schedule from `OPTIMES_CHURN` (default: empty). Unparseable
+    /// values warn to stderr and fall back to no churn, like
+    /// `OPTIMES_ROUND_POLICY`.
+    pub fn from_env() -> ChurnSpec {
+        match std::env::var("OPTIMES_CHURN") {
+            Ok(v) if !v.is_empty() => match ChurnSpec::parse(&v) {
+                Ok(spec) => spec,
+                Err(e) => {
+                    eprintln!("warning: OPTIMES_CHURN={v:?} invalid ({e:#}); ignoring");
+                    ChurnSpec::default()
+                }
+            },
+            _ => ChurnSpec::default(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Canonical spec string (round-trips through [`parse`](ChurnSpec::parse)).
+    pub fn spec_string(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match e.kind {
+                ChurnKind::Leave { client } => format!("leave@{}:{}", e.round, client),
+                ChurnKind::Join => format!("join@{}", e.round),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Events firing at the boundary before `round`, in spec order.
+    pub fn events_at(&self, round: usize) -> Vec<&ChurnEvent> {
+        self.events.iter().filter(|e| e.round == round).collect()
+    }
+}
+
+/// What a membership change did to the partition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MembershipKind {
+    /// Client departed; its vertices were re-assigned.
+    Left(usize),
+    /// Client joined with this id; it received a split of the heaviest
+    /// partition.
+    Joined(usize),
+}
+
+/// One ledger entry: the change plus the exact vertex moves it made, so
+/// replay ([`Membership::apply`]) and revert
+/// ([`Membership::revert_last`]) are bit-exact without re-deriving the
+/// incremental re-partition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MembershipChange {
+    /// Round boundary the change applied at.
+    pub round: usize,
+    pub kind: MembershipKind,
+    /// `(vertex, from_part, to_part)` for every vertex that moved.
+    pub moved: Vec<(u32, u32, u32)>,
+}
+
+impl MembershipChange {
+    /// Client id this change concerns.
+    pub fn client(&self) -> usize {
+        match self.kind {
+            MembershipKind::Left(id) | MembershipKind::Joined(id) => id,
+        }
+    }
+}
+
+/// The session's membership ledger: which client ids are active, and the
+/// ordered history of changes that produced the current partition from
+/// the initial one.
+#[derive(Clone, Debug, Default)]
+pub struct Membership {
+    active: Vec<usize>,
+    ledger: Vec<MembershipChange>,
+}
+
+impl Membership {
+    /// Fresh ledger over the initial `k` clients (ids `0..k`).
+    pub fn new(k: usize) -> Membership {
+        Membership {
+            active: (0..k).collect(),
+            ledger: Vec::new(),
+        }
+    }
+
+    /// Active client ids, ascending.
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    pub fn is_active(&self, id: usize) -> bool {
+        self.active.binary_search(&id).is_ok()
+    }
+
+    /// Ordered history of applied changes.
+    pub fn ledger(&self) -> &[MembershipChange] {
+        &self.ledger
+    }
+
+    fn activate(&mut self, id: usize) {
+        if let Err(pos) = self.active.binary_search(&id) {
+            self.active.insert(pos, id);
+        }
+    }
+
+    fn deactivate(&mut self, id: usize) {
+        if let Ok(pos) = self.active.binary_search(&id) {
+            self.active.remove(pos);
+        }
+    }
+
+    /// Compute and record a departure at round boundary `round`: the
+    /// leaving client's vertices are incrementally re-assigned via
+    /// [`depart`]. Fails loudly if `client` is not active or is the last
+    /// one standing.
+    pub fn record_leave(
+        &mut self,
+        g: &Graph,
+        part: &mut Partition,
+        round: usize,
+        client: usize,
+    ) -> Result<&MembershipChange> {
+        ensure!(
+            self.is_active(client),
+            "churn: client {client} is not active (active: {:?})",
+            self.active
+        );
+        ensure!(
+            self.active.len() >= 2,
+            "churn: cannot remove the last active client {client}"
+        );
+        let remaining: Vec<usize> = self.active.iter().copied().filter(|&c| c != client).collect();
+        let moved = depart(g, part, client, &remaining);
+        self.deactivate(client);
+        self.ledger.push(MembershipChange {
+            round,
+            kind: MembershipKind::Left(client),
+            moved,
+        });
+        Ok(self.ledger.last().expect("just pushed"))
+    }
+
+    /// Compute and record a join at round boundary `round`: the new
+    /// client (next unused partition id) receives a BFS half-split of
+    /// the heaviest active partition via [`join_split`].
+    pub fn record_join(
+        &mut self,
+        g: &Graph,
+        part: &mut Partition,
+        round: usize,
+    ) -> Result<&MembershipChange> {
+        ensure!(
+            !self.active.is_empty(),
+            "churn: cannot join into a session with no active clients"
+        );
+        let (new_id, moved) = join_split(g, part, &self.active);
+        self.activate(new_id);
+        self.ledger.push(MembershipChange {
+            round,
+            kind: MembershipKind::Joined(new_id),
+            moved,
+        });
+        Ok(self.ledger.last().expect("just pushed"))
+    }
+
+    /// Re-apply a recorded change (checkpoint resume): replays the
+    /// recorded moves verbatim instead of recomputing the incremental
+    /// re-partition, so replay stays correct even if the re-partition
+    /// heuristic evolves.
+    pub fn apply(&mut self, part: &mut Partition, change: MembershipChange) {
+        for &(v, _from, to) in &change.moved {
+            part.assign[v as usize] = to;
+        }
+        match change.kind {
+            MembershipKind::Left(id) => self.deactivate(id),
+            MembershipKind::Joined(id) => {
+                part.k = part.k.max(id + 1);
+                self.activate(id);
+            }
+        }
+        self.ledger.push(change);
+    }
+
+    /// Undo the most recent change, restoring the partition assignment
+    /// and active set exactly. Returns the reverted entry.
+    pub fn revert_last(&mut self, part: &mut Partition) -> Option<MembershipChange> {
+        let change = self.ledger.pop()?;
+        for &(v, from, _to) in &change.moved {
+            part.assign[v as usize] = from;
+        }
+        match change.kind {
+            MembershipKind::Left(id) => self.activate(id),
+            MembershipKind::Joined(id) => {
+                self.deactivate(id);
+                if id + 1 == part.k {
+                    part.k -= 1;
+                }
+            }
+        }
+        Some(change)
+    }
+}
+
+/// Incrementally re-assign every vertex of a departing client: each one
+/// goes to the `remaining` partition with the most neighbours (out + in,
+/// counted against the evolving assignment so earlier moves attract
+/// later ones), tie-broken by smaller current size then smaller part id.
+/// Only the departing partition's vertices move; returns the
+/// `(vertex, from, to)` list in ascending vertex order.
+pub fn depart(
+    g: &Graph,
+    part: &mut Partition,
+    client: usize,
+    remaining: &[usize],
+) -> Vec<(u32, u32, u32)> {
+    assert!(!remaining.is_empty(), "depart needs a surviving partition");
+    let mut sizes = part.sizes();
+    let owned: Vec<u32> = (0..g.n as u32)
+        .filter(|&v| part.assign[v as usize] == client as u32)
+        .collect();
+    let mut moved = Vec::with_capacity(owned.len());
+    for v in owned {
+        let mut best: Option<(usize, usize)> = None; // (part, neighbour count)
+        for &p in remaining {
+            let cnt = g
+                .out
+                .neighbors(v)
+                .iter()
+                .chain(g.inc.neighbors(v))
+                .filter(|&&t| part.assign[t as usize] == p as u32)
+                .count();
+            let better = match best {
+                None => true,
+                Some((bp, bc)) => {
+                    cnt > bc || (cnt == bc && (sizes[p], p) < (sizes[bp], bp))
+                }
+            };
+            if better {
+                best = Some((p, cnt));
+            }
+        }
+        let (to, _) = best.expect("remaining is non-empty");
+        part.assign[v as usize] = to as u32;
+        sizes[to] += 1;
+        moved.push((v, client as u32, to as u32));
+    }
+    moved
+}
+
+/// Split the heaviest active partition for a joining client: BFS-grow a
+/// connected region of half its vertices (seeded from its smallest
+/// vertex id; disconnected leftovers re-seed from the next smallest) and
+/// hand that region to the new client id `part.k` (which grows by one).
+/// Returns `(new_id, moves)`.
+pub fn join_split(
+    g: &Graph,
+    part: &mut Partition,
+    active: &[usize],
+) -> (usize, Vec<(u32, u32, u32)>) {
+    assert!(!active.is_empty(), "join_split needs an active partition");
+    let new_id = part.k;
+    part.k += 1;
+    let sizes = part.sizes();
+    let mut heavy = active[0];
+    for &p in &active[1..] {
+        if sizes[p] > sizes[heavy] {
+            heavy = p;
+        }
+    }
+    let members: Vec<u32> = (0..g.n as u32)
+        .filter(|&v| part.assign[v as usize] == heavy as u32)
+        .collect();
+    let take = members.len() / 2;
+    let mut moved = Vec::with_capacity(take);
+    if take > 0 {
+        let member_set: HashSet<u32> = members.iter().copied().collect();
+        let mut visited: HashSet<u32> = HashSet::with_capacity(take);
+        let mut queue: VecDeque<u32> = VecDeque::new();
+        let mut seed_idx = 0usize;
+        let mut picked: Vec<u32> = Vec::with_capacity(take);
+        while picked.len() < take {
+            if queue.is_empty() {
+                while seed_idx < members.len() && visited.contains(&members[seed_idx]) {
+                    seed_idx += 1;
+                }
+                let Some(&seed) = members.get(seed_idx) else {
+                    break;
+                };
+                visited.insert(seed);
+                queue.push_back(seed);
+            }
+            let v = queue.pop_front().expect("queue refilled above");
+            picked.push(v);
+            if picked.len() >= take {
+                break;
+            }
+            for &t in g.out.neighbors(v).iter().chain(g.inc.neighbors(v)) {
+                if member_set.contains(&t) && visited.insert(t) {
+                    queue.push_back(t);
+                }
+            }
+        }
+        for v in picked {
+            part.assign[v as usize] = new_id as u32;
+            moved.push((v, heavy as u32, new_id as u32));
+        }
+        moved.sort_unstable();
+    }
+    (new_id, moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::tiny;
+    use crate::graph::partition::metis_lite;
+
+    #[test]
+    fn churn_grammar_round_trips() {
+        let spec = ChurnSpec::parse(" leave@2:1 , join@4 ,LEAVE@5:0").unwrap();
+        assert_eq!(spec.events.len(), 3);
+        assert_eq!(
+            spec.events[0],
+            ChurnEvent {
+                round: 2,
+                kind: ChurnKind::Leave { client: 1 }
+            }
+        );
+        assert_eq!(
+            spec.events[1],
+            ChurnEvent {
+                round: 4,
+                kind: ChurnKind::Join
+            }
+        );
+        assert_eq!(spec.spec_string(), "leave@2:1,join@4,leave@5:0");
+        assert_eq!(ChurnSpec::parse(&spec.spec_string()).unwrap(), spec);
+        assert!(ChurnSpec::parse("").unwrap().is_empty());
+        assert!(ChurnSpec::parse("  ").unwrap().is_empty());
+        for bad in ["leave@2", "join@2:1", "nope@1", "leave@x:1", "leave@1:y", "join@", "@3"] {
+            assert!(ChurnSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn events_at_filters_by_round() {
+        let spec = ChurnSpec::parse("leave@2:1,join@2,join@5").unwrap();
+        assert_eq!(spec.events_at(2).len(), 2);
+        assert_eq!(spec.events_at(5).len(), 1);
+        assert!(spec.events_at(0).is_empty());
+    }
+
+    fn cover_ok(part: &Partition, g: &Graph, active: &[usize]) {
+        let active: HashSet<usize> = active.iter().copied().collect();
+        let sizes = part.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), g.n);
+        for (v, &p) in part.assign.iter().enumerate() {
+            assert!(
+                active.contains(&(p as usize)),
+                "vertex {v} assigned to inactive part {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn depart_moves_only_departed_vertices() {
+        let g = tiny(21);
+        let mut part = metis_lite(&g, 4, 7);
+        let before = part.assign.clone();
+        let mut mem = Membership::new(4);
+        let change = mem.record_leave(&g, &mut part, 0, 2).unwrap().clone();
+        assert_eq!(mem.active(), &[0, 1, 3]);
+        cover_ok(&part, &g, mem.active());
+        for (v, (&old, &new)) in before.iter().zip(&part.assign).enumerate() {
+            if old == 2 {
+                assert_ne!(new, 2, "vertex {v} still on departed client");
+                assert!(change.moved.contains(&(v as u32, 2, new)));
+            } else {
+                assert_eq!(old, new, "vertex {v} moved but was not owned by 2");
+            }
+        }
+    }
+
+    #[test]
+    fn join_splits_the_heaviest_partition() {
+        let g = tiny(23);
+        let mut part = metis_lite(&g, 3, 9);
+        let sizes = part.sizes();
+        let heavy = (0..3).max_by_key(|&p| sizes[p]).unwrap();
+        let mut mem = Membership::new(3);
+        let change = mem.record_join(&g, &mut part, 1).unwrap().clone();
+        assert_eq!(change.kind, MembershipKind::Joined(3));
+        assert_eq!(part.k, 4);
+        assert_eq!(mem.active(), &[0, 1, 2, 3]);
+        cover_ok(&part, &g, mem.active());
+        assert_eq!(change.moved.len(), sizes[heavy] / 2);
+        for &(_, from, to) in &change.moved {
+            assert_eq!(from as usize, heavy);
+            assert_eq!(to, 3);
+        }
+    }
+
+    #[test]
+    fn apply_and_revert_round_trip() {
+        let g = tiny(25);
+        let mut part = metis_lite(&g, 4, 11);
+        let original = part.assign.clone();
+        let mut mem = Membership::new(4);
+        mem.record_leave(&g, &mut part, 0, 1).unwrap();
+        mem.record_join(&g, &mut part, 2).unwrap();
+        assert_eq!(mem.ledger().len(), 2);
+
+        // replaying the ledger on a fresh partition reproduces it
+        let mut replay = Partition {
+            k: 4,
+            assign: original.clone(),
+        };
+        let mut mem2 = Membership::new(4);
+        for change in mem.ledger().to_vec() {
+            mem2.apply(&mut replay, change);
+        }
+        assert_eq!(replay.assign, part.assign);
+        assert_eq!(replay.k, part.k);
+        assert_eq!(mem2.active(), mem.active());
+
+        // reverting both changes restores the original exactly
+        mem.revert_last(&mut part).unwrap();
+        mem.revert_last(&mut part).unwrap();
+        assert!(mem.revert_last(&mut part).is_none());
+        assert_eq!(part.assign, original);
+        assert_eq!(part.k, 4);
+        assert_eq!(mem.active(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn last_client_cannot_leave() {
+        let g = tiny(27);
+        let mut part = metis_lite(&g, 2, 3);
+        let mut mem = Membership::new(2);
+        mem.record_leave(&g, &mut part, 0, 0).unwrap();
+        let err = mem.record_leave(&g, &mut part, 1, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("last active client"), "{err:#}");
+        let err = mem.record_leave(&g, &mut part, 1, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("not active"), "{err:#}");
+    }
+}

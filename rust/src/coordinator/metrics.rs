@@ -178,6 +178,10 @@ pub struct RoundMetrics {
     /// Mean phase breakdown across clients (plotted in Fig 7-style bars).
     pub mean_phases: PhaseTimes,
     pub clients: Vec<ClientRoundMetrics>,
+    /// Stable ids of the clients active this round, ascending. Under
+    /// elastic membership (DESIGN.md §14) this varies round to round;
+    /// per-client fields are keyed by these ids, never by position.
+    pub active_clients: Vec<usize>,
     /// Global test accuracy after aggregation.
     pub accuracy: f64,
     pub val_loss: f64,

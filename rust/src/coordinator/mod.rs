@@ -12,9 +12,11 @@
 //! [`RoundObserver`] seams).
 
 pub mod aggregation;
+pub mod checkpoint;
 pub mod client;
 pub mod codec;
 pub mod embedding_server;
+pub mod lifecycle;
 pub mod metrics;
 pub mod net_transport;
 pub mod netsim;
@@ -27,7 +29,15 @@ pub mod strategy;
 pub mod trainer;
 
 pub use aggregation::{fedavg, Aggregator, FedAvg, TrimmedMean, UniformAvg, Validator};
+pub use checkpoint::{
+    checkpoint_from_env, checkpoint_path, graph_fingerprint, parse_checkpoint_spec,
+    CheckpointBundle, CheckpointConfig, ClientCheckpoint, CHECKPOINT_FILE,
+};
 pub use client::{Client, EmbCache};
+pub use lifecycle::{
+    depart, join_split, ChurnEvent, ChurnKind, ChurnSpec, Membership, MembershipChange,
+    MembershipKind, RunState,
+};
 pub use embedding_server::EmbeddingServer;
 pub use metrics::{OverlapMetrics, PhaseTimes, RoundMetrics, SessionMetrics};
 pub use net_transport::{EmbServerDaemon, RemoteEmbClient, TcpEmbeddingStore};
@@ -37,8 +47,8 @@ pub use pipeline::{
     ThrottledStore, Ticket,
 };
 pub use rounds::{
-    round_policy_default, staleness_default, staleness_weight, Deadline, Quorum, RoundPlan,
-    RoundPolicy, RoundPolicySpec, StaleFold, StalenessWeighted, Synchronous,
+    round_policy_default, staleness_default, staleness_weight, Deadline, PendingSnapshot, Quorum,
+    RoundPlan, RoundPolicy, RoundPolicySpec, StaleFold, StalenessWeighted, Synchronous,
 };
 pub use session::{
     run_session, NullObserver, RoundObserver, Session, SessionBuilder, SessionConfig,

@@ -318,6 +318,21 @@ struct PendingUpdate {
     arrival: f64,
 }
 
+/// Serializable copy of one deferred late update — what a session
+/// checkpoint records so a resumed run folds exactly the same tail
+/// (`coordinator/checkpoint.rs`).
+#[derive(Clone, Debug)]
+pub struct PendingSnapshot {
+    /// The late client's model state at its round.
+    pub state: ModelState,
+    /// Aggregation weight before staleness decay.
+    pub weight: f64,
+    /// Round the update was produced in.
+    pub round: usize,
+    /// Absolute delay-clock time the update (virtually) arrives.
+    pub arrival: f64,
+}
+
 #[derive(Default)]
 struct StaleState {
     pending: Vec<PendingUpdate>,
@@ -380,6 +395,39 @@ impl StalenessWeighted {
     /// Total updates dropped over the session for exceeding `max_stale`.
     pub fn dropped_total(&self) -> usize {
         self.state.lock().unwrap().dropped_total
+    }
+
+    /// Export the deferred-update queue and cumulative drop counter for
+    /// a session checkpoint (in defer order).
+    pub fn export_pending(&self) -> (Vec<PendingSnapshot>, usize) {
+        let st = self.state.lock().unwrap();
+        let pending = st
+            .pending
+            .iter()
+            .map(|p| PendingSnapshot {
+                state: p.state.clone(),
+                weight: p.weight,
+                round: p.round,
+                arrival: p.arrival,
+            })
+            .collect();
+        (pending, st.dropped_total)
+    }
+
+    /// Replace the queue and drop counter with checkpointed state
+    /// (discards anything currently pending).
+    pub fn import_pending(&self, pending: Vec<PendingSnapshot>, dropped_total: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.pending = pending
+            .into_iter()
+            .map(|p| PendingUpdate {
+                state: p.state,
+                weight: p.weight,
+                round: p.round,
+                arrival: p.arrival,
+            })
+            .collect();
+        st.dropped_total = dropped_total;
     }
 }
 

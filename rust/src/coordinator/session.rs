@@ -10,16 +10,23 @@
 //! [`run_session`] is the one-call convenience wrapper (in-process
 //! store, FedAvg, no observer) that every bench and test drives.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
 use super::aggregation::{Aggregator, FedAvg, Validator};
+use super::checkpoint::{
+    checkpoint_from_env, graph_fingerprint, restore_snapshot, CheckpointBundle, CheckpointConfig,
+    ClientCheckpoint, MetricsCheckpoint,
+};
 use super::client::Client;
 use super::embedding_server::EmbeddingServer;
+use super::lifecycle::{ChurnEvent, ChurnKind, Membership, RunState};
 use super::metrics::{PhaseTimes, RoundMetrics, SessionMetrics};
 use super::netsim::NetConfig;
 use super::pipeline::{pipeline_default, AsyncStoreHandle};
+use super::resilience::SnapshotStore;
 use super::rounds::{
     round_policy_default, staleness_default, RoundPolicy, RoundPolicySpec, StalenessWeighted,
 };
@@ -28,9 +35,11 @@ use super::strategy::{ScoreKind, Strategy};
 use super::trainer::{self, pretrain_push};
 use crate::graph::scoring;
 use crate::graph::subgraph::{build_all_per_client, Prune};
-use crate::graph::{Graph, Partition, PartitionerKind};
+use crate::graph::{ClientSubgraph, Graph, Partition, PartitionerKind};
 use crate::runtime::{ModelState, StepEngine};
 use crate::util::Stopwatch;
+
+pub use super::lifecycle::ChurnSpec;
 
 #[derive(Clone, Debug)]
 pub struct SessionConfig {
@@ -83,6 +92,12 @@ pub struct SessionConfig {
     /// greedy pass (DESIGN.md §13.3). Default from `OPTIMES_PARTITIONER`
     /// / `run --partitioner`.
     pub partitioner: PartitionerKind,
+    /// Scripted elastic-membership schedule (DESIGN.md §14): client
+    /// joins/departures applied deterministically at round boundaries.
+    /// Empty (the default) leaves every curve bit-identical to a session
+    /// without the churn plane. Default from `OPTIMES_CHURN` / `run
+    /// --churn`.
+    pub churn: ChurnSpec,
 }
 
 impl Default for SessionConfig {
@@ -105,6 +120,7 @@ impl Default for SessionConfig {
             round_policy: round_policy_default(),
             staleness: staleness_default(),
             partitioner: PartitionerKind::from_env(),
+            churn: ChurnSpec::from_env(),
         }
     }
 }
@@ -183,6 +199,64 @@ fn merged_centrality(
     }
 }
 
+/// Per-partition prune specs for the current partition. Pure function of
+/// `(g, part, strat, seed)`, so the offline build and every post-churn
+/// plane rebuild produce identical specs for untouched partitions.
+fn compute_prunes(
+    g: &Graph,
+    part: &Partition,
+    strat: &Strategy,
+    layers: usize,
+    seed: u64,
+) -> Vec<Prune> {
+    let base_prune = match strat.retention {
+        // dynamic pruning expands un-pruned and re-samples per round
+        Some(_) if strat.dynamic_prune => Prune::None,
+        Some(i) => Prune::Retention(i),
+        None => Prune::None,
+    };
+    if let Some(sp) = strat.scored_prune {
+        // two-phase: expand un-scored first, score, then re-expand with
+        // the per-client top-f% (offline pre-training work, §4.1.2)
+        let probe = build_all_per_client(g, part, &vec![base_prune.clone(); part.k], seed);
+        let merged = merged_centrality(sp.score, g, part, seed);
+        probe
+            .iter()
+            .map(|sub| {
+                let scores = client_scores(sp.score, sub, layers, &merged, seed);
+                let map: std::collections::HashMap<u32, f32> = sub
+                    .remote
+                    .iter()
+                    .zip(&scores)
+                    .map(|(gid, s)| (*gid, *s))
+                    .collect();
+                Prune::TopFrac {
+                    frac: sp.top_frac,
+                    scores: map,
+                }
+            })
+            .collect()
+    } else {
+        vec![base_prune; part.k]
+    }
+}
+
+/// Structural equality of two client subgraphs, deciding whether a
+/// surviving client's plane can be reused across a membership change.
+/// `ignore_in_remote` is set under dynamic pruning, where the retained
+/// in-neighbour subsets are re-sampled every round anyway (the full
+/// candidate lists are a pure function of `local`/`remote`).
+fn same_sub(a: &ClientSubgraph, b: &ClientSubgraph, ignore_in_remote: bool) -> bool {
+    a.client_id == b.client_id
+        && a.local == b.local
+        && a.remote == b.remote
+        && a.train_local == b.train_local
+        && a.in_local == b.in_local
+        && (ignore_in_remote || a.in_remote == b.in_remote)
+        && a.push_nodes == b.push_nodes
+        && a.pull_candidates == b.pull_candidates
+}
+
 /// Configures the pluggable seams of a federated session and runs its
 /// offline phases. Defaults: fresh in-process slab store, [`FedAvg`],
 /// no observer.
@@ -191,6 +265,13 @@ pub struct SessionBuilder {
     store: Option<Arc<dyn EmbeddingStore>>,
     aggregator: Arc<dyn Aggregator>,
     observer: Box<dyn RoundObserver>,
+    /// Checkpoint every N completed rounds into this directory
+    /// (DESIGN.md §14). Default from `OPTIMES_CHECKPOINT` (`DIR` or
+    /// `DIR:EVERY`).
+    checkpoint: Option<(PathBuf, usize)>,
+    /// Resume from the bundle in this directory instead of starting at
+    /// round 0.
+    resume_from: Option<PathBuf>,
 }
 
 impl SessionBuilder {
@@ -200,7 +281,25 @@ impl SessionBuilder {
             store: None,
             aggregator: Arc::new(FedAvg),
             observer: Box::new(NullObserver),
+            checkpoint: checkpoint_from_env(),
+            resume_from: None,
         }
+    }
+
+    /// Checkpoint the whole session into `dir` every `every` completed
+    /// rounds (and at the final round). `every == 0` means every round.
+    pub fn checkpoints(mut self, dir: impl Into<PathBuf>, every: usize) -> Self {
+        self.checkpoint = Some((dir.into(), every.max(1)));
+        self
+    }
+
+    /// Resume from the checkpoint bundle in `dir`. The builder's config
+    /// must describe the same session (dataset, strategy, seed, policy,
+    /// partitioner, client count, graph) — every mismatch is a loud
+    /// build error, never a silent partial resume.
+    pub fn resume(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.resume_from = Some(dir.into());
+        self
     }
 
     /// Use an explicit embedding-plane backend (TCP client, sharded
@@ -230,7 +329,14 @@ impl SessionBuilder {
             store,
             aggregator,
             mut observer,
+            checkpoint,
+            resume_from,
         } = self;
+        let bundle = match &resume_from {
+            Some(dir) => Some(CheckpointBundle::load(dir)?),
+            None => None,
+        };
+        let graph_fp = graph_fingerprint(g);
         // Round-policy seam (DESIGN.md §12): non-sync policies get the
         // staleness decorator so late clients fold into later
         // aggregations. Sync keeps the bare aggregator — bit-parity with
@@ -245,45 +351,97 @@ impl SessionBuilder {
         let geom = *engine.geom();
         let strat = &cfg.strategy;
 
+        // Resume identity gate: every divergence between the bundle and
+        // this builder's world is a loud error *before* any state is
+        // applied — never a silent partial resume (DESIGN.md §14).
+        if let Some(b) = &bundle {
+            let c = &b.config;
+            ensure!(
+                c.graph_fingerprint == graph_fp,
+                "checkpoint graph fingerprint {:#018x} does not match this graph's {:#018x} — \
+                 resume against the same dataset (and scale) the checkpoint was written from",
+                c.graph_fingerprint,
+                graph_fp
+            );
+            for (what, ckpt, ours) in [
+                ("dataset", c.dataset.as_str(), cfg.dataset.as_str()),
+                ("strategy", c.strategy.as_str(), strat.name.as_str()),
+                ("round policy", c.policy.as_str(), &cfg.round_policy.name()),
+                ("partitioner", c.partitioner.as_str(), cfg.partitioner.name()),
+                ("model", c.model.as_str(), geom.model.as_str()),
+                ("churn schedule", c.churn.as_str(), &cfg.churn.spec_string()),
+            ] {
+                ensure!(
+                    ckpt == ours,
+                    "checkpoint was written with {what} \"{ckpt}\" but this session uses \
+                     \"{ours}\""
+                );
+            }
+            ensure!(
+                c.seed == cfg.seed,
+                "checkpoint was written with seed {} but this session uses {}",
+                c.seed,
+                cfg.seed
+            );
+            ensure!(
+                c.clients == cfg.clients,
+                "checkpoint started from {} clients but this session is configured for {}",
+                c.clients,
+                cfg.clients
+            );
+            ensure!(
+                c.staleness == cfg.staleness,
+                "checkpoint was written with staleness window {} but this session uses {}",
+                c.staleness,
+                cfg.staleness
+            );
+            ensure!(
+                c.fanout == geom.fanout,
+                "checkpoint was written with fanout {} but this engine samples {}",
+                c.fanout,
+                geom.fanout
+            );
+            for (what, ckpt, ours) in [
+                ("epochs", c.epochs, cfg.epochs),
+                ("epoch batches", c.epoch_batches, cfg.epoch_batches),
+                ("eval batches", c.eval_batches, cfg.eval_batches),
+            ] {
+                ensure!(
+                    ckpt == ours,
+                    "checkpoint was written with {what} {ckpt} but this session uses {ours}"
+                );
+            }
+            ensure!(
+                c.lr.to_bits() == cfg.lr.to_bits(),
+                "checkpoint was written with lr {} but this session uses {}",
+                c.lr,
+                cfg.lr
+            );
+        }
+
         // ---- partition -----------------------------------------------------
         observer.on_phase(SessionPhase::Partition);
-        let part = cfg.partitioner.partition(g, cfg.clients, cfg.seed);
+        let mut part = cfg.partitioner.partition(g, cfg.clients, cfg.seed);
+        let mut membership = Membership::new(cfg.clients);
+        if let Some(b) = &bundle {
+            // replay the churn ledger verbatim onto the fresh round-0
+            // partition: the resumed membership + assignment match the
+            // killed session exactly, without recomputing any heuristic
+            for change in b.ledger.iter().cloned() {
+                membership.apply(&mut part, change);
+            }
+        }
 
         // ---- subgraph expansion + pruning + scoring ------------------------
         observer.on_phase(SessionPhase::PruneScore);
-        let base_prune = match strat.retention {
-            // dynamic pruning expands un-pruned and re-samples per round
-            Some(_) if strat.dynamic_prune => Prune::None,
-            Some(i) => Prune::Retention(i),
-            None => Prune::None,
-        };
-        let prunes: Vec<Prune> = if let Some(sp) = strat.scored_prune {
-            // two-phase: expand un-scored first, score, then re-expand with
-            // the per-client top-f% (offline pre-training work, §4.1.2)
-            let probe = build_all_per_client(g, &part, &vec![base_prune.clone(); part.k], cfg.seed);
-            let merged = merged_centrality(sp.score, g, &part, cfg.seed);
-            probe
-                .iter()
-                .map(|sub| {
-                    let scores = client_scores(sp.score, sub, geom.layers, &merged, cfg.seed);
-                    let map: std::collections::HashMap<u32, f32> = sub
-                        .remote
-                        .iter()
-                        .zip(&scores)
-                        .map(|(gid, s)| (*gid, *s))
-                        .collect();
-                    Prune::TopFrac {
-                        frac: sp.top_frac,
-                        scores: map,
-                    }
-                })
-                .collect()
-        } else {
-            vec![base_prune; part.k]
-        };
+        let prunes = compute_prunes(g, &part, strat, geom.layers, cfg.seed);
         let subs = build_all_per_client(g, &part, &prunes, cfg.seed);
-        let pull_candidates: usize = subs.iter().map(|s| s.pull_candidates).sum();
-        let retained_remotes: usize = subs.iter().map(|s| s.n_remote()).sum();
+        let active_subs: Vec<ClientSubgraph> = subs
+            .into_iter()
+            .filter(|s| membership.is_active(s.client_id))
+            .collect();
+        let pull_candidates: usize = active_subs.iter().map(|s| s.pull_candidates).sum();
+        let retained_remotes: usize = active_subs.iter().map(|s| s.n_remote()).sum();
 
         // ---- infrastructure ------------------------------------------------
         let store: Arc<dyn EmbeddingStore> = store.unwrap_or_else(|| {
@@ -298,10 +456,33 @@ impl SessionBuilder {
             geom.layers - 1,
             geom.hidden
         );
+        if let Some(b) = &bundle {
+            ensure!(
+                b.config.codec == store.codec(),
+                "checkpoint was written through wire codec \"{}\" but this session's store \
+                 speaks \"{}\" — a mismatched codec would silently diverge",
+                b.config.codec,
+                store.codec()
+            );
+        }
+        // Checkpointing rides on the snapshot decorator (DESIGN.md §10):
+        // it mirrors pushes, so a bundle can dump the live embedding
+        // plane; on resume the dump replays *through* the plane's own
+        // codec, re-quantizing identically to the original pushes.
+        let (store, snapshot): (Arc<dyn EmbeddingStore>, Option<Arc<SnapshotStore>>) =
+            if checkpoint.is_some() || bundle.is_some() {
+                let snap = match &bundle {
+                    Some(b) => Arc::new(restore_snapshot(&b.snapshot, store)?),
+                    None => Arc::new(SnapshotStore::new(store)),
+                };
+                (Arc::clone(&snap) as Arc<dyn EmbeddingStore>, Some(snap))
+            } else {
+                (store, None)
+            };
         let validator = Validator::new(g, &engine, cfg.eval_batches, cfg.seed ^ 0xEA);
-        let global = ModelState::init(&geom, cfg.seed).params;
+        let mut global = ModelState::init(&geom, cfg.seed).params;
 
-        let mut clients: Vec<Client> = subs
+        let mut clients: Vec<Client> = active_subs
             .into_iter()
             .map(|sub| {
                 let mut c = Client::new(sub, &engine, cfg.epoch_batches, cfg.seed);
@@ -322,7 +503,7 @@ impl SessionBuilder {
             }
         }
 
-        let metrics = SessionMetrics {
+        let mut metrics = SessionMetrics {
             strategy: strat.name.clone(),
             dataset: cfg.dataset.clone(),
             n_clients: cfg.clients,
@@ -334,6 +515,63 @@ impl SessionBuilder {
             round_policy: cfg.round_policy.name(),
             ..Default::default()
         };
+
+        // ---- resume: overwrite every resumable piece from the bundle -------
+        let mut delay_clock = 0.0;
+        let mut pretrained = false;
+        if let Some(b) = bundle {
+            ensure!(
+                b.pending.is_empty() || stale.is_some(),
+                "checkpoint holds {} pending stale updates but round policy \"{}\" has no \
+                 staleness plane",
+                b.pending.len(),
+                cfg.round_policy.name()
+            );
+            ensure!(
+                b.clients.len() == clients.len(),
+                "checkpoint holds {} active clients but the replayed membership has {}",
+                b.clients.len(),
+                clients.len()
+            );
+            ensure!(
+                global.iter().map(Vec::len).eq(b.global.iter().map(Vec::len)),
+                "checkpoint global model shape does not match the engine geometry"
+            );
+            global = b.global;
+            for ck in b.clients {
+                let c = clients
+                    .iter_mut()
+                    .find(|c| c.id == ck.id)
+                    .with_context(|| {
+                        format!("checkpoint client {} is not active in the replayed membership", ck.id)
+                    })?;
+                ensure!(
+                    c.state.params.iter().map(Vec::len).eq(ck.state.params.iter().map(Vec::len)),
+                    "checkpoint client {} model shape does not match the engine geometry",
+                    ck.id
+                );
+                ensure!(
+                    c.train_order.len() == ck.train_order.len(),
+                    "checkpoint client {} has {} training vertices but the rebuilt plane has {}",
+                    ck.id,
+                    ck.train_order.len(),
+                    c.train_order.len()
+                );
+                c.rng = crate::util::rng::Rng::from_state(ck.rng);
+                c.sampler.set_rng_state(ck.sampler_rng);
+                c.train_cursor = ck.train_cursor;
+                c.train_order = ck.train_order;
+                c.scores = ck.scores;
+                c.prefetch_rows = ck.prefetch_rows;
+                c.state = ck.state;
+            }
+            if let Some(sw) = &stale {
+                sw.import_pending(b.pending, b.dropped_total);
+            }
+            b.metrics.apply(&mut metrics);
+            delay_clock = b.delay_clock;
+            pretrained = b.pretrained;
+        }
 
         // the async pipeline layer over the chosen backend (DESIGN.md §9);
         // workers sized so every parallel client can keep one push in
@@ -349,6 +587,11 @@ impl SessionBuilder {
             None
         };
 
+        let run_state = if pretrained {
+            RunState::Rounds
+        } else {
+            RunState::Warmup
+        };
         Ok(Session {
             g,
             cfg,
@@ -358,13 +601,19 @@ impl SessionBuilder {
             aggregator,
             policy,
             stale,
-            delay_clock: 0.0,
+            delay_clock,
             observer,
             validator,
+            part,
+            membership,
+            run_state,
+            snapshot,
+            checkpoint,
+            graph_fp,
             clients,
             global,
             metrics,
-            pretrained: false,
+            pretrained,
         })
     }
 }
@@ -393,6 +642,21 @@ pub struct Session<'g> {
     delay_clock: f64,
     observer: Box<dyn RoundObserver>,
     validator: Validator,
+    /// Current vertex→partition assignment; mutated incrementally by the
+    /// membership ledger (DESIGN.md §14), never re-partitioned wholesale.
+    part: Partition,
+    /// Active-client ledger: joins/departures recorded at round
+    /// boundaries, replayable for checkpoint resume.
+    membership: Membership,
+    /// Explicit run-state machine: warmup → rounds → cooldown.
+    run_state: RunState,
+    /// The snapshot decorator wrapped around `store` when checkpointing
+    /// (or resuming); `None` means neither was requested.
+    snapshot: Option<Arc<SnapshotStore>>,
+    /// Checkpoint directory + cadence in completed rounds.
+    checkpoint: Option<(PathBuf, usize)>,
+    /// Structural fingerprint of `g`, stamped into every bundle.
+    graph_fp: u64,
     clients: Vec<Client>,
     global: Vec<Vec<f32>>,
     metrics: SessionMetrics,
@@ -415,7 +679,29 @@ impl Session<'_> {
                 pretrain_push(c, self.g, &self.engine, store_ref).context("pretrain push")?;
             }
         }
+        self.run_state = RunState::Rounds;
         Ok(())
+    }
+
+    /// Where the session is in its lifecycle (warmup → rounds →
+    /// cooldown).
+    pub fn run_state(&self) -> RunState {
+        self.run_state
+    }
+
+    /// The membership ledger (active set + recorded churn history).
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    /// Current vertex→partition assignment.
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    /// Stable ids of the currently active clients, ascending.
+    pub fn active_clients(&self) -> Vec<usize> {
+        self.clients.iter().map(|c| c.id).collect()
     }
 
     /// Rounds completed so far.
@@ -444,12 +730,18 @@ impl Session<'_> {
             self.observer.on_phase(SessionPhase::Rounds);
         }
 
+        // scripted membership changes land at this round boundary, before
+        // any of the round's randomness is drawn (DESIGN.md §14)
+        self.apply_churn(round)?;
+
         // injected per-client report delays → the round policy's plan.
-        // Delays are deterministic per (client, round) and the policy is a
-        // pure function of them, so membership (and hence the accuracy
-        // curve) is bit-reproducible (DESIGN.md §12).
+        // Delays are deterministic per (stable client id, round) — keyed
+        // by id, not position, so surviving clients keep their delay
+        // streams across churn — and the policy is a pure function of
+        // them, so membership (and hence the accuracy curve) is
+        // bit-reproducible (DESIGN.md §12).
         let delays: Vec<f64> = match self.cfg.net.client_latency {
-            Some(l) => (0..self.clients.len()).map(|c| l.sample(c, round)).collect(),
+            Some(l) => self.clients.iter().map(|c| l.sample(c.id, round)).collect(),
             None => vec![0.0; self.clients.len()],
         };
         let plan = self.policy.plan(&delays);
@@ -581,6 +873,7 @@ impl Session<'_> {
             round,
             accuracy: acc,
             val_loss,
+            active_clients: self.clients.iter().map(|c| c.id).collect(),
             ..Default::default()
         };
         let mut worst = 0f64;
@@ -644,7 +937,173 @@ impl Session<'_> {
         self.metrics.store_epoch = st.epoch;
         self.observer.on_round(&rm);
         self.metrics.rounds.push(rm);
+
+        // whole-session checkpoint at the round boundary (DESIGN.md §14):
+        // every push is joined and the in-flight prefetch is
+        // value-transparent, so the bundle captures the complete state
+        if let Some((dir, every)) = self.checkpoint.clone() {
+            let done = self.metrics.rounds.len();
+            if done % every == 0 || done == self.cfg.rounds {
+                self.write_checkpoint(&dir)
+                    .with_context(|| format!("checkpoint after round {}", done - 1))?;
+            }
+        }
         Ok(self.metrics.rounds.last().expect("round just pushed"))
+    }
+
+    /// Apply this round boundary's scripted membership events and rebuild
+    /// the affected per-client planes. A boundary without events is a
+    /// strict no-op (zero-churn bit-parity is structural).
+    fn apply_churn(&mut self, round: usize) -> Result<()> {
+        let events: Vec<ChurnEvent> = self
+            .cfg
+            .churn
+            .events_at(round)
+            .into_iter()
+            .cloned()
+            .collect();
+        if events.is_empty() {
+            return Ok(());
+        }
+        for ev in &events {
+            match ev.kind {
+                ChurnKind::Leave { client } => {
+                    self.membership
+                        .record_leave(self.g, &mut self.part, round, client)
+                        .with_context(|| format!("churn before round {round}"))?;
+                }
+                ChurnKind::Join => {
+                    self.membership
+                        .record_join(self.g, &mut self.part, round)
+                        .with_context(|| format!("churn before round {round}"))?;
+                }
+            }
+        }
+        self.rebuild_planes()
+    }
+
+    /// Rebuild per-client planes after a membership change. Clients whose
+    /// subgraph is structurally unchanged keep everything (RNG streams,
+    /// optimizer state, caches); affected ones are rebuilt from the
+    /// updated partition, re-scored, and re-push their boundary
+    /// embeddings so nobody pulls a hole.
+    fn rebuild_planes(&mut self) -> Result<()> {
+        let geom = *self.engine.geom();
+        let strat = self.cfg.strategy.clone();
+        let prunes = compute_prunes(self.g, &self.part, &strat, geom.layers, self.cfg.seed);
+        let subs = build_all_per_client(self.g, &self.part, &prunes, self.cfg.seed);
+        let merged = strat
+            .prefetch
+            .map(|pf| merged_centrality(pf.score, self.g, &self.part, self.cfg.seed));
+        let dynamic = strat.dynamic_prune && strat.retention.is_some();
+        let mut old: std::collections::HashMap<usize, Client> =
+            std::mem::take(&mut self.clients)
+                .into_iter()
+                .map(|c| (c.id, c))
+                .collect();
+        let mut pull_candidates = 0;
+        let mut retained_remotes = 0;
+        let mut next = Vec::new();
+        for sub in subs {
+            let id = sub.client_id;
+            if !self.membership.is_active(id) {
+                continue; // departed partition: empty shell, owns nothing
+            }
+            pull_candidates += sub.pull_candidates;
+            retained_remotes += sub.n_remote();
+            let kept = old.remove(&id).filter(|c| same_sub(&c.sub, &sub, dynamic));
+            let mut c = match kept {
+                Some(c) => c,
+                None => {
+                    let mut c =
+                        Client::new(sub, &self.engine, self.cfg.epoch_batches, self.cfg.seed);
+                    c.state.params = self.global.clone();
+                    if let (true, Some(limit)) = (strat.dynamic_prune, strat.retention) {
+                        c.enable_dynamic_prune(limit);
+                    }
+                    if let (Some(pf), Some(m)) = (strat.prefetch, merged.as_ref()) {
+                        let scores = client_scores(pf.score, &c.sub, geom.layers, m, self.cfg.seed);
+                        c.set_scores(scores, Some(pf.top_frac));
+                    }
+                    if strat.share_embeddings {
+                        // re-assigned boundary vertices must be on the
+                        // server before any survivor pulls them
+                        pretrain_push(&mut c, self.g, &self.engine, self.store.as_ref())
+                            .context("post-churn pretrain push")?;
+                    }
+                    c
+                }
+            };
+            // prefetches issued before the boundary read pre-churn store
+            // state; drop them so every client re-pulls synchronously
+            c.pending_pull = None;
+            next.push(c);
+        }
+        self.clients = next;
+        self.metrics.pull_candidates = pull_candidates;
+        self.metrics.retained_remotes = retained_remotes;
+        Ok(())
+    }
+
+    /// Serialize the complete resumable state into `dir`.
+    fn write_checkpoint(&self, dir: &Path) -> Result<()> {
+        let snap = self
+            .snapshot
+            .as_ref()
+            .context("checkpointing requires the snapshot plane (set up at build)")?;
+        let mut snapshot = Vec::new();
+        snap.dump(&mut snapshot).context("dump embedding snapshot")?;
+        let (pending, dropped_total) = match &self.stale {
+            Some(sw) => sw.export_pending(),
+            None => (Vec::new(), 0),
+        };
+        let bundle = CheckpointBundle {
+            config: CheckpointConfig {
+                dataset: self.cfg.dataset.clone(),
+                strategy: self.cfg.strategy.name.clone(),
+                policy: self.cfg.round_policy.name(),
+                partitioner: self.cfg.partitioner.name().to_string(),
+                codec: self.store.codec(),
+                model: self.engine.geom().model.as_str().to_string(),
+                fanout: self.engine.geom().fanout,
+                churn: self.cfg.churn.spec_string(),
+                seed: self.cfg.seed,
+                clients: self.cfg.clients,
+                rounds: self.cfg.rounds,
+                epochs: self.cfg.epochs,
+                epoch_batches: self.cfg.epoch_batches,
+                eval_batches: self.cfg.eval_batches,
+                lr: self.cfg.lr,
+                staleness: self.cfg.staleness,
+                pipeline: self.cfg.pipeline,
+                graph_fingerprint: self.graph_fp,
+            },
+            completed_rounds: self.metrics.rounds.len(),
+            delay_clock: self.delay_clock,
+            pretrained: self.pretrained,
+            global: self.global.clone(),
+            clients: self
+                .clients
+                .iter()
+                .map(|c| ClientCheckpoint {
+                    id: c.id,
+                    rng: c.rng.state(),
+                    sampler_rng: c.sampler.rng_state(),
+                    train_cursor: c.train_cursor,
+                    train_order: c.train_order.clone(),
+                    scores: c.scores.clone(),
+                    prefetch_rows: c.prefetch_rows.clone(),
+                    state: c.state.clone(),
+                })
+                .collect(),
+            ledger: self.membership.ledger().to_vec(),
+            pending,
+            dropped_total,
+            metrics: MetricsCheckpoint::from_metrics(&self.metrics),
+            snapshot,
+        };
+        bundle.save(dir)?;
+        Ok(())
     }
 
     /// Drive every remaining phase and return the session metrics.
@@ -658,6 +1117,7 @@ impl Session<'_> {
 
     /// Stop here (even mid-session) and hand back the metrics.
     pub fn finish(mut self) -> SessionMetrics {
+        self.run_state = RunState::Cooldown;
         self.observer.on_complete(&self.metrics);
         self.metrics
     }

@@ -102,6 +102,18 @@ impl Sampler {
         }
     }
 
+    /// Raw rng state for session checkpointing. At round boundaries the
+    /// stream state is the sampler's only mutable state (`local_only` is
+    /// save/restored inside [`sample_embed_local`](Sampler::sample_embed_local)).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore a checkpointed [`rng_state`](Sampler::rng_state).
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
+    }
+
     /// Sample a training/eval batch rooted at `targets` (local indices,
     /// at most `dims.batch`; short batches are padded).
     pub fn sample_batch(&mut self, sub: &ClientSubgraph, targets: &[u32]) -> Blocks {

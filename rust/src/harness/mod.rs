@@ -41,6 +41,14 @@
 //! * `OPTIMES_PARTITIONER=metis|hash|ldg` — how the graph is split
 //!   across clients (`run --partitioner`; DESIGN.md §13.3). `ldg` is the
 //!   streaming greedy pass that also works straight off a `GraphFile`.
+//! * `OPTIMES_CHURN=leave@R:C,join@R,...` — scripted elastic membership
+//!   (`run --churn`; DESIGN.md §14): client departures/joins applied
+//!   deterministically at round boundaries. Empty (the default) is
+//!   bit-identical to a session without the churn plane.
+//! * `OPTIMES_CHECKPOINT=DIR[:EVERY]` — write a resumable whole-session
+//!   checkpoint bundle into `DIR` every `EVERY` rounds (`run
+//!   --checkpoint`; default every round). `optimes resume DIR` continues
+//!   it bit-for-bit (DESIGN.md §14).
 
 pub mod figures;
 pub mod report;
@@ -432,9 +440,17 @@ pub fn session_key(
     } else {
         format!("_g{}", backend.name())
     };
+    // a churn schedule changes the curve; the empty default keeps the
+    // historical key unchanged
+    let churn = crate::coordinator::ChurnSpec::from_env();
+    let csuffix = if churn.is_empty() {
+        String::new()
+    } else {
+        format!("_c{}", churn.spec_string().replace(':', "-").replace(',', "+"))
+    };
     format!(
         "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}\
-         {suffix}{psuffix}{lsuffix}{ksuffix}{bsuffix}",
+         {suffix}{psuffix}{lsuffix}{ksuffix}{bsuffix}{csuffix}",
         model.as_str(),
         dataset_scale(),
         engine_kind()

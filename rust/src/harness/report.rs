@@ -69,8 +69,14 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
         .iter()
         .map(|r| {
             let mut ro = JsonObj::new();
+            let active: Vec<Json> = r
+                .active_clients
+                .iter()
+                .map(|&c| Json::Num(c as f64))
+                .collect();
             ro.set("round", r.round)
                 .set("round_time", r.round_time)
+                .set("active_clients", Json::Arr(active))
                 .set("accuracy", r.accuracy)
                 .set("val_loss", r.val_loss)
                 .set("failovers", r.failovers)
@@ -87,7 +93,9 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
         })
         .collect();
     o.set("rounds", Json::Arr(rounds));
-    // flattened rpc triples [kind, rows, time]
+    // flattened rpc tuples [kind, rows, time, bytes, client]: keyed by
+    // the *stable* client id so per-client attribution survives elastic
+    // membership (a mid-run departure leaves ids sparse, never shifted)
     let mut rpcs: Vec<Json> = Vec::new();
     for r in &m.rounds {
         for c in &r.clients {
@@ -97,6 +105,7 @@ pub fn session_to_json(m: &SessionMetrics) -> Json {
                     Json::Num(rec.rows as f64),
                     Json::Num(rec.time),
                     Json::Num(rec.bytes as f64),
+                    Json::Num(c.client as f64),
                 ]));
             }
         }
@@ -143,25 +152,38 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
             stale_weight_applied: rj.at("stale_weight_applied").as_f64().unwrap_or(0.0),
             mean_phases: phases_from(rj.at("mean_phases")),
             critical: phases_from(rj.at("critical")),
+            active_clients: rj
+                .at("active_clients")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect(),
             clients: Vec::new(),
         });
     }
-    // re-attach the flattened RPC records to a synthetic client on the
-    // first round so `SessionMetrics::rpcs()` keeps working
-    let rpcs: Vec<RpcRecord> = j
-        .at("rpcs")
-        .as_arr()
-        .unwrap_or(&[])
-        .iter()
-        .filter_map(|t| {
-            Some(RpcRecord {
-                kind: kind_from(t.idx(0).as_f64()?),
-                rows: t.idx(1).as_usize()?,
-                time: t.idx(2).as_f64()?,
-                bytes: t.idx(3).as_usize().unwrap_or(0),
-            })
-        })
-        .collect();
+    // re-attach the flattened RPC records grouped by stable client id on
+    // the first round so `SessionMetrics::rpcs()` keeps working and
+    // per-client attribution survives the cache round-trip (pre-churn
+    // reports without the 5th tuple element collapse to client 0)
+    let mut by_client: std::collections::BTreeMap<usize, Vec<RpcRecord>> =
+        std::collections::BTreeMap::new();
+    for t in j.at("rpcs").as_arr().unwrap_or(&[]) {
+        let rec = (|| {
+            Some((
+                RpcRecord {
+                    kind: kind_from(t.idx(0).as_f64()?),
+                    rows: t.idx(1).as_usize()?,
+                    time: t.idx(2).as_f64()?,
+                    bytes: t.idx(3).as_usize().unwrap_or(0),
+                },
+                t.idx(4).as_usize().unwrap_or(0),
+            ))
+        })();
+        if let Some((rec, client)) = rec {
+            by_client.entry(client).or_default().push(rec);
+        }
+    }
     // re-attach the aggregate overlap stats to the same synthetic client
     // so `SessionMetrics::overlap_stats()` survives the cache round-trip
     let ovj = j.at("overlap");
@@ -177,16 +199,24 @@ pub fn session_from_json(text: &str) -> Option<SessionMetrics> {
         queue_peak: ovj.at("queue_peak").as_usize().unwrap_or(0),
         store_epoch: ovj.at("store_epoch").as_usize().unwrap_or(0) as u64,
     };
-    if !rpcs.is_empty() || overlap.pipelined {
+    if !by_client.is_empty() || overlap.pipelined {
         if m.rounds.is_empty() {
             m.rounds.push(RoundMetrics::default());
         }
-        m.rounds[0].clients.push(ClientRoundMetrics {
-            client: 0,
-            rpcs,
-            overlap,
-            ..Default::default()
-        });
+        if by_client.is_empty() {
+            by_client.insert(0, Vec::new());
+        }
+        // the aggregate overlap rides on the first synthetic entry only,
+        // so summing across clients stays correct
+        let mut overlap = Some(overlap);
+        for (client, rpcs) in by_client {
+            m.rounds[0].clients.push(ClientRoundMetrics {
+                client,
+                rpcs,
+                overlap: overlap.take().unwrap_or_default(),
+                ..Default::default()
+            });
+        }
     }
     Some(m)
 }
@@ -287,5 +317,65 @@ mod tests {
         assert_eq!(back.total_stale_folded(), 3);
         assert!((back.total_stale_weight() - 1.5).abs() < 1e-9);
         assert!((back.total_quorum_wait() - 0.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_survives_mid_run_departure() {
+        // elastic membership: client 2 leaves after round 0, a new
+        // client 4 joins for round 2 — per-client fields stay keyed by
+        // stable id, never by position (DESIGN.md §14)
+        let mut m = SessionMetrics {
+            strategy: "E".into(),
+            dataset: "tiny".into(),
+            n_clients: 4,
+            ..Default::default()
+        };
+        let rosters: [&[usize]; 3] = [&[0, 1, 2, 3], &[0, 1, 3], &[0, 1, 3, 4]];
+        for (i, roster) in rosters.iter().enumerate() {
+            let mut r = RoundMetrics {
+                round: i,
+                accuracy: 0.4 + 0.1 * i as f64,
+                active_clients: roster.to_vec(),
+                ..Default::default()
+            };
+            for &id in roster.iter() {
+                r.clients.push(ClientRoundMetrics {
+                    client: id,
+                    rpcs: vec![RpcRecord {
+                        kind: RpcKind::Pull,
+                        rows: 10 + id,
+                        bytes: 40,
+                        time: 0.01,
+                    }],
+                    ..Default::default()
+                });
+            }
+            m.rounds.push(r);
+        }
+        let text = session_to_json(&m).to_string_pretty();
+        let back = session_from_json(&text).unwrap();
+        assert_eq!(back.rounds.len(), 3);
+        assert_eq!(back.rounds[0].active_clients, vec![0, 1, 2, 3]);
+        assert_eq!(back.rounds[1].active_clients, vec![0, 1, 3]);
+        assert_eq!(back.rounds[2].active_clients, vec![0, 1, 3, 4]);
+        // all 11 rpc records survive, grouped by stable client id
+        assert_eq!(back.rpcs(RpcKind::Pull).len(), 11);
+        let groups = &back.rounds[0].clients;
+        let ids: Vec<usize> = groups.iter().map(|c| c.client).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        // client 2 appears in exactly one round; client 0 in all three
+        let count =
+            |id: usize| groups.iter().find(|c| c.client == id).unwrap().rpcs.len();
+        assert_eq!(count(2), 1);
+        assert_eq!(count(0), 3);
+        assert_eq!(count(4), 1);
+        // rows carry the id stamp through the round-trip
+        assert!(groups
+            .iter()
+            .find(|c| c.client == 4)
+            .unwrap()
+            .rpcs
+            .iter()
+            .all(|r| r.rows == 14));
     }
 }

@@ -9,7 +9,9 @@
 //!               [--pipeline on|off] [--agg fedavg|uniform|trimmed[:k]]
 //!               [--graph FILE] [--graph-backend ram|mmap]
 //!               [--partitioner metis|hash|ldg]
+//!               [--churn \"leave@4:2,join@9\"] [--checkpoint DIR [--checkpoint-every N]]
 //!               [--scale N] [--seed S] [--report out.json]
+//! optimes resume DIR [--rounds R]          # continue a checkpointed session
 //! optimes build-graph --out FILE [--dataset D] [--n N] [--seed S]
 //! optimes sweep --dataset reddit-s --strategies D,E,OP,OPP,OPG
 //! optimes fig   <table1|2a|2b|6|7|8|9|10|11|12|13|14|all>
@@ -110,9 +112,29 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         optimes::graph::PartitionerKind::parse(p)?;
         std::env::set_var("OPTIMES_PARTITIONER", p);
     }
+    if let Some(c) = args.get("churn") {
+        // validate up front so a typo fails before any training work
+        optimes::coordinator::ChurnSpec::parse(c)?;
+        std::env::set_var("OPTIMES_CHURN", c);
+    }
+    if let Some(dir) = args.get("checkpoint") {
+        let spec = match args.get("checkpoint-every") {
+            Some(n) => {
+                let _: usize = n.parse().map_err(|_| {
+                    anyhow::anyhow!("--checkpoint-every expects an integer, got {n:?}")
+                })?;
+                format!("{dir}:{n}")
+            }
+            None => dir.to_string(),
+        };
+        std::env::set_var("OPTIMES_CHECKPOINT", spec);
+    } else if args.get("checkpoint-every").is_some() && cmd != "resume" {
+        bail!("--checkpoint-every needs --checkpoint DIR");
+    }
     match cmd {
         "info" => info(args),
         "run" => run(args),
+        "resume" => resume(args),
         "build-graph" => build_graph(args),
         "sweep" => sweep(args),
         "fig" => {
@@ -158,6 +180,14 @@ commands:
          [--graph-backend ram|mmap]            serve graph arrays from heap or
                                                mapped pages (default ram)
          [--partitioner metis|hash|ldg]        client split algorithm (default metis)
+         [--churn SPEC]                        scripted elastic membership,
+                                               e.g. \"leave@4:2,join@9\"
+         [--checkpoint DIR]                    write a resumable checkpoint bundle
+         [--checkpoint-every N]                checkpoint cadence in rounds (default 1)
+  resume DIR [--rounds R] [--sequential] [--pipeline on|off] [--report FILE]
+         [--engine ref|pjrt] [--scale N] [--checkpoint-every N]
+         continue a checkpointed session; with identical flags the resumed
+         accuracy curve is bit-for-bit the uninterrupted one
   build-graph --out FILE [--dataset D] [--n N] [--seed S] [--avg-degree A]
          [--scale N]        stream a synthetic graph to an on-disk GraphFile
                             without materializing it in RAM
@@ -210,6 +240,17 @@ fn info(args: &Args) -> Result<()> {
         "partitioner: {} (OPTIMES_PARTITIONER; metis|hash|ldg)",
         optimes::graph::PartitionerKind::from_env().name()
     );
+    let churn = optimes::coordinator::ChurnSpec::from_env();
+    if !churn.is_empty() {
+        println!("churn schedule: {} (OPTIMES_CHURN)", churn.spec_string());
+    }
+    if let Some((dir, every)) = optimes::coordinator::checkpoint_from_env() {
+        println!(
+            "checkpointing: every {} round(s) into {} (OPTIMES_CHECKPOINT; DIR[:EVERY])",
+            every,
+            dir.display()
+        );
+    }
     println!("dataset scale: 1/{}", harness::dataset_scale());
     if let Some(path) = args.get("graph") {
         let gi = optimes::storage::format::read_info(std::path::Path::new(path))?;
@@ -428,6 +469,99 @@ fn run(args: &Args) -> Result<()> {
         .store(store)
         .aggregator(aggregator)
         .observer(Box::new(CliRoundPrinter { total }))
+        .build(&g, Arc::clone(&engine))?
+        .run()?;
+    session_summary(&m);
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, optimes::harness::report::session_to_json(&m).to_string_pretty())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+/// Continue a killed session from its checkpoint directory. The bundle
+/// carries the full session identity (dataset, strategy, seed, churn
+/// schedule, hyperparameters), so only the directory is required; with
+/// the same engine/scale env the resumed accuracy curve is bit-for-bit
+/// the curve the uninterrupted run would have produced.
+fn resume(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("dir").map(str::to_string))
+        .ok_or_else(|| {
+            anyhow::anyhow!("resume needs a checkpoint directory: optimes resume DIR [--rounds R]")
+        })?;
+    let dir = std::path::PathBuf::from(dir);
+    let bundle = optimes::coordinator::CheckpointBundle::load(&dir)?;
+    let c = bundle.config.clone();
+    println!(
+        "resuming {} / {} from {} ({} of {} round(s) done, seed {}, {} client(s))",
+        c.dataset,
+        c.strategy,
+        dir.display(),
+        bundle.completed_rounds,
+        c.rounds,
+        c.seed,
+        c.clients
+    );
+    let model = ModelKind::parse(&c.model)?;
+    // the dataset field is either a preset name or a GraphFile path,
+    // mirroring `run --graph`; the bundle's graph fingerprint catches a
+    // stale path or a wrong --scale loudly at build time
+    let g = match datasets::preset(&c.dataset) {
+        Some(_) => harness::load_dataset(&c.dataset)?.1,
+        None => {
+            let p = std::path::Path::new(&c.dataset);
+            anyhow::ensure!(
+                p.exists(),
+                "checkpoint dataset {:?} is neither a preset nor a graph file",
+                c.dataset
+            );
+            optimes::storage::GraphStore::open(p, optimes::storage::GraphBackend::from_env())?
+        }
+    };
+    let engine = harness::make_engine(model, c.fanout)?;
+    let rounds = args.usize_or("rounds", c.rounds);
+    anyhow::ensure!(
+        rounds > bundle.completed_rounds,
+        "checkpoint already has {} completed round(s) — pass --rounds R with R > {}",
+        bundle.completed_rounds,
+        bundle.completed_rounds
+    );
+    let mut cfg = SessionConfig {
+        dataset: c.dataset.clone(),
+        clients: c.clients,
+        strategy: Strategy::parse(&c.strategy)?,
+        rounds,
+        epochs: c.epochs,
+        lr: c.lr,
+        epoch_batches: c.epoch_batches,
+        eval_batches: c.eval_batches,
+        seed: c.seed,
+        parallel_clients: !args.flag("sequential"),
+        round_policy: RoundPolicySpec::parse(&c.policy)?,
+        staleness: c.staleness,
+        partitioner: optimes::graph::PartitionerKind::parse(&c.partitioner)?,
+        churn: optimes::coordinator::ChurnSpec::parse(&c.churn)?,
+        ..Default::default()
+    };
+    if args.get("pipeline").is_none() {
+        // pipeline state is boundary-transparent (not resume identity),
+        // but default to what the checkpointed run used
+        cfg.pipeline = c.pipeline;
+    }
+    let aggregator = aggregation::parse_aggregator(args.str_or("agg", "fedavg"))?;
+    let store = harness::make_store(engine.geom(), cfg.net)?;
+    let total = cfg.rounds;
+    let every = args.usize_or("checkpoint-every", 1).max(1);
+    let m = SessionBuilder::new(cfg)
+        .store(store)
+        .aggregator(aggregator)
+        .observer(Box::new(CliRoundPrinter { total }))
+        .resume(&dir)
+        .checkpoints(&dir, every) // keep the bundle current as we go
         .build(&g, Arc::clone(&engine))?
         .run()?;
     session_summary(&m);

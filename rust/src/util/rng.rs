@@ -47,6 +47,22 @@ impl Rng {
         Self { s }
     }
 
+    /// Raw generator state, for whole-session checkpointing
+    /// (`coordinator/checkpoint.rs`).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from checkpointed [`state`](Rng::state). The
+    /// all-zero guard is re-applied so a hand-built zero state cannot
+    /// wedge the generator.
+    pub fn from_state(mut s: [u64; 4]) -> Self {
+        if s.iter().all(|&x| x == 0) {
+            s[0] = 1;
+        }
+        Self { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]

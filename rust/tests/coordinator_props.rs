@@ -17,13 +17,17 @@
 //!   its `(max − min)/510` per-row bound, `TopK` preserves exactly the
 //!   K largest magnitudes, and a delta plane replayed through faults
 //!   and rebalances converges to the same rows as full raw pushes
-//!   (DESIGN.md §11).
+//!   (DESIGN.md §11);
+//! * membership — incremental re-partition on churn preserves the
+//!   disjoint-total-cover invariant and moves only the departed (or
+//!   split) partition's vertices, and the ledger's apply/revert replay
+//!   round-trips the partition bit-for-bit (DESIGN.md §14).
 
 use std::sync::Arc;
 
 use optimes::coordinator::{
-    staleness_weight, Deadline, EmbCache, EmbeddingServer, EmbeddingStore, FaultStore, NetConfig,
-    Quorum, RoundPolicy, ShardMap, ShardedStore, Synchronous,
+    staleness_weight, Deadline, EmbCache, EmbeddingServer, EmbeddingStore, FaultStore, Membership,
+    NetConfig, Quorum, RoundPolicy, ShardMap, ShardedStore, Synchronous,
 };
 use optimes::wire::{CodecKind, DeltaStore};
 use optimes::graph::generate::{generate, GenParams};
@@ -693,6 +697,160 @@ fn prop_staleness_weights_decay_monotonically() {
             for pair in weights.windows(2) {
                 prop_assert!(pair[1] <= pair[0], "weights not monotone non-increasing");
             }
+            Ok(())
+        },
+    );
+}
+
+/// Disjoint-total-cover: every vertex is assigned to exactly one
+/// partition, and that partition belongs to an active client.
+fn assert_cover(part: &optimes::graph::Partition, n: usize, active: &[usize]) -> Result<(), String> {
+    prop_assert_eq!(part.assign.len(), n);
+    prop_assert_eq!(part.sizes().iter().sum::<usize>(), n);
+    for (v, &p) in part.assign.iter().enumerate() {
+        prop_assert!(
+            active.contains(&(p as usize)),
+            "vertex {v} assigned to inactive partition {p}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_depart_moves_only_the_departed_partition() {
+    check(
+        "depart-moves-only-departed",
+        20,
+        |g| {
+            let graph = random_graph(g);
+            let k = 2 + g.int(0, 4);
+            let seed = g.int(0, 9999) as u64;
+            let victim = g.int(0, k - 1);
+            (graph, k, seed, victim)
+        },
+        |(graph, k, seed, victim)| {
+            let mut part = metis_lite(graph, *k, *seed);
+            let before = part.assign.clone();
+            let mut mem = Membership::new(*k);
+            let change = mem
+                .record_leave(graph, &mut part, 0, *victim)
+                .map_err(|e| format!("{e:#}"))?
+                .clone();
+            assert_cover(&part, graph.n, mem.active())?;
+            prop_assert!(!mem.is_active(*victim), "departed client still active");
+            for (v, (&old, &new)) in before.iter().zip(&part.assign).enumerate() {
+                if old as usize == *victim {
+                    prop_assert!(new as usize != *victim, "vertex {v} left behind");
+                    prop_assert!(
+                        change.moved.contains(&(v as u32, old, new)),
+                        "move of vertex {v} not in the ledger"
+                    );
+                } else {
+                    prop_assert!(old == new, "untouched vertex {v} moved ({old} -> {new})");
+                }
+            }
+            prop_assert_eq!(
+                change.moved.len(),
+                before.iter().filter(|&&p| p as usize == *victim).count()
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_join_splits_only_the_heaviest_partition() {
+    check(
+        "join-splits-only-heaviest",
+        20,
+        |g| {
+            let graph = random_graph(g);
+            let k = 2 + g.int(0, 4);
+            let seed = g.int(0, 9999) as u64;
+            (graph, k, seed)
+        },
+        |(graph, k, seed)| {
+            let mut part = metis_lite(graph, *k, *seed);
+            let before = part.assign.clone();
+            let sizes = part.sizes();
+            // first-maximal partition — join_split's own tie-break
+            let mut heavy = 0usize;
+            for p in 1..*k {
+                if sizes[p] > sizes[heavy] {
+                    heavy = p;
+                }
+            }
+            let mut mem = Membership::new(*k);
+            let change = mem
+                .record_join(graph, &mut part, 0)
+                .map_err(|e| format!("{e:#}"))?
+                .clone();
+            prop_assert_eq!(change.client(), *k);
+            prop_assert_eq!(part.k, *k + 1);
+            assert_cover(&part, graph.n, mem.active())?;
+            // exactly half the heaviest partition moved, nothing else
+            prop_assert_eq!(change.moved.len(), sizes[heavy] / 2);
+            for &(v, from, to) in &change.moved {
+                prop_assert_eq!(from as usize, heavy);
+                prop_assert_eq!(to as usize, *k);
+                prop_assert_eq!(before[v as usize], from);
+            }
+            for (v, (&old, &new)) in before.iter().zip(&part.assign).enumerate() {
+                if old != new {
+                    prop_assert!(
+                        change.moved.contains(&(v as u32, old, new)),
+                        "vertex {v} moved outside the ledger"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ledger_apply_and_revert_round_trip() {
+    check(
+        "ledger-apply-revert",
+        15,
+        |g| {
+            let graph = random_graph(g);
+            let k = 2 + g.int(0, 3);
+            let seed = g.int(0, 9999) as u64;
+            let script: Vec<u32> = (0..3 + g.int(0, 3)).map(|_| g.int(0, 999) as u32).collect();
+            (graph, k, seed, script)
+        },
+        |(graph, k, seed, script)| {
+            let mut part = metis_lite(graph, *k, *seed);
+            let original = part.assign.clone();
+            let mut mem = Membership::new(*k);
+            // random join/leave walk that never strands the session
+            for (round, &pick) in script.iter().enumerate() {
+                if pick % 2 == 0 || mem.active().len() < 2 {
+                    mem.record_join(graph, &mut part, round).map_err(|e| format!("{e:#}"))?;
+                } else {
+                    let victim = mem.active()[pick as usize % mem.active().len()];
+                    mem.record_leave(graph, &mut part, round, victim)
+                        .map_err(|e| format!("{e:#}"))?;
+                }
+            }
+            assert_cover(&part, graph.n, mem.active())?;
+
+            // replaying the ledger on a fresh copy reproduces the state
+            let mut replay = optimes::graph::Partition { k: *k, assign: original.clone() };
+            let mut mem2 = Membership::new(*k);
+            for change in mem.ledger().to_vec() {
+                mem2.apply(&mut replay, change);
+            }
+            prop_assert_eq!(&replay.assign, &part.assign);
+            prop_assert_eq!(replay.k, part.k);
+            prop_assert_eq!(mem2.active(), mem.active());
+
+            // reverting everything restores the original bit-for-bit
+            while mem.revert_last(&mut part).is_some() {}
+            prop_assert_eq!(&part.assign, &original);
+            prop_assert_eq!(part.k, *k);
+            prop_assert_eq!(mem.active(), &(0..*k).collect::<Vec<_>>()[..]);
             Ok(())
         },
     );

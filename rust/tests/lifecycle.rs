@@ -1,0 +1,442 @@
+//! Churn-chaos suite for elastic membership and whole-session
+//! checkpoint/resume (DESIGN.md §14).
+//!
+//! The contracts under test:
+//!
+//! * a **zero-churn** spec plus the checkpoint plane is structurally
+//!   inert — accuracy curves are bit-identical to a session built
+//!   without either, on the slab / TCP / sharded backends, pipeline on
+//!   and off;
+//! * a session under a scripted join/leave schedule **completes** and
+//!   lands within tolerance of the static run;
+//! * **kill-and-resume** at a round boundary reproduces the
+//!   uninterrupted accuracy curve bit-for-bit, across
+//!   {slab, sharded+replicated} × {pipeline on, off} × {raw, int8},
+//!   and also across a churn event;
+//! * resuming against the wrong graph, a mismatched codec, or a
+//!   mismatched config is a **loud** error, and a corrupted bundle
+//!   never loads.
+//!
+//! Like `fault_tolerance.rs`, every session runs sequential clients
+//! (deterministic push/pull order is what makes curves comparable
+//! bit-for-bit) and forces the pipeline explicitly, independent of the
+//! `OPTIMES_PIPELINE` matrix the CI lifecycle job applies to the rest
+//! of the tree.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use optimes::coordinator::{
+    ChurnSpec, EmbServerDaemon, EmbeddingServer, EmbeddingStore, NetConfig, SessionBuilder,
+    SessionConfig, SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore, CHECKPOINT_FILE,
+};
+use optimes::graph::datasets::tiny;
+use optimes::runtime::{ModelGeom, ModelKind, RefEngine, StepEngine};
+use optimes::wire::CodecSpec;
+
+const HIDDEN: usize = 16;
+const N_LAYERS: usize = 2; // layers - 1
+const SHARDS: usize = 4;
+const ROUNDS: usize = 6;
+const SEED: u64 = 411;
+
+fn ref_engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: HIDDEN,
+        classes: 4,
+        batch: 8,
+        fanout: 3,
+        push_batch: 8,
+    }))
+}
+
+fn cfg(pipeline: bool, churn: &str) -> SessionConfig {
+    SessionConfig {
+        strategy: Strategy::e(),
+        rounds: ROUNDS,
+        epochs: 2,
+        epoch_batches: 4,
+        eval_batches: 4,
+        // sequential clients: deterministic push/pull order makes the
+        // accuracy curves comparable bit-for-bit across runs
+        parallel_clients: false,
+        pipeline,
+        churn: ChurnSpec::parse(churn).unwrap(),
+        ..Default::default()
+    }
+}
+
+/// Fresh empty backend of the named kind (each session needs its own).
+fn backend(kind: &str) -> Arc<dyn EmbeddingStore> {
+    match kind {
+        "slab" => Arc::new(EmbeddingServer::new(N_LAYERS, HIDDEN, NetConfig::default())),
+        "sharded" => Arc::new(
+            ShardedStore::in_process_replicated(SHARDS, 1, N_LAYERS, HIDDEN, NetConfig::default())
+                .unwrap(),
+        ),
+        other => unreachable!("backend {other}"),
+    }
+}
+
+fn wrap_codec(store: Arc<dyn EmbeddingStore>, codec: &str) -> Arc<dyn EmbeddingStore> {
+    CodecSpec::parse(codec).unwrap().wrap_store(store, NetConfig::default())
+}
+
+/// Unique per-test checkpoint directory, cleared on entry.
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("optimes-lifecycle-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn run_plain(store: Arc<dyn EmbeddingStore>, cfg: &SessionConfig, seed: u64) -> SessionMetrics {
+    let g = tiny(seed);
+    SessionBuilder::new(cfg.clone())
+        .store(store)
+        .build(&g, ref_engine())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn assert_same_curve(a: &SessionMetrics, b: &SessionMetrics, what: &str) {
+    assert_eq!(a.accuracies(), b.accuracies(), "accuracy curves diverged: {what}");
+    let va: Vec<f64> = a.rounds.iter().map(|r| r.val_loss).collect();
+    let vb: Vec<f64> = b.rounds.iter().map(|r| r.val_loss).collect();
+    assert_eq!(va, vb, "validation losses diverged: {what}");
+    assert_eq!(a.server_embeddings, b.server_embeddings, "store contents diverged: {what}");
+}
+
+// ---------------------------------------------------------------------------
+// zero-churn spec + checkpoint plane: structurally inert
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_churn_and_checkpointing_are_bit_identical() {
+    for pipeline in [false, true] {
+        for kind in ["slab", "sharded"] {
+            let base = run_plain(backend(kind), &cfg(pipeline, ""), SEED);
+            assert_eq!(base.rounds.len(), ROUNDS);
+            // every round of the static run reports the full stable roster
+            for r in &base.rounds {
+                assert_eq!(r.active_clients, vec![0, 1, 2, 3]);
+            }
+
+            let dir = temp_dir(&format!("inert-{kind}-{pipeline}"));
+            let g = tiny(SEED);
+            let m = SessionBuilder::new(cfg(pipeline, ""))
+                .store(backend(kind))
+                .checkpoints(&dir, 2)
+                .build(&g, ref_engine())
+                .unwrap()
+                .run()
+                .unwrap();
+            // the snapshot plane shows up in the backend description...
+            assert!(
+                m.store_backend.starts_with("snapshot("),
+                "checkpointing session must run through the snapshot plane, got {}",
+                m.store_backend
+            );
+            // ...but never in the values
+            assert_same_curve(&base, &m, &format!("{kind} pipeline={pipeline}"));
+            assert!(dir.join(CHECKPOINT_FILE).exists(), "no bundle written");
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn zero_churn_is_bit_identical_over_tcp() {
+    for pipeline in [false, true] {
+        let mk_tcp = || {
+            let daemon = EmbServerDaemon::start(backend("slab"), "127.0.0.1:0").unwrap();
+            let store: Arc<dyn EmbeddingStore> = Arc::new(
+                TcpEmbeddingStore::connect(daemon.addr.to_string(), N_LAYERS, HIDDEN).unwrap(),
+            );
+            (daemon, store)
+        };
+        let (_d1, s1) = mk_tcp();
+        let base = run_plain(s1, &cfg(pipeline, ""), SEED);
+
+        let (_d2, s2) = mk_tcp();
+        let dir = temp_dir(&format!("inert-tcp-{pipeline}"));
+        let g = tiny(SEED);
+        let m = SessionBuilder::new(cfg(pipeline, ""))
+            .store(s2)
+            .checkpoints(&dir, 3)
+            .build(&g, ref_engine())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_same_curve(&base, &m, &format!("tcp pipeline={pipeline}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scripted churn: the session completes and stays close to the static run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn churn_schedule_completes_with_sane_curve() {
+    for pipeline in [false, true] {
+        let static_run = run_plain(backend("slab"), &cfg(pipeline, ""), SEED);
+        let m = run_plain(backend("slab"), &cfg(pipeline, "leave@2:1,join@4"), SEED);
+        assert_eq!(m.rounds.len(), ROUNDS);
+        for r in &m.rounds {
+            assert!(r.accuracy.is_finite() && (0.0..=1.0).contains(&r.accuracy));
+            assert!(r.val_loss.is_finite());
+        }
+        // the roster tracks the schedule round by round
+        assert_eq!(m.rounds[0].active_clients, vec![0, 1, 2, 3]);
+        assert_eq!(m.rounds[2].active_clients, vec![0, 2, 3], "leave@2 not applied");
+        assert_eq!(m.rounds[4].active_clients, vec![0, 2, 3, 4], "join@4 not applied");
+        assert_eq!(m.rounds[5].active_clients, vec![0, 2, 3, 4]);
+        // churn shifts the curve but must not destroy learning
+        let d = (static_run.peak_accuracy() - m.peak_accuracy()).abs();
+        assert!(
+            d <= 0.25,
+            "pipeline={pipeline}: churned peak {:.3} too far from static {:.3}",
+            m.peak_accuracy(),
+            static_run.peak_accuracy()
+        );
+    }
+}
+
+#[test]
+fn departures_down_to_one_client_still_run() {
+    let m = run_plain(backend("slab"), &cfg(false, "leave@1:0,leave@2:2,leave@3:3"), SEED);
+    assert_eq!(m.rounds.len(), ROUNDS);
+    assert_eq!(m.rounds[ROUNDS - 1].active_clients, vec![1]);
+    assert!(m.rounds[ROUNDS - 1].accuracy.is_finite());
+}
+
+#[test]
+fn removing_an_unknown_client_fails_loudly() {
+    let g = tiny(SEED);
+    let err = SessionBuilder::new(cfg(false, "leave@1:9"))
+        .store(backend("slab"))
+        .build(&g, ref_engine())
+        .unwrap()
+        .run()
+        .err()
+        .expect("leave of unknown client must fail");
+    let chain = format!("{err:#}");
+    assert!(chain.contains("not active"), "unexpected error chain: {chain}");
+    assert!(chain.contains("churn before round 1"), "missing context: {chain}");
+}
+
+// ---------------------------------------------------------------------------
+// kill-and-resume: bit-identical to the uninterrupted run
+// ---------------------------------------------------------------------------
+
+const KILL_AT: usize = 3; // rounds completed before the "crash"
+
+/// Run `cfg` to `KILL_AT` rounds with checkpointing, drop the session
+/// (the crash), resume from the bundle on a fresh store, and run to
+/// completion. Returns the resumed session's full metrics.
+fn kill_and_resume(
+    cfg: &SessionConfig,
+    mk_store: &dyn Fn() -> Arc<dyn EmbeddingStore>,
+    dir: &PathBuf,
+    seed: u64,
+) -> SessionMetrics {
+    let g = tiny(seed);
+    {
+        let mut session = SessionBuilder::new(cfg.clone())
+            .store(mk_store())
+            .checkpoints(dir, KILL_AT)
+            .build(&g, ref_engine())
+            .unwrap();
+        session.pretrain().unwrap();
+        while session.completed_rounds() < KILL_AT {
+            session.run_round().unwrap();
+        }
+        // crash: the session is dropped without finish(); only the
+        // bundle on disk survives
+    }
+    assert!(dir.join(CHECKPOINT_FILE).exists(), "no bundle at the kill point");
+    SessionBuilder::new(cfg.clone())
+        .store(mk_store())
+        .resume(dir)
+        .build(&g, ref_engine())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn kill_and_resume_reproduces_uninterrupted_curve() {
+    for kind in ["slab", "sharded"] {
+        for pipeline in [false, true] {
+            for codec in ["raw", "int8"] {
+                let what = format!("{kind} pipeline={pipeline} codec={codec}");
+                let mk_store = || wrap_codec(backend(kind), codec);
+                let oracle = run_plain(mk_store(), &cfg(pipeline, ""), SEED);
+                assert_eq!(oracle.rounds.len(), ROUNDS);
+
+                let dir = temp_dir(&format!("resume-{kind}-{pipeline}-{codec}"));
+                let resumed = kill_and_resume(&cfg(pipeline, ""), &mk_store, &dir, SEED);
+                assert_eq!(resumed.rounds.len(), ROUNDS, "{what}: resumed run incomplete");
+                assert_same_curve(&oracle, &resumed, &what);
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+#[test]
+fn kill_and_resume_across_churn_events() {
+    // leave fires before the kill point, join after: resume must replay
+    // the recorded departure from the ledger AND still fire the join
+    // from the persisted schedule
+    for pipeline in [false, true] {
+        let c = cfg(pipeline, "leave@1:0,join@4");
+        let oracle = run_plain(backend("slab"), &c, SEED);
+        let dir = temp_dir(&format!("resume-churn-{pipeline}"));
+        let mk = || backend("slab");
+        let resumed = kill_and_resume(&c, &mk, &dir, SEED);
+        assert_same_curve(&oracle, &resumed, &format!("churn pipeline={pipeline}"));
+        assert_eq!(resumed.rounds[ROUNDS - 1].active_clients, vec![1, 2, 3, 4]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// resume misuse: every mismatch is loud
+// ---------------------------------------------------------------------------
+
+/// Checkpoint a short run and hand back its directory.
+fn checkpointed_dir(tag: &str, codec: &str) -> PathBuf {
+    let dir = temp_dir(tag);
+    let g = tiny(SEED);
+    let mut session = SessionBuilder::new(cfg(false, ""))
+        .store(wrap_codec(backend("slab"), codec))
+        .checkpoints(&dir, 2)
+        .build(&g, ref_engine())
+        .unwrap();
+    session.pretrain().unwrap();
+    while session.completed_rounds() < 2 {
+        session.run_round().unwrap();
+    }
+    dir
+}
+
+fn resume_err(dir: &PathBuf, cfg: &SessionConfig, store: Arc<dyn EmbeddingStore>, seed: u64) -> String {
+    let g = tiny(seed);
+    let err = SessionBuilder::new(cfg.clone())
+        .store(store)
+        .resume(dir)
+        .build(&g, ref_engine())
+        .err()
+        .expect("mismatched resume must fail at build");
+    format!("{err:#}")
+}
+
+#[test]
+fn resume_with_wrong_graph_fails_loudly() {
+    let dir = checkpointed_dir("wrong-graph", "raw");
+    let chain = resume_err(&dir, &cfg(false, ""), backend("slab"), SEED + 1);
+    assert!(chain.contains("graph fingerprint"), "unexpected error chain: {chain}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_with_mismatched_codec_fails_loudly() {
+    let dir = checkpointed_dir("wrong-codec", "raw");
+    let chain = resume_err(&dir, &cfg(false, ""), wrap_codec(backend("slab"), "int8"), SEED);
+    assert!(chain.contains("wire codec"), "unexpected error chain: {chain}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_with_mismatched_config_fails_loudly() {
+    let dir = checkpointed_dir("wrong-config", "raw");
+    let mut seeded = cfg(false, "");
+    seeded.seed = 7;
+    let chain = resume_err(&dir, &seeded, backend("slab"), SEED);
+    assert!(chain.contains("seed"), "unexpected error chain: {chain}");
+
+    let mut strat = cfg(false, "");
+    strat.strategy = Strategy::opp();
+    let chain = resume_err(&dir, &strat, backend("slab"), SEED);
+    assert!(chain.contains("strategy"), "unexpected error chain: {chain}");
+
+    let churned = cfg(false, "join@5");
+    let chain = resume_err(&dir, &churned, backend("slab"), SEED);
+    assert!(chain.contains("churn schedule"), "unexpected error chain: {chain}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_bundle_never_loads() {
+    let dir = checkpointed_dir("corrupt", "raw");
+    let path = dir.join(CHECKPOINT_FILE);
+    let clean = std::fs::read(&path).unwrap();
+    // a flip anywhere — header, table, or payload — must be caught by a
+    // checksum (checkpoint.rs unit tests probe every section
+    // individually; this is the end-to-end file-level check)
+    for off in [9, 60, clean.len() / 2, clean.len() - 1] {
+        let mut bad = clean.clone();
+        bad[off] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let g = tiny(SEED);
+        let err = SessionBuilder::new(cfg(false, ""))
+            .store(backend("slab"))
+            .resume(&dir)
+            .build(&g, ref_engine())
+            .err()
+            .unwrap_or_else(|| panic!("flip at {off} loaded fine"));
+        let chain = format!("{err:#}");
+        assert!(chain.contains("checkpoint"), "flip at {off}: unexpected chain: {chain}");
+    }
+    // truncation too
+    std::fs::write(&path, &clean[..clean.len() / 3]).unwrap();
+    let g = tiny(SEED);
+    assert!(SessionBuilder::new(cfg(false, ""))
+        .store(backend("slab"))
+        .resume(&dir)
+        .build(&g, ref_engine())
+        .is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// run-state machine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn run_state_walks_warmup_rounds_cooldown() {
+    use optimes::coordinator::RunState;
+    let g = tiny(SEED);
+    let mut session = SessionBuilder::new(cfg(false, ""))
+        .store(backend("slab"))
+        .build(&g, ref_engine())
+        .unwrap();
+    assert_eq!(session.run_state(), RunState::Warmup);
+    session.pretrain().unwrap();
+    assert_eq!(session.run_state(), RunState::Rounds);
+    session.run_round().unwrap();
+    assert_eq!(session.run_state(), RunState::Rounds);
+    assert_eq!(session.active_clients(), vec![0, 1, 2, 3]);
+    let m = session.finish();
+    assert_eq!(m.rounds.len(), 1);
+}
+
+#[test]
+fn resumed_session_starts_in_rounds_state() {
+    use optimes::coordinator::RunState;
+    let dir = checkpointed_dir("state", "raw");
+    let g = tiny(SEED);
+    let session = SessionBuilder::new(cfg(false, ""))
+        .store(backend("slab"))
+        .resume(&dir)
+        .build(&g, ref_engine())
+        .unwrap();
+    assert_eq!(session.run_state(), RunState::Rounds, "resume must skip warmup");
+    assert_eq!(session.completed_rounds(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
