@@ -1,0 +1,303 @@
+//! Multi-tenant load generator for the embedding daemon: hammers one
+//! sharded+replicated `EmbServerDaemon` with hundreds (or, without
+//! `--quick`, thousands) of short-lived simulated clients spread across
+//! several tenant namespaces, recording p50/p99/p999 push/pull wire
+//! latencies plus admission-control rejection counts — the latency
+//! number behind the north-star's "heavy traffic" claim (EXPERIMENTS.md
+//! §Load testing, DESIGN.md §15).
+//!
+//! Three phases:
+//! 1. **churn** — a bounded worker pool drains the client queue; each
+//!    client connects (with a TENANT handshake), does a few push/pull
+//!    rounds, and disconnects. This is exactly the connect/disconnect
+//!    churn that used to leak handler `JoinHandle`s.
+//! 2. **saturation probe** — hold `max_conns` admitted connections, then
+//!    probe extras and require every one to get the loud `BUSY` verdict.
+//! 3. **drain** — drop everything and require the daemon's live-conn and
+//!    handler-thread gauges to hit zero (the zero-leak acceptance gate).
+//!
+//! Merges a `loadgen` section into the repo-root `BENCH_micro.json`.
+//!
+//! Flags: `--quick` (CI scale), `--clients N`, `--tenants N`,
+//! `--shards N`, `--replicas R`, `--workers N`, `--ops N`, `--batch N`,
+//! `--max-conns N`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use optimes::coordinator::{
+    DaemonConfig, EmbServerDaemon, EmbeddingServer, EmbeddingStore, NetConfig, RemoteEmbClient,
+    ShardedStore,
+};
+use optimes::harness;
+use optimes::util::cli::Args;
+use optimes::util::json::JsonObj;
+use optimes::wire::CodecKind;
+
+const N_LAYERS: usize = 2;
+const HIDDEN: usize = 16;
+
+struct Scale {
+    quick: bool,
+    clients: usize,
+    tenants: usize,
+    shards: usize,
+    replicas: usize,
+    workers: usize,
+    ops_per_client: usize,
+    batch: usize,
+    max_conns: usize,
+}
+
+impl Scale {
+    fn from_args(args: &Args) -> Scale {
+        let quick = args.flag("quick");
+        Scale {
+            quick,
+            clients: args.usize_or("clients", if quick { 200 } else { 2000 }),
+            tenants: args.usize_or("tenants", if quick { 2 } else { 4 }).max(1),
+            shards: args.usize_or("shards", 4),
+            replicas: args.usize_or("replicas", 1),
+            workers: args.usize_or("workers", if quick { 16 } else { 32 }).max(1),
+            ops_per_client: args.usize_or("ops", if quick { 2 } else { 4 }),
+            batch: args.usize_or("batch", 32),
+            max_conns: args.usize_or("max-conns", 64),
+        }
+    }
+}
+
+fn rows(nodes: &[u32], salt: f32) -> Vec<f32> {
+    nodes
+        .iter()
+        .flat_map(|&n| (0..HIDDEN).map(move |j| n as f32 * 0.01 + j as f32 * 0.25 + salt))
+        .collect()
+}
+
+fn pctls(samples: &mut Vec<f64>) -> (f64, f64, f64) {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let p = |q| optimes::util::stats::percentile(samples, q);
+    (p(0.50), p(0.99), p(0.999))
+}
+
+fn is_busy(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains("BUSY")
+}
+
+/// Poll daemon stats until `pred` holds (panics with the last stats
+/// snapshot after `secs` seconds).
+fn await_daemon(
+    d: &EmbServerDaemon,
+    what: &str,
+    secs: u64,
+    pred: impl Fn(&optimes::coordinator::DaemonStats) -> bool,
+) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(secs);
+    loop {
+        let s = d.stats();
+        if pred(&s) {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "daemon never reached {what}: {s:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let s = Scale::from_args(&args);
+    assert!(
+        s.shards > s.replicas,
+        "need shards > replicas for a replicated store"
+    );
+
+    let backends: Vec<Arc<dyn EmbeddingStore>> = (0..s.shards)
+        .map(|_| {
+            Arc::new(EmbeddingServer::new(N_LAYERS, HIDDEN, NetConfig::default()))
+                as Arc<dyn EmbeddingStore>
+        })
+        .collect();
+    let store: Arc<dyn EmbeddingStore> =
+        Arc::new(ShardedStore::replicated(backends, s.replicas).expect("replicated store"));
+    let daemon = EmbServerDaemon::start_with(
+        Arc::clone(&store),
+        "127.0.0.1:0",
+        DaemonConfig {
+            max_conns: s.max_conns,
+            max_inflight: 0,
+        },
+    )
+    .expect("daemon start");
+    let addr = daemon.addr.to_string();
+    println!(
+        "loadgen: {} clients x {} ops over {} tenants -> {} ({} shards, {} replica(s), \
+         max-conns {}, {} workers)",
+        s.clients,
+        s.ops_per_client,
+        s.tenants,
+        addr,
+        s.shards,
+        s.replicas,
+        s.max_conns,
+        s.workers
+    );
+
+    // phase 1: connect/use/disconnect churn through a bounded worker pool
+    let t0 = std::time::Instant::now();
+    let next = AtomicUsize::new(0);
+    let push_ms: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let pull_ms: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let busy_rejections = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..s.workers.min(s.clients) {
+            scope.spawn(|| {
+                let mut my_push: Vec<f64> = Vec::new();
+                let mut my_pull: Vec<f64> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= s.clients {
+                        break;
+                    }
+                    let tenant = format!("tenant-{}", i % s.tenants);
+                    let mut c = match RemoteEmbClient::connect_opts(
+                        addr.as_str(),
+                        N_LAYERS,
+                        HIDDEN,
+                        &CodecKind::Raw,
+                        Some(&tenant),
+                    ) {
+                        Ok(c) => c,
+                        Err(e) if is_busy(&e) => {
+                            busy_rejections.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        Err(e) => panic!("client {i} connect: {e:#}"),
+                    };
+                    let nodes: Vec<u32> =
+                        ((i * s.batch) as u32..(i * s.batch + s.batch) as u32).collect();
+                    for op in 0..s.ops_per_client {
+                        let layer = rows(&nodes, op as f32);
+                        let per_layer = vec![layer; N_LAYERS];
+                        let w0 = std::time::Instant::now();
+                        match c.push(&nodes, &per_layer) {
+                            Ok(_) => my_push.push(w0.elapsed().as_secs_f64() * 1e3),
+                            Err(e) if is_busy(&e) => {
+                                busy_rejections.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(e) => panic!("client {i} push: {e:#}"),
+                        }
+                        let w0 = std::time::Instant::now();
+                        match c.pull(&nodes) {
+                            Ok((got, _)) => {
+                                my_pull.push(w0.elapsed().as_secs_f64() * 1e3);
+                                assert_eq!(got[0], per_layer[0], "client {i} read own write");
+                            }
+                            Err(e) if is_busy(&e) => {
+                                busy_rejections.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(e) => panic!("client {i} pull: {e:#}"),
+                        }
+                    }
+                }
+                push_ms.lock().unwrap().extend(my_push);
+                pull_ms.lock().unwrap().extend(my_pull);
+            });
+        }
+    });
+    let churn_secs = t0.elapsed().as_secs_f64();
+
+    // phase 2: saturate the connection cap, then require every extra
+    // connection to get the loud BUSY verdict (not a hang, not an RST)
+    await_daemon(&daemon, "post-churn drain", 10, |st| st.live_conns == 0);
+    let mut held = Vec::new();
+    for i in 0..s.max_conns {
+        let mut c = RemoteEmbClient::connect(addr.as_str(), N_LAYERS, HIDDEN)
+            .unwrap_or_else(|e| panic!("held conn {i} connect: {e:#}"));
+        // stats round-trip proves the connection is admitted and served
+        c.stats().unwrap_or_else(|e| panic!("held conn {i} not admitted: {e:#}"));
+        held.push(c);
+    }
+    let probe_attempts = 32usize;
+    let mut probe_rejected = 0usize;
+    for i in 0..probe_attempts {
+        let mut c = RemoteEmbClient::connect(addr.as_str(), N_LAYERS, HIDDEN)
+            .unwrap_or_else(|e| panic!("probe conn {i} connect: {e:#}"));
+        match c.stats() {
+            Err(e) if is_busy(&e) => probe_rejected += 1,
+            Err(e) => panic!("probe conn {i}: expected BUSY, got {e:#}"),
+            Ok(_) => panic!("probe conn {i} was admitted past the max-conns cap"),
+        }
+    }
+    assert_eq!(
+        probe_rejected, probe_attempts,
+        "every over-cap probe must be rejected with BUSY"
+    );
+    drop(held);
+
+    // phase 3: drain — the zero-leak gate (bounded handler threads)
+    await_daemon(&daemon, "zero live conns + zero handler threads", 10, |st| {
+        st.live_conns == 0 && st.handler_threads == 0
+    });
+    let dstats = daemon.stats();
+    assert!(dstats.rejected_conns >= probe_attempts, "{dstats:?}");
+    assert_eq!(dstats.tenants, s.tenants, "{dstats:?}");
+    assert!(dstats.peak_conns <= s.max_conns, "{dstats:?}");
+
+    let (mut push_samples, mut pull_samples) =
+        (push_ms.into_inner().unwrap(), pull_ms.into_inner().unwrap());
+    let (push_p50, push_p99, push_p999) = pctls(&mut push_samples);
+    let (pull_p50, pull_p99, pull_p999) = pctls(&mut pull_samples);
+    println!(
+        "churn: {} clients in {churn_secs:.2}s | push p50/p99/p999 {push_p50:.3}/{push_p99:.3}/\
+         {push_p999:.3} ms | pull p50/p99/p999 {pull_p50:.3}/{pull_p99:.3}/{pull_p999:.3} ms",
+        s.clients
+    );
+    println!(
+        "admission: {} held, {}/{} probes rejected, daemon {:?}",
+        s.max_conns, probe_rejected, probe_attempts, dstats
+    );
+
+    let mut push_obj = JsonObj::new();
+    push_obj
+        .set("ops", push_samples.len())
+        .set("p50_ms", push_p50)
+        .set("p99_ms", push_p99)
+        .set("p999_ms", push_p999);
+    let mut pull_obj = JsonObj::new();
+    pull_obj
+        .set("ops", pull_samples.len())
+        .set("p50_ms", pull_p50)
+        .set("p99_ms", pull_p99)
+        .set("p999_ms", pull_p999);
+    let mut out = JsonObj::new();
+    out.set("quick", s.quick)
+        .set("shards", s.shards)
+        .set("replicas", s.replicas)
+        .set("tenants", s.tenants)
+        .set("clients", s.clients)
+        .set("workers", s.workers.min(s.clients))
+        .set("ops_per_client", s.ops_per_client)
+        .set("batch", s.batch)
+        .set("max_conns", s.max_conns)
+        .set("churn_secs", churn_secs)
+        .set("push", push_obj)
+        .set("pull", pull_obj)
+        .set("busy_rejections", busy_rejections.load(Ordering::Relaxed))
+        .set("probe_attempts", probe_attempts)
+        .set("probe_rejected", probe_rejected)
+        .set("rejected_conns", dstats.rejected_conns)
+        .set("rejected_requests", dstats.rejected_requests)
+        .set("peak_conns", dstats.peak_conns)
+        .set("total_conns", dstats.total_conns)
+        .set("live_conns_at_end", dstats.live_conns)
+        .set("handler_threads_at_end", dstats.handler_threads)
+        .set("tenants_registered", dstats.tenants);
+    harness::record_bench_section("loadgen", out);
+    println!("recorded loadgen section into {}", harness::bench_json_path().display());
+
+    daemon.shutdown();
+}

@@ -73,6 +73,102 @@ impl CacheStats {
     }
 }
 
+/// Per-backend exponentially-weighted moving average of observed pull
+/// latencies, used by
+/// [`ShardedStore`](super::store::ShardedStore) to order replica reads
+/// fastest-first (DESIGN.md §15). Lock-free: each backend's estimate is
+/// an `AtomicU64` holding `f64` bits, folded with a CAS loop so
+/// concurrent pull groups never serialize on a mutex.
+#[derive(Debug)]
+pub struct ReplicaLatency {
+    slots: Vec<std::sync::atomic::AtomicU64>,
+}
+
+impl ReplicaLatency {
+    /// Smoothing factor: one sample moves the estimate 30% of the way,
+    /// so a replica that suddenly slows is demoted within a few pulls
+    /// while a single hiccup doesn't thrash the ordering.
+    pub const ALPHA: f64 = 0.3;
+
+    /// Sentinel bits for "no sample yet" (an impossible NaN pattern for
+    /// a recorded latency, which is always finite and non-negative).
+    const EMPTY: u64 = u64::MAX;
+
+    pub fn new(n_backends: usize) -> Self {
+        ReplicaLatency {
+            slots: (0..n_backends)
+                .map(|_| std::sync::atomic::AtomicU64::new(Self::EMPTY))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Fold one observed latency (seconds) into a backend's estimate.
+    /// Out-of-range backends and non-finite/negative samples are ignored
+    /// rather than panicking — the tracker is advisory, never on the
+    /// correctness path.
+    pub fn record(&self, backend: usize, secs: f64) {
+        if !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        let Some(slot) = self.slots.get(backend) else {
+            return;
+        };
+        let mut cur = slot.load(std::sync::atomic::Ordering::Relaxed);
+        loop {
+            let next = if cur == Self::EMPTY {
+                secs
+            } else {
+                Self::ALPHA * secs + (1.0 - Self::ALPHA) * f64::from_bits(cur)
+            };
+            match slot.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                std::sync::atomic::Ordering::Relaxed,
+                std::sync::atomic::Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Current estimate for a backend (None until its first sample).
+    pub fn get(&self, backend: usize) -> Option<f64> {
+        let bits = self
+            .slots
+            .get(backend)?
+            .load(std::sync::atomic::Ordering::Relaxed);
+        if bits == Self::EMPTY {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
+    }
+
+    /// Reorder an owner list fastest-measured-first. The sort is stable
+    /// and unmeasured backends rank as `+inf`, so owners without a
+    /// sample keep their original (primary-first) relative order at the
+    /// back — a cold tracker reproduces the historical
+    /// primary-then-failover behavior exactly.
+    pub fn sorted(&self, owners: &[u32]) -> Vec<u32> {
+        let mut out = owners.to_vec();
+        out.sort_by(|&a, &b| {
+            let ka = self.get(a as usize).unwrap_or(f64::INFINITY);
+            let kb = self.get(b as usize).unwrap_or(f64::INFINITY);
+            ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
+    }
+}
+
 /// *Measured* wall-clock overlap accounting for the asynchronous
 /// pipeline (`--pipeline on`), recorded **next to** the virtual-time
 /// model of [`PhaseTimes`] (DESIGN.md §9): the virtual model says how
@@ -515,6 +611,36 @@ mod tests {
         let b = fake_session(&[1.0; 3], &[0.9, 0.9, 0.9]);
         let t = paper_target_accuracy(&[&a, &b]);
         assert!((t - 0.69).abs() < 1e-6, "{t}");
+    }
+
+    #[test]
+    fn replica_latency_cold_tracker_preserves_owner_order() {
+        let lat = ReplicaLatency::new(3);
+        assert_eq!(lat.sorted(&[2, 0, 1]), vec![2, 0, 1]);
+        assert_eq!(lat.get(0), None);
+    }
+
+    #[test]
+    fn replica_latency_sorts_measured_fastest_first() {
+        let lat = ReplicaLatency::new(3);
+        lat.record(0, 0.020);
+        lat.record(2, 0.001);
+        // backend 1 is unmeasured: it ranks +inf, behind both samples
+        assert_eq!(lat.sorted(&[0, 1, 2]), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn replica_latency_ewma_converges_and_rejects_junk() {
+        let lat = ReplicaLatency::new(1);
+        lat.record(0, 0.010);
+        assert!((lat.get(0).unwrap() - 0.010).abs() < 1e-12);
+        lat.record(0, 0.030);
+        // 0.3 * 0.030 + 0.7 * 0.010 = 0.016
+        assert!((lat.get(0).unwrap() - 0.016).abs() < 1e-12);
+        lat.record(0, f64::NAN);
+        lat.record(0, -1.0);
+        lat.record(7, 0.5); // out of range: ignored, no panic
+        assert!((lat.get(0).unwrap() - 0.016).abs() < 1e-12);
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod rounds;
 pub mod session;
 pub mod store;
 pub mod strategy;
+pub mod tenant;
 pub mod trainer;
 
 pub use aggregation::{fedavg, Aggregator, FedAvg, TrimmedMean, UniformAvg, Validator};
@@ -39,8 +40,11 @@ pub use lifecycle::{
     MembershipKind, RunState,
 };
 pub use embedding_server::EmbeddingServer;
-pub use metrics::{OverlapMetrics, PhaseTimes, RoundMetrics, SessionMetrics};
-pub use net_transport::{EmbServerDaemon, RemoteEmbClient, TcpEmbeddingStore};
+pub use metrics::{OverlapMetrics, PhaseTimes, ReplicaLatency, RoundMetrics, SessionMetrics};
+pub use net_transport::{
+    DaemonConfig, DaemonStats, EmbServerDaemon, RemoteEmbClient, TcpEmbeddingStore, STATUS_BUSY,
+    STATUS_OK,
+};
 pub use netsim::{client_latency_default, ClientLatency, NetConfig};
 pub use pipeline::{
     pipeline_default, AsyncStoreHandle, PendingPull, PullDone, PullTicket, PushDone, PushTicket,
@@ -56,6 +60,10 @@ pub use session::{
 };
 pub use resilience::{Fault, FaultHandle, FaultSpec, FaultStore, SnapshotStore};
 pub use store::{
-    sharded_desc, EmbeddingStore, RebalanceReport, ShardMap, ShardedStore, StoreStats,
+    sharded_desc, EmbeddingStore, RebalanceReport, ReplicaSelect, ShardMap, ShardedStore,
+    StoreStats,
 };
 pub use strategy::{ParseStrategyError, ScoreKind, Strategy};
+pub use tenant::{
+    validate_tenant_name, TenantRegistry, TenantStore, MAX_TENANTS, TENANT_NODE_LIMIT,
+};

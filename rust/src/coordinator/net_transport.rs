@@ -7,16 +7,18 @@
 //!
 //! ```text
 //! request  := op:u8 payload
-//!   op=1 PULL  payload := n:u32 node_id*n
-//!   op=2 PUSH  payload := n:u32 node_id*n layers:u32 (row-payload)*layers
-//!   op=3 STATS payload := (empty)
-//!   op=4 CODEC payload := len:u32 name:utf8*len      (wire-codec handshake)
-//! response := status:u8 payload          (status 0 = ok)
-//!   PULL  -> layers:u32 hidden:u32 (row-payload)*layers
-//!   PUSH  -> (empty)
-//!   STATS -> stored_nodes:u64 stored_rows:u64 failovers:u64 epoch:u64
-//!            bytes_tx:u64 bytes_rx:u64 raw_tx:u64 raw_rx:u64
-//!   CODEC -> (empty)
+//!   op=1 PULL   payload := n:u32 node_id*n
+//!   op=2 PUSH   payload := n:u32 node_id*n layers:u32 (row-payload)*layers
+//!   op=3 STATS  payload := (empty)
+//!   op=4 CODEC  payload := len:u32 name:utf8*len     (wire-codec handshake)
+//!   op=5 TENANT payload := len:u32 name:utf8*len     (namespace handshake)
+//! response := status:u8 payload          (status 0 = ok, 0xB5 = BUSY)
+//!   PULL   -> layers:u32 hidden:u32 (row-payload)*layers
+//!   PUSH   -> (empty)
+//!   STATS  -> stored_nodes:u64 stored_rows:u64 failovers:u64 epoch:u64
+//!             bytes_tx:u64 bytes_rx:u64 raw_tx:u64 raw_rx:u64
+//!   CODEC  -> (empty)
+//!   TENANT -> (empty)
 //! ```
 //!
 //! A `row-payload` is `n` rows encoded under the **connection codec** —
@@ -31,6 +33,16 @@
 //!
 //! All transfers are *batched* — one frame per pull/push phase, mirroring
 //! the Redis pipelining the paper uses to amortize RPC overheads (§5.1).
+//!
+//! A TENANT handshake rebinds the connection to that session's
+//! namespace on the daemon's shared store ([`TenantRegistry`],
+//! DESIGN.md §15): one daemon hosts many concurrent federated sessions
+//! with isolated rows and per-tenant STATS. The daemon also applies
+//! **admission control**: past `--max-conns` a new connection is
+//! answered with one loud [`STATUS_BUSY`] byte instead of being
+//! silently served, and past `--max-inflight` a data-plane request is
+//! shed the same way — clients surface both as a named `BUSY` error,
+//! never a hang.
 //!
 //! Three pieces live here: [`EmbServerDaemon`] serves any
 //! `Arc<dyn EmbeddingStore>` (in-process slab or a sharded compound) over
@@ -48,12 +60,22 @@ use anyhow::{bail, Context, Result};
 use super::codec;
 use super::metrics::{RpcKind, RpcRecord};
 use super::store::{EmbeddingStore, StoreStats};
+use super::tenant::{TenantRegistry, MAX_TENANT_NAME};
 use crate::wire::{CodecKind, RowCodec};
 
 const OP_PULL: u8 = 1;
 const OP_PUSH: u8 = 2;
 const OP_STATS: u8 = 3;
 const OP_CODEC: u8 = 4;
+const OP_TENANT: u8 = 5;
+
+/// Response status: request served.
+pub const STATUS_OK: u8 = 0;
+
+/// Response status: rejected by admission control (connection cap or
+/// in-flight cap). Deliberately far from 0/1 so a desynced stream is
+/// unlikely to fake it.
+pub const STATUS_BUSY: u8 = 0xB5;
 
 /// Longest codec name a CODEC handshake may declare.
 const MAX_CODEC_NAME: usize = 64;
@@ -63,27 +85,166 @@ fn read_ids(r: &mut impl Read) -> Result<Vec<u32>> {
     codec::read_u32s(r, n)
 }
 
+/// Admission-control limits of an [`EmbServerDaemon`] (`--max-conns` /
+/// `--max-inflight`; 0 = unlimited, the historical behavior).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DaemonConfig {
+    /// Connections served simultaneously; one past the cap is answered
+    /// with a single [`STATUS_BUSY`] byte and closed.
+    pub max_conns: usize,
+    /// Data-plane requests (pull/push) executing simultaneously across
+    /// all connections; excess requests are shed with [`STATUS_BUSY`].
+    pub max_inflight: usize,
+}
+
+/// Live service counters of an [`EmbServerDaemon`]
+/// ([`stats`](EmbServerDaemon::stats)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DaemonStats {
+    /// Connections currently holding an admission slot.
+    pub live_conns: usize,
+    /// Highest simultaneous admitted-connection count observed.
+    pub peak_conns: usize,
+    /// Connections ever admitted.
+    pub total_conns: usize,
+    /// Connections refused at the `max_conns` cap.
+    pub rejected_conns: usize,
+    /// Data-plane requests executing right now.
+    pub inflight: usize,
+    /// Highest simultaneous in-flight request count observed.
+    pub peak_inflight: usize,
+    /// Requests shed at the `max_inflight` cap.
+    pub rejected_requests: usize,
+    /// Handler threads alive (admitted + rejection handlers) — the
+    /// accept loop's sweep keeps this bounded under churn.
+    pub handler_threads: usize,
+    /// Tenant namespaces registered via the TENANT handshake.
+    pub tenants: usize,
+}
+
+/// State shared between the daemon handle, its accept loop, and every
+/// handler thread: admission config, gauges, and the tenant directory.
+struct DaemonShared {
+    config: DaemonConfig,
+    live_conns: AtomicUsize,
+    peak_conns: AtomicUsize,
+    total_conns: AtomicUsize,
+    rejected_conns: AtomicUsize,
+    inflight: AtomicUsize,
+    peak_inflight: AtomicUsize,
+    rejected_requests: AtomicUsize,
+    handler_threads: AtomicUsize,
+    tenants: TenantRegistry,
+}
+
+/// RAII admission slot of one connection: acquired in the accept loop,
+/// released (even on handler panic) when the handler finishes.
+struct ConnSlot(Arc<DaemonShared>);
+
+impl ConnSlot {
+    fn acquire(shared: &Arc<DaemonShared>) -> Option<ConnSlot> {
+        let max = shared.config.max_conns;
+        let n = shared.live_conns.fetch_add(1, Ordering::SeqCst) + 1;
+        if max > 0 && n > max {
+            shared.live_conns.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        shared.peak_conns.fetch_max(n, Ordering::SeqCst);
+        shared.total_conns.fetch_add(1, Ordering::SeqCst);
+        Some(ConnSlot(Arc::clone(shared)))
+    }
+}
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.live_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// RAII lease on the daemon-wide in-flight gauge: one per executing
+/// data-plane request, bounded by `max_inflight`.
+struct ReqSlot(Arc<DaemonShared>);
+
+impl ReqSlot {
+    fn acquire(shared: &Arc<DaemonShared>) -> Option<ReqSlot> {
+        let max = shared.config.max_inflight;
+        let n = shared.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        if max > 0 && n > max {
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        shared.peak_inflight.fetch_max(n, Ordering::SeqCst);
+        Some(ReqSlot(Arc::clone(shared)))
+    }
+}
+
+impl Drop for ReqSlot {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Daemon serving an embedding store over TCP: accepts connections until
-/// `stop` is raised, one service thread per client (cross-silo
-/// federations have few, long-lived clients).
+/// `stop` is raised, one service thread per client, with bounded
+/// admission ([`DaemonConfig`]) and a finished-handler sweep every
+/// accept iteration so connect/disconnect churn never accumulates dead
+/// `JoinHandle`s (DESIGN.md §15).
 pub struct EmbServerDaemon {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<DaemonShared>,
 }
 
 impl EmbServerDaemon {
+    /// Serve with no admission limits (the historical default).
     pub fn start(store: Arc<dyn EmbeddingStore>, bind: impl ToSocketAddrs) -> Result<Self> {
+        Self::start_with(store, bind, DaemonConfig::default())
+    }
+
+    /// [`start`](Self::start) with admission-control limits.
+    pub fn start_with(
+        store: Arc<dyn EmbeddingStore>,
+        bind: impl ToSocketAddrs,
+        config: DaemonConfig,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(bind).context("bind")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let shared = Arc::new(DaemonShared {
+            config,
+            live_conns: AtomicUsize::new(0),
+            peak_conns: AtomicUsize::new(0),
+            total_conns: AtomicUsize::new(0),
+            rejected_conns: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            peak_inflight: AtomicUsize::new(0),
+            rejected_requests: AtomicUsize::new(0),
+            handler_threads: AtomicUsize::new(0),
+            tenants: TenantRegistry::new(store),
+        });
+        let shared2 = Arc::clone(&shared);
         let accept_thread = std::thread::Builder::new()
             .name("emb-server-accept".into())
             .spawn(move || {
                 let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
                 while !stop2.load(Ordering::Relaxed) {
+                    // reap finished handlers every iteration: without
+                    // this sweep the handle list grows without bound
+                    // under connect/disconnect churn (each handle pins
+                    // its thread's stack until joined)
+                    let mut live = Vec::with_capacity(conns.len());
+                    for c in conns.drain(..) {
+                        if c.is_finished() {
+                            let _ = c.join();
+                        } else {
+                            live.push(c);
+                        }
+                    }
+                    conns = live;
+                    shared2.handler_threads.store(conns.len(), Ordering::SeqCst);
                     match listener.accept() {
                         Ok((stream, _)) => {
                             stream.set_nodelay(true).ok();
@@ -93,11 +254,26 @@ impl EmbServerDaemon {
                             stream
                                 .set_read_timeout(Some(std::time::Duration::from_millis(100)))
                                 .ok();
-                            let store = Arc::clone(&store);
                             let stop = Arc::clone(&stop2);
-                            conns.push(std::thread::spawn(move || {
-                                let _ = serve_conn(store, stream, stop);
-                            }));
+                            match ConnSlot::acquire(&shared2) {
+                                Some(slot) => {
+                                    let base = shared2.tenants.base();
+                                    let shared = Arc::clone(&shared2);
+                                    conns.push(std::thread::spawn(move || {
+                                        let _slot = slot;
+                                        let _ = serve_conn(base, &shared, stream, stop);
+                                    }));
+                                }
+                                None => {
+                                    // over the connection cap: a handler
+                                    // still spawns (swept like any other)
+                                    // but only to deliver the BUSY verdict
+                                    shared2.rejected_conns.fetch_add(1, Ordering::SeqCst);
+                                    conns.push(std::thread::spawn(move || {
+                                        reject_conn(stream, &stop);
+                                    }));
+                                }
+                            }
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(5));
@@ -108,12 +284,35 @@ impl EmbServerDaemon {
                 for c in conns {
                     let _ = c.join();
                 }
+                shared2.handler_threads.store(0, Ordering::SeqCst);
             })?;
         Ok(Self {
             addr,
             stop,
             accept_thread: Some(accept_thread),
+            shared,
         })
+    }
+
+    /// Admission-control limits this daemon runs under.
+    pub fn config(&self) -> DaemonConfig {
+        self.shared.config
+    }
+
+    /// Live service counters: connections, in-flight requests,
+    /// rejections, handler threads, registered tenants.
+    pub fn stats(&self) -> DaemonStats {
+        DaemonStats {
+            live_conns: self.shared.live_conns.load(Ordering::SeqCst),
+            peak_conns: self.shared.peak_conns.load(Ordering::SeqCst),
+            total_conns: self.shared.total_conns.load(Ordering::SeqCst),
+            rejected_conns: self.shared.rejected_conns.load(Ordering::SeqCst),
+            inflight: self.shared.inflight.load(Ordering::SeqCst),
+            peak_inflight: self.shared.peak_inflight.load(Ordering::SeqCst),
+            rejected_requests: self.shared.rejected_requests.load(Ordering::SeqCst),
+            handler_threads: self.shared.handler_threads.load(Ordering::SeqCst),
+            tenants: self.shared.tenants.len(),
+        }
     }
 
     pub fn shutdown(mut self) {
@@ -122,6 +321,46 @@ impl EmbServerDaemon {
             let _ = t.join();
         }
     }
+}
+
+/// Discard inbound bytes until the peer closes (or a ~2 s deadline
+/// passes). Used after writing a rejection byte: closing the socket
+/// immediately with unread inbound data can send an RST, and TCP
+/// discards undelivered outbound data on reset — the loud BUSY would
+/// surface at the client as a silent connection error instead of a
+/// named rejection.
+fn drain_conn(stream: &TcpStream, stop: &AtomicBool) {
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+        .ok();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+    let mut sink = [0u8; 4096];
+    let mut s = stream;
+    loop {
+        match s.read(&mut sink) {
+            Ok(0) => return, // peer saw the verdict and hung up
+            Ok(_) => {}      // discard whatever request was in flight
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(_) => return,
+        }
+        if stop.load(Ordering::Relaxed) || std::time::Instant::now() >= deadline {
+            return;
+        }
+    }
+}
+
+/// Handler for a connection refused at the `max_conns` cap: one loud
+/// [`STATUS_BUSY`] byte, then drain until the client has read it.
+fn reject_conn(stream: TcpStream, stop: &AtomicBool) {
+    if (&stream).write_all(&[STATUS_BUSY]).is_err() {
+        return;
+    }
+    let _ = (&stream).flush();
+    drain_conn(&stream, stop);
 }
 
 impl Drop for EmbServerDaemon {
@@ -133,12 +372,16 @@ impl Drop for EmbServerDaemon {
     }
 }
 
-/// Serve one client connection until EOF or daemon stop.
+/// Serve one client connection until EOF or daemon stop. `base` is the
+/// daemon's root store; a TENANT handshake rebinds `store` to that
+/// tenant's namespaced view for the rest of the connection.
 fn serve_conn(
-    store: Arc<dyn EmbeddingStore>,
+    base: Arc<dyn EmbeddingStore>,
+    shared: &Arc<DaemonShared>,
     stream: TcpStream,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
+    let mut store: Arc<dyn EmbeddingStore> = base;
     let mut r = std::io::BufReader::new(stream.try_clone()?);
     let mut w = std::io::BufWriter::new(stream.try_clone()?);
     // per-connection pull buffer: steady-state pulls allocate nothing
@@ -168,11 +411,27 @@ fn serve_conn(
             }
             Err(e) => return Err(e.into()),
         }
+        // shed data-plane work (pull/push) over the in-flight cap with
+        // a loud BUSY; control ops (stats/codec/tenant) always pass
+        let _req = if matches!(op[0], OP_PULL | OP_PUSH) {
+            match ReqSlot::acquire(shared) {
+                Some(slot) => Some(slot),
+                None => {
+                    shared.rejected_requests.fetch_add(1, Ordering::SeqCst);
+                    w.write_all(&[STATUS_BUSY])?;
+                    w.flush()?;
+                    drain_conn(&stream, &stop);
+                    return Ok(());
+                }
+            }
+        } else {
+            None
+        };
         match op[0] {
             OP_PULL => {
                 let nodes = read_ids(&mut r)?;
                 store.pull_into(&nodes, false, &mut pull_buf)?;
-                w.write_all(&[0u8])?;
+                w.write_all(&[STATUS_OK])?;
                 codec::write_u32(&mut w, pull_buf.len() as u32)?;
                 codec::write_u32(&mut w, store.hidden() as u32)?;
                 if wire_codec.is_identity() {
@@ -209,11 +468,11 @@ fn serve_conn(
                     }
                 }
                 store.push(&nodes, &per_layer)?;
-                w.write_all(&[0u8])?;
+                w.write_all(&[STATUS_OK])?;
             }
             OP_STATS => {
                 let stats = store.stats()?;
-                w.write_all(&[0u8])?;
+                w.write_all(&[STATUS_OK])?;
                 codec::write_u64(&mut w, stats.nodes as u64)?;
                 codec::write_u64(&mut w, stats.rows as u64)?;
                 codec::write_u64(&mut w, stats.failovers as u64)?;
@@ -234,7 +493,21 @@ fn serve_conn(
                 // a bad name drops the connection (the client surfaces
                 // the failed handshake at connect time, not mid-round)
                 wire_codec = CodecKind::parse(name)?.build();
-                w.write_all(&[0u8])?;
+                w.write_all(&[STATUS_OK])?;
+            }
+            OP_TENANT => {
+                let len = codec::read_u32(&mut r)? as usize;
+                if len > MAX_TENANT_NAME {
+                    bail!("absurd tenant name length {len}");
+                }
+                let mut name = vec![0u8; len];
+                r.read_exact(&mut name).context("read tenant name")?;
+                let name = std::str::from_utf8(&name).context("tenant name utf8")?;
+                // rebind this connection to the tenant's namespaced
+                // view; a bad name drops the connection (surfaced at
+                // the client as a failed handshake)
+                store = shared.tenants.resolve(name)?;
+                w.write_all(&[STATUS_OK])?;
             }
             other => bail!("unknown op {other}"),
         }
@@ -273,6 +546,19 @@ impl RemoteEmbClient {
         hidden: usize,
         kind: &CodecKind,
     ) -> Result<Self> {
+        Self::connect_opts(addr, n_layers, hidden, kind, None)
+    }
+
+    /// [`connect_with_codec`](Self::connect_with_codec) plus an optional
+    /// TENANT handshake binding this connection to a namespaced session
+    /// on a shared daemon.
+    pub fn connect_opts(
+        addr: impl ToSocketAddrs,
+        n_layers: usize,
+        hidden: usize,
+        kind: &CodecKind,
+        tenant: Option<&str>,
+    ) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect")?;
         stream.set_nodelay(true).ok();
         let mut client = Self {
@@ -288,6 +574,11 @@ impl RemoteEmbClient {
                 .negotiate()
                 .with_context(|| format!("negotiating wire codec {}", kind.name()))?;
         }
+        if let Some(t) = tenant {
+            client
+                .negotiate_tenant(t)
+                .with_context(|| format!("negotiating tenant {t:?}"))?;
+        }
         Ok(client)
     }
 
@@ -295,6 +586,16 @@ impl RemoteEmbClient {
     fn negotiate(&mut self) -> Result<()> {
         let name = self.wire_codec.name();
         self.w.write_all(&[OP_CODEC])?;
+        codec::write_u32(&mut self.w, name.len() as u32)?;
+        self.w.write_all(name.as_bytes())?;
+        self.w.flush()?;
+        self.check_status()
+    }
+
+    /// Send the TENANT handshake binding the connection to a namespace.
+    fn negotiate_tenant(&mut self, name: &str) -> Result<()> {
+        super::tenant::validate_tenant_name(name)?;
+        self.w.write_all(&[OP_TENANT])?;
         codec::write_u32(&mut self.w, name.len() as u32)?;
         self.w.write_all(name.as_bytes())?;
         self.w.flush()?;
@@ -309,10 +610,14 @@ impl RemoteEmbClient {
     fn check_status(&mut self) -> Result<()> {
         let mut st = [0u8; 1];
         self.r.read_exact(&mut st)?;
-        if st[0] != 0 {
-            bail!("server error status {}", st[0]);
+        match st[0] {
+            STATUS_OK => Ok(()),
+            STATUS_BUSY => bail!(
+                "server BUSY: connection or request rejected by admission control \
+                 (raise --max-conns/--max-inflight or retry later)"
+            ),
+            other => bail!("server error status {other}"),
         }
-        Ok(())
     }
 
     /// Batched pull of all layers for `nodes` into a caller buffer.
@@ -445,6 +750,9 @@ pub struct TcpEmbeddingStore {
     codec_kind: CodecKind,
     /// Cached `bytes_per_row(hidden)` of the negotiated codec.
     codec_bpr: usize,
+    /// Tenant namespace every pooled connection binds to at open
+    /// (DESIGN.md §15); `None` = the daemon's root namespace.
+    tenant: Option<String>,
     pool: Mutex<Vec<RemoteEmbClient>>,
     /// Encoded payload bytes this client wrote / read on the wire.
     /// These *replace* whatever the remote daemon's own store metered
@@ -495,6 +803,20 @@ impl TcpEmbeddingStore {
         hidden: usize,
         codec_kind: CodecKind,
     ) -> Result<Self> {
+        Self::connect_opts(addr, n_layers, hidden, codec_kind, None)
+    }
+
+    /// [`connect_with_codec`](Self::connect_with_codec) plus an optional
+    /// tenant namespace: every pooled connection (including reconnects)
+    /// performs the TENANT handshake at open, so a bad name fails here
+    /// rather than mid-round.
+    pub fn connect_opts(
+        addr: impl Into<String>,
+        n_layers: usize,
+        hidden: usize,
+        codec_kind: CodecKind,
+        tenant: Option<String>,
+    ) -> Result<Self> {
         let codec_bpr = codec_kind.build().bytes_per_row(hidden);
         let store = Self {
             addr: addr.into(),
@@ -502,6 +824,7 @@ impl TcpEmbeddingStore {
             hidden,
             codec_kind,
             codec_bpr,
+            tenant,
             pool: Mutex::new(Vec::new()),
             bytes_tx: AtomicUsize::new(0),
             bytes_rx: AtomicUsize::new(0),
@@ -515,7 +838,7 @@ impl TcpEmbeddingStore {
         let mut probe = Vec::new();
         conn.pull_into(&[], false, &mut probe)
             .with_context(|| format!("geometry handshake with {}", store.addr))?;
-        store.pool.lock().unwrap().push(conn);
+        store.pool_guard().push(conn);
         Ok(store)
     }
 
@@ -556,13 +879,32 @@ impl TcpEmbeddingStore {
     }
 
     fn open(&self) -> Result<RemoteEmbClient> {
-        RemoteEmbClient::connect_with_codec(
+        RemoteEmbClient::connect_opts(
             self.addr.as_str(),
             self.n_layers,
             self.hidden,
             &self.codec_kind,
+            self.tenant.as_deref(),
         )
         .with_context(|| format!("embedding store at {}", self.addr))
+    }
+
+    /// Lock the connection pool, recovering from poison: a panic in one
+    /// worker mid-RPC must not cascade panics through every subsequent
+    /// push/pull on other workers. Pooled connections from a poisoned
+    /// pool may be mid-frame, so they are dropped — the next RPC opens
+    /// fresh sockets (counted under `retries` only when an RPC actually
+    /// retried; the clear itself is silent and safe).
+    fn pool_guard(&self) -> std::sync::MutexGuard<'_, Vec<RemoteEmbClient>> {
+        match self.pool.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                self.pool.clear_poison();
+                let mut guard = poisoned.into_inner();
+                guard.clear();
+                guard
+            }
+        }
     }
 
     /// Run `f` on a pooled connection; on failure, reconnect and retry
@@ -573,11 +915,11 @@ impl TcpEmbeddingStore {
     /// connection serves exactly one request at a time.
     fn with_conn<R>(&self, mut f: impl FnMut(&mut RemoteEmbClient) -> Result<R>) -> Result<R> {
         let _slot = self.enter_slot();
-        let pooled = self.pool.lock().unwrap().pop();
+        let pooled = self.pool_guard().pop();
         if let Some(mut conn) = pooled {
             match f(&mut conn) {
                 Ok(r) => {
-                    self.pool.lock().unwrap().push(conn);
+                    self.pool_guard().push(conn);
                     return Ok(r);
                 }
                 Err(first) => {
@@ -589,14 +931,14 @@ impl TcpEmbeddingStore {
                         .with_context(|| format!("reconnect after RPC failure ({first:#})"))?;
                     let r = f(&mut fresh)
                         .with_context(|| format!("retried after RPC failure ({first:#})"))?;
-                    self.pool.lock().unwrap().push(fresh);
+                    self.pool_guard().push(fresh);
                     return Ok(r);
                 }
             }
         }
         let mut fresh = self.open()?;
         let r = f(&mut fresh)?;
-        self.pool.lock().unwrap().push(fresh);
+        self.pool_guard().push(fresh);
         Ok(r)
     }
 }
@@ -651,10 +993,14 @@ impl EmbeddingStore for TcpEmbeddingStore {
     }
 
     fn describe(&self) -> String {
-        if self.codec_kind.is_raw() {
+        let base = if self.codec_kind.is_raw() {
             format!("tcp({})", self.addr)
         } else {
             format!("tcp({}, {})", self.addr, self.codec_kind.name())
+        };
+        match &self.tenant {
+            Some(t) => format!("tenant({t} over {base})"),
+            None => base,
         }
     }
 }
@@ -929,6 +1275,134 @@ mod tests {
         tcp.push(&[1], &[vec![0.0; 4], vec![0.0; 4]]).unwrap();
         assert_eq!(tcp.in_flight(), 0, "lease leaked after a completed RPC");
         assert!(tcp.peak_in_flight() >= 1);
+        d.shutdown();
+    }
+
+    #[test]
+    fn accept_loop_reaps_finished_handlers() {
+        let (d, _server) = daemon();
+        // churn: 50 connect/use/disconnect cycles, strictly sequential
+        for i in 0..50u32 {
+            let mut c = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+            c.push(&[i], &[rows(&[i], 4, 0.0), rows(&[i], 4, 1.0)]).unwrap();
+            drop(c);
+        }
+        // the sweep runs on the accept thread: give it a few iterations
+        // to notice the hangups, then both gauges must hit zero
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let s = d.stats();
+            if s.live_conns == 0 && s.handler_threads == 0 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "handler threads never reaped: {:?}",
+                d.stats()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let s = d.stats();
+        assert_eq!(s.total_conns, 50);
+        assert_eq!(s.rejected_conns, 0);
+        assert!(s.peak_conns >= 1);
+        d.shutdown();
+    }
+
+    #[test]
+    fn over_cap_connection_gets_a_named_busy_error() {
+        let server = Arc::new(EmbeddingServer::new(2, 4, NetConfig::default()));
+        let d = EmbServerDaemon::start_with(
+            Arc::clone(&server) as Arc<dyn EmbeddingStore>,
+            "127.0.0.1:0",
+            DaemonConfig {
+                max_conns: 1,
+                max_inflight: 0,
+            },
+        )
+        .unwrap();
+        // first client occupies the only slot (stats proves it's live)
+        let mut held = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+        held.stats().unwrap();
+        // second client must get a loud BUSY, not a hang or a bare I/O
+        // error — poll briefly: the accept thread admits asynchronously
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let err = loop {
+            let mut probe = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+            match probe.stats() {
+                Err(e) => break e,
+                Ok(_) => {
+                    // raced the slot (held conn not yet counted): retry
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "over-cap connection was never rejected"
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+            }
+        };
+        assert!(format!("{err:#}").contains("BUSY"), "{err:#}");
+        assert!(d.stats().rejected_conns >= 1, "{:?}", d.stats());
+        // the held connection keeps working at full service
+        held.push(&[7], &[rows(&[7], 4, 0.0), rows(&[7], 4, 1.0)]).unwrap();
+        let (got, _) = held.pull(&[7]).unwrap();
+        assert_eq!(got[0], rows(&[7], 4, 0.0));
+        d.shutdown();
+    }
+
+    fn tenant_store(addr: &str, t: &str) -> TcpEmbeddingStore {
+        let tenant = Some(t.to_string());
+        TcpEmbeddingStore::connect_opts(addr.to_string(), 2, 4, CodecKind::Raw, tenant).unwrap()
+    }
+
+    #[test]
+    fn tenant_handshake_isolates_sessions_on_one_daemon() {
+        let (d, server) = daemon();
+        let addr = d.addr.to_string();
+        let alice = tenant_store(&addr, "alice");
+        let bob = tenant_store(&addr, "bob");
+        let nodes = [1u32, 2, 3];
+        let la = rows(&nodes, 4, 10.0);
+        let lb = rows(&nodes, 4, 20.0);
+        alice.push(&nodes, &[la.clone(), la.clone()]).unwrap();
+        bob.push(&nodes, &[lb.clone(), lb.clone()]).unwrap();
+        // same ids, different values per tenant
+        let mut buf = Vec::new();
+        alice.pull_into(&nodes, false, &mut buf).unwrap();
+        assert_eq!(buf[0], la);
+        bob.pull_into(&nodes, false, &mut buf).unwrap();
+        assert_eq!(buf[0], lb);
+        // per-tenant stats are isolated
+        assert_eq!(alice.stats().unwrap().nodes, 3);
+        assert_eq!(bob.stats().unwrap().nodes, 3);
+        // an untenanted connection sees the root namespace: the tenant
+        // rows live at tagged ids, so ids 1..=3 are still zero there
+        let root = TcpEmbeddingStore::connect(addr, 2, 4).unwrap();
+        root.pull_into(&nodes, false, &mut buf).unwrap();
+        assert!(buf[0].iter().all(|&v| v == 0.0));
+        assert_eq!(d.stats().tenants, 2);
+        assert_eq!(server.stored_nodes(), 6);
+        assert!(alice.describe().starts_with("tenant(alice over tcp("));
+        d.shutdown();
+    }
+
+    #[test]
+    fn pool_lock_poison_recovers_instead_of_cascading() {
+        let (d, _server) = daemon();
+        let tcp = Arc::new(TcpEmbeddingStore::connect(d.addr.to_string(), 2, 4).unwrap());
+        // poison the pool mutex: a worker panics while holding the lock
+        let t2 = Arc::clone(&tcp);
+        let _ = std::thread::spawn(move || {
+            let _guard = t2.pool.lock().unwrap();
+            panic!("worker dies holding the pool lock");
+        })
+        .join();
+        // subsequent RPCs must succeed instead of cascading the panic
+        tcp.push(&[3], &[rows(&[3], 4, 0.0), rows(&[3], 4, 1.0)]).unwrap();
+        let mut buf = Vec::new();
+        tcp.pull_into(&[3], false, &mut buf).unwrap();
+        assert_eq!(buf[0], rows(&[3], 4, 0.0));
+        assert_eq!(tcp.stats().unwrap().nodes, 1);
         d.shutdown();
     }
 }

@@ -29,9 +29,68 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::{ensure, Result};
 
 use super::embedding_server::EmbeddingServer;
-use super::metrics::{RpcKind, RpcRecord};
+use super::metrics::{ReplicaLatency, RpcKind, RpcRecord};
 use super::netsim::NetConfig;
 use crate::util::pool;
+
+/// Read-routing policy of [`ShardedStore::pull_into`]: which owner a
+/// replicated read tries first (DESIGN.md §15).
+///
+/// Selection only reorders the *already-filtered* effective owner list —
+/// quarantined owners are excluded before ordering, and failover still
+/// walks the rest of the list on error. Because pushes land on **every**
+/// owner of a row, all healthy owners hold bit-identical bytes: the
+/// policy changes which socket serves a read, never the values, so
+/// accuracy curves are bit-identical under either policy
+/// (`tests/store_parity.rs`, `tests/service.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReplicaSelect {
+    /// Always try owners in map order (primary first, then replicas) —
+    /// the historical primary-then-failover rule.
+    Primary,
+    /// Order owners by their EWMA observed pull latency, fastest first
+    /// ([`ReplicaLatency`]). Owners without a sample keep their map
+    /// order behind the measured ones, so a cold tracker degenerates to
+    /// `Primary` exactly.
+    #[default]
+    Fastest,
+}
+
+impl ReplicaSelect {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "primary" => Ok(ReplicaSelect::Primary),
+            "fastest" => Ok(ReplicaSelect::Fastest),
+            other => anyhow::bail!(
+                "unknown replica-select policy {other:?} (expected primary|fastest)"
+            ),
+        }
+    }
+
+    /// `OPTIMES_REPLICA_SELECT` (`--replica-select`); default `fastest`.
+    /// A malformed value falls back to the default rather than panicking
+    /// mid-construction — the CLI validates the spelling up front.
+    pub fn from_env() -> Self {
+        std::env::var("OPTIMES_REPLICA_SELECT")
+            .ok()
+            .and_then(|v| Self::parse(&v).ok())
+            .unwrap_or_default()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaSelect::Primary => "primary",
+            ReplicaSelect::Fastest => "fastest",
+        }
+    }
+}
+
+/// Failed pull attempts fold into the tracker as their elapsed time
+/// scaled by this penalty (floored at [`FAIL_FLOOR_SECS`]), so an owner
+/// that errors instantly still drifts behind its healthy peers instead
+/// of being retried first forever.
+const FAIL_PENALTY: f64 = 4.0;
+const FAIL_FLOOR_SECS: f64 = 1e-6;
 
 /// Aggregate store health, as reported by `stats` RPCs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -493,6 +552,9 @@ pub struct ShardedStore {
     hidden: usize,
     routing: RwLock<Routing>,
     failovers: AtomicUsize,
+    /// Per-backend EWMA pull latency feeding [`ReplicaSelect::Fastest`].
+    latency: ReplicaLatency,
+    select: ReplicaSelect,
 }
 
 impl ShardedStore {
@@ -533,13 +595,34 @@ impl ShardedStore {
             );
         }
         let buckets = (0..map.n_buckets()).map(|_| Mutex::new(BucketState::default())).collect();
+        let latency = ReplicaLatency::new(backends.len());
         Ok(Self {
             backends,
             n_layers,
             hidden,
             routing: RwLock::new(Routing { map, buckets }),
             failovers: AtomicUsize::new(0),
+            latency,
+            select: ReplicaSelect::from_env(),
         })
+    }
+
+    /// Override the read-routing policy (constructors default to
+    /// [`ReplicaSelect::from_env`]).
+    pub fn with_replica_select(mut self, select: ReplicaSelect) -> Self {
+        self.select = select;
+        self
+    }
+
+    /// The active read-routing policy.
+    pub fn replica_select(&self) -> ReplicaSelect {
+        self.select
+    }
+
+    /// Current EWMA pull-latency estimate of a backend (None until the
+    /// first read touches it). Observability for `loadgen`/tests.
+    pub fn observed_latency(&self, backend: usize) -> Option<f64> {
+        self.latency.get(backend)
     }
 
     /// Convenience: N in-process slab servers, no replication
@@ -588,27 +671,41 @@ impl ShardedStore {
         self.failovers.load(Ordering::Relaxed)
     }
 
-    /// Pull `sub_nodes` trying each owner in read-preference order;
-    /// returns the first success. Absorbed failures are counted into the
-    /// failover gauge.
+    /// Pull `sub_nodes` trying each owner in read-preference order —
+    /// map order under [`ReplicaSelect::Primary`], measured-fastest
+    /// first under [`ReplicaSelect::Fastest`] — and return the first
+    /// success. Every attempt's wall time feeds the per-backend EWMA
+    /// (failures at a penalty), so routing adapts to slow or flapping
+    /// owners within a few pulls. Absorbed failures are counted into
+    /// the failover gauge.
     fn pull_one_group(
         &self,
         owners: &[u32],
         sub_nodes: &[u32],
         on_demand: bool,
     ) -> Result<(Vec<Vec<f32>>, RpcRecord)> {
+        let ordered: Vec<u32> = match self.select {
+            ReplicaSelect::Primary => owners.to_vec(),
+            ReplicaSelect::Fastest => self.latency.sorted(owners),
+        };
         let mut fails = 0usize;
         let mut last: Option<anyhow::Error> = None;
-        for &b in owners {
+        for &b in &ordered {
             let mut buf = Vec::new();
+            let t0 = std::time::Instant::now();
             match self.backends[b as usize].pull_into(sub_nodes, on_demand, &mut buf) {
                 Ok(rec) => {
+                    self.latency.record(b as usize, t0.elapsed().as_secs_f64());
                     if fails > 0 {
                         self.failovers.fetch_add(fails, Ordering::Relaxed);
                     }
                     return Ok((buf, rec));
                 }
                 Err(e) => {
+                    self.latency.record(
+                        b as usize,
+                        t0.elapsed().as_secs_f64().max(FAIL_FLOOR_SECS) * FAIL_PENALTY,
+                    );
                     fails += 1;
                     last = Some(e);
                 }
@@ -1299,5 +1396,89 @@ mod tests {
             .filter(|&b| map.owners_of_bucket(b).contains(&1))
             .collect();
         assert_eq!(changed, expect);
+    }
+
+    #[test]
+    fn replica_select_parse_and_env_default() {
+        assert_eq!(ReplicaSelect::parse("primary").unwrap(), ReplicaSelect::Primary);
+        assert_eq!(ReplicaSelect::parse(" Fastest ").unwrap(), ReplicaSelect::Fastest);
+        assert!(ReplicaSelect::parse("turbo").is_err());
+        assert_eq!(ReplicaSelect::default(), ReplicaSelect::Fastest);
+        assert_eq!(ReplicaSelect::Fastest.name(), "fastest");
+    }
+
+    #[test]
+    fn latency_aware_selection_routes_reads_off_the_slow_replica() {
+        use crate::coordinator::resilience::{Fault, FaultStore};
+        let h = 4;
+        // 2 backends, R=1: every bucket is owned by both. Backend 0
+        // really sleeps 20 ms per RPC; backend 1 is an unwrapped slab.
+        let slow = FaultStore::new(
+            dyn_server(h),
+            "slow",
+            vec![Fault::DelayEvery { every: 1, secs: 0.02 }],
+        )
+        .with_real_delays();
+        let handle = slow.handle();
+        let backends: Vec<Arc<dyn EmbeddingStore>> = vec![Arc::new(slow), dyn_server(h)];
+        let store = ShardedStore::replicated(backends, 1)
+            .unwrap()
+            .with_replica_select(ReplicaSelect::Fastest);
+        let nodes: Vec<u32> = (0..64).collect();
+        store
+            .push(&nodes, &[rows(&nodes, h, 0.0), rows(&nodes, h, 1.0)])
+            .unwrap();
+        // warmup pulls teach the tracker both backends' latencies (the
+        // buckets whose primary is 0 pay the 20 ms delay once or twice)
+        for _ in 0..3 {
+            store.pull(&nodes, false).unwrap();
+        }
+        assert!(
+            store.observed_latency(0).unwrap() > store.observed_latency(1).unwrap(),
+            "tracker must rank the delayed backend slower"
+        );
+        // measurement window: pulls only (pushes fan out to all owners
+        // by design, so only reads are selectable)
+        let before = handle.calls();
+        for _ in 0..10 {
+            let (got, _) = store.pull(&nodes, false).unwrap();
+            assert_eq!(got[0], rows(&nodes, h, 0.0)); // values never change
+        }
+        assert_eq!(
+            handle.calls(),
+            before,
+            "fastest-first selection must stop reading the slow backend"
+        );
+    }
+
+    #[test]
+    fn primary_select_ignores_latency_measurements() {
+        use crate::coordinator::resilience::{Fault, FaultStore};
+        let h = 4;
+        let slow = FaultStore::new(
+            dyn_server(h),
+            "slow",
+            vec![Fault::DelayEvery { every: 1, secs: 0.005 }],
+        )
+        .with_real_delays();
+        let handle = slow.handle();
+        let backends: Vec<Arc<dyn EmbeddingStore>> = vec![Arc::new(slow), dyn_server(h)];
+        let store = ShardedStore::replicated(backends, 1)
+            .unwrap()
+            .with_replica_select(ReplicaSelect::Primary);
+        let nodes: Vec<u32> = (0..64).collect();
+        store
+            .push(&nodes, &[rows(&nodes, h, 0.0), rows(&nodes, h, 1.0)])
+            .unwrap();
+        let after_push = handle.calls();
+        for _ in 0..5 {
+            store.pull(&nodes, false).unwrap();
+        }
+        // under the historical policy the slow backend keeps serving the
+        // buckets it is primary for, no matter what the tracker measured
+        assert!(
+            handle.calls() > after_push,
+            "primary selection must keep reading map-order primaries"
+        );
     }
 }

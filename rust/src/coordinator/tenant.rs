@@ -1,0 +1,376 @@
+//! Multi-tenant namespaces over the embedding plane (DESIGN.md §15).
+//!
+//! [`TenantStore`] is a decorator in the [`FaultStore`]/`CodecStore`
+//! family: it maps every vertex id into a tenant-private region of the
+//! u32 id space by prefixing an 8-bit tenant tag onto the id's high
+//! bits, so many concurrent federated sessions can share one physical
+//! store (one daemon, one slab, one shard topology) without ever seeing
+//! each other's rows. The mapping is pure arithmetic — no per-row
+//! lookup table — so it composes with sharding, replication, codecs,
+//! and snapshots unchanged, and the bucket spread of
+//! [`ShardedStore`](super::store::ShardedStore) stays uniform (ids are
+//! avalanche-hashed before routing).
+//!
+//! [`TenantRegistry`] is the daemon-side directory: the wire handshake
+//! (`OP_TENANT`, `net_transport.rs`) resolves a session name to its
+//! `TenantStore`, creating one with the next free tag on first arrival.
+//! Tags are assigned in arrival order, so a fixed connection order is
+//! reproducible; isolation never depends on *which* tag a tenant got,
+//! only that tags are distinct.
+//!
+//! Per-tenant stats are isolated: each decorator meters its own logical
+//! occupancy and traffic, so a tenant's `stats` RPC reports what *that
+//! session* stored and moved — not the physical totals of the shared
+//! plane (shared-plane health like failovers and the routing epoch is
+//! still forwarded, since it affects every tenant).
+//!
+//! [`FaultStore`]: super::resilience::FaultStore
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use super::metrics::RpcRecord;
+use super::store::{EmbeddingStore, StoreStats};
+
+/// High bits of the u32 id space reserved for the tenant tag.
+pub const TENANT_TAG_BITS: u32 = 8;
+
+/// Distinct tenants one shared store can host (tags `1..=255`; tag 0 is
+/// the untagged root namespace and is never assigned).
+pub const MAX_TENANTS: usize = (1 << TENANT_TAG_BITS) - 1;
+
+/// Exclusive upper bound on per-tenant vertex ids (2^24): ids at or
+/// above this would collide with another tenant's tag prefix, so they
+/// are rejected loudly instead of silently aliasing.
+pub const TENANT_NODE_LIMIT: u32 = 1 << (32 - TENANT_TAG_BITS);
+
+/// Longest accepted tenant name (bounds the wire handshake frame).
+pub const MAX_TENANT_NAME: usize = 64;
+
+/// Validate a tenant/session name: non-empty, bounded, and limited to
+/// `[A-Za-z0-9._-]` so names embed cleanly in wire frames, file names,
+/// and `describe()` strings.
+pub fn validate_tenant_name(name: &str) -> Result<()> {
+    ensure!(!name.is_empty(), "tenant name must not be empty");
+    ensure!(
+        name.len() <= MAX_TENANT_NAME,
+        "tenant name {name:?} is {} bytes, max {MAX_TENANT_NAME}",
+        name.len()
+    );
+    ensure!(
+        name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+        "tenant name {name:?} may only contain [A-Za-z0-9._-]"
+    );
+    Ok(())
+}
+
+/// Namespace decorator: rewrites vertex ids as `(tag << 24) | id` on the
+/// way into the inner store, giving this tenant a private 16M-id region
+/// of the shared plane. See the module docs for the full contract.
+pub struct TenantStore {
+    inner: Arc<dyn EmbeddingStore>,
+    name: String,
+    tag: u32,
+    /// This tenant's logical occupancy (tenant-local ids ever pushed).
+    nodes: Mutex<HashSet<u32>>,
+    /// This tenant's share of the wire traffic (encoded / raw-f32
+    /// equivalent, from the [`RpcRecord`]s its own calls produced).
+    bytes_tx: AtomicUsize,
+    bytes_rx: AtomicUsize,
+    raw_tx: AtomicUsize,
+    raw_rx: AtomicUsize,
+}
+
+impl TenantStore {
+    pub fn new(inner: Arc<dyn EmbeddingStore>, name: &str, tag: u32) -> Result<Self> {
+        validate_tenant_name(name)?;
+        ensure!(
+            (1..=MAX_TENANTS as u32).contains(&tag),
+            "tenant tag {tag} out of range 1..={MAX_TENANTS}"
+        );
+        Ok(Self {
+            inner,
+            name: name.to_string(),
+            tag,
+            nodes: Mutex::new(HashSet::new()),
+            bytes_tx: AtomicUsize::new(0),
+            bytes_rx: AtomicUsize::new(0),
+            raw_tx: AtomicUsize::new(0),
+            raw_rx: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn tag(&self) -> u32 {
+        self.tag
+    }
+
+    /// Map tenant-local ids into this tenant's region of the shared id
+    /// space, rejecting ids that would overflow into a neighbor's tag.
+    fn map_ids(&self, nodes: &[u32]) -> Result<Vec<u32>> {
+        nodes
+            .iter()
+            .map(|&n| {
+                ensure!(
+                    n < TENANT_NODE_LIMIT,
+                    "node id {n} exceeds the per-tenant id space \
+                     ({TENANT_NODE_LIMIT} ids with {TENANT_TAG_BITS} tag bits) \
+                     for tenant {:?}",
+                    self.name
+                );
+                Ok((self.tag << (32 - TENANT_TAG_BITS)) | n)
+            })
+            .collect()
+    }
+
+    /// Raw-f32 equivalent of a `rows`-row batch across all layers.
+    fn raw_bytes(&self, rows: usize) -> usize {
+        rows * self.inner.n_layers() * self.inner.hidden() * std::mem::size_of::<f32>()
+    }
+}
+
+impl EmbeddingStore for TenantStore {
+    fn n_layers(&self) -> usize {
+        self.inner.n_layers()
+    }
+
+    fn hidden(&self) -> usize {
+        self.inner.hidden()
+    }
+
+    fn push(&self, nodes: &[u32], per_layer: &[Vec<f32>]) -> Result<RpcRecord> {
+        let mapped = self.map_ids(nodes)?;
+        let rec = self.inner.push(&mapped, per_layer)?;
+        self.bytes_tx.fetch_add(rec.bytes, Ordering::Relaxed);
+        self.raw_tx.fetch_add(self.raw_bytes(nodes.len()), Ordering::Relaxed);
+        let mut set = self.nodes.lock().unwrap();
+        set.extend(nodes.iter().copied());
+        Ok(rec)
+    }
+
+    fn pull_into(
+        &self,
+        nodes: &[u32],
+        on_demand: bool,
+        out: &mut Vec<Vec<f32>>,
+    ) -> Result<RpcRecord> {
+        let mapped = self.map_ids(nodes)?;
+        let rec = self.inner.pull_into(&mapped, on_demand, out)?;
+        self.bytes_rx.fetch_add(rec.bytes, Ordering::Relaxed);
+        self.raw_rx.fetch_add(self.raw_bytes(nodes.len()), Ordering::Relaxed);
+        Ok(rec)
+    }
+
+    fn stats(&self) -> Result<StoreStats> {
+        // occupancy and traffic are this tenant's own; failovers and the
+        // routing epoch are shared-plane health that affects every
+        // tenant, so they forward from the physical store
+        let shared = self.inner.stats()?;
+        let nodes = self.nodes.lock().unwrap().len();
+        Ok(StoreStats {
+            nodes,
+            rows: nodes * self.inner.n_layers(),
+            failovers: shared.failovers,
+            epoch: shared.epoch,
+            bytes_tx: self.bytes_tx.load(Ordering::Relaxed),
+            bytes_rx: self.bytes_rx.load(Ordering::Relaxed),
+            raw_tx: self.raw_tx.load(Ordering::Relaxed),
+            raw_rx: self.raw_rx.load(Ordering::Relaxed),
+        })
+    }
+
+    fn epoch(&self) -> u64 {
+        self.inner.epoch()
+    }
+
+    fn codec(&self) -> String {
+        self.inner.codec()
+    }
+
+    fn describe(&self) -> String {
+        format!("tenant({}#{} over {})", self.name, self.tag, self.inner.describe())
+    }
+}
+
+/// Daemon-side tenant directory: one [`TenantStore`] per session name
+/// over a shared base store, created on first arrival with the next
+/// free tag (`1..=`[`MAX_TENANTS`], arrival order).
+pub struct TenantRegistry {
+    base: Arc<dyn EmbeddingStore>,
+    tenants: Mutex<HashMap<String, Arc<TenantStore>>>,
+}
+
+impl TenantRegistry {
+    pub fn new(base: Arc<dyn EmbeddingStore>) -> Self {
+        Self {
+            base,
+            tenants: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The shared base store (what untagged connections serve from).
+    pub fn base(&self) -> Arc<dyn EmbeddingStore> {
+        Arc::clone(&self.base)
+    }
+
+    /// Resolve a session name to its namespace, registering it with the
+    /// next free tag on first sight. Fails loudly on a malformed name
+    /// or when all [`MAX_TENANTS`] tags are taken.
+    pub fn resolve(&self, name: &str) -> Result<Arc<TenantStore>> {
+        validate_tenant_name(name)?;
+        let mut tenants = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(existing) = tenants.get(name) {
+            return Ok(Arc::clone(existing));
+        }
+        ensure!(
+            tenants.len() < MAX_TENANTS,
+            "tenant registry full: {MAX_TENANTS} tenants already registered, \
+             cannot admit {name:?}"
+        );
+        let tag = tenants.len() as u32 + 1;
+        let store = Arc::new(TenantStore::new(Arc::clone(&self.base), name, tag)?);
+        tenants.insert(name.to_string(), Arc::clone(&store));
+        Ok(store)
+    }
+
+    /// Registered tenant count.
+    pub fn len(&self) -> usize {
+        self.tenants.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered names, sorted (for stable daemon status lines).
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .tenants
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::embedding_server::EmbeddingServer;
+    use crate::coordinator::netsim::NetConfig;
+
+    const H: usize = 4;
+
+    fn slab() -> Arc<dyn EmbeddingStore> {
+        Arc::new(EmbeddingServer::new(2, H, NetConfig::default()))
+    }
+
+    fn rows(nodes: &[u32], salt: f32) -> Vec<f32> {
+        nodes
+            .iter()
+            .flat_map(|&n| (0..H).map(move |j| n as f32 * 10.0 + j as f32 + salt))
+            .collect()
+    }
+
+    #[test]
+    fn name_validation() {
+        validate_tenant_name("alice-1.prod_x").unwrap();
+        assert!(validate_tenant_name("").is_err());
+        assert!(validate_tenant_name("has space").is_err());
+        assert!(validate_tenant_name("uni\u{e9}").is_err());
+        assert!(validate_tenant_name(&"x".repeat(MAX_TENANT_NAME + 1)).is_err());
+    }
+
+    #[test]
+    fn tenants_on_one_slab_are_isolated() {
+        let base = slab();
+        let a = TenantStore::new(Arc::clone(&base), "alice", 1).unwrap();
+        let b = TenantStore::new(Arc::clone(&base), "bob", 2).unwrap();
+        let nodes: Vec<u32> = (0..32).collect();
+        a.push(&nodes, &[rows(&nodes, 0.0), rows(&nodes, 1.0)]).unwrap();
+        b.push(&nodes, &[rows(&nodes, 5.0), rows(&nodes, 6.0)]).unwrap();
+
+        // the SAME ids resolve to each tenant's own values
+        let (got_a, _) = a.pull(&nodes, false).unwrap();
+        let (got_b, _) = b.pull(&nodes, false).unwrap();
+        assert_eq!(got_a[0], rows(&nodes, 0.0));
+        assert_eq!(got_b[0], rows(&nodes, 5.0));
+
+        // a third namespace sees zeros everywhere
+        let c = TenantStore::new(Arc::clone(&base), "carol", 3).unwrap();
+        let (got_c, _) = c.pull(&nodes, false).unwrap();
+        assert!(got_c.iter().all(|l| l.iter().all(|&v| v == 0.0)));
+
+        // and the untagged root namespace does too (tag regions are
+        // disjoint from low untagged ids)
+        let (got_root, _) = base.pull(&nodes, false).unwrap();
+        assert!(got_root.iter().all(|l| l.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn per_tenant_stats_are_isolated() {
+        let base = slab();
+        let a = TenantStore::new(Arc::clone(&base), "alice", 1).unwrap();
+        let b = TenantStore::new(Arc::clone(&base), "bob", 2).unwrap();
+        let nodes: Vec<u32> = (0..10).collect();
+        a.push(&nodes, &[rows(&nodes, 0.0), rows(&nodes, 1.0)]).unwrap();
+        let sa = a.stats().unwrap();
+        let sb = b.stats().unwrap();
+        assert_eq!((sa.nodes, sa.rows), (10, 20));
+        assert_eq!((sb.nodes, sb.rows), (0, 0));
+        assert!(sa.raw_tx > 0 && sb.raw_tx == 0);
+        // the physical store holds both tenants' rows
+        assert_eq!(base.stats().unwrap().nodes, 10);
+    }
+
+    #[test]
+    fn oversized_node_ids_are_rejected_loudly() {
+        let a = TenantStore::new(slab(), "alice", 1).unwrap();
+        let err = a
+            .push(&[TENANT_NODE_LIMIT], &[vec![0.0; H], vec![0.0; H]])
+            .err()
+            .expect("id at the limit must be rejected");
+        assert!(format!("{err:#}").contains("per-tenant id space"), "{err:#}");
+        assert!(a.pull(&[u32::MAX], false).is_err());
+        // the largest legal id round-trips
+        let last = TENANT_NODE_LIMIT - 1;
+        a.push(&[last], &[vec![7.0; H], vec![8.0; H]]).unwrap();
+        let (got, _) = a.pull(&[last], false).unwrap();
+        assert_eq!(got[0], vec![7.0; H]);
+    }
+
+    #[test]
+    fn registry_assigns_tags_in_arrival_order() {
+        let reg = TenantRegistry::new(slab());
+        let a = reg.resolve("alice").unwrap();
+        let b = reg.resolve("bob").unwrap();
+        assert_eq!((a.tag(), b.tag()), (1, 2));
+        // resolving again returns the same namespace, not a new tag
+        let a2 = reg.resolve("alice").unwrap();
+        assert_eq!(a2.tag(), 1);
+        assert!(Arc::ptr_eq(&a, &a2));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["alice".to_string(), "bob".to_string()]);
+        assert!(reg.resolve("bad name").is_err());
+    }
+
+    #[test]
+    fn constructor_rejects_bad_tags_and_names() {
+        assert!(TenantStore::new(slab(), "alice", 0).is_err());
+        assert!(TenantStore::new(slab(), "alice", MAX_TENANTS as u32 + 1).is_err());
+        assert!(TenantStore::new(slab(), "no/slash", 1).is_err());
+        let t = TenantStore::new(slab(), "alice", 3).unwrap();
+        assert_eq!(t.describe(), "tenant(alice#3 over in-process)");
+        assert_eq!(t.codec(), "raw");
+        assert_eq!(t.epoch(), 0);
+    }
+}

@@ -49,6 +49,12 @@
 //!   checkpoint bundle into `DIR` every `EVERY` rounds (`run
 //!   --checkpoint`; default every round). `optimes resume DIR` continues
 //!   it bit-for-bit (DESIGN.md §14).
+//! * `OPTIMES_TENANT=NAME` — bind the session to a named namespace on
+//!   the embedding plane (`run --tenant`; DESIGN.md §15). Many sessions
+//!   share one daemon, each seeing only its own rows and stats.
+//! * `OPTIMES_REPLICA_SELECT=primary|fastest` — replica read policy of
+//!   sharded stores (`run --replica-select`; DESIGN.md §15). `fastest`
+//!   (default) routes each read to the lowest-EWMA-latency owner.
 
 pub mod figures;
 pub mod report;
@@ -61,6 +67,7 @@ use crate::coordinator::metrics::RoundMetrics;
 use crate::coordinator::{
     sharded_desc, EmbeddingServer, EmbeddingStore, FaultSpec, NetConfig, RoundObserver,
     SessionBuilder, SessionConfig, SessionMetrics, ShardedStore, Strategy, TcpEmbeddingStore,
+    TenantStore,
 };
 use crate::graph::datasets::{self, DatasetPreset};
 use crate::graph::Graph;
@@ -100,7 +107,8 @@ pub fn record_bench_section(section: &str, payload: crate::util::json::JsonObj) 
     let mut meta = JsonObj::new();
     meta.set(
         "regenerate",
-        "cargo bench --bench micro_substrates && cargo bench --bench bench_roundtime",
+        "cargo bench --bench micro_substrates && cargo bench --bench bench_roundtime \
+         && cargo bench --bench loadgen",
     );
     root.set("_meta", meta);
     root.set(section, payload);
@@ -209,6 +217,15 @@ pub fn wire_codec_spec() -> Result<CodecSpec> {
     wire::spec_from_env()
 }
 
+/// Tenant namespace of the session (`OPTIMES_TENANT`; `None` = the
+/// classic single-session store, DESIGN.md §15).
+pub fn tenant() -> Option<String> {
+    match std::env::var("OPTIMES_TENANT") {
+        Ok(t) if !t.trim().is_empty() => Some(t.trim().to_string()),
+        _ => None,
+    }
+}
+
 /// Read `OPTIMES_SERVER` / `OPTIMES_SHARDS` into a [`StoreSpec`].
 pub fn store_spec() -> StoreSpec {
     if let Ok(s) = std::env::var("OPTIMES_SERVER") {
@@ -237,11 +254,18 @@ pub fn store_spec() -> StoreSpec {
 /// `fault(..)` wrapper in the session's own describe string.)
 pub fn store_desc() -> String {
     let codec = wire_codec_spec().unwrap_or_default();
+    let ten = tenant();
     let tcp_inner = |addr: &str| {
-        if codec.codec.is_raw() {
+        let base = if codec.codec.is_raw() {
             format!("tcp({addr})")
         } else {
             format!("tcp({addr}, {})", codec.codec.name())
+        };
+        // TCP tenancy is negotiated per connection: the wrapper shows up
+        // on each backend, inside any sharded composition
+        match &ten {
+            Some(t) => format!("tenant({t} over {base})"),
+            None => base,
         }
     };
     let base = match store_spec() {
@@ -252,7 +276,7 @@ pub fn store_desc() -> String {
     };
     // TCP backends carry the codec on the wire; model backends get the
     // CodecStore wrapper — mirror `make_store`'s composition exactly
-    if matches!(store_spec(), StoreSpec::Tcp(_)) {
+    let desc = if matches!(store_spec(), StoreSpec::Tcp(_)) {
         CodecSpec {
             codec: crate::wire::CodecKind::Raw,
             delta: codec.delta,
@@ -260,6 +284,14 @@ pub fn store_desc() -> String {
         .wrapped_desc(base)
     } else {
         codec.wrapped_desc(base)
+    };
+    // in-process tenancy is a client-side decorator around the whole
+    // composition — mirror `make_store` exactly
+    match (&ten, store_spec()) {
+        (Some(t), StoreSpec::InProcess | StoreSpec::ShardedInProcess(_)) => {
+            format!("tenant({t}#1 over {desc})")
+        }
+        _ => desc,
     }
 }
 
@@ -281,6 +313,7 @@ pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingS
     let replicas = store_replicas();
     let spec = fault_spec()?;
     let wire_spec = wire_codec_spec()?;
+    let ten = tenant();
     let store: Arc<dyn EmbeddingStore> = match store_spec() {
         StoreSpec::InProcess => {
             ensure!(
@@ -300,11 +333,12 @@ pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingS
                 .iter()
                 .enumerate()
                 .map(|(i, a)| {
-                    TcpEmbeddingStore::connect_with_codec(
+                    TcpEmbeddingStore::connect_opts(
                         a.as_str(),
                         n_layers,
                         hidden,
                         wire_spec.codec.clone(),
+                        ten.clone(),
                     )
                     .map(|s| spec.wrap_shard(i, Arc::new(s)))
                 })
@@ -323,6 +357,14 @@ pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingS
                 .collect();
             wire_spec.wrap_store(Arc::new(ShardedStore::replicated(backends, replicas)?), net)
         }
+    };
+    // TCP tenancy already rode the per-connection handshake above;
+    // in-process sessions get the client-side namespace decorator
+    let store = match (&ten, store_spec()) {
+        (Some(t), StoreSpec::InProcess | StoreSpec::ShardedInProcess(_)) => {
+            Arc::new(TenantStore::new(store, t, 1)?) as Arc<dyn EmbeddingStore>
+        }
+        _ => store,
     };
     Ok(store)
 }
@@ -448,9 +490,15 @@ pub fn session_key(
     } else {
         format!("_c{}", churn.spec_string().replace(':', "-").replace(',', "+"))
     };
+    // tenancy doesn't change the curve, but namespaced sessions get
+    // their own slot so multi-tenant runs never read each other's caches
+    let tsuffix = match tenant() {
+        Some(t) => format!("_t{t}"),
+        None => String::new(),
+    };
     format!(
         "{dataset}_{strategy}_{}_k{fanout}_c{clients}_r{rounds}_s{}_{}\
-         {suffix}{psuffix}{lsuffix}{ksuffix}{bsuffix}{csuffix}",
+         {suffix}{psuffix}{lsuffix}{ksuffix}{bsuffix}{csuffix}{tsuffix}",
         model.as_str(),
         dataset_scale(),
         engine_kind()

@@ -25,9 +25,9 @@ use anyhow::{bail, Result};
 
 use optimes::coordinator::metrics::paper_target_accuracy;
 use optimes::coordinator::{
-    aggregation, ClientLatency, EmbServerDaemon, EmbeddingServer, EmbeddingStore, FaultSpec,
-    NetConfig, RoundMetrics, RoundObserver, RoundPolicySpec, SessionBuilder, SessionConfig,
-    SessionMetrics, ShardedStore, Strategy,
+    aggregation, ClientLatency, DaemonConfig, EmbServerDaemon, EmbeddingServer, EmbeddingStore,
+    FaultSpec, NetConfig, ReplicaSelect, RoundMetrics, RoundObserver, RoundPolicySpec,
+    SessionBuilder, SessionConfig, SessionMetrics, ShardedStore, Strategy,
 };
 use optimes::graph::datasets;
 use optimes::harness::{self, figures};
@@ -117,6 +117,16 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         optimes::coordinator::ChurnSpec::parse(c)?;
         std::env::set_var("OPTIMES_CHURN", c);
     }
+    if let Some(t) = args.get("tenant") {
+        // validate up front so a typo fails before any training work
+        optimes::coordinator::validate_tenant_name(t)?;
+        std::env::set_var("OPTIMES_TENANT", t);
+    }
+    if let Some(s) = args.get("replica-select") {
+        // validate up front so a typo fails before any training work
+        ReplicaSelect::parse(s)?;
+        std::env::set_var("OPTIMES_REPLICA_SELECT", s);
+    }
     if let Some(dir) = args.get("checkpoint") {
         let spec = match args.get("checkpoint-every") {
             Some(n) => {
@@ -184,6 +194,9 @@ commands:
                                                e.g. \"leave@4:2,join@9\"
          [--checkpoint DIR]                    write a resumable checkpoint bundle
          [--checkpoint-every N]                checkpoint cadence in rounds (default 1)
+         [--tenant NAME]                       bind this session to a namespace on a
+                                               shared embedding daemon
+         [--replica-select primary|fastest]    replica read policy (default fastest)
   resume DIR [--rounds R] [--sequential] [--pipeline on|off] [--report FILE]
          [--engine ref|pjrt] [--scale N] [--checkpoint-every N]
          continue a checkpointed session; with identical flags the resumed
@@ -195,7 +208,10 @@ commands:
   fig    table1|2a|2b|6|7|8|9|10|11|12|13|14|all
   serve  --port 7070 [--listen ADDR] [--layers 2] [--hidden 32] [--shards N]
          [--replicas R] [--fault-spec SPEC]
-         run the embedding store as a standalone TCP daemon
+         [--max-conns N] [--max-inflight N]    admission caps (0 = unlimited);
+                                               over-cap work gets a loud BUSY
+         run the embedding store as a standalone TCP daemon (multi-tenant:
+         clients pick a namespace with --tenant / OPTIMES_TENANT)
   smoke  PJRT artifact health check
   info   [--graph FILE]      also inspect a GraphFile's header + sections
 ";
@@ -697,11 +713,27 @@ fn serve(args: &Args) -> Result<()> {
         let slab = EmbeddingServer::new(layers, hidden, NetConfig::default());
         spec.wrap_shard_real(0, Arc::new(slab))
     };
-    let daemon = EmbServerDaemon::start(Arc::clone(&store), listen.as_str())?;
+    let config = DaemonConfig {
+        max_conns: args.usize_or("max-conns", 0),
+        max_inflight: args.usize_or("max-inflight", 0),
+    };
+    let daemon = EmbServerDaemon::start_with(Arc::clone(&store), listen.as_str(), config)?;
     println!(
         "embedding store listening on {} ({layers} layer DBs, hidden {hidden}, backend {})",
         daemon.addr,
         store.describe()
+    );
+    let cap = |n: usize| {
+        if n == 0 {
+            "unlimited".to_string()
+        } else {
+            n.to_string()
+        }
+    };
+    println!(
+        "admission control: max-conns {}, max-inflight {}",
+        cap(config.max_conns),
+        cap(config.max_inflight)
     );
     println!("press ctrl-c to stop");
     // explicit flush: the bound address must reach a piped parent
@@ -710,6 +742,10 @@ fn serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
         let stats = store.stats()?;
-        println!("stored {} nodes / {} rows", stats.nodes, stats.rows);
+        let d = daemon.stats();
+        println!(
+            "stored {} nodes / {} rows | conns {} live / {} rejected | tenants {}",
+            stats.nodes, stats.rows, d.live_conns, d.rejected_conns, d.tenants
+        );
     }
 }

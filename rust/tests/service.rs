@@ -1,0 +1,328 @@
+//! The multi-tenant embedding service, end to end (DESIGN.md §15):
+//! connect/disconnect churn against a live daemon with bounded handler
+//! threads and consistent stats (the reaping bugfix), admission control
+//! (`max_conns` / `max_inflight`) answering over-cap work with a *named*
+//! `BUSY` error instead of a hang or a silent drop, tenant namespaces
+//! isolating concurrent federated sessions on one shared daemon
+//! bit-for-bit, and latency-aware replica selection staying bit-identical
+//! to primary-first at zero injected latency.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use optimes::coordinator::{
+    DaemonConfig, EmbServerDaemon, EmbeddingServer, EmbeddingStore, Fault, FaultStore, NetConfig,
+    RemoteEmbClient, ReplicaSelect, SessionBuilder, SessionConfig, SessionMetrics, ShardedStore,
+    Strategy, TcpEmbeddingStore,
+};
+use optimes::graph::datasets::tiny;
+use optimes::runtime::{ModelGeom, ModelKind, RefEngine, StepEngine};
+use optimes::wire::CodecKind;
+
+const HIDDEN: usize = 16;
+const N_LAYERS: usize = 2; // layers - 1
+
+fn ref_engine() -> Arc<dyn StepEngine> {
+    Arc::new(RefEngine::new(ModelGeom {
+        model: ModelKind::Gc,
+        layers: 3,
+        feat: 32,
+        hidden: HIDDEN,
+        classes: 4,
+        batch: 8,
+        fanout: 3,
+        push_batch: 8,
+    }))
+}
+
+fn cfg(strategy: Strategy, rounds: usize) -> SessionConfig {
+    SessionConfig {
+        strategy,
+        rounds,
+        epochs: 2,
+        epoch_batches: 4,
+        eval_batches: 4,
+        // sequential clients: a deterministic push/pull order makes the
+        // accuracy curves comparable bit-for-bit across backends
+        parallel_clients: false,
+        ..Default::default()
+    }
+}
+
+fn run_with_store(
+    store: Arc<dyn EmbeddingStore>,
+    strategy: Strategy,
+    rounds: usize,
+    seed: u64,
+) -> SessionMetrics {
+    let g = tiny(seed);
+    SessionBuilder::new(cfg(strategy, rounds))
+        .store(store)
+        .build(&g, ref_engine())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+fn assert_same_curve(a: &SessionMetrics, b: &SessionMetrics) {
+    assert_eq!(a.accuracies(), b.accuracies(), "accuracy curves diverged");
+    assert_eq!(a.server_embeddings, b.server_embeddings);
+    let va: Vec<f64> = a.rounds.iter().map(|r| r.val_loss).collect();
+    let vb: Vec<f64> = b.rounds.iter().map(|r| r.val_loss).collect();
+    assert_eq!(va, vb, "validation losses diverged");
+}
+
+fn slab() -> Arc<dyn EmbeddingStore> {
+    Arc::new(EmbeddingServer::new(N_LAYERS, HIDDEN, NetConfig::default()))
+}
+
+fn daemon_with(config: DaemonConfig) -> EmbServerDaemon {
+    EmbServerDaemon::start_with(slab(), "127.0.0.1:0", config).unwrap()
+}
+
+fn rows(nodes: &[u32], salt: f32) -> Vec<f32> {
+    nodes
+        .iter()
+        .flat_map(|&n| (0..HIDDEN).map(move |j| n as f32 + j as f32 * 0.25 + salt))
+        .collect()
+}
+
+/// Poll until the daemon reports `live_conns == 0 && handler_threads ==
+/// 0` (panics after `secs` seconds — a handler-thread leak).
+fn await_drained(d: &EmbServerDaemon, secs: u64) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(secs);
+    loop {
+        let s = d.stats();
+        if s.live_conns == 0 && s.handler_threads == 0 {
+            return;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "daemon never drained (handler-thread leak?): {s:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection churn + admission control
+// ---------------------------------------------------------------------------
+
+#[test]
+fn connection_churn_keeps_handler_threads_bounded() {
+    let d = daemon_with(DaemonConfig::default());
+    const CYCLES: usize = 300;
+    for i in 0..CYCLES {
+        let mut c = RemoteEmbClient::connect(d.addr, N_LAYERS, HIDDEN).unwrap();
+        let nodes = [i as u32];
+        c.push(&nodes, &[rows(&nodes, 0.0), rows(&nodes, 1.0)]).unwrap();
+        let (got, _) = c.pull(&nodes).unwrap();
+        assert_eq!(got[0], rows(&nodes, 0.0));
+        // the gauge may lag (the sweep runs on the accept thread), but
+        // strictly sequential clients can never stack up hundreds deep
+        assert!(
+            d.stats().handler_threads <= 64,
+            "handler threads grew without bound at cycle {i}: {:?}",
+            d.stats()
+        );
+        drop(c);
+    }
+    await_drained(&d, 10);
+    let s = d.stats();
+    assert_eq!(s.total_conns, CYCLES, "{s:?}");
+    assert_eq!(s.rejected_conns, 0, "{s:?}");
+    assert!(s.peak_conns >= 1, "{s:?}");
+    d.shutdown();
+}
+
+#[test]
+fn max_conns_cap_rejects_loudly_and_slots_free_on_disconnect() {
+    let d = daemon_with(DaemonConfig {
+        max_conns: 2,
+        max_inflight: 0,
+    });
+    // fill both slots (a served stats round-trip proves admission)
+    let mut a = RemoteEmbClient::connect(d.addr, N_LAYERS, HIDDEN).unwrap();
+    a.stats().unwrap();
+    let mut b = RemoteEmbClient::connect(d.addr, N_LAYERS, HIDDEN).unwrap();
+    b.stats().unwrap();
+    // the third client gets a named BUSY, not a hang or a bare I/O error
+    let mut c = RemoteEmbClient::connect(d.addr, N_LAYERS, HIDDEN).unwrap();
+    let err = c.stats().expect_err("third connection must be rejected");
+    assert!(format!("{err:#}").contains("BUSY"), "{err:#}");
+    assert!(d.stats().rejected_conns >= 1, "{:?}", d.stats());
+    // dropping an admitted client frees its slot: a newcomer gets in
+    // once the handler notices the hangup (bounded read timeout + sweep)
+    drop(a);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let mut fresh = RemoteEmbClient::connect(d.addr, N_LAYERS, HIDDEN).unwrap();
+        if fresh.stats().is_ok() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "freed slot never became available: {:?}",
+            d.stats()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    // the surviving admitted client kept full service throughout
+    b.push(&[9], &[rows(&[9], 0.0), rows(&[9], 1.0)]).unwrap();
+    d.shutdown();
+}
+
+#[test]
+fn max_inflight_cap_sheds_excess_requests_with_busy() {
+    // every data-plane op stalls 200ms for real, so one op holds the
+    // single in-flight slot long enough for concurrent ops to collide
+    let slow: Arc<dyn EmbeddingStore> = Arc::new(
+        FaultStore::new(
+            slab(),
+            "slow",
+            vec![Fault::DelayEvery {
+                every: 1,
+                secs: 0.2,
+            }],
+        )
+        .with_real_delays(),
+    );
+    let d = EmbServerDaemon::start_with(
+        slow,
+        "127.0.0.1:0",
+        DaemonConfig {
+            max_conns: 0,
+            max_inflight: 1,
+        },
+    )
+    .unwrap();
+    let addr = d.addr;
+    let busy = AtomicUsize::new(0);
+    let served = AtomicUsize::new(0);
+    // 4 threads hammering a 1-slot daemon: ops overlap by construction
+    // (each successful op holds the slot for 200ms while the other
+    // threads immediately re-issue), so sheds are inevitable — and every
+    // shed must be the *named* BUSY, never a hang or a bare I/O error
+    std::thread::scope(|scope| {
+        for t in 0..4u32 {
+            let (busy, served) = (&busy, &served);
+            scope.spawn(move || {
+                let mut c = RemoteEmbClient::connect(addr, N_LAYERS, HIDDEN).unwrap();
+                for _ in 0..5 {
+                    match c.pull(&[t]) {
+                        Ok(_) => {
+                            served.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Err(e) => {
+                            assert!(format!("{e:#}").contains("BUSY"), "{e:#}");
+                            busy.fetch_add(1, Ordering::SeqCst);
+                            // the server drops a shed connection after
+                            // draining it: reconnect and keep hammering
+                            c = RemoteEmbClient::connect(addr, N_LAYERS, HIDDEN).unwrap();
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert!(busy.load(Ordering::SeqCst) >= 1, "no request was ever shed");
+    assert!(served.load(Ordering::SeqCst) >= 1, "no request was ever served");
+    let s = d.stats();
+    assert_eq!(s.rejected_requests, busy.load(Ordering::SeqCst), "{s:?}");
+    assert!(s.peak_inflight <= 1, "{s:?}");
+    // once the hammering stops, the slot frees and service resumes
+    let mut after = RemoteEmbClient::connect(addr, N_LAYERS, HIDDEN).unwrap();
+    let (got, _) = after.pull(&[424242]).unwrap();
+    assert!(got[0].iter().all(|&v| v == 0.0));
+    d.shutdown();
+}
+
+#[test]
+fn busy_rejection_surfaces_named_through_tcp_store() {
+    let d = daemon_with(DaemonConfig {
+        max_conns: 1,
+        max_inflight: 0,
+    });
+    // the first store's geometry handshake occupies the only slot
+    let held = TcpEmbeddingStore::connect(d.addr.to_string(), N_LAYERS, HIDDEN).unwrap();
+    // the second store's handshake must fail with the named BUSY (the
+    // server drains before closing, so the verdict isn't lost to an RST)
+    let err = TcpEmbeddingStore::connect(d.addr.to_string(), N_LAYERS, HIDDEN)
+        .expect_err("second store must be rejected at the connection cap");
+    assert!(format!("{err:#}").contains("BUSY"), "{err:#}");
+    drop(held);
+    d.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// tenant isolation: bit-identical sessions on shared infrastructure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_tenant_sessions_on_one_daemon_match_two_dedicated_daemons() {
+    // reference: each session on its own dedicated (untenanted) daemon
+    let d_alice = daemon_with(DaemonConfig::default());
+    let d_bob = daemon_with(DaemonConfig::default());
+    let ref_alice = run_with_store(
+        Arc::new(TcpEmbeddingStore::connect(d_alice.addr.to_string(), N_LAYERS, HIDDEN).unwrap()),
+        Strategy::opp(),
+        3,
+        311,
+    );
+    let ref_bob = run_with_store(
+        Arc::new(TcpEmbeddingStore::connect(d_bob.addr.to_string(), N_LAYERS, HIDDEN).unwrap()),
+        Strategy::opp(),
+        3,
+        312,
+    );
+    d_alice.shutdown();
+    d_bob.shutdown();
+
+    // shared: both sessions run *concurrently* against ONE daemon,
+    // isolated only by their tenant namespaces
+    let shared = daemon_with(DaemonConfig::default());
+    let addr = shared.addr.to_string();
+    let connect = |tenant: &str| -> Arc<dyn EmbeddingStore> {
+        Arc::new(
+            TcpEmbeddingStore::connect_opts(
+                addr.clone(),
+                N_LAYERS,
+                HIDDEN,
+                CodecKind::Raw,
+                Some(tenant.to_string()),
+            )
+            .unwrap(),
+        )
+    };
+    let (got_alice, got_bob) = std::thread::scope(|scope| {
+        let sa = connect("alice");
+        let sb = connect("bob");
+        let ha = scope.spawn(move || run_with_store(sa, Strategy::opp(), 3, 311));
+        let hb = scope.spawn(move || run_with_store(sb, Strategy::opp(), 3, 312));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(shared.stats().tenants, 2, "{:?}", shared.stats());
+    shared.shutdown();
+
+    assert_same_curve(&got_alice, &ref_alice);
+    assert_same_curve(&got_bob, &ref_bob);
+}
+
+// ---------------------------------------------------------------------------
+// latency-aware replica selection: a routing policy, never a value change
+// ---------------------------------------------------------------------------
+
+#[test]
+fn replica_selection_policies_are_bit_identical_at_zero_latency() {
+    let replicated = |select: ReplicaSelect| -> Arc<dyn EmbeddingStore> {
+        let backends: Vec<Arc<dyn EmbeddingStore>> = (0..4).map(|_| slab()).collect();
+        Arc::new(
+            ShardedStore::replicated(backends, 1)
+                .unwrap()
+                .with_replica_select(select),
+        )
+    };
+    let fastest = run_with_store(replicated(ReplicaSelect::Fastest), Strategy::opp(), 3, 271);
+    let primary = run_with_store(replicated(ReplicaSelect::Primary), Strategy::opp(), 3, 271);
+    assert_same_curve(&fastest, &primary);
+}
