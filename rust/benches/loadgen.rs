@@ -23,13 +23,14 @@
 //! `--max-conns N`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use optimes::coordinator::{
     DaemonConfig, EmbServerDaemon, EmbeddingServer, EmbeddingStore, NetConfig, RemoteEmbClient,
     ShardedStore,
 };
 use optimes::harness;
+use optimes::obs::Histogram;
 use optimes::util::cli::Args;
 use optimes::util::json::JsonObj;
 use optimes::wire::CodecKind;
@@ -71,12 +72,6 @@ fn rows(nodes: &[u32], salt: f32) -> Vec<f32> {
         .iter()
         .flat_map(|&n| (0..HIDDEN).map(move |j| n as f32 * 0.01 + j as f32 * 0.25 + salt))
         .collect()
-}
-
-fn pctls(samples: &mut Vec<f64>) -> (f64, f64, f64) {
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let p = |q| optimes::util::stats::percentile(samples, q);
-    (p(0.50), p(0.99), p(0.999))
 }
 
 fn is_busy(e: &anyhow::Error) -> bool {
@@ -144,17 +139,20 @@ fn main() {
         s.workers
     );
 
-    // phase 1: connect/use/disconnect churn through a bounded worker pool
+    // phase 1: connect/use/disconnect churn through a bounded worker
+    // pool. Latencies go into the shared obs::Histogram (the same
+    // log-bucketed type the daemon scrapes over op=6): each worker
+    // records into a private histogram and merges it in at exit.
     let t0 = std::time::Instant::now();
     let next = AtomicUsize::new(0);
-    let push_ms: Mutex<Vec<f64>> = Mutex::new(Vec::new());
-    let pull_ms: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let push_hist = Histogram::new();
+    let pull_hist = Histogram::new();
     let busy_rejections = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..s.workers.min(s.clients) {
             scope.spawn(|| {
-                let mut my_push: Vec<f64> = Vec::new();
-                let mut my_pull: Vec<f64> = Vec::new();
+                let my_push = Histogram::new();
+                let my_pull = Histogram::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= s.clients {
@@ -182,7 +180,7 @@ fn main() {
                         let per_layer = vec![layer; N_LAYERS];
                         let w0 = std::time::Instant::now();
                         match c.push(&nodes, &per_layer) {
-                            Ok(_) => my_push.push(w0.elapsed().as_secs_f64() * 1e3),
+                            Ok(_) => my_push.record_secs(w0.elapsed().as_secs_f64()),
                             Err(e) if is_busy(&e) => {
                                 busy_rejections.fetch_add(1, Ordering::Relaxed);
                                 break;
@@ -192,7 +190,7 @@ fn main() {
                         let w0 = std::time::Instant::now();
                         match c.pull(&nodes) {
                             Ok((got, _)) => {
-                                my_pull.push(w0.elapsed().as_secs_f64() * 1e3);
+                                my_pull.record_secs(w0.elapsed().as_secs_f64());
                                 assert_eq!(got[0], per_layer[0], "client {i} read own write");
                             }
                             Err(e) if is_busy(&e) => {
@@ -203,8 +201,8 @@ fn main() {
                         }
                     }
                 }
-                push_ms.lock().unwrap().extend(my_push);
-                pull_ms.lock().unwrap().extend(my_pull);
+                push_hist.merge_from(&my_push);
+                pull_hist.merge_from(&my_pull);
             });
         }
     });
@@ -247,10 +245,16 @@ fn main() {
     assert_eq!(dstats.tenants, s.tenants, "{dstats:?}");
     assert!(dstats.peak_conns <= s.max_conns, "{dstats:?}");
 
-    let (mut push_samples, mut pull_samples) =
-        (push_ms.into_inner().unwrap(), pull_ms.into_inner().unwrap());
-    let (push_p50, push_p99, push_p999) = pctls(&mut push_samples);
-    let (pull_p50, pull_p99, pull_p999) = pctls(&mut pull_samples);
+    let (push_p50, push_p99, push_p999) = (
+        push_hist.quantile_ms(0.50),
+        push_hist.quantile_ms(0.99),
+        push_hist.quantile_ms(0.999),
+    );
+    let (pull_p50, pull_p99, pull_p999) = (
+        pull_hist.quantile_ms(0.50),
+        pull_hist.quantile_ms(0.99),
+        pull_hist.quantile_ms(0.999),
+    );
     println!(
         "churn: {} clients in {churn_secs:.2}s | push p50/p99/p999 {push_p50:.3}/{push_p99:.3}/\
          {push_p999:.3} ms | pull p50/p99/p999 {pull_p50:.3}/{pull_p99:.3}/{pull_p999:.3} ms",
@@ -263,13 +267,13 @@ fn main() {
 
     let mut push_obj = JsonObj::new();
     push_obj
-        .set("ops", push_samples.len())
+        .set("ops", push_hist.count() as usize)
         .set("p50_ms", push_p50)
         .set("p99_ms", push_p99)
         .set("p999_ms", push_p999);
     let mut pull_obj = JsonObj::new();
     pull_obj
-        .set("ops", pull_samples.len())
+        .set("ops", pull_hist.count() as usize)
         .set("p50_ms", pull_p50)
         .set("p99_ms", pull_p99)
         .set("p999_ms", pull_p999);

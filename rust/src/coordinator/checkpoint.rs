@@ -91,7 +91,7 @@ pub fn parse_checkpoint_spec(raw: &str) -> Option<(PathBuf, usize)> {
     if let Some((dir, every)) = raw.rsplit_once(':') {
         if let Ok(n) = every.parse::<usize>() {
             if n == 0 {
-                eprintln!("warning: checkpoint cadence 0 is invalid; using 1");
+                crate::log!(Warn, "checkpoint cadence 0 is invalid; using 1");
                 return Some((PathBuf::from(dir), 1));
             }
             return Some((PathBuf::from(dir), n));

@@ -139,7 +139,7 @@ impl ChurnSpec {
             Ok(v) if !v.is_empty() => match ChurnSpec::parse(&v) {
                 Ok(spec) => spec,
                 Err(e) => {
-                    eprintln!("warning: OPTIMES_CHURN={v:?} invalid ({e:#}); ignoring");
+                    crate::log!(Warn, "OPTIMES_CHURN={v:?} invalid ({e:#}); ignoring");
                     ChurnSpec::default()
                 }
             },

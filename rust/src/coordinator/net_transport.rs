@@ -12,6 +12,7 @@
 //!   op=3 STATS  payload := (empty)
 //!   op=4 CODEC  payload := len:u32 name:utf8*len     (wire-codec handshake)
 //!   op=5 TENANT payload := len:u32 name:utf8*len     (namespace handshake)
+//!   op=6 STATSX payload := (empty)                   (metrics exposition)
 //! response := status:u8 payload          (status 0 = ok, 0xB5 = BUSY)
 //!   PULL   -> layers:u32 hidden:u32 (row-payload)*layers
 //!   PUSH   -> (empty)
@@ -19,6 +20,7 @@
 //!             bytes_tx:u64 bytes_rx:u64 raw_tx:u64 raw_rx:u64
 //!   CODEC  -> (empty)
 //!   TENANT -> (empty)
+//!   STATSX -> len:u32 text:utf8*len      (Prometheus-style exposition)
 //! ```
 //!
 //! A `row-payload` is `n` rows encoded under the **connection codec** —
@@ -61,6 +63,7 @@ use super::codec;
 use super::metrics::{RpcKind, RpcRecord};
 use super::store::{EmbeddingStore, StoreStats};
 use super::tenant::{TenantRegistry, MAX_TENANT_NAME};
+use crate::obs;
 use crate::wire::{CodecKind, RowCodec};
 
 const OP_PULL: u8 = 1;
@@ -68,6 +71,7 @@ const OP_PUSH: u8 = 2;
 const OP_STATS: u8 = 3;
 const OP_CODEC: u8 = 4;
 const OP_TENANT: u8 = 5;
+const OP_STATSX: u8 = 6;
 
 /// Response status: request served.
 pub const STATUS_OK: u8 = 0;
@@ -79,6 +83,10 @@ pub const STATUS_BUSY: u8 = 0xB5;
 
 /// Longest codec name a CODEC handshake may declare.
 const MAX_CODEC_NAME: usize = 64;
+
+/// Longest STATSX exposition a client will accept (a desynced stream
+/// must not provoke a giant allocation).
+const MAX_EXPOSITION: usize = 1 << 24;
 
 fn read_ids(r: &mut impl Read) -> Result<Vec<u32>> {
     let n = codec::read_u32(r)? as usize;
@@ -123,7 +131,9 @@ pub struct DaemonStats {
 }
 
 /// State shared between the daemon handle, its accept loop, and every
-/// handler thread: admission config, gauges, and the tenant directory.
+/// handler thread: admission config, gauges, the tenant directory, and
+/// the daemon's metrics registry (per-daemon, not the process global,
+/// so co-located daemons in one test process never share cells).
 struct DaemonShared {
     config: DaemonConfig,
     live_conns: AtomicUsize,
@@ -135,6 +145,69 @@ struct DaemonShared {
     rejected_requests: AtomicUsize,
     handler_threads: AtomicUsize,
     tenants: TenantRegistry,
+    registry: obs::Registry,
+    /// Server-side RPC latency histograms (ns), cached out of the
+    /// registry so the hot path never touches the registry lock.
+    rpc_pull_ns: Arc<obs::Histogram>,
+    rpc_push_ns: Arc<obs::Histogram>,
+}
+
+impl DaemonShared {
+    fn stats(&self) -> DaemonStats {
+        DaemonStats {
+            live_conns: self.live_conns.load(Ordering::SeqCst),
+            peak_conns: self.peak_conns.load(Ordering::SeqCst),
+            total_conns: self.total_conns.load(Ordering::SeqCst),
+            rejected_conns: self.rejected_conns.load(Ordering::SeqCst),
+            inflight: self.inflight.load(Ordering::SeqCst),
+            peak_inflight: self.peak_inflight.load(Ordering::SeqCst),
+            rejected_requests: self.rejected_requests.load(Ordering::SeqCst),
+            handler_threads: self.handler_threads.load(Ordering::SeqCst),
+            tenants: self.tenants.len(),
+        }
+    }
+
+    /// Render the daemon's metrics as a Prometheus-style text exposition
+    /// (wire op=6, `optimes stats`, and the `serve` stats line). Service
+    /// gauges and store occupancy are refreshed from their live sources
+    /// at scrape time; the RPC latency histograms accumulate in place.
+    fn exposition(&self) -> String {
+        let s = self.stats();
+        let r = &self.registry;
+        r.gauge("optimes_daemon_live_conns").set(s.live_conns as i64);
+        r.gauge("optimes_daemon_peak_conns").set(s.peak_conns as i64);
+        r.gauge("optimes_daemon_total_conns").set(s.total_conns as i64);
+        r.gauge("optimes_daemon_rejected_conns")
+            .set(s.rejected_conns as i64);
+        r.gauge("optimes_daemon_inflight").set(s.inflight as i64);
+        r.gauge("optimes_daemon_peak_inflight")
+            .set(s.peak_inflight as i64);
+        r.gauge("optimes_daemon_rejected_requests")
+            .set(s.rejected_requests as i64);
+        r.gauge("optimes_daemon_handler_threads")
+            .set(s.handler_threads as i64);
+        r.gauge("optimes_daemon_tenants").set(s.tenants as i64);
+        if let Ok(st) = self.tenants.base().stats() {
+            r.gauge("optimes_store_nodes").set(st.nodes as i64);
+            r.gauge("optimes_store_rows").set(st.rows as i64);
+            r.gauge("optimes_store_failovers").set(st.failovers as i64);
+            r.gauge("optimes_store_epoch").set(st.epoch as i64);
+            r.gauge("optimes_store_bytes_tx").set(st.bytes_tx as i64);
+            r.gauge("optimes_store_bytes_rx").set(st.bytes_rx as i64);
+        }
+        for name in self.tenants.names() {
+            if let Ok(rows) = self
+                .tenants
+                .resolve(&name)
+                .and_then(|t| t.stats())
+                .map(|st| st.rows)
+            {
+                r.gauge(&format!("optimes_tenant_rows{{tenant=\"{name}\"}}"))
+                    .set(rows as i64);
+            }
+        }
+        r.render()
+    }
 }
 
 /// RAII admission slot of one connection: acquired in the accept loop,
@@ -213,6 +286,9 @@ impl EmbServerDaemon {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let registry = obs::Registry::new();
+        let rpc_pull_ns = registry.histogram("optimes_daemon_rpc_pull_ns");
+        let rpc_push_ns = registry.histogram("optimes_daemon_rpc_push_ns");
         let shared = Arc::new(DaemonShared {
             config,
             live_conns: AtomicUsize::new(0),
@@ -224,6 +300,9 @@ impl EmbServerDaemon {
             rejected_requests: AtomicUsize::new(0),
             handler_threads: AtomicUsize::new(0),
             tenants: TenantRegistry::new(store),
+            registry,
+            rpc_pull_ns,
+            rpc_push_ns,
         });
         let shared2 = Arc::clone(&shared);
         let accept_thread = std::thread::Builder::new()
@@ -302,17 +381,15 @@ impl EmbServerDaemon {
     /// Live service counters: connections, in-flight requests,
     /// rejections, handler threads, registered tenants.
     pub fn stats(&self) -> DaemonStats {
-        DaemonStats {
-            live_conns: self.shared.live_conns.load(Ordering::SeqCst),
-            peak_conns: self.shared.peak_conns.load(Ordering::SeqCst),
-            total_conns: self.shared.total_conns.load(Ordering::SeqCst),
-            rejected_conns: self.shared.rejected_conns.load(Ordering::SeqCst),
-            inflight: self.shared.inflight.load(Ordering::SeqCst),
-            peak_inflight: self.shared.peak_inflight.load(Ordering::SeqCst),
-            rejected_requests: self.shared.rejected_requests.load(Ordering::SeqCst),
-            handler_threads: self.shared.handler_threads.load(Ordering::SeqCst),
-            tenants: self.shared.tenants.len(),
-        }
+        self.shared.stats()
+    }
+
+    /// Prometheus-style text exposition of the daemon's metrics — the
+    /// same text wire op=6 `STATSX` serves (DESIGN.md §16.2): service
+    /// gauges, base-store occupancy/bytes, per-tenant rows, and the
+    /// server-side RPC latency summaries.
+    pub fn exposition(&self) -> String {
+        self.shared.exposition()
     }
 
     pub fn shutdown(mut self) {
@@ -412,7 +489,8 @@ fn serve_conn(
             Err(e) => return Err(e.into()),
         }
         // shed data-plane work (pull/push) over the in-flight cap with
-        // a loud BUSY; control ops (stats/codec/tenant) always pass
+        // a loud BUSY; control ops (stats/statsx/codec/tenant) always
+        // pass — a scrape must work precisely when the daemon is busy
         let _req = if matches!(op[0], OP_PULL | OP_PUSH) {
             match ReqSlot::acquire(shared) {
                 Some(slot) => Some(slot),
@@ -429,7 +507,10 @@ fn serve_conn(
         };
         match op[0] {
             OP_PULL => {
+                let t0 = std::time::Instant::now();
+                let mut sp = obs::span("net", "rpc_pull");
                 let nodes = read_ids(&mut r)?;
+                sp.push_attr("rows", nodes.len());
                 store.pull_into(&nodes, false, &mut pull_buf)?;
                 w.write_all(&[STATUS_OK])?;
                 codec::write_u32(&mut w, pull_buf.len() as u32)?;
@@ -444,9 +525,13 @@ fn serve_conn(
                         w.write_all(&enc_buf).context("write encoded pull payload")?;
                     }
                 }
+                shared.rpc_pull_ns.record_secs(t0.elapsed().as_secs_f64());
             }
             OP_PUSH => {
+                let t0 = std::time::Instant::now();
+                let mut sp = obs::span("net", "rpc_push");
                 let nodes = read_ids(&mut r)?;
+                sp.push_attr("rows", nodes.len());
                 let layers = codec::read_u32(&mut r)? as usize;
                 if layers != store.n_layers() {
                     bail!("push layer count {layers} != {}", store.n_layers());
@@ -469,6 +554,7 @@ fn serve_conn(
                 }
                 store.push(&nodes, &per_layer)?;
                 w.write_all(&[STATUS_OK])?;
+                shared.rpc_push_ns.record_secs(t0.elapsed().as_secs_f64());
             }
             OP_STATS => {
                 let stats = store.stats()?;
@@ -494,6 +580,12 @@ fn serve_conn(
                 // the failed handshake at connect time, not mid-round)
                 wire_codec = CodecKind::parse(name)?.build();
                 w.write_all(&[STATUS_OK])?;
+            }
+            OP_STATSX => {
+                let text = shared.exposition();
+                w.write_all(&[STATUS_OK])?;
+                codec::write_u32(&mut w, text.len() as u32)?;
+                w.write_all(text.as_bytes()).context("write exposition")?;
             }
             OP_TENANT => {
                 let len = codec::read_u32(&mut r)? as usize;
@@ -701,6 +793,24 @@ impl RemoteEmbClient {
         })
     }
 
+    /// Scrape the daemon's metrics exposition (wire op=6 `STATSX`):
+    /// Prometheus-style text, parseable with
+    /// [`obs::parse_exposition`](crate::obs::parse_exposition). Works on
+    /// any connection — geometry is irrelevant, so a stats-only client
+    /// may connect with zero layers/hidden.
+    pub fn statsx(&mut self) -> Result<String> {
+        self.w.write_all(&[OP_STATSX])?;
+        self.w.flush()?;
+        self.check_status()?;
+        let len = codec::read_u32(&mut self.r)? as usize;
+        if len > MAX_EXPOSITION {
+            bail!("absurd exposition length {len}");
+        }
+        let mut buf = vec![0u8; len];
+        self.r.read_exact(&mut buf).context("read exposition")?;
+        String::from_utf8(buf).context("exposition utf8")
+    }
+
     /// Full remote [`StoreStats`] (occupancy + failovers + routing
     /// epoch) — so a daemon fronting a replicated sharded compound
     /// reports its resilience health over the wire.
@@ -868,6 +978,11 @@ impl TcpEmbeddingStore {
     /// Reconnect-and-retry events absorbed so far.
     pub fn retries(&self) -> usize {
         self.retries.load(Ordering::SeqCst)
+    }
+
+    /// Scrape the remote daemon's metrics exposition (wire op=6).
+    pub fn exposition(&self) -> Result<String> {
+        self.with_conn(|c| c.statsx())
     }
 
     /// Acquire the in-flight slot for one RPC (RAII; see
@@ -1347,6 +1462,44 @@ mod tests {
         held.push(&[7], &[rows(&[7], 4, 0.0), rows(&[7], 4, 1.0)]).unwrap();
         let (got, _) = held.pull(&[7]).unwrap();
         assert_eq!(got[0], rows(&[7], 4, 0.0));
+        d.shutdown();
+    }
+
+    #[test]
+    fn statsx_exposition_scrapes_over_the_wire() {
+        let (d, _server) = daemon();
+        let mut c = RemoteEmbClient::connect(d.addr, 2, 4).unwrap();
+        let nodes = [1u32, 2];
+        c.push(&nodes, &[rows(&nodes, 4, 0.0), rows(&nodes, 4, 1.0)]).unwrap();
+        c.pull(&nodes).unwrap();
+        let text = c.statsx().unwrap();
+        let parsed = crate::obs::parse_exposition(&text);
+        assert_eq!(parsed["optimes_store_nodes"], 2.0);
+        assert_eq!(parsed["optimes_daemon_rpc_pull_ns_count"], 1.0);
+        assert_eq!(parsed["optimes_daemon_rpc_push_ns_count"], 1.0);
+        assert!(parsed["optimes_daemon_rpc_pull_ns{quantile=\"0.99\"}"] > 0.0);
+        assert!(parsed["optimes_daemon_live_conns"] >= 1.0);
+        // the wire text matches the in-process render (modulo gauges
+        // that move between scrapes; spot-check a histogram count)
+        let local = crate::obs::parse_exposition(&d.exposition());
+        assert_eq!(local["optimes_daemon_rpc_push_ns_count"], 1.0);
+        // geometry-blind stats-only client works too
+        let mut probe = RemoteEmbClient::connect(d.addr, 0, 0).unwrap();
+        assert!(probe.statsx().unwrap().contains("optimes_daemon_rpc_pull_ns"));
+        d.shutdown();
+    }
+
+    #[test]
+    fn statsx_reports_per_tenant_rows() {
+        let (d, _server) = daemon();
+        let addr = d.addr.to_string();
+        let alice = tenant_store(&addr, "alice");
+        alice
+            .push(&[1, 2, 3], &[rows(&[1, 2, 3], 4, 0.0), rows(&[1, 2, 3], 4, 1.0)])
+            .unwrap();
+        let parsed = crate::obs::parse_exposition(&alice.exposition().unwrap());
+        assert_eq!(parsed["optimes_tenant_rows{tenant=\"alice\"}"], 6.0);
+        assert_eq!(parsed["optimes_daemon_tenants"], 1.0);
         d.shutdown();
     }
 

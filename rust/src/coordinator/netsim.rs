@@ -90,9 +90,7 @@ pub fn client_latency_default() -> Option<ClientLatency> {
         Ok(v) if !v.is_empty() => match ClientLatency::parse(&v) {
             Ok(l) => Some(l),
             Err(e) => {
-                eprintln!(
-                    "warning: OPTIMES_CLIENT_LATENCY={v:?} invalid ({e:#}); disabling"
-                );
+                crate::log!(Warn, "OPTIMES_CLIENT_LATENCY={v:?} invalid ({e:#}); disabling");
                 None
             }
         },

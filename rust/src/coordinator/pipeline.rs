@@ -38,6 +38,7 @@ use anyhow::Result;
 
 use super::metrics::RpcRecord;
 use super::store::{EmbeddingStore, StoreStats};
+use crate::obs;
 use crate::util::pool::ThreadPool;
 
 /// Result of a completed asynchronous push.
@@ -122,6 +123,7 @@ impl<T> Ticket<T> {
 
     /// Block until the operation completes and take its result.
     pub fn wait(self) -> Result<T> {
+        let _sp = obs::span("pipeline", "ticket_wait");
         let mut st = self.slot.state.lock().unwrap();
         loop {
             match std::mem::replace(&mut *st, SlotState::Taken) {
@@ -258,8 +260,11 @@ impl AsyncStoreHandle {
         let (ticket, slot) = Ticket::new();
         let store = Arc::clone(&self.store);
         let lease = QueueGauge::enter(&self.gauge);
+        obs::event("pipeline", "push_issue", vec![("rows", nodes.len().to_string())]);
         let t0 = Instant::now();
         self.workers.execute(move || {
+            let mut sp = obs::span("pipeline", "push_work");
+            sp.push_attr("rows", nodes.len());
             let epoch = store.epoch();
             // catch panics so a misbehaving backend yields an Err ticket
             // instead of leaving the waiter blocked forever
@@ -273,6 +278,7 @@ impl AsyncStoreHandle {
                 epoch,
             });
             drop(lease);
+            drop(sp);
             slot.fulfil(r);
         });
         ticket
@@ -286,8 +292,11 @@ impl AsyncStoreHandle {
         let (ticket, slot) = Ticket::new();
         let store = Arc::clone(&self.store);
         let lease = QueueGauge::enter(&self.gauge);
+        obs::event("pipeline", "pull_issue", vec![("rows", nodes.len().to_string())]);
         let t0 = Instant::now();
         self.workers.execute(move || {
+            let mut sp = obs::span("pipeline", "pull_work");
+            sp.push_attr("rows", nodes.len());
             let epoch = store.epoch();
             let mut rows = Vec::new();
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -301,6 +310,7 @@ impl AsyncStoreHandle {
                 epoch,
             });
             drop(lease);
+            drop(sp);
             slot.fulfil(r);
         });
         ticket

@@ -268,7 +268,7 @@ pub fn round_policy_default() -> RoundPolicySpec {
         Ok(v) if !v.is_empty() => match RoundPolicySpec::parse(&v) {
             Ok(spec) => spec,
             Err(e) => {
-                eprintln!("warning: OPTIMES_ROUND_POLICY={v:?} invalid ({e:#}); using sync");
+                crate::log!(Warn, "OPTIMES_ROUND_POLICY={v:?} invalid ({e:#}); using sync");
                 RoundPolicySpec::Sync
             }
         },
@@ -282,7 +282,7 @@ pub fn staleness_default() -> usize {
         Ok(v) if !v.is_empty() => match v.parse() {
             Ok(s) => s,
             Err(_) => {
-                eprintln!("warning: OPTIMES_STALENESS={v:?} is not an integer; using 2");
+                crate::log!(Warn, "OPTIMES_STALENESS={v:?} is not an integer; using 2");
                 2
             }
         },

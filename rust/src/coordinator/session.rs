@@ -36,6 +36,7 @@ use super::trainer::{self, pretrain_push};
 use crate::graph::scoring;
 use crate::graph::subgraph::{build_all_per_client, Prune};
 use crate::graph::{ClientSubgraph, Graph, Partition, PartitionerKind};
+use crate::obs;
 use crate::runtime::{ModelState, StepEngine};
 use crate::util::Stopwatch;
 
@@ -674,6 +675,7 @@ impl Session<'_> {
         self.pretrained = true;
         if self.cfg.strategy.share_embeddings {
             self.observer.on_phase(SessionPhase::Pretrain);
+            let _sp = obs::span("session", "pretrain");
             let store_ref: &dyn EmbeddingStore = self.store.as_ref();
             for c in self.clients.iter_mut() {
                 pretrain_push(c, self.g, &self.engine, store_ref).context("pretrain push")?;
@@ -729,6 +731,8 @@ impl Session<'_> {
         if round == 0 {
             self.observer.on_phase(SessionPhase::Rounds);
         }
+        let mut round_span = obs::span("session", "round");
+        round_span.push_attr("round", round);
 
         // scripted membership changes land at this round boundary, before
         // any of the round's randomness is drawn (DESIGN.md §14)
@@ -747,20 +751,24 @@ impl Session<'_> {
         let plan = self.policy.plan(&delays);
 
         // broadcast the global model
-        for c in self.clients.iter_mut() {
-            c.state.params = self.global.clone();
-            if self.cfg.reset_opt_each_round {
-                for m in c.state.m.iter_mut() {
-                    m.iter_mut().for_each(|v| *v = 0.0);
+        {
+            let _sp = obs::span("session", "broadcast");
+            for c in self.clients.iter_mut() {
+                c.state.params = self.global.clone();
+                if self.cfg.reset_opt_each_round {
+                    for m in c.state.m.iter_mut() {
+                        m.iter_mut().for_each(|v| *v = 0.0);
+                    }
+                    for v in c.state.v.iter_mut() {
+                        v.iter_mut().for_each(|x| *x = 0.0);
+                    }
+                    c.state.t = 0.0;
                 }
-                for v in c.state.v.iter_mut() {
-                    v.iter_mut().for_each(|x| *x = 0.0);
-                }
-                c.state.t = 0.0;
             }
         }
 
         // run every client's local round
+        let clients_span = obs::span("session", "clients");
         let pipe = self.pipeline.as_deref();
         let outcomes: Vec<trainer::RoundOutcome> = if self.cfg.parallel_clients {
             let engine_ref = &self.engine;
@@ -815,6 +823,7 @@ impl Session<'_> {
             }
             outs
         };
+        drop(clients_span);
 
         // pipeline: every push of this round is joined, so next-round
         // pulls read their final values — issue them now and let the RPCs
@@ -864,8 +873,13 @@ impl Session<'_> {
                 }
             }
         }
-        self.global = self.aggregator.aggregate(&weighted);
+        {
+            let _sp = obs::span("session", "aggregate");
+            self.global = self.aggregator.aggregate(&weighted);
+        }
+        let val_span = obs::span("session", "validate");
         let (acc, val_loss) = self.validator.evaluate(&self.engine, &self.global)?;
+        drop(val_span);
         let agg_time = agg_sw.secs();
 
         // compose round metrics (virtual time; DESIGN.md §7)
@@ -944,6 +958,8 @@ impl Session<'_> {
         if let Some((dir, every)) = self.checkpoint.clone() {
             let done = self.metrics.rounds.len();
             if done % every == 0 || done == self.cfg.rounds {
+                let mut sp = obs::span("session", "checkpoint");
+                sp.push_attr("round", done - 1);
                 self.write_checkpoint(&dir)
                     .with_context(|| format!("checkpoint after round {}", done - 1))?;
             }
@@ -968,11 +984,17 @@ impl Session<'_> {
         for ev in &events {
             match ev.kind {
                 ChurnKind::Leave { client } => {
+                    obs::event(
+                        "session",
+                        "churn_leave",
+                        vec![("round", round.to_string()), ("client", client.to_string())],
+                    );
                     self.membership
                         .record_leave(self.g, &mut self.part, round, client)
                         .with_context(|| format!("churn before round {round}"))?;
                 }
                 ChurnKind::Join => {
+                    obs::event("session", "churn_join", vec![("round", round.to_string())]);
                     self.membership
                         .record_join(self.g, &mut self.part, round)
                         .with_context(|| format!("churn before round {round}"))?;
@@ -1115,10 +1137,13 @@ impl Session<'_> {
         Ok(self.finish())
     }
 
-    /// Stop here (even mid-session) and hand back the metrics.
+    /// Stop here (even mid-session) and hand back the metrics. Flushes
+    /// the global tracer, so any traced run — including a test suite
+    /// under `OPTIMES_TRACE` — leaves a valid timeline behind.
     pub fn finish(mut self) -> SessionMetrics {
         self.run_state = RunState::Cooldown;
         self.observer.on_complete(&self.metrics);
+        obs::flush();
         self.metrics
     }
 }

@@ -31,6 +31,7 @@ use anyhow::{ensure, Result};
 use super::embedding_server::EmbeddingServer;
 use super::metrics::{ReplicaLatency, RpcKind, RpcRecord};
 use super::netsim::NetConfig;
+use crate::obs;
 use crate::util::pool;
 
 /// Read-routing policy of [`ShardedStore::pull_into`]: which owner a
@@ -733,6 +734,7 @@ impl ShardedStore {
     /// run entirely under the new map — no RPC ever straddles
     /// generations. Returns what moved.
     pub fn rebalance(&self, new_map: ShardMap) -> Result<RebalanceReport> {
+        let mut sp = obs::span("store", "rebalance");
         let mut routing = self.routing.write().unwrap();
         ensure!(
             new_map.n_backends() == self.backends.len(),
@@ -802,6 +804,9 @@ impl ShardedStore {
         let mut installed = new_map;
         installed.epoch = report.epoch;
         routing.map = installed;
+        sp.push_attr("epoch", report.epoch);
+        sp.push_attr("buckets_changed", report.buckets_changed);
+        sp.push_attr("rows_copied", report.rows_copied);
         Ok(report)
     }
 }
@@ -832,6 +837,8 @@ impl EmbeddingStore for ShardedStore {
         if nodes.is_empty() {
             return Ok(rec);
         }
+        let mut sp = obs::span("store", "push_fanout");
+        sp.push_attr("rows", nodes.len());
         let routing = self.routing.read().unwrap();
         // slice the batch per owning backend (a row appears once per
         // owner: primary + R replicas)...
@@ -949,6 +956,8 @@ impl EmbeddingStore for ShardedStore {
         if nodes.is_empty() {
             return Ok(rec);
         }
+        let mut sp = obs::span("store", "pull_fanout");
+        sp.push_attr("rows", nodes.len());
         let routing = self.routing.read().unwrap();
         // the *effective* owner list of every touched bucket: the map's
         // owners minus any quarantined ones, so a replica that missed a

@@ -28,6 +28,7 @@ use super::store::EmbeddingStore;
 use super::strategy::Strategy;
 use crate::graph::sampler::{Blocks, Sampler, SharedAdj};
 use crate::graph::{ClientSubgraph, Graph};
+use crate::obs;
 use crate::runtime::{Batch, ModelState, StepEngine};
 use crate::util::Stopwatch;
 
@@ -179,6 +180,8 @@ fn compute_push_layers(
     let h = dims.hidden;
     let n_layers = dims.layers - 1;
     let sw = Stopwatch::start();
+    let mut sp = obs::span("trainer", "push_embed");
+    sp.push_attr("rows", push_local.len());
     let mut scratch = BatchScratch::default();
     let mut stats = CacheStats::default();
     let mut per_layer: Vec<Vec<f32>> = (0..n_layers)
@@ -352,6 +355,9 @@ pub fn run_round_pipelined(
         };
         if !rows.is_empty() {
             let globals: Vec<u32> = rows.iter().map(|&r| client.sub.remote[r as usize]).collect();
+            let mut pull_span = obs::span("trainer", "pull");
+            pull_span.push_attr("client", client.id);
+            pull_span.push_attr("rows", globals.len());
             let rec = match pending.and_then(|p| p.into_matching(&globals)) {
                 Some(ticket) => {
                     // the RPC ran while the previous round aggregated /
@@ -637,11 +643,14 @@ fn run_epoch(
     out: &mut RoundOutcome,
 ) -> Result<(f64, f64)> {
     let sw = Stopwatch::start();
+    let mut epoch_span = obs::span("trainer", "epoch");
+    epoch_span.push_attr("client", out.metrics.client);
     let mut loss = 0f64;
     for batch_targets in targets {
         if batch_targets.is_empty() {
             continue;
         }
+        let _batch_span = obs::span("trainer", "batch");
         let blocks = ctx.sampler.sample_batch(ctx.sub, batch_targets);
         // OPP: pull missing used remotes on demand — at most one batched
         // RPC per minibatch (paper §4.3).
@@ -649,6 +658,8 @@ fn run_epoch(
             let used = blocks.used_remotes();
             let missing = ctx.cache.missing_of(&used);
             if !missing.is_empty() {
+                let mut dyn_span = obs::span("trainer", "dyn_pull");
+                dyn_span.push_attr("rows", missing.len());
                 let globals: Vec<u32> = missing
                     .iter()
                     .map(|&r| ctx.sub.remote[r as usize])

@@ -23,7 +23,7 @@ const ALL_DATASETS: [&str; 4] = ["arxiv-s", "reddit-s", "products-s", "papers-s"
 fn write_report(name: &str, j: &Json) {
     let path = reports_dir().join(format!("{name}.json"));
     let _ = std::fs::write(&path, j.to_string_pretty());
-    println!("[report] wrote {}", path.display());
+    crate::log!(Info, "[report] wrote {}", path.display());
 }
 
 /// Run the given strategies on a dataset (cached).

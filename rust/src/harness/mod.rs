@@ -55,6 +55,14 @@
 //! * `OPTIMES_REPLICA_SELECT=primary|fastest` — replica read policy of
 //!   sharded stores (`run --replica-select`; DESIGN.md §15). `fastest`
 //!   (default) routes each read to the lowest-EWMA-latency owner.
+//! * `OPTIMES_TRACE=FILE` — record a span timeline of the run and write
+//!   it to `FILE` as Chrome/Perfetto `trace_event` JSON (`run --trace`;
+//!   DESIGN.md §16). Tracing is a pure observer: results are
+//!   bit-identical with it on or off (`tests/observability.rs`).
+//! * `OPTIMES_LOG=error|warn|info|debug` — stderr diagnostic level for
+//!   [`log!`](crate::log) sites (`run --log`; default `info`).
+//! * `OPTIMES_TRACE_CAP=n` — tracer ring capacity in spans (default
+//!   65536; oldest spans are overwritten beyond that).
 
 pub mod figures;
 pub mod report;
@@ -96,8 +104,9 @@ pub fn record_bench_section(section: &str, payload: crate::util::json::JsonObj) 
         .and_then(|j| j.as_obj().cloned());
     if let (Some(text), None) = (&existing, &parsed) {
         if !text.trim().is_empty() {
-            eprintln!(
-                "warning: {} exists but is not a JSON object; its previous \
+            crate::log!(
+                Warn,
+                "{} exists but is not a JSON object; its previous \
                  sections will be replaced",
                 path.display()
             );
@@ -113,7 +122,7 @@ pub fn record_bench_section(section: &str, payload: crate::util::json::JsonObj) 
     root.set("_meta", meta);
     root.set(section, payload);
     if let Err(e) = std::fs::write(&path, Json::Obj(root).to_string_pretty()) {
-        eprintln!("warning: could not write {}: {e}", path.display());
+        crate::log!(Warn, "could not write {}: {e}", path.display());
     }
 }
 
@@ -369,8 +378,9 @@ pub fn make_store(geom: &ModelGeom, net: NetConfig) -> Result<Arc<dyn EmbeddingS
     Ok(store)
 }
 
-/// Streams per-round progress of harness-driven sessions to stderr (the
-/// tables still render from the final metrics on stdout).
+/// Streams per-round progress of harness-driven sessions to stderr at
+/// `info` level (the tables still render from the final metrics on
+/// stdout; `OPTIMES_LOG=warn` silences the stream).
 struct ProgressObserver {
     key: String,
     total: usize,
@@ -378,7 +388,8 @@ struct ProgressObserver {
 
 impl RoundObserver for ProgressObserver {
     fn on_round(&mut self, r: &RoundMetrics) {
-        eprintln!(
+        crate::log!(
+            Info,
             "  [{}] round {:>2}/{} acc {:5.2}%  time {:.3}s",
             self.key,
             r.round + 1,

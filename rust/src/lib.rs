@@ -13,11 +13,13 @@
 //!   inside the same artifacts.
 //!
 //! The crate is organized bottom-up: [`util`] (hand-rolled substrates),
+//! [`obs`] (span tracing, metrics registry, leveled logging),
 //! [`storage`] (the out-of-core graph plane: on-disk CSR + mmap seam),
 //! [`graph`] (data + sampling), [`runtime`] (PJRT execution engines), and
 //! [`coordinator`] (the paper's system contribution).
 
 pub mod graph;
+pub mod obs;
 pub mod storage;
 pub mod util;
 

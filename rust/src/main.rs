@@ -16,6 +16,7 @@
 //! optimes sweep --dataset reddit-s --strategies D,E,OP,OPP,OPG
 //! optimes fig   <table1|2a|2b|6|7|8|9|10|11|12|13|14|all>
 //! optimes serve --port 7070 [--layers 2] [--hidden 32] [--shards N]
+//! optimes stats host:port              # scrape a daemon's metrics (op=6)
 //! optimes smoke                        # PJRT round-trip health check
 //! ```
 
@@ -40,7 +41,7 @@ fn main() {
     let code = match dispatch(cmd, &args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            optimes::obs::log!(Error, "{e:#}");
             1
         }
     };
@@ -122,6 +123,16 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         optimes::coordinator::validate_tenant_name(t)?;
         std::env::set_var("OPTIMES_TENANT", t);
     }
+    if let Some(t) = args.get("trace") {
+        anyhow::ensure!(!t.trim().is_empty(), "--trace expects a file path");
+        std::env::set_var("OPTIMES_TRACE", t);
+    }
+    if let Some(l) = args.get("log") {
+        // validate up front so a typo fails before any training work
+        optimes::obs::LogLevel::parse(l)
+            .ok_or_else(|| anyhow::anyhow!("--log expects error|warn|info|debug, got {l:?}"))?;
+        std::env::set_var("OPTIMES_LOG", l);
+    }
     if let Some(s) = args.get("replica-select") {
         // validate up front so a typo fails before any training work
         ReplicaSelect::parse(s)?;
@@ -157,6 +168,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "smoke" => smoke(),
         "serve" | "emb-server" => serve(args),
+        "stats" => stats_cmd(args),
         _ => {
             println!("{HELP}");
             Ok(())
@@ -197,6 +209,10 @@ commands:
          [--tenant NAME]                       bind this session to a namespace on a
                                                shared embedding daemon
          [--replica-select primary|fastest]    replica read policy (default fastest)
+         [--trace FILE]                        export a Chrome/Perfetto span timeline
+                                               of the run (OPTIMES_TRACE)
+         [--log LEVEL]                         stderr diagnostics threshold:
+                                               error|warn|info|debug (OPTIMES_LOG)
   resume DIR [--rounds R] [--sequential] [--pipeline on|off] [--report FILE]
          [--engine ref|pjrt] [--scale N] [--checkpoint-every N]
          continue a checkpointed session; with identical flags the resumed
@@ -212,6 +228,9 @@ commands:
                                                over-cap work gets a loud BUSY
          run the embedding store as a standalone TCP daemon (multi-tenant:
          clients pick a namespace with --tenant / OPTIMES_TENANT)
+  stats  HOST:PORT           scrape a live daemon's metrics exposition (wire
+                             op=6 STATSX): service gauges, per-tenant rows,
+                             RPC latency histograms
   smoke  PJRT artifact health check
   info   [--graph FILE]      also inspect a GraphFile's header + sections
 ";
@@ -266,6 +285,14 @@ fn info(args: &Args) -> Result<()> {
             every,
             dir.display()
         );
+    }
+    println!(
+        "log level: {} (OPTIMES_LOG; error|warn|info|debug)",
+        optimes::obs::log_level().name()
+    );
+    match optimes::obs::trace::trace_path() {
+        Some(p) => println!("trace: {} (OPTIMES_TRACE)", p.display()),
+        None => println!("trace: off (OPTIMES_TRACE=FILE enables Perfetto export)"),
     }
     println!("dataset scale: 1/{}", harness::dataset_scale());
     if let Some(path) = args.get("graph") {
@@ -488,9 +515,13 @@ fn run(args: &Args) -> Result<()> {
         .build(&g, Arc::clone(&engine))?
         .run()?;
     session_summary(&m);
+    optimes::obs::flush();
     if let Some(path) = args.get("report") {
         std::fs::write(path, optimes::harness::report::session_to_json(&m).to_string_pretty())?;
         println!("report written to {path}");
+    }
+    if let Some(path) = optimes::obs::trace::trace_path() {
+        println!("trace written to {} (open in ui.perfetto.dev)", path.display());
     }
     Ok(())
 }
@@ -581,6 +612,7 @@ fn resume(args: &Args) -> Result<()> {
         .build(&g, Arc::clone(&engine))?
         .run()?;
     session_summary(&m);
+    optimes::obs::flush();
     if let Some(path) = args.get("report") {
         std::fs::write(path, optimes::harness::report::session_to_json(&m).to_string_pretty())?;
         println!("report written to {path}");
@@ -741,11 +773,36 @@ fn serve(args: &Args) -> Result<()> {
     std::io::stdout().flush().ok();
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
-        let stats = store.stats()?;
-        let d = daemon.stats();
+        // the periodic stats line is rendered from the same exposition
+        // wire op=6 serves — one source of truth for service telemetry
+        let m = optimes::obs::parse_exposition(&daemon.exposition());
+        let g = |k: &str| m.get(k).copied().unwrap_or(0.0) as i64;
         println!(
-            "stored {} nodes / {} rows | conns {} live / {} rejected | tenants {}",
-            stats.nodes, stats.rows, d.live_conns, d.rejected_conns, d.tenants
+            "stored {} nodes / {} rows | conns {} live / {} rejected | inflight {} | \
+             tenants {} | rpc p99 pull {:.3}ms push {:.3}ms",
+            g("optimes_store_nodes"),
+            g("optimes_store_rows"),
+            g("optimes_daemon_live_conns"),
+            g("optimes_daemon_rejected_conns"),
+            g("optimes_daemon_inflight"),
+            g("optimes_daemon_tenants"),
+            g("optimes_daemon_rpc_pull_ns{quantile=\"0.99\"}") as f64 / 1e6,
+            g("optimes_daemon_rpc_push_ns{quantile=\"0.99\"}") as f64 / 1e6,
         );
     }
+}
+
+/// Scrape a live daemon's metrics exposition (wire op=6 STATSX) and
+/// print it verbatim — `optimes stats host:port | grep rpc`.
+fn stats_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("addr").map(str::to_string))
+        .ok_or_else(|| anyhow::anyhow!("stats needs an address: optimes stats HOST:PORT"))?;
+    // geometry-blind connection: STATSX needs no layer/hidden agreement
+    let mut c = optimes::coordinator::RemoteEmbClient::connect(addr.as_str(), 0, 0)?;
+    print!("{}", c.statsx()?);
+    Ok(())
 }

@@ -1,0 +1,468 @@
+//! Metrics registry: named counters, gauges, and log-bucketed
+//! histograms over lock-free atomics, with a Prometheus-style text
+//! exposition (DESIGN.md §16.2).
+//!
+//! A [`Registry`] is instantiable (the embedding daemon owns one per
+//! process-visible instance; [`registry`] is the process-global default)
+//! and renders every registered metric as `name value` lines that the
+//! daemon's wire op=6 `STATSX` serves and `optimes stats` prints.
+//! [`parse_exposition`] is the matching reader — one source of truth for
+//! both directions, pinned by a round-trip test.
+//!
+//! [`Histogram`] buckets are logarithmic with 16 linear sub-buckets per
+//! octave (HDR-style): values 0..16 get exact buckets, larger values land
+//! in a bucket of width `2^(octave-4)`, so any reported quantile is off
+//! by at most one bucket width (≤ 1/16 relative). Buckets are plain
+//! atomic counts — mergeable across worker-local histograms
+//! ([`Histogram::merge_from`]), which is what `benches/loadgen.rs` uses
+//! instead of collecting raw samples under a mutex.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depths, live connections).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, d: i64) {
+        self.0.fetch_sub(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Sub-buckets per octave (16 → ≤ 1/16 relative quantile error).
+const SUB: u64 = 16;
+/// Values below `SUB` get exact unit buckets.
+const LINEAR_MAX: u64 = SUB;
+/// Bucket count: 16 exact + 60 octaves (2^4 .. 2^63) × 16 sub-buckets.
+pub const HIST_BUCKETS: usize = (LINEAR_MAX + (63 - 4 + 1) * SUB) as usize;
+
+/// Bucket index of a recorded value.
+pub fn bucket_of(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros() as u64; // ≥ 4
+    let sub = (v >> (octave - 4)) & (SUB - 1);
+    ((octave - 4 + 1) * SUB + sub) as usize
+}
+
+/// Smallest value mapped to bucket `i`.
+pub fn bucket_lo(i: usize) -> u64 {
+    let i = i as u64;
+    if i < LINEAR_MAX {
+        return i;
+    }
+    let octave = i / SUB - 1 + 4;
+    let sub = i % SUB;
+    (SUB + sub) << (octave - 4)
+}
+
+/// Width of bucket `i` (every value in the bucket is within this of
+/// [`bucket_lo`]); the quantile error bound.
+pub fn bucket_width(i: usize) -> u64 {
+    if (i as u64) < LINEAR_MAX {
+        1
+    } else {
+        1u64 << (i as u64 / SUB - 1)
+    }
+}
+
+/// Largest value mapped to bucket `i`.
+pub fn bucket_hi(i: usize) -> u64 {
+    bucket_lo(i) + (bucket_width(i) - 1)
+}
+
+/// Lock-free log-bucketed histogram of non-negative integer samples
+/// (latencies are recorded as nanoseconds via [`record_secs`]).
+///
+/// [`record_secs`]: Histogram::record_secs
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in seconds as integer nanoseconds (negative or
+    /// non-finite inputs clamp to 0; overflow saturates).
+    pub fn record_secs(&self, secs: f64) {
+        let ns = (secs.max(0.0) * 1e9) as u64; // float→int casts saturate
+        self.record(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Raw bucket counts (index ↔ [`bucket_lo`]/[`bucket_hi`]).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold another histogram's buckets into this one (bucket-wise adds:
+    /// associative and commutative, so worker-local histograms merge in
+    /// any order to the same result).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+
+    /// Quantile upper bound: the largest value of the bucket holding the
+    /// `q`-th sample (so the true quantile is within one bucket width
+    /// below the reported value). Monotone in `q`; 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return bucket_hi(i);
+            }
+        }
+        bucket_hi(HIST_BUCKETS - 1)
+    }
+
+    /// [`quantile`](Histogram::quantile) of ns samples, in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile(q) as f64 / 1e6
+    }
+}
+
+/// A registered metric (shared handles: callers keep the `Arc` hot-path
+/// side, the registry renders the same cells at scrape time).
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Named metrics with a text exposition. Registration is get-or-create:
+/// re-registering a name returns the existing handle (and panics if the
+/// kind changed — that is a caller bug, like a geometry violation).
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())))
+        {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric {name:?} already registered with a different kind"),
+        }
+    }
+
+    /// Registered names, sorted (exposition order).
+    pub fn names(&self) -> Vec<String> {
+        self.metrics.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Snapshot of every registered metric.
+    pub fn snapshot(&self) -> Vec<(String, Metric)> {
+        self.metrics
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` comments plus one
+    /// `name value` line per cell. Histograms render as summaries —
+    /// `name{quantile="0.5|0.99|0.999"}`, `name_sum`, `name_count` —
+    /// compact enough to scrape per round, parseable by
+    /// [`parse_exposition`].
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, metric) in self.snapshot() {
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {name} summary\n"));
+                    for (label, q) in [("0.5", 0.5), ("0.99", 0.99), ("0.999", 0.999)] {
+                        out.push_str(&format!(
+                            "{name}{{quantile=\"{label}\"}} {}\n",
+                            h.quantile(q)
+                        ));
+                    }
+                    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Parse a [`Registry::render`] exposition back into `name → value`
+/// (quantile lines keep their `{quantile="..."}` suffix as part of the
+/// key). Ignores comments and blank/malformed lines — scraping must
+/// never fail on a well-meaning exposition.
+pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, value)) = line.rsplit_once(' ') {
+            if let Ok(v) = value.parse::<f64>() {
+                out.insert(name.to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+/// The process-global registry (session-side metrics; the embedding
+/// daemon keeps its own instance so co-located daemons never collide).
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_geometry_is_consistent() {
+        for v in (0..4096u64).chain([u64::MAX, u64::MAX - 1, 1 << 40, (1 << 40) + 12345]) {
+            let i = bucket_of(v);
+            assert!(i < HIST_BUCKETS, "v={v} → bucket {i}");
+            assert!(
+                bucket_lo(i) <= v && v <= bucket_hi(i),
+                "v={v} outside bucket {i} [{}, {}]",
+                bucket_lo(i),
+                bucket_hi(i)
+            );
+        }
+        // buckets tile the line: hi(i) + 1 == lo(i+1)
+        for i in 0..HIST_BUCKETS - 1 {
+            assert_eq!(bucket_hi(i) + 1, bucket_lo(i + 1), "gap after bucket {i}");
+        }
+        assert_eq!(bucket_hi(HIST_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_quantiles_bound_exact_percentiles() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        for (q, exact) in [(0.5, 500u64), (0.99, 990), (0.999, 999)] {
+            let got = h.quantile(q);
+            let i = bucket_of(exact);
+            assert!(
+                got >= exact && got <= bucket_hi(i).max(exact) + bucket_width(i),
+                "q={q}: got {got}, exact {exact}"
+            );
+        }
+        assert_eq!(h.quantile(0.0), h.quantile(1e-9));
+        assert!(h.quantile(1.0) >= 1000);
+    }
+
+    #[test]
+    fn histogram_merge_matches_single() {
+        let (a, b, merged) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for v in 0..500u64 {
+            a.record(v * 3);
+            merged.record(v * 3);
+        }
+        for v in 0..500u64 {
+            b.record(v * 7 + 1);
+            merged.record(v * 7 + 1);
+        }
+        let folded = Histogram::new();
+        folded.merge_from(&a);
+        folded.merge_from(&b);
+        assert_eq!(folded.bucket_counts(), merged.bucket_counts());
+        assert_eq!(folded.count(), merged.count());
+        assert_eq!(folded.sum(), merged.sum());
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(folded.quantile(q), merged.quantile(q));
+        }
+    }
+
+    #[test]
+    fn record_secs_clamps_and_converts() {
+        let h = Histogram::new();
+        h.record_secs(1e-6); // 1000 ns
+        h.record_secs(-5.0); // clamps to 0
+        h.record_secs(f64::NAN); // clamps to 0
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0) >= 1000);
+        assert_eq!(h.quantile(0.1), 0);
+    }
+
+    #[test]
+    fn registry_get_or_create_shares_cells() {
+        let r = Registry::new();
+        r.counter("a_total").inc();
+        r.counter("a_total").add(2);
+        assert_eq!(r.counter("a_total").get(), 3);
+        r.gauge("b_level").set(-4);
+        assert_eq!(r.gauge("b_level").get(), -4);
+        r.histogram("c_ns").record(100);
+        assert_eq!(r.histogram("c_ns").count(), 1);
+        assert_eq!(r.names(), vec!["a_total", "b_level", "c_ns"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn registry_rejects_kind_changes() {
+        let r = Registry::new();
+        r.counter("x").inc();
+        let _ = r.gauge("x");
+    }
+
+    #[test]
+    fn exposition_round_trips() {
+        let r = Registry::new();
+        r.counter("optimes_reqs_total").add(17);
+        r.gauge("optimes_live").set(3);
+        let h = r.histogram("optimes_lat_ns");
+        for v in [10u64, 200, 3000, 40000] {
+            h.record(v);
+        }
+        let text = r.render();
+        let parsed = parse_exposition(&text);
+        assert_eq!(parsed["optimes_reqs_total"], 17.0);
+        assert_eq!(parsed["optimes_live"], 3.0);
+        assert_eq!(parsed["optimes_lat_ns_count"], 4.0);
+        assert_eq!(parsed["optimes_lat_ns_sum"], 43210.0);
+        for q in ["0.5", "0.99", "0.999"] {
+            let key = format!("optimes_lat_ns{{quantile=\"{q}\"}}");
+            assert_eq!(parsed[&key], h.quantile(q.parse().unwrap()) as f64);
+        }
+        // every registered metric surfaces in the exposition
+        for name in r.names() {
+            assert!(
+                parsed.keys().any(|k| k.starts_with(&name)),
+                "{name} missing from exposition:\n{text}"
+            );
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Unified observability plane (DESIGN.md §16): span tracing, a
+//! wire-scrapeable metrics registry, and leveled logging — all
+//! zero-dependency and, above all, **pure observers**: with every knob
+//! enabled, accuracy curves and checkpoint bytes are bit-identical to a
+//! run with the plane disabled (`tests/observability.rs`).
+//!
+//! Three pillars:
+//!
+//! * [`trace`] — a thread-safe, ring-buffered [`Tracer`] with RAII
+//!   [`SpanGuard`]s (name, start/end wall-ns, tid, key=value attrs)
+//!   instrumented through the hot seams (session rounds/phases, trainer
+//!   epochs/batches, pipeline tickets, sharded fan-outs, per-RPC server
+//!   handling, churn/checkpoint events). Default-off; `OPTIMES_TRACE=FILE`
+//!   (or `run --trace FILE`) enables it and exports Chrome/Perfetto
+//!   `trace_event` JSON so a whole federated round renders as a timeline.
+//! * [`metrics`] — a [`Registry`] of named counters, gauges, and
+//!   log-bucketed [`Histogram`]s (lock-free atomics; p50/p99/p999 with
+//!   mergeable buckets), rendered as a Prometheus-style text exposition
+//!   by the daemon's wire op=6 `STATSX` and the `optimes stats` CLI.
+//! * [`log!`] — leveled stderr diagnostics (`OPTIMES_LOG=
+//!   error|warn|info|debug`, default `info`) replacing the ad-hoc
+//!   `eprintln!` sites, so noisy paths are silenceable and greppable.
+//!   User-facing report output (tables, figures) stays on `println!`.
+//!
+//! # Determinism contract
+//!
+//! Nothing in this module reads or seeds an RNG, reorders work, or feeds
+//! a value back into training. Disabled, a span is one relaxed atomic
+//! load; enabled, it is a clock read plus a ring-buffer append under a
+//! mutex. Either way the observed computation is untouched.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{parse_exposition, registry, Counter, Gauge, Histogram, Registry};
+pub use trace::{event, flush, span, tracer, SpanGuard, SpanRecord, Tracer};
+
+// `#[macro_export]` hoists the macro to the crate root; re-export it
+// here so call sites read `obs::log!(...)`.
+pub use crate::log;
+
+/// Severity of one [`log!`] line, ordered `Error < Warn < Info < Debug`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl LogLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+
+    /// Parse a level name (case-insensitive, whitespace-tolerant).
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(LogLevel::Error),
+            "warn" | "warning" => Some(LogLevel::Warn),
+            "info" => Some(LogLevel::Info),
+            "debug" => Some(LogLevel::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// The process log threshold: `OPTIMES_LOG` (default `info`), read once.
+/// An unparseable value falls back to the default — the logging plane
+/// must never abort the program it observes.
+pub fn log_level() -> LogLevel {
+    static LEVEL: std::sync::OnceLock<LogLevel> = std::sync::OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        std::env::var("OPTIMES_LOG")
+            .ok()
+            .and_then(|v| LogLevel::parse(&v))
+            .unwrap_or(LogLevel::Info)
+    })
+}
+
+/// Whether a line at `lvl` passes the process threshold.
+pub fn log_enabled(lvl: LogLevel) -> bool {
+    lvl <= log_level()
+}
+
+/// Leveled stderr diagnostic: `obs::log!(Warn, "shard {id} slow")`.
+/// Levels are the [`LogLevel`] variants; lines below the `OPTIMES_LOG`
+/// threshold cost one lazy-initialized comparison and format nothing.
+#[macro_export]
+macro_rules! log {
+    ($lvl:ident, $($arg:tt)*) => {{
+        let lvl = $crate::obs::LogLevel::$lvl;
+        if $crate::obs::log_enabled(lvl) {
+            eprintln!("[{}] {}", lvl.name(), format_args!($($arg)*));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_parse() {
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+        assert_eq!(LogLevel::parse("WARN"), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::parse(" warning "), Some(LogLevel::Warn));
+        assert_eq!(LogLevel::parse("debug"), Some(LogLevel::Debug));
+        assert_eq!(LogLevel::parse("loud"), None);
+        assert_eq!(LogLevel::Info.name(), "info");
+    }
+
+    #[test]
+    fn log_macro_compiles_at_every_level() {
+        // smoke: the macro expands for each variant and formats args
+        crate::log!(Error, "e {}", 1);
+        crate::log!(Warn, "w {}", 2);
+        crate::log!(Info, "i {}", 3);
+        crate::log!(Debug, "d {}", 4);
+    }
+}

@@ -1,0 +1,461 @@
+//! Ring-buffered span tracing with Chrome/Perfetto `trace_event` export
+//! (DESIGN.md §16.1).
+//!
+//! A [`Tracer`] holds a fixed-capacity ring of completed [`SpanRecord`]s
+//! (bounded memory under any span flood — old spans are overwritten,
+//! never the allocator stressed). Spans are recorded by RAII
+//! [`SpanGuard`]s: [`span`] stamps the start clock, the guard's `Drop`
+//! stamps the end and appends one record. Instant markers (churn,
+//! checkpoints, ticket issues) go through [`event`].
+//!
+//! Disabled (the default), every instrumentation site costs exactly one
+//! relaxed atomic load. `OPTIMES_TRACE=FILE` (or `run --trace FILE`)
+//! enables the global tracer; [`flush`] exports the ring as a JSON array
+//! of balanced `B`/`E` `trace_event`s (plus `i` instants) that
+//! `chrome://tracing` and <https://ui.perfetto.dev> render as a timeline.
+//! Sessions flush when they finish, so test runs under `OPTIMES_TRACE`
+//! leave a valid trace behind without extra plumbing (the write is
+//! temp-file + rename, so a concurrent reader never sees a torn file).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{Json, JsonObj};
+
+/// Default ring capacity (events). `OPTIMES_TRACE_CAP` overrides.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// Nanoseconds since the process's tracing clock started (first use).
+/// Monotonic — Perfetto timelines need ordering, not calendar time.
+pub fn now_ns() -> u64 {
+    static T0: OnceLock<Instant> = OnceLock::new();
+    T0.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Small stable integer id of the calling thread (1-based, assigned on
+/// first use; `std::thread::ThreadId` has no stable integer surface).
+pub fn current_tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    }
+    TID.with(|c| {
+        let mut v = c.get();
+        if v == 0 {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            c.set(v);
+        }
+        v
+    })
+}
+
+/// One completed span (or instant marker) in the ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Span name (`round`, `push_ticket`, `rpc_pull`, ...).
+    pub name: &'static str,
+    /// Category (`session`, `trainer`, `pipeline`, `store`, `net`, ...).
+    pub cat: &'static str,
+    /// Start wall-ns ([`now_ns`] clock).
+    pub start_ns: u64,
+    /// End wall-ns; equals `start_ns` for instants.
+    pub end_ns: u64,
+    /// Recording thread ([`current_tid`]).
+    pub tid: u64,
+    /// key=value attributes (exported under `args`).
+    pub args: Vec<(&'static str, String)>,
+    /// Instant marker (exported as one `ph:"i"` event) vs full span
+    /// (exported as a balanced `B`/`E` pair).
+    pub instant: bool,
+}
+
+struct Ring {
+    buf: Vec<SpanRecord>,
+    /// Next overwrite position once `buf` reached capacity.
+    head: usize,
+    dropped: u64,
+}
+
+/// Thread-safe, fixed-capacity span sink.
+pub struct Tracer {
+    enabled: AtomicBool,
+    capacity: usize,
+    ring: Mutex<Ring>,
+}
+
+impl Tracer {
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            capacity: capacity.max(1),
+            ring: Mutex::new(Ring {
+                buf: Vec::new(),
+                head: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// The fast-path check every instrumentation site performs.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events currently buffered (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten by ring wrap-around so far.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
+    }
+
+    /// Append one record, overwriting the oldest past capacity.
+    pub fn record(&self, rec: SpanRecord) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.buf.len() < self.capacity {
+            ring.buf.push(rec);
+        } else {
+            let head = ring.head;
+            ring.buf[head] = rec;
+            ring.head = (head + 1) % self.capacity;
+            ring.dropped += 1;
+        }
+    }
+
+    /// Snapshot of the buffered records in chronological start order
+    /// (the ring is left untouched, so later flushes see later spans).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let ring = self.ring.lock().unwrap();
+        let mut out = ring.buf.clone();
+        out.sort_by_key(|r| (r.start_ns, r.end_ns, r.tid));
+        out
+    }
+
+    /// Export the ring as a Chrome/Perfetto `trace_event` JSON array:
+    /// one balanced `B`/`E` pair per span, one `i` event per instant,
+    /// `ts` in microseconds. Events are ordered so that per-thread
+    /// nesting is well-formed even under timestamp ties (parent `B`
+    /// before child `B`, child `E` before parent `E`).
+    pub fn export_json(&self) -> String {
+        // (ts_ns, rank, anti_tie, record_idx, is_begin)
+        // rank: E=0 < B=1 < i=2 at equal ts; anti_tie orders same-ts
+        // same-kind events by span extent (see sort key comment below).
+        let records = self.snapshot();
+        let mut order: Vec<(u64, u8, u64, usize, bool)> = Vec::new();
+        for (i, r) in records.iter().enumerate() {
+            if r.instant {
+                order.push((r.start_ns, 2, 0, i, false));
+            } else {
+                // a zero-duration span would otherwise sort its E (rank 0)
+                // before its own B (rank 1); nudge the close to +1ns —
+                // invisible at µs display granularity, keeps nesting sane
+                let end_ns = r.end_ns.max(r.start_ns.saturating_add(1));
+                // same-ts B ties: the span that ends later is the parent
+                // and must open first → sort by descending end.
+                order.push((r.start_ns, 1, u64::MAX - end_ns, i, true));
+                // same-ts E ties: the span that started later is the
+                // child and must close first → sort by descending start.
+                order.push((end_ns, 0, u64::MAX - r.start_ns, i, false));
+            }
+        }
+        order.sort_unstable();
+        let mut events = Vec::with_capacity(order.len());
+        for &(ts_ns, _, _, i, is_begin) in &order {
+            let r = &records[i];
+            let mut obj = JsonObj::new();
+            obj.set("name", r.name);
+            obj.set("cat", r.cat);
+            let ph = if r.instant {
+                "i"
+            } else if is_begin {
+                "B"
+            } else {
+                "E"
+            };
+            obj.set("ph", ph);
+            obj.set("ts", ts_ns as f64 / 1e3);
+            obj.set("pid", 1.0);
+            obj.set("tid", r.tid as f64);
+            if r.instant {
+                obj.set("s", "t");
+            }
+            // args ride only the opening (or instant) event
+            if (is_begin || r.instant) && !r.args.is_empty() {
+                let mut args = JsonObj::new();
+                for (k, v) in &r.args {
+                    args.set(*k, v.as_str());
+                }
+                obj.set("args", args);
+            }
+            events.push(Json::Obj(obj));
+        }
+        Json::Arr(events).to_string_compact()
+    }
+
+    /// Write the export atomically (temp file + rename). The temp name is
+    /// unique per flush, not just per process: parallel test threads that
+    /// share one `OPTIMES_TRACE` path flush concurrently, and two flushes
+    /// writing the same temp file would garble each other's rename.
+    pub fn flush_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, self.export_json())?;
+        std::fs::rename(&tmp, path)
+    }
+}
+
+/// Trace output path from `OPTIMES_TRACE` (None = tracing off).
+pub fn trace_path() -> Option<std::path::PathBuf> {
+    static PATH: OnceLock<Option<std::path::PathBuf>> = OnceLock::new();
+    PATH.get_or_init(|| match std::env::var("OPTIMES_TRACE") {
+        Ok(p) if !p.trim().is_empty() => Some(std::path::PathBuf::from(p.trim())),
+        _ => None,
+    })
+    .clone()
+}
+
+/// The process-global tracer, enabled iff `OPTIMES_TRACE` names a file
+/// (capacity from `OPTIMES_TRACE_CAP`, default [`DEFAULT_CAPACITY`]).
+pub fn tracer() -> &'static Tracer {
+    static T: OnceLock<Tracer> = OnceLock::new();
+    T.get_or_init(|| {
+        let cap = std::env::var("OPTIMES_TRACE_CAP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_CAPACITY);
+        let t = Tracer::new(cap);
+        if trace_path().is_some() {
+            t.set_enabled(true);
+        }
+        t
+    })
+}
+
+/// Export the global tracer to the `OPTIMES_TRACE` file (no-op when
+/// tracing is off). Called by `Session::finish` and the CLI, so every
+/// traced run — including test suites — leaves a valid timeline behind.
+pub fn flush() {
+    if let Some(path) = trace_path() {
+        if tracer().enabled() {
+            if let Err(e) = tracer().flush_to(&path) {
+                crate::log!(Warn, "trace flush to {} failed: {e}", path.display());
+            }
+        }
+    }
+}
+
+/// RAII span over the global tracer: records `[start, drop]` with the
+/// calling thread's tid. Dead (free) when tracing is disabled.
+#[must_use = "a span measures the scope it is bound to; dropping it immediately records nothing useful"]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    args: Vec<(&'static str, String)>,
+    live: bool,
+}
+
+impl SpanGuard {
+    /// Attach a key=value attribute (builder style). Free when dead.
+    pub fn attr(mut self, key: &'static str, value: impl std::fmt::Display) -> SpanGuard {
+        self.push_attr(key, value);
+        self
+    }
+
+    /// Attach an attribute to an already-bound span. Free when dead.
+    pub fn push_attr(&mut self, key: &'static str, value: impl std::fmt::Display) {
+        if self.live {
+            self.args.push((key, value.to_string()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live {
+            tracer().record(SpanRecord {
+                name: self.name,
+                cat: self.cat,
+                start_ns: self.start_ns,
+                end_ns: now_ns(),
+                tid: current_tid(),
+                args: std::mem::take(&mut self.args),
+                instant: false,
+            });
+        }
+    }
+}
+
+/// Open a span on the global tracer. One relaxed load when disabled.
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    let live = tracer().enabled();
+    SpanGuard {
+        name,
+        cat,
+        start_ns: if live { now_ns() } else { 0 },
+        args: Vec::new(),
+        live,
+    }
+}
+
+/// Record an instant marker (churn applied, checkpoint written, ticket
+/// issued). `attrs` are only materialized when tracing is enabled — pass
+/// owned strings from a pre-checked `tracer().enabled()` branch or cheap
+/// literals.
+pub fn event(cat: &'static str, name: &'static str, attrs: Vec<(&'static str, String)>) {
+    let t = tracer();
+    if !t.enabled() {
+        return;
+    }
+    let now = now_ns();
+    t.record(SpanRecord {
+        name,
+        cat,
+        start_ns: now,
+        end_ns: now,
+        tid: current_tid(),
+        args: attrs,
+        instant: true,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &'static str, start: u64, end: u64, tid: u64) -> SpanRecord {
+        SpanRecord {
+            name,
+            cat: "test",
+            start_ns: start,
+            end_ns: end,
+            tid,
+            args: Vec::new(),
+            instant: false,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::new(8);
+        for i in 0..100u64 {
+            t.record(rec("s", i, i + 1, 1));
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.dropped(), 92);
+        // survivors are the newest 8, chronologically ordered
+        let snap = t.snapshot();
+        let starts: Vec<u64> = snap.iter().map(|r| r.start_ns).collect();
+        assert_eq!(starts, (92..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn export_balances_b_and_e_under_ties() {
+        let t = Tracer::new(64);
+        // parent [10, 50] and child [10, 50] on one thread: ties on both
+        // ends — export must still nest (outer B, inner B, inner E,
+        // outer E is impossible to distinguish; what matters is a valid
+        // bracket sequence), plus a disjoint span ending exactly where
+        // another begins (E before B at the shared ts).
+        t.record(rec("parent", 10, 50, 1));
+        t.record(rec("child", 10, 50, 1));
+        t.record(rec("before", 0, 10, 1));
+        t.record(rec("inner", 20, 30, 1));
+        let json = t.export_json();
+        let parsed = Json::parse(&json).unwrap();
+        let events = parsed.as_arr().unwrap();
+        let (mut b, mut e, mut depth) = (0, 0, 0i64);
+        for ev in events {
+            match ev.at("ph").as_str().unwrap() {
+                "B" => {
+                    b += 1;
+                    depth += 1;
+                }
+                "E" => {
+                    e += 1;
+                    depth -= 1;
+                    assert!(depth >= 0, "E without matching B: {json}");
+                }
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert_eq!(b, 4);
+        assert_eq!(e, 4);
+        assert_eq!(depth, 0, "unbalanced trace: {json}");
+        // ts is microseconds
+        assert_eq!(events[0].at("ts").as_f64().unwrap(), 0.0);
+        assert_eq!(events[0].at("name").as_str().unwrap(), "before");
+    }
+
+    #[test]
+    fn instants_export_with_args() {
+        let t = Tracer::new(8);
+        t.record(SpanRecord {
+            name: "churn",
+            cat: "session",
+            start_ns: 5,
+            end_ns: 5,
+            tid: 2,
+            args: vec![("client", "3".to_string())],
+            instant: true,
+        });
+        let parsed = Json::parse(&t.export_json()).unwrap();
+        let ev = parsed.idx(0);
+        assert_eq!(ev.at("ph").as_str(), Some("i"));
+        assert_eq!(ev.at("args").at("client").as_str(), Some("3"));
+    }
+
+    #[test]
+    fn dead_spans_record_nothing() {
+        let t = Tracer::new(8);
+        assert!(!t.enabled());
+        // the global tracer is disabled by default in tests (no
+        // OPTIMES_TRACE): guards and events must be no-ops
+        {
+            let mut s = span("test", "noop").attr("k", 1);
+            s.push_attr("k2", 2);
+        }
+        event("test", "noop", Vec::new());
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn tid_is_stable_per_thread_and_distinct_across() {
+        let a = current_tid();
+        assert_eq!(a, current_tid());
+        let b = std::thread::spawn(current_tid).join().unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn flush_to_writes_parseable_json() {
+        let t = Tracer::new(8);
+        t.record(rec("s", 1, 2, 1));
+        let dir = std::env::temp_dir().join(format!("optimes-trace-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("out.json");
+        t.flush_to(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).unwrap().as_arr().unwrap().len() == 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -52,7 +52,8 @@ impl ThreadPool {
                                         std::panic::AssertUnwindSafe(job),
                                     );
                                     if r.is_err() {
-                                        eprintln!(
+                                        crate::log!(
+                                            Warn,
                                             "optimes-pool: job panicked (worker kept alive)"
                                         );
                                     }

@@ -1,0 +1,490 @@
+//! Observability-plane acceptance tests (DESIGN.md §16).
+//!
+//! Three pillars, three kinds of evidence:
+//!
+//! 1. **Metrics** — property tests over the log-bucketed [`Histogram`]
+//!    (bucket bounds tile `u64` with ≤1/16 relative error, merge is a
+//!    bucket-wise sum so it matches recording everything into one
+//!    histogram, quantiles are monotone), plus a render→parse round trip
+//!    of the Prometheus-style exposition and a live wire op=6 (STATSX)
+//!    scrape against a real daemon.
+//! 2. **Tracing** — property tests over the ring-buffered [`Tracer`]
+//!    (bounded memory under floods, every export is balanced B/E JSON
+//!    with per-thread nesting depth that never goes negative).
+//! 3. **Pure observer** — the load-bearing guarantee: a child `optimes
+//!    run` with `--trace` produces the bit-identical accuracy curve and
+//!    bit-identical `session.ckpt` bytes as the same run without it.
+//!    Tracing is latched per process (`OPTIMES_TRACE` is read once), so
+//!    the on/off arms must be separate child processes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use optimes::obs::metrics::{bucket_hi, bucket_lo, bucket_of, bucket_width, HIST_BUCKETS};
+use optimes::obs::{parse_exposition, Histogram, Registry, SpanRecord, Tracer};
+use optimes::util::json::Json;
+use optimes::util::proptest::check;
+use optimes::{prop_assert, prop_assert_eq};
+
+// ---------------------------------------------------------------- histogram
+
+#[test]
+fn hist_buckets_tile_u64_and_bound_error() {
+    // Every value lands in a bucket whose [lo, hi] range contains it, and
+    // past the linear region the bucket is at most v/16 wide (the 1/16
+    // relative-error contract the quantile API inherits).
+    check(
+        "hist_bucket_bounds",
+        400,
+        |g| {
+            // spread cases across the full u64 dynamic range
+            let shift = g.int(0, 63) as u32;
+            let base = 1u64.checked_shl(shift).unwrap_or(u64::MAX);
+            base.saturating_add(g.int_scaled(0, 1_000_000) as u64)
+        },
+        |&v| {
+            let b = bucket_of(v);
+            prop_assert!(b < HIST_BUCKETS, "bucket index {b} out of range for {v}");
+            let (lo, hi) = (bucket_lo(b), bucket_hi(b));
+            prop_assert!(lo <= v && v <= hi, "{v} outside bucket {b} = [{lo}, {hi}]");
+            prop_assert_eq!(bucket_width(b), hi - lo + 1);
+            prop_assert!(
+                hi - lo + 1 <= (v / 16).max(1),
+                "bucket {b} = [{lo}, {hi}] wider than {v}/16"
+            );
+            // adjacent buckets tile: no gaps, no overlaps
+            if b + 1 < HIST_BUCKETS {
+                prop_assert_eq!(bucket_lo(b + 1), hi + 1);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hist_merge_matches_single_histogram_and_commutes() {
+    check(
+        "hist_merge",
+        60,
+        |g| {
+            let sample = |g: &mut optimes::util::proptest::Gen| -> Vec<u64> {
+                (0..g.int_scaled(0, 200))
+                    .map(|_| (g.f64() * 1e12) as u64)
+                    .collect()
+            };
+            (sample(g), sample(g))
+        },
+        |(a, b)| {
+            let (ha, hb, combined) = (Histogram::new(), Histogram::new(), Histogram::new());
+            for &v in a {
+                ha.record(v);
+                combined.record(v);
+            }
+            for &v in b {
+                hb.record(v);
+                combined.record(v);
+            }
+            // a ∪ b == record-everything-into-one
+            let merged = Histogram::new();
+            merged.merge_from(&ha);
+            merged.merge_from(&hb);
+            prop_assert_eq!(merged.bucket_counts(), combined.bucket_counts());
+            prop_assert_eq!(merged.count(), combined.count());
+            prop_assert_eq!(merged.sum(), combined.sum());
+            for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+                prop_assert_eq!(merged.quantile(q), combined.quantile(q));
+            }
+            // b ∪ a == a ∪ b
+            let flipped = Histogram::new();
+            flipped.merge_from(&hb);
+            flipped.merge_from(&ha);
+            prop_assert_eq!(flipped.bucket_counts(), merged.bucket_counts());
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hist_quantiles_are_monotone_and_bracket_the_samples() {
+    check(
+        "hist_quantile_monotone",
+        60,
+        |g| {
+            let n = 1 + g.int_scaled(0, 300);
+            let samples: Vec<u64> = (0..n).map(|_| (g.f64() * 1e9) as u64).collect();
+            let qs: Vec<f64> = (0..8).map(|_| g.f64()).collect();
+            (samples, qs)
+        },
+        |(samples, qs)| {
+            let h = Histogram::new();
+            for &v in samples {
+                h.record(v);
+            }
+            let mut sorted = qs.clone();
+            sorted.sort_by(f64::total_cmp);
+            let mut prev = 0u64;
+            for &q in &sorted {
+                let v = h.quantile(q);
+                prop_assert!(
+                    v >= prev,
+                    "quantile not monotone: q={q} gave {v} after {prev}"
+                );
+                prev = v;
+            }
+            // the reported quantile is a bucket upper bound, so it can only
+            // sit at or above the true order statistic
+            let (min, max) = (
+                *samples.iter().min().unwrap(),
+                *samples.iter().max().unwrap(),
+            );
+            prop_assert!(h.quantile(0.0) >= min, "q0 below the minimum sample");
+            prop_assert!(h.quantile(1.0) >= max, "q1 below the maximum sample");
+            prop_assert!(
+                h.quantile(1.0) <= bucket_hi(bucket_of(max)),
+                "q1 above the max sample's bucket"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_histogram_is_all_zeros() {
+    let h = Histogram::new();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.sum(), 0);
+    assert_eq!(h.mean(), 0.0);
+    assert_eq!(h.quantile(0.5), 0);
+}
+
+// --------------------------------------------------------------- exposition
+
+#[test]
+fn exposition_renders_and_parses_round_trip() {
+    let r = Registry::new();
+    r.counter("optimes_test_ops").add(42);
+    r.gauge("optimes_test_depth").set(-7);
+    let h = r.histogram("optimes_test_latency_ns");
+    for v in [10_000u64, 20_000, 30_000, 4_000_000] {
+        h.record(v);
+    }
+    let text = r.render();
+    assert!(text.contains("# TYPE optimes_test_ops counter"), "{text}");
+    assert!(text.contains("# TYPE optimes_test_depth gauge"), "{text}");
+    assert!(text.contains("# TYPE optimes_test_latency_ns summary"), "{text}");
+
+    let m: BTreeMap<String, f64> = parse_exposition(&text);
+    assert_eq!(m.get("optimes_test_ops"), Some(&42.0));
+    assert_eq!(m.get("optimes_test_depth"), Some(&-7.0));
+    assert_eq!(m.get("optimes_test_latency_ns_count"), Some(&4.0));
+    let sum = m["optimes_test_latency_ns_sum"];
+    assert_eq!(sum as u64, h.sum());
+    let p50 = m["optimes_test_latency_ns{quantile=\"0.5\"}"];
+    let p999 = m["optimes_test_latency_ns{quantile=\"0.999\"}"];
+    assert!(p50 >= 20_000.0 && p50 <= p999, "p50 {p50} p999 {p999}");
+    assert!(p999 >= 4_000_000.0, "p999 {p999} misses the tail sample");
+}
+
+#[test]
+fn statsx_scrape_reports_stored_rows_and_rpc_latency() {
+    use optimes::coordinator::{EmbServerDaemon, EmbeddingServer, NetConfig, RemoteEmbClient};
+    use std::sync::Arc;
+    const LAYERS: usize = 2;
+    const HIDDEN: usize = 16;
+
+    let slab = Arc::new(EmbeddingServer::new(LAYERS, HIDDEN, NetConfig::default()));
+    let daemon = EmbServerDaemon::start(slab, "127.0.0.1:0").expect("daemon start");
+    let addr = daemon.addr.to_string();
+
+    let mut c = RemoteEmbClient::connect(addr.as_str(), LAYERS, HIDDEN).expect("connect");
+    let nodes: Vec<u32> = (0..8).collect();
+    let layer: Vec<f32> = (0..nodes.len() * HIDDEN).map(|i| i as f32 * 0.5).collect();
+    c.push(&nodes, &vec![layer; LAYERS]).expect("push");
+    c.pull(&nodes).expect("pull");
+
+    let text = c.statsx().expect("statsx");
+    let m = parse_exposition(&text);
+    assert_eq!(m.get("optimes_store_nodes"), Some(&8.0), "{text}");
+    assert_eq!(
+        m.get("optimes_store_rows"),
+        Some(&((8 * LAYERS) as f64)),
+        "{text}"
+    );
+    for hist in ["optimes_daemon_rpc_push_ns", "optimes_daemon_rpc_pull_ns"] {
+        assert_eq!(m.get(&format!("{hist}_count")), Some(&1.0), "{text}");
+        let p99 = m[&format!("{hist}{{quantile=\"0.99\"}}")];
+        assert!(p99 > 0.0, "{hist} p99 is zero:\n{text}");
+    }
+    // the scrape itself is a control op and must not count as an RPC
+    let again = parse_exposition(&c.statsx().expect("second statsx"));
+    assert_eq!(again.get("optimes_daemon_rpc_pull_ns_count"), Some(&1.0));
+    daemon.shutdown();
+}
+
+// ------------------------------------------------------------------- tracer
+
+#[test]
+fn tracer_ring_is_bounded_under_floods() {
+    check(
+        "tracer_bounded",
+        40,
+        |g| (1 + g.int_scaled(0, 64), g.int_scaled(0, 500)),
+        |&(cap, n)| {
+            let t = Tracer::new(cap);
+            t.set_enabled(true);
+            for i in 0..n {
+                t.record(SpanRecord {
+                    name: "flood",
+                    cat: "test",
+                    start_ns: i as u64,
+                    end_ns: i as u64 + 1,
+                    tid: 1,
+                    args: Vec::new(),
+                    instant: false,
+                });
+            }
+            prop_assert!(t.len() <= cap, "ring grew past capacity: {} > {cap}", t.len());
+            prop_assert_eq!(t.len(), n.min(cap));
+            prop_assert_eq!(t.dropped(), n.saturating_sub(cap) as u64);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tracer_export_is_balanced_and_never_nests_negative() {
+    check(
+        "tracer_nesting",
+        40,
+        |g| {
+            // random span soup: overlapping intervals, several threads,
+            // a few instants sprinkled in
+            let n = 1 + g.int_scaled(0, 80);
+            (0..n)
+                .map(|_| {
+                    let start = g.int_scaled(0, 10_000) as u64;
+                    let dur = g.int(0, 5_000) as u64;
+                    (start, start + dur, 1 + g.int(0, 3) as u64, g.bool())
+                })
+                .collect::<Vec<_>>()
+        },
+        |spans| {
+            let t = Tracer::new(4096);
+            t.set_enabled(true);
+            for &(start_ns, end_ns, tid, instant) in spans {
+                t.record(SpanRecord {
+                    name: "s",
+                    cat: "test",
+                    start_ns,
+                    end_ns,
+                    tid,
+                    args: vec![("k", "v".to_string())],
+                    instant,
+                });
+            }
+            let json = t.export_json();
+            let doc = Json::parse(&json).map_err(|e| format!("export not JSON: {e:?}"))?;
+            // Chrome's "JSON Array Format": a bare top-level event array
+            let events = doc.as_arr().ok_or("export is not an array")?;
+            let n_spans = spans.iter().filter(|s| !s.3).count();
+            let n_instants = spans.len() - n_spans;
+            prop_assert_eq!(events.len(), n_spans * 2 + n_instants);
+            let mut depth: BTreeMap<u64, i64> = BTreeMap::new();
+            let (mut b, mut e, mut i) = (0usize, 0usize, 0usize);
+            let mut last_ts = f64::MIN;
+            for ev in events {
+                let ph = ev.at("ph").as_str().ok_or("event without ph")?;
+                let ts = ev.at("ts").as_f64().ok_or("event without ts")?;
+                let tid = ev.at("tid").as_f64().ok_or("event without tid")? as u64;
+                prop_assert!(ts >= last_ts, "timestamps regress: {ts} after {last_ts}");
+                last_ts = ts;
+                let d = depth.entry(tid).or_insert(0);
+                match ph {
+                    "B" => {
+                        b += 1;
+                        *d += 1;
+                    }
+                    "E" => {
+                        e += 1;
+                        *d -= 1;
+                        prop_assert!(*d >= 0, "tid {tid} closed more spans than it opened");
+                    }
+                    "i" => i += 1,
+                    other => prop_assert!(false, "unexpected ph {other:?}"),
+                }
+            }
+            prop_assert_eq!(b, e);
+            prop_assert_eq!(b, n_spans);
+            prop_assert_eq!(i, n_instants);
+            for (tid, d) in &depth {
+                prop_assert!(*d == 0, "tid {tid} ends at depth {d}");
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ pure observer
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("optimes-obs-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("scratch dir");
+    d
+}
+
+/// Run `optimes run` in a child process on a miniature sharded, pipelined
+/// session and return its stdout. The trace/no-trace arms must be separate
+/// processes: `OPTIMES_TRACE` is latched once per process by design.
+fn run_child(ckpt: &Path, trace: Option<&Path>) -> String {
+    let exe = env!("CARGO_BIN_EXE_optimes");
+    let mut cmd = Command::new(exe);
+    cmd.args([
+        "run",
+        "--dataset",
+        "arxiv-s",
+        "--scale",
+        "40",
+        "--clients",
+        "2",
+        "--rounds",
+        "2",
+        "--epochs",
+        "1",
+        "--epoch-batches",
+        "2",
+        "--eval-batches",
+        "2",
+        "--fanout",
+        "3",
+        "--seed",
+        "7",
+        "--sequential",
+        "--shards",
+        "2",
+        "--pipeline",
+        "on",
+        "--checkpoint",
+    ])
+    .arg(ckpt)
+    .env_remove("OPTIMES_TRACE")
+    .env_remove("OPTIMES_TRACE_CAP")
+    .env_remove("OPTIMES_LOG");
+    if let Some(path) = trace {
+        cmd.arg("--trace").arg(path);
+    }
+    let out = cmd.output().expect("spawn optimes run");
+    assert!(
+        out.status.success(),
+        "child run failed (trace={}):\nstdout: {}\nstderr: {}",
+        trace.is_some(),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+/// Canonical checkpoint bytes with the wall-clock timing fields zeroed.
+/// `session.ckpt` serializes per-round wall times (`round_time`, phase
+/// means, critical path), which legitimately differ between *any* two
+/// runs — traced or not. Everything else (weights, RNG cursors, store
+/// snapshot, membership ledger, accuracy/val-loss curve, byte meters)
+/// must be bit-identical, so we scrub only the clocks and compare the
+/// re-encoded bundle byte for byte.
+fn scrubbed_ckpt_bytes(dir: &Path, resave_into: &Path) -> Vec<u8> {
+    use optimes::coordinator::metrics::PhaseTimes;
+    let mut bundle = optimes::coordinator::CheckpointBundle::load(dir).expect("load checkpoint");
+    for r in &mut bundle.metrics.rounds {
+        r.round_time = 0.0;
+        r.mean_phases = PhaseTimes::default();
+        r.critical = PhaseTimes::default();
+    }
+    std::fs::create_dir_all(resave_into).expect("scrub dir");
+    let path = bundle.save(resave_into).expect("re-save checkpoint");
+    std::fs::read(path).expect("scrubbed checkpoint bytes")
+}
+
+/// Everything accuracy-shaped in the run's stdout: the per-round curve
+/// plus the smoothed-accuracy summary line. Timing numbers are excluded
+/// (wall clock legitimately differs run to run); the *curve* may not.
+fn accuracy_fingerprint(stdout: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in stdout.lines() {
+        if line.starts_with("round ") {
+            let acc = line
+                .split("acc ")
+                .nth(1)
+                .and_then(|r| r.split('%').next())
+                .unwrap_or_else(|| panic!("unparseable round line: {line}"));
+            out.push(format!("acc {}", acc.trim()));
+        }
+        if let Some(rest) = line.trim_start().strip_prefix("smoothed accuracy:") {
+            out.push(format!("smoothed{rest}"));
+        }
+    }
+    assert!(out.len() >= 3, "no curve found in stdout:\n{stdout}");
+    out
+}
+
+#[test]
+fn tracing_is_a_pure_observer_bit_identical_curve_and_checkpoint() {
+    let root = scratch_dir("parity");
+    let trace_path = root.join("run.trace.json");
+    let ckpt_on = root.join("ckpt-on");
+    let ckpt_off = root.join("ckpt-off");
+
+    let stdout_on = run_child(&ckpt_on, Some(&trace_path));
+    let stdout_off = run_child(&ckpt_off, None);
+
+    // identical accuracy curves...
+    assert_eq!(
+        accuracy_fingerprint(&stdout_on),
+        accuracy_fingerprint(&stdout_off),
+        "tracing changed the accuracy curve"
+    );
+    // ...and bit-identical checkpoint bytes (model weights, RNG cursors,
+    // store snapshot, curve) once the wall-clock-only fields are scrubbed
+    let ckpt_a = scrubbed_ckpt_bytes(&ckpt_on, &root.join("scrub-on"));
+    let ckpt_b = scrubbed_ckpt_bytes(&ckpt_off, &root.join("scrub-off"));
+    assert_eq!(ckpt_a, ckpt_b, "tracing changed the session.ckpt bytes");
+
+    // the traced arm must actually have produced a usable timeline
+    let text = std::fs::read_to_string(&trace_path).expect("trace file");
+    let doc = Json::parse(&text).expect("trace parses as JSON");
+    let events = doc.as_arr().expect("trace is a bare event array");
+    assert!(!events.is_empty(), "trace is empty");
+    let mut names = std::collections::BTreeSet::new();
+    let (mut b, mut e) = (0usize, 0usize);
+    for ev in events {
+        match ev.at("ph").as_str() {
+            Some("B") => b += 1,
+            Some("E") => e += 1,
+            _ => {}
+        }
+        if let Some(n) = ev.at("name").as_str() {
+            names.insert(n.to_string());
+        }
+    }
+    assert_eq!(b, e, "unbalanced B/E in trace");
+    for expected in [
+        "round",
+        "broadcast",
+        "clients",
+        "aggregate",
+        "validate",
+        "epoch",
+        "batch",
+        "push_embed",
+        "push_fanout",
+        "pull_fanout",
+        "checkpoint",
+    ] {
+        assert!(
+            names.contains(expected),
+            "trace lacks a {expected:?} span; saw {names:?}"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
